@@ -1,0 +1,80 @@
+//! Federated-VO failover scenario: the grid dynamicity the paper motivates
+//! ("organizations resources that join or leaves the system at any time").
+//!
+//! Deploys 3 VOs, runs a query stream while nodes fail and rejoin, and
+//! shows that (a) recall is preserved through replica re-planning, (b)
+//! the perf-history scheduler shifts load away from degraded regions,
+//! (c) response time degrades gracefully rather than failing.
+//!
+//! ```bash
+//! cargo run --release --example federated_failover
+//! ```
+
+use anyhow::Result;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::GapsSystem;
+use gaps::metrics::sample_queries;
+use gaps::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false, &["no-xla"])?;
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 8_000;
+    cfg.apply_args(&args)?;
+    if !std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists() {
+        eprintln!("note: artifacts/ missing, using the rust scorer (run `make artifacts`)");
+        cfg.search.use_xla = false;
+    }
+
+    let mut sys = GapsSystem::deploy(cfg, 12)?;
+    let dep_queries = sample_queries(sys.deployment(), 18, 7);
+    let total_docs = sys.deployment().locator.total_docs();
+    let active = sys.deployment().active.clone();
+
+    println!("phase 1: healthy grid (12 nodes)");
+    run_phase(&mut sys, &dep_queries[0..6], total_docs)?;
+
+    let (v1, v2) = (active[5], active[9]);
+    println!("\nphase 2: {v1} and {v2} fail");
+    sys.fail_node(v1);
+    sys.fail_node(v2);
+    run_phase(&mut sys, &dep_queries[6..12], total_docs)?;
+
+    println!("\nphase 3: nodes rejoin");
+    sys.recover_node(v1);
+    sys.recover_node(v2);
+    run_phase(&mut sys, &dep_queries[12..18], total_docs)?;
+
+    println!("\nperf-history state after the storm:");
+    for &node in &active {
+        println!(
+            "  {node}: {:>8.0} docs/s ({} samples)",
+            sys.perf_db().estimate(node),
+            sys.perf_db().samples(node)
+        );
+    }
+    Ok(())
+}
+
+fn run_phase(sys: &mut GapsSystem, queries: &[String], total_docs: u64) -> Result<()> {
+    let mut worst: f64 = 0.0;
+    let mut sum = 0.0;
+    for q in queries {
+        let r = sys.search(q)?;
+        anyhow::ensure!(
+            r.docs_scanned == total_docs,
+            "coverage lost: {} of {total_docs} docs scanned",
+            r.docs_scanned
+        );
+        worst = worst.max(r.response_s());
+        sum += r.response_s();
+    }
+    println!(
+        "  {} queries, full coverage, mean {:.1} ms, worst {:.1} ms",
+        queries.len(),
+        sum / queries.len() as f64 * 1e3,
+        worst * 1e3
+    );
+    Ok(())
+}

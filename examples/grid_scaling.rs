@@ -1,0 +1,96 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): the paper's full
+//! evaluation on a real (synthetic-corpus) workload through the production
+//! XLA scoring path.
+//!
+//! Sweeps the grid from 1 to 11 nodes over a fixed corpus, runs the same
+//! query mix through GAPS and the traditional baseline on identical
+//! deployments, and prints the three paper figures' series (response
+//! time, speedup, efficiency) plus the timeline decomposition that
+//! explains them.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example grid_scaling
+//! cargo run --release --example grid_scaling -- --docs 50000 --queries 16
+//! ```
+
+use anyhow::Result;
+
+use gaps::config::GapsConfig;
+use gaps::metrics::{run_node_sweep, System};
+use gaps::util::bench::Table;
+use gaps::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false, &["no-xla"])?;
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 20_000;
+    cfg.workload.num_queries = 8;
+    cfg.apply_args(&args)?;
+    if !std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists() {
+        eprintln!("note: artifacts/ missing, using the rust scorer (run `make artifacts`)");
+        cfg.search.use_xla = false;
+    }
+
+    let counts: Vec<usize> = vec![1, 2, 3, 5, 8, 11]
+        .into_iter()
+        .filter(|&n| n <= cfg.grid.total_nodes())
+        .collect();
+    eprintln!("{}\nsweeping {counts:?} nodes...\n", cfg.describe());
+
+    let sweep = run_node_sweep(&cfg, &counts)?;
+    let serial_g = sweep.serial_response_s(System::Gaps);
+    let serial_t = sweep.serial_response_s(System::Traditional);
+
+    println!("== Fig 3: response time (ms) ==");
+    let mut t3 = Table::new(&["nodes", "gaps_ms", "trad_ms", "gaps_work", "gaps_net", "gaps_ovh"]);
+    for p in &sweep.points {
+        t3.row(vec![
+            p.nodes.to_string(),
+            format!("{:.1}", p.gaps.response_s * 1e3),
+            format!("{:.1}", p.traditional.response_s * 1e3),
+            format!("{:.1}", p.gaps.work_s * 1e3),
+            format!("{:.1}", p.gaps.net_s * 1e3),
+            format!("{:.1}", p.gaps.overhead_s * 1e3),
+        ]);
+    }
+    print!("{}", t3.render());
+    t3.write_csv("example_fig3");
+
+    println!("\n== Fig 4: speedup ==");
+    let mut t4 = Table::new(&["nodes", "gaps", "traditional"]);
+    for p in &sweep.points {
+        t4.row(vec![
+            p.nodes.to_string(),
+            format!("{:.2}", p.speedup(serial_g, System::Gaps)),
+            format!("{:.2}", p.speedup(serial_t, System::Traditional)),
+        ]);
+    }
+    print!("{}", t4.render());
+    t4.write_csv("example_fig4");
+
+    println!("\n== Fig 5: efficiency ==");
+    let mut t5 = Table::new(&["nodes", "gaps", "traditional"]);
+    for p in &sweep.points {
+        t5.row(vec![
+            p.nodes.to_string(),
+            format!("{:.2}", p.efficiency(serial_g, System::Gaps)),
+            format!("{:.2}", p.efficiency(serial_t, System::Traditional)),
+        ]);
+    }
+    print!("{}", t5.render());
+    t5.write_csv("example_fig5");
+
+    // Headline check (paper abstract: "enhanced the performance").
+    let last = sweep.points.last().unwrap();
+    let gain = last.traditional.response_s / last.gaps.response_s;
+    println!(
+        "\nheadline: at {} nodes GAPS answers {:.2}x faster than traditional \
+         ({:.0} ms vs {:.0} ms)",
+        last.nodes,
+        gain,
+        last.gaps.response_s * 1e3,
+        last.traditional.response_s * 1e3
+    );
+    Ok(())
+}

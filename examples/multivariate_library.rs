@@ -1,0 +1,56 @@
+//! Digital-library scenario: the multivariate search type the USI offers
+//! (paper §III.4), driven as a realistic session — a researcher narrowing
+//! a literature search by field and year over a federated repository.
+//!
+//! ```bash
+//! cargo run --release --example multivariate_library
+//! ```
+
+use anyhow::Result;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::GapsSystem;
+use gaps::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false, &["no-xla"])?;
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 10_000;
+    cfg.search.top_k = 5;
+    cfg.apply_args(&args)?;
+    if !std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists() {
+        eprintln!("note: artifacts/ missing, using the rust scorer (run `make artifacts`)");
+        cfg.search.use_xla = false;
+    }
+
+    let mut sys = GapsSystem::deploy(cfg, 9)?;
+
+    // A narrowing session: broad keyword -> field-scoped -> year-bounded.
+    let session = [
+        ("broad keyword", "grid scheduling".to_string()),
+        ("field-scoped", "title:grid scheduling".to_string()),
+        ("year-bounded", "title:grid scheduling year:2008..2014".to_string()),
+        ("author-scoped", "authors:zhang grid".to_string()),
+        ("venue-scoped", "venue:conference distributed storage".to_string()),
+    ];
+
+    for (label, query) in &session {
+        println!("== {label}: {query:?} ==");
+        match gaps::usi::one_shot(&mut sys, query) {
+            Ok((rendered, _)) => print!("{rendered}\n"),
+            Err(e) => println!("error: {e}\n"),
+        }
+    }
+
+    // Verify the filters actually bound the result set.
+    let narrow = sys.search("title:grid scheduling year:2008..2014")?;
+    for h in &narrow.hits {
+        let p = sys.deployment().publication(h.global_id).unwrap();
+        assert!((2008..=2014).contains(&p.year), "year filter violated");
+    }
+    println!(
+        "verified: {} year-bounded hits all fall in 2008..2014",
+        narrow.hits.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: deploy a small GAPS grid and run a few searches.
+//!
+//! ```bash
+//! make artifacts                       # once (python AOT compile path)
+//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- --no-xla   # rust scorer
+//! ```
+//!
+//! Walks the paper's whole flow: 3 VOs x 4 nodes, a synthetic publication
+//! corpus distributed as replicated sub-shards, keyword + multivariate
+//! queries through the USI, a node failure, and the perf-history database
+//! adapting the execution plan.
+
+use anyhow::Result;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::GapsSystem;
+use gaps::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false, &["no-xla"])?;
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 5_000;
+    cfg.apply_args(&args)?;
+    if !std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists() {
+        eprintln!("note: artifacts/ missing, falling back to the rust scorer (run `make artifacts`)");
+        cfg.search.use_xla = false;
+    }
+
+    println!("== deploying ==\n{}\n", cfg.describe());
+    let mut sys = GapsSystem::deploy(cfg, 12)?;
+    println!(
+        "deployed: {} active nodes, {} data sources, {} docs\n",
+        sys.deployment().active.len(),
+        sys.deployment().locator.len(),
+        sys.deployment().locator.total_docs()
+    );
+
+    // --- keyword search -------------------------------------------------
+    println!("== keyword search ==");
+    let (rendered, timing) = gaps::usi::one_shot(&mut sys, "grid distributed search")?;
+    print!("{rendered}");
+    println!(
+        "usi overhead: {:.3} ms ({:.2}% of response)\n",
+        timing.interface_s * 1e3,
+        timing.interface_fraction() * 100.0
+    );
+
+    // --- multivariate search --------------------------------------------
+    println!("== multivariate search (field + year filters) ==");
+    let (rendered, _) = gaps::usi::one_shot(&mut sys, "title:grid scheduling year:2005..2012")?;
+    print!("{rendered}");
+    println!();
+
+    // --- grid dynamicity -------------------------------------------------
+    let victim = sys.deployment().active[3];
+    println!("== failing {victim} and searching again ==");
+    sys.fail_node(victim);
+    let resp = sys.search("massive academic publications")?;
+    println!(
+        "still scanned {} docs over {} jobs (replicas covered {victim})\n",
+        resp.docs_scanned, resp.jobs
+    );
+    sys.recover_node(victim);
+
+    // --- perf-history adaptation ------------------------------------------
+    println!("== perf-history database after the session ==");
+    for &node in &sys.deployment().active.clone()[..4] {
+        println!(
+            "  {node}: estimated {:>8.0} docs/s ({} samples)",
+            sys.perf_db().estimate(node),
+            sys.perf_db().samples(node),
+        );
+    }
+    println!(
+        "\njob table: {} created, {} completed",
+        sys.query_manager().total_jobs(),
+        sys.query_manager().completed_jobs()
+    );
+    Ok(())
+}

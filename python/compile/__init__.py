@@ -1,0 +1,7 @@
+"""GAPS build-time compile path (Layer 1 + Layer 2).
+
+Everything in this package runs ONCE, at `make artifacts` time, and never
+on the request path. It lowers the JAX/Pallas scoring stack to HLO *text*
+artifacts that the rust runtime (`rust/src/runtime/`) loads through the
+PJRT C API.
+"""

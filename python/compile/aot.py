@@ -1,0 +1,113 @@
+"""AOT lowering: JAX/Pallas scoring stack -> HLO text artifacts.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one `ranker_q{Q}_d{D}_f{F}_k{K}.hlo.txt` per shape variant plus a
+`manifest.json` the rust runtime uses to discover artifacts and their
+shapes. HLO *text* (NOT `lowered.compile()` / `.serialize()`) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/load_hlo and DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape variants shipped to the rust runtime. Chosen to cover the Search
+# Service's packing regimes:
+#   * q1_d256   — interactive single query, small candidate block
+#   * q1_d1024  — interactive single query, large candidate block
+#   * q8_d256   — batched queries (the coordinator's dynamic batcher)
+#   * q8_d1024  — batched queries, large block (bench hot path)
+# F=512 hashed features per field, K=32 results per block; NF=4 fields.
+VARIANTS = (
+    dict(q=1, d=256, f=512, k=32),
+    dict(q=1, d=1024, f=512, k=32),
+    dict(q=8, d=256, f=512, k=32),
+    dict(q=8, d=1024, f=512, k=32),
+)
+
+BLOCK_D = 256  # Pallas doc-tile size (see kernels/bm25.py VMEM analysis)
+
+
+def variant_name(q: int, d: int, f: int, k: int) -> str:
+    return f"ranker_q{q}_d{d}_f{f}_k{k}"
+
+
+def lower_variant(q: int, d: int, f: int, k: int, nf: int = model.NUM_FIELDS):
+    """Lower one shape variant of rank_candidates to a jax Lowered."""
+    fn = functools.partial(
+        model.rank_candidates,
+        k=k,
+        k1=model.DEFAULT_K1,
+        block_d=min(BLOCK_D, d),
+        interpret=True,
+    )
+    specs = (
+        jax.ShapeDtypeStruct((nf, d, f), jnp.float32),  # doc_tf
+        jax.ShapeDtypeStruct((nf, d), jnp.float32),  # len_norm
+        jax.ShapeDtypeStruct((nf,), jnp.float32),  # field_w
+        jax.ShapeDtypeStruct((q, f), jnp.float32),  # qw
+    )
+    return jax.jit(fn).lower(*specs)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 32-bit-id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "abi": {
+            "fields": list(model.FIELDS),
+            "k1": model.DEFAULT_K1,
+            "inputs": ["doc_tf[nf,d,f]", "len_norm[nf,d]", "field_w[nf]", "qw[q,f]"],
+            "outputs": ["scores[q,k] f32", "indices[q,k] i32"],
+            "return_tuple": True,
+        },
+        "artifacts": [],
+    }
+    for v in VARIANTS:
+        name = variant_name(**v)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        text = to_hlo_text(lower_variant(**v))
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["artifacts"].append(
+            dict(name=name, file=name + ".hlo.txt", nf=model.NUM_FIELDS, **v)
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

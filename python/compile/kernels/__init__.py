@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels for GAPS relevance scoring.
+
+`bm25` holds the production kernel (tiled BM25F scoring); `ref` holds the
+pure-jnp oracle every kernel is validated against at build time.
+"""
+
+from . import bm25, ref  # noqa: F401

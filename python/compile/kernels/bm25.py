@@ -1,0 +1,140 @@
+"""Layer-1 Pallas kernel: tiled BM25F relevance scoring.
+
+This is the compute hot-spot of GAPS: scoring a block of candidate
+documents against a (small) batch of queries. The kernel is written for the
+TPU memory hierarchy even though this repo executes it under
+`interpret=True` on CPU (the CPU PJRT plugin cannot run Mosaic
+custom-calls — see DESIGN.md §Hardware-Adaptation):
+
+* The document axis `D` is tiled into blocks of `block_d` documents; each
+  grid step stages one `[NF, block_d, F]` term-count tile plus the shared
+  `[Q, F]` query tile into VMEM via the BlockSpecs below. Pallas
+  double-buffers the HBM->VMEM stream across grid steps automatically.
+* The per-field combine + BM25 saturation are VPU element-wise epilogues
+  computed on the staged tile, and the query dot-product is a single
+  `[Q, F] x [F, block_d]` contraction targeted at the MXU
+  (`preferred_element_type=float32` keeps f32 accumulation for bf16 tiles).
+* VMEM footprint per grid step (f32):
+      NF*block_d*F + Q*F + NF*block_d + Q*block_d   floats
+  e.g. NF=4, block_d=256, F=512, Q=8 -> ~2.1 MiB, comfortably inside the
+  ~16 MiB VMEM budget with double buffering (x2).
+
+Grid-search framing: `doc_tf` are hashed per-field term counts for one
+*candidate block* retrieved by the inverted index on a worker node;
+`qw` is the IDF-weighted query vector produced by the broker. The rust
+Search Service packs candidate blocks and calls the AOT artifact built
+from `model.rank_candidates`, which wraps this kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bm25_block_kernel(field_w_ref, qw_ref, doc_tf_ref, len_norm_ref, out_ref, *, k1: float):
+    """One grid step: score a [NF, block_d, F] document tile for all queries.
+
+    Refs (all staged in VMEM by the BlockSpecs in `bm25_scores`):
+      field_w_ref : [NF]            field mixing weights
+      qw_ref      : [Q, F]          query term weights (idf * qtf)
+      doc_tf_ref  : [NF, BD, F]     per-field hashed term counts, this tile
+      len_norm_ref: [NF, BD]        per-field length normalisers, this tile
+      out_ref     : [Q, BD]         output scores, this tile
+    """
+    doc_tf = doc_tf_ref[...].astype(jnp.float32)
+    len_norm = len_norm_ref[...].astype(jnp.float32)
+    field_w = field_w_ref[...].astype(jnp.float32)
+
+    # Per-field length normalisation + field combine (VPU, element-wise).
+    # ctf[d, t] = sum_f field_w[f] * doc_tf[f, d, t] * len_norm[f, d]
+    weighted = doc_tf * (field_w[:, None, None] * len_norm[:, :, None])
+    ctf = jnp.sum(weighted, axis=0)  # [BD, F]
+
+    # BM25 term-frequency saturation (VPU). ctf >= 0, k1 > 0: no div-by-0.
+    sat = ctf * (k1 + 1.0) / (ctf + k1)  # [BD, F]
+
+    # Query contraction (MXU): [Q, F] x [F, BD] -> [Q, BD].
+    out_ref[...] = jax.lax.dot_general(
+        qw_ref[...].astype(jnp.float32),
+        sat,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k1", "block_d", "interpret"))
+def bm25_scores(
+    doc_tf: jax.Array,  # [NF, D, F]
+    len_norm: jax.Array,  # [NF, D]
+    field_w: jax.Array,  # [NF]
+    qw: jax.Array,  # [Q, F]
+    *,
+    k1: float = 1.2,
+    block_d: int = 256,
+    interpret: bool = True,
+) -> jax.Array:  # [Q, D] f32
+    """Tiled BM25F scores for a candidate block (Pallas).
+
+    `D` must be divisible by `block_d` (the rust packer pads candidate
+    blocks to the artifact shape, so this holds by construction on the
+    request path; tests exercise the assertion).
+    """
+    nf, d, f = doc_tf.shape
+    q = qw.shape[0]
+    if len_norm.shape != (nf, d):
+        raise ValueError(f"len_norm shape {len_norm.shape} != {(nf, d)}")
+    if field_w.shape != (nf,):
+        raise ValueError(f"field_w shape {field_w.shape} != {(nf,)}")
+    if qw.shape[1] != f:
+        raise ValueError(f"qw feature dim {qw.shape[1]} != {f}")
+    block_d = min(block_d, d)
+    if d % block_d != 0:
+        raise ValueError(f"D={d} not divisible by block_d={block_d}")
+
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        functools.partial(_bm25_block_kernel, k1=k1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nf,), lambda i: (0,)),  # field_w: replicated
+            pl.BlockSpec((q, f), lambda i: (0, 0)),  # qw: replicated
+            pl.BlockSpec((nf, block_d, f), lambda i: (0, i, 0)),  # doc tile
+            pl.BlockSpec((nf, block_d), lambda i: (0, i)),  # len tile
+        ],
+        out_specs=pl.BlockSpec((q, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, d), jnp.float32),
+        interpret=interpret,
+    )(field_w, qw, doc_tf, len_norm)
+
+
+def vmem_bytes(nf: int, block_d: int, f: int, q: int, itemsize: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (single-buffered).
+
+    Used by DESIGN.md §Perf-estimates and the L1 structural-profiling test
+    to keep the chosen BlockSpecs inside the VMEM budget.
+    """
+    doc_tile = nf * block_d * f
+    q_tile = q * f
+    ln_tile = nf * block_d
+    out_tile = q * block_d
+    fw = nf
+    return (doc_tile + q_tile + ln_tile + out_tile + fw) * itemsize
+
+
+def mxu_utilization_estimate(q: int, f: int, block_d: int) -> float:
+    """Estimated MXU utilisation of the contraction, for §Perf.
+
+    The MXU is a 128x128 systolic array; a [Q, F] x [F, BD] matmul with
+    Q < 128 only fills Q of the 128 result rows, so utilisation is bounded
+    by Q/128 (F and BD are chosen as multiples of 128 and don't limit).
+    This is why the L3 coordinator batches queries (paper: "number of query
+    that requires simultaneous processing") before dispatching a block.
+    """
+    rows = min(q, 128) / 128.0
+    cols = min(block_d, 128) / 128.0 if block_d < 128 else 1.0
+    depth = min(f, 128) / 128.0 if f < 128 else 1.0
+    return rows * cols * depth

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the GAPS scoring stack.
+
+This module is the CORRECTNESS ground truth: no Pallas, no tiling, just the
+BM25F math written in the most obvious way. `python/tests` asserts the
+Pallas kernel (kernels/bm25.py) matches this for every shape/dtype the
+hypothesis sweep generates, and the AOT artifacts are validated against it
+before they are ever handed to the rust runtime.
+
+Scoring model (BM25F-lite, the per-field variant used by GAPS):
+
+    wtf[f, d, t]  = tf[f, d, t] * len_norm[f, d]          per-field length-
+                                                          normalised term freq
+    ctf[d, t]     = sum_f field_w[f] * wtf[f, d, t]       field-combined tf
+    sat[d, t]     = ctf * (k1 + 1) / (ctf + k1)           BM25 saturation
+    score[q, d]   = sum_t qw[q, t] * sat[d, t]            query dot-product
+
+where `len_norm[f, d] = 1 / (1 - b_f + b_f * len[f, d] / avglen[f])` is
+precomputed by the caller (the rust Search Service), and `qw` already folds
+in the IDF weights and query term counts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def bm25_scores_ref(
+    doc_tf: jax.Array,  # [NF, D, F] per-field hashed term counts
+    len_norm: jax.Array,  # [NF, D]   precomputed length normalisers
+    field_w: jax.Array,  # [NF]      field weights (title > abstract > ...)
+    qw: jax.Array,  # [Q, F]    query term weights (idf * qtf)
+    *,
+    k1: float = 1.2,
+) -> jax.Array:  # [Q, D] relevance scores
+    """Reference BM25F scoring: obvious math, no tiling."""
+    doc_tf = doc_tf.astype(jnp.float32)
+    len_norm = len_norm.astype(jnp.float32)
+    field_w = field_w.astype(jnp.float32)
+    qw = qw.astype(jnp.float32)
+    # Field-combined, length-normalised term frequencies: [D, F].
+    ctf = jnp.einsum("f,fdt,fd->dt", field_w, doc_tf, len_norm)
+    # BM25 term-frequency saturation. ctf >= 0 and k1 > 0, so no div-by-0.
+    sat = ctf * (k1 + 1.0) / (ctf + k1)
+    return qw @ sat.T
+
+
+def rank_ref(
+    doc_tf: jax.Array,
+    len_norm: jax.Array,
+    field_w: jax.Array,
+    qw: jax.Array,
+    *,
+    k: int = 32,
+    k1: float = 1.2,
+) -> tuple[jax.Array, jax.Array]:
+    """Reference ranking: full scores then exact top-k."""
+    scores = bm25_scores_ref(doc_tf, len_norm, field_w, qw, k1=k1)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)

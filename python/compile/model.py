@@ -1,0 +1,84 @@
+"""Layer-2 JAX compute graph: candidate ranking for GAPS.
+
+`rank_candidates` is the function the AOT path lowers: it scores one packed
+candidate block with the Pallas BM25F kernel (Layer 1) and reduces to an
+exact top-k. One HLO artifact is produced per (Q, D, F, K) shape variant —
+see `aot.py` — and the rust Search Service picks the variant that matches
+its packed block.
+
+Design notes (L2 optimisation surface, see EXPERIMENTS.md §Perf):
+* top-k runs on the [Q, D] score matrix produced by the kernel — XLA fuses
+  the per-block score layout with the sort, so no extra materialisation
+  beyond the [Q, D] scores.
+* All shapes are static; there is no host round-trip between scoring and
+  top-k, and nothing is recomputed (one pass over the doc tile).
+* Padded candidate rows are passed with doc_tf == 0 and len_norm == 0,
+  which yields score == 0 exactly (saturation(0) == 0), so padding can
+  never outrank a real match with positive query overlap; the rust merger
+  additionally drops indices >= n_real.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bm25
+
+# Field order is part of the artifact ABI shared with rust/src/index/dense.rs.
+FIELDS = ("title", "abstract", "authors", "venue")
+NUM_FIELDS = len(FIELDS)
+
+# Default BM25 constants (classic Robertson values); k1 is baked into the
+# artifact at lowering time, b is folded into len_norm by the caller.
+DEFAULT_K1 = 1.2
+
+
+@functools.partial(jax.jit, static_argnames=("k", "k1", "block_d", "interpret"))
+def rank_candidates(
+    doc_tf: jax.Array,  # [NF, D, F] per-field hashed term counts
+    len_norm: jax.Array,  # [NF, D]   precomputed length normalisers
+    field_w: jax.Array,  # [NF]      field weights
+    qw: jax.Array,  # [Q, F]    query term weights (idf * qtf)
+    *,
+    k: int = 32,
+    k1: float = DEFAULT_K1,
+    block_d: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Score a candidate block and return exact top-k per query.
+
+    Returns (values [Q, K] f32, indices [Q, K] i32); indices are positions
+    within the block — the rust merger maps them back to global doc ids.
+    """
+    scores = bm25.bm25_scores(
+        doc_tf, len_norm, field_w, qw, k1=k1, block_d=block_d, interpret=interpret
+    )
+    k = min(k, scores.shape[1])
+    # Exact top-k via argsort + gather rather than jax.lax.top_k: top_k
+    # lowers to the modern `topk(..., largest=true)` HLO op, which the
+    # xla_extension 0.5.1 text parser used by the rust runtime rejects;
+    # sort + gather is ancient HLO and round-trips cleanly. argsort is
+    # stable, so ties break by ascending index — matching the rust
+    # scorer's tie-break exactly.
+    idx = jnp.argsort(-scores, axis=1)[:, :k]
+    vals = jnp.take_along_axis(scores, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def example_inputs(
+    q: int, d: int, f: int, nf: int = NUM_FIELDS, seed: int = 0
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Deterministic example inputs for lowering / smoke tests."""
+    kq, kd, kl = jax.random.split(jax.random.PRNGKey(seed), 3)
+    doc_tf = jax.random.poisson(kd, 0.02, (nf, d, f)).astype(jnp.float32)
+    lens = jnp.maximum(jax.random.poisson(kl, 40.0, (nf, d)).astype(jnp.float32), 1.0)
+    b = 0.75
+    len_norm = 1.0 / (1.0 - b + b * lens / jnp.mean(lens))
+    field_w = jnp.array([2.0, 1.0, 1.5, 0.5][:nf], dtype=jnp.float32)
+    qw = jax.random.uniform(kq, (q, f), minval=0.0, maxval=3.0) * (
+        jax.random.uniform(kq, (q, f)) < 0.01
+    )
+    return doc_tf, len_norm, field_w, qw.astype(jnp.float32)

@@ -1,0 +1,8 @@
+"""Make `compile.*` importable whether pytest runs from python/ or the
+repo root (the Makefile uses `cd python`; the top-level validation command
+uses `pytest python/tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

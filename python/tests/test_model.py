@@ -1,0 +1,70 @@
+"""L2 correctness: rank_candidates (scoring + top-k) and its invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestRankCandidates:
+    def test_topk_matches_ref(self):
+        args = model.example_inputs(4, 512, 128, seed=1)
+        v, i = model.rank_candidates(*args, k=16, block_d=128)
+        rv, ri = ref.rank_ref(*args, k=16)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-5, atol=1e-5)
+
+    def test_topk_matches_numpy_argsort(self):
+        args = model.example_inputs(2, 256, 64, seed=2)
+        v, i = model.rank_candidates(*args, k=8, block_d=128)
+        scores = np.asarray(ref.bm25_scores_ref(*args))
+        for q in range(scores.shape[0]):
+            want = np.sort(scores[q])[::-1][:8]
+            np.testing.assert_allclose(np.asarray(v)[q], want, rtol=1e-5, atol=1e-5)
+
+    def test_indices_are_valid_and_consistent(self):
+        args = model.example_inputs(3, 256, 64, seed=3)
+        v, i = model.rank_candidates(*args, k=8, block_d=128)
+        v, i = np.asarray(v), np.asarray(i)
+        scores = np.asarray(ref.bm25_scores_ref(*args))
+        assert i.dtype == np.int32
+        assert ((i >= 0) & (i < 256)).all()
+        for q in range(scores.shape[0]):
+            np.testing.assert_allclose(scores[q, i[q]], v[q], rtol=1e-5, atol=1e-5)
+
+    def test_values_sorted_descending(self):
+        args = model.example_inputs(4, 256, 64, seed=4)
+        v, _ = model.rank_candidates(*args, k=16, block_d=128)
+        v = np.asarray(v)
+        assert (np.diff(v, axis=1) <= 1e-6).all()
+
+    def test_k_clamped_to_d(self):
+        args = model.example_inputs(1, 64, 32, seed=5)
+        v, i = model.rank_candidates(*args, k=128, block_d=64)
+        assert v.shape == (1, 64) and i.shape == (1, 64)
+
+    def test_artifact_shapes(self):
+        """Every shipped variant lowers with the declared output shapes."""
+        for q, d in ((1, 256), (8, 256)):
+            args = model.example_inputs(q, d, 512, seed=6)
+            v, i = model.rank_candidates(*args, k=32, block_d=256)
+            assert v.shape == (q, 32) and i.shape == (q, 32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    q=st.integers(1, 6),
+    dpow=st.integers(5, 8),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_rank_matches_ref(q, dpow, k, seed):
+    d = 2**dpow
+    args = model.example_inputs(q, d, 64, seed=seed)
+    v, i = model.rank_candidates(*args, k=k, block_d=min(128, d))
+    rv, ri = ref.rank_ref(*args, k=min(k, d))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-4, atol=1e-4)

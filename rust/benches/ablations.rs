@@ -1,0 +1,127 @@
+//! Ablations over the design choices DESIGN.md calls out (not in the
+//! paper, but they isolate *why* GAPS wins):
+//!
+//! 1. **Scheduling policy** — perf-history LPT vs blind round-robin on a
+//!    heterogeneous grid (paper: "execution plan ... depends on the
+//!    previous performance").
+//! 2. **Resident services** — the globus-container design vs per-job
+//!    cold starts (paper §III.3).
+//! 3. **Query batching** — one q8 artifact execution vs 8 q1 executions
+//!    (the MXU-utilization argument in DESIGN.md §Hardware-Adaptation:
+//!    the contraction's MXU rows scale with Q).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use std::sync::Arc;
+
+use gaps::config::{GapsConfig, SchedulePolicy};
+use gaps::coordinator::{Deployment, GapsSystem};
+use gaps::corpus::{CorpusGenerator, CorpusSpec};
+use gaps::index::{build_query_weights, pack_block, Shard, ShardStats};
+use gaps::metrics::{measure_gaps, sample_queries};
+use gaps::runtime::Executor;
+use gaps::util::bench::{Bencher, Table};
+
+fn main() {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 20_000;
+    cfg.workload.num_queries = 8;
+    cfg.grid.speed_min = 0.4;
+    cfg.grid.speed_max = 1.6;
+    let have_artifacts =
+        std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists();
+    if !have_artifacts {
+        eprintln!("note: artifacts/ missing, using rust scorer (batching ablation skipped)");
+        cfg.search.use_xla = false;
+    }
+
+    let dep = Arc::new(Deployment::build(&cfg, 9).expect("deployment"));
+    let queries = sample_queries(&dep, cfg.workload.num_queries, 0xAB1A);
+
+    println!("== Ablation 1: scheduling policy (9 heterogeneous nodes) ==");
+    let mut t = Table::new(&["policy", "response_ms", "critical_work_ms"]);
+    for policy in [SchedulePolicy::PerfHistory, SchedulePolicy::RoundRobin] {
+        let mut c = cfg.clone();
+        c.search.policy = policy;
+        let mut sys = GapsSystem::from_deployment(c, Arc::clone(&dep)).expect("deploy");
+        for q in &queries {
+            sys.search(q).expect("warmup"); // perf-history needs samples
+        }
+        let point = measure_gaps(&mut sys, &queries).expect("measure");
+        t.row(vec![
+            policy.name().into(),
+            format!("{:.1}", point.response_s * 1e3),
+            format!("{:.1}", point.work_s * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv("ablation_policy");
+
+    println!("\n== Ablation 2: resident services vs per-job cold start ==");
+    let mut t = Table::new(&["container", "response_ms", "overhead_ms"]);
+    for resident in [true, false] {
+        let mut c = cfg.clone();
+        c.grid.resident_services = resident;
+        let mut sys = GapsSystem::from_deployment(c, Arc::clone(&dep)).expect("deploy");
+        for q in &queries {
+            sys.search(q).expect("warmup");
+        }
+        let point = measure_gaps(&mut sys, &queries).expect("measure");
+        t.row(vec![
+            if resident { "resident (GAPS)" } else { "cold-start" }.into(),
+            format!("{:.1}", point.response_s * 1e3),
+            format!("{:.1}", point.overhead_s * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv("ablation_container");
+
+    if have_artifacts {
+        println!("\n== Ablation 3: query batching through the q8 artifact ==");
+        batching_ablation();
+    }
+}
+
+/// 8 queries through one q8 execution vs eight q1 executions.
+fn batching_ablation() {
+    let spec = CorpusSpec { num_docs: 2_000, vocab_size: 800, ..CorpusSpec::default() };
+    let gen = CorpusGenerator::new(spec);
+    let shard = Shard::build(0, gen.generate_range(0, 2_000), 512);
+    let mut acc = ShardStats::empty(512);
+    acc.merge(&shard.stats);
+    let stats = acc.finalize();
+    let mut exec = Executor::new(std::path::Path::new("artifacts")).expect("executor");
+
+    let candidates: Vec<u32> = (0..1024).collect();
+    let block = pack_block(&shard, &stats, &candidates, 1024, 0.75);
+    let queries: Vec<Vec<u32>> = (0..8)
+        .map(|i| {
+            gaps::search::ParsedQuery::parse(&shard.pubs[i * 11].title, 512)
+                .unwrap()
+                .buckets
+        })
+        .collect();
+    let qw8 = build_query_weights(&queries, &stats, 512, 8);
+    let field_w = [2.0f32, 1.0, 1.5, 0.5];
+
+    let bencher = Bencher::quick();
+    let mut batched = bencher.run("q8 artifact, 1 execution, 8 queries", || {
+        exec.rank(&block, &qw8, 8, &field_w).expect("rank");
+    });
+    let singles: Vec<Vec<f32>> = queries
+        .iter()
+        .map(|q| build_query_weights(&[q.clone()], &stats, 512, 1))
+        .collect();
+    let mut unbatched = bencher.run("q1 artifact, 8 executions", || {
+        for qw in &singles {
+            exec.rank(&block, qw, 1, &field_w).expect("rank");
+        }
+    });
+    println!("{}", batched.report_line());
+    println!("{}", unbatched.report_line());
+    let speedup = unbatched.summary.p50() / batched.summary.p50();
+    println!(
+        "batching speedup: {speedup:.2}x for 8 queries (MXU rows scale with Q \
+         on real TPUs — see DESIGN.md §Hardware-Adaptation)"
+    );
+}

@@ -1,0 +1,88 @@
+//! Paper Figure 3 — "Response time scales as the increase of size."
+//!
+//! Regenerates the response-time-vs-nodes series for GAPS and the
+//! traditional search over the default corpus. Paper claims to check
+//! (shape, not absolute numbers — our substrate is a simulated fabric on
+//! one host, not the authors' 2005-era campus grid):
+//!
+//! * GAPS is faster than traditional at every node count;
+//! * the paper quantifies the gap as 54%–100% ("remains to be faster
+//!   than the traditional search with 60% while other response time
+//!   reaches 100%, and some response time decreases to reach 54%");
+//! * response time dips with small node counts, then coordination
+//!   overheads flatten / reverse the gains past the sweet spot.
+//!
+//! Run: `cargo bench --bench fig3_response_time`
+//! Env: GAPS_BENCH_DOCS / GAPS_BENCH_QUERIES to resize the workload.
+
+use gaps::config::GapsConfig;
+use gaps::metrics::cached_node_sweep;
+use gaps::util::bench::Table;
+
+fn main() {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = std::env::var("GAPS_BENCH_DOCS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60_000);
+    cfg.workload.num_queries = std::env::var("GAPS_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    if !std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists() {
+        eprintln!("note: artifacts/ missing, using rust scorer");
+        cfg.search.use_xla = false;
+    }
+    let counts = [1usize, 2, 3, 5, 8, 11];
+    eprintln!(
+        "fig3: {} docs, {} queries, sweeping {counts:?}",
+        cfg.workload.num_docs, cfg.workload.num_queries
+    );
+
+    let sweep = cached_node_sweep(&cfg, &counts).expect("sweep failed");
+
+    println!("\n== Figure 3: response time vs nodes ==");
+    let mut t = Table::new(&[
+        "nodes",
+        "gaps_ms",
+        "trad_ms",
+        "trad/gaps",
+        "gaps_work_ms",
+        "gaps_net_ms",
+        "gaps_ovh_ms",
+    ]);
+    for p in &sweep.points {
+        t.row(vec![
+            p.nodes.to_string(),
+            format!("{:.1}", p.gaps.response_s * 1e3),
+            format!("{:.1}", p.traditional.response_s * 1e3),
+            format!("{:.2}x", p.traditional.response_s / p.gaps.response_s),
+            format!("{:.1}", p.gaps.work_s * 1e3),
+            format!("{:.1}", p.gaps.net_s * 1e3),
+            format!("{:.1}", p.gaps.overhead_s * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv("fig3_response_time");
+
+    // Shape checks (reported, and enforced so regressions fail the bench).
+    let mut ok = true;
+    for p in &sweep.points {
+        if p.gaps.response_s >= p.traditional.response_s {
+            println!("SHAPE FAIL: n={} gaps not faster", p.nodes);
+            ok = false;
+        }
+    }
+    let gains: Vec<f64> = sweep
+        .points
+        .iter()
+        .map(|p| (p.traditional.response_s / p.gaps.response_s - 1.0) * 100.0)
+        .collect();
+    println!(
+        "\ngaps faster by {:.0}%..{:.0}% across the sweep (paper reports 54%..100%)",
+        gains.iter().cloned().fold(f64::INFINITY, f64::min),
+        gains.iter().cloned().fold(0.0, f64::max),
+    );
+    assert!(ok, "figure 3 shape checks failed");
+    println!("fig3 shape checks OK");
+}

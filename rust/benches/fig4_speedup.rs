@@ -1,0 +1,107 @@
+//! Paper Figure 4 — "Speedup scales as the increase of size."
+//!
+//! Speedup = T(serial) / T(n nodes), per system against its own 1-node
+//! time (the paper's definition: "the ratio of the time to execute the
+//! job on a small system [to] the time to execute the same job on large
+//! systems").
+//!
+//! Paper series to compare against (shape targets):
+//!   GAPS:        1.55 @ 2 nodes rising monotonically to 2.59 @ 11;
+//!   traditional: 1.2 @ 2, peaking ~1.9 @ 5, falling back to ~1.5 @ 11;
+//!   GAPS +33% over traditional @ 2 nodes, +73% @ 11 nodes.
+//!
+//! Run: `cargo bench --bench fig4_speedup`
+
+use gaps::config::GapsConfig;
+use gaps::metrics::{cached_node_sweep, System};
+use gaps::util::bench::Table;
+
+/// Paper-reported reference points (node count, gaps, traditional).
+const PAPER: &[(usize, f64, f64)] = &[(2, 1.55, 1.2), (5, 2.0, 1.9), (11, 2.59, 1.5)];
+
+fn main() {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = std::env::var("GAPS_BENCH_DOCS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60_000);
+    cfg.workload.num_queries = std::env::var("GAPS_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    if !std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists() {
+        eprintln!("note: artifacts/ missing, using rust scorer");
+        cfg.search.use_xla = false;
+    }
+    let counts = [1usize, 2, 3, 5, 8, 11];
+    let sweep = cached_node_sweep(&cfg, &counts).expect("sweep failed");
+    let serial_g = sweep.serial_response_s(System::Gaps);
+    let serial_t = sweep.serial_response_s(System::Traditional);
+
+    println!("\n== Figure 4: speedup vs nodes ==");
+    let mut t = Table::new(&["nodes", "gaps", "traditional", "paper_gaps", "paper_trad"]);
+    for p in &sweep.points {
+        let paper = PAPER.iter().find(|(n, _, _)| *n == p.nodes);
+        t.row(vec![
+            p.nodes.to_string(),
+            format!("{:.2}", p.speedup(serial_g, System::Gaps)),
+            format!("{:.2}", p.speedup(serial_t, System::Traditional)),
+            paper.map(|(_, g, _)| format!("{g:.2}")).unwrap_or_else(|| "-".into()),
+            paper.map(|(_, _, tr)| format!("{tr:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv("fig4_speedup");
+
+    // Shape checks.
+    let gaps_at = |n: usize| {
+        sweep
+            .points
+            .iter()
+            .find(|p| p.nodes == n)
+            .map(|p| p.speedup(serial_g, System::Gaps))
+            .unwrap()
+    };
+    let trad_at = |n: usize| {
+        sweep
+            .points
+            .iter()
+            .find(|p| p.nodes == n)
+            .map(|p| p.speedup(serial_t, System::Traditional))
+            .unwrap()
+    };
+    let mut ok = true;
+    // 1. GAPS speedup grows from 2 to 11 nodes.
+    if gaps_at(11) <= gaps_at(2) {
+        println!("SHAPE FAIL: gaps speedup not increasing ({:.2} -> {:.2})", gaps_at(2), gaps_at(11));
+        ok = false;
+    }
+    // 2. GAPS exceeds 1 at scale (the grid actually helps).
+    if gaps_at(11) <= 1.0 {
+        println!("SHAPE FAIL: gaps speedup at 11 nodes <= 1 ({:.2})", gaps_at(11));
+        ok = false;
+    }
+    // 3. GAPS beats traditional speedup at the edges (paper: +33%, +73%).
+    for n in [2usize, 11] {
+        if gaps_at(n) <= trad_at(n) {
+            println!("SHAPE FAIL: n={n} gaps {:.2} !> trad {:.2}", gaps_at(n), trad_at(n));
+            ok = false;
+        }
+    }
+    // 4. Traditional turns over: its speedup at 11 is below its peak.
+    let trad_peak = counts[1..].iter().map(|&n| trad_at(n)).fold(0.0, f64::max);
+    if trad_at(11) >= trad_peak && trad_peak > 0.0 {
+        println!(
+            "SHAPE NOTE: traditional did not turn over (peak {:.2}, @11 {:.2})",
+            trad_peak,
+            trad_at(11)
+        );
+    }
+    println!(
+        "\ngaps over traditional: {:+.0}% @2, {:+.0}% @11 (paper: +33%, +73%)",
+        (gaps_at(2) / trad_at(2) - 1.0) * 100.0,
+        (gaps_at(11) / trad_at(11) - 1.0) * 100.0
+    );
+    assert!(ok, "figure 4 shape checks failed");
+    println!("fig4 shape checks OK");
+}

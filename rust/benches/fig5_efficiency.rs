@@ -1,0 +1,99 @@
+//! Paper Figure 5 — "Efficiency scales as the increase of size."
+//!
+//! Efficiency = speedup / nodes. Paper series (shape targets):
+//!   GAPS:        0.88 @ 2 nodes decreasing to 0.27 @ 11;
+//!   traditional: 0.62 @ 2 nodes decreasing to 0.17 @ 11;
+//!   GAPS +43% over traditional @ 2 nodes, +100% @ 11.
+//!
+//! Run: `cargo bench --bench fig5_efficiency`
+
+use gaps::config::GapsConfig;
+use gaps::metrics::{cached_node_sweep, System};
+use gaps::util::bench::Table;
+
+/// Paper-reported reference points (node count, gaps, traditional).
+const PAPER: &[(usize, f64, f64)] = &[(2, 0.88, 0.62), (11, 0.27, 0.17)];
+
+fn main() {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = std::env::var("GAPS_BENCH_DOCS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60_000);
+    cfg.workload.num_queries = std::env::var("GAPS_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    if !std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists() {
+        eprintln!("note: artifacts/ missing, using rust scorer");
+        cfg.search.use_xla = false;
+    }
+    let counts = [1usize, 2, 3, 5, 8, 11];
+    let sweep = cached_node_sweep(&cfg, &counts).expect("sweep failed");
+    let serial_g = sweep.serial_response_s(System::Gaps);
+    let serial_t = sweep.serial_response_s(System::Traditional);
+
+    println!("\n== Figure 5: efficiency vs nodes ==");
+    let mut t = Table::new(&["nodes", "gaps", "traditional", "paper_gaps", "paper_trad"]);
+    for p in &sweep.points {
+        let paper = PAPER.iter().find(|(n, _, _)| *n == p.nodes);
+        t.row(vec![
+            p.nodes.to_string(),
+            format!("{:.2}", p.efficiency(serial_g, System::Gaps)),
+            format!("{:.2}", p.efficiency(serial_t, System::Traditional)),
+            paper.map(|(_, g, _)| format!("{g:.2}")).unwrap_or_else(|| "-".into()),
+            paper.map(|(_, _, tr)| format!("{tr:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv("fig5_efficiency");
+
+    let gaps_at = |n: usize| {
+        sweep
+            .points
+            .iter()
+            .find(|p| p.nodes == n)
+            .map(|p| p.efficiency(serial_g, System::Gaps))
+            .unwrap()
+    };
+    let trad_at = |n: usize| {
+        sweep
+            .points
+            .iter()
+            .find(|p| p.nodes == n)
+            .map(|p| p.efficiency(serial_t, System::Traditional))
+            .unwrap()
+    };
+    let mut ok = true;
+    // 1. Efficiency decreases with node count for both systems.
+    if gaps_at(11) >= gaps_at(2) {
+        println!("SHAPE FAIL: gaps efficiency not decreasing");
+        ok = false;
+    }
+    if trad_at(11) >= trad_at(2) {
+        println!("SHAPE FAIL: traditional efficiency not decreasing");
+        ok = false;
+    }
+    // 2. GAPS is more efficient than traditional at the paper's endpoints.
+    for n in [2usize, 11] {
+        if gaps_at(n) <= trad_at(n) {
+            println!("SHAPE FAIL: n={n} gaps eff {:.2} !> trad {:.2}", gaps_at(n), trad_at(n));
+            ok = false;
+        }
+    }
+    // 3. Efficiencies live in (0, 1].
+    for p in &sweep.points {
+        let e = p.efficiency(serial_g, System::Gaps);
+        if !(0.0..=1.2).contains(&e) {
+            println!("SHAPE FAIL: n={} efficiency {e:.2} outside (0, 1.2]", p.nodes);
+            ok = false;
+        }
+    }
+    println!(
+        "\ngaps over traditional: {:+.0}% @2, {:+.0}% @11 (paper: +43%, +100%)",
+        (gaps_at(2) / trad_at(2) - 1.0) * 100.0,
+        (gaps_at(11) / trad_at(11) - 1.0) * 100.0
+    );
+    assert!(ok, "figure 5 shape checks failed");
+    println!("fig5 shape checks OK");
+}

@@ -1,0 +1,83 @@
+//! Paper §III.4 claim — "the experiment shows that the USI overhead is
+//! very small as compared with the response time."
+//!
+//! Measures the USI layer (input handling + result rendering) against the
+//! grid response time it wraps, plus microbenchmarks of its parts (query
+//! parsing, result formatting).
+//!
+//! Run: `cargo bench --bench usi_overhead`
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::GapsSystem;
+use gaps::search::ParsedQuery;
+use gaps::util::bench::{black_box, Bencher, Table};
+use gaps::util::stats::Summary;
+
+fn main() {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 10_000;
+    if !std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists() {
+        eprintln!("note: artifacts/ missing, using rust scorer");
+        cfg.search.use_xla = false;
+    }
+    let mut sys = GapsSystem::deploy(cfg, 12).expect("deploy");
+
+    // Warm all paths.
+    for q in ["grid computing", "massive academic publications year:2005..2012"] {
+        sys.search(q).expect("warmup");
+    }
+
+    // --- end-to-end split: interface vs grid --------------------------
+    let mut iface = Summary::new();
+    let mut grid = Summary::new();
+    let queries = [
+        "grid computing",
+        "distributed search academic publication",
+        "title:grid scheduling year:2005..2012",
+        "venue:conference storage",
+    ];
+    for _ in 0..25 {
+        for q in &queries {
+            let (_, timing) = gaps::usi::one_shot(&mut sys, q).expect("query");
+            iface.add(timing.interface_s);
+            grid.add(timing.grid_s);
+        }
+    }
+    let frac = iface.mean() / (iface.mean() + grid.mean());
+
+    println!("\n== USI overhead vs grid response (paper: \"very small\") ==");
+    let mut t = Table::new(&["component", "mean_ms", "p99_ms"]);
+    t.row(vec![
+        "usi interface".into(),
+        format!("{:.4}", iface.mean() * 1e3),
+        format!("{:.4}", iface.p99() * 1e3),
+    ]);
+    t.row(vec![
+        "grid response".into(),
+        format!("{:.2}", grid.mean() * 1e3),
+        format!("{:.2}", grid.p99() * 1e3),
+    ]);
+    print!("{}", t.render());
+    t.write_csv("usi_overhead");
+    println!("interface share of total: {:.3}%", frac * 100.0);
+
+    // --- microbenchmarks of the USI parts ------------------------------
+    let bencher = Bencher::quick();
+    let mut parse = bencher.run("parse multivariate query", || {
+        black_box(ParsedQuery::parse("title:grid scheduling year:2005..2012", 512).unwrap());
+    });
+    println!("\n{}", parse.report_line());
+    let resp = sys.search("grid computing scheduling").expect("query");
+    let mut fmt = bencher.run("format response", || {
+        black_box(gaps::usi::format_response(&resp));
+    });
+    println!("{}", fmt.report_line());
+
+    // The claim, enforced: interface under 2% of end-to-end time.
+    assert!(
+        frac < 0.02,
+        "USI overhead {:.2}% is not 'very small' vs response time",
+        frac * 100.0
+    );
+    println!("\nusi_overhead shape check OK (interface {:.3}% < 2%)", frac * 100.0);
+}

@@ -1,0 +1,5 @@
+//! Baselines the paper compares against.
+
+mod traditional;
+
+pub use traditional::TraditionalSearch;

@@ -1,0 +1,256 @@
+//! The "traditional search" comparator.
+//!
+//! The paper never specifies its traditional baseline beyond "the
+//! traditional search"; its reported curves (speedup peaking near 5 nodes
+//! then *declining*, efficiency falling to 0.17 at 11 nodes) are the
+//! signature of a centralized, non-grid distribution:
+//!
+//! * one central coordinator talks to every worker directly (no VO
+//!   brokers) — per-job dispatch is serialized at one point and pays WAN
+//!   latency to the 2/3 of nodes living in other VOs;
+//! * search processes are launched per job (no resident grid-service
+//!   container), paying the cold-start cost the paper's SS design avoids;
+//! * data is split uniformly (round-robin), blind to node heterogeneity —
+//!   the slowest node dominates the barrier;
+//! * no perf-history database, no adaptation.
+//!
+//! Everything else — corpus, analysis, scoring (same AOT artifacts or
+//! rust scorer), merge — is identical to GAPS, so differences are purely
+//! coordination. See DESIGN.md §Substitutions.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{GapsConfig, SchedulePolicy};
+use crate::coordinator::{
+    merge_topk, Deployment, ExecutionPlan, Hit, PerfDb, QueryExecutionEngine, SearchResponse,
+};
+use crate::coordinator::result_wire_bytes;
+use crate::grid::NodeId;
+use crate::runtime::Executor;
+use crate::search::{LocalHit, ParsedQuery, Scorer, SearchService};
+use crate::util::clock::{TaskTimeline, WallClock};
+
+/// The deployed traditional (centralized) search system.
+pub struct TraditionalSearch {
+    cfg: GapsConfig,
+    dep: Arc<Deployment>,
+    service: SearchService,
+    executor: Option<Executor>,
+    /// Central coordinator (first active node).
+    coordinator: NodeId,
+}
+
+impl std::fmt::Debug for TraditionalSearch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraditionalSearch")
+            .field("active_nodes", &self.dep.active.len())
+            .field("xla", &self.executor.is_some())
+            .finish()
+    }
+}
+
+impl TraditionalSearch {
+    /// Deploy over a shared deployment (same data as the GAPS system).
+    pub fn from_deployment(cfg: GapsConfig, dep: Arc<Deployment>) -> Result<TraditionalSearch> {
+        let executor = if cfg.search.use_xla {
+            Some(Executor::new(std::path::Path::new(&cfg.search.artifact_dir))?)
+        } else {
+            None
+        };
+        Ok(TraditionalSearch {
+            service: SearchService::new(cfg.search.clone()),
+            coordinator: dep.active[0],
+            cfg,
+            dep,
+            executor,
+        })
+    }
+
+    /// Build fabric + data and deploy.
+    pub fn deploy(cfg: GapsConfig, n_nodes: usize) -> Result<TraditionalSearch> {
+        let dep = Arc::new(Deployment::build(&cfg, n_nodes)?);
+        Self::from_deployment(cfg, dep)
+    }
+
+    pub fn deployment(&self) -> &Deployment {
+        &self.dep
+    }
+
+    /// Execute one query through the centralized flow.
+    pub fn search(&mut self, raw: &str) -> Result<SearchResponse> {
+        let plan_clock = WallClock::start();
+        let query = ParsedQuery::parse(raw, self.cfg.search.features)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        // Uniform (round-robin) plan, blind to speeds and history.
+        let available: Vec<_> = self
+            .dep
+            .active
+            .iter()
+            .map(|&n| self.dep.fabric.node(n).clone())
+            .collect();
+        let sources = self.dep.locator.sources();
+        let plan: ExecutionPlan = QueryExecutionEngine.plan(
+            &sources,
+            &available,
+            &PerfDb::default(),
+            SchedulePolicy::RoundRobin,
+        )?;
+        let plan_s = plan_clock.elapsed_s();
+
+        let net = &self.dep.fabric.net;
+        let coord_info = self.dep.fabric.node(self.coordinator).clone();
+        let dispatch_s = self.cfg.grid.dispatch_ms * 1e-3;
+        let cold_start_s = self.cfg.grid.cold_start_ms * 1e-3;
+
+        let mut branches: Vec<TaskTimeline> = Vec::new();
+        let mut lists: Vec<Vec<LocalHit>> = Vec::new();
+        let mut total_candidates = 0usize;
+        let mut total_docs = 0u64;
+
+        // The central coordinator dispatches every job itself, serially.
+        for (j_idx, (node, source_ids)) in plan.assignments.iter().enumerate() {
+            let node_info = self.dep.fabric.node(*node).clone();
+            let mut work_measured = 0.0f64;
+            let mut node_hits: Vec<Vec<LocalHit>> = Vec::new();
+            for sid in source_ids {
+                let shard = self.dep.shard(*sid).context("unknown source")?;
+                let mut scorer = match self.executor.as_mut() {
+                    Some(e) => Scorer::Xla(e),
+                    None => Scorer::Rust,
+                };
+                let out = self.service.search(shard, &self.dep.stats, &query, &mut scorer)?;
+                work_measured += out.work_s;
+                total_candidates += out.candidates;
+                total_docs += out.shard_docs as u64;
+                node_hits.push(out.hits);
+            }
+            let hits = merge_topk(&node_hits, self.cfg.search.top_k);
+            // JDF-equivalent request: query + source list, coarse estimate
+            // mirroring coordinator::jdf wire sizes.
+            let request_bytes = 96 + raw.len() + 8 * source_ids.len();
+            let branch = TaskTimeline {
+                work_s: work_measured / node_info.speed_factor,
+                net_s: net.transfer_between_s(&coord_info, &node_info, request_bytes)
+                    + net.transfer_between_s(
+                        &node_info,
+                        &coord_info,
+                        result_wire_bytes(hits.len()),
+                    ),
+                // Serial central dispatch + per-job process launch (no
+                // resident container in the traditional system).
+                overhead_s: (j_idx + 1) as f64 * dispatch_s + cold_start_s,
+            };
+            branches.push(branch);
+            lists.push(hits);
+        }
+
+        let mut timeline = TaskTimeline { work_s: plan_s, net_s: 0.0, overhead_s: 0.0 };
+        let slowest = branches
+            .into_iter()
+            .fold(TaskTimeline::default(), |acc, b| acc.max(b));
+        timeline.add(slowest);
+
+        let merge_clock = WallClock::start();
+        let merged = merge_topk(&lists, self.cfg.search.top_k);
+        timeline.work_s += merge_clock.elapsed_s();
+
+        let hits = merged
+            .into_iter()
+            .map(|h| Hit {
+                global_id: h.global_id,
+                score: h.score,
+                title: self
+                    .dep
+                    .publication(h.global_id)
+                    .map(|p| p.title.clone())
+                    .unwrap_or_default(),
+            })
+            .collect();
+
+        Ok(SearchResponse {
+            query: raw.to_string(),
+            hits,
+            timeline,
+            jobs: plan.assignments.len(),
+            candidates: total_candidates,
+            docs_scanned: total_docs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GapsSystem;
+
+    fn small_cfg() -> GapsConfig {
+        let mut cfg = GapsConfig::default();
+        cfg.workload.num_docs = 600;
+        cfg.workload.sub_shards = 8;
+        cfg.search.use_xla = false;
+        cfg
+    }
+
+    #[test]
+    fn finds_the_same_documents_as_gaps() {
+        let cfg = small_cfg();
+        let dep = Arc::new(Deployment::build(&cfg, 4).unwrap());
+        let mut gaps = GapsSystem::from_deployment(cfg.clone(), Arc::clone(&dep)).unwrap();
+        let mut trad = TraditionalSearch::from_deployment(cfg, dep).unwrap();
+        let q = "grid distributed search academic";
+        let g = gaps.search(q).unwrap();
+        let t = trad.search(q).unwrap();
+        // Same corpus, same scoring, same top-k => same result set.
+        let g_ids: Vec<u64> = g.hits.iter().map(|h| h.global_id).collect();
+        let t_ids: Vec<u64> = t.hits.iter().map(|h| h.global_id).collect();
+        assert_eq!(g_ids, t_ids);
+        for (gh, th) in g.hits.iter().zip(&t.hits) {
+            assert!((gh.score - th.score).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn pays_cold_start_and_serial_dispatch() {
+        let mut trad = TraditionalSearch::deploy(small_cfg(), 4).unwrap();
+        let resp = trad.search("grid computing").unwrap();
+        let cold = trad.cfg.grid.cold_start_ms * 1e-3;
+        let dispatch = trad.cfg.grid.dispatch_ms * 1e-3;
+        // Critical path carries at least one cold start + the last
+        // dispatch slot (4 jobs => 4 * dispatch on the last branch).
+        assert!(
+            resp.timeline.overhead_s >= cold + dispatch,
+            "overhead {} too small",
+            resp.timeline.overhead_s
+        );
+        assert_eq!(resp.docs_scanned, 600);
+    }
+
+    #[test]
+    fn single_node_has_no_network_cost() {
+        let mut trad = TraditionalSearch::deploy(small_cfg(), 1).unwrap();
+        let resp = trad.search("grid computing").unwrap();
+        assert_eq!(resp.timeline.net_s, 0.0, "coordinator == only worker");
+        assert_eq!(resp.jobs, 1);
+    }
+
+    #[test]
+    fn overhead_grows_with_node_count() {
+        let r4 = TraditionalSearch::deploy(small_cfg(), 4)
+            .unwrap()
+            .search("grid")
+            .unwrap();
+        let r11 = TraditionalSearch::deploy(small_cfg(), 11)
+            .unwrap()
+            .search("grid")
+            .unwrap();
+        assert!(
+            r11.timeline.overhead_s > r4.timeline.overhead_s,
+            "serial dispatch must grow: {} vs {}",
+            r11.timeline.overhead_s,
+            r4.timeline.overhead_s
+        );
+    }
+}

@@ -1,0 +1,407 @@
+//! Layered configuration system.
+//!
+//! One typed [`GapsConfig`] drives the whole stack (launcher, examples,
+//! benches). Values resolve in order: compiled defaults -> JSON config
+//! file (`--config file.json`) -> individual CLI flags (`--nodes 8`).
+//! Every knob is documented where it is defined; `GapsConfig::describe()`
+//! dumps the effective config (printed by the launcher at startup, and
+//! recorded in EXPERIMENTS.md runs).
+
+use crate::util::cli::{Args, CliError};
+use crate::util::json::Json;
+
+/// Scheduling policy for assigning search jobs to nodes (Fig 4/5 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// GAPS: use recorded node performance to size per-node work
+    /// ("the execution plan ... depends on the previous performance").
+    PerfHistory,
+    /// Naive round-robin over nodes (the traditional-search distribution).
+    RoundRobin,
+}
+
+impl SchedulePolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "perf" | "perf-history" | "perfhistory" | "gaps" => Some(SchedulePolicy::PerfHistory),
+            "rr" | "round-robin" | "roundrobin" | "traditional" => Some(SchedulePolicy::RoundRobin),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulePolicy::PerfHistory => "perf-history",
+            SchedulePolicy::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// Grid fabric shape + simulated network/service parameters.
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    /// Number of Virtual Organizations (paper testbed: 3).
+    pub num_vos: usize,
+    /// Worker nodes per VO (paper testbed: 4, one doubling as broker).
+    pub nodes_per_vo: usize,
+    /// Node speed heterogeneity: speed factors drawn uniform in
+    /// [speed_min, speed_max] (1.0 = nominal). The paper notes "grid nodes
+    /// have different specifications".
+    pub speed_min: f64,
+    pub speed_max: f64,
+    /// Simulated LAN latency within a VO (µs, one way).
+    pub lan_latency_us: u64,
+    /// Simulated WAN latency between VOs (µs, one way).
+    pub wan_latency_us: u64,
+    /// Simulated bandwidth for result/JDF transfer (MB/s).
+    pub bandwidth_mbps: f64,
+    /// Whether Search Services stay resident in the container (paper's
+    /// globus-container design) or cold-start per job (ablation).
+    pub resident_services: bool,
+    /// Cold-start penalty when services are not resident (ms).
+    pub cold_start_ms: f64,
+    /// Per-job dispatch overhead at a broker (ms). Brokers dispatch their
+    /// jobs serially, so this is the term that makes centralized
+    /// coordination degrade with node count (Fig 4's traditional curve).
+    pub dispatch_ms: f64,
+    /// RNG seed for fabric heterogeneity.
+    pub seed: u64,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig {
+            num_vos: 3,
+            nodes_per_vo: 4,
+            speed_min: 0.5,
+            speed_max: 1.5,
+            lan_latency_us: 200,
+            wan_latency_us: 8_000,
+            bandwidth_mbps: 40.0,
+            resident_services: true,
+            cold_start_ms: 350.0,
+            dispatch_ms: 8.0,
+            seed: 0x6169D,
+        }
+    }
+}
+
+impl GridConfig {
+    pub fn total_nodes(&self) -> usize {
+        self.num_vos * self.nodes_per_vo
+    }
+}
+
+/// Corpus/workload shape.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Total documents in the corpus.
+    pub num_docs: u64,
+    /// Queries per experiment batch.
+    pub num_queries: usize,
+    /// Total data sources (sub-shards) the corpus is split into,
+    /// independent of node count — adding nodes means fewer sources per
+    /// node (the paper's fixed datasets spread over a growing grid).
+    /// Clamped up to the node count so every node hosts at least one.
+    pub sub_shards: usize,
+    /// Corpus seed (distinct from the fabric seed).
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            num_docs: 20_000,
+            num_queries: 16,
+            sub_shards: 24,
+            seed: 0xC0/*rpus*/,
+        }
+    }
+}
+
+/// Search/scoring parameters (shared with the artifact ABI).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Feature buckets per field (must match an artifact F).
+    pub features: usize,
+    /// Results per query.
+    pub top_k: usize,
+    /// Max candidates retrieved per shard before ranking.
+    pub max_candidates: usize,
+    /// BM25 length-normalisation b.
+    pub b: f32,
+    /// Field weights in ABI order (title, abstract, authors, venue).
+    pub field_weights: [f32; 4],
+    /// Execute scoring through the PJRT artifacts (true) or the pure-rust
+    /// fallback scorer (false; baseline + environments without artifacts).
+    pub use_xla: bool,
+    /// Directory containing `manifest.json` + HLO artifacts.
+    pub artifact_dir: String,
+    /// Scheduling policy.
+    pub policy: SchedulePolicy,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            features: 512,
+            top_k: 10,
+            max_candidates: 1024,
+            b: 0.75,
+            field_weights: [2.0, 1.0, 1.5, 0.5],
+            use_xla: true,
+            artifact_dir: "artifacts".into(),
+            policy: SchedulePolicy::PerfHistory,
+        }
+    }
+}
+
+/// Root configuration.
+#[derive(Debug, Clone, Default)]
+pub struct GapsConfig {
+    pub grid: GridConfig,
+    pub workload: WorkloadConfig,
+    pub search: SearchConfig,
+}
+
+impl GapsConfig {
+    /// Apply a JSON config object (unknown keys are an error — catches
+    /// typos in experiment configs).
+    pub fn apply_json(&mut self, v: &Json) -> Result<(), CliError> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| CliError("config root must be an object".into()))?;
+        for (section, body) in obj {
+            match section.as_str() {
+                "grid" => apply_section(body, |k, v| self.set_grid(k, v))?,
+                "workload" => apply_section(body, |k, v| self.set_workload(k, v))?,
+                "search" => apply_section(body, |k, v| self.set_search(k, v))?,
+                other => return Err(CliError(format!("unknown config section '{other}'"))),
+            }
+        }
+        Ok(())
+    }
+
+    fn set_grid(&mut self, key: &str, v: &Json) -> Result<(), CliError> {
+        let g = &mut self.grid;
+        match key {
+            "num_vos" => g.num_vos = as_usize(key, v)?,
+            "nodes_per_vo" => g.nodes_per_vo = as_usize(key, v)?,
+            "speed_min" => g.speed_min = as_f64(key, v)?,
+            "speed_max" => g.speed_max = as_f64(key, v)?,
+            "lan_latency_us" => g.lan_latency_us = as_usize(key, v)? as u64,
+            "wan_latency_us" => g.wan_latency_us = as_usize(key, v)? as u64,
+            "bandwidth_mbps" => g.bandwidth_mbps = as_f64(key, v)?,
+            "resident_services" => g.resident_services = as_bool(key, v)?,
+            "cold_start_ms" => g.cold_start_ms = as_f64(key, v)?,
+            "dispatch_ms" => g.dispatch_ms = as_f64(key, v)?,
+            "seed" => g.seed = as_usize(key, v)? as u64,
+            _ => return Err(CliError(format!("unknown grid key '{key}'"))),
+        }
+        Ok(())
+    }
+
+    fn set_workload(&mut self, key: &str, v: &Json) -> Result<(), CliError> {
+        let w = &mut self.workload;
+        match key {
+            "num_docs" => w.num_docs = as_usize(key, v)? as u64,
+            "num_queries" => w.num_queries = as_usize(key, v)?,
+            "sub_shards" => w.sub_shards = as_usize(key, v)?,
+            "seed" => w.seed = as_usize(key, v)? as u64,
+            _ => return Err(CliError(format!("unknown workload key '{key}'"))),
+        }
+        Ok(())
+    }
+
+    fn set_search(&mut self, key: &str, v: &Json) -> Result<(), CliError> {
+        let s = &mut self.search;
+        match key {
+            "features" => s.features = as_usize(key, v)?,
+            "top_k" => s.top_k = as_usize(key, v)?,
+            "max_candidates" => s.max_candidates = as_usize(key, v)?,
+            "b" => s.b = as_f64(key, v)? as f32,
+            "use_xla" => s.use_xla = as_bool(key, v)?,
+            "artifact_dir" => {
+                s.artifact_dir = v
+                    .as_str()
+                    .ok_or_else(|| CliError(format!("search.{key} must be a string")))?
+                    .to_string()
+            }
+            "policy" => {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| CliError(format!("search.{key} must be a string")))?;
+                s.policy = SchedulePolicy::parse(name)
+                    .ok_or_else(|| CliError(format!("unknown policy '{name}'")))?;
+            }
+            "field_weights" => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| CliError(format!("search.{key} must be an array")))?;
+                if arr.len() != 4 {
+                    return Err(CliError("field_weights needs 4 entries".into()));
+                }
+                for (i, x) in arr.iter().enumerate() {
+                    s.field_weights[i] = as_f64(key, x)? as f32;
+                }
+            }
+            _ => return Err(CliError(format!("unknown search key '{key}'"))),
+        }
+        Ok(())
+    }
+
+    /// Apply CLI flag overrides (flat names; see README "Configuration").
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), CliError> {
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| CliError(format!("--config {path}: {e}")))?;
+            let v = Json::parse(&text).map_err(|e| CliError(format!("--config {path}: {e}")))?;
+            self.apply_json(&v)?;
+        }
+        let g = &mut self.grid;
+        g.num_vos = args.get_parse("vos", g.num_vos)?;
+        g.nodes_per_vo = args.get_parse("nodes-per-vo", g.nodes_per_vo)?;
+        g.seed = args.get_parse("grid-seed", g.seed)?;
+        if args.has("no-resident-services") {
+            g.resident_services = false;
+        }
+        let w = &mut self.workload;
+        w.num_docs = args.get_parse("docs", w.num_docs)?;
+        w.num_queries = args.get_parse("queries", w.num_queries)?;
+        w.seed = args.get_parse("seed", w.seed)?;
+        let s = &mut self.search;
+        s.top_k = args.get_parse("top-k", s.top_k)?;
+        s.max_candidates = args.get_parse("max-candidates", s.max_candidates)?;
+        if let Some(p) = args.get("policy") {
+            s.policy = SchedulePolicy::parse(p)
+                .ok_or_else(|| CliError(format!("unknown policy '{p}'")))?;
+        }
+        if args.has("no-xla") {
+            s.use_xla = false;
+        }
+        if let Some(dir) = args.get("artifacts") {
+            s.artifact_dir = dir.to_string();
+        }
+        Ok(())
+    }
+
+    /// Human-readable dump of the effective configuration.
+    pub fn describe(&self) -> String {
+        format!(
+            "grid: {} VOs x {} nodes (speed {:.2}-{:.2}, lan {}us wan {}us, {} services)\n\
+             workload: {} docs, {} queries (seed {})\n\
+             search: F={} top_k={} max_cand={} policy={} xla={} artifacts={}",
+            self.grid.num_vos,
+            self.grid.nodes_per_vo,
+            self.grid.speed_min,
+            self.grid.speed_max,
+            self.grid.lan_latency_us,
+            self.grid.wan_latency_us,
+            if self.grid.resident_services { "resident" } else { "cold-start" },
+            self.workload.num_docs,
+            self.workload.num_queries,
+            self.workload.seed,
+            self.search.features,
+            self.search.top_k,
+            self.search.max_candidates,
+            self.search.policy.name(),
+            self.search.use_xla,
+            self.search.artifact_dir,
+        )
+    }
+}
+
+fn as_usize(key: &str, v: &Json) -> Result<usize, CliError> {
+    v.as_i64()
+        .filter(|x| *x >= 0)
+        .map(|x| x as usize)
+        .ok_or_else(|| CliError(format!("{key} must be a non-negative integer")))
+}
+
+fn as_f64(key: &str, v: &Json) -> Result<f64, CliError> {
+    v.as_f64().ok_or_else(|| CliError(format!("{key} must be a number")))
+}
+
+fn as_bool(key: &str, v: &Json) -> Result<bool, CliError> {
+    v.as_bool().ok_or_else(|| CliError(format!("{key} must be a boolean")))
+}
+
+fn apply_section<F>(body: &Json, mut set: F) -> Result<(), CliError>
+where
+    F: FnMut(&str, &Json) -> Result<(), CliError>,
+{
+    let obj = body
+        .as_obj()
+        .ok_or_else(|| CliError("config section must be an object".into()))?;
+    for (k, v) in obj {
+        set(k, v)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = GapsConfig::default();
+        assert_eq!(c.grid.num_vos, 3);
+        assert_eq!(c.grid.nodes_per_vo, 4);
+        assert_eq!(c.grid.total_nodes(), 12);
+        assert_eq!(c.search.policy, SchedulePolicy::PerfHistory);
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let mut c = GapsConfig::default();
+        let v = Json::parse(
+            r#"{"grid": {"num_vos": 2, "resident_services": false},
+                 "workload": {"num_docs": 500},
+                 "search": {"policy": "round-robin", "field_weights": [1,1,1,1]}}"#,
+        )
+        .unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.grid.num_vos, 2);
+        assert!(!c.grid.resident_services);
+        assert_eq!(c.workload.num_docs, 500);
+        assert_eq!(c.search.policy, SchedulePolicy::RoundRobin);
+        assert_eq!(c.search.field_weights, [1.0; 4]);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let mut c = GapsConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"grid": {"nodez": 3}}"#).unwrap()).is_err());
+        assert!(c.apply_json(&Json::parse(r#"{"grd": {}}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let mut c = GapsConfig::default();
+        let toks: Vec<String> = ["--vos", "2", "--docs", "1000", "--policy", "rr", "--no-xla"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&toks, false, &["no-xla"]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.grid.num_vos, 2);
+        assert_eq!(c.workload.num_docs, 1000);
+        assert_eq!(c.search.policy, SchedulePolicy::RoundRobin);
+        assert!(!c.search.use_xla);
+    }
+
+    #[test]
+    fn policy_parse_aliases() {
+        assert_eq!(SchedulePolicy::parse("gaps"), Some(SchedulePolicy::PerfHistory));
+        assert_eq!(SchedulePolicy::parse("traditional"), Some(SchedulePolicy::RoundRobin));
+        assert_eq!(SchedulePolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn describe_mentions_key_facts() {
+        let d = GapsConfig::default().describe();
+        assert!(d.contains("3 VOs"));
+        assert!(d.contains("perf-history"));
+    }
+}

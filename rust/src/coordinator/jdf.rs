@@ -1,0 +1,114 @@
+//! Job Description File (JDF).
+//!
+//! Paper: "the QM creates the Job Description File (JDF) with all jobs
+//! that will be distributed over grid nodes. The JDF contains the location
+//! of all data sources and the local search services that will participate
+//! on the search process ... the user query text as well as the location
+//! that should receive the result of the search."
+//!
+//! JDFs serialize to JSON; their byte length is what the network model
+//! charges for dispatch transfers.
+
+use crate::grid::NodeId;
+use crate::util::json::Json;
+
+/// Grid-wide job identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job{}", self.0)
+    }
+}
+
+/// One search job: a query to run over a set of data sources on a node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobDescription {
+    pub id: JobId,
+    /// Raw query text (the worker re-parses against its local analyzer —
+    /// the paper ships query text, not parsed structures).
+    pub query: String,
+    /// Executing node.
+    pub node: NodeId,
+    /// Data source ids (sub-shards) this job must search.
+    pub sources: Vec<u32>,
+    /// Node that receives the result (the VO broker).
+    pub reply_to: NodeId,
+    /// Results wanted per query.
+    pub top_k: usize,
+}
+
+impl JobDescription {
+    /// Serialize to the JSON wire form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::from(self.id.0)),
+            ("query", Json::str(&self.query)),
+            ("node", Json::from(self.node.0 as i64)),
+            ("sources", Json::Arr(self.sources.iter().map(|s| Json::from(*s as i64)).collect())),
+            ("reply_to", Json::from(self.reply_to.0 as i64)),
+            ("top_k", Json::from(self.top_k)),
+        ])
+    }
+
+    /// Parse from the JSON wire form.
+    pub fn from_json(v: &Json) -> Option<JobDescription> {
+        Some(JobDescription {
+            id: JobId(v.get("id")?.as_i64()? as u64),
+            query: v.get("query")?.as_str()?.to_string(),
+            node: NodeId(v.get("node")?.as_i64()? as u32),
+            sources: v
+                .get("sources")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_i64().map(|i| i as u32))
+                .collect::<Option<Vec<_>>>()?,
+            reply_to: NodeId(v.get("reply_to")?.as_i64()? as u32),
+            top_k: v.get("top_k")?.as_i64()? as usize,
+        })
+    }
+
+    /// Wire size in bytes (charged to the network model).
+    pub fn wire_bytes(&self) -> usize {
+        self.to_json().to_string_compact().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> JobDescription {
+        JobDescription {
+            id: JobId(7),
+            query: "grid computing year:2010..2014".into(),
+            node: NodeId(3),
+            sources: vec![1, 5, 9],
+            reply_to: NodeId(0),
+            top_k: 10,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let jdf = sample();
+        let parsed = JobDescription::from_json(&jdf.to_json()).unwrap();
+        assert_eq!(parsed, jdf);
+    }
+
+    #[test]
+    fn wire_bytes_reflect_content() {
+        let small = sample();
+        let mut big = sample();
+        big.sources = (0..100).collect();
+        assert!(big.wire_bytes() > small.wire_bytes());
+        assert!(small.wire_bytes() > 50);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let v = Json::parse(r#"{"id": 1}"#).unwrap();
+        assert!(JobDescription::from_json(&v).is_none());
+    }
+}

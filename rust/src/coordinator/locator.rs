@@ -1,0 +1,136 @@
+//! Data Source Locator: catalog of data sources and their replicas.
+//!
+//! Paper: "The lists of the data sources that are involved in the search
+//! task are gathered from the Data Source Locator component." A data
+//! source here is one sub-shard of the corpus (a JSONL "file" of article
+//! records in the paper's terms), replicated on two nodes of the same VO
+//! (grid data replication). The locator also aggregates corpus-global
+//! BM25 statistics so all nodes rank with consistent IDF — that is what
+//! makes distributed top-k lists mergeable.
+
+use std::collections::BTreeMap;
+
+use crate::grid::NodeId;
+use crate::index::{GlobalStats, ShardStats};
+
+/// One registered data source (sub-shard of the corpus).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataSource {
+    pub id: u32,
+    /// First corpus-global doc id in the source.
+    pub doc_start: u64,
+    /// Number of documents.
+    pub doc_count: u64,
+    /// Nodes hosting a replica (first = primary), all in one VO.
+    pub replicas: Vec<NodeId>,
+}
+
+/// The catalog.
+#[derive(Debug, Default)]
+pub struct DataSourceLocator {
+    sources: BTreeMap<u32, DataSource>,
+    stats_acc: Option<ShardStats>,
+}
+
+impl DataSourceLocator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a source and fold its shard statistics into the global
+    /// accumulator.
+    pub fn register(&mut self, source: DataSource, stats: &ShardStats) {
+        assert!(!source.replicas.is_empty(), "source without replicas");
+        match &mut self.stats_acc {
+            Some(acc) => acc.merge(stats),
+            None => self.stats_acc = Some(stats.clone()),
+        }
+        self.sources.insert(source.id, source);
+    }
+
+    /// All sources ordered by id.
+    pub fn sources(&self) -> Vec<&DataSource> {
+        self.sources.values().collect()
+    }
+
+    pub fn source(&self, id: u32) -> Option<&DataSource> {
+        self.sources.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sources.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sources.is_empty()
+    }
+
+    /// Total documents across sources.
+    pub fn total_docs(&self) -> u64 {
+        self.sources.values().map(|s| s.doc_count).sum()
+    }
+
+    /// Corpus-global statistics (after all sources registered).
+    pub fn global_stats(&self) -> Option<GlobalStats> {
+        self.stats_acc.as_ref().map(|acc| acc.finalize())
+    }
+
+    /// Sources hosted (as any replica) by `node`.
+    pub fn sources_on(&self, node: NodeId) -> Vec<&DataSource> {
+        self.sources.values().filter(|s| s.replicas.contains(&node)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(n: u64) -> ShardStats {
+        let mut s = ShardStats::empty(16);
+        s.num_docs = n;
+        s.df[3] = n.min(2);
+        s.field_len_sum = [5.0 * n as f64, 90.0 * n as f64, 4.0 * n as f64, 3.0 * n as f64];
+        s
+    }
+
+    fn src(id: u32, start: u64, count: u64, nodes: &[u32]) -> DataSource {
+        DataSource {
+            id,
+            doc_start: start,
+            doc_count: count,
+            replicas: nodes.iter().map(|&n| NodeId(n)).collect(),
+        }
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let mut loc = DataSourceLocator::new();
+        loc.register(src(0, 0, 100, &[0, 1]), &stats(100));
+        loc.register(src(1, 100, 50, &[1, 2]), &stats(50));
+        assert_eq!(loc.len(), 2);
+        assert_eq!(loc.total_docs(), 150);
+        assert_eq!(loc.source(1).unwrap().doc_start, 100);
+        assert_eq!(loc.sources_on(NodeId(1)).len(), 2);
+        assert_eq!(loc.sources_on(NodeId(2)).len(), 1);
+        assert_eq!(loc.sources_on(NodeId(9)).len(), 0);
+    }
+
+    #[test]
+    fn global_stats_aggregate() {
+        let mut loc = DataSourceLocator::new();
+        assert!(loc.global_stats().is_none());
+        loc.register(src(0, 0, 100, &[0]), &stats(100));
+        loc.register(src(1, 100, 50, &[1]), &stats(50));
+        let g = loc.global_stats().unwrap();
+        assert_eq!(g.total_docs, 150);
+        assert_eq!(g.df[3], 4); // 2 + 2
+        assert!((g.avg_field_len[1] - 90.0).abs() < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "without replicas")]
+    fn empty_replicas_rejected() {
+        let mut loc = DataSourceLocator::new();
+        loc.register(src(0, 0, 10, &[]), &stats(10));
+    }
+}

@@ -1,0 +1,170 @@
+//! Distributed top-k merge.
+//!
+//! Node-local top-k lists flow node -> VO broker -> root broker; each hop
+//! merges sorted lists into one sorted top-k. Scores are comparable
+//! across nodes because every Search Service ranks with the corpus-global
+//! statistics distributed by the locator.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::search::LocalHit;
+
+/// Heap entry: (list index, position within list).
+struct HeapItem {
+    score: f32,
+    global_id: u64,
+    list: usize,
+    pos: usize,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap by score, ties broken by smaller global_id first
+        // (deterministic merges regardless of list order).
+        self.score
+            .partial_cmp(&other.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.global_id.cmp(&self.global_id))
+    }
+}
+
+/// K-way merge of per-node top-k lists (each sorted descending) into one
+/// top-k, deduplicating by `global_id` (keeps the higher score — replicas
+/// can only produce identical scores, so either is correct).
+pub fn merge_topk(lists: &[Vec<LocalHit>], k: usize) -> Vec<LocalHit> {
+    let mut heap = BinaryHeap::new();
+    for (li, list) in lists.iter().enumerate() {
+        debug_assert!(
+            list.windows(2).all(|w| w[0].score >= w[1].score),
+            "merge input {li} not sorted"
+        );
+        if let Some(h) = list.first() {
+            heap.push(HeapItem { score: h.score, global_id: h.global_id, list: li, pos: 0 });
+        }
+    }
+    let mut out: Vec<LocalHit> = Vec::with_capacity(k);
+    let mut seen = std::collections::HashSet::new();
+    while out.len() < k {
+        let Some(top) = heap.pop() else { break };
+        if seen.insert(top.global_id) {
+            out.push(LocalHit { global_id: top.global_id, score: top.score });
+        }
+        let next_pos = top.pos + 1;
+        if let Some(h) = lists[top.list].get(next_pos) {
+            heap.push(HeapItem {
+                score: h.score,
+                global_id: h.global_id,
+                list: top.list,
+                pos: next_pos,
+            });
+        }
+    }
+    out
+}
+
+/// Wire size of a result list in bytes (charged to the network model):
+/// id + score + a small envelope per hit.
+pub fn result_wire_bytes(hits: usize) -> usize {
+    32 + hits * 24
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hits(pairs: &[(u64, f32)]) -> Vec<LocalHit> {
+        pairs.iter().map(|&(global_id, score)| LocalHit { global_id, score }).collect()
+    }
+
+    #[test]
+    fn merges_sorted_lists() {
+        let a = hits(&[(1, 9.0), (2, 5.0), (3, 1.0)]);
+        let b = hits(&[(4, 7.0), (5, 3.0)]);
+        let merged = merge_topk(&[a, b], 4);
+        assert_eq!(
+            merged,
+            hits(&[(1, 9.0), (4, 7.0), (2, 5.0), (5, 3.0)])
+        );
+    }
+
+    #[test]
+    fn truncates_to_k() {
+        let a = hits(&[(1, 9.0), (2, 8.0)]);
+        let b = hits(&[(3, 7.0), (4, 6.0)]);
+        assert_eq!(merge_topk(&[a, b], 2), hits(&[(1, 9.0), (2, 8.0)]));
+    }
+
+    #[test]
+    fn dedups_by_global_id() {
+        let a = hits(&[(1, 9.0), (2, 5.0)]);
+        let b = hits(&[(1, 9.0), (3, 4.0)]);
+        let merged = merge_topk(&[a, b], 10);
+        assert_eq!(merged, hits(&[(1, 9.0), (2, 5.0), (3, 4.0)]));
+    }
+
+    #[test]
+    fn handles_empty_inputs() {
+        assert!(merge_topk(&[], 5).is_empty());
+        assert!(merge_topk(&[vec![], vec![]], 5).is_empty());
+        let a = hits(&[(1, 1.0)]);
+        assert_eq!(merge_topk(&[a, vec![]], 5).len(), 1);
+    }
+
+    #[test]
+    fn deterministic_under_list_permutation() {
+        let a = hits(&[(1, 5.0), (3, 2.0)]);
+        let b = hits(&[(2, 5.0), (4, 2.0)]);
+        let m1 = merge_topk(&[a.clone(), b.clone()], 4);
+        let m2 = merge_topk(&[b, a], 4);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn equals_flat_sort() {
+        // Property: merge == sort(concat) with dedup, for sorted inputs.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        for _ in 0..50 {
+            let nlists = rng.range(1, 5);
+            let lists: Vec<Vec<LocalHit>> = (0..nlists)
+                .map(|li| {
+                    let n = rng.range(0, 8);
+                    let mut l: Vec<LocalHit> = (0..n)
+                        .map(|i| LocalHit {
+                            global_id: (li * 100 + i) as u64,
+                            score: (rng.below(50) as f32) / 10.0,
+                        })
+                        .collect();
+                    l.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+                    l
+                })
+                .collect();
+            let k = rng.range(1, 12);
+            let merged = merge_topk(&lists, k);
+            let mut flat: Vec<LocalHit> = lists.concat();
+            flat.sort_by(|a, b| {
+                b.score
+                    .partial_cmp(&a.score)
+                    .unwrap()
+                    .then(a.global_id.cmp(&b.global_id))
+            });
+            flat.truncate(k);
+            assert_eq!(merged.len(), flat.len());
+            for (m, f) in merged.iter().zip(&flat) {
+                assert_eq!(m.score, f.score);
+            }
+        }
+    }
+}

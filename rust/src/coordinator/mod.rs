@@ -1,0 +1,42 @@
+//! GAPS coordinator — the paper's system contribution.
+//!
+//! Components map 1:1 onto the paper's Figure 1:
+//!
+//! * [`QueryExecutionEngine`] (QEE) — one instance per VO; orchestrates
+//!   query execution over the grid nodes, decentralized to avoid the
+//!   bottleneck the paper attributes to centralized designs.
+//! * [`QueryManager`] (QM) — builds Job Description Files, tracks job
+//!   execution in its job table, and records per-node performance into
+//!   the perf-history database used by future plans.
+//! * [`ResourceManager`] — registry of node status ("stores the status
+//!   and all information about system resources").
+//! * [`DataSourceLocator`] — catalog of data sources (sub-shards) and
+//!   their replicas across VOs, plus corpus-global BM25 statistics.
+//! * [`merge_topk`] — the distributed result merger (node -> VO broker ->
+//!   root broker).
+//! * [`GapsSystem`] — the deployed system facade: fabric + data + services
+//!   + the `search()` entry point the USI calls.
+//!
+//! Data model: the corpus is split into `sub_shards` fixed-count
+//! data sources, each replicated on two nodes of the same VO (grid data
+//! replication). The execution plan assigns every source to exactly one
+//! live replica; the GAPS policy weights assignment by perf history, the
+//! round-robin policy mimics the traditional uniform split.
+
+mod jdf;
+mod locator;
+mod merge;
+mod perf;
+mod qee;
+mod qm;
+mod resource_manager;
+mod system;
+
+pub use jdf::{JobDescription, JobId};
+pub use locator::{DataSource, DataSourceLocator};
+pub use merge::{merge_topk, result_wire_bytes};
+pub use perf::PerfDb;
+pub use qee::{ExecutionPlan, QueryExecutionEngine};
+pub use qm::{JobStatus, QueryManager};
+pub use resource_manager::ResourceManager;
+pub use system::{CorpusData, Deployment, GapsSystem, Hit, SearchResponse};

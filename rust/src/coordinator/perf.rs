@@ -1,0 +1,136 @@
+//! Performance-history database.
+//!
+//! Paper: "After the search task is completed, the QM sends the
+//! information about resource performance to the database to be used in
+//! the future search tasks" and "the execution plan ... depends on the
+//! previous performance and produces the best combination to handle the
+//! query." This is the database: per-node EWMA of observed search
+//! throughput (docs/second). Unknown nodes get the prior 1.0 relative
+//! estimate, so the first plan is uniform and later plans adapt — exactly
+//! the adaptive behaviour the GAPS speedup curves rely on.
+
+use std::collections::BTreeMap;
+
+use crate::grid::NodeId;
+
+/// EWMA throughput record for one node.
+#[derive(Debug, Clone, Copy)]
+struct Record {
+    docs_per_s: f64,
+    samples: u64,
+}
+
+/// The performance database (lives with the QM on the broker).
+#[derive(Debug)]
+pub struct PerfDb {
+    records: BTreeMap<NodeId, Record>,
+    /// EWMA smoothing factor for new observations.
+    alpha: f64,
+    /// Prior throughput estimate for unobserved nodes (docs/s). Relative
+    /// scale only — plans normalize across nodes.
+    prior: f64,
+}
+
+impl Default for PerfDb {
+    fn default() -> Self {
+        PerfDb::new(0.4, 1.0)
+    }
+}
+
+impl PerfDb {
+    pub fn new(alpha: f64, prior: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha) && prior > 0.0);
+        PerfDb { records: BTreeMap::new(), alpha, prior }
+    }
+
+    /// Record one completed job: `docs` searched in `seconds`.
+    pub fn record(&mut self, node: NodeId, docs: u64, seconds: f64) {
+        if seconds <= 0.0 || docs == 0 {
+            return; // degenerate sample, ignore
+        }
+        let obs = docs as f64 / seconds;
+        self.records
+            .entry(node)
+            .and_modify(|r| {
+                r.docs_per_s = (1.0 - self.alpha) * r.docs_per_s + self.alpha * obs;
+                r.samples += 1;
+            })
+            .or_insert(Record { docs_per_s: obs, samples: 1 });
+    }
+
+    /// Throughput estimate for a node. Unobserved nodes get the mean of
+    /// observed throughputs (so a newly joined node is assumed average and
+    /// receives work — its first samples then calibrate it), or the
+    /// configured prior when nothing has been observed yet.
+    pub fn estimate(&self, node: NodeId) -> f64 {
+        if let Some(r) = self.records.get(&node) {
+            return r.docs_per_s;
+        }
+        if self.records.is_empty() {
+            self.prior
+        } else {
+            self.records.values().map(|r| r.docs_per_s).sum::<f64>() / self.records.len() as f64
+        }
+    }
+
+    /// Number of samples recorded for a node.
+    pub fn samples(&self, node: NodeId) -> u64 {
+        self.records.get(&node).map(|r| r.samples).unwrap_or(0)
+    }
+
+    /// Whether any history exists (first-query detection in the plans).
+    pub fn has_history(&self) -> bool {
+        !self.records.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_for_unknown_nodes() {
+        let db = PerfDb::default();
+        assert_eq!(db.estimate(NodeId(5)), 1.0);
+        assert_eq!(db.samples(NodeId(5)), 0);
+        assert!(!db.has_history());
+    }
+
+    #[test]
+    fn record_and_estimate() {
+        let mut db = PerfDb::default();
+        db.record(NodeId(0), 1000, 1.0);
+        assert!((db.estimate(NodeId(0)) - 1000.0).abs() < 1e-9);
+        assert_eq!(db.samples(NodeId(0)), 1);
+        assert!(db.has_history());
+    }
+
+    #[test]
+    fn ewma_converges_toward_new_rate() {
+        let mut db = PerfDb::new(0.5, 1.0);
+        db.record(NodeId(0), 100, 1.0); // 100 docs/s
+        for _ in 0..20 {
+            db.record(NodeId(0), 400, 1.0); // drifts to 400
+        }
+        let est = db.estimate(NodeId(0));
+        assert!((est - 400.0).abs() < 1.0, "est={est}");
+    }
+
+    #[test]
+    fn degenerate_samples_ignored() {
+        let mut db = PerfDb::default();
+        db.record(NodeId(0), 0, 1.0);
+        db.record(NodeId(0), 100, 0.0);
+        assert_eq!(db.samples(NodeId(0)), 0);
+    }
+
+    #[test]
+    fn fast_node_estimated_faster() {
+        let mut db = PerfDb::default();
+        for _ in 0..5 {
+            db.record(NodeId(0), 1000, 1.0); // 1000 docs/s
+            db.record(NodeId(1), 1000, 2.0); // 500 docs/s
+        }
+        assert!(db.estimate(NodeId(0)) > 1.8 * db.estimate(NodeId(1)));
+    }
+}

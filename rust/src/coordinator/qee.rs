@@ -1,0 +1,248 @@
+//! Query Execution Engine (QEE): turns (query, sources, resources, perf
+//! history) into an execution plan.
+//!
+//! Paper: "The QEE determines the nodes that will perform a search at run
+//! time by utilizing its internal modules ... The execution plan that
+//! distributes the datasets over the nodes depends on the previous
+//! performance and produces the best combination to handle the query."
+//!
+//! The GAPS policy is a throughput-weighted LPT greedy: sources (largest
+//! first) go to the live replica that will finish earliest under the
+//! perf-history throughput estimates. The round-robin policy (used by the
+//! traditional baseline and as an ablation) ignores history and speeds.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::SchedulePolicy;
+use crate::grid::{NodeId, NodeInfo};
+
+use super::locator::DataSource;
+use super::perf::PerfDb;
+
+/// Node -> assigned source ids. Every input source appears exactly once.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    pub assignments: BTreeMap<NodeId, Vec<u32>>,
+}
+
+impl ExecutionPlan {
+    /// Total sources assigned.
+    pub fn num_sources(&self) -> usize {
+        self.assignments.values().map(|v| v.len()).sum()
+    }
+
+    /// Nodes participating in the plan.
+    pub fn nodes(&self) -> Vec<NodeId> {
+        self.assignments.keys().copied().collect()
+    }
+}
+
+/// The planner. One QEE instance runs on each VO broker; the root QEE
+/// plans globally and hands each VO's QEE its own slice (see
+/// `coordinator::system` for the dispatch topology).
+#[derive(Debug, Default)]
+pub struct QueryExecutionEngine;
+
+impl QueryExecutionEngine {
+    /// Build an execution plan covering every source exactly once, using
+    /// only `available` nodes.
+    pub fn plan(
+        &self,
+        sources: &[&DataSource],
+        available: &[NodeInfo],
+        perf: &PerfDb,
+        policy: SchedulePolicy,
+    ) -> Result<ExecutionPlan> {
+        if sources.is_empty() {
+            bail!("no data sources registered");
+        }
+        let live: std::collections::BTreeSet<NodeId> =
+            available.iter().map(|n| n.id).collect();
+        if live.is_empty() {
+            bail!("no nodes available");
+        }
+
+        let mut assignments: BTreeMap<NodeId, Vec<u32>> = BTreeMap::new();
+        match policy {
+            SchedulePolicy::RoundRobin => {
+                for s in sources {
+                    let replicas: Vec<NodeId> = s
+                        .replicas
+                        .iter()
+                        .copied()
+                        .filter(|r| live.contains(r))
+                        .collect();
+                    if replicas.is_empty() {
+                        bail!("source {} has no live replica", s.id);
+                    }
+                    // Rotate across replicas by source id: uniform spread,
+                    // blind to node speed.
+                    let node = replicas[s.id as usize % replicas.len()];
+                    assignments.entry(node).or_default().push(s.id);
+                }
+            }
+            SchedulePolicy::PerfHistory => {
+                // LPT greedy weighted by estimated throughput.
+                let mut order: Vec<&&DataSource> = sources.iter().collect();
+                order.sort_by(|a, b| b.doc_count.cmp(&a.doc_count).then(a.id.cmp(&b.id)));
+                let mut load_docs: BTreeMap<NodeId, f64> = BTreeMap::new();
+                for s in order {
+                    let mut best: Option<(f64, NodeId)> = None;
+                    for r in &s.replicas {
+                        if !live.contains(r) {
+                            continue;
+                        }
+                        let tput = perf.estimate(*r).max(1e-9);
+                        let finish =
+                            (load_docs.get(r).copied().unwrap_or(0.0) + s.doc_count as f64) / tput;
+                        if best.map(|(bf, _)| finish < bf).unwrap_or(true) {
+                            best = Some((finish, *r));
+                        }
+                    }
+                    let Some((_, node)) = best else {
+                        bail!("source {} has no live replica", s.id);
+                    };
+                    *load_docs.entry(node).or_default() += s.doc_count as f64;
+                    assignments.entry(node).or_default().push(s.id);
+                }
+                for list in assignments.values_mut() {
+                    list.sort_unstable();
+                }
+            }
+        }
+        Ok(ExecutionPlan { assignments })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::VoId;
+
+    fn node(id: u32) -> NodeInfo {
+        NodeInfo { id: NodeId(id), vo: VoId(id / 4), speed_factor: 1.0, is_broker: false }
+    }
+
+    fn src(id: u32, count: u64, replicas: &[u32]) -> DataSource {
+        DataSource {
+            id,
+            doc_start: id as u64 * 1000,
+            doc_count: count,
+            replicas: replicas.iter().map(|&r| NodeId(r)).collect(),
+        }
+    }
+
+    #[test]
+    fn covers_every_source_exactly_once() {
+        let sources = vec![
+            src(0, 100, &[0, 1]),
+            src(1, 100, &[1, 2]),
+            src(2, 100, &[2, 0]),
+            src(3, 100, &[0, 2]),
+        ];
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        let avail = vec![node(0), node(1), node(2)];
+        for policy in [SchedulePolicy::PerfHistory, SchedulePolicy::RoundRobin] {
+            let plan = QueryExecutionEngine
+                .plan(&refs, &avail, &PerfDb::default(), policy)
+                .unwrap();
+            assert_eq!(plan.num_sources(), 4, "{policy:?}");
+            let mut all: Vec<u32> =
+                plan.assignments.values().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn perf_history_prefers_fast_nodes() {
+        // Node 0 measured 4x faster than node 1; both host everything.
+        let sources: Vec<DataSource> =
+            (0..8).map(|i| src(i, 100, &[0, 1])).collect();
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        let avail = vec![node(0), node(1)];
+        let mut perf = PerfDb::default();
+        for _ in 0..5 {
+            perf.record(NodeId(0), 400, 1.0);
+            perf.record(NodeId(1), 100, 1.0);
+        }
+        let plan = QueryExecutionEngine
+            .plan(&refs, &avail, &perf, SchedulePolicy::PerfHistory)
+            .unwrap();
+        let n0 = plan.assignments.get(&NodeId(0)).map(|v| v.len()).unwrap_or(0);
+        let n1 = plan.assignments.get(&NodeId(1)).map(|v| v.len()).unwrap_or(0);
+        assert!(n0 > n1, "fast node got {n0}, slow got {n1}");
+        // Roughly 4:1 (within LPT granularity): 6-7 vs 1-2.
+        assert!(n0 >= 6, "expected ~4:1 split, got {n0}:{n1}");
+    }
+
+    #[test]
+    fn round_robin_is_blind_to_speed() {
+        let sources: Vec<DataSource> =
+            (0..8).map(|i| src(i, 100, &[0, 1])).collect();
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        let avail = vec![node(0), node(1)];
+        let mut perf = PerfDb::default();
+        perf.record(NodeId(0), 1000, 1.0);
+        let plan = QueryExecutionEngine
+            .plan(&refs, &avail, &perf, SchedulePolicy::RoundRobin)
+            .unwrap();
+        let n0 = plan.assignments.get(&NodeId(0)).map(|v| v.len()).unwrap_or(0);
+        let n1 = plan.assignments.get(&NodeId(1)).map(|v| v.len()).unwrap_or(0);
+        assert_eq!(n0, 4);
+        assert_eq!(n1, 4);
+    }
+
+    #[test]
+    fn avoids_down_nodes() {
+        let sources = vec![src(0, 100, &[0, 1]), src(1, 100, &[0, 1])];
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        let avail = vec![node(1)]; // node 0 is down
+        for policy in [SchedulePolicy::PerfHistory, SchedulePolicy::RoundRobin] {
+            let plan = QueryExecutionEngine
+                .plan(&refs, &avail, &PerfDb::default(), policy)
+                .unwrap();
+            assert_eq!(plan.nodes(), vec![NodeId(1)], "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn unreachable_source_is_an_error() {
+        let sources = vec![src(0, 100, &[5])];
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        let avail = vec![node(0)];
+        let err = QueryExecutionEngine
+            .plan(&refs, &avail, &PerfDb::default(), SchedulePolicy::PerfHistory)
+            .unwrap_err();
+        assert!(err.to_string().contains("no live replica"));
+    }
+
+    #[test]
+    fn empty_inputs_rejected() {
+        let qee = QueryExecutionEngine;
+        assert!(qee
+            .plan(&[], &[node(0)], &PerfDb::default(), SchedulePolicy::PerfHistory)
+            .is_err());
+        let sources = vec![src(0, 1, &[0])];
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        assert!(qee
+            .plan(&refs, &[], &PerfDb::default(), SchedulePolicy::PerfHistory)
+            .is_err());
+    }
+
+    #[test]
+    fn balanced_load_with_equal_speeds() {
+        let sources: Vec<DataSource> =
+            (0..12).map(|i| src(i, 50, &[i % 3, (i % 3 + 1) % 3])).collect();
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        let avail = vec![node(0), node(1), node(2)];
+        let plan = QueryExecutionEngine
+            .plan(&refs, &avail, &PerfDb::default(), SchedulePolicy::PerfHistory)
+            .unwrap();
+        for n in plan.assignments.values() {
+            assert_eq!(n.len(), 4, "uniform speeds => equal split: {plan:?}");
+        }
+    }
+}

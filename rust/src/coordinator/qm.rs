@@ -1,0 +1,180 @@
+//! Query Manager (QM): JDF creation, job tracking, perf recording.
+//!
+//! Paper: "the QM creates the Job Description File (JDF) ... keeps track
+//! of all job execution in the system by keeping the job information in
+//! the database. After the search task is completed, the QM sends the
+//! information about resource performance to the database to be used in
+//! the future search tasks."
+
+use std::collections::BTreeMap;
+
+use crate::grid::NodeId;
+
+use super::jdf::{JobDescription, JobId};
+use super::perf::PerfDb;
+use super::qee::ExecutionPlan;
+
+/// Job lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Created,
+    Dispatched,
+    Completed,
+    Failed,
+}
+
+/// Job-table entry.
+#[derive(Debug, Clone)]
+struct JobRecord {
+    jdf: JobDescription,
+    status: JobStatus,
+    /// Docs searched (filled at completion).
+    docs: u64,
+    /// Accounted node-local work seconds (filled at completion).
+    work_s: f64,
+}
+
+/// The Query Manager.
+#[derive(Debug, Default)]
+pub struct QueryManager {
+    jobs: BTreeMap<JobId, JobRecord>,
+    next_id: u64,
+}
+
+impl QueryManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Materialize an execution plan into JDFs (one job per node).
+    /// `source_docs(id)` reports a source's document count for the job
+    /// metadata; `reply_to` is the broker collecting results.
+    pub fn create_jobs(
+        &mut self,
+        query: &str,
+        plan: &ExecutionPlan,
+        reply_to_of: impl Fn(NodeId) -> NodeId,
+        top_k: usize,
+    ) -> Vec<JobDescription> {
+        let mut out = Vec::with_capacity(plan.assignments.len());
+        for (node, sources) in &plan.assignments {
+            let id = JobId(self.next_id);
+            self.next_id += 1;
+            let jdf = JobDescription {
+                id,
+                query: query.to_string(),
+                node: *node,
+                sources: sources.clone(),
+                reply_to: reply_to_of(*node),
+                top_k,
+            };
+            self.jobs.insert(
+                id,
+                JobRecord { jdf: jdf.clone(), status: JobStatus::Created, docs: 0, work_s: 0.0 },
+            );
+            out.push(jdf);
+        }
+        out
+    }
+
+    /// Mark a job dispatched to its node.
+    pub fn mark_dispatched(&mut self, id: JobId) {
+        if let Some(r) = self.jobs.get_mut(&id) {
+            r.status = JobStatus::Dispatched;
+        }
+    }
+
+    /// Record a completed job and feed the perf database.
+    pub fn complete(&mut self, id: JobId, docs: u64, work_s: f64, perf: &mut PerfDb) {
+        if let Some(r) = self.jobs.get_mut(&id) {
+            r.status = JobStatus::Completed;
+            r.docs = docs;
+            r.work_s = work_s;
+            perf.record(r.jdf.node, docs, work_s);
+        }
+    }
+
+    /// Record a failed job (node died mid-flight).
+    pub fn fail(&mut self, id: JobId) {
+        if let Some(r) = self.jobs.get_mut(&id) {
+            r.status = JobStatus::Failed;
+        }
+    }
+
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        self.jobs.get(&id).map(|r| r.status)
+    }
+
+    /// Jobs ever created (the paper's job database size).
+    pub fn total_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Completed-job count (metrics).
+    pub fn completed_jobs(&self) -> usize {
+        self.jobs.values().filter(|r| r.status == JobStatus::Completed).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn plan(pairs: &[(u32, &[u32])]) -> ExecutionPlan {
+        let mut assignments = BTreeMap::new();
+        for (node, sources) in pairs {
+            assignments.insert(NodeId(*node), sources.to_vec());
+        }
+        ExecutionPlan { assignments }
+    }
+
+    #[test]
+    fn creates_one_job_per_node() {
+        let mut qm = QueryManager::new();
+        let p = plan(&[(0, &[0, 1]), (3, &[2])]);
+        let jobs = qm.create_jobs("grid", &p, |_| NodeId(0), 10);
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].node, NodeId(0));
+        assert_eq!(jobs[1].sources, vec![2]);
+        assert_eq!(qm.total_jobs(), 2);
+        assert_ne!(jobs[0].id, jobs[1].id);
+        for j in &jobs {
+            assert_eq!(qm.status(j.id), Some(JobStatus::Created));
+        }
+    }
+
+    #[test]
+    fn lifecycle_and_perf_recording() {
+        let mut qm = QueryManager::new();
+        let mut perf = PerfDb::default();
+        let p = plan(&[(1, &[0])]);
+        let jobs = qm.create_jobs("q", &p, |_| NodeId(0), 5);
+        let id = jobs[0].id;
+        qm.mark_dispatched(id);
+        assert_eq!(qm.status(id), Some(JobStatus::Dispatched));
+        qm.complete(id, 500, 0.25, &mut perf);
+        assert_eq!(qm.status(id), Some(JobStatus::Completed));
+        assert_eq!(qm.completed_jobs(), 1);
+        assert!((perf.estimate(NodeId(1)) - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failed_jobs_tracked() {
+        let mut qm = QueryManager::new();
+        let p = plan(&[(1, &[0])]);
+        let jobs = qm.create_jobs("q", &p, |_| NodeId(0), 5);
+        qm.fail(jobs[0].id);
+        assert_eq!(qm.status(jobs[0].id), Some(JobStatus::Failed));
+        assert_eq!(qm.completed_jobs(), 0);
+    }
+
+    #[test]
+    fn ids_monotone_across_queries() {
+        let mut qm = QueryManager::new();
+        let p = plan(&[(0, &[0])]);
+        let a = qm.create_jobs("q1", &p, |_| NodeId(0), 5)[0].id;
+        let b = qm.create_jobs("q2", &p, |_| NodeId(0), 5)[0].id;
+        assert!(b > a);
+    }
+}

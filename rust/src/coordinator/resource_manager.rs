@@ -1,0 +1,147 @@
+//! Resource Manager: node status registry.
+//!
+//! Paper: the QEE "will request the resources information from the
+//! Resource Manager, who stores the status and all information about
+//! system resources." Nodes heartbeat; missing heartbeats mark a node
+//! Down (grid dynamicity — "organizations resources that join or leaves
+//! the system at any time"), and plans route around it.
+
+use std::collections::BTreeMap;
+
+use crate::grid::{NodeId, NodeInfo, NodeStatus};
+
+/// Registry entry.
+#[derive(Debug, Clone)]
+struct Entry {
+    info: NodeInfo,
+    status: NodeStatus,
+    /// Logical timestamp of the last heartbeat.
+    last_heartbeat: u64,
+}
+
+/// The resource registry.
+#[derive(Debug, Default)]
+pub struct ResourceManager {
+    nodes: BTreeMap<NodeId, Entry>,
+    /// Heartbeats older than this (in ticks) mark a node Down.
+    stale_after: u64,
+    now: u64,
+}
+
+impl ResourceManager {
+    pub fn new(stale_after: u64) -> Self {
+        ResourceManager { nodes: BTreeMap::new(), stale_after, now: 0 }
+    }
+
+    /// Register a node (joins Up).
+    pub fn register(&mut self, info: NodeInfo) {
+        self.nodes.insert(
+            info.id,
+            Entry { info, status: NodeStatus::Up, last_heartbeat: self.now },
+        );
+    }
+
+    /// Record a heartbeat from a node; re-joins a Down node.
+    pub fn heartbeat(&mut self, id: NodeId) {
+        if let Some(e) = self.nodes.get_mut(&id) {
+            e.last_heartbeat = self.now;
+            e.status = NodeStatus::Up;
+        }
+    }
+
+    /// Advance the logical clock and expire stale nodes.
+    pub fn tick(&mut self) {
+        self.now += 1;
+        for e in self.nodes.values_mut() {
+            if e.status == NodeStatus::Up && self.now - e.last_heartbeat > self.stale_after {
+                e.status = NodeStatus::Down;
+            }
+        }
+    }
+
+    /// Explicitly mark a node down (failure injection).
+    pub fn mark_down(&mut self, id: NodeId) {
+        if let Some(e) = self.nodes.get_mut(&id) {
+            e.status = NodeStatus::Down;
+        }
+    }
+
+    pub fn status(&self, id: NodeId) -> Option<NodeStatus> {
+        self.nodes.get(&id).map(|e| e.status)
+    }
+
+    pub fn info(&self, id: NodeId) -> Option<&NodeInfo> {
+        self.nodes.get(&id).map(|e| &e.info)
+    }
+
+    /// All Up nodes, ordered by id.
+    pub fn available(&self) -> Vec<NodeInfo> {
+        self.nodes
+            .values()
+            .filter(|e| e.status == NodeStatus::Up)
+            .map(|e| e.info.clone())
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::VoId;
+
+    fn info(id: u32) -> NodeInfo {
+        NodeInfo { id: NodeId(id), vo: VoId(id / 4), speed_factor: 1.0, is_broker: id % 4 == 0 }
+    }
+
+    #[test]
+    fn register_and_available() {
+        let mut rm = ResourceManager::new(3);
+        for i in 0..5 {
+            rm.register(info(i));
+        }
+        assert_eq!(rm.len(), 5);
+        assert_eq!(rm.available().len(), 5);
+        assert_eq!(rm.status(NodeId(2)), Some(NodeStatus::Up));
+        assert_eq!(rm.status(NodeId(9)), None);
+    }
+
+    #[test]
+    fn stale_nodes_expire() {
+        let mut rm = ResourceManager::new(2);
+        rm.register(info(0));
+        rm.register(info(1));
+        for _ in 0..3 {
+            rm.tick();
+            rm.heartbeat(NodeId(0)); // only node 0 heartbeats
+        }
+        assert_eq!(rm.status(NodeId(0)), Some(NodeStatus::Up));
+        assert_eq!(rm.status(NodeId(1)), Some(NodeStatus::Down));
+        assert_eq!(rm.available().len(), 1);
+    }
+
+    #[test]
+    fn down_node_rejoins_on_heartbeat() {
+        let mut rm = ResourceManager::new(1);
+        rm.register(info(0));
+        rm.mark_down(NodeId(0));
+        assert_eq!(rm.available().len(), 0);
+        rm.heartbeat(NodeId(0));
+        assert_eq!(rm.status(NodeId(0)), Some(NodeStatus::Up));
+    }
+
+    #[test]
+    fn mark_down_is_immediate() {
+        let mut rm = ResourceManager::new(100);
+        rm.register(info(0));
+        rm.mark_down(NodeId(0));
+        assert_eq!(rm.status(NodeId(0)), Some(NodeStatus::Down));
+    }
+}

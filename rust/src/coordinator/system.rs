@@ -1,0 +1,597 @@
+//! The deployed GAPS system: fabric + data + services + `search()`.
+//!
+//! Execution topology (paper Fig 1 + §III):
+//!
+//! ```text
+//! USI -> root broker QEE
+//!          |-- ResourceManager (node status)
+//!          |-- DataSourceLocator (sources + global stats)
+//!          |-- QEE.plan (perf-history LPT)  -> QM.create_jobs (JDFs)
+//!          |-- per VO (parallel, WAN):   VO broker QEE
+//!          |        dispatches its jobs serially (LAN), nodes run the
+//!          |        Search Service on their sources, reply to the broker
+//!          |        which merges its VO's lists
+//!          `-- root merges VO lists -> user
+//! ```
+//!
+//! Timing: real measured compute (`work_s`, scaled by the node's simulated
+//! speed factor) + accounted fabric costs (`net_s`, `overhead_s`). See
+//! DESIGN.md §Substitutions for why this composition is faithful.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::GapsConfig;
+use crate::corpus::{CorpusGenerator, CorpusSpec, Publication};
+use crate::grid::{GridFabric, NodeId};
+use crate::index::{GlobalStats, Shard};
+use crate::runtime::Executor;
+use crate::search::{LocalHit, ParsedQuery, Scorer, SearchService};
+
+use crate::util::clock::{TaskTimeline, WallClock};
+
+use super::jdf::JobDescription;
+use super::locator::{DataSource, DataSourceLocator};
+use super::merge::{merge_topk, result_wire_bytes};
+use super::perf::PerfDb;
+use super::qee::QueryExecutionEngine;
+use super::qm::QueryManager;
+use super::resource_manager::ResourceManager;
+
+/// Analyzed corpus data: the expensive, node-count-independent half of a
+/// deployment (generation + tokenization + indexing of every sub-shard).
+/// Built once and shared across sweep points / systems via `Arc`.
+#[derive(Debug)]
+pub struct CorpusData {
+    /// source id -> analyzed sub-shard.
+    pub shards: BTreeMap<u32, Shard>,
+    /// (doc_start, doc_count) per source id, in id order.
+    pub ranges: Vec<(u64, u64)>,
+    /// The corpus generator (query sampling, record lookups).
+    pub generator: CorpusGenerator,
+    /// Feature-space size the shards were analyzed with.
+    pub features: usize,
+}
+
+impl CorpusData {
+    /// Generate + analyze the corpus as `num_sources` contiguous shards.
+    pub fn build(cfg: &GapsConfig, num_sources: u64) -> Result<CorpusData> {
+        let spec = CorpusSpec {
+            seed: cfg.workload.seed,
+            num_docs: cfg.workload.num_docs,
+            ..CorpusSpec::default()
+        };
+        let generator = CorpusGenerator::new(spec);
+        let num_sources = num_sources.max(1);
+        let docs_per = cfg.workload.num_docs / num_sources;
+        if docs_per == 0 {
+            bail!("corpus too small: {} docs over {num_sources} sources", cfg.workload.num_docs);
+        }
+        let mut shards = BTreeMap::new();
+        let mut ranges = Vec::with_capacity(num_sources as usize);
+        for sid in 0..num_sources {
+            let start = sid * docs_per;
+            let count = if sid == num_sources - 1 {
+                cfg.workload.num_docs - start // last source takes the tail
+            } else {
+                docs_per
+            };
+            let shard =
+                Shard::build(sid as u32, generator.generate_range(start, count), cfg.search.features);
+            shards.insert(sid as u32, shard);
+            ranges.push((start, count));
+        }
+        Ok(CorpusData { shards, ranges, generator, features: cfg.search.features })
+    }
+}
+
+/// Immutable deployment: fabric + analyzed data + replica placement,
+/// shared by GAPS and the traditional baseline so comparisons run over
+/// identical bits.
+#[derive(Debug)]
+pub struct Deployment {
+    pub fabric: GridFabric,
+    /// Nodes participating in this experiment (first n, VO-balanced).
+    pub active: Vec<NodeId>,
+    /// The analyzed corpus (shared across deployments).
+    pub data: Arc<CorpusData>,
+    pub locator: DataSourceLocator,
+    pub stats: GlobalStats,
+}
+
+impl Deployment {
+    /// Build a deployment from scratch (corpus + placement). Sweeps that
+    /// reuse one corpus across node counts should call [`CorpusData::
+    /// build`] once and [`Deployment::assemble`] per point instead.
+    pub fn build(cfg: &GapsConfig, n_nodes: usize) -> Result<Deployment> {
+        let num_sources = cfg.workload.sub_shards.max(n_nodes).max(1) as u64;
+        let data = Arc::new(CorpusData::build(cfg, num_sources)?);
+        Deployment::assemble(cfg, n_nodes, data)
+    }
+
+    /// Place an analyzed corpus onto `n_nodes` nodes: each source gets a
+    /// primary (round-robin over active nodes) plus a replica — same-VO
+    /// when the VO has another active member (cheap LAN replication),
+    /// any other active node otherwise.
+    pub fn assemble(cfg: &GapsConfig, n_nodes: usize, data: Arc<CorpusData>) -> Result<Deployment> {
+        let fabric = GridFabric::build(&cfg.grid);
+        if n_nodes == 0 || n_nodes > fabric.nodes.len() {
+            bail!("n_nodes {} out of range 1..={}", n_nodes, fabric.nodes.len());
+        }
+        if data.features != cfg.search.features {
+            bail!("corpus analyzed with F={}, config wants F={}", data.features, cfg.search.features);
+        }
+        let active = fabric.first_nodes_balanced(n_nodes);
+
+        let mut locator = DataSourceLocator::new();
+        for (sid, &(start, count)) in data.ranges.iter().enumerate() {
+            let primary = active[sid % n_nodes];
+            let primary_vo = fabric.node(primary).vo;
+            let same_vo = active
+                .iter()
+                .copied()
+                .filter(|&n| n != primary && fabric.node(n).vo == primary_vo)
+                .min_by_key(|n| (n.0 + fabric.nodes.len() as u32 - primary.0) % fabric.nodes.len() as u32);
+            let secondary = same_vo.or_else(|| (n_nodes > 1).then(|| active[(sid + 1) % n_nodes]));
+            let mut replicas = vec![primary];
+            replicas.extend(secondary);
+            locator.register(
+                DataSource { id: sid as u32, doc_start: start, doc_count: count, replicas },
+                &data.shards[&(sid as u32)].stats,
+            );
+        }
+        let stats = locator.global_stats().context("no sources registered")?;
+        Ok(Deployment { fabric, active, data, locator, stats })
+    }
+
+    /// Shard behind a source id.
+    pub fn shard(&self, source_id: u32) -> Option<&Shard> {
+        self.data.shards.get(&source_id)
+    }
+
+    /// The corpus generator (query sampling).
+    pub fn generator(&self) -> &CorpusGenerator {
+        &self.data.generator
+    }
+
+    /// Look up the publication record behind a corpus-global doc id.
+    pub fn publication(&self, global_id: u64) -> Option<&Publication> {
+        for src in self.locator.sources() {
+            if (src.doc_start..src.doc_start + src.doc_count).contains(&global_id) {
+                return self
+                    .data
+                    .shards
+                    .get(&src.id)
+                    .map(|s| &s.pubs[(global_id - src.doc_start) as usize]);
+            }
+        }
+        None
+    }
+}
+
+/// One search hit as returned to the user.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hit {
+    pub global_id: u64,
+    pub score: f32,
+    pub title: String,
+}
+
+/// End-to-end response: hits + the composed timeline.
+#[derive(Debug, Clone)]
+pub struct SearchResponse {
+    pub query: String,
+    pub hits: Vec<Hit>,
+    /// Composed critical-path timeline (work / net / overhead split).
+    pub timeline: TaskTimeline,
+    /// Jobs dispatched for this query.
+    pub jobs: usize,
+    /// Candidates retrieved across all nodes.
+    pub candidates: usize,
+    /// Documents in all searched sources.
+    pub docs_scanned: u64,
+}
+
+impl SearchResponse {
+    /// The paper's response-time metric.
+    pub fn response_s(&self) -> f64 {
+        self.timeline.total_s()
+    }
+}
+
+/// The deployed GAPS system.
+pub struct GapsSystem {
+    pub cfg: GapsConfig,
+    dep: Arc<Deployment>,
+    rm: ResourceManager,
+    perf: PerfDb,
+    qm: QueryManager,
+    qee: QueryExecutionEngine,
+    service: SearchService,
+    executor: Option<Executor>,
+    /// Per-node service containers (globus-container analogue). Owned by
+    /// the system (not the shared deployment) so acquisition counters and
+    /// residency ablations stay per-system.
+    containers: BTreeMap<NodeId, crate::grid::ServiceContainer>,
+    /// The broker the USI talks to (broker of the first active node's VO).
+    root_broker: NodeId,
+}
+
+impl std::fmt::Debug for GapsSystem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GapsSystem")
+            .field("active_nodes", &self.dep.active.len())
+            .field("sources", &self.dep.locator.len())
+            .field("xla", &self.executor.is_some())
+            .finish()
+    }
+}
+
+impl GapsSystem {
+    /// Deploy GAPS on `n_nodes` nodes (builds fabric + data).
+    pub fn deploy(cfg: GapsConfig, n_nodes: usize) -> Result<GapsSystem> {
+        let dep = Arc::new(Deployment::build(&cfg, n_nodes)?);
+        Self::from_deployment(cfg, dep)
+    }
+
+    /// Deploy over an existing (shared) deployment.
+    pub fn from_deployment(cfg: GapsConfig, dep: Arc<Deployment>) -> Result<GapsSystem> {
+        let mut rm = ResourceManager::new(3);
+        for &n in &dep.active {
+            rm.register(dep.fabric.node(n).clone());
+        }
+        let executor = if cfg.search.use_xla {
+            Some(Executor::new(std::path::Path::new(&cfg.search.artifact_dir))?)
+        } else {
+            None
+        };
+        let root_broker = dep.fabric.vo_of(dep.active[0]).broker;
+        let mut containers = BTreeMap::new();
+        for &n in &dep.active {
+            let mut c = crate::grid::ServiceContainer::new(
+                n.to_string(),
+                cfg.grid.resident_services,
+                cfg.grid.cold_start_ms * 1e-3,
+            );
+            c.deploy("search-service");
+            containers.insert(n, c);
+        }
+        Ok(GapsSystem {
+            service: SearchService::new(cfg.search.clone()),
+            cfg,
+            dep,
+            rm,
+            perf: PerfDb::default(),
+            qm: QueryManager::new(),
+            qee: QueryExecutionEngine,
+            executor,
+            containers,
+            root_broker,
+        })
+    }
+
+    pub fn deployment(&self) -> &Deployment {
+        &self.dep
+    }
+
+    pub fn perf_db(&self) -> &PerfDb {
+        &self.perf
+    }
+
+    pub fn query_manager(&self) -> &QueryManager {
+        &self.qm
+    }
+
+    /// Inject a node failure (resource dynamicity).
+    pub fn fail_node(&mut self, node: NodeId) {
+        self.rm.mark_down(node);
+    }
+
+    /// Heartbeat a node back into the grid.
+    pub fn recover_node(&mut self, node: NodeId) {
+        self.rm.heartbeat(node);
+    }
+
+    /// Execute one query end to end. This is the paper's GAPS flow.
+    pub fn search(&mut self, raw: &str) -> Result<SearchResponse> {
+        let plan_clock = WallClock::start();
+        let query = ParsedQuery::parse(raw, self.cfg.search.features)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        // Plan: resources + sources -> node assignments (QEE).
+        let available = self.rm.available();
+        let sources = self.dep.locator.sources();
+        let plan = self.qee.plan(&sources, &available, &self.perf, self.cfg.search.policy)?;
+
+        // QM materializes the JDFs (reply-to = each node's VO broker).
+        let fabric = &self.dep.fabric;
+        let jobs = self.qm.create_jobs(
+            raw,
+            &plan,
+            |n| fabric.vo_of(n).broker,
+            self.cfg.search.top_k,
+        );
+        let plan_s = plan_clock.elapsed_s();
+
+        // Group jobs by VO for the decentralized dispatch.
+        let mut by_vo: BTreeMap<u32, Vec<&JobDescription>> = BTreeMap::new();
+        for j in &jobs {
+            by_vo.entry(self.dep.fabric.node(j.node).vo.0).or_default().push(j);
+        }
+
+        let dispatch_s = self.cfg.grid.dispatch_ms * 1e-3;
+        let net = &self.dep.fabric.net;
+        let root_info = self.dep.fabric.node(self.root_broker).clone();
+
+        let mut vo_timelines: Vec<TaskTimeline> = Vec::new();
+        let mut vo_lists: Vec<Vec<LocalHit>> = Vec::new();
+        let mut total_candidates = 0usize;
+        let mut total_docs = 0u64;
+        let mut completions: Vec<(super::jdf::JobId, u64, f64)> = Vec::new();
+
+        for (vo_idx, (vo, vo_jobs)) in by_vo.iter().enumerate() {
+            let vo_broker = self.dep.fabric.vos[*vo as usize].broker;
+            let vo_broker_info = self.dep.fabric.node(vo_broker).clone();
+            // Root QEE hands this VO's QEE its slice (serial at root).
+            let jdf_bytes: usize = vo_jobs.iter().map(|j| j.wire_bytes()).sum();
+            let mut vo_tl = TaskTimeline {
+                work_s: 0.0,
+                net_s: net.transfer_between_s(&root_info, &vo_broker_info, jdf_bytes),
+                overhead_s: (vo_idx + 1) as f64 * dispatch_s,
+            };
+
+            // VO broker dispatches its jobs serially; nodes run in parallel.
+            let mut node_branches: Vec<TaskTimeline> = Vec::new();
+            let mut node_lists: Vec<Vec<LocalHit>> = Vec::new();
+            for (j_idx, job) in vo_jobs.iter().enumerate() {
+                self.qm.mark_dispatched(job.id);
+                let node_info = self.dep.fabric.node(job.node).clone();
+                let handle = self
+                    .containers
+                    .get_mut(&job.node)
+                    .context("node has no container")?
+                    .acquire("search-service")
+                    .context("search-service not deployed")?;
+
+                // Real local work over the job's sources.
+                let mut work_measured = 0.0f64;
+                let mut job_hits: Vec<Vec<LocalHit>> = Vec::new();
+                let mut job_docs = 0u64;
+                for sid in &job.sources {
+                    let shard = self.dep.shard(*sid).context("unknown source")?;
+                    let mut scorer = match self.executor.as_mut() {
+                        Some(e) => Scorer::Xla(e),
+                        None => Scorer::Rust,
+                    };
+                    let out = self.service.search(shard, &self.dep.stats, &query, &mut scorer)?;
+                    work_measured += out.work_s;
+                    total_candidates += out.candidates;
+                    job_docs += out.shard_docs as u64;
+                    job_hits.push(out.hits);
+                }
+                total_docs += job_docs;
+                let work_acc = work_measured / node_info.speed_factor;
+                completions.push((job.id, job_docs, work_acc));
+
+                let hits = merge_topk(&job_hits, self.cfg.search.top_k);
+                let branch = TaskTimeline {
+                    work_s: work_acc,
+                    net_s: net.transfer_between_s(&vo_broker_info, &node_info, job.wire_bytes())
+                        + net.transfer_between_s(
+                            &node_info,
+                            &vo_broker_info,
+                            result_wire_bytes(hits.len()),
+                        ),
+                    overhead_s: (j_idx + 1) as f64 * dispatch_s + handle.startup_s,
+                };
+                node_branches.push(branch);
+                node_lists.push(hits);
+            }
+
+            // Barrier at the VO broker: slowest member dominates.
+            let slowest = node_branches
+                .into_iter()
+                .fold(TaskTimeline::default(), |acc, b| acc.max(b));
+            vo_tl.add(slowest);
+
+            // VO-level merge (measured) + WAN reply to root.
+            let merge_clock = WallClock::start();
+            let vo_merged = merge_topk(&node_lists, self.cfg.search.top_k);
+            vo_tl.work_s += merge_clock.elapsed_s();
+            vo_tl.net_s += net.transfer_between_s(
+                &vo_broker_info,
+                &root_info,
+                result_wire_bytes(vo_merged.len()),
+            );
+            vo_lists.push(vo_merged);
+            vo_timelines.push(vo_tl);
+        }
+
+        // Record completions (QM -> perf DB).
+        for (id, docs, work_s) in completions {
+            self.qm.complete(id, docs, work_s, &mut self.perf);
+        }
+
+        // Root barrier + final merge.
+        let mut timeline = TaskTimeline { work_s: plan_s, net_s: 0.0, overhead_s: 0.0 };
+        let slowest_vo = vo_timelines
+            .into_iter()
+            .fold(TaskTimeline::default(), |acc, b| acc.max(b));
+        timeline.add(slowest_vo);
+        let merge_clock = WallClock::start();
+        let merged = merge_topk(&vo_lists, self.cfg.search.top_k);
+        timeline.work_s += merge_clock.elapsed_s();
+
+        let hits = merged
+            .into_iter()
+            .map(|h| Hit {
+                global_id: h.global_id,
+                score: h.score,
+                title: self
+                    .dep
+                    .publication(h.global_id)
+                    .map(|p| p.title.clone())
+                    .unwrap_or_default(),
+            })
+            .collect();
+
+        Ok(SearchResponse {
+            query: raw.to_string(),
+            hits,
+            timeline,
+            jobs: jobs.len(),
+            candidates: total_candidates,
+            docs_scanned: total_docs,
+        })
+    }
+
+    /// Service acquisitions on a node (container metrics).
+    pub fn service_acquisitions(&self, node: NodeId) -> u64 {
+        self.containers
+            .get(&node)
+            .map(|c| c.acquisitions("search-service"))
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GapsConfig, SchedulePolicy};
+
+    fn small_cfg() -> GapsConfig {
+        let mut cfg = GapsConfig::default();
+        cfg.workload.num_docs = 600;
+        cfg.workload.sub_shards = 8;
+        cfg.search.use_xla = false; // unit tests stay artifact-free
+        cfg
+    }
+
+    #[test]
+    fn deployment_covers_corpus_exactly() {
+        let dep = Deployment::build(&small_cfg(), 4).unwrap();
+        assert_eq!(dep.locator.total_docs(), 600);
+        assert_eq!(dep.locator.len(), 8);
+        assert_eq!(dep.active.len(), 4);
+        // Every source's shard holds its declared docs.
+        for src in dep.locator.sources() {
+            let shard = dep.shard(src.id).unwrap();
+            assert_eq!(shard.len() as u64, src.doc_count);
+            assert_eq!(shard.docs[0].global_id, src.doc_start);
+        }
+    }
+
+    #[test]
+    fn replicas_stay_within_vo_when_possible() {
+        // 6 nodes over 3 VOs = 2 per VO: every source can replicate in-VO.
+        let dep = Deployment::build(&small_cfg(), 6).unwrap();
+        for src in dep.locator.sources() {
+            assert_eq!(src.replicas.len(), 2);
+            let vos: std::collections::HashSet<u32> =
+                src.replicas.iter().map(|&n| dep.fabric.node(n).vo.0).collect();
+            assert_eq!(vos.len(), 1, "replicas of {} span VOs", src.id);
+        }
+    }
+
+    #[test]
+    fn lone_vo_member_replicates_cross_vo() {
+        // 3 nodes = 1 per VO: secondary must fall back to another VO.
+        let dep = Deployment::build(&small_cfg(), 3).unwrap();
+        for src in dep.locator.sources() {
+            assert_eq!(src.replicas.len(), 2, "source {} lacks a replica", src.id);
+        }
+    }
+
+    #[test]
+    fn publication_lookup_roundtrips() {
+        let dep = Deployment::build(&small_cfg(), 3).unwrap();
+        for id in [0u64, 17, 599] {
+            let p = dep.publication(id).unwrap();
+            assert_eq!(p.id, id);
+        }
+        assert!(dep.publication(600).is_none());
+    }
+
+    #[test]
+    fn search_returns_relevant_hits() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        // Query with the exact title of doc 42: it must be found.
+        let title = sys.deployment().publication(42).unwrap().title.clone();
+        let resp = sys.search(&title).unwrap();
+        assert!(resp.jobs >= 1);
+        assert!(resp.response_s() > 0.0);
+        assert!(
+            resp.hits.iter().any(|h| h.global_id == 42),
+            "doc 42 not in {:?}",
+            resp.hits.iter().map(|h| h.global_id).collect::<Vec<_>>()
+        );
+        assert!(resp.timeline.work_s > 0.0);
+        assert!(resp.timeline.net_s > 0.0);
+        assert!(resp.timeline.overhead_s > 0.0);
+    }
+
+    #[test]
+    fn perf_history_populates_after_queries() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        assert!(!sys.perf_db().has_history());
+        sys.search("grid data search").unwrap();
+        assert!(sys.perf_db().has_history());
+        assert!(sys.query_manager().completed_jobs() >= 1);
+    }
+
+    #[test]
+    fn failed_node_is_routed_around() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let victim = sys.deployment().active[1];
+        sys.fail_node(victim);
+        let resp = sys.search("grid computing search").unwrap();
+        // All sources still searched (replicas cover the victim).
+        assert_eq!(resp.docs_scanned, 600);
+        // And the victim got no jobs.
+        assert_eq!(sys.service_acquisitions(victim), 0);
+    }
+
+    #[test]
+    fn recovery_brings_node_back() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 2).unwrap();
+        let victim = sys.deployment().active[1];
+        sys.fail_node(victim);
+        sys.search("grid").unwrap();
+        sys.recover_node(victim);
+        sys.search("grid").unwrap();
+        assert!(sys.service_acquisitions(victim) > 0);
+    }
+
+    #[test]
+    fn all_replicas_down_is_an_error() {
+        let mut cfg = small_cfg();
+        cfg.workload.sub_shards = 2;
+        let mut sys = GapsSystem::deploy(cfg, 2).unwrap();
+        for &n in sys.deployment().active.clone().iter() {
+            sys.fail_node(n);
+        }
+        assert!(sys.search("grid").is_err());
+    }
+
+    #[test]
+    fn round_robin_policy_also_covers_corpus() {
+        let mut cfg = small_cfg();
+        cfg.search.policy = SchedulePolicy::RoundRobin;
+        let mut sys = GapsSystem::deploy(cfg, 4).unwrap();
+        let resp = sys.search("massive academic publications").unwrap();
+        assert_eq!(resp.docs_scanned, 600);
+    }
+
+    #[test]
+    fn deterministic_hits_across_runs() {
+        let mut a = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let mut b = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let ra = a.search("distributed grid search").unwrap();
+        let rb = b.search("distributed grid search").unwrap();
+        let ids_a: Vec<u64> = ra.hits.iter().map(|h| h.global_id).collect();
+        let ids_b: Vec<u64> = rb.hits.iter().map(|h| h.global_id).collect();
+        assert_eq!(ids_a, ids_b);
+    }
+}

@@ -1,0 +1,341 @@
+//! Deterministic synthetic publication generator.
+//!
+//! Structure (per DESIGN.md §Substitutions):
+//! * a domain vocabulary of real CS stems plus generated filler words,
+//!   drawn Zipfian so term frequencies match natural text structure;
+//! * `num_topics` topic distributions; each document mixes 1–3 topics,
+//!   which gives the corpus the clustered co-occurrence structure real
+//!   repositories have (queries hit topically-related subsets);
+//! * an author pool with power-law productivity, venue pool, year range.
+//!
+//! `generate(i)` is pure in (spec.seed, i): any node can materialize any
+//! document without coordination — this is how shards are "distributed"
+//! to simulated grid nodes without copying a corpus around.
+
+use super::record::Publication;
+use crate::util::rng::{Rng, Zipf};
+
+/// Corpus shape parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub seed: u64,
+    pub num_docs: u64,
+    /// Domain vocabulary size (per-corpus; Zipfian draws).
+    pub vocab_size: usize,
+    /// Topic count for the mixture model.
+    pub num_topics: usize,
+    /// Author pool size.
+    pub num_authors: usize,
+    /// Venue pool size.
+    pub num_venues: usize,
+    /// Publication year range (inclusive).
+    pub year_min: u32,
+    pub year_max: u32,
+    /// Mean abstract length in tokens (Poisson).
+    pub abstract_len_mean: f64,
+    /// Mean title length in tokens (Poisson, min 3).
+    pub title_len_mean: f64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            seed: 0xA11CE,
+            num_docs: 10_000,
+            vocab_size: 20_000,
+            num_topics: 64,
+            num_authors: 4_000,
+            num_venues: 120,
+            year_min: 1995,
+            year_max: 2014,
+            abstract_len_mean: 90.0,
+            title_len_mean: 8.0,
+        }
+    }
+}
+
+/// Seed CS stems mixed into the vocabulary head so queries look natural.
+const DOMAIN_STEMS: &[&str] = &[
+    "grid", "search", "technique", "massive", "academic", "publication", "distributed",
+    "data", "computing", "resource", "query", "node", "service", "index", "cluster",
+    "parallel", "scheduling", "broker", "virtual", "organization", "repository",
+    "metadata", "retrieval", "ranking", "scalable", "latency", "throughput", "cache",
+    "network", "storage", "replication", "federation", "middleware", "workflow",
+    "semantic", "ontology", "crawler", "harvest", "corpus", "keyword", "relevance",
+    "efficiency", "speedup", "baseline", "benchmark", "simulation", "algorithm",
+    "optimization", "partition", "shard",
+];
+
+const FIRST_NAMES: &[&str] = &[
+    "mohammed", "shafie", "ahmed", "fatima", "wei", "li", "ana", "carlos", "ivan",
+    "olga", "raj", "priya", "kenji", "yuki", "sven", "ingrid", "omar", "leila",
+    "john", "mary", "pierre", "claire", "abdul", "chen",
+];
+
+const LAST_NAMES: &[&str] = &[
+    "bashir", "latiff", "abdulhamid", "loon", "zhang", "wang", "garcia", "santos",
+    "petrov", "ivanova", "sharma", "patel", "tanaka", "sato", "larsson", "berg",
+    "hassan", "rahman", "smith", "jones", "dubois", "martin", "aziz", "lin",
+];
+
+const VENUE_WORDS: &[&str] = &[
+    "international", "conference", "journal", "workshop", "symposium", "transactions",
+    "letters", "proceedings", "forum", "congress",
+];
+
+/// Deterministic publication generator (pure in (seed, doc id)).
+#[derive(Debug, Clone)]
+pub struct CorpusGenerator {
+    spec: CorpusSpec,
+    vocab: Vec<String>,
+    /// topic -> word ranks biased into a topic-specific region.
+    topic_offsets: Vec<usize>,
+    word_zipf: Zipf,
+    author_zipf: Zipf,
+    venue_names: Vec<String>,
+}
+
+impl CorpusGenerator {
+    pub fn new(spec: CorpusSpec) -> Self {
+        assert!(spec.vocab_size > 100, "vocabulary too small");
+        assert!(spec.num_topics > 0 && spec.num_venues > 0 && spec.num_authors > 0);
+        assert!(spec.year_min <= spec.year_max);
+        let mut rng = Rng::new(spec.seed);
+
+        // Vocabulary: domain stems first (the Zipf head), then generated
+        // filler words w_<n> with random consonant-vowel shapes.
+        let mut vocab: Vec<String> =
+            DOMAIN_STEMS.iter().map(|s| s.to_string()).collect();
+        let consonants = b"bcdfghklmnprstvz";
+        let vowels = b"aeiou";
+        while vocab.len() < spec.vocab_size {
+            let syllables = rng.range(2, 5);
+            let mut w = String::new();
+            for _ in 0..syllables {
+                w.push(consonants[rng.range(0, consonants.len())] as char);
+                w.push(vowels[rng.range(0, vowels.len())] as char);
+            }
+            vocab.push(w);
+        }
+
+        // Topics bias draws into a contiguous vocab region per topic.
+        let topic_offsets: Vec<usize> = (0..spec.num_topics)
+            .map(|_| rng.range(0, spec.vocab_size))
+            .collect();
+
+        // Venue names: 2–3 venue words + a domain stem.
+        let mut venue_names = Vec::with_capacity(spec.num_venues);
+        for _ in 0..spec.num_venues {
+            let mut parts = vec![
+                VENUE_WORDS[rng.range(0, VENUE_WORDS.len())].to_string(),
+                DOMAIN_STEMS[rng.range(0, DOMAIN_STEMS.len())].to_string(),
+            ];
+            if rng.chance(0.5) {
+                parts.insert(0, VENUE_WORDS[rng.range(0, VENUE_WORDS.len())].to_string());
+            }
+            venue_names.push(parts.join(" "));
+        }
+
+        CorpusGenerator {
+            word_zipf: Zipf::new(spec.vocab_size, 1.07),
+            author_zipf: Zipf::new(spec.num_authors, 1.2),
+            spec,
+            vocab,
+            topic_offsets,
+            venue_names,
+        }
+    }
+
+    pub fn spec(&self) -> &CorpusSpec {
+        &self.spec
+    }
+
+    /// Total number of documents in the corpus.
+    pub fn len(&self) -> u64 {
+        self.spec.num_docs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spec.num_docs == 0
+    }
+
+    /// Draw one word for a topic: Zipfian rank shifted into the topic's
+    /// vocab region (wrapping), which concentrates co-occurrence.
+    fn topic_word(&self, rng: &mut Rng, topic: usize) -> &str {
+        let rank = self.word_zipf.sample(rng);
+        let idx = (self.topic_offsets[topic] + rank) % self.vocab.len();
+        &self.vocab[idx]
+    }
+
+    fn gen_text(&self, rng: &mut Rng, topics: &[usize], len: usize) -> String {
+        let mut words = Vec::with_capacity(len);
+        for _ in 0..len {
+            let t = topics[rng.range(0, topics.len())];
+            words.push(self.topic_word(rng, t).to_string());
+        }
+        words.join(" ")
+    }
+
+    fn author_name(&self, author_id: usize) -> String {
+        // Pure in author_id: derive name parts from a hash of the id.
+        let mut r = Rng::new(self.spec.seed ^ (author_id as u64).wrapping_mul(0x9E37));
+        format!(
+            "{} {}",
+            FIRST_NAMES[r.range(0, FIRST_NAMES.len())],
+            LAST_NAMES[r.range(0, LAST_NAMES.len())],
+        )
+    }
+
+    /// Generate document `i` (pure in (seed, i); 0 <= i < num_docs).
+    pub fn generate(&self, i: u64) -> Publication {
+        assert!(i < self.spec.num_docs, "doc id {i} out of range");
+        let mut rng = Rng::new(self.spec.seed).fork(i.wrapping_add(1));
+
+        // 1–3 topics per document.
+        let k = 1 + rng.below(3) as usize;
+        let topics: Vec<usize> =
+            (0..k).map(|_| rng.range(0, self.spec.num_topics)).collect();
+
+        let title_len = (rng.poisson(self.spec.title_len_mean).max(3)) as usize;
+        let abstract_len = (rng.poisson(self.spec.abstract_len_mean).max(10)) as usize;
+        let title = self.gen_text(&mut rng, &topics, title_len);
+        let abstract_text = self.gen_text(&mut rng, &topics, abstract_len);
+
+        let n_authors = 1 + rng.below(4) as usize;
+        let authors = (0..n_authors)
+            .map(|_| self.author_name(self.author_zipf.sample(&mut rng)))
+            .collect::<Vec<_>>()
+            .join(", ");
+
+        let venue = self.venue_names[rng.range(0, self.venue_names.len())].clone();
+        let year =
+            self.spec.year_min + rng.below((self.spec.year_max - self.spec.year_min + 1) as u64) as u32;
+
+        Publication { id: i, title, abstract_text, authors, venue, year }
+    }
+
+    /// Generate a contiguous shard [start, start+count).
+    pub fn generate_range(&self, start: u64, count: u64) -> Vec<Publication> {
+        (start..start + count).map(|i| self.generate(i)).collect()
+    }
+
+    /// A realistic query for this corpus: 1–4 words drawn from a random
+    /// document's topical region (so queries actually match documents).
+    pub fn sample_query(&self, rng: &mut Rng) -> String {
+        let topic = rng.range(0, self.spec.num_topics);
+        let n = rng.range(1, 5);
+        (0..n)
+            .map(|_| self.topic_word(rng, topic).to_string())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> CorpusSpec {
+        CorpusSpec {
+            num_docs: 200,
+            vocab_size: 2_000,
+            num_topics: 8,
+            num_authors: 100,
+            num_venues: 10,
+            ..CorpusSpec::default()
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let g1 = CorpusGenerator::new(small_spec());
+        let g2 = CorpusGenerator::new(small_spec());
+        for i in [0u64, 7, 99, 199] {
+            assert_eq!(g1.generate(i), g2.generate(i));
+        }
+    }
+
+    #[test]
+    fn different_docs_differ() {
+        let g = CorpusGenerator::new(small_spec());
+        let a = g.generate(0);
+        let b = g.generate(1);
+        assert_ne!(a.title, b.title);
+        assert_eq!(a.id, 0);
+        assert_eq!(b.id, 1);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut spec2 = small_spec();
+        spec2.seed = 999;
+        let a = CorpusGenerator::new(small_spec()).generate(5);
+        let b = CorpusGenerator::new(spec2).generate(5);
+        assert_ne!(a.title, b.title);
+    }
+
+    #[test]
+    fn fields_are_populated_and_year_in_range() {
+        let g = CorpusGenerator::new(small_spec());
+        for i in 0..50 {
+            let p = g.generate(i);
+            assert!(!p.title.is_empty());
+            assert!(p.abstract_text.split_whitespace().count() >= 10);
+            assert!(!p.authors.is_empty());
+            assert!(!p.venue.is_empty());
+            assert!((1995..=2014).contains(&p.year));
+        }
+    }
+
+    #[test]
+    fn range_generation_matches_pointwise() {
+        let g = CorpusGenerator::new(small_spec());
+        let shard = g.generate_range(10, 5);
+        assert_eq!(shard.len(), 5);
+        for (off, p) in shard.iter().enumerate() {
+            assert_eq!(*p, g.generate(10 + off as u64));
+        }
+    }
+
+    #[test]
+    fn vocabulary_is_zipfian_in_documents() {
+        // Most frequent word across docs should dominate the tail.
+        let g = CorpusGenerator::new(small_spec());
+        let mut counts = std::collections::HashMap::<String, usize>::new();
+        for i in 0..100 {
+            for w in g.generate(i).abstract_text.split_whitespace() {
+                *counts.entry(w.to_string()).or_default() += 1;
+            }
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(freqs[0] >= 5 * freqs[freqs.len() / 2].max(1), "head {} not dominant", freqs[0]);
+    }
+
+    #[test]
+    fn queries_hit_the_corpus() {
+        // A topical query should match at least one document by substring
+        // of some field (weak check; retrieval tests do this properly).
+        let g = CorpusGenerator::new(small_spec());
+        let mut rng = Rng::new(1);
+        let mut hits = 0;
+        for _ in 0..20 {
+            let q = g.sample_query(&mut rng);
+            let w = q.split_whitespace().next().unwrap().to_string();
+            for i in 0..200 {
+                let p = g.generate(i);
+                if p.title.contains(&w) || p.abstract_text.contains(&w) {
+                    hits += 1;
+                    break;
+                }
+            }
+        }
+        assert!(hits >= 15, "only {hits}/20 queries matched anything");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_panics() {
+        CorpusGenerator::new(small_spec()).generate(200);
+    }
+}

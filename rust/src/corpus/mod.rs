@@ -1,0 +1,17 @@
+//! Synthetic academic-publication corpus.
+//!
+//! The paper's datasets are "articles collected from different academic
+//! repositories ... open access information about the articles", scaling
+//! to ~10M records — data we do not have, so this module synthesizes an
+//! equivalent workload (DESIGN.md §Substitutions): Zipfian vocabulary,
+//! topic-mixture titles/abstracts, an author pool with power-law
+//! productivity, venue pools and a year range. Everything is derived
+//! deterministically from a seed, so corpora are reproducible and can be
+//! regenerated shard-by-shard on each simulated node without shipping
+//! gigabytes around.
+
+mod generator;
+mod record;
+
+pub use generator::{CorpusGenerator, CorpusSpec};
+pub use record::Publication;

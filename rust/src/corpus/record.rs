@@ -1,0 +1,89 @@
+//! Publication record: the unit of data GAPS searches.
+
+use crate::text::Field;
+use crate::util::json::Json;
+
+/// One academic publication (open-access metadata record).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Publication {
+    /// Global document id (unique across the whole corpus).
+    pub id: u64,
+    pub title: String,
+    pub abstract_text: String,
+    /// "First Last, First Last, ..." author list.
+    pub authors: String,
+    pub venue: String,
+    pub year: u32,
+}
+
+impl Publication {
+    /// Field accessor in ABI order.
+    pub fn field_text(&self, field: Field) -> &str {
+        match field {
+            Field::Title => &self.title,
+            Field::Abstract => &self.abstract_text,
+            Field::Authors => &self.authors,
+            Field::Venue => &self.venue,
+        }
+    }
+
+    /// Serialize to a JSON object (the on-disk / JDF-result format).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::from(self.id)),
+            ("title", Json::str(&self.title)),
+            ("abstract", Json::str(&self.abstract_text)),
+            ("authors", Json::str(&self.authors)),
+            ("venue", Json::str(&self.venue)),
+            ("year", Json::from(self.year as i64)),
+        ])
+    }
+
+    /// Parse from the JSON object form.
+    pub fn from_json(v: &Json) -> Option<Publication> {
+        Some(Publication {
+            id: v.get("id")?.as_i64()? as u64,
+            title: v.get("title")?.as_str()?.to_string(),
+            abstract_text: v.get("abstract")?.as_str()?.to_string(),
+            authors: v.get("authors")?.as_str()?.to_string(),
+            venue: v.get("venue")?.as_str()?.to_string(),
+            year: v.get("year")?.as_i64()? as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Publication {
+        Publication {
+            id: 42,
+            title: "Grid-based Search".into(),
+            abstract_text: "We search massive publications.".into(),
+            authors: "Mohammed Bashir, Shafie Latiff".into(),
+            venue: "CS.DC".into(),
+            year: 2014,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = sample();
+        let v = p.to_json();
+        assert_eq!(Publication::from_json(&v), Some(p));
+    }
+
+    #[test]
+    fn field_accessor_order() {
+        let p = sample();
+        assert_eq!(p.field_text(Field::Title), "Grid-based Search");
+        assert_eq!(p.field_text(Field::Venue), "CS.DC");
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        let v = Json::parse(r#"{"id": 1, "title": "x"}"#).unwrap();
+        assert_eq!(Publication::from_json(&v), None);
+    }
+}

@@ -1,0 +1,113 @@
+//! Service container: the globus-container analogue.
+//!
+//! Paper: "The SS is implemented as a grid service and is installed to be
+//! run with the globus container. The globus container is run once the
+//! node starts ... the SS does not need to wait time to load on the memory
+//! when the node receives search job request."
+//!
+//! [`ServiceContainer`] models exactly that: services register once at
+//! node start; `acquire` returns a handle plus the *accounted* startup
+//! cost — zero for resident services, `cold_start_s` when the container is
+//! configured non-resident (the ablation in `benches/ablations.rs`).
+
+use std::collections::HashMap;
+
+/// Handle to an acquired service: name + the accounted acquisition cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceHandle {
+    pub service: String,
+    /// Accounted startup overhead in seconds (0 when resident).
+    pub startup_s: f64,
+}
+
+/// Per-node service registry.
+#[derive(Debug)]
+pub struct ServiceContainer {
+    node: String,
+    resident: bool,
+    cold_start_s: f64,
+    services: HashMap<String, u64 /* acquisition count */>,
+}
+
+impl ServiceContainer {
+    pub fn new(node: impl Into<String>, resident: bool, cold_start_s: f64) -> Self {
+        ServiceContainer {
+            node: node.into(),
+            resident,
+            cold_start_s,
+            services: HashMap::new(),
+        }
+    }
+
+    /// Register a service at node start (idempotent).
+    pub fn deploy(&mut self, service: &str) {
+        self.services.entry(service.to_string()).or_insert(0);
+    }
+
+    /// Acquire a deployed service for one job. Returns `None` when the
+    /// service was never deployed on this node.
+    pub fn acquire(&mut self, service: &str) -> Option<ServiceHandle> {
+        let count = self.services.get_mut(service)?;
+        *count += 1;
+        let startup_s = if self.resident {
+            0.0
+        } else {
+            // Non-resident: every acquisition loads the service anew.
+            self.cold_start_s
+        };
+        Some(ServiceHandle { service: service.to_string(), startup_s })
+    }
+
+    /// How many times a service has been acquired (metrics).
+    pub fn acquisitions(&self, service: &str) -> u64 {
+        self.services.get(service).copied().unwrap_or(0)
+    }
+
+    pub fn node(&self) -> &str {
+        &self.node
+    }
+
+    pub fn is_resident(&self) -> bool {
+        self.resident
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resident_services_have_zero_startup() {
+        let mut c = ServiceContainer::new("node0", true, 0.35);
+        c.deploy("search-service");
+        let h = c.acquire("search-service").unwrap();
+        assert_eq!(h.startup_s, 0.0);
+        assert_eq!(c.acquisitions("search-service"), 1);
+    }
+
+    #[test]
+    fn cold_start_accounted_when_not_resident() {
+        let mut c = ServiceContainer::new("node0", false, 0.35);
+        c.deploy("search-service");
+        for _ in 0..3 {
+            let h = c.acquire("search-service").unwrap();
+            assert_eq!(h.startup_s, 0.35);
+        }
+        assert_eq!(c.acquisitions("search-service"), 3);
+    }
+
+    #[test]
+    fn unknown_service_is_none() {
+        let mut c = ServiceContainer::new("node0", true, 0.0);
+        assert!(c.acquire("nope").is_none());
+    }
+
+    #[test]
+    fn deploy_is_idempotent() {
+        let mut c = ServiceContainer::new("node0", true, 0.0);
+        c.deploy("ss");
+        c.acquire("ss").unwrap();
+        c.deploy("ss"); // must not reset the counter
+        assert_eq!(c.acquisitions("ss"), 1);
+    }
+}

@@ -1,0 +1,171 @@
+//! Fabric assembly: VOs, nodes, brokers, CAs, containers, network.
+
+use super::ca::CertificateAuthority;
+use super::container::ServiceContainer;
+use super::net::NetworkModel;
+use super::node::{NodeId, NodeInfo, VoId};
+use crate::config::GridConfig;
+use crate::util::rng::Rng;
+
+/// One Virtual Organization: a broker (node 0 of the VO) plus members.
+#[derive(Debug)]
+pub struct Vo {
+    pub id: VoId,
+    pub broker: NodeId,
+    pub members: Vec<NodeId>,
+    pub ca: CertificateAuthority,
+}
+
+/// The assembled grid fabric.
+#[derive(Debug)]
+pub struct GridFabric {
+    pub vos: Vec<Vo>,
+    pub nodes: Vec<NodeInfo>,
+    pub net: NetworkModel,
+    /// Per-node service containers, indexed by NodeId.0.
+    pub containers: Vec<ServiceContainer>,
+}
+
+impl GridFabric {
+    /// Build a fabric per config: `num_vos` VOs of `nodes_per_vo` nodes,
+    /// node 0 of each VO doubling as broker + CA host (the paper's
+    /// layout), speed factors drawn uniform in [speed_min, speed_max].
+    pub fn build(cfg: &GridConfig) -> GridFabric {
+        assert!(cfg.num_vos >= 1 && cfg.nodes_per_vo >= 1, "empty fabric");
+        assert!(cfg.speed_min > 0.0 && cfg.speed_max >= cfg.speed_min);
+        let mut rng = Rng::new(cfg.seed);
+        let mut vos = Vec::with_capacity(cfg.num_vos);
+        let mut nodes = Vec::with_capacity(cfg.total_nodes());
+        let mut containers = Vec::with_capacity(cfg.total_nodes());
+
+        for vo_idx in 0..cfg.num_vos {
+            let vo_id = VoId(vo_idx as u32);
+            let mut members = Vec::with_capacity(cfg.nodes_per_vo);
+            for n in 0..cfg.nodes_per_vo {
+                let id = NodeId((vo_idx * cfg.nodes_per_vo + n) as u32);
+                let speed_factor = rng.range_f64(cfg.speed_min, cfg.speed_max);
+                nodes.push(NodeInfo { id, vo: vo_id, speed_factor, is_broker: n == 0 });
+                let mut container = ServiceContainer::new(
+                    id.to_string(),
+                    cfg.resident_services,
+                    cfg.cold_start_ms * 1e-3,
+                );
+                container.deploy("search-service");
+                containers.push(container);
+                members.push(id);
+            }
+            let ca = CertificateAuthority::new(vo_id.0, cfg.seed ^ (vo_idx as u64) << 17);
+            vos.push(Vo { id: vo_id, broker: members[0], members, ca });
+        }
+
+        GridFabric {
+            vos,
+            nodes,
+            net: NetworkModel::new(cfg.lan_latency_us, cfg.wan_latency_us, cfg.bandwidth_mbps),
+            containers,
+        }
+    }
+
+    pub fn node(&self, id: NodeId) -> &NodeInfo {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn vo_of(&self, id: NodeId) -> &Vo {
+        &self.vos[self.node(id).vo.0 as usize]
+    }
+
+    /// The first `n` nodes of the fabric in a VO-round-robin order, so a
+    /// k-node experiment spreads across VOs the way the paper's testbed
+    /// sweeps did (2 nodes => 2 VOs, 6 nodes => all 3 VOs).
+    pub fn first_nodes_balanced(&self, n: usize) -> Vec<NodeId> {
+        let mut out = Vec::with_capacity(n);
+        let mut idx = 0usize;
+        while out.len() < n {
+            let vo = &self.vos[idx % self.vos.len()];
+            let within = idx / self.vos.len();
+            if within < vo.members.len() {
+                out.push(vo.members[within]);
+            }
+            idx += 1;
+            if idx > self.vos.len() * self.nodes.len() {
+                break; // n exceeds fabric size
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GridConfig;
+
+    #[test]
+    fn build_matches_paper_layout() {
+        let f = GridFabric::build(&GridConfig::default());
+        assert_eq!(f.vos.len(), 3);
+        assert_eq!(f.nodes.len(), 12);
+        assert_eq!(f.containers.len(), 12);
+        for vo in &f.vos {
+            assert_eq!(vo.members.len(), 4);
+            assert_eq!(vo.broker, vo.members[0]);
+            assert!(f.node(vo.broker).is_broker);
+        }
+    }
+
+    #[test]
+    fn speeds_heterogeneous_and_in_range() {
+        let cfg = GridConfig::default();
+        let f = GridFabric::build(&cfg);
+        let speeds: Vec<f64> = f.nodes.iter().map(|n| n.speed_factor).collect();
+        assert!(speeds.iter().all(|&s| (cfg.speed_min..=cfg.speed_max).contains(&s)));
+        let min = speeds.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = speeds.iter().cloned().fold(0.0, f64::max);
+        assert!(max - min > 0.1, "speeds should differ (min={min} max={max})");
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let a = GridFabric::build(&GridConfig::default());
+        let b = GridFabric::build(&GridConfig::default());
+        for (x, y) in a.nodes.iter().zip(&b.nodes) {
+            assert_eq!(x.speed_factor, y.speed_factor);
+        }
+    }
+
+    #[test]
+    fn ca_per_vo_issues_for_members() {
+        let f = GridFabric::build(&GridConfig::default());
+        let vo = &f.vos[1];
+        let cred = vo.ca.issue(&vo.members[2].to_string());
+        assert!(vo.ca.verify(&cred).is_ok());
+        assert!(f.vos[0].ca.verify(&cred).is_err());
+    }
+
+    #[test]
+    fn containers_have_search_service() {
+        let mut f = GridFabric::build(&GridConfig::default());
+        for c in &mut f.containers {
+            assert!(c.acquire("search-service").is_some());
+        }
+    }
+
+    #[test]
+    fn balanced_selection_spreads_over_vos() {
+        let f = GridFabric::build(&GridConfig::default());
+        let three = f.first_nodes_balanced(3);
+        let vos: std::collections::HashSet<u32> =
+            three.iter().map(|&id| f.node(id).vo.0).collect();
+        assert_eq!(vos.len(), 3, "3 nodes should span 3 VOs: {three:?}");
+        let all = f.first_nodes_balanced(12);
+        assert_eq!(all.len(), 12);
+        let uniq: std::collections::HashSet<NodeId> = all.iter().copied().collect();
+        assert_eq!(uniq.len(), 12);
+    }
+
+    #[test]
+    fn oversized_selection_capped() {
+        let f = GridFabric::build(&GridConfig::default());
+        assert_eq!(f.first_nodes_balanced(40).len(), 12);
+    }
+}

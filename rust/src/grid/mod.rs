@@ -1,0 +1,30 @@
+//! Simulated grid fabric.
+//!
+//! The paper's testbed is 12 physical hosts in 3 Virtual Organizations
+//! running Globus 4.0.2 with a Certificate Authority on each broker. We
+//! reproduce the *behaviourally relevant* parts in-process (DESIGN.md
+//! §Substitutions):
+//!
+//! * heterogeneous node speeds ("the grid nodes have different
+//!   specifications") — [`NodeInfo::speed_factor`];
+//! * LAN/WAN structure and transfer costs — [`NetworkModel`];
+//! * GSI-style credentials issued by a per-VO CA — [`CertificateAuthority`];
+//! * the always-resident globus service container — [`ServiceContainer`];
+//! * brokers: node 0 of each VO doubles as broker + compute node, exactly
+//!   like the paper's testbed.
+//!
+//! Real compute (tokenize/retrieve/score) is *measured*; fabric overheads
+//! (latency, bandwidth, cold starts) are *accounted* through
+//! [`crate::util::clock::TaskTimeline`] so experiments expose both parts.
+
+mod ca;
+mod container;
+mod fabric;
+mod net;
+mod node;
+
+pub use ca::{CaError, Credential, CertificateAuthority};
+pub use container::{ServiceContainer, ServiceHandle};
+pub use fabric::{GridFabric, Vo};
+pub use net::NetworkModel;
+pub use node::{NodeId, NodeInfo, NodeStatus, VoId};

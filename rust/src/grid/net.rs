@@ -1,0 +1,90 @@
+//! Network cost model: LAN within a VO, WAN between VOs, finite bandwidth.
+//!
+//! The paper's search jobs and results move over the campus grid; on our
+//! in-process fabric those transfers are *accounted* rather than incurred:
+//! `transfer_s` returns the simulated seconds a message of `bytes` takes
+//! between two nodes, which the coordinator adds to the job's
+//! [`crate::util::clock::TaskTimeline`] as `net_s`.
+
+use super::node::{NodeInfo, VoId};
+
+/// Latency + bandwidth model.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// One-way latency within a VO (seconds).
+    pub lan_latency_s: f64,
+    /// One-way latency between VOs (seconds).
+    pub wan_latency_s: f64,
+    /// Link bandwidth (bytes/second).
+    pub bandwidth_bps: f64,
+}
+
+impl NetworkModel {
+    pub fn new(lan_latency_us: u64, wan_latency_us: u64, bandwidth_mbps: f64) -> Self {
+        assert!(bandwidth_mbps > 0.0);
+        NetworkModel {
+            lan_latency_s: lan_latency_us as f64 * 1e-6,
+            wan_latency_s: wan_latency_us as f64 * 1e-6,
+            bandwidth_bps: bandwidth_mbps * 1e6,
+        }
+    }
+
+    /// Simulated one-way transfer time for `bytes` between VOs `a` and `b`
+    /// (same node => 0; same VO => LAN; different VO => WAN).
+    pub fn transfer_s(&self, a: VoId, b: VoId, same_node: bool, bytes: usize) -> f64 {
+        if same_node {
+            return 0.0;
+        }
+        let latency = if a == b { self.lan_latency_s } else { self.wan_latency_s };
+        latency + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Transfer between two nodes using their registry entries.
+    pub fn transfer_between_s(&self, a: &NodeInfo, b: &NodeInfo, bytes: usize) -> f64 {
+        self.transfer_s(a.vo, b.vo, a.id == b.id, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::node::{NodeId, NodeInfo};
+
+    fn net() -> NetworkModel {
+        NetworkModel::new(200, 8_000, 40.0)
+    }
+
+    fn node(id: u32, vo: u32) -> NodeInfo {
+        NodeInfo { id: NodeId(id), vo: VoId(vo), speed_factor: 1.0, is_broker: false }
+    }
+
+    #[test]
+    fn same_node_is_free() {
+        assert_eq!(net().transfer_between_s(&node(1, 0), &node(1, 0), 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn lan_cheaper_than_wan() {
+        let n = net();
+        let lan = n.transfer_between_s(&node(1, 0), &node(2, 0), 1024);
+        let wan = n.transfer_between_s(&node(1, 0), &node(5, 1), 1024);
+        assert!(lan < wan);
+        assert!(lan > 0.0);
+    }
+
+    #[test]
+    fn bandwidth_term_scales_with_size() {
+        let n = net();
+        let small = n.transfer_s(VoId(0), VoId(1), false, 1024);
+        let big = n.transfer_s(VoId(0), VoId(1), false, 40_000_000);
+        // 40 MB at 40 MB/s ~ 1 s of serialization.
+        assert!(big - small > 0.9, "big={big} small={small}");
+    }
+
+    #[test]
+    fn latency_matches_config() {
+        let n = net();
+        assert!((n.transfer_s(VoId(0), VoId(0), false, 0) - 200e-6).abs() < 1e-12);
+        assert!((n.transfer_s(VoId(0), VoId(1), false, 0) - 8e-3).abs() < 1e-12);
+    }
+}

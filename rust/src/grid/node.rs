@@ -1,0 +1,65 @@
+//! Node and VO identities + static node facts.
+
+use std::fmt;
+
+/// Grid-wide node identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// Virtual Organization identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VoId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "node{}", self.0)
+    }
+}
+
+impl fmt::Display for VoId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "vo{}", self.0)
+    }
+}
+
+/// Liveness as tracked by the Resource Manager.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStatus {
+    Up,
+    /// Node dropped out (grid dynamicity: "organizations resources ...
+    /// join or leaves the system at any time").
+    Down,
+}
+
+/// Static facts about a node (the Resource Manager's registry entry).
+#[derive(Debug, Clone)]
+pub struct NodeInfo {
+    pub id: NodeId,
+    pub vo: VoId,
+    /// Relative CPU speed (1.0 = nominal). Real measured work on this node
+    /// is accounted as `measured / speed_factor`.
+    pub speed_factor: f64,
+    /// Whether this node doubles as its VO's broker (+CA host).
+    pub is_broker: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(NodeId(3).to_string(), "node3");
+        assert_eq!(VoId(1).to_string(), "vo1");
+    }
+
+    #[test]
+    fn ids_are_ordered_and_hashable() {
+        let mut set = std::collections::HashSet::new();
+        set.insert(NodeId(1));
+        set.insert(NodeId(1));
+        set.insert(NodeId(2));
+        assert_eq!(set.len(), 2);
+        assert!(NodeId(1) < NodeId(2));
+    }
+}

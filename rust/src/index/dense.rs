@@ -1,0 +1,301 @@
+//! Dense packing: candidates -> `[NF, D, F]` tiles + query vectors.
+//!
+//! This is the rust side of the artifact ABI (python/compile/model.py):
+//! row-major flattened `doc_tf [NF, D, F]`, `len_norm [NF, D]`,
+//! `field_w [NF]`, `qw [Q, F]`. Packing is on the request hot path —
+//! the §Perf pass optimizes the scatter loop here.
+
+use super::store::{GlobalStats, Shard};
+use crate::text::NUM_FIELDS;
+
+/// A packed candidate block ready for the PJRT executor.
+#[derive(Debug, Clone)]
+pub struct PackedBlock {
+    /// Flattened `[NF, D, F]` term counts (row-major).
+    pub doc_tf: Vec<f32>,
+    /// Flattened `[NF, D]` length normalisers.
+    pub len_norm: Vec<f32>,
+    /// Local shard ids of the real (non-padding) rows, in packed order.
+    pub local_ids: Vec<u32>,
+    /// Number of real rows (<= d).
+    pub n_real: usize,
+    /// Block doc capacity (the artifact D).
+    pub d: usize,
+    /// Feature dimension (the artifact F).
+    pub f: usize,
+}
+
+/// Pack `candidates` (local shard ids) into one dense block of capacity
+/// `d`. Rows beyond `candidates.len()` are zero (score exactly 0 in the
+/// kernel). `b` is the BM25 length-normalisation constant; averages come
+/// from corpus-global stats so scores merge consistently across shards.
+pub fn pack_block(
+    shard: &Shard,
+    stats: &GlobalStats,
+    candidates: &[u32],
+    d: usize,
+    b: f32,
+) -> PackedBlock {
+    assert!(candidates.len() <= d, "candidates {} exceed block capacity {d}", candidates.len());
+    let f = shard.features;
+    let mut doc_tf = vec![0.0f32; NUM_FIELDS * d * f];
+    let mut len_norm = vec![0.0f32; NUM_FIELDS * d];
+
+    for (row, &local_id) in candidates.iter().enumerate() {
+        let doc = &shard.docs[local_id as usize];
+        for (fi, tf) in doc.field_tf.iter().enumerate() {
+            let base = fi * d * f + row * f;
+            for &(bucket, count) in tf {
+                doc_tf[base + bucket as usize] = count;
+            }
+            let avg = stats.avg_field_len[fi].max(1e-3);
+            let ln = 1.0 / (1.0 - b + b * doc.field_len[fi] / avg);
+            len_norm[fi * d + row] = ln;
+        }
+    }
+
+    PackedBlock { doc_tf, len_norm, local_ids: candidates.to_vec(), n_real: candidates.len(), d, f }
+}
+
+/// Build the `[Q, F]` query-weight matrix: for each query, scatter
+/// `idf(bucket) * query_tf(bucket)` into its row. Queries are lists of
+/// feature buckets (already tokenized/hashed by the query parser).
+pub fn build_query_weights(
+    queries: &[Vec<u32>],
+    stats: &GlobalStats,
+    f: usize,
+    q_capacity: usize,
+) -> Vec<f32> {
+    assert!(queries.len() <= q_capacity, "queries {} exceed artifact Q {q_capacity}", queries.len());
+    let mut qw = vec![0.0f32; q_capacity * f];
+    for (qi, buckets) in queries.iter().enumerate() {
+        for &bucket in buckets {
+            debug_assert!((bucket as usize) < f);
+            qw[qi * f + bucket as usize] += stats.idf(bucket);
+        }
+    }
+    qw
+}
+
+/// Reusable packer: same layout as [`pack_block`], but the block buffers
+/// are reused across calls and cleared *sparsely* — instead of zeroing the
+/// whole `[NF, D, F]` tile (8.4 MB at d=1024) per call, only the entries
+/// written by the previous pack are reset. §Perf P2: candidate tiles are
+/// ~1–5% dense, so this cuts the packer's memory traffic ~20x.
+#[derive(Debug, Default)]
+pub struct Packer {
+    block: Option<PackedBlock>,
+    /// Flat doc_tf indices written by the previous pack.
+    written: Vec<u32>,
+}
+
+impl Packer {
+    pub fn new() -> Packer {
+        Packer::default()
+    }
+
+    /// Pack candidates into the reused block (same semantics as
+    /// [`pack_block`]).
+    pub fn pack(
+        &mut self,
+        shard: &Shard,
+        stats: &GlobalStats,
+        candidates: &[u32],
+        d: usize,
+        b: f32,
+    ) -> &PackedBlock {
+        assert!(candidates.len() <= d, "candidates {} exceed block capacity {d}", candidates.len());
+        let f = shard.features;
+        // (Re)allocate on first use or shape change; else sparse-clear.
+        let need_alloc = self
+            .block
+            .as_ref()
+            .map(|blk| blk.d != d || blk.f != f)
+            .unwrap_or(true);
+        if need_alloc {
+            self.block = Some(PackedBlock {
+                doc_tf: vec![0.0; NUM_FIELDS * d * f],
+                len_norm: vec![0.0; NUM_FIELDS * d],
+                local_ids: Vec::new(),
+                n_real: 0,
+                d,
+                f,
+            });
+            self.written.clear();
+        }
+        let block = self.block.as_mut().expect("block allocated");
+        // Sparse clear of the previous pack's entries.
+        for &idx in &self.written {
+            block.doc_tf[idx as usize] = 0.0;
+        }
+        self.written.clear();
+        block.len_norm.iter_mut().for_each(|x| *x = 0.0); // small: NF*D
+
+        for (row, &local_id) in candidates.iter().enumerate() {
+            let doc = &shard.docs[local_id as usize];
+            for (fi, tf) in doc.field_tf.iter().enumerate() {
+                let base = fi * d * f + row * f;
+                for &(bucket, count) in tf {
+                    let idx = base + bucket as usize;
+                    block.doc_tf[idx] = count;
+                    self.written.push(idx as u32);
+                }
+                let avg = stats.avg_field_len[fi].max(1e-3);
+                block.len_norm[fi * d + row] =
+                    1.0 / (1.0 - b + b * doc.field_len[fi] / avg);
+            }
+        }
+        block.local_ids.clear();
+        block.local_ids.extend_from_slice(candidates);
+        block.n_real = candidates.len();
+        block
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusGenerator, CorpusSpec};
+    use crate::index::store::{Shard, ShardStats};
+
+    fn shard_and_stats(n: u64, features: usize) -> (Shard, GlobalStats) {
+        let spec = CorpusSpec { num_docs: n, vocab_size: 500, ..CorpusSpec::default() };
+        let gen = CorpusGenerator::new(spec);
+        let shard = Shard::build(0, gen.generate_range(0, n), features);
+        let mut acc = ShardStats::empty(features);
+        acc.merge(&shard.stats);
+        (shard, acc.finalize())
+    }
+
+    #[test]
+    fn pack_shapes_and_padding() {
+        let (shard, stats) = shard_and_stats(20, 128);
+        let block = pack_block(&shard, &stats, &[0, 5, 7], 8, 0.75);
+        assert_eq!(block.doc_tf.len(), NUM_FIELDS * 8 * 128);
+        assert_eq!(block.len_norm.len(), NUM_FIELDS * 8);
+        assert_eq!(block.n_real, 3);
+        // Padding rows are all zero.
+        for fi in 0..NUM_FIELDS {
+            for row in 3..8 {
+                let base = fi * 8 * 128 + row * 128;
+                assert!(block.doc_tf[base..base + 128].iter().all(|&x| x == 0.0));
+                assert_eq!(block.len_norm[fi * 8 + row], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_scatters_tf_correctly() {
+        let (shard, stats) = shard_and_stats(10, 128);
+        let block = pack_block(&shard, &stats, &[2], 4, 0.75);
+        let doc = &shard.docs[2];
+        for (fi, tf) in doc.field_tf.iter().enumerate() {
+            for &(bucket, count) in tf {
+                let v = block.doc_tf[fi * 4 * 128 + bucket as usize];
+                assert_eq!(v, count, "field {fi} bucket {bucket}");
+            }
+        }
+    }
+
+    #[test]
+    fn len_norm_formula() {
+        let (shard, stats) = shard_and_stats(10, 128);
+        let b = 0.75f32;
+        let block = pack_block(&shard, &stats, &[1], 2, b);
+        let doc = &shard.docs[1];
+        for fi in 0..NUM_FIELDS {
+            let avg = stats.avg_field_len[fi].max(1e-3);
+            let want = 1.0 / (1.0 - b + b * doc.field_len[fi] / avg);
+            assert!((block.len_norm[fi * 2] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn average_length_doc_has_unit_norm() {
+        let (shard, stats) = shard_and_stats(10, 128);
+        // A doc whose field_len equals the average must get len_norm == 1.
+        let b = 0.75f32;
+        let block = pack_block(&shard, &stats, &[0], 1, b);
+        let doc = &shard.docs[0];
+        for fi in 0..NUM_FIELDS {
+            if (doc.field_len[fi] - stats.avg_field_len[fi]).abs() < 1e-6 {
+                assert!((block.len_norm[fi] - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed block capacity")]
+    fn overflow_panics() {
+        let (shard, stats) = shard_and_stats(10, 64);
+        pack_block(&shard, &stats, &[0, 1, 2], 2, 0.75);
+    }
+
+    #[test]
+    fn packer_matches_pack_block_across_reuse() {
+        let (shard, stats) = shard_and_stats(30, 128);
+        let mut packer = Packer::new();
+        // Several packs with different candidate sets; each must equal the
+        // from-scratch pack (i.e. stale entries fully cleared).
+        let sets: [&[u32]; 4] = [&[0, 5, 7], &[1], &[2, 3, 4, 6, 8, 9], &[0]];
+        for cands in sets {
+            let reused = packer.pack(&shard, &stats, cands, 16, 0.75).clone();
+            let fresh = pack_block(&shard, &stats, cands, 16, 0.75);
+            assert_eq!(reused.doc_tf, fresh.doc_tf);
+            assert_eq!(reused.len_norm, fresh.len_norm);
+            assert_eq!(reused.local_ids, fresh.local_ids);
+            assert_eq!(reused.n_real, fresh.n_real);
+        }
+    }
+
+    #[test]
+    fn packer_reallocates_on_shape_change() {
+        let (shard, stats) = shard_and_stats(10, 64);
+        let mut packer = Packer::new();
+        let a = packer.pack(&shard, &stats, &[0, 1], 4, 0.75).clone();
+        assert_eq!(a.d, 4);
+        let b = packer.pack(&shard, &stats, &[0, 1, 2], 8, 0.75).clone();
+        assert_eq!(b.d, 8);
+        let fresh = pack_block(&shard, &stats, &[0, 1, 2], 8, 0.75);
+        assert_eq!(b.doc_tf, fresh.doc_tf);
+    }
+
+    #[test]
+    fn query_weights_scatter_idf() {
+        let (_, stats) = shard_and_stats(30, 64);
+        let queries = vec![vec![3u32, 9], vec![3, 3]];
+        let qw = build_query_weights(&queries, &stats, 64, 4);
+        assert_eq!(qw.len(), 4 * 64);
+        assert!((qw[3] - stats.idf(3)).abs() < 1e-6);
+        assert!((qw[9] - stats.idf(9)).abs() < 1e-6);
+        // Repeated term accumulates (qtf * idf).
+        assert!((qw[64 + 3] - 2.0 * stats.idf(3)).abs() < 1e-6);
+        // Unused query rows are zero.
+        assert!(qw[2 * 64..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn block_scores_zero_query_overlap() {
+        // A candidate with no query-term overlap gets doc_tf mass only in
+        // non-query buckets; qw row dot that row must be 0 — verified at
+        // the scorer level, here we just confirm disjoint support.
+        let (shard, stats) = shard_and_stats(5, 64);
+        let block = pack_block(&shard, &stats, &[0], 1, 0.75);
+        let doc_buckets: std::collections::HashSet<u32> = shard.docs[0]
+            .field_tf
+            .iter()
+            .flat_map(|tf| tf.iter().map(|(b, _)| *b))
+            .collect();
+        let free = (0..64u32).find(|b| !doc_buckets.contains(b));
+        if let Some(fb) = free {
+            let qw = build_query_weights(&[vec![fb]], &stats, 64, 1);
+            let mut dot = 0.0f32;
+            for fi in 0..NUM_FIELDS {
+                for t in 0..64 {
+                    dot += qw[t] * block.doc_tf[fi * 64 + t];
+                }
+            }
+            assert_eq!(dot, 0.0);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Inverted index over hashed features: the retrieval half of the Search
+//! Service. Postings are per feature bucket (any field), sorted by local
+//! doc id; retrieval is a counting OR-merge that returns candidates
+//! ordered by match count (docs matching more distinct query terms first).
+
+use super::store::ShardDoc;
+
+/// Immutable inverted index for one shard.
+#[derive(Debug, Clone)]
+pub struct InvertedIndex {
+    /// postings[bucket] = sorted local doc ids containing that bucket.
+    postings: Vec<Vec<u32>>,
+}
+
+impl InvertedIndex {
+    /// Build from analyzed docs (each doc indexed once per bucket even if
+    /// the bucket occurs in several fields).
+    pub fn build(docs: &[ShardDoc], features: usize) -> InvertedIndex {
+        let mut postings: Vec<Vec<u32>> = vec![Vec::new(); features];
+        for (local_id, doc) in docs.iter().enumerate() {
+            let lid = local_id as u32;
+            for tf in &doc.field_tf {
+                for (bucket, _) in tf {
+                    let list = &mut postings[*bucket as usize];
+                    if list.last() != Some(&lid) {
+                        list.push(lid);
+                    }
+                }
+            }
+        }
+        InvertedIndex { postings }
+    }
+
+    /// Posting list for a bucket (empty slice if absent).
+    pub fn postings(&self, bucket: u32) -> &[u32] {
+        self.postings.get(bucket as usize).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Total number of postings (index size metric).
+    pub fn num_postings(&self) -> usize {
+        self.postings.iter().map(|p| p.len()).sum()
+    }
+
+    /// OR-retrieve candidates for the given query buckets: returns
+    /// (local_id, distinct-terms-matched) sorted by match count descending
+    /// then local id, truncated to `max_candidates`.
+    pub fn retrieve(&self, buckets: &[u32], max_candidates: usize) -> Vec<(u32, u16)> {
+        let mut counts: std::collections::HashMap<u32, u16> = std::collections::HashMap::new();
+        // Dedup buckets so a repeated query term doesn't double-count.
+        let mut uniq: Vec<u32> = buckets.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        for b in uniq {
+            for &doc in self.postings(b) {
+                *counts.entry(doc).or_insert(0) += 1;
+            }
+        }
+        let mut out: Vec<(u32, u16)> = counts.into_iter().collect();
+        out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        out.truncate(max_candidates);
+        out
+    }
+
+    /// AND-retrieve: docs containing *all* buckets (used by the
+    /// multivariate field filters). Returns sorted local ids.
+    pub fn retrieve_all(&self, buckets: &[u32]) -> Vec<u32> {
+        if buckets.is_empty() {
+            return Vec::new();
+        }
+        let mut uniq: Vec<u32> = buckets.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        // Start from the shortest posting list, intersect the rest.
+        uniq.sort_by_key(|b| self.postings(*b).len());
+        let mut acc: Vec<u32> = self.postings(uniq[0]).to_vec();
+        for b in &uniq[1..] {
+            let list = self.postings(*b);
+            acc.retain(|d| list.binary_search(d).is_ok());
+            if acc.is_empty() {
+                break;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::NUM_FIELDS;
+
+    /// Build a ShardDoc from (bucket, tf) pairs in field 0.
+    fn doc(global_id: u64, buckets: &[u32]) -> ShardDoc {
+        let mut field_tf: [Vec<(u32, f32)>; NUM_FIELDS] = Default::default();
+        field_tf[0] = buckets.iter().map(|&b| (b, 1.0)).collect();
+        ShardDoc { global_id, field_tf, field_len: [buckets.len() as f32, 0.0, 0.0, 0.0] }
+    }
+
+    fn index() -> InvertedIndex {
+        InvertedIndex::build(
+            &[
+                doc(0, &[1, 2, 3]),
+                doc(1, &[2, 3]),
+                doc(2, &[3]),
+                doc(3, &[4]),
+            ],
+            8,
+        )
+    }
+
+    #[test]
+    fn postings_sorted_and_correct() {
+        let ix = index();
+        assert_eq!(ix.postings(1), &[0]);
+        assert_eq!(ix.postings(2), &[0, 1]);
+        assert_eq!(ix.postings(3), &[0, 1, 2]);
+        assert_eq!(ix.postings(7), &[] as &[u32]);
+        assert_eq!(ix.num_postings(), 7);
+    }
+
+    #[test]
+    fn or_retrieval_orders_by_match_count() {
+        let ix = index();
+        let got = ix.retrieve(&[1, 2, 3], 10);
+        assert_eq!(got, vec![(0, 3), (1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn or_retrieval_truncates() {
+        let ix = index();
+        let got = ix.retrieve(&[3], 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 0);
+    }
+
+    #[test]
+    fn duplicate_query_buckets_count_once() {
+        let ix = index();
+        let got = ix.retrieve(&[2, 2, 2], 10);
+        assert_eq!(got, vec![(0, 1), (1, 1)]);
+    }
+
+    #[test]
+    fn and_retrieval_intersects() {
+        let ix = index();
+        assert_eq!(ix.retrieve_all(&[2, 3]), vec![0, 1]);
+        assert_eq!(ix.retrieve_all(&[1, 4]), Vec::<u32>::new());
+        assert_eq!(ix.retrieve_all(&[]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn multifield_doc_indexed_once_per_bucket() {
+        let mut field_tf: [Vec<(u32, f32)>; NUM_FIELDS] = Default::default();
+        field_tf[0] = vec![(5, 1.0)];
+        field_tf[1] = vec![(5, 3.0)];
+        let d = ShardDoc { global_id: 0, field_tf, field_len: [1.0, 3.0, 0.0, 0.0] };
+        let ix = InvertedIndex::build(&[d], 8);
+        assert_eq!(ix.postings(5), &[0]);
+    }
+
+    #[test]
+    fn out_of_range_bucket_is_empty() {
+        let ix = index();
+        assert_eq!(ix.postings(100), &[] as &[u32]);
+        assert!(ix.retrieve(&[100], 5).is_empty());
+    }
+}

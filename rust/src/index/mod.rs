@@ -1,0 +1,19 @@
+//! Indexing substrate: document store + shards, the inverted index used
+//! for candidate retrieval, and the dense packer that turns candidates
+//! into the `[NF, D, F]` tiles the AOT scoring artifacts consume.
+//!
+//! Request-path split (mirrors a modern retrieve-then-rank engine, and the
+//! paper's "local search service scans its local dataset"):
+//!
+//! 1. **retrieve** — inverted-index probe produces candidate local ids;
+//! 2. **rank** — candidates are packed into dense blocks and scored by the
+//!    Layer-1/2 artifact through the PJRT runtime (or the pure-rust
+//!    fallback scorer, used for the traditional baseline and tests).
+
+mod dense;
+mod inverted;
+mod store;
+
+pub use dense::{build_query_weights, pack_block, PackedBlock, Packer};
+pub use inverted::InvertedIndex;
+pub use store::{GlobalStats, Shard, ShardDoc, ShardStats};

@@ -1,0 +1,267 @@
+//! Shard store: per-node document data in both raw (for result rendering /
+//! filtering) and analyzed (hashed sparse term vectors) forms, plus the
+//! corpus-level statistics BM25 needs.
+
+use crate::corpus::Publication;
+use crate::text::{HashingVectorizer, NUM_FIELDS};
+use crate::util::json::Json;
+
+use super::inverted::InvertedIndex;
+
+/// Analyzed form of one document within a shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardDoc {
+    /// Corpus-global document id.
+    pub global_id: u64,
+    /// Per-field sparse hashed term frequencies (bucket, count).
+    pub field_tf: [Vec<(u32, f32)>; NUM_FIELDS],
+    /// Per-field token counts (BM25 lengths).
+    pub field_len: [f32; NUM_FIELDS],
+}
+
+/// Per-shard statistics contributed to the corpus-global BM25 stats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStats {
+    pub num_docs: u64,
+    /// Document frequency per feature bucket (any field).
+    pub df: Vec<u64>,
+    /// Sum of field lengths (for global averages).
+    pub field_len_sum: [f64; NUM_FIELDS],
+}
+
+/// Corpus-global statistics (merged from shard stats by the Data Source
+/// Locator; consistent IDF across nodes is what makes distributed scores
+/// mergeable).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlobalStats {
+    pub total_docs: u64,
+    pub df: Vec<u64>,
+    pub avg_field_len: [f32; NUM_FIELDS],
+}
+
+impl ShardStats {
+    pub fn empty(features: usize) -> Self {
+        ShardStats { num_docs: 0, df: vec![0; features], field_len_sum: [0.0; NUM_FIELDS] }
+    }
+
+    /// Merge another shard's stats into this accumulator.
+    pub fn merge(&mut self, other: &ShardStats) {
+        assert_eq!(self.df.len(), other.df.len(), "feature space mismatch");
+        self.num_docs += other.num_docs;
+        for (a, b) in self.df.iter_mut().zip(&other.df) {
+            *a += b;
+        }
+        for f in 0..NUM_FIELDS {
+            self.field_len_sum[f] += other.field_len_sum[f];
+        }
+    }
+
+    /// Finalize into global stats.
+    pub fn finalize(&self) -> GlobalStats {
+        let n = self.num_docs.max(1) as f64;
+        let mut avg = [0.0f32; NUM_FIELDS];
+        for f in 0..NUM_FIELDS {
+            avg[f] = ((self.field_len_sum[f] / n) as f32).max(1e-3);
+        }
+        GlobalStats { total_docs: self.num_docs, df: self.df.clone(), avg_field_len: avg }
+    }
+}
+
+impl GlobalStats {
+    /// BM25 IDF for a feature bucket.
+    pub fn idf(&self, feature: u32) -> f32 {
+        let n = self.total_docs as f64;
+        let df = self.df.get(feature as usize).copied().unwrap_or(0) as f64;
+        ((1.0 + (n - df + 0.5) / (df + 0.5)).ln() as f32).max(0.0)
+    }
+}
+
+/// One node-local shard: raw records + analyzed docs + inverted index.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Shard id (unique within the grid; assigned by the locator).
+    pub id: u32,
+    /// Feature-space size (must equal the artifact F).
+    pub features: usize,
+    /// Raw records, parallel to `docs`.
+    pub pubs: Vec<Publication>,
+    /// Analyzed docs, parallel to `pubs`.
+    pub docs: Vec<ShardDoc>,
+    /// Inverted index over hashed features (any field).
+    pub inverted: InvertedIndex,
+    /// This shard's contribution to global stats.
+    pub stats: ShardStats,
+}
+
+impl Shard {
+    /// Analyze `pubs` into a shard with inverted index and stats.
+    pub fn build(id: u32, pubs: Vec<Publication>, features: usize) -> Shard {
+        let vectorizer = HashingVectorizer::new(features);
+        let mut docs = Vec::with_capacity(pubs.len());
+        let mut stats = ShardStats::empty(features);
+        let mut seen = vec![0u64; features]; // df scratch (dedup per doc)
+
+        for (local_id, p) in pubs.iter().enumerate() {
+            let mut field_tf: [Vec<(u32, f32)>; NUM_FIELDS] = Default::default();
+            let mut field_len = [0.0f32; NUM_FIELDS];
+            for (fi, field) in crate::text::FIELDS.iter().enumerate() {
+                let text = p.field_text(*field);
+                field_tf[fi] = vectorizer.tf_sparse(text);
+                field_len[fi] = vectorizer.field_len(text);
+                stats.field_len_sum[fi] += field_len[fi] as f64;
+            }
+            // df: a feature counts once per doc regardless of field.
+            let marker = local_id as u64 + 1;
+            for tf in &field_tf {
+                for (bucket, _) in tf {
+                    if seen[*bucket as usize] != marker {
+                        seen[*bucket as usize] = marker;
+                        stats.df[*bucket as usize] += 1;
+                    }
+                }
+            }
+            docs.push(ShardDoc { global_id: p.id, field_tf, field_len });
+        }
+        stats.num_docs = pubs.len() as u64;
+        let inverted = InvertedIndex::build(&docs, features);
+        Shard { id, features, pubs, docs, inverted, stats }
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    /// Persist raw records as JSONL (one publication per line) — the
+    /// "file-form data source" of the paper. Analysis is recomputed on
+    /// load; files stay small and tool-friendly.
+    pub fn save_jsonl(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for p in &self.pubs {
+            writeln!(out, "{}", p.to_json().to_string_compact())?;
+        }
+        Ok(())
+    }
+
+    /// Load a shard from JSONL produced by [`Shard::save_jsonl`].
+    pub fn load_jsonl(id: u32, path: &std::path::Path, features: usize) -> std::io::Result<Shard> {
+        let text = std::fs::read_to_string(path)?;
+        let mut pubs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line).map_err(|e| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{}:{}: {e}", path.display(), lineno + 1),
+                )
+            })?;
+            let p = Publication::from_json(&v).ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{}:{}: not a publication", path.display(), lineno + 1),
+                )
+            })?;
+            pubs.push(p);
+        }
+        Ok(Shard::build(id, pubs, features))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusGenerator, CorpusSpec};
+
+    fn small_shard(n: u64) -> Shard {
+        let spec = CorpusSpec { num_docs: n, vocab_size: 500, ..CorpusSpec::default() };
+        let gen = CorpusGenerator::new(spec);
+        Shard::build(0, gen.generate_range(0, n), 256)
+    }
+
+    #[test]
+    fn build_analyzes_all_docs() {
+        let s = small_shard(50);
+        assert_eq!(s.len(), 50);
+        assert_eq!(s.stats.num_docs, 50);
+        for d in &s.docs {
+            assert!(!d.field_tf[0].is_empty(), "title tf empty");
+            assert!(d.field_len[1] >= 10.0, "abstract too short");
+        }
+    }
+
+    #[test]
+    fn df_bounded_by_num_docs() {
+        let s = small_shard(40);
+        assert!(s.stats.df.iter().all(|&df| df <= 40));
+        assert!(s.stats.df.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn stats_merge_and_finalize() {
+        let a = small_shard(30);
+        let b = small_shard(20);
+        let mut acc = ShardStats::empty(256);
+        acc.merge(&a.stats);
+        acc.merge(&b.stats);
+        assert_eq!(acc.num_docs, 50);
+        let g = acc.finalize();
+        assert_eq!(g.total_docs, 50);
+        assert!(g.avg_field_len[1] > g.avg_field_len[0], "abstracts longer than titles");
+    }
+
+    #[test]
+    fn idf_decreases_with_df() {
+        let s = small_shard(60);
+        let g = {
+            let mut acc = ShardStats::empty(256);
+            acc.merge(&s.stats);
+            acc.finalize()
+        };
+        // find a frequent and a rare bucket
+        let (mut hi, mut lo) = (0u32, 0u32);
+        for (i, &df) in g.df.iter().enumerate() {
+            if df > g.df[hi as usize] {
+                hi = i as u32;
+            }
+            if df > 0 && (g.df[lo as usize] == 0 || df < g.df[lo as usize]) {
+                lo = i as u32;
+            }
+        }
+        assert!(g.idf(lo) >= g.idf(hi), "idf(rare) >= idf(common)");
+        // unseen bucket has max idf
+        let unseen = g.df.iter().position(|&d| d == 0);
+        if let Some(u) = unseen {
+            assert!(g.idf(u as u32) >= g.idf(hi));
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let s = small_shard(10);
+        let dir = std::env::temp_dir().join("gaps_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard0.jsonl");
+        s.save_jsonl(&path).unwrap();
+        let loaded = Shard::load_jsonl(0, &path, 256).unwrap();
+        assert_eq!(loaded.len(), 10);
+        assert_eq!(loaded.pubs, s.pubs);
+        assert_eq!(loaded.docs, s.docs);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_bad_lines() {
+        let dir = std::env::temp_dir().join("gaps_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"id\": 1}\n").unwrap();
+        assert!(Shard::load_jsonl(0, &path, 64).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! # GAPS — Grid-based Academic Publications Search
+//!
+//! Production-quality reproduction of *"Grid-based Search Technique for
+//! Massive Academic Publications"* (Bashir, Abd Latiff, Abdulhamid, Loon —
+//! 2014) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the GAPS coordination contribution: Query
+//!   Execution Engines (one per Virtual Organization), the Query Manager
+//!   with its Job Description Files and performance-history scheduling,
+//!   Resource Manager, Data Source Locator, per-node Search Services, and
+//!   the result merger — plus every substrate the paper assumes (grid
+//!   fabric, corpus, text pipeline, inverted index, baseline, metrics).
+//! * **Layer 2 (python/compile/model.py)** — the BM25F candidate-ranking
+//!   compute graph, AOT-lowered to HLO text artifacts at build time.
+//! * **Layer 1 (python/compile/kernels/bm25.py)** — the tiled Pallas
+//!   scoring kernel the Layer-2 graph calls.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) and the Search
+//! Services execute them directly from Rust.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-figure reproductions (response time, speedup, efficiency).
+
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod grid;
+pub mod runtime;
+pub mod search;
+pub mod index;
+pub mod metrics;
+pub mod text;
+pub mod usi;
+pub mod util;

@@ -1,0 +1,178 @@
+//! `gaps` — the GAPS launcher.
+//!
+//! Subcommands:
+//!
+//! * `search <query...>` — deploy and run one query, print results.
+//! * `repl`              — interactive USI session.
+//! * `sweep`             — the paper's node sweep (Figs 3/4/5 series).
+//! * `corpus`            — generate a corpus and save shard JSONL files.
+//! * `info`              — show the effective configuration and fabric.
+//!
+//! Common flags (see `config::GapsConfig::apply_args`): `--config <file>`,
+//! `--vos N`, `--nodes-per-vo N`, `--docs N`, `--queries N`, `--top-k N`,
+//! `--policy perf|rr`, `--no-xla`, `--artifacts DIR`, `--seed N`.
+
+use anyhow::{bail, Context, Result};
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::GapsSystem;
+use gaps::metrics::{run_node_sweep, System};
+use gaps::util::bench::Table;
+use gaps::util::cli::Args;
+
+const BOOL_FLAGS: &[&str] = &["no-xla", "no-resident-services", "verbose", "help"];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("gaps: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(true, BOOL_FLAGS)?;
+    if args.has("help") || args.subcommand.is_none() {
+        print_usage();
+        return Ok(());
+    }
+    if args.has("verbose") {
+        gaps::util::log::set_level(gaps::util::log::Level::Debug);
+    }
+    let mut cfg = GapsConfig::default();
+    cfg.apply_args(&args)?;
+
+    match args.subcommand.as_deref().unwrap() {
+        "search" => cmd_search(&args, cfg),
+        "repl" => cmd_repl(&args, cfg),
+        "sweep" => cmd_sweep(&args, cfg),
+        "corpus" => cmd_corpus(&args, cfg),
+        "info" => cmd_info(cfg),
+        other => bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gaps — Grid-based Academic Publications Search (reproduction)\n\n\
+         usage: gaps <search|repl|sweep|corpus|info> [flags] [query...]\n\n\
+         subcommands:\n\
+           search <query...>   one-shot search (e.g. gaps search grid computing)\n\
+           repl                interactive USI session\n\
+           sweep               node sweep: response time / speedup / efficiency\n\
+           corpus --out DIR    generate the corpus as shard JSONL files\n\
+           info                print the effective configuration\n\n\
+         common flags: --config FILE --vos N --nodes-per-vo N --nodes N\n\
+           --docs N --queries N --top-k N --policy perf|rr --no-xla\n\
+           --artifacts DIR --seed N --no-resident-services"
+    );
+}
+
+/// Number of participating nodes for a command (defaults to the fabric).
+fn n_nodes(args: &Args, cfg: &GapsConfig) -> Result<usize> {
+    args.get_parse("nodes", cfg.grid.total_nodes()).map_err(Into::into)
+}
+
+fn cmd_search(args: &Args, cfg: GapsConfig) -> Result<()> {
+    let query = args.positionals.join(" ");
+    if query.trim().is_empty() {
+        bail!("search needs a query, e.g.: gaps search grid computing");
+    }
+    let n = n_nodes(args, &cfg)?;
+    eprintln!("{}", cfg.describe());
+    let mut sys = GapsSystem::deploy(cfg, n)?;
+    let (rendered, timing) = gaps::usi::one_shot(&mut sys, &query)?;
+    print!("{rendered}");
+    println!(
+        "usi overhead: {:.3} ms ({:.2}% of total)",
+        timing.interface_s * 1e3,
+        timing.interface_fraction() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_repl(args: &Args, cfg: GapsConfig) -> Result<()> {
+    let n = n_nodes(args, &cfg)?;
+    eprintln!("{}", cfg.describe());
+    let mut sys = GapsSystem::deploy(cfg, n)?;
+    let stdin = std::io::stdin();
+    gaps::usi::repl(&mut sys, stdin.lock(), std::io::stdout())
+}
+
+fn cmd_sweep(args: &Args, cfg: GapsConfig) -> Result<()> {
+    // Node counts: --node-counts 1,2,4,8 or the paper's default sweep.
+    let counts: Vec<usize> = match args.get("node-counts") {
+        Some(spec) => spec
+            .split(',')
+            .map(|s| s.trim().parse().context("bad --node-counts"))
+            .collect::<Result<_>>()?,
+        None => vec![1, 2, 3, 5, 8, 11]
+            .into_iter()
+            .filter(|&n| n <= cfg.grid.total_nodes())
+            .collect(),
+    };
+    eprintln!("{}", cfg.describe());
+    eprintln!("sweeping nodes: {counts:?}");
+    let sweep = run_node_sweep(&cfg, &counts)?;
+    let serial_gaps = sweep.serial_response_s(System::Gaps);
+    let serial_trad = sweep.serial_response_s(System::Traditional);
+
+    let mut table = Table::new(&[
+        "nodes",
+        "gaps_ms",
+        "trad_ms",
+        "gaps_speedup",
+        "trad_speedup",
+        "gaps_eff",
+        "trad_eff",
+    ]);
+    for p in &sweep.points {
+        table.row(vec![
+            p.nodes.to_string(),
+            format!("{:.1}", p.gaps.response_s * 1e3),
+            format!("{:.1}", p.traditional.response_s * 1e3),
+            format!("{:.2}", p.speedup(serial_gaps, System::Gaps)),
+            format!("{:.2}", p.speedup(serial_trad, System::Traditional)),
+            format!("{:.2}", p.efficiency(serial_gaps, System::Gaps)),
+            format!("{:.2}", p.efficiency(serial_trad, System::Traditional)),
+        ]);
+    }
+    print!("{}", table.render());
+    table.write_csv("sweep");
+    Ok(())
+}
+
+fn cmd_corpus(args: &Args, cfg: GapsConfig) -> Result<()> {
+    let out_dir = args.get("out").unwrap_or("corpus_out");
+    let n = n_nodes(args, &cfg)?;
+    let dep = gaps::coordinator::Deployment::build(&cfg, n)?;
+    std::fs::create_dir_all(out_dir).context("creating --out dir")?;
+    for src in dep.locator.sources() {
+        let shard = dep.shard(src.id).unwrap();
+        let path = std::path::Path::new(out_dir).join(format!("shard_{:04}.jsonl", src.id));
+        shard.save_jsonl(&path)?;
+    }
+    println!(
+        "wrote {} shards ({} docs) to {out_dir}/",
+        dep.locator.len(),
+        dep.locator.total_docs()
+    );
+    Ok(())
+}
+
+fn cmd_info(cfg: GapsConfig) -> Result<()> {
+    println!("{}", cfg.describe());
+    let fabric = gaps::grid::GridFabric::build(&cfg.grid);
+    for vo in &fabric.vos {
+        println!("{}: broker={}", vo.id, vo.broker);
+        for &m in &vo.members {
+            let n = fabric.node(m);
+            println!(
+                "  {} speed={:.2}{}",
+                n.id,
+                n.speed_factor,
+                if n.is_broker { " (broker+CA)" } else { "" }
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,382 @@
+//! Experiment metrics + the node-sweep driver behind Figures 3/4/5.
+//!
+//! The paper evaluates three metrics over a node sweep:
+//!
+//! * **response time** — end-to-end seconds per query (Fig 3);
+//! * **speedup** — `T(serial) / T(n nodes)` (Fig 4);
+//! * **efficiency** — `speedup / n` (Fig 5).
+//!
+//! [`run_node_sweep`] deploys GAPS and the traditional baseline over the
+//! *same* data at each node count, runs the same query mix through both,
+//! and returns one [`SweepPoint`] per node count. The benches print these
+//! as the paper's figure series; examples reuse the same driver.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::baseline::TraditionalSearch;
+use crate::config::GapsConfig;
+use crate::coordinator::{CorpusData, Deployment, GapsSystem};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Measured series for one system at one node count.
+#[derive(Debug, Clone)]
+pub struct SystemPoint {
+    /// Mean response time over the query mix (seconds).
+    pub response_s: f64,
+    /// p50 / p99 response times.
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Mean split of the critical path.
+    pub work_s: f64,
+    pub net_s: f64,
+    pub overhead_s: f64,
+}
+
+/// One sweep point: both systems at `nodes`.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub nodes: usize,
+    pub docs: u64,
+    pub gaps: SystemPoint,
+    pub traditional: SystemPoint,
+}
+
+impl SweepPoint {
+    /// Speedup relative to the provided serial (1-node) response time.
+    pub fn speedup(&self, serial_response_s: f64, system: System) -> f64 {
+        serial_response_s / self.system(system).response_s
+    }
+
+    /// Efficiency = speedup / nodes.
+    pub fn efficiency(&self, serial_response_s: f64, system: System) -> f64 {
+        self.speedup(serial_response_s, system) / self.nodes as f64
+    }
+
+    fn system(&self, s: System) -> &SystemPoint {
+        match s {
+            System::Gaps => &self.gaps,
+            System::Traditional => &self.traditional,
+        }
+    }
+}
+
+/// System selector for metric lookups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    Gaps,
+    Traditional,
+}
+
+/// Complete sweep result.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub points: Vec<SweepPoint>,
+    /// Query mix used at every point (identical across points/systems).
+    pub queries: Vec<String>,
+}
+
+impl Sweep {
+    /// Serial (1-node) reference for speedup, per system. Uses the first
+    /// point if it is a 1-node point, else extrapolates from the smallest.
+    pub fn serial_response_s(&self, system: System) -> f64 {
+        let first = &self.points[0];
+        match system {
+            System::Gaps => first.gaps.response_s * first.nodes as f64,
+            System::Traditional => first.traditional.response_s * first.nodes as f64,
+        }
+    }
+}
+
+/// Sample a deterministic query mix from the corpus topics (plus a couple
+/// of multivariate queries, mirroring the USI's two search types).
+pub fn sample_queries(dep: &Deployment, n: usize, seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut q = dep.generator().sample_query(&mut rng);
+        if i % 5 == 4 {
+            // Every 5th query is multivariate (year-ranged).
+            let lo = 1998 + rng.below(10) as u32;
+            q.push_str(&format!(" year:{lo}..{}", lo + 6));
+        }
+        out.push(q);
+    }
+    out
+}
+
+/// Number of measured passes per point; per-query the *fastest* pass is
+/// kept. The searched work is deterministic, so the minimum is the
+/// noise-free estimate on a busy 1-core host (OS jitter only ever adds
+/// time); fabric costs are accounted, not measured, and identical across
+/// passes.
+const MEASURE_PASSES: usize = 3;
+
+/// Aggregate per-query best timelines into a SystemPoint.
+fn aggregate(best: &[crate::util::clock::TaskTimeline]) -> SystemPoint {
+    let mut resp = Summary::new();
+    let (mut work, mut net, mut overhead) = (Summary::new(), Summary::new(), Summary::new());
+    for t in best {
+        resp.add(t.total_s());
+        work.add(t.work_s);
+        net.add(t.net_s);
+        overhead.add(t.overhead_s);
+    }
+    SystemPoint {
+        response_s: resp.mean(),
+        p50_s: resp.p50(),
+        p99_s: resp.p99(),
+        work_s: work.mean(),
+        net_s: net.mean(),
+        overhead_s: overhead.mean(),
+    }
+}
+
+/// Run the query mix through one GAPS system, collecting stats.
+pub fn measure_gaps(sys: &mut GapsSystem, queries: &[String]) -> Result<SystemPoint> {
+    let mut best = vec![crate::util::clock::TaskTimeline::default(); queries.len()];
+    for pass in 0..MEASURE_PASSES {
+        for (i, q) in queries.iter().enumerate() {
+            let r = sys.search(q)?;
+            if pass == 0 || r.response_s() < best[i].total_s() {
+                best[i] = r.timeline;
+            }
+        }
+    }
+    Ok(aggregate(&best))
+}
+
+/// Run the query mix through the traditional baseline.
+pub fn measure_traditional(sys: &mut TraditionalSearch, queries: &[String]) -> Result<SystemPoint> {
+    let mut best = vec![crate::util::clock::TaskTimeline::default(); queries.len()];
+    for pass in 0..MEASURE_PASSES {
+        for (i, q) in queries.iter().enumerate() {
+            let r = sys.search(q)?;
+            if pass == 0 || r.response_s() < best[i].total_s() {
+                best[i] = r.timeline;
+            }
+        }
+    }
+    Ok(aggregate(&best))
+}
+
+/// The figure driver: sweep `node_counts`, same corpus + query mix, both
+/// systems on identical deployments. GAPS runs one warmup pass so its
+/// perf-history planner has data (the paper's system is long-running).
+pub fn run_node_sweep(cfg: &GapsConfig, node_counts: &[usize]) -> Result<Sweep> {
+    let mut points = Vec::with_capacity(node_counts.len());
+    let mut queries_out = Vec::new();
+    // The analyzed corpus does not depend on node count (sources are
+    // fixed); build it once and re-place it per sweep point.
+    let max_n = node_counts.iter().copied().max().unwrap_or(1);
+    let num_sources = cfg.workload.sub_shards.max(max_n).max(1) as u64;
+    let corpus = Arc::new(CorpusData::build(cfg, num_sources)?);
+    for &n in node_counts {
+        let dep = Arc::new(Deployment::assemble(cfg, n, Arc::clone(&corpus))?);
+        let queries = sample_queries(&dep, cfg.workload.num_queries, cfg.workload.seed ^ 0x51);
+        let mut gaps = GapsSystem::from_deployment(cfg.clone(), Arc::clone(&dep))?;
+        // Warmup (not measured): one full pass per system — populates the
+        // GAPS perf DB and warms every artifact shape / allocator path so
+        // measured passes are stable. Both systems get the same treatment.
+        for q in &queries {
+            gaps.search(q)?;
+        }
+        let gaps_point = measure_gaps(&mut gaps, &queries)?;
+        let mut trad = TraditionalSearch::from_deployment(cfg.clone(), Arc::clone(&dep))?;
+        for q in &queries {
+            trad.search(q)?;
+        }
+        let trad_point = measure_traditional(&mut trad, &queries)?;
+        points.push(SweepPoint {
+            nodes: n,
+            docs: cfg.workload.num_docs,
+            gaps: gaps_point,
+            traditional: trad_point,
+        });
+        queries_out = queries;
+    }
+    Ok(Sweep { points, queries: queries_out })
+}
+
+// ------------------------------------------------------------ sweep cache
+
+impl SystemPoint {
+    fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("response_s", Json::from(self.response_s)),
+            ("p50_s", Json::from(self.p50_s)),
+            ("p99_s", Json::from(self.p99_s)),
+            ("work_s", Json::from(self.work_s)),
+            ("net_s", Json::from(self.net_s)),
+            ("overhead_s", Json::from(self.overhead_s)),
+        ])
+    }
+
+    fn from_json(v: &crate::util::json::Json) -> Option<SystemPoint> {
+        Some(SystemPoint {
+            response_s: v.get("response_s")?.as_f64()?,
+            p50_s: v.get("p50_s")?.as_f64()?,
+            p99_s: v.get("p99_s")?.as_f64()?,
+            work_s: v.get("work_s")?.as_f64()?,
+            net_s: v.get("net_s")?.as_f64()?,
+            overhead_s: v.get("overhead_s")?.as_f64()?,
+        })
+    }
+}
+
+impl Sweep {
+    /// Serialize for the bench-level cache.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("nodes", Json::from(p.nodes)),
+                                ("docs", Json::from(p.docs)),
+                                ("gaps", p.gaps.to_json()),
+                                ("traditional", p.traditional.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("queries", Json::Arr(self.queries.iter().map(|q| Json::str(q.clone())).collect())),
+        ])
+    }
+
+    /// Parse a cached sweep.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<Sweep> {
+        let points = v
+            .get("points")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Some(SweepPoint {
+                    nodes: p.get("nodes")?.as_i64()? as usize,
+                    docs: p.get("docs")?.as_i64()? as u64,
+                    gaps: SystemPoint::from_json(p.get("gaps")?)?,
+                    traditional: SystemPoint::from_json(p.get("traditional")?)?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        let queries = v
+            .get("queries")?
+            .as_arr()?
+            .iter()
+            .map(|q| q.as_str().map(|s| s.to_string()))
+            .collect::<Option<Vec<_>>>()?;
+        Some(Sweep { points, queries })
+    }
+}
+
+/// Run a sweep, caching the result under target/sweep_cache keyed by the
+/// workload signature — the three figure benches share one sweep instead
+/// of re-running identical experiments. Delete target/sweep_cache to
+/// force fresh measurements.
+pub fn cached_node_sweep(cfg: &GapsConfig, node_counts: &[usize]) -> Result<Sweep> {
+    let key = format!(
+        "docs{}_q{}_s{}_shards{}_seed{}_xla{}_counts{}",
+        cfg.workload.num_docs,
+        cfg.workload.num_queries,
+        cfg.workload.seed,
+        cfg.workload.sub_shards,
+        cfg.grid.seed,
+        cfg.search.use_xla,
+        node_counts.iter().map(|n| n.to_string()).collect::<Vec<_>>().join("-"),
+    );
+    let dir = std::path::Path::new("target/sweep_cache");
+    let path = dir.join(format!("{key}.json"));
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Some(sweep) =
+            crate::util::json::Json::parse(&text).ok().and_then(|v| Sweep::from_json(&v))
+        {
+            eprintln!("(using cached sweep {path:?}; delete to re-measure)");
+            return Ok(sweep);
+        }
+    }
+    let sweep = run_node_sweep(cfg, node_counts)?;
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(&path, sweep.to_json().to_string_pretty());
+    Ok(sweep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> GapsConfig {
+        let mut cfg = GapsConfig::default();
+        cfg.workload.num_docs = 400;
+        cfg.workload.num_queries = 4;
+        cfg.workload.sub_shards = 8;
+        cfg.search.use_xla = false;
+        cfg
+    }
+
+    #[test]
+    fn sweep_produces_points_for_each_count() {
+        let sweep = run_node_sweep(&tiny_cfg(), &[1, 2, 4]).unwrap();
+        assert_eq!(sweep.points.len(), 3);
+        assert_eq!(sweep.points[0].nodes, 1);
+        for p in &sweep.points {
+            assert!(p.gaps.response_s > 0.0);
+            assert!(p.traditional.response_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn speedup_and_efficiency_identities() {
+        let sweep = run_node_sweep(&tiny_cfg(), &[1, 4]).unwrap();
+        let serial = sweep.serial_response_s(System::Gaps);
+        let p = &sweep.points[1];
+        let s = p.speedup(serial, System::Gaps);
+        let e = p.efficiency(serial, System::Gaps);
+        assert!((e - s / 4.0).abs() < 1e-12);
+        // 1-node point: speedup == 1 by construction.
+        let p1 = &sweep.points[0];
+        assert!((p1.speedup(serial, System::Gaps) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn query_mix_is_deterministic_and_multivariate() {
+        let cfg = tiny_cfg();
+        let dep = Deployment::build(&cfg, 2).unwrap();
+        let a = sample_queries(&dep, 10, 7);
+        let b = sample_queries(&dep, 10, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|q| q.contains("year:")), "{a:?}");
+        assert!(a.iter().any(|q| !q.contains("year:")));
+    }
+
+    #[test]
+    fn sweep_json_roundtrip() {
+        let sweep = run_node_sweep(&tiny_cfg(), &[1, 2]).unwrap();
+        let parsed = Sweep::from_json(&sweep.to_json()).unwrap();
+        assert_eq!(parsed.points.len(), 2);
+        assert_eq!(parsed.queries, sweep.queries);
+        assert!((parsed.points[1].gaps.response_s - sweep.points[1].gaps.response_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaps_beats_traditional_at_scale() {
+        // The paper's headline: GAPS responds faster than traditional for
+        // multi-node grids. Even this tiny corpus shows it because the
+        // baseline pays cold starts + serial WAN dispatch.
+        let sweep = run_node_sweep(&tiny_cfg(), &[4]).unwrap();
+        let p = &sweep.points[0];
+        assert!(
+            p.gaps.response_s < p.traditional.response_s,
+            "gaps {} !< traditional {}",
+            p.gaps.response_s,
+            p.traditional.response_s
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! Artifact manifest: what the python AOT path shipped.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled ranker variant (shape signature + file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// Query batch capacity.
+    pub q: usize,
+    /// Candidate block capacity.
+    pub d: usize,
+    /// Feature dimension per field.
+    pub f: usize,
+    /// Top-k per block.
+    pub k: usize,
+    /// Number of fields.
+    pub nf: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    /// BM25 k1 baked into the artifacts at lowering time.
+    pub k1: f64,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let k1 = v
+            .req("abi")
+            .and_then(|abi| abi.req("k1"))
+            .ok()
+            .and_then(|x| x.as_f64())
+            .context("manifest abi.k1 missing")?;
+        let arts = v
+            .req("artifacts")
+            .ok()
+            .and_then(|a| a.as_arr().map(|s| s.to_vec()))
+            .context("manifest artifacts missing")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in &arts {
+            let get_usize = |key: &str| -> Result<usize> {
+                a.get(key)
+                    .and_then(|x| x.as_i64())
+                    .filter(|x| *x > 0)
+                    .map(|x| x as usize)
+                    .with_context(|| format!("artifact field '{key}'"))
+            };
+            let name = a
+                .get("name")
+                .and_then(|x| x.as_str())
+                .context("artifact name")?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|x| x.as_str())
+                .context("artifact file")?;
+            artifacts.push(ArtifactSpec {
+                name,
+                file: dir.join(file),
+                q: get_usize("q")?,
+                d: get_usize("d")?,
+                f: get_usize("f")?,
+                k: get_usize("k")?,
+                nf: get_usize("nf")?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { artifacts, k1 })
+    }
+
+    /// Pick the smallest variant that fits `q` queries, `cand` candidates
+    /// and feature dim `f` — smallest D minimizes padding waste, then
+    /// smallest Q.
+    pub fn select(&self, q: usize, cand: usize, f: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.q >= q && a.d >= cand && a.f == f)
+            .min_by_key(|a| (a.d, a.q))
+    }
+
+    /// The largest candidate capacity available for feature dim `f`
+    /// (callers chunk candidate lists to this).
+    pub fn max_block(&self, q: usize, f: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.q >= q && a.f == f)
+            .max_by_key(|a| a.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn sample() -> &'static str {
+        r#"{
+          "abi": {"k1": 1.2, "return_tuple": true},
+          "artifacts": [
+            {"name": "a", "file": "a.hlo.txt", "q": 1, "d": 256, "f": 512, "k": 32, "nf": 4},
+            {"name": "b", "file": "b.hlo.txt", "q": 1, "d": 1024, "f": 512, "k": 32, "nf": 4},
+            {"name": "c", "file": "c.hlo.txt", "q": 8, "d": 256, "f": 512, "k": 32, "nf": 4}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn load_and_select() {
+        let dir = std::env::temp_dir().join("gaps_manifest_test");
+        write_manifest(&dir, sample());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.k1, 1.2);
+        // Fits in the small block.
+        assert_eq!(m.select(1, 100, 512).unwrap().name, "a");
+        // Needs the big block.
+        assert_eq!(m.select(1, 700, 512).unwrap().name, "b");
+        // Batched queries force the q8 variant.
+        assert_eq!(m.select(4, 200, 512).unwrap().name, "c");
+        // Nothing fits.
+        assert!(m.select(1, 5000, 512).is_none());
+        assert!(m.select(1, 10, 999).is_none());
+        // Largest block for chunking.
+        assert_eq!(m.max_block(1, 512).unwrap().d, 1024);
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join("gaps_manifest_bad");
+        write_manifest(&dir, r#"{"abi": {"k1": 1.2}, "artifacts": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, r#"{"artifacts": [{}]}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! The PJRT executor: compile-once, execute-many ranking.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::Manifest;
+use crate::index::{GlobalStats, PackedBlock, Packer, Shard};
+use crate::text::NUM_FIELDS;
+
+/// Ranked output for one query row: (block-local index, score), sorted by
+/// score descending; padding rows already filtered out.
+pub type RankOutput = Vec<(u32, f32)>;
+
+/// Compile-once executor over the artifact set.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// artifact name -> compiled executable.
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Reusable dense packer (§Perf P2: sparse-clear instead of an 8 MB
+    /// zero per ranking call).
+    packer: Packer,
+    /// Executions performed (metrics).
+    executions: u64,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("compiled", &self.compiled.len())
+            .field("executions", &self.executions)
+            .finish()
+    }
+}
+
+impl Executor {
+    /// Create a CPU PJRT client and eagerly compile every artifact in
+    /// `dir` (startup cost, off the request path).
+    pub fn new(dir: &Path) -> Result<Executor> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let mut compiled = HashMap::new();
+        for spec in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("loading {}: {e}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+            compiled.insert(spec.name.clone(), exe);
+        }
+        Ok(Executor { client, manifest, compiled, packer: Packer::new(), executions: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    /// Platform name of the PJRT backend (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pack candidates with the reused internal packer and rank them —
+    /// the Search Service's hot path. Picks the smallest artifact fitting
+    /// the candidate count, packs exactly to its D (sparse-clear reuse),
+    /// and executes.
+    pub fn rank_candidates(
+        &mut self,
+        shard: &Shard,
+        stats: &GlobalStats,
+        candidates: &[u32],
+        qw: &[f32],
+        q_count: usize,
+        field_w: &[f32; NUM_FIELDS],
+        b: f32,
+    ) -> Result<Vec<RankOutput>> {
+        let spec_d = self
+            .manifest
+            .select(q_count, candidates.len(), shard.features)
+            .map(|a| a.d)
+            .with_context(|| {
+                format!("no artifact fits q={q_count} cand={} f={}", candidates.len(), shard.features)
+            })?;
+        // Split borrows: move the packer out while ranking.
+        let mut packer = std::mem::take(&mut self.packer);
+        let result = {
+            let block = packer.pack(shard, stats, candidates, spec_d, b);
+            self.rank(block, qw, q_count, field_w)
+        };
+        self.packer = packer;
+        result
+    }
+
+    /// Rank a packed candidate block for `q_count` queries.
+    ///
+    /// `qw` is row-major `[q_capacity, F]` with `q_capacity >= q_count`
+    /// (unused rows zero). `field_w` are the ABI field weights. Selects
+    /// the smallest artifact variant fitting (q_count, block.d, block.f);
+    /// the block must have been packed to that variant's D — callers use
+    /// [`Manifest::select`]/[`Manifest::max_block`] to size blocks.
+    pub fn rank(
+        &mut self,
+        block: &PackedBlock,
+        qw: &[f32],
+        q_count: usize,
+        field_w: &[f32; NUM_FIELDS],
+    ) -> Result<Vec<RankOutput>> {
+        let spec = self
+            .manifest
+            .select(q_count, block.d, block.f)
+            .with_context(|| {
+                format!("no artifact fits q={q_count} d={} f={}", block.d, block.f)
+            })?
+            .clone();
+        if spec.d != block.d {
+            anyhow::bail!(
+                "block packed to d={} but artifact {} expects d={}",
+                block.d,
+                spec.name,
+                spec.d
+            );
+        }
+        let exe = self.compiled.get(&spec.name).context("artifact not compiled")?;
+
+        // Build input device buffers in ABI order: doc_tf, len_norm,
+        // field_w, qw. NOTE: we deliberately use `buffer_from_host_buffer`
+        // + `execute_b` instead of `execute::<Literal>`: the crate's
+        // literal-based execute `release()`s the device buffers it creates
+        // for the inputs and never frees them (xla_rs.cc `execute`), which
+        // leaks ~8 MB per ranking call. PjRtBuffer has a proper Drop.
+        let device = None;
+        let buf_doc_tf = self
+            .client
+            .buffer_from_host_buffer(&block.doc_tf, &[spec.nf, spec.d, spec.f], device)
+            .map_err(|e| anyhow!("doc_tf transfer: {e}"))?;
+        let buf_len_norm = self
+            .client
+            .buffer_from_host_buffer(&block.len_norm, &[spec.nf, spec.d], device)
+            .map_err(|e| anyhow!("len_norm transfer: {e}"))?;
+        let buf_field_w = self
+            .client
+            .buffer_from_host_buffer(&field_w[..], &[spec.nf], device)
+            .map_err(|e| anyhow!("field_w transfer: {e}"))?;
+        // qw may be sized for fewer rows than the artifact Q: zero-pad.
+        let mut qw_padded;
+        let qw_slice: &[f32] = if qw.len() == spec.q * spec.f {
+            qw
+        } else {
+            anyhow::ensure!(
+                qw.len() >= q_count * spec.f,
+                "qw len {} < q_count {} x f {}",
+                qw.len(),
+                q_count,
+                spec.f
+            );
+            qw_padded = vec![0.0f32; spec.q * spec.f];
+            qw_padded[..q_count * spec.f].copy_from_slice(&qw[..q_count * spec.f]);
+            &qw_padded
+        };
+        let buf_qw = self
+            .client
+            .buffer_from_host_buffer(qw_slice, &[spec.q, spec.f], device)
+            .map_err(|e| anyhow!("qw transfer: {e}"))?;
+
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&[buf_doc_tf, buf_len_norm, buf_field_w, buf_qw])
+            .map_err(|e| anyhow!("executing {}: {e}", spec.name))?;
+        self.executions += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        let (vals, idx) = tuple.to_tuple2().map_err(|e| anyhow!("untupling: {e}"))?;
+        let vals: Vec<f32> = vals.to_vec().map_err(|e| anyhow!("scores: {e}"))?;
+        let idx: Vec<i32> = idx.to_vec().map_err(|e| anyhow!("indices: {e}"))?;
+        anyhow::ensure!(vals.len() == spec.q * spec.k, "bad scores shape");
+        anyhow::ensure!(idx.len() == spec.q * spec.k, "bad indices shape");
+
+        // Unpack per query row; drop padding (idx >= n_real) and zero-score
+        // tail entries that are padding artifacts.
+        let mut out = Vec::with_capacity(q_count);
+        for q in 0..q_count {
+            let mut row = Vec::with_capacity(spec.k);
+            for j in 0..spec.k {
+                let i = idx[q * spec.k + j];
+                let v = vals[q * spec.k + j];
+                if (i as usize) < block.n_real {
+                    row.push((i as u32, v));
+                }
+            }
+            out.push(row);
+        }
+        Ok(out)
+    }
+}
+
+// NOTE: integration coverage for the executor lives in
+// rust/tests/integration_runtime.rs (it needs built artifacts, a PJRT
+// client, and real blocks); there are no artifact-free unit tests here.

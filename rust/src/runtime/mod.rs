@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by the python
+//! compile path and executes them from the rust request path.
+//!
+//! Wiring (see /opt/xla-example/load_hlo and DESIGN.md): HLO *text* ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation` -> `PjRtClient::
+//! cpu().compile` -> `execute`. Artifacts are compiled once at startup
+//! and cached; Python never runs at request time.
+//!
+//! Threading: the `xla` crate's PJRT handles are raw pointers without
+//! Send/Sync, so the executor is owned by the coordinator thread and all
+//! artifact executions are serialized through it. On this 1-core testbed
+//! that costs nothing; node-level parallelism is accounted through the
+//! simulated timelines (DESIGN.md §Substitutions).
+
+mod artifacts;
+mod executor;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+#[allow(unused_imports)]
+pub use executor::{RankOutput, Executor};

@@ -1,0 +1,11 @@
+//! Search layer: the query language (keyword + multivariate), the
+//! pure-rust BM25F scorer (baseline scorer and runtime cross-check), and
+//! the per-node Search Service (the paper's SS grid service).
+
+mod query;
+mod scorer;
+pub mod service;
+
+pub use query::{ParsedQuery, QueryError, RangeFilter};
+pub use scorer::score_block_rust;
+pub use service::{LocalHit, Scorer, SearchOutcome, SearchService};

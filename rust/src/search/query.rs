@@ -1,0 +1,181 @@
+//! Query language: keyword and multivariate search.
+//!
+//! The paper's USI "provides keyword-based and multivariate-based search
+//! types". Grammar:
+//!
+//! ```text
+//! query      := clause+
+//! clause     := word                  free keyword (scored, any field)
+//!             | field ':' word        field-scoped keyword (scored + must
+//!                                     appear in that field)
+//!             | 'year' ':' y ('..' y)?   hard year filter
+//! field      := title | abstract | authors | venue
+//! ```
+//!
+//! Examples: `grid computing`, `title:grid venue:conference`,
+//! `scheduling year:2010..2014`.
+
+use crate::text::{term_feature, terms, Field};
+
+/// Inclusive year range filter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RangeFilter {
+    pub min: u32,
+    pub max: u32,
+}
+
+impl RangeFilter {
+    pub fn contains(&self, y: u32) -> bool {
+        (self.min..=self.max).contains(&y)
+    }
+}
+
+/// Parse failure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryError(pub String);
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "query error: {}", self.0)
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// A parsed, analyzed query ready for retrieval + ranking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedQuery {
+    /// Original query text (for logging / JDF).
+    pub raw: String,
+    /// Scored keyword terms (normalized).
+    pub keywords: Vec<String>,
+    /// Feature buckets of `keywords` in the artifact space.
+    pub buckets: Vec<u32>,
+    /// Field-scoped required terms: (field, normalized term).
+    pub field_terms: Vec<(Field, String)>,
+    /// Optional hard year filter.
+    pub year: Option<RangeFilter>,
+}
+
+impl ParsedQuery {
+    /// Parse + analyze a query string into the `features`-bucket space.
+    pub fn parse(raw: &str, features: usize) -> Result<ParsedQuery, QueryError> {
+        let mut keywords = Vec::new();
+        let mut field_terms = Vec::new();
+        let mut year = None;
+
+        for tok in raw.split_whitespace() {
+            if let Some((head, rest)) = tok.split_once(':') {
+                let head_lc = head.to_ascii_lowercase();
+                if head_lc == "year" {
+                    year = Some(parse_year_filter(rest)?);
+                    continue;
+                }
+                if let Some(field) = Field::parse(&head_lc) {
+                    let normalized = terms(rest);
+                    if normalized.is_empty() {
+                        return Err(QueryError(format!("empty term in '{tok}'")));
+                    }
+                    for t in normalized {
+                        keywords.push(t.clone());
+                        field_terms.push((field, t));
+                    }
+                    continue;
+                }
+                return Err(QueryError(format!("unknown field '{head}' in '{tok}'")));
+            }
+            keywords.extend(terms(tok));
+        }
+
+        if keywords.is_empty() && year.is_none() {
+            return Err(QueryError("query has no searchable terms".into()));
+        }
+        let buckets = keywords.iter().map(|t| term_feature(t, features) as u32).collect();
+        Ok(ParsedQuery { raw: raw.to_string(), keywords, buckets, field_terms, year })
+    }
+
+    /// Whether this query uses multivariate constraints.
+    pub fn is_multivariate(&self) -> bool {
+        !self.field_terms.is_empty() || self.year.is_some()
+    }
+}
+
+fn parse_year_filter(spec: &str) -> Result<RangeFilter, QueryError> {
+    let parse_y = |s: &str| -> Result<u32, QueryError> {
+        s.parse::<u32>().map_err(|_| QueryError(format!("bad year '{s}'")))
+    };
+    if let Some((lo, hi)) = spec.split_once("..") {
+        let (min, max) = (parse_y(lo)?, parse_y(hi)?);
+        if min > max {
+            return Err(QueryError(format!("empty year range {min}..{max}")));
+        }
+        Ok(RangeFilter { min, max })
+    } else {
+        let y = parse_y(spec)?;
+        Ok(RangeFilter { min: y, max: y })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyword_query() {
+        let q = ParsedQuery::parse("grid computing publications", 512).unwrap();
+        assert_eq!(q.keywords, vec!["grid", "comput", "publication"]);
+        assert_eq!(q.buckets.len(), 3);
+        assert!(!q.is_multivariate());
+        assert!(q.year.is_none());
+    }
+
+    #[test]
+    fn field_scoped_terms() {
+        let q = ParsedQuery::parse("title:grid venue:conference", 512).unwrap();
+        assert_eq!(q.field_terms.len(), 2);
+        assert_eq!(q.field_terms[0].0, Field::Title);
+        assert_eq!(q.field_terms[1], (Field::Venue, "conference".to_string()));
+        // Field terms are also scored keywords.
+        assert_eq!(q.keywords.len(), 2);
+        assert!(q.is_multivariate());
+    }
+
+    #[test]
+    fn year_filters() {
+        let q = ParsedQuery::parse("scheduling year:2010..2014", 512).unwrap();
+        assert_eq!(q.year, Some(RangeFilter { min: 2010, max: 2014 }));
+        assert!(q.year.unwrap().contains(2012));
+        assert!(!q.year.unwrap().contains(2009));
+        let q1 = ParsedQuery::parse("x year:2005", 512).unwrap();
+        assert_eq!(q1.year, Some(RangeFilter { min: 2005, max: 2005 }));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(ParsedQuery::parse("", 512).is_err());
+        assert!(ParsedQuery::parse("the of and", 512).is_err()); // all stopwords
+        assert!(ParsedQuery::parse("body:grid", 512).is_err()); // unknown field
+        assert!(ParsedQuery::parse("year:20x4", 512).is_err());
+        assert!(ParsedQuery::parse("year:2014..2010", 512).is_err());
+        assert!(ParsedQuery::parse("title:", 512).is_err());
+    }
+
+    #[test]
+    fn year_only_query_is_valid() {
+        let q = ParsedQuery::parse("year:2014", 512).unwrap();
+        assert!(q.keywords.is_empty());
+        assert!(q.is_multivariate());
+    }
+
+    #[test]
+    fn buckets_in_feature_space() {
+        let q = ParsedQuery::parse("massive academic publications", 128).unwrap();
+        assert!(q.buckets.iter().all(|&b| b < 128));
+    }
+
+    #[test]
+    fn query_terms_normalized_like_documents() {
+        let q = ParsedQuery::parse("Searching PUBLICATIONS", 512).unwrap();
+        assert_eq!(q.keywords, vec!["search", "publication"]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Pure-rust BM25F block scorer.
+//!
+//! Mirrors the Layer-1 Pallas kernel math exactly (see
+//! python/compile/kernels/ref.py for the canonical formulation):
+//!
+//! ```text
+//! ctf[d,t]   = sum_f field_w[f] * doc_tf[f,d,t] * len_norm[f,d]
+//! sat[d,t]   = ctf * (k1+1) / (ctf + k1)
+//! score[q,d] = sum_t qw[q,t] * sat[d,t]
+//! ```
+//!
+//! Three uses: (1) the traditional-search baseline scores through this
+//! path (no grid, no artifacts); (2) `use_xla = false` environments;
+//! (3) integration tests cross-check the PJRT runtime against it — rust
+//! scorer vs AOT artifact must agree to float tolerance.
+
+use crate::index::PackedBlock;
+use crate::text::NUM_FIELDS;
+
+/// Score a packed block against `q_count` query rows of `qw` (row-major
+/// `[q_capacity, F]`, only the first `q_count` rows are scored).
+/// Returns row-major `[q_count, d]` scores.
+pub fn score_block_rust(
+    block: &PackedBlock,
+    qw: &[f32],
+    q_count: usize,
+    field_w: &[f32; NUM_FIELDS],
+    k1: f32,
+) -> Vec<f32> {
+    let (d, f) = (block.d, block.f);
+    assert!(qw.len() >= q_count * f, "qw too small");
+    let mut scores = vec![0.0f32; q_count * d];
+    // sat tile reused across queries: compute once per doc row.
+    let mut sat = vec![0.0f32; f];
+    for row in 0..d {
+        // ctf for this doc row.
+        sat.iter_mut().for_each(|x| *x = 0.0);
+        for fi in 0..NUM_FIELDS {
+            let ln = block.len_norm[fi * d + row];
+            if ln == 0.0 {
+                continue;
+            }
+            let w = field_w[fi] * ln;
+            let base = fi * d * f + row * f;
+            let tf_row = &block.doc_tf[base..base + f];
+            for (s, &tf) in sat.iter_mut().zip(tf_row) {
+                *s += w * tf;
+            }
+        }
+        // Saturate in place.
+        for s in sat.iter_mut() {
+            let ctf = *s;
+            *s = ctf * (k1 + 1.0) / (ctf + k1);
+        }
+        // Dot with each query row.
+        for q in 0..q_count {
+            let qrow = &qw[q * f..(q + 1) * f];
+            let mut acc = 0.0f32;
+            for (a, b) in qrow.iter().zip(sat.iter()) {
+                acc += a * b;
+            }
+            scores[q * d + row] = acc;
+        }
+    }
+    scores
+}
+
+/// Exact top-k over one query's score row: (index, score) sorted by score
+/// descending, ties by index ascending. Skips padding rows >= `n_real`.
+pub fn topk_row(scores: &[f32], n_real: usize, k: usize) -> Vec<(u32, f32)> {
+    let mut idx: Vec<u32> = (0..n_real.min(scores.len()) as u32).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.into_iter().map(|i| (i, scores[i as usize])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusGenerator, CorpusSpec};
+    use crate::index::{build_query_weights, pack_block, Shard, ShardStats};
+
+    fn setup(n: u64, features: usize) -> (Shard, crate::index::GlobalStats) {
+        let spec = CorpusSpec { num_docs: n, vocab_size: 400, ..CorpusSpec::default() };
+        let gen = CorpusGenerator::new(spec);
+        let shard = Shard::build(0, gen.generate_range(0, n), features);
+        let mut acc = ShardStats::empty(features);
+        acc.merge(&shard.stats);
+        (shard, acc.finalize())
+    }
+
+    #[test]
+    fn padding_scores_zero() {
+        let (shard, stats) = setup(8, 64);
+        let block = pack_block(&shard, &stats, &[0, 1], 4, 0.75);
+        let qw = build_query_weights(&[vec![1, 2, 3]], &stats, 64, 1);
+        let scores = score_block_rust(&block, &qw, 1, &[2.0, 1.0, 1.5, 0.5], 1.2);
+        assert_eq!(scores.len(), 4);
+        assert_eq!(scores[2], 0.0);
+        assert_eq!(scores[3], 0.0);
+    }
+
+    #[test]
+    fn matching_doc_outscores_nonmatching() {
+        let (shard, stats) = setup(16, 128);
+        // Query = title terms of doc 3: doc 3 must be among top scorers.
+        let doc3_buckets: Vec<u32> =
+            shard.docs[3].field_tf[0].iter().map(|(b, _)| *b).collect();
+        let cands: Vec<u32> = (0..16).collect();
+        let block = pack_block(&shard, &stats, &cands, 16, 0.75);
+        let qw = build_query_weights(&[doc3_buckets], &stats, 128, 1);
+        let scores = score_block_rust(&block, &qw, 1, &[2.0, 1.0, 1.5, 0.5], 1.2);
+        let top = topk_row(&scores, 16, 1);
+        assert!(scores[3] > 0.0);
+        // doc 3 should rank at or near the top (others can share terms).
+        let rank = topk_row(&scores, 16, 16)
+            .iter()
+            .position(|&(i, _)| i == 3)
+            .unwrap();
+        assert!(rank <= 2, "doc3 ranked {rank}, top was {top:?}");
+    }
+
+    #[test]
+    fn scores_bounded_by_saturation() {
+        let (shard, stats) = setup(8, 64);
+        let cands: Vec<u32> = (0..8).collect();
+        let block = pack_block(&shard, &stats, &cands, 8, 0.75);
+        let buckets = vec![1u32, 5, 9];
+        let qw = build_query_weights(&[buckets.clone()], &stats, 64, 1);
+        let k1 = 1.2f32;
+        let scores = score_block_rust(&block, &qw, 1, &[1.0; 4], k1);
+        let qw_sum: f32 = qw[..64].iter().sum();
+        for &s in &scores {
+            assert!(s >= 0.0 && s <= (k1 + 1.0) * qw_sum + 1e-4);
+        }
+    }
+
+    #[test]
+    fn multi_query_rows_independent() {
+        let (shard, stats) = setup(8, 64);
+        let cands: Vec<u32> = (0..8).collect();
+        let block = pack_block(&shard, &stats, &cands, 8, 0.75);
+        let q1 = vec![3u32];
+        let q2 = vec![7u32, 9];
+        let qw_both = build_query_weights(&[q1.clone(), q2.clone()], &stats, 64, 2);
+        let both = score_block_rust(&block, &qw_both, 2, &[1.0; 4], 1.2);
+        let qw1 = build_query_weights(&[q1], &stats, 64, 1);
+        let solo1 = score_block_rust(&block, &qw1, 1, &[1.0; 4], 1.2);
+        let qw2 = build_query_weights(&[q2], &stats, 64, 1);
+        let solo2 = score_block_rust(&block, &qw2, 1, &[1.0; 4], 1.2);
+        assert_eq!(&both[..8], &solo1[..]);
+        assert_eq!(&both[8..], &solo2[..]);
+    }
+
+    #[test]
+    fn topk_row_orders_and_breaks_ties_by_index() {
+        let scores = [1.0f32, 3.0, 3.0, 0.5, 2.0];
+        let top = topk_row(&scores, 5, 3);
+        assert_eq!(top, vec![(1, 3.0), (2, 3.0), (4, 2.0)]);
+        // n_real cuts off the tail.
+        let top2 = topk_row(&scores, 2, 3);
+        assert_eq!(top2, vec![(1, 3.0), (0, 1.0)]);
+    }
+
+    #[test]
+    fn zero_query_gives_zero_scores() {
+        let (shard, stats) = setup(4, 64);
+        let block = pack_block(&shard, &stats, &[0, 1, 2, 3], 4, 0.75);
+        let qw = vec![0.0f32; 64];
+        let scores = score_block_rust(&block, &qw, 1, &[1.0; 4], 1.2);
+        assert!(scores.iter().all(|&s| s == 0.0));
+    }
+}

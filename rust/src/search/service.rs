@@ -1,0 +1,310 @@
+//! Search Service (SS): the per-node grid service that executes one search
+//! job against its local shard.
+//!
+//! Paper: "The local Search Service module was a Java program installed in
+//! each worker node ... responsible for performing the search process in
+//! the local dataset." Here it is a rust service with a two-phase local
+//! search:
+//!
+//! 1. **retrieve** — inverted-index OR-probe over the query buckets,
+//!    producing up to `max_candidates` candidates (+ multivariate
+//!    filtering: field-scoped terms and year ranges);
+//! 2. **rank** — candidates are packed into dense blocks and scored by the
+//!    AOT artifact on the PJRT runtime ([`Scorer::Xla`]) or the pure-rust
+//!    fallback ([`Scorer::Rust`], also the traditional baseline's path).
+//!
+//! The returned [`SearchOutcome`] carries measured work time; fabric
+//! overheads are added by the coordinator (they belong to the grid, not
+//! the service).
+
+use crate::config::SearchConfig;
+use crate::index::{build_query_weights, pack_block, GlobalStats, Shard};
+#[allow(unused_imports)]
+use crate::runtime::Executor;
+use crate::util::clock::WallClock;
+
+use super::query::ParsedQuery;
+use super::scorer::{score_block_rust, topk_row};
+
+/// One hit from a local shard: corpus-global doc id + BM25F score.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LocalHit {
+    pub global_id: u64,
+    pub score: f32,
+}
+
+/// Result of one local search job.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// Top hits (sorted by score descending), at most `top_k`.
+    pub hits: Vec<LocalHit>,
+    /// Candidates retrieved before ranking.
+    pub candidates: usize,
+    /// Documents in the shard (for scan-rate metrics).
+    pub shard_docs: usize,
+    /// Measured wall time of the local work (seconds).
+    pub work_s: f64,
+}
+
+/// Scoring backend handed to the service by the coordinator.
+pub enum Scorer<'a> {
+    /// AOT artifact through the PJRT runtime (the production path).
+    Xla(&'a mut Executor),
+    /// Pure-rust scorer (baseline path / no-artifact environments).
+    Rust,
+}
+
+/// The Search Service. Stateless between jobs apart from the shard it
+/// serves (deployed once per node; see `grid::ServiceContainer`).
+#[derive(Debug)]
+pub struct SearchService {
+    /// Search/scoring parameters (shared ABI constants).
+    cfg: SearchConfig,
+}
+
+impl SearchService {
+    pub fn new(cfg: SearchConfig) -> Self {
+        SearchService { cfg }
+    }
+
+    pub fn config(&self) -> &SearchConfig {
+        &self.cfg
+    }
+
+    /// Execute one search job against `shard`.
+    pub fn search(
+        &self,
+        shard: &Shard,
+        stats: &GlobalStats,
+        query: &ParsedQuery,
+        scorer: &mut Scorer<'_>,
+    ) -> anyhow::Result<SearchOutcome> {
+        let clock = WallClock::start();
+        let cfg = &self.cfg;
+
+        // ---- Phase 1: retrieval ------------------------------------
+        let mut candidates: Vec<u32> = if query.buckets.is_empty() {
+            // Pure-filter query (e.g. `year:2014`): all docs are candidates.
+            (0..shard.len() as u32).collect()
+        } else {
+            shard
+                .inverted
+                .retrieve(&query.buckets, cfg.max_candidates)
+                .into_iter()
+                .map(|(id, _)| id)
+                .collect()
+        };
+
+        // Multivariate filters.
+        if let Some(range) = query.year {
+            candidates.retain(|&lid| range.contains(shard.pubs[lid as usize].year));
+        }
+        for (field, term) in &query.field_terms {
+            let bucket = crate::text::term_feature(term, cfg.features) as u32;
+            candidates.retain(|&lid| {
+                shard.docs[lid as usize].field_tf[*field as usize]
+                    .iter()
+                    .any(|(b, _)| *b == bucket)
+            });
+        }
+        candidates.truncate(cfg.max_candidates);
+
+        let retrieved = candidates.len();
+        if retrieved == 0 {
+            return Ok(SearchOutcome {
+                hits: Vec::new(),
+                candidates: 0,
+                shard_docs: shard.len(),
+                work_s: clock.elapsed_s(),
+            });
+        }
+
+        // ---- Phase 2: ranking ---------------------------------------
+        let queries = vec![query.buckets.clone()];
+        let mut all_hits: Vec<LocalHit> = Vec::new();
+
+        match scorer {
+            Scorer::Xla(exec) => {
+                // Chunk candidates to the largest artifact block; each
+                // chunk is packed by the executor's reused packer
+                // (§Perf P2) into the smallest variant that fits.
+                let max_d = exec
+                    .manifest()
+                    .max_block(1, cfg.features)
+                    .map(|a| a.d)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("no artifact for F={}", cfg.features)
+                    })?;
+                let qw = build_query_weights(&queries, stats, cfg.features, 1);
+                for chunk in candidates.chunks(max_d) {
+                    let ranked = exec.rank_candidates(
+                        shard,
+                        stats,
+                        chunk,
+                        &qw,
+                        1,
+                        &cfg.field_weights,
+                        cfg.b,
+                    )?;
+                    for &(local_idx, score) in &ranked[0] {
+                        all_hits.push(LocalHit {
+                            global_id: shard.docs[chunk[local_idx as usize] as usize].global_id,
+                            score,
+                        });
+                    }
+                }
+            }
+            Scorer::Rust => {
+                let qw = build_query_weights(&queries, stats, cfg.features, 1);
+                // One exact-size block (no padding needed off the ABI path).
+                let block = pack_block(shard, stats, &candidates, candidates.len(), cfg.b);
+                let scores =
+                    score_block_rust(&block, &qw, 1, &cfg.field_weights, k1_const());
+                for (local_idx, score) in topk_row(&scores, block.n_real, cfg.top_k) {
+                    all_hits.push(LocalHit {
+                        global_id: shard.docs[candidates[local_idx as usize] as usize].global_id,
+                        score,
+                    });
+                }
+            }
+        }
+
+        // Local top-k across chunks.
+        all_hits.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap()
+                .then(a.global_id.cmp(&b.global_id))
+        });
+        all_hits.truncate(cfg.top_k);
+
+        Ok(SearchOutcome {
+            hits: all_hits,
+            candidates: retrieved,
+            shard_docs: shard.len(),
+            work_s: clock.elapsed_s(),
+        })
+    }
+}
+
+/// BM25 k1 shared with the artifacts (python/compile/model.py DEFAULT_K1).
+pub const fn k1_const() -> f32 {
+    1.2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchConfig;
+    use crate::corpus::{CorpusGenerator, CorpusSpec};
+    use crate::index::{Shard, ShardStats};
+
+    fn setup(n: u64) -> (Shard, GlobalStats, SearchService) {
+        let spec = CorpusSpec { num_docs: n, vocab_size: 400, ..CorpusSpec::default() };
+        let gen = CorpusGenerator::new(spec);
+        let shard = Shard::build(0, gen.generate_range(0, n), 512);
+        let mut acc = ShardStats::empty(512);
+        acc.merge(&shard.stats);
+        let cfg = SearchConfig { use_xla: false, ..SearchConfig::default() };
+        (shard, acc.finalize(), SearchService::new(cfg))
+    }
+
+    /// A query built from an existing doc's title (guaranteed hits).
+    fn title_query(shard: &Shard, local: usize) -> ParsedQuery {
+        let title = shard.pubs[local].title.clone();
+        ParsedQuery::parse(&title, 512).unwrap()
+    }
+
+    #[test]
+    fn finds_the_source_document() {
+        let (shard, stats, ss) = setup(60);
+        let q = title_query(&shard, 17);
+        let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
+        assert!(out.candidates > 0);
+        assert!(!out.hits.is_empty());
+        assert!(
+            out.hits.iter().any(|h| h.global_id == 17),
+            "doc 17 missing from {:?}",
+            out.hits
+        );
+        // Scores sorted descending.
+        for w in out.hits.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        assert!(out.work_s > 0.0);
+    }
+
+    #[test]
+    fn respects_top_k() {
+        let (shard, stats, _) = setup(80);
+        let mut cfg = SearchConfig { use_xla: false, ..SearchConfig::default() };
+        cfg.top_k = 3;
+        let ss = SearchService::new(cfg);
+        let q = ParsedQuery::parse("grid data search distributed", 512).unwrap();
+        let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
+        assert!(out.hits.len() <= 3);
+    }
+
+    #[test]
+    fn year_filter_is_hard() {
+        let (shard, stats, ss) = setup(80);
+        let year = shard.pubs[5].year;
+        let raw = format!("{} year:{year}", shard.pubs[5].title);
+        let q = ParsedQuery::parse(&raw, 512).unwrap();
+        let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
+        for h in &out.hits {
+            assert_eq!(shard.pubs[h.global_id as usize].year, year);
+        }
+        assert!(out.hits.iter().any(|h| h.global_id == 5));
+    }
+
+    #[test]
+    fn year_only_query_scans_shard() {
+        let (shard, stats, ss) = setup(50);
+        let q = ParsedQuery::parse("year:2000..2014", 512).unwrap();
+        let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
+        // All hits satisfy the filter; scores are 0 (no keywords).
+        for h in &out.hits {
+            assert!((2000..=2014).contains(&shard.pubs[h.global_id as usize].year));
+        }
+    }
+
+    #[test]
+    fn field_scoped_term_filters() {
+        let (shard, stats, ss) = setup(80);
+        // Scope to the venue of doc 3.
+        let venue_word = shard.pubs[3]
+            .venue
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .to_string();
+        let q = ParsedQuery::parse(&format!("venue:{venue_word}"), 512).unwrap();
+        let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
+        let stemmed = crate::text::tokenize(&venue_word)[0].term.clone();
+        for h in &out.hits {
+            let venue_terms: Vec<String> = crate::text::tokenize(
+                &shard.pubs[h.global_id as usize].venue,
+            )
+            .into_iter()
+            .map(|t| t.term)
+            .collect();
+            assert!(
+                venue_terms.contains(&stemmed),
+                "hit {} venue {:?} lacks {stemmed:?}",
+                h.global_id,
+                venue_terms
+            );
+        }
+    }
+
+    #[test]
+    fn no_match_query_returns_empty() {
+        let (shard, stats, ss) = setup(30);
+        let q = ParsedQuery::parse("qqqqzzzz xxxyyy", 512).unwrap();
+        let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
+        // Terms may collide into occupied buckets, but usually empty:
+        // at minimum the call must succeed and respect top_k.
+        assert!(out.hits.len() <= ss.config().top_k);
+    }
+}

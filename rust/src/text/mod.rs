@@ -1,0 +1,76 @@
+//! Text pipeline: tokenization, normalization, stopwords, and the hashing
+//! vectorizer that maps terms into the fixed feature space shared with the
+//! Layer-1/Layer-2 scoring artifacts.
+//!
+//! The paper's data sources are files (XML/HTML article metadata), "not in
+//! the form of database management system", searched by keyword; this
+//! module is the analysis chain both the inverted index (retrieval) and
+//! the dense packer (ranking) run over publication fields.
+
+mod tokenizer;
+mod vectorizer;
+
+pub use tokenizer::{terms, tokenize, Token, STOPWORDS};
+pub use vectorizer::{fnv1a, term_feature, HashingVectorizer};
+
+/// Publication fields, in the exact order of the artifact ABI
+/// (python/compile/model.py FIELDS). Index with `Field as usize`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Field {
+    Title = 0,
+    Abstract = 1,
+    Authors = 2,
+    Venue = 3,
+}
+
+/// Number of fields in the ABI.
+pub const NUM_FIELDS: usize = 4;
+
+/// All fields in ABI order.
+pub const FIELDS: [Field; NUM_FIELDS] =
+    [Field::Title, Field::Abstract, Field::Authors, Field::Venue];
+
+impl Field {
+    pub fn name(self) -> &'static str {
+        match self {
+            Field::Title => "title",
+            Field::Abstract => "abstract",
+            Field::Authors => "authors",
+            Field::Venue => "venue",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Field> {
+        match s.to_ascii_lowercase().as_str() {
+            "title" => Some(Field::Title),
+            "abstract" => Some(Field::Abstract),
+            "authors" | "author" => Some(Field::Authors),
+            "venue" => Some(Field::Venue),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_order_matches_abi() {
+        // python/compile/model.py: FIELDS = ("title","abstract","authors","venue")
+        assert_eq!(FIELDS[0].name(), "title");
+        assert_eq!(FIELDS[1].name(), "abstract");
+        assert_eq!(FIELDS[2].name(), "authors");
+        assert_eq!(FIELDS[3].name(), "venue");
+        assert_eq!(Field::Venue as usize, 3);
+    }
+
+    #[test]
+    fn field_parse_roundtrip() {
+        for f in FIELDS {
+            assert_eq!(Field::parse(f.name()), Some(f));
+        }
+        assert_eq!(Field::parse("author"), Some(Field::Authors));
+        assert_eq!(Field::parse("body"), None);
+    }
+}

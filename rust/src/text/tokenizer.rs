@@ -1,0 +1,161 @@
+//! Tokenizer + normalization + stopword filtering.
+//!
+//! Deliberately simple (the paper's search is keyword matching over
+//! article metadata): Unicode-aware lowercase, alphanumeric token spans,
+//! a small English stopword list, and a light suffix stemmer ("s"/"es"/
+//! "ing"/"ed" stripping with guards) so query and document forms agree.
+
+/// A normalized token with its source byte span.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub term: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// English stopwords (top function words; enough for metadata search).
+pub const STOPWORDS: &[&str] = &[
+    "a", "an", "and", "are", "as", "at", "be", "by", "for", "from", "has", "have", "in",
+    "is", "it", "its", "of", "on", "or", "that", "the", "their", "this", "to", "was",
+    "were", "which", "with",
+];
+
+fn is_stopword(term: &str) -> bool {
+    STOPWORDS.binary_search(&term).is_ok()
+}
+
+/// Light suffix stemmer: plural/participle stripping with length guards.
+/// Applied identically to documents and queries, so exactness matters less
+/// than consistency.
+fn stem(term: &str) -> String {
+    let t = term;
+    let strip = |s: &str, suffix: &str, min_stem: usize| -> Option<String> {
+        s.strip_suffix(suffix).and_then(|stem| {
+            (stem.len() >= min_stem).then(|| stem.to_string())
+        })
+    };
+    if let Some(s) = strip(t, "ing", 4) {
+        return s;
+    }
+    if let Some(s) = strip(t, "ies", 3).map(|s| s + "y") {
+        return s;
+    }
+    if let Some(s) = strip(t, "es", 3) {
+        // guard: "techniques" -> "techniqu"? prefer plain "s" strip when the
+        // base ends with a vowel+consonant; keep simple: only strip "es"
+        // after sibilants (s, x, z, ch-ish).
+        if s.ends_with('s') || s.ends_with('x') || s.ends_with('z') || s.ends_with('h') {
+            return s;
+        }
+    }
+    if t.len() >= 4 && t.ends_with('s') && !t.ends_with("ss") && !t.ends_with("us") {
+        return t[..t.len() - 1].to_string();
+    }
+    if let Some(s) = strip(t, "ed", 4) {
+        return s;
+    }
+    t.to_string()
+}
+
+/// Tokenize: lowercase alphanumeric spans, stopwords removed, stemmed.
+/// Numbers are kept verbatim (years matter for multivariate search).
+pub fn tokenize(text: &str) -> Vec<Token> {
+    let mut out = Vec::new();
+    let mut start: Option<usize> = None;
+    let push = |s: usize, e: usize, out: &mut Vec<Token>, text: &str| {
+        let raw: String = text[s..e].to_lowercase();
+        if raw.is_empty() || is_stopword(&raw) {
+            return;
+        }
+        let term = if raw.chars().all(|c| c.is_ascii_digit()) { raw } else { stem(&raw) };
+        if !term.is_empty() && !is_stopword(&term) {
+            out.push(Token { term, start: s, end: e });
+        }
+    };
+    for (i, c) in text.char_indices() {
+        if c.is_alphanumeric() {
+            if start.is_none() {
+                start = Some(i);
+            }
+        } else if let Some(s) = start.take() {
+            push(s, i, &mut out, text);
+        }
+    }
+    if let Some(s) = start {
+        push(s, text.len(), &mut out, text);
+    }
+    out
+}
+
+/// Convenience: just the terms.
+pub fn terms(text: &str) -> Vec<String> {
+    tokenize(text).into_iter().map(|t| t.term).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwords_sorted_for_binary_search() {
+        let mut sorted = STOPWORDS.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, STOPWORDS, "STOPWORDS must stay sorted");
+    }
+
+    #[test]
+    fn basic_tokenization() {
+        let toks = terms("Grid-based Search Technique for Massive Academic Publications");
+        assert_eq!(
+            toks,
+            vec!["grid", "based", "search", "technique", "massive", "academic", "publication"]
+        );
+    }
+
+    #[test]
+    fn stopwords_removed() {
+        assert_eq!(terms("the cat and the hat"), vec!["cat", "hat"]);
+        assert!(terms("the of and").is_empty());
+    }
+
+    #[test]
+    fn numbers_kept_verbatim() {
+        assert_eq!(terms("published in 2014"), vec!["publish", "2014"]);
+    }
+
+    #[test]
+    fn spans_point_into_source() {
+        let text = "Grid computing!";
+        let toks = tokenize(text);
+        assert_eq!(&text[toks[0].start..toks[0].end], "Grid");
+        assert_eq!(&text[toks[1].start..toks[1].end], "computing");
+    }
+
+    #[test]
+    fn unicode_does_not_panic_and_lowercases() {
+        let toks = terms("Łukasz studies Sökmotor");
+        assert!(toks.contains(&"łukasz".to_string()));
+        assert!(toks.iter().any(|t| t.starts_with("sökmotor") || t.starts_with("sökmot")));
+    }
+
+    #[test]
+    fn stemming_conflates_query_and_doc_forms() {
+        // The invariant the index relies on: same stem for variants.
+        assert_eq!(terms("searching")[0], terms("search")[0]);
+        assert_eq!(terms("publications")[0], terms("publication")[0]);
+        assert_eq!(terms("queries")[0], terms("query")[0]);
+    }
+
+    #[test]
+    fn short_words_not_overstemmed() {
+        assert_eq!(terms("gas")[0], "gas"); // not "ga"
+        assert_eq!(terms("class")[0], "class"); // ss guard
+        assert_eq!(terms("corpus")[0], "corpus"); // "us" guard
+    }
+
+    #[test]
+    fn empty_and_punctuation_only() {
+        assert!(terms("").is_empty());
+        assert!(terms("--- !!! ...").is_empty());
+    }
+}

@@ -1,0 +1,130 @@
+//! Hashing vectorizer: terms -> fixed feature space.
+//!
+//! The Layer-1/Layer-2 artifacts score over a fixed `[NF, D, F]` feature
+//! space (F hashed buckets per field). This module owns the term->bucket
+//! mapping (FNV-1a, stable across rust and experiment runs) and builds the
+//! per-field dense term-frequency rows the Search Service packs into
+//! candidate blocks.
+
+use super::tokenizer::terms;
+
+/// FNV-1a 64-bit hash of a term (stable, dependency-free).
+pub fn fnv1a(term: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in term.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Feature bucket of a term in a space of `f` buckets.
+pub fn term_feature(term: &str, f: usize) -> usize {
+    (fnv1a(term) % f as u64) as usize
+}
+
+/// Hashing vectorizer over a fixed number of buckets.
+#[derive(Debug, Clone)]
+pub struct HashingVectorizer {
+    /// Number of feature buckets (the artifact F dimension).
+    pub features: usize,
+}
+
+impl HashingVectorizer {
+    pub fn new(features: usize) -> Self {
+        assert!(features > 0);
+        HashingVectorizer { features }
+    }
+
+    /// Dense term-frequency vector of a text (counts per bucket).
+    pub fn tf_dense(&self, text: &str) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.features];
+        for t in terms(text) {
+            v[term_feature(&t, self.features)] += 1.0;
+        }
+        v
+    }
+
+    /// Sparse (bucket, count) pairs — what the doc store persists; the
+    /// packer scatters these into block tiles on the request path.
+    pub fn tf_sparse(&self, text: &str) -> Vec<(u32, f32)> {
+        let mut v = self.tf_dense(text);
+        let mut out = Vec::new();
+        for (i, c) in v.drain(..).enumerate() {
+            if c > 0.0 {
+                out.push((i as u32, c));
+            }
+        }
+        out
+    }
+
+    /// Token count of a text after normalization (the BM25 field length).
+    pub fn field_len(&self, text: &str) -> f32 {
+        terms(text).len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable() {
+        // Regression-pin known FNV-1a 64 values so the feature mapping
+        // never silently changes (it is part of the artifact ABI contract).
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a("grid"), fnv1a("grid"));
+        assert_ne!(fnv1a("grid"), fnv1a("grids"));
+    }
+
+    #[test]
+    fn buckets_in_range() {
+        let f = 512;
+        for w in ["grid", "search", "academic", "publication", "2014"] {
+            assert!(term_feature(w, f) < f);
+        }
+    }
+
+    #[test]
+    fn tf_dense_counts_terms() {
+        let v = HashingVectorizer::new(128);
+        let tf = v.tf_dense("grid grid search");
+        let g = term_feature("grid", 128);
+        let s = term_feature("search", 128);
+        assert_eq!(tf[g], 2.0);
+        assert_eq!(tf[s], 1.0);
+        assert_eq!(tf.iter().sum::<f32>(), 3.0);
+    }
+
+    #[test]
+    fn sparse_matches_dense() {
+        let v = HashingVectorizer::new(64);
+        let text = "massive academic publications distributed over grid nodes";
+        let dense = v.tf_dense(text);
+        let sparse = v.tf_sparse(text);
+        let mut rebuilt = vec![0.0f32; 64];
+        for (i, c) in sparse {
+            rebuilt[i as usize] = c;
+        }
+        assert_eq!(dense, rebuilt);
+    }
+
+    #[test]
+    fn field_len_counts_kept_tokens() {
+        let v = HashingVectorizer::new(64);
+        assert_eq!(v.field_len("the grid and the search"), 2.0);
+        assert_eq!(v.field_len(""), 0.0);
+    }
+
+    #[test]
+    fn query_and_doc_share_buckets() {
+        // Core retrieval invariant: a query term hashes to the same bucket
+        // as the document term it should match.
+        let f = 512;
+        let doc_terms = terms("Searching massive publications");
+        let query_terms = terms("search publication");
+        assert_eq!(term_feature(&doc_terms[0], f), term_feature(&query_terms[0], f));
+        assert_eq!(term_feature(&doc_terms[2], f), term_feature(&query_terms[1], f));
+    }
+}

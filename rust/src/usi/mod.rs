@@ -1,0 +1,206 @@
+//! User Search Interface (USI).
+//!
+//! Paper §III.4: "an interaction mechanism proposed to provide the end
+//! user access point to deal with the system ... provides keyword-based
+//! and multivariate-based search types ... the USI overhead is very small
+//! as compared with the response time."
+//!
+//! Two modes: one-shot (`format_response`) used by the `gaps search`
+//! subcommand and examples, and an interactive REPL (`repl`) for the
+//! `gaps repl` subcommand. The USI layer is deliberately thin — its cost
+//! is measured by `benches/usi_overhead.rs` to validate the paper's
+//! overhead claim.
+
+use std::io::{BufRead, Write};
+
+use crate::coordinator::{GapsSystem, SearchResponse};
+use crate::util::clock::WallClock;
+
+/// Render a search response the way the USI displays it.
+pub fn format_response(resp: &SearchResponse) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "query: {:?}  ({} jobs, {} candidates, {} docs scanned)\n",
+        resp.query, resp.jobs, resp.candidates, resp.docs_scanned
+    ));
+    out.push_str(&format!(
+        "response time: {:.2} ms  (work {:.2} + net {:.2} + overhead {:.2})\n",
+        resp.response_s() * 1e3,
+        resp.timeline.work_s * 1e3,
+        resp.timeline.net_s * 1e3,
+        resp.timeline.overhead_s * 1e3,
+    ));
+    if resp.hits.is_empty() {
+        out.push_str("no results.\n");
+    }
+    for (rank, hit) in resp.hits.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>3}. [{:>8.3}] #{:<8} {}\n",
+            rank + 1,
+            hit.score,
+            hit.global_id,
+            hit.title
+        ));
+    }
+    out
+}
+
+/// USI timing envelope: interface work (parse/format) vs grid time.
+#[derive(Debug, Clone, Copy)]
+pub struct UsiTiming {
+    /// Seconds spent inside the USI layer itself.
+    pub interface_s: f64,
+    /// Seconds the grid spent answering.
+    pub grid_s: f64,
+}
+
+impl UsiTiming {
+    /// The paper's claim, made checkable: interface share of total.
+    pub fn interface_fraction(&self) -> f64 {
+        self.interface_s / (self.interface_s + self.grid_s).max(1e-12)
+    }
+}
+
+/// One-shot query through the USI with the overhead split measured.
+pub fn one_shot(sys: &mut GapsSystem, query: &str) -> anyhow::Result<(String, UsiTiming)> {
+    let iface = WallClock::start();
+    let trimmed = query.trim().to_string(); // input handling
+    let pre_s = iface.elapsed_s();
+
+    let resp = sys.search(&trimmed)?;
+    let grid_s = resp.response_s();
+
+    let fmt_clock = WallClock::start();
+    let rendered = format_response(&resp);
+    let interface_s = pre_s + fmt_clock.elapsed_s();
+    Ok((rendered, UsiTiming { interface_s, grid_s }))
+}
+
+/// Interactive REPL over stdin/stdout (the `gaps repl` subcommand).
+/// Commands: a query per line; `:quit` exits; `:fail <node>` / `:recover
+/// <node>` exercise grid dynamicity; `:stats` shows the job table.
+pub fn repl(
+    sys: &mut GapsSystem,
+    input: impl BufRead,
+    mut output: impl Write,
+) -> anyhow::Result<()> {
+    writeln!(output, "GAPS USI — type a query, :help for commands")?;
+    for line in input.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(cmd) = line.strip_prefix(':') {
+            let mut parts = cmd.split_whitespace();
+            match parts.next() {
+                Some("quit") | Some("q") => break,
+                Some("help") => {
+                    writeln!(
+                        output,
+                        ":quit  :stats  :fail <node#>  :recover <node#>  — anything else is a query"
+                    )?;
+                }
+                Some("stats") => {
+                    writeln!(
+                        output,
+                        "jobs total={} completed={}",
+                        sys.query_manager().total_jobs(),
+                        sys.query_manager().completed_jobs()
+                    )?;
+                }
+                Some("fail") => match parts.next().and_then(|s| s.parse::<u32>().ok()) {
+                    Some(n) => {
+                        sys.fail_node(crate::grid::NodeId(n));
+                        writeln!(output, "node{n} marked down")?;
+                    }
+                    None => writeln!(output, "usage: :fail <node#>")?,
+                },
+                Some("recover") => match parts.next().and_then(|s| s.parse::<u32>().ok()) {
+                    Some(n) => {
+                        sys.recover_node(crate::grid::NodeId(n));
+                        writeln!(output, "node{n} recovered")?;
+                    }
+                    None => writeln!(output, "usage: :recover <node#>")?,
+                },
+                _ => writeln!(output, "unknown command; :help")?,
+            }
+            continue;
+        }
+        match one_shot(sys, line) {
+            Ok((rendered, timing)) => {
+                write!(output, "{rendered}")?;
+                writeln!(
+                    output,
+                    "usi overhead: {:.3} ms ({:.2}% of total)",
+                    timing.interface_s * 1e3,
+                    timing.interface_fraction() * 100.0
+                )?;
+            }
+            Err(e) => writeln!(output, "error: {e}")?,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GapsConfig;
+
+    fn system() -> GapsSystem {
+        let mut cfg = GapsConfig::default();
+        cfg.workload.num_docs = 400;
+        cfg.workload.sub_shards = 8;
+        cfg.search.use_xla = false;
+        GapsSystem::deploy(cfg, 3).unwrap()
+    }
+
+    #[test]
+    fn one_shot_renders_hits_and_timing() {
+        let mut sys = system();
+        let title = sys.deployment().publication(7).unwrap().title.clone();
+        let (rendered, timing) = one_shot(&mut sys, &title).unwrap();
+        assert!(rendered.contains("response time"));
+        assert!(rendered.contains("#7") || rendered.contains(" 7 "), "{rendered}");
+        assert!(timing.grid_s > 0.0);
+        // The paper's USI claim: interface is a small share.
+        assert!(timing.interface_fraction() < 0.5, "{timing:?}");
+    }
+
+    #[test]
+    fn format_handles_empty_results() {
+        let resp = SearchResponse {
+            query: "x".into(),
+            hits: vec![],
+            timeline: Default::default(),
+            jobs: 0,
+            candidates: 0,
+            docs_scanned: 0,
+        };
+        assert!(format_response(&resp).contains("no results"));
+    }
+
+    #[test]
+    fn repl_runs_queries_and_commands() {
+        let mut sys = system();
+        let input = ":help\ngrid computing\n:stats\n:fail 1\n:recover 1\n:bogus\n:quit\n";
+        let mut out = Vec::new();
+        repl(&mut sys, std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("response time"));
+        assert!(text.contains("jobs total="));
+        assert!(text.contains("node1 marked down"));
+        assert!(text.contains("node1 recovered"));
+        assert!(text.contains("unknown command"));
+    }
+
+    #[test]
+    fn repl_reports_query_errors() {
+        let mut sys = system();
+        let input = "the of and\n:quit\n";
+        let mut out = Vec::new();
+        repl(&mut sys, std::io::Cursor::new(input), &mut out).unwrap();
+        assert!(String::from_utf8(out).unwrap().contains("error:"));
+    }
+}

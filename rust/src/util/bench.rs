@@ -1,0 +1,221 @@
+//! Criterion-less micro/macro benchmark harness.
+//!
+//! The offline crate set has no criterion, so `cargo bench` targets link
+//! this harness instead (`harness = false` in Cargo.toml). It provides
+//! warmup, a fixed-iteration or fixed-duration measurement loop, and
+//! mean/p50/p99 reporting, plus a small table printer the figure benches
+//! use to emit the same rows the paper's figures plot. Benches also write
+//! CSV series next to the binary (target/bench_csv/) for replotting.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One measured series: name -> samples (seconds).
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub iterations: usize,
+}
+
+impl BenchResult {
+    pub fn report_line(&mut self) -> String {
+        format!(
+            "{:<44} iters={:<5} mean={:>10.4}ms p50={:>10.4}ms p99={:>10.4}ms",
+            self.name,
+            self.iterations,
+            self.summary.mean() * 1e3,
+            self.summary.p50() * 1e3,
+            self.summary.p99() * 1e3,
+        )
+    }
+}
+
+/// Benchmark runner with warmup + measurement phases.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: usize,
+    max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(500),
+            min_iters: 3,
+            max_iters: 100_000,
+        }
+    }
+
+    pub fn with_measure(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    pub fn with_min_iters(mut self, n: usize) -> Self {
+        self.min_iters = n;
+        self
+    }
+
+    /// Measure `f` (each call is one iteration).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w = Instant::now();
+        while w.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut summary = Summary::new();
+        let started = Instant::now();
+        let mut iters = 0usize;
+        while (started.elapsed() < self.measure || iters < self.min_iters)
+            && iters < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            summary.add(t.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        BenchResult { name: name.to_string(), summary, iterations: iters }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for paper-figure rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering for replotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV into target/bench_csv/<name>.csv (best effort).
+    pub fn write_csv(&self, name: &str) {
+        let dir = std::path::Path::new("target/bench_csv");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{name}.csv")), self.to_csv());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_something() {
+        let b = Bencher::quick().with_measure(Duration::from_millis(30));
+        let mut r = b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(r.iterations >= 3);
+        assert!(r.summary.mean() >= 0.0);
+        assert!(r.report_line().contains("noop"));
+    }
+
+    #[test]
+    fn bencher_ordering_sane() {
+        let b = Bencher::quick().with_measure(Duration::from_millis(50));
+        // A multiply-chain: LLVM cannot closed-form it (unlike a plain
+        // range sum, which release builds reduce to n*(n-1)/2).
+        fn spin(n: u64) -> u64 {
+            let mut x = 0u64;
+            for i in 0..n {
+                x = x.wrapping_mul(31).wrapping_add(i);
+            }
+            x
+        }
+        let mut fast = b.run("fast", || {
+            black_box(spin(black_box(10)));
+        });
+        let mut slow = b.run("slow", || {
+            black_box(spin(black_box(100_000)));
+        });
+        assert!(slow.summary.p50() > fast.summary.p50());
+    }
+
+    #[test]
+    fn table_renders_and_csv() {
+        let mut t = Table::new(&["nodes", "gaps_ms", "trad_ms"]);
+        t.row(vec!["2".into(), "100.0".into(), "155.0".into()]);
+        t.row(vec!["11".into(), "60.0".into(), "104.0".into()]);
+        let text = t.render();
+        assert!(text.contains("nodes"));
+        assert!(text.lines().count() == 4);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), "nodes,gaps_ms,trad_ms");
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

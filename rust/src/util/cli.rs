@@ -1,0 +1,168 @@
+//! Flag-style CLI argument parser (clap is not in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated flags,
+//! positional arguments and subcommands. Used by the `gaps` binary, the
+//! examples and the bench harness, all of which share one grammar:
+//!
+//! ```text
+//! gaps <subcommand> [--flag] [--key value]... [positional]...
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, flags and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token, if declared as a subcommand grammar.
+    pub subcommand: Option<String>,
+    /// --key value / --key=value pairs; repeated keys keep all values.
+    flags: BTreeMap<String, Vec<String>>,
+    /// Bare positionals (after subcommand).
+    pub positionals: Vec<String>,
+}
+
+/// Parse error with the offending token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw tokens. `with_subcommand` makes the first bare token the
+    /// subcommand; boolean flags are those listed in `bool_flags`
+    /// (they consume no value).
+    pub fn parse(
+        tokens: &[String],
+        with_subcommand: bool,
+        bool_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` separator: rest are positionals.
+                    args.positionals.extend(tokens[i + 1..].iter().cloned());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if bool_flags.contains(&body) {
+                    args.flags.entry(body.to_string()).or_default().push("true".into());
+                } else {
+                    let v = tokens
+                        .get(i + 1)
+                        .ok_or_else(|| CliError(format!("--{body} expects a value")))?;
+                    if v.starts_with("--") {
+                        return Err(CliError(format!("--{body} expects a value")));
+                    }
+                    args.flags.entry(body.to_string()).or_default().push(v.clone());
+                    i += 1;
+                }
+            } else if with_subcommand && args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env(with_subcommand: bool, bool_flags: &[&str]) -> Result<Args, CliError> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&tokens, with_subcommand, bool_flags)
+    }
+
+    /// Last value of a flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeated flag.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Typed lookup with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: cannot parse {s:?}"))),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_flags_positionals() {
+        let a = Args::parse(
+            &toks("search --nodes 8 --vos=3 grid computing --verbose"),
+            true,
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.get("nodes"), Some("8"));
+        assert_eq!(a.get("vos"), Some("3"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positionals, vec!["grid", "computing"]);
+    }
+
+    #[test]
+    fn typed_parse_and_defaults() {
+        let a = Args::parse(&toks("--nodes 8"), false, &[]).unwrap();
+        assert_eq!(a.get_parse("nodes", 1usize).unwrap(), 8);
+        assert_eq!(a.get_parse("missing", 5usize).unwrap(), 5);
+        let bad = Args::parse(&toks("--nodes eight"), false, &[]).unwrap();
+        assert!(bad.get_parse("nodes", 1usize).is_err());
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = Args::parse(&toks("--field title --field abstract"), false, &[]).unwrap();
+        assert_eq!(a.get_all("field"), &["title", "abstract"]);
+        assert_eq!(a.get("field"), Some("abstract")); // last wins
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&toks("--nodes"), false, &[]).is_err());
+        assert!(Args::parse(&toks("--nodes --other 3"), false, &[]).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_flag_parsing() {
+        let a = Args::parse(&toks("query -- --not-a-flag"), true, &[]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("query"));
+        assert_eq!(a.positionals, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&toks("--k=v=w"), false, &[]).unwrap();
+        assert_eq!(a.get("k"), Some("v=w"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Clocks and timers.
+//!
+//! The grid fabric is simulated in-process, but the *work* (tokenizing,
+//! index probes, XLA execution) is real; experiment timing therefore mixes
+//! two time sources:
+//!
+//! * [`WallClock`] — monotonic real time, used for all measured work.
+//! * [`SimClock`] — a logical clock used by the network model to account
+//!   for transfer/launch delays the simulated fabric would add (the paper's
+//!   testbed paid real Globus/GridFTP latencies; we account for them
+//!   explicitly so they are visible and tunable rather than implicit).
+//!
+//! A [`TaskTimeline`] combines both: real measured durations plus simulated
+//! delay components, which is what the metrics layer reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic wall-clock timer.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn start() -> Self {
+        WallClock { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since `start()`.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Microseconds elapsed since `start()`.
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+/// Thread-safe logical clock, microsecond resolution. Advancing is
+/// monotonic; independent components may account delays concurrently.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    now_us: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { now_us: AtomicU64::new(0) }
+    }
+
+    /// Current simulated time in microseconds.
+    pub fn now_us(&self) -> u64 {
+        self.now_us.load(Ordering::Relaxed)
+    }
+
+    /// Advance by `us` and return the new time.
+    pub fn advance_us(&self, us: u64) -> u64 {
+        self.now_us.fetch_add(us, Ordering::Relaxed) + us
+    }
+
+    /// Move the clock forward to at least `t_us` (no-op if already past).
+    pub fn advance_to_us(&self, t_us: u64) {
+        self.now_us.fetch_max(t_us, Ordering::Relaxed);
+    }
+}
+
+/// Per-task time accounting: real measured work plus simulated fabric
+/// delays, kept separate so benches can report both and their sum.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TaskTimeline {
+    /// Real, measured compute time (seconds).
+    pub work_s: f64,
+    /// Simulated network transfer time (seconds).
+    pub net_s: f64,
+    /// Simulated job launch / service overhead (seconds).
+    pub overhead_s: f64,
+}
+
+impl TaskTimeline {
+    pub fn total_s(&self) -> f64 {
+        self.work_s + self.net_s + self.overhead_s
+    }
+
+    /// Element-wise accumulate (for sequential phases on one node).
+    pub fn add(&mut self, other: TaskTimeline) {
+        self.work_s += other.work_s;
+        self.net_s += other.net_s;
+        self.overhead_s += other.overhead_s;
+    }
+
+    /// Max-combine (for parallel branches joined by a barrier): the
+    /// response time of a fan-out is the slowest branch.
+    pub fn max(self, other: TaskTimeline) -> TaskTimeline {
+        if self.total_s() >= other.total_s() {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_monotonic() {
+        let c = WallClock::start();
+        let a = c.elapsed_s();
+        let b = c.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn sim_clock_advances() {
+        let c = SimClock::new();
+        assert_eq!(c.now_us(), 0);
+        assert_eq!(c.advance_us(10), 10);
+        assert_eq!(c.advance_us(5), 15);
+        c.advance_to_us(12); // behind current: no-op
+        assert_eq!(c.now_us(), 15);
+        c.advance_to_us(100);
+        assert_eq!(c.now_us(), 100);
+    }
+
+    #[test]
+    fn timeline_add_and_total() {
+        let mut t = TaskTimeline { work_s: 1.0, net_s: 0.5, overhead_s: 0.1 };
+        t.add(TaskTimeline { work_s: 0.5, net_s: 0.5, overhead_s: 0.0 });
+        assert!((t.total_s() - 2.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_max_picks_slowest_branch() {
+        let fast = TaskTimeline { work_s: 0.1, net_s: 0.0, overhead_s: 0.0 };
+        let slow = TaskTimeline { work_s: 0.0, net_s: 0.5, overhead_s: 0.0 };
+        assert_eq!(fast.max(slow), slow);
+        assert_eq!(slow.max(fast), slow);
+    }
+}

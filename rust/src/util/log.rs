@@ -1,0 +1,146 @@
+//! Tiny leveled logger with per-component tags.
+//!
+//! The grid services (QEE, QM, SS, brokers) tag every line with their
+//! component id, which is how the paper-era Globus logs looked and makes
+//! multi-"node" traces readable. Controlled by `GAPS_LOG` env var
+//! (error|warn|info|debug|trace) or programmatically via [`set_level`].
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static SINK: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+fn current_level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return v;
+    }
+    let from_env = std::env::var("GAPS_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Warn) as u8;
+    LEVEL.store(from_env, Ordering::Relaxed);
+    from_env
+}
+
+/// Set the global log level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Route log lines into an in-memory buffer (for tests); returns captured
+/// lines when called with `false` after capturing.
+pub fn capture(enable: bool) -> Vec<String> {
+    let mut sink = SINK.lock().unwrap();
+    if enable {
+        *sink = Some(Vec::new());
+        Vec::new()
+    } else {
+        sink.take().unwrap_or_default()
+    }
+}
+
+/// Emit a log line if `level` is enabled.
+pub fn log(level: Level, component: &str, msg: std::fmt::Arguments<'_>) {
+    if (level as u8) > current_level() {
+        return;
+    }
+    let line = format!("[{:5}] [{}] {}", level.as_str(), component, msg);
+    let mut sink = SINK.lock().unwrap();
+    if let Some(buf) = sink.as_mut() {
+        buf.push(line);
+    } else {
+        let stderr = std::io::stderr();
+        let _ = writeln!(stderr.lock(), "{line}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, $component,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $component,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $component,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $component,
+                               format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::parse("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn capture_and_filter() {
+        let _ = capture(true);
+        set_level(Level::Info);
+        log(Level::Info, "qee", format_args!("plan ready jobs={}", 3));
+        log(Level::Debug, "qee", format_args!("hidden"));
+        let lines = capture(false);
+        set_level(Level::Warn);
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("[qee] plan ready jobs=3"), "{lines:?}");
+    }
+}

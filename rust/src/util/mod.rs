@@ -1,0 +1,12 @@
+//! Infrastructure substrates (offline build: no serde/clap/tokio/criterion
+//! in the vendored crate set, so GAPS carries its own minimal versions).
+
+pub mod bench;
+pub mod cli;
+pub mod clock;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,262 @@
+//! "gridpool" — the thread-pool substrate the simulated grid runs on.
+//!
+//! Each simulated grid node owns a long-lived worker thread (the analogue
+//! of the paper's always-resident globus container: services are loaded
+//! once and reused across queries, never cold-started per job). The pool
+//! is a plain Mutex<VecDeque> + Condvar job queue; no tokio in the
+//! offline vendored crate set, and the paper's concurrency pattern —
+//! fan out search jobs, join on a barrier — maps directly onto this.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<QueueState>,
+    signal: Condvar,
+}
+
+struct QueueState {
+    pending: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Fixed-size worker pool with FIFO job dispatch.
+pub struct Pool {
+    queue: Arc<Queue>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn `n` resident workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "pool needs at least one worker");
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(QueueState { pending: VecDeque::new(), shutdown: false }),
+            signal: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                thread::Builder::new()
+                    .name(format!("gridpool-{i}"))
+                    .spawn(move || worker_loop(q))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { queue, workers }
+    }
+
+    /// Number of resident workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job for any worker.
+    pub fn submit<F>(&self, job: F)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let mut state = self.queue.jobs.lock().unwrap();
+        assert!(!state.shutdown, "submit after shutdown");
+        state.pending.push_back(Box::new(job));
+        drop(state);
+        self.queue.signal.notify_one();
+    }
+
+    /// Submit a closure and get a handle to its result.
+    pub fn submit_with_result<F, T>(&self, job: F) -> JobHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        self.submit(move || {
+            // Receiver may have been dropped; that's fine.
+            let _ = tx.send(job());
+        });
+        JobHandle { rx }
+    }
+
+    /// Run `f` over all items on the pool and collect results in order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles: Vec<JobHandle<R>> = items
+            .into_iter()
+            .map(|item| {
+                let f = Arc::clone(&f);
+                self.submit_with_result(move || f(item))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut state = self.queue.jobs.lock().unwrap();
+            state.shutdown = true;
+        }
+        self.queue.signal.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    loop {
+        let job = {
+            let mut state = q.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = state.pending.pop_front() {
+                    break job;
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = q.signal.wait(state).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+/// Handle to a submitted job's result.
+pub struct JobHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job completes. Panics if the job panicked.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("worker dropped result (job panicked?)")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_join(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Scoped parallel map without a resident pool (std::thread::scope):
+/// used where task-local borrows make the 'static pool inconvenient.
+pub fn par_map_scoped<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    let mut results: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let chunk = items.len().div_ceil(threads);
+    if chunk == 0 {
+        return Vec::new();
+    }
+    thread::scope(|s| {
+        for (chunk_items, chunk_results) in
+            items.chunks(chunk).zip(results.chunks_mut(chunk))
+        {
+            s.spawn(|| {
+                for (item, slot) in chunk_items.iter().zip(chunk_results.iter_mut()) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("scoped job finished")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..64)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit_with_result(move || c.fetch_add(1, Ordering::SeqCst))
+            })
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = Pool::new(3);
+        let out = pool.map((0..100).collect::<Vec<usize>>(), |x| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        let pool = Pool::new(2);
+        for round in 0..10 {
+            let out = pool.map(vec![round; 8], |x| x + 1);
+            assert_eq!(out, vec![round + 1; 8]);
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = Pool::new(2);
+            for _ in 0..16 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop waits for queue drain because shutdown only stops
+            // workers once pending is empty.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn scoped_map_matches_serial() {
+        let items: Vec<u64> = (0..57).collect();
+        let out = par_map_scoped(&items, 4, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_empty_and_single() {
+        let empty: Vec<u64> = vec![];
+        assert!(par_map_scoped(&empty, 4, |x| *x).is_empty());
+        assert_eq!(par_map_scoped(&[7u64], 4, |x| *x + 1), vec![8]);
+    }
+
+    #[test]
+    fn try_join_eventually_ready() {
+        let pool = Pool::new(1);
+        let h = pool.submit_with_result(|| 42);
+        let mut val = None;
+        for _ in 0..1000 {
+            if let Some(v) = h.try_join() {
+                val = Some(v);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(val, Some(42));
+    }
+}

@@ -1,0 +1,181 @@
+//! Property-testing helper (proptest is not in the offline crate set).
+//!
+//! `check` runs a property over N generated cases; on failure it performs
+//! a bounded greedy shrink by re-generating from derived seeds with a
+//! "size" knob that shrinks toward minimal cases, then reports the seed so
+//! the failure is reproducible (`GAPS_PROP_SEED=<seed>` re-runs one case).
+//!
+//! Generators are plain closures `Fn(&mut Rng, usize /*size*/) -> T`, so
+//! domain modules define generators next to their types (see
+//! rust/tests/prop_invariants.rs).
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Max generation size; cases sweep sizes 1..=max_size cyclically.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("GAPS_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 100, seed, max_size: 40 }
+    }
+}
+
+/// Outcome of a single case.
+pub enum CaseResult {
+    Pass,
+    /// Failure with a human-readable description of the case.
+    Fail(String),
+}
+
+impl From<bool> for CaseResult {
+    fn from(ok: bool) -> Self {
+        if ok {
+            CaseResult::Pass
+        } else {
+            CaseResult::Fail("property returned false".into())
+        }
+    }
+}
+
+impl From<Result<(), String>> for CaseResult {
+    fn from(r: Result<(), String>) -> Self {
+        match r {
+            Ok(()) => CaseResult::Pass,
+            Err(e) => CaseResult::Fail(e),
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with the seed and
+/// smallest failing size on failure.
+pub fn check<T, G, P, R>(name: &str, cfg: &Config, generate: G, prop: P)
+where
+    G: Fn(&mut Rng, usize) -> T,
+    P: Fn(&T) -> R,
+    R: Into<CaseResult>,
+    T: std::fmt::Debug,
+{
+    let mut failure: Option<(u64, usize, String)> = None;
+    'outer: for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 1 + (case % cfg.max_size);
+        let mut rng = Rng::new(case_seed);
+        let input = generate(&mut rng, size);
+        if let CaseResult::Fail(msg) = prop(&input).into() {
+            // Greedy shrink: try smaller sizes with the same seed.
+            let mut best = (case_seed, size, msg);
+            for s in 1..size {
+                let mut rng = Rng::new(case_seed);
+                let input = generate(&mut rng, s);
+                if let CaseResult::Fail(msg2) = prop(&input).into() {
+                    best = (case_seed, s, msg2);
+                    break;
+                }
+            }
+            failure = Some(best);
+            break 'outer;
+        }
+    }
+    if let Some((seed, size, msg)) = failure {
+        let mut rng = Rng::new(seed);
+        let input = generate(&mut rng, size);
+        panic!(
+            "property '{name}' failed (seed={seed}, size={size}):\n  {msg}\n  input: {input:?}\n  \
+             reproduce with GAPS_PROP_SEED={seed}"
+        );
+    }
+}
+
+// ------------------------------------------------------ common generators
+
+/// Vec of f64 in [lo, hi) with length in [0, size].
+pub fn gen_f64_vec(rng: &mut Rng, size: usize, lo: f64, hi: f64) -> Vec<f64> {
+    let n = rng.range(0, size + 1);
+    (0..n).map(|_| rng.range_f64(lo, hi)).collect()
+}
+
+/// Vec of usize below `bound` with length in [0, size].
+pub fn gen_usize_vec(rng: &mut Rng, size: usize, bound: usize) -> Vec<usize> {
+    let n = rng.range(0, size + 1);
+    (0..n).map(|_| rng.range(0, bound.max(1))).collect()
+}
+
+/// Lowercase ASCII word of length 1..=8.
+pub fn gen_word(rng: &mut Rng) -> String {
+    let n = rng.range(1, 9);
+    (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+/// Whitespace-joined text of up to `size` words.
+pub fn gen_text(rng: &mut Rng, size: usize) -> String {
+    let n = rng.range(0, size + 1);
+    (0..n).map(|_| gen_word(rng)).collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let cfg = Config { cases: 50, seed: 1, max_size: 20 };
+        check("sum-commutes", &cfg, |rng, size| gen_f64_vec(rng, size, 0.0, 1.0), |xs| {
+            let fwd: f64 = xs.iter().sum();
+            let rev: f64 = xs.iter().rev().sum();
+            (fwd - rev).abs() < 1e-9
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-small'")]
+    fn failing_property_panics_with_seed() {
+        let cfg = Config { cases: 200, seed: 2, max_size: 30 };
+        check(
+            "always-small",
+            &cfg,
+            |rng, size| gen_usize_vec(rng, size, 1000),
+            |xs| xs.len() < 5, // false for size >= 5 eventually
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Rng::new(3);
+        for size in 1..30 {
+            let v = gen_f64_vec(&mut rng, size, -2.0, 3.0);
+            assert!(v.len() <= size);
+            assert!(v.iter().all(|x| (-2.0..3.0).contains(x)));
+            let u = gen_usize_vec(&mut rng, size, 7);
+            assert!(u.iter().all(|&x| x < 7));
+            let w = gen_word(&mut rng);
+            assert!((1..=8).contains(&w.len()));
+            assert!(w.chars().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+
+    #[test]
+    fn shrink_reports_smaller_case() {
+        // Catch the panic and confirm the reported size is minimal-ish.
+        let res = std::panic::catch_unwind(|| {
+            let cfg = Config { cases: 100, seed: 4, max_size: 40 };
+            check(
+                "len-lt-3",
+                &cfg,
+                |rng, size| gen_usize_vec(rng, size, 10),
+                |xs| xs.len() < 3,
+            );
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("seed="), "{msg}");
+    }
+}

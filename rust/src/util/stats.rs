@@ -1,0 +1,206 @@
+//! Summary statistics and histograms for the metrics / bench layers.
+
+/// Online summary of a stream of samples plus exact percentiles
+/// (keeps all samples; experiment scales here are small enough).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.samples.iter().map(|x| (x - m) * (x - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    /// Exact percentile by nearest-rank (p in [0, 100]).
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let n = self.samples.len();
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+        self.samples[rank.min(n) - 1]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced), cheap to merge.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [base * 2^i, base * 2^(i+1)) seconds
+    buckets: Vec<u64>,
+    base_s: f64,
+    count: u64,
+    sum_s: f64,
+}
+
+impl LatencyHistogram {
+    /// `base_s` is the lower bound of bucket 0; 32 octaves above it.
+    pub fn new(base_s: f64) -> Self {
+        LatencyHistogram { buckets: vec![0; 32], base_s, count: 0, sum_s: 0.0 }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        let idx = if seconds <= self.base_s {
+            0
+        } else {
+            ((seconds / self.base_s).log2().floor() as usize).min(self.buckets.len() - 1)
+        };
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_s += seconds;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    /// Upper edge of the bucket containing the p-th percentile sample.
+    pub fn percentile_upper_bound_s(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.base_s * 2f64.powi(i as i32 + 1);
+            }
+        }
+        self.base_s * 2f64.powi(self.buckets.len() as i32)
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.base_s, other.base_s, "histogram bases differ");
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.stddev() - 1.2909944487).abs() < 1e-6);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.p99(), 99.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.percentile(1.0), 1.0);
+    }
+
+    #[test]
+    fn summary_empty_is_nan() {
+        let mut s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn histogram_counts_and_bounds() {
+        let mut h = LatencyHistogram::new(1e-4);
+        for _ in 0..90 {
+            h.record(1e-3); // bucket ~3
+        }
+        for _ in 0..10 {
+            h.record(1.0); // much slower tail
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_upper_bound_s(50.0);
+        let p99 = h.percentile_upper_bound_s(99.0);
+        assert!(p50 < 0.01, "p50={p50}");
+        assert!(p99 >= 1.0, "p99={p99}");
+        assert!((h.mean_s() - (90.0 * 1e-3 + 10.0) / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new(1e-4);
+        let mut b = LatencyHistogram::new(1e-4);
+        a.record(0.001);
+        b.record(0.002);
+        b.record(0.004);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+    }
+}

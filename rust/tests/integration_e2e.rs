@@ -1,0 +1,88 @@
+//! End-to-end integration over the REAL production path: GAPS with the
+//! PJRT/XLA scoring backend (the AOT artifacts), compared against the
+//! rust-scorer configuration. Requires `make artifacts`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::{Deployment, GapsSystem};
+use gaps::metrics::sample_queries;
+
+fn artifact_cfg(docs: u64) -> Option<GapsConfig> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = docs;
+    cfg.workload.num_queries = 4;
+    cfg.workload.sub_shards = 8;
+    cfg.search.use_xla = true;
+    Some(cfg)
+}
+
+#[test]
+fn xla_backend_answers_queries() {
+    let Some(cfg) = artifact_cfg(600) else { return };
+    let mut sys = GapsSystem::deploy(cfg, 4).unwrap();
+    let title = sys.deployment().publication(42).unwrap().title.clone();
+    let resp = sys.search(&title).unwrap();
+    assert!(resp.hits.iter().any(|h| h.global_id == 42));
+    assert!(resp.response_s() > 0.0);
+}
+
+#[test]
+fn xla_and_rust_backends_return_identical_rankings() {
+    let Some(cfg) = artifact_cfg(800) else { return };
+    let dep = Arc::new(Deployment::build(&cfg, 4).unwrap());
+
+    let mut xla_sys = GapsSystem::from_deployment(cfg.clone(), Arc::clone(&dep)).unwrap();
+    let mut rust_cfg = cfg.clone();
+    rust_cfg.search.use_xla = false;
+    let mut rust_sys = GapsSystem::from_deployment(rust_cfg, Arc::clone(&dep)).unwrap();
+
+    for q in sample_queries(&dep, 6, 2024) {
+        let x = xla_sys.search(&q).unwrap();
+        let r = rust_sys.search(&q).unwrap();
+        assert_eq!(
+            x.hits.iter().map(|h| h.global_id).collect::<Vec<_>>(),
+            r.hits.iter().map(|h| h.global_id).collect::<Vec<_>>(),
+            "backend divergence on {q:?}"
+        );
+        for (hx, hr) in x.hits.iter().zip(&r.hits) {
+            assert!(
+                (hx.score - hr.score).abs() < 1e-3 * hr.score.abs().max(1.0),
+                "score drift on {q:?}: {} vs {}",
+                hx.score,
+                hr.score
+            );
+        }
+    }
+}
+
+#[test]
+fn failure_recovery_works_on_xla_path() {
+    let Some(cfg) = artifact_cfg(600) else { return };
+    let mut sys = GapsSystem::deploy(cfg, 6).unwrap();
+    let victim = sys.deployment().active[1];
+    sys.fail_node(victim);
+    let title = sys.deployment().publication(100).unwrap().title.clone();
+    let resp = sys.search(&title).unwrap();
+    assert!(resp.hits.iter().any(|h| h.global_id == 100));
+    assert_eq!(resp.docs_scanned, 600);
+}
+
+#[test]
+fn usi_one_shot_over_xla() {
+    let Some(cfg) = artifact_cfg(500) else { return };
+    let mut sys = GapsSystem::deploy(cfg, 3).unwrap();
+    let (rendered, timing) = gaps::usi::one_shot(&mut sys, "grid distributed search").unwrap();
+    assert!(rendered.contains("response time"));
+    // Paper §III.4: USI overhead is very small vs response time.
+    assert!(
+        timing.interface_fraction() < 0.2,
+        "USI overhead {:.1}% too large",
+        timing.interface_fraction() * 100.0
+    );
+}

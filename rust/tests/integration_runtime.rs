@@ -1,0 +1,167 @@
+//! Runtime integration: the AOT HLO artifacts must load, compile, execute
+//! and agree with the pure-rust scorer (which mirrors the python oracle).
+//!
+//! Requires `make artifacts` (skips with a clear message otherwise — CI
+//! runs the Makefile `test` target, which builds them first).
+
+use std::path::Path;
+
+use gaps::corpus::{CorpusGenerator, CorpusSpec};
+use gaps::index::{build_query_weights, pack_block, GlobalStats, Shard, ShardStats};
+use gaps::runtime::{Executor, Manifest};
+use gaps::search::score_block_rust;
+use gaps::text::NUM_FIELDS;
+
+const FIELD_W: [f32; NUM_FIELDS] = [2.0, 1.0, 1.5, 0.5];
+const K1: f32 = 1.2;
+
+fn artifact_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn setup(n: u64, features: usize) -> (Shard, GlobalStats) {
+    let spec = CorpusSpec { num_docs: n, vocab_size: 600, ..CorpusSpec::default() };
+    let gen = CorpusGenerator::new(spec);
+    let shard = Shard::build(0, gen.generate_range(0, n), features);
+    let mut acc = ShardStats::empty(features);
+    acc.merge(&shard.stats);
+    (shard, acc.finalize())
+}
+
+#[test]
+fn manifest_lists_expected_variants() {
+    let Some(dir) = artifact_dir() else { return };
+    let m = Manifest::load(dir).unwrap();
+    assert!(m.artifacts.len() >= 4, "expected >=4 variants");
+    assert!((m.k1 - 1.2).abs() < 1e-9);
+    // The standard shapes exist.
+    assert!(m.select(1, 200, 512).is_some());
+    assert!(m.select(8, 1000, 512).is_some());
+}
+
+#[test]
+fn executor_compiles_all_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let exec = Executor::new(dir).unwrap();
+    assert!(!exec.platform().is_empty());
+    assert_eq!(exec.executions(), 0);
+}
+
+#[test]
+fn xla_scores_match_rust_scorer() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut exec = Executor::new(dir).unwrap();
+    let (shard, stats) = setup(300, 512);
+
+    // Query from document 12's title: real overlap guaranteed.
+    let q = gaps::search::ParsedQuery::parse(&shard.pubs[12].title, 512).unwrap();
+    let candidates: Vec<u32> = (0..256).collect();
+    let block = pack_block(&shard, &stats, &candidates, 256, 0.75);
+    let qw = build_query_weights(&[q.buckets.clone()], &stats, 512, 1);
+
+    let xla = exec.rank(&block, &qw, 1, &FIELD_W).unwrap();
+    assert_eq!(exec.executions(), 1);
+    let rust_scores = score_block_rust(&block, &qw, 1, &FIELD_W, K1);
+
+    // Every XLA hit must carry the same score the rust scorer computes.
+    assert!(!xla[0].is_empty(), "no hits for a guaranteed-overlap query");
+    for &(idx, score) in &xla[0] {
+        let want = rust_scores[idx as usize];
+        assert!(
+            (score - want).abs() < 1e-3 * want.abs().max(1.0),
+            "idx {idx}: xla {score} vs rust {want}"
+        );
+    }
+    // And the top XLA hit is the rust argmax.
+    let rust_top = rust_scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(xla[0][0].0 as usize, rust_top);
+}
+
+#[test]
+fn padding_never_appears_in_results() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut exec = Executor::new(dir).unwrap();
+    let (shard, stats) = setup(80, 512);
+    // Only 5 real candidates in a 256-capacity block.
+    let candidates: Vec<u32> = (0..5).collect();
+    let block = pack_block(&shard, &stats, &candidates, 256, 0.75);
+    let q = gaps::search::ParsedQuery::parse(&shard.pubs[2].title, 512).unwrap();
+    let qw = build_query_weights(&[q.buckets.clone()], &stats, 512, 1);
+    let ranked = exec.rank(&block, &qw, 1, &FIELD_W).unwrap();
+    for &(idx, _) in &ranked[0] {
+        assert!((idx as usize) < 5, "padding index {idx} leaked");
+    }
+}
+
+#[test]
+fn batched_queries_match_single_queries() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut exec = Executor::new(dir).unwrap();
+    let (shard, stats) = setup(300, 512);
+    let candidates: Vec<u32> = (0..256).collect();
+    let block = pack_block(&shard, &stats, &candidates, 256, 0.75);
+
+    let queries: Vec<Vec<u32>> = (0..4)
+        .map(|i| {
+            gaps::search::ParsedQuery::parse(&shard.pubs[i * 7].title, 512)
+                .unwrap()
+                .buckets
+        })
+        .collect();
+
+    // Batched execution (q8 artifact).
+    let qw_batch = build_query_weights(&queries, &stats, 512, 8);
+    let batch = exec.rank(&block, &qw_batch, 4, &FIELD_W).unwrap();
+    assert_eq!(batch.len(), 4);
+
+    // Each query alone (q1 artifact).
+    for (qi, qbuckets) in queries.iter().enumerate() {
+        let qw1 = build_query_weights(&[qbuckets.clone()], &stats, 512, 1);
+        let solo = exec.rank(&block, &qw1, 1, &FIELD_W).unwrap();
+        assert_eq!(
+            batch[qi].iter().map(|h| h.0).collect::<Vec<_>>(),
+            solo[0].iter().map(|h| h.0).collect::<Vec<_>>(),
+            "query {qi} ranking differs between batch and solo"
+        );
+    }
+}
+
+#[test]
+fn large_block_variant_works() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut exec = Executor::new(dir).unwrap();
+    let (shard, stats) = setup(1100, 512);
+    let candidates: Vec<u32> = (0..1024).collect();
+    let block = pack_block(&shard, &stats, &candidates, 1024, 0.75);
+    let q = gaps::search::ParsedQuery::parse(&shard.pubs[900].title, 512).unwrap();
+    let qw = build_query_weights(&[q.buckets.clone()], &stats, 512, 1);
+    let ranked = exec.rank(&block, &qw, 1, &FIELD_W).unwrap();
+    // Doc 900 is in the block and should surface.
+    assert!(
+        ranked[0].iter().any(|&(i, _)| i == 900),
+        "{:?}",
+        &ranked[0][..5.min(ranked[0].len())]
+    );
+}
+
+#[test]
+fn mismatched_block_is_rejected() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut exec = Executor::new(dir).unwrap();
+    let (shard, stats) = setup(40, 512);
+    // Pack to a non-artifact D: executor must refuse, not mis-execute.
+    let block = pack_block(&shard, &stats, &[0, 1, 2], 100, 0.75);
+    let qw = vec![0.0f32; 512];
+    assert!(exec.rank(&block, &qw, 1, &FIELD_W).is_err());
+}

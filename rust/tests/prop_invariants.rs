@@ -1,0 +1,284 @@
+//! Property-based tests over coordinator/search invariants, using the
+//! in-repo prop harness (util::prop — proptest is not in the offline
+//! vendored crate set).
+
+use gaps::config::SchedulePolicy;
+use gaps::coordinator::{merge_topk, DataSource, PerfDb, QueryExecutionEngine};
+use gaps::grid::{NodeId, NodeInfo, VoId};
+use gaps::search::LocalHit;
+use gaps::text::{term_feature, terms};
+use gaps::util::prop::{check, gen_text, Config};
+use gaps::util::rng::Rng;
+
+fn prop_cfg(cases: usize) -> Config {
+    Config { cases, ..Config::default() }
+}
+
+// ---------------------------------------------------------------- tokenizer
+
+#[test]
+fn prop_tokenizer_terms_are_normalized() {
+    check(
+        "tokenizer-normalized",
+        &prop_cfg(200),
+        |rng, size| gen_text(rng, size),
+        |text| {
+            terms(text).iter().all(|t| {
+                !t.is_empty()
+                    && *t == t.to_lowercase()
+                    && !gaps::text::STOPWORDS.contains(&t.as_str())
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_tokenizer_idempotent() {
+    // Tokenizing the joined terms yields the same terms (stemming is a
+    // projection: stem(stem(x)) == stem(x) for our suffix rules).
+    check(
+        "tokenizer-idempotent",
+        &prop_cfg(200),
+        |rng, size| gen_text(rng, size),
+        |text| {
+            let once = terms(text);
+            let twice = terms(&once.join(" "));
+            if once == twice {
+                Ok(())
+            } else {
+                Err(format!("{once:?} != {twice:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_term_features_in_range() {
+    check(
+        "feature-range",
+        &prop_cfg(100),
+        |rng, size| {
+            let f = 1 << rng.range(4, 11);
+            (gen_text(rng, size), f)
+        },
+        |(text, f)| terms(text).iter().all(|t| term_feature(t, *f) < *f),
+    );
+}
+
+// -------------------------------------------------------------------- merge
+
+fn gen_sorted_lists(rng: &mut Rng, size: usize) -> Vec<Vec<LocalHit>> {
+    let nlists = rng.range(0, 6);
+    (0..nlists)
+        .map(|li| {
+            let n = rng.range(0, size + 1);
+            let mut l: Vec<LocalHit> = (0..n)
+                .map(|i| LocalHit {
+                    global_id: (li * 1000 + i) as u64,
+                    score: (rng.below(100) as f32) / 7.0,
+                })
+                .collect();
+            l.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+            l
+        })
+        .collect()
+}
+
+#[test]
+fn prop_merge_output_sorted_and_bounded() {
+    check(
+        "merge-sorted-bounded",
+        &prop_cfg(300),
+        |rng, size| (gen_sorted_lists(rng, size), rng.range(1, 20)),
+        |(lists, k)| {
+            let merged = merge_topk(lists, *k);
+            let total: usize = lists.iter().map(|l| l.len()).sum();
+            merged.len() <= (*k).min(total)
+                && merged.windows(2).all(|w| w[0].score >= w[1].score)
+        },
+    );
+}
+
+#[test]
+fn prop_merge_contains_global_max() {
+    check(
+        "merge-has-max",
+        &prop_cfg(300),
+        |rng, size| gen_sorted_lists(rng, size),
+        |lists| {
+            let all: Vec<&LocalHit> = lists.iter().flatten().collect();
+            if all.is_empty() {
+                return true;
+            }
+            let max = all
+                .iter()
+                .map(|h| h.score)
+                .fold(f32::NEG_INFINITY, f32::max);
+            let merged = merge_topk(lists, 1);
+            merged[0].score == max
+        },
+    );
+}
+
+// ---------------------------------------------------------------- scheduler
+
+struct PlanCase {
+    sources: Vec<DataSource>,
+    nodes: Vec<NodeInfo>,
+    perf_samples: Vec<(u32, u64, f64)>,
+    policy: SchedulePolicy,
+}
+
+impl std::fmt::Debug for PlanCase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PlanCase({} sources, {} nodes, {:?})",
+            self.sources.len(),
+            self.nodes.len(),
+            self.policy
+        )
+    }
+}
+
+fn gen_plan_case(rng: &mut Rng, size: usize) -> PlanCase {
+    let n_nodes = rng.range(1, 9);
+    let nodes: Vec<NodeInfo> = (0..n_nodes)
+        .map(|i| NodeInfo {
+            id: NodeId(i as u32),
+            vo: VoId((i % 3) as u32),
+            speed_factor: rng.range_f64(0.3, 2.0),
+            is_broker: i < 3,
+        })
+        .collect();
+    let n_sources = rng.range(1, size.max(2));
+    let sources: Vec<DataSource> = (0..n_sources)
+        .map(|i| {
+            let primary = rng.range(0, n_nodes);
+            let secondary = rng.range(0, n_nodes);
+            let mut replicas = vec![NodeId(primary as u32)];
+            if secondary != primary {
+                replicas.push(NodeId(secondary as u32));
+            }
+            DataSource {
+                id: i as u32,
+                doc_start: i as u64 * 100,
+                doc_count: rng.range(10, 500) as u64,
+                replicas,
+            }
+        })
+        .collect();
+    let perf_samples = (0..rng.range(0, 10))
+        .map(|_| {
+            (
+                rng.range(0, n_nodes) as u32,
+                rng.range(100, 5000) as u64,
+                rng.range_f64(0.05, 2.0),
+            )
+        })
+        .collect();
+    let policy = if rng.chance(0.5) {
+        SchedulePolicy::PerfHistory
+    } else {
+        SchedulePolicy::RoundRobin
+    };
+    PlanCase { sources, nodes, perf_samples, policy }
+}
+
+#[test]
+fn prop_plan_covers_every_source_exactly_once() {
+    check(
+        "plan-coverage",
+        &prop_cfg(300),
+        gen_plan_case,
+        |case| {
+            let mut perf = PerfDb::default();
+            for &(node, docs, secs) in &case.perf_samples {
+                perf.record(NodeId(node), docs, secs);
+            }
+            let refs: Vec<&DataSource> = case.sources.iter().collect();
+            let plan = QueryExecutionEngine
+                .plan(&refs, &case.nodes, &perf, case.policy)
+                .expect("all replicas live");
+            let mut assigned: Vec<u32> =
+                plan.assignments.values().flatten().copied().collect();
+            assigned.sort_unstable();
+            let want: Vec<u32> = (0..case.sources.len() as u32).collect();
+            if assigned == want {
+                Ok(())
+            } else {
+                Err(format!("assigned {assigned:?} != {want:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_plan_respects_replica_placement() {
+    check(
+        "plan-placement",
+        &prop_cfg(300),
+        gen_plan_case,
+        |case| {
+            let refs: Vec<&DataSource> = case.sources.iter().collect();
+            let plan = QueryExecutionEngine
+                .plan(&refs, &case.nodes, &PerfDb::default(), case.policy)
+                .unwrap();
+            for (node, sids) in &plan.assignments {
+                for sid in sids {
+                    if !case.sources[*sid as usize].replicas.contains(node) {
+                        return Err(format!("source {sid} assigned off-replica to {node}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// -------------------------------------------------------------------- stats
+
+#[test]
+fn prop_summary_percentiles_monotone() {
+    check(
+        "percentiles-monotone",
+        &prop_cfg(200),
+        |rng, size| {
+            let n = rng.range(1, size.max(2));
+            (0..n).map(|_| rng.range_f64(-100.0, 100.0)).collect::<Vec<f64>>()
+        },
+        |xs| {
+            let mut s = gaps::util::stats::Summary::new();
+            for &x in xs {
+                s.add(x);
+            }
+            let (p10, p50, p90) = (s.percentile(10.0), s.percentile(50.0), s.percentile(90.0));
+            p10 <= p50 && p50 <= p90 && s.min() <= p10 && p90 <= s.max()
+        },
+    );
+}
+
+// --------------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrip_publications() {
+    use gaps::corpus::{CorpusGenerator, CorpusSpec};
+    let gen = CorpusGenerator::new(CorpusSpec {
+        num_docs: 500,
+        vocab_size: 300,
+        ..CorpusSpec::default()
+    });
+    check(
+        "publication-json-roundtrip",
+        &prop_cfg(100),
+        |rng, _| gen.generate(rng.below(500)),
+        |p| {
+            let json = p.to_json().to_string_pretty();
+            let parsed = gaps::util::json::Json::parse(&json).unwrap();
+            match gaps::corpus::Publication::from_json(&parsed) {
+                Some(q) if q == *p => Ok(()),
+                other => Err(format!("roundtrip failed: {other:?}")),
+            }
+        },
+    );
+}
