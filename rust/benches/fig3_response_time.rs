@@ -12,23 +12,177 @@
 //! * response time dips with small node counts, then coordination
 //!   overheads flatten / reverse the gains past the sweet spot.
 //!
+//! Additionally this bench tracks the retrieval hot path across PRs in
+//! machine-readable `BENCH_retrieval.json`:
+//!
+//! * **micro** — per-query retrieve time on a large shard, CSR arena +
+//!   scratch + bounded heap vs the naive HashMap reference (the seed
+//!   implementation, kept as `retrieve_reference`);
+//! * **fanout** — end-to-end `search()` wall time at 4 nodes, parallel
+//!   gridpool dispatch vs serial (`workers = 1`);
+//! * **sweep** — the Fig 3 response-time percentiles.
+//!
 //! Run: `cargo bench --bench fig3_response_time`
-//! Env: GAPS_BENCH_DOCS / GAPS_BENCH_QUERIES to resize the workload.
+//! Env: GAPS_BENCH_DOCS / GAPS_BENCH_QUERIES resize the sweep workload,
+//!      GAPS_BENCH_MICRO_DOCS resizes the micro-benchmark shard.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use gaps::config::GapsConfig;
-use gaps::metrics::cached_node_sweep;
+use gaps::coordinator::{Deployment, GapsSystem};
+use gaps::corpus::{CorpusGenerator, CorpusSpec};
+use gaps::index::{RetrievalScratch, Shard};
+use gaps::metrics::{cached_node_sweep, sample_queries};
+use gaps::search::ParsedQuery;
 use gaps::util::bench::Table;
+use gaps::util::json::Json;
+use gaps::util::rng::Rng;
+use gaps::util::stats::Summary;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Micro-benchmark: per-query OR-retrieve cost on one large shard,
+/// 4-term queries, CSR+scratch vs the naive HashMap reference.
+fn bench_retrieval_micro(features: usize) -> Json {
+    let docs = env_usize("GAPS_BENCH_MICRO_DOCS", 100_000) as u64;
+    let num_queries = 64usize;
+    let rounds = 5usize;
+    eprintln!("micro: analyzing {docs}-doc shard (F={features})...");
+    let gen = CorpusGenerator::new(CorpusSpec { num_docs: docs, ..CorpusSpec::default() });
+    let shard = Shard::build(0, gen.generate_range(0, docs), features);
+
+    // 4-term queries sampled from corpus topics (realistic bucket skew).
+    let mut rng = Rng::new(0xF16_3);
+    let mut queries: Vec<Vec<u32>> = Vec::with_capacity(num_queries);
+    let mut attempts = 0usize;
+    while queries.len() < num_queries {
+        attempts += 1;
+        assert!(attempts <= 100_000, "corpus yields no usable queries — check CorpusSpec");
+        let raw = gen.sample_query(&mut rng);
+        let Ok(q) = ParsedQuery::parse(&raw, features) else { continue };
+        if q.buckets.len() >= 4 {
+            queries.push(q.buckets[..4].to_vec());
+        } else if attempts > 10_000 && !q.buckets.is_empty() {
+            // Degenerate corpora: accept shorter queries rather than spin.
+            queries.push(q.buckets.clone());
+        }
+    }
+
+    let max_candidates = 1024usize;
+    let mut scratch = RetrievalScratch::new();
+    // Warmup both paths (sizes the scratch, faults pages in).
+    for q in &queries {
+        shard.inverted.retrieve_into(q, max_candidates, &mut scratch);
+        std::hint::black_box(shard.inverted.retrieve_reference(q, max_candidates));
+    }
+
+    let (mut csr, mut naive) = (Summary::new(), Summary::new());
+    for _ in 0..rounds {
+        for q in &queries {
+            let t = Instant::now();
+            shard.inverted.retrieve_into(q, max_candidates, &mut scratch);
+            csr.add(t.elapsed().as_secs_f64());
+            std::hint::black_box(scratch.hits().len());
+
+            let t = Instant::now();
+            let r = shard.inverted.retrieve_reference(q, max_candidates);
+            naive.add(t.elapsed().as_secs_f64());
+            std::hint::black_box(r.len());
+        }
+    }
+
+    let speedup = naive.p50() / csr.p50().max(1e-12);
+    println!(
+        "\n== retrieval micro ({docs} docs, 4-term queries) ==\n\
+         csr   p50={:8.1}us p95={:8.1}us\n\
+         naive p50={:8.1}us p95={:8.1}us\n\
+         speedup(p50) = {speedup:.2}x  (target >= 3x)",
+        csr.p50() * 1e6,
+        csr.percentile(95.0) * 1e6,
+        naive.p50() * 1e6,
+        naive.percentile(95.0) * 1e6,
+    );
+
+    Json::obj(vec![
+        ("docs", Json::from(docs)),
+        ("queries", Json::from(num_queries)),
+        ("terms_per_query", Json::from(4usize)),
+        ("max_candidates", Json::from(max_candidates)),
+        ("csr_p50_us", Json::from(csr.p50() * 1e6)),
+        ("csr_p95_us", Json::from(csr.percentile(95.0) * 1e6)),
+        ("naive_p50_us", Json::from(naive.p50() * 1e6)),
+        ("naive_p95_us", Json::from(naive.percentile(95.0) * 1e6)),
+        ("speedup_p50", Json::from(speedup)),
+    ])
+}
+
+/// End-to-end fan-out: `search()` wall time at 4 nodes, parallel
+/// gridpool dispatch vs serial (workers = 1), same deployment bits.
+fn bench_fanout(cfg: &GapsConfig) -> Json {
+    let nodes = 4usize;
+    let dep = Arc::new(Deployment::build(cfg, nodes).expect("deploy"));
+    let queries = sample_queries(&dep, cfg.workload.num_queries.max(8), 0xFA11);
+
+    let measure = |workers: usize| -> Summary {
+        let mut c = cfg.clone();
+        c.search.workers = workers;
+        // The XLA path serializes through the coordinator thread (PJRT
+        // handles are !Send) and would ignore the workers knob — this
+        // comparison only means something on the rust-scorer path.
+        c.search.use_xla = false;
+        let mut sys = GapsSystem::from_deployment(c, Arc::clone(&dep)).expect("system");
+        for q in &queries {
+            sys.search(q).expect("warmup search");
+        }
+        let mut wall = vec![f64::INFINITY; queries.len()];
+        for _ in 0..3 {
+            for (i, q) in queries.iter().enumerate() {
+                let t = Instant::now();
+                std::hint::black_box(sys.search(q).expect("search"));
+                wall[i] = wall[i].min(t.elapsed().as_secs_f64());
+            }
+        }
+        let mut s = Summary::new();
+        for w in wall {
+            s.add(w);
+        }
+        s
+    };
+
+    let mut serial = measure(1);
+    let auto_workers = cfg.search.effective_workers();
+    let mut parallel = measure(0);
+    let speedup = serial.p50() / parallel.p50().max(1e-12);
+    println!(
+        "\n== shard fan-out ({nodes} nodes, {} workers) ==\n\
+         serial   p50={:8.2}ms p95={:8.2}ms\n\
+         parallel p50={:8.2}ms p95={:8.2}ms\n\
+         speedup(p50) = {speedup:.2}x  (target > 1.5x on >=4-core hosts)",
+        auto_workers,
+        serial.p50() * 1e3,
+        serial.percentile(95.0) * 1e3,
+        parallel.p50() * 1e3,
+        parallel.percentile(95.0) * 1e3,
+    );
+
+    Json::obj(vec![
+        ("nodes", Json::from(nodes)),
+        ("workers", Json::from(auto_workers)),
+        ("serial_p50_ms", Json::from(serial.p50() * 1e3)),
+        ("serial_p95_ms", Json::from(serial.percentile(95.0) * 1e3)),
+        ("parallel_p50_ms", Json::from(parallel.p50() * 1e3)),
+        ("parallel_p95_ms", Json::from(parallel.percentile(95.0) * 1e3)),
+        ("speedup_p50", Json::from(speedup)),
+    ])
+}
 
 fn main() {
     let mut cfg = GapsConfig::default();
-    cfg.workload.num_docs = std::env::var("GAPS_BENCH_DOCS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(60_000);
-    cfg.workload.num_queries = std::env::var("GAPS_BENCH_QUERIES")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(10);
+    cfg.workload.num_docs = env_usize("GAPS_BENCH_DOCS", 60_000) as u64;
+    cfg.workload.num_queries = env_usize("GAPS_BENCH_QUERIES", 10);
     if !std::path::Path::new(&cfg.search.artifact_dir).join("manifest.json").exists() {
         eprintln!("note: artifacts/ missing, using rust scorer");
         cfg.search.use_xla = false;
@@ -65,6 +219,61 @@ fn main() {
     print!("{}", t.render());
     t.write_csv("fig3_response_time");
 
+    // Retrieval-core trajectory (micro + fan-out), tracked across PRs.
+    let micro = bench_retrieval_micro(cfg.search.features);
+    let fanout = bench_fanout(&cfg);
+    let micro_speedup = micro.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let fan_speedup = fanout.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let fan_workers = fanout.get("workers").and_then(|v| v.as_i64()).unwrap_or(1);
+    let sweep_json = Json::obj(vec![
+        ("nodes", Json::Arr(sweep.points.iter().map(|p| Json::from(p.nodes)).collect())),
+        (
+            "gaps_p50_ms",
+            Json::Arr(sweep.points.iter().map(|p| Json::from(p.gaps.p50_s * 1e3)).collect()),
+        ),
+        (
+            "gaps_p99_ms",
+            Json::Arr(sweep.points.iter().map(|p| Json::from(p.gaps.p99_s * 1e3)).collect()),
+        ),
+        (
+            "trad_p50_ms",
+            Json::Arr(
+                sweep.points.iter().map(|p| Json::from(p.traditional.p50_s * 1e3)).collect(),
+            ),
+        ),
+    ]);
+    let report = Json::obj(vec![
+        ("bench", Json::str("retrieval")),
+        ("micro", micro),
+        ("fanout", fanout),
+        ("sweep", sweep_json),
+    ]);
+    let path = "BENCH_retrieval.json";
+    std::fs::write(path, report.to_string_pretty()).expect("write BENCH_retrieval.json");
+    println!("\nwrote {path}");
+
+    // Checks are enforced on real bench runs so regressions fail loudly;
+    // GAPS_BENCH_NO_ASSERT=1 (CI smoke on shared runners, tiny query
+    // counts) reports without asserting — wall-clock comparisons from a
+    // handful of samples on a noisy host must not flake CI.
+    let enforce = std::env::var("GAPS_BENCH_NO_ASSERT").is_err();
+
+    // Perf-target checks for this PR's hot-path work (conservative
+    // floors below the stated targets, to absorb host variance).
+    if enforce {
+        assert!(
+            micro_speedup >= 2.0,
+            "retrieval micro speedup regressed: {micro_speedup:.2}x (floor 2x, target 3x)"
+        );
+    }
+    if enforce && fan_workers >= 4 {
+        assert!(
+            fan_speedup > 1.2,
+            "fan-out speedup regressed: {fan_speedup:.2}x with {fan_workers} workers \
+             (floor 1.2x, target 1.5x)"
+        );
+    }
+
     // Shape checks (reported, and enforced so regressions fail the bench).
     let mut ok = true;
     for p in &sweep.points {
@@ -83,6 +292,10 @@ fn main() {
         gains.iter().cloned().fold(f64::INFINITY, f64::min),
         gains.iter().cloned().fold(0.0, f64::max),
     );
-    assert!(ok, "figure 3 shape checks failed");
-    println!("fig3 shape checks OK");
+    if enforce {
+        assert!(ok, "figure 3 shape checks failed");
+        println!("fig3 shape checks OK");
+    } else if !ok {
+        println!("fig3 shape checks failed (not enforced: GAPS_BENCH_NO_ASSERT set)");
+    }
 }

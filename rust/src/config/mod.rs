@@ -139,6 +139,21 @@ pub struct SearchConfig {
     pub artifact_dir: String,
     /// Scheduling policy.
     pub policy: SchedulePolicy,
+    /// Worker threads for the coordinator's parallel shard fan-out
+    /// (0 = auto: one per available core; 1 = serial dispatch, the
+    /// reference the Fig 4/5 speedup curves compare against). The XLA
+    /// scorer path always executes serially — PJRT handles are !Send.
+    pub workers: usize,
+}
+
+impl SearchConfig {
+    /// Resolve the `workers` knob: 0 means one worker per available core.
+    pub fn effective_workers(&self) -> usize {
+        match self.workers {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        }
+    }
 }
 
 impl Default for SearchConfig {
@@ -152,6 +167,7 @@ impl Default for SearchConfig {
             use_xla: true,
             artifact_dir: "artifacts".into(),
             policy: SchedulePolicy::PerfHistory,
+            workers: 0,
         }
     }
 }
@@ -219,6 +235,7 @@ impl GapsConfig {
             "features" => s.features = as_usize(key, v)?,
             "top_k" => s.top_k = as_usize(key, v)?,
             "max_candidates" => s.max_candidates = as_usize(key, v)?,
+            "workers" => s.workers = as_usize(key, v)?,
             "b" => s.b = as_f64(key, v)? as f32,
             "use_xla" => s.use_xla = as_bool(key, v)?,
             "artifact_dir" => {
@@ -272,6 +289,7 @@ impl GapsConfig {
         let s = &mut self.search;
         s.top_k = args.get_parse("top-k", s.top_k)?;
         s.max_candidates = args.get_parse("max-candidates", s.max_candidates)?;
+        s.workers = args.get_parse("workers", s.workers)?;
         if let Some(p) = args.get("policy") {
             s.policy = SchedulePolicy::parse(p)
                 .ok_or_else(|| CliError(format!("unknown policy '{p}'")))?;
@@ -290,7 +308,7 @@ impl GapsConfig {
         format!(
             "grid: {} VOs x {} nodes (speed {:.2}-{:.2}, lan {}us wan {}us, {} services)\n\
              workload: {} docs, {} queries (seed {})\n\
-             search: F={} top_k={} max_cand={} policy={} xla={} artifacts={}",
+             search: F={} top_k={} max_cand={} policy={} xla={} artifacts={} workers={}",
             self.grid.num_vos,
             self.grid.nodes_per_vo,
             self.grid.speed_min,
@@ -307,6 +325,7 @@ impl GapsConfig {
             self.search.policy.name(),
             self.search.use_xla,
             self.search.artifact_dir,
+            self.search.workers,
         )
     }
 }
@@ -396,6 +415,16 @@ mod tests {
         assert_eq!(SchedulePolicy::parse("gaps"), Some(SchedulePolicy::PerfHistory));
         assert_eq!(SchedulePolicy::parse("traditional"), Some(SchedulePolicy::RoundRobin));
         assert_eq!(SchedulePolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn workers_knob_parses_and_resolves() {
+        let mut c = GapsConfig::default();
+        c.apply_json(&Json::parse(r#"{"search": {"workers": 3}}"#).unwrap()).unwrap();
+        assert_eq!(c.search.workers, 3);
+        assert_eq!(c.search.effective_workers(), 3);
+        c.search.workers = 0;
+        assert!(c.search.effective_workers() >= 1, "auto resolves to >=1");
     }
 
     #[test]

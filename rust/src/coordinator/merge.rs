@@ -32,10 +32,11 @@ impl PartialOrd for HeapItem {
 impl Ord for HeapItem {
     fn cmp(&self, other: &Self) -> Ordering {
         // Max-heap by score, ties broken by smaller global_id first
-        // (deterministic merges regardless of list order).
+        // (deterministic merges regardless of list order). total_cmp so a
+        // NaN score orders consistently instead of collapsing to Equal
+        // and destabilising the merge.
         self.score
-            .partial_cmp(&other.score)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&other.score)
             .then_with(|| other.global_id.cmp(&self.global_id))
     }
 }
@@ -47,7 +48,9 @@ pub fn merge_topk(lists: &[Vec<LocalHit>], k: usize) -> Vec<LocalHit> {
     let mut heap = BinaryHeap::new();
     for (li, list) in lists.iter().enumerate() {
         debug_assert!(
-            list.windows(2).all(|w| w[0].score >= w[1].score),
+            // total_cmp, matching the producers' sort order: a NaN score
+            // (ranked first by the service) must not trip this assert.
+            list.windows(2).all(|w| w[0].score.total_cmp(&w[1].score).is_ge()),
             "merge input {li} not sorted"
         );
         if let Some(h) = list.first() {

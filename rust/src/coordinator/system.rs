@@ -29,6 +29,7 @@ use crate::grid::{GridFabric, NodeId};
 use crate::index::{GlobalStats, Shard};
 use crate::runtime::Executor;
 use crate::search::{LocalHit, ParsedQuery, Scorer, SearchService};
+use crate::util::pool::par_map_scoped;
 
 use crate::util::clock::{TaskTimeline, WallClock};
 
@@ -201,6 +202,41 @@ impl SearchResponse {
     }
 }
 
+/// Pure compute result of one search job (fabric costs are accounted by
+/// the caller): merged local hits + measured work + scan counters.
+struct JobOutput {
+    hits: Vec<LocalHit>,
+    work_measured: f64,
+    candidates: usize,
+    docs: u64,
+}
+
+/// Execute one job's search work over its sources. Free function (not a
+/// `GapsSystem` method) so the parallel fan-out can call it from worker
+/// threads while the coordinator keeps its `&mut self` bookkeeping.
+fn run_job(
+    service: &SearchService,
+    dep: &Deployment,
+    query: &ParsedQuery,
+    job: &JobDescription,
+    scorer: &mut Scorer<'_>,
+    top_k: usize,
+) -> Result<JobOutput> {
+    let mut work_measured = 0.0f64;
+    let mut candidates = 0usize;
+    let mut docs = 0u64;
+    let mut hits_lists: Vec<Vec<LocalHit>> = Vec::with_capacity(job.sources.len());
+    for sid in &job.sources {
+        let shard = dep.shard(*sid).context("unknown source")?;
+        let out = service.search(shard, &dep.stats, query, scorer)?;
+        work_measured += out.work_s;
+        candidates += out.candidates;
+        docs += out.shard_docs as u64;
+        hits_lists.push(out.hits);
+    }
+    Ok(JobOutput { hits: merge_topk(&hits_lists, top_k), work_measured, candidates, docs })
+}
+
 /// The deployed GAPS system.
 pub struct GapsSystem {
     pub cfg: GapsConfig,
@@ -325,11 +361,71 @@ impl GapsSystem {
         let net = &self.dep.fabric.net;
         let root_info = self.dep.fabric.node(self.root_broker).clone();
 
+        // ---- Dispatch bookkeeping (serial: QM + containers) -----------
+        // Flatten jobs in (vo, j_idx) order; the fan-out below returns
+        // outputs in the same order, keeping merges deterministic.
+        let mut flat_jobs: Vec<&JobDescription> = Vec::with_capacity(jobs.len());
+        let mut startups: Vec<f64> = Vec::with_capacity(jobs.len());
+        for vo_jobs in by_vo.values() {
+            for job in vo_jobs {
+                self.qm.mark_dispatched(job.id);
+                let handle = self
+                    .containers
+                    .get_mut(&job.node)
+                    .context("node has no container")?
+                    .acquire("search-service")
+                    .context("search-service not deployed")?;
+                flat_jobs.push(job);
+                startups.push(handle.startup_s);
+            }
+        }
+
+        // ---- Execute every node's job (parallel shard fan-out) --------
+        // Real concurrent work on the gridpool substrate. Per-job wall
+        // time is measured inside each job; under contention that
+        // measurement inflates, so the figure sweeps pin workers = 1
+        // (see metrics::run_node_sweep) while serving paths default to
+        // all cores.
+        let top_k = self.cfg.search.top_k;
+        let workers = self.cfg.search.effective_workers().min(flat_jobs.len().max(1));
+        let outputs: Vec<JobOutput> = match self.executor.as_mut() {
+            Some(exec) => {
+                // PJRT handles are !Send: artifact execution stays on the
+                // coordinator thread (see runtime::mod docs).
+                let mut outs = Vec::with_capacity(flat_jobs.len());
+                for job in &flat_jobs {
+                    let mut scorer = Scorer::Xla(&mut *exec);
+                    outs.push(run_job(&self.service, &self.dep, &query, job, &mut scorer, top_k)?);
+                }
+                outs
+            }
+            None if workers <= 1 => {
+                let mut outs = Vec::with_capacity(flat_jobs.len());
+                for job in &flat_jobs {
+                    outs.push(run_job(&self.service, &self.dep, &query, job, &mut Scorer::Rust, top_k)?);
+                }
+                outs
+            }
+            None => {
+                let service = &self.service;
+                let dep: &Deployment = &self.dep;
+                let q = &query;
+                par_map_scoped(&flat_jobs, workers, |job| {
+                    run_job(service, dep, q, job, &mut Scorer::Rust, top_k)
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?
+            }
+        };
+
+        // ---- Assemble per-VO timelines from the job outputs -----------
         let mut vo_timelines: Vec<TaskTimeline> = Vec::new();
         let mut vo_lists: Vec<Vec<LocalHit>> = Vec::new();
         let mut total_candidates = 0usize;
         let mut total_docs = 0u64;
         let mut completions: Vec<(super::jdf::JobId, u64, f64)> = Vec::new();
+        let mut outputs = outputs.into_iter();
+        let mut startups = startups.into_iter();
 
         for (vo_idx, (vo, vo_jobs)) in by_vo.iter().enumerate() {
             let vo_broker = self.dep.fabric.vos[*vo as usize].broker;
@@ -346,48 +442,26 @@ impl GapsSystem {
             let mut node_branches: Vec<TaskTimeline> = Vec::new();
             let mut node_lists: Vec<Vec<LocalHit>> = Vec::new();
             for (j_idx, job) in vo_jobs.iter().enumerate() {
-                self.qm.mark_dispatched(job.id);
+                let out = outputs.next().expect("one output per job");
+                let startup_s = startups.next().expect("one handle per job");
                 let node_info = self.dep.fabric.node(job.node).clone();
-                let handle = self
-                    .containers
-                    .get_mut(&job.node)
-                    .context("node has no container")?
-                    .acquire("search-service")
-                    .context("search-service not deployed")?;
+                total_candidates += out.candidates;
+                total_docs += out.docs;
+                let work_acc = out.work_measured / node_info.speed_factor;
+                completions.push((job.id, out.docs, work_acc));
 
-                // Real local work over the job's sources.
-                let mut work_measured = 0.0f64;
-                let mut job_hits: Vec<Vec<LocalHit>> = Vec::new();
-                let mut job_docs = 0u64;
-                for sid in &job.sources {
-                    let shard = self.dep.shard(*sid).context("unknown source")?;
-                    let mut scorer = match self.executor.as_mut() {
-                        Some(e) => Scorer::Xla(e),
-                        None => Scorer::Rust,
-                    };
-                    let out = self.service.search(shard, &self.dep.stats, &query, &mut scorer)?;
-                    work_measured += out.work_s;
-                    total_candidates += out.candidates;
-                    job_docs += out.shard_docs as u64;
-                    job_hits.push(out.hits);
-                }
-                total_docs += job_docs;
-                let work_acc = work_measured / node_info.speed_factor;
-                completions.push((job.id, job_docs, work_acc));
-
-                let hits = merge_topk(&job_hits, self.cfg.search.top_k);
                 let branch = TaskTimeline {
                     work_s: work_acc,
                     net_s: net.transfer_between_s(&vo_broker_info, &node_info, job.wire_bytes())
                         + net.transfer_between_s(
                             &node_info,
                             &vo_broker_info,
-                            result_wire_bytes(hits.len()),
+                            result_wire_bytes(out.hits.len()),
                         ),
-                    overhead_s: (j_idx + 1) as f64 * dispatch_s + handle.startup_s,
+                    overhead_s: (j_idx + 1) as f64 * dispatch_s + startup_s,
                 };
                 node_branches.push(branch);
-                node_lists.push(hits);
+                node_lists.push(out.hits);
             }
 
             // Barrier at the VO broker: slowest member dominates.
@@ -582,6 +656,31 @@ mod tests {
         let mut sys = GapsSystem::deploy(cfg, 4).unwrap();
         let resp = sys.search("massive academic publications").unwrap();
         assert_eq!(resp.docs_scanned, 600);
+    }
+
+    #[test]
+    fn parallel_fanout_matches_serial_results() {
+        // Exact result semantics: the gridpool fan-out must return
+        // byte-identical hits (ids, scores, order) to serial dispatch.
+        let mut cfg_par = small_cfg();
+        cfg_par.search.workers = 4;
+        let mut cfg_ser = small_cfg();
+        cfg_ser.search.workers = 1;
+        let dep = Arc::new(Deployment::build(&cfg_par, 6).unwrap());
+        let mut par = GapsSystem::from_deployment(cfg_par, Arc::clone(&dep)).unwrap();
+        let mut ser = GapsSystem::from_deployment(cfg_ser, dep).unwrap();
+        for q in ["grid data search", "massive academic publications", "year:2000..2014 grid"] {
+            let rp = par.search(q).unwrap();
+            let rs = ser.search(q).unwrap();
+            let ids_p: Vec<u64> = rp.hits.iter().map(|h| h.global_id).collect();
+            let ids_s: Vec<u64> = rs.hits.iter().map(|h| h.global_id).collect();
+            assert_eq!(ids_p, ids_s, "hit order diverged for {q:?}");
+            for (a, b) in rp.hits.iter().zip(&rs.hits) {
+                assert_eq!(a.score, b.score, "score diverged for {q:?}");
+            }
+            assert_eq!(rp.docs_scanned, rs.docs_scanned);
+            assert_eq!(rp.candidates, rs.candidates);
+        }
     }
 
     #[test]

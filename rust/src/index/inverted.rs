@@ -2,57 +2,223 @@
 //! Service. Postings are per feature bucket (any field), sorted by local
 //! doc id; retrieval is a counting OR-merge that returns candidates
 //! ordered by match count (docs matching more distinct query terms first).
+//!
+//! Layout: postings live in one flattened CSR arena (`offsets` + `data`)
+//! instead of a `Vec<Vec<u32>>` — a single contiguous allocation whose
+//! sequential probes stay cache-friendly at 100k+ docs per shard. The
+//! counting OR-merge runs against a reusable [`RetrievalScratch`] (no
+//! per-query `HashMap`), and top-`max_candidates` selection is a bounded
+//! min-heap: O(postings + k log k) instead of sorting every candidate.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use super::store::ShardDoc;
 
-/// Immutable inverted index for one shard.
+/// Immutable inverted index for one shard, stored as a CSR arena.
 #[derive(Debug, Clone)]
 pub struct InvertedIndex {
-    /// postings[bucket] = sorted local doc ids containing that bucket.
-    postings: Vec<Vec<u32>>,
+    /// Bucket `b`'s postings live in `data[offsets[b]..offsets[b+1]]`.
+    offsets: Vec<u32>,
+    /// Flattened postings: per-bucket runs of sorted local doc ids.
+    data: Vec<u32>,
+    /// Documents in the shard this index covers (scratch sizing).
+    num_docs: u32,
+}
+
+/// Reusable per-query retrieval state. Owning one of these (per thread)
+/// makes `retrieve_into` allocation-free in steady state: the dense count
+/// array is cleared sparsely via the touched list, never rebuilt.
+#[derive(Debug, Default)]
+pub struct RetrievalScratch {
+    /// Dense per-doc distinct-term match counts (0 = untouched).
+    counts: Vec<u16>,
+    /// Docs whose count is nonzero this query (sparse-clear list).
+    touched: Vec<u32>,
+    /// Dedup buffer for query buckets.
+    uniq: Vec<u32>,
+    /// Bounded selection heap; `Reverse` makes the std max-heap a
+    /// min-heap whose root is the worst candidate currently kept.
+    heap: BinaryHeap<Reverse<(u16, Reverse<u32>)>>,
+    /// Result buffer: (local_id, match count), best first.
+    out: Vec<(u32, u16)>,
+}
+
+impl RetrievalScratch {
+    pub fn new() -> RetrievalScratch {
+        RetrievalScratch::default()
+    }
+
+    /// Hits produced by the last `retrieve_into` call.
+    pub fn hits(&self) -> &[(u32, u16)] {
+        &self.out
+    }
+
+    /// Take ownership of the last result (used by the one-shot wrapper).
+    pub fn take_hits(&mut self) -> Vec<(u32, u16)> {
+        std::mem::take(&mut self.out)
+    }
 }
 
 impl InvertedIndex {
     /// Build from analyzed docs (each doc indexed once per bucket even if
-    /// the bucket occurs in several fields).
+    /// the bucket occurs in several fields). Two-pass CSR construction:
+    /// count, prefix-sum, fill.
     pub fn build(docs: &[ShardDoc], features: usize) -> InvertedIndex {
-        let mut postings: Vec<Vec<u32>> = vec![Vec::new(); features];
+        // Pass 1: posting count per bucket. `last[b]` is the last doc id
+        // counted for bucket b — docs arrive in increasing local id, so
+        // comparing against it dedups multi-field occurrences.
+        let mut counts = vec![0u32; features];
+        let mut last = vec![u32::MAX; features];
         for (local_id, doc) in docs.iter().enumerate() {
             let lid = local_id as u32;
             for tf in &doc.field_tf {
                 for (bucket, _) in tf {
-                    let list = &mut postings[*bucket as usize];
-                    if list.last() != Some(&lid) {
-                        list.push(lid);
+                    let b = *bucket as usize;
+                    if last[b] != lid {
+                        last[b] = lid;
+                        counts[b] += 1;
                     }
                 }
             }
         }
-        InvertedIndex { postings }
+
+        let mut offsets = vec![0u32; features + 1];
+        for b in 0..features {
+            offsets[b + 1] = offsets[b] + counts[b];
+        }
+
+        // Pass 2: fill the arena through per-bucket write cursors.
+        let mut data = vec![0u32; offsets[features] as usize];
+        let mut cursor: Vec<u32> = offsets[..features].to_vec();
+        last.fill(u32::MAX);
+        for (local_id, doc) in docs.iter().enumerate() {
+            let lid = local_id as u32;
+            for tf in &doc.field_tf {
+                for (bucket, _) in tf {
+                    let b = *bucket as usize;
+                    if last[b] != lid {
+                        last[b] = lid;
+                        data[cursor[b] as usize] = lid;
+                        cursor[b] += 1;
+                    }
+                }
+            }
+        }
+        InvertedIndex { offsets, data, num_docs: docs.len() as u32 }
     }
 
     /// Posting list for a bucket (empty slice if absent).
     pub fn postings(&self, bucket: u32) -> &[u32] {
-        self.postings.get(bucket as usize).map(|v| v.as_slice()).unwrap_or(&[])
+        let b = bucket as usize;
+        if b + 1 >= self.offsets.len() {
+            return &[];
+        }
+        &self.data[self.offsets[b] as usize..self.offsets[b + 1] as usize]
     }
 
     /// Total number of postings (index size metric).
     pub fn num_postings(&self) -> usize {
-        self.postings.iter().map(|p| p.len()).sum()
+        self.data.len()
     }
 
-    /// OR-retrieve candidates for the given query buckets: returns
-    /// (local_id, distinct-terms-matched) sorted by match count descending
-    /// then local id, truncated to `max_candidates`.
-    pub fn retrieve(&self, buckets: &[u32], max_candidates: usize) -> Vec<(u32, u16)> {
-        let mut counts: std::collections::HashMap<u32, u16> = std::collections::HashMap::new();
+    /// Documents covered by this index.
+    pub fn num_docs(&self) -> usize {
+        self.num_docs as usize
+    }
+
+    /// OR-retrieve candidates for the given query buckets into `scratch`:
+    /// `scratch.hits()` holds (local_id, distinct-terms-matched) sorted by
+    /// match count descending then local id, truncated to
+    /// `max_candidates`. Allocation-free once the scratch has warmed up.
+    pub fn retrieve_into(
+        &self,
+        buckets: &[u32],
+        max_candidates: usize,
+        scratch: &mut RetrievalScratch,
+    ) {
+        scratch.out.clear();
+        if max_candidates == 0 {
+            return;
+        }
+        if scratch.counts.len() < self.num_docs as usize {
+            scratch.counts.resize(self.num_docs as usize, 0);
+        }
+        debug_assert!(scratch.touched.is_empty(), "scratch not cleared");
+
         // Dedup buckets so a repeated query term doesn't double-count.
+        scratch.uniq.clear();
+        scratch.uniq.extend_from_slice(buckets);
+        scratch.uniq.sort_unstable();
+        scratch.uniq.dedup();
+
+        // Counting OR-merge over the arena (disjoint-field borrows: the
+        // bucket list is read while counts/touched are written).
+        for &b in &scratch.uniq {
+            for &doc in self.postings(b) {
+                let c = &mut scratch.counts[doc as usize];
+                if *c == 0 {
+                    scratch.touched.push(doc);
+                }
+                *c = c.saturating_add(1);
+            }
+        }
+
+        // Top-k selection. Ordering: higher count wins, ties go to the
+        // smaller doc id — encoded as the tuple (count, Reverse(doc)) so
+        // "greater" means "better".
+        let k = max_candidates;
+        if scratch.touched.len() <= k {
+            for &d in &scratch.touched {
+                scratch.out.push((d, scratch.counts[d as usize]));
+            }
+        } else {
+            scratch.heap.clear();
+            for &d in &scratch.touched {
+                let key = Reverse((scratch.counts[d as usize], Reverse(d)));
+                if scratch.heap.len() < k {
+                    scratch.heap.push(key);
+                } else if key < *scratch.heap.peek().expect("heap nonempty") {
+                    // Better than the worst kept (Reverse flips the order).
+                    scratch.heap.pop();
+                    scratch.heap.push(key);
+                }
+            }
+            scratch
+                .out
+                .extend(scratch.heap.drain().map(|Reverse((c, Reverse(d)))| (d, c)));
+        }
+        scratch.out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+
+        // Sparse clear for the next query.
+        for &d in &scratch.touched {
+            scratch.counts[d as usize] = 0;
+        }
+        scratch.touched.clear();
+    }
+
+    /// One-shot OR-retrieve (allocates a fresh scratch; hot paths hold a
+    /// [`RetrievalScratch`] and call [`InvertedIndex::retrieve_into`]).
+    pub fn retrieve(&self, buckets: &[u32], max_candidates: usize) -> Vec<(u32, u16)> {
+        let mut scratch = RetrievalScratch::new();
+        self.retrieve_into(buckets, max_candidates, &mut scratch);
+        scratch.take_hits()
+    }
+
+    /// Naive reference OR-retrieve: per-query `HashMap` counts + full
+    /// sort (the seed implementation). Kept as the differential-testing
+    /// oracle (`tests/prop_invariants.rs`) and the micro-benchmark
+    /// baseline — result semantics of the arena path must match this
+    /// exactly.
+    pub fn retrieve_reference(&self, buckets: &[u32], max_candidates: usize) -> Vec<(u32, u16)> {
+        let mut counts: std::collections::HashMap<u32, u16> = std::collections::HashMap::new();
         let mut uniq: Vec<u32> = buckets.to_vec();
         uniq.sort_unstable();
         uniq.dedup();
         for b in uniq {
             for &doc in self.postings(b) {
-                *counts.entry(doc).or_insert(0) += 1;
+                let c = counts.entry(doc).or_insert(0);
+                *c = c.saturating_add(1);
             }
         }
         let mut out: Vec<(u32, u16)> = counts.into_iter().collect();
@@ -62,7 +228,10 @@ impl InvertedIndex {
     }
 
     /// AND-retrieve: docs containing *all* buckets (used by the
-    /// multivariate field filters). Returns sorted local ids.
+    /// multivariate field filters). Returns sorted local ids. Intersects
+    /// smallest-list-first with galloping (exponential) search — probes
+    /// for successive targets resume from the previous cursor, so runs of
+    /// near-misses cost O(log gap) instead of O(log n) each.
     pub fn retrieve_all(&self, buckets: &[u32]) -> Vec<u32> {
         if buckets.is_empty() {
             return Vec::new();
@@ -74,14 +243,45 @@ impl InvertedIndex {
         uniq.sort_by_key(|b| self.postings(*b).len());
         let mut acc: Vec<u32> = self.postings(uniq[0]).to_vec();
         for b in &uniq[1..] {
-            let list = self.postings(*b);
-            acc.retain(|d| list.binary_search(d).is_ok());
             if acc.is_empty() {
                 break;
             }
+            let list = self.postings(*b);
+            let mut cursor = 0usize;
+            let mut w = 0usize;
+            for i in 0..acc.len() {
+                let d = acc[i];
+                cursor = gallop_to(list, cursor, d);
+                if cursor == list.len() {
+                    break;
+                }
+                if list[cursor] == d {
+                    acc[w] = d;
+                    w += 1;
+                }
+            }
+            acc.truncate(w);
         }
         acc
     }
+}
+
+/// First index `i >= lo` with `list[i] >= target` in a sorted list, found
+/// by doubling steps from `lo` then binary-searching the final window.
+fn gallop_to(list: &[u32], mut lo: usize, target: u32) -> usize {
+    if lo >= list.len() || list[lo] >= target {
+        return lo;
+    }
+    // Invariant: list[lo] < target.
+    let mut step = 1usize;
+    while lo + step < list.len() && list[lo + step] < target {
+        lo += step;
+        step <<= 1;
+    }
+    let hi = (lo + step).min(list.len());
+    // Answer lies in (lo, hi]: every element before lo+1 is < target and
+    // list[hi] >= target (or hi == len).
+    lo + 1 + list[lo + 1..hi].partition_point(|&x| x < target)
 }
 
 #[cfg(test)]
@@ -116,6 +316,7 @@ mod tests {
         assert_eq!(ix.postings(3), &[0, 1, 2]);
         assert_eq!(ix.postings(7), &[] as &[u32]);
         assert_eq!(ix.num_postings(), 7);
+        assert_eq!(ix.num_docs(), 4);
     }
 
     #[test]
@@ -163,5 +364,83 @@ mod tests {
         let ix = index();
         assert_eq!(ix.postings(100), &[] as &[u32]);
         assert!(ix.retrieve(&[100], 5).is_empty());
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_across_queries() {
+        let ix = index();
+        let mut scratch = RetrievalScratch::new();
+        ix.retrieve_into(&[1, 2, 3], 10, &mut scratch);
+        assert_eq!(scratch.hits(), &[(0, 3), (1, 2), (2, 1)]);
+        // A second, disjoint query must not see counts from the first.
+        ix.retrieve_into(&[4], 10, &mut scratch);
+        assert_eq!(scratch.hits(), &[(3, 1)]);
+        ix.retrieve_into(&[100], 10, &mut scratch);
+        assert!(scratch.hits().is_empty());
+    }
+
+    #[test]
+    fn heap_selection_matches_reference() {
+        // Enough docs that every truncation path (heap vs copy-all) runs.
+        let docs: Vec<ShardDoc> = (0..200)
+            .map(|i| {
+                let buckets: Vec<u32> = (0..8).filter(|b| (i + b) % 3 != 0).map(|b| b as u32).collect();
+                doc(i as u64, &buckets)
+            })
+            .collect();
+        let ix = InvertedIndex::build(&docs, 8);
+        let query = [0u32, 1, 2, 3, 4, 5, 6, 7];
+        for k in [1usize, 3, 10, 50, 199, 200, 500] {
+            assert_eq!(ix.retrieve(&query, k), ix.retrieve_reference(&query, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn match_count_saturates_instead_of_overflowing() {
+        // One doc present in more buckets than u16 can count: the match
+        // count must clamp at u16::MAX, not panic (debug) or wrap
+        // (release).
+        let n = (u16::MAX as usize) + 10;
+        let buckets: Vec<u32> = (0..n as u32).collect();
+        let d = doc(0, &buckets);
+        let ix = InvertedIndex::build(&[d], n);
+        let got = ix.retrieve(&buckets, 4);
+        assert_eq!(got, vec![(0, u16::MAX)]);
+        assert_eq!(ix.retrieve_reference(&buckets, 4), vec![(0, u16::MAX)]);
+    }
+
+    #[test]
+    fn galloping_intersection_matches_linear() {
+        // Structured gaps exercise the doubling probe: list A is dense,
+        // list B hits every 7th element, C every 13th.
+        let docs: Vec<ShardDoc> = (0..500)
+            .map(|i| {
+                let mut b = vec![0u32];
+                if i % 7 == 0 {
+                    b.push(1);
+                }
+                if i % 13 == 0 {
+                    b.push(2);
+                }
+                doc(i as u64, &b)
+            })
+            .collect();
+        let ix = InvertedIndex::build(&docs, 4);
+        let expect: Vec<u32> = (0..500u32).filter(|i| i % 7 == 0 && i % 13 == 0).collect();
+        assert_eq!(ix.retrieve_all(&[0, 1, 2]), expect);
+        assert_eq!(ix.retrieve_all(&[2, 1, 0]), expect, "order-independent");
+    }
+
+    #[test]
+    fn gallop_to_finds_lower_bound() {
+        let list = [2u32, 4, 6, 8, 10, 12, 14];
+        assert_eq!(gallop_to(&list, 0, 1), 0);
+        assert_eq!(gallop_to(&list, 0, 2), 0);
+        assert_eq!(gallop_to(&list, 0, 7), 3);
+        assert_eq!(gallop_to(&list, 2, 7), 3);
+        assert_eq!(gallop_to(&list, 0, 14), 6);
+        assert_eq!(gallop_to(&list, 0, 15), 7);
+        assert_eq!(gallop_to(&list, 7, 15), 7);
+        assert_eq!(gallop_to(&[], 0, 3), 0);
     }
 }

@@ -15,5 +15,5 @@ mod inverted;
 mod store;
 
 pub use dense::{build_query_weights, pack_block, PackedBlock, Packer};
-pub use inverted::InvertedIndex;
+pub use inverted::{InvertedIndex, RetrievalScratch};
 pub use store::{GlobalStats, Shard, ShardDoc, ShardStats};

@@ -166,6 +166,15 @@ pub fn measure_traditional(sys: &mut TraditionalSearch, queries: &[String]) -> R
 /// systems on identical deployments. GAPS runs one warmup pass so its
 /// perf-history planner has data (the paper's system is long-running).
 pub fn run_node_sweep(cfg: &GapsConfig, node_counts: &[usize]) -> Result<Sweep> {
+    // Sweeps measure with serial dispatch: the accounted timelines
+    // already model node-level parallelism (slowest branch dominates a
+    // barrier), and running jobs concurrently on the host would let
+    // cross-thread contention inflate each job's measured work_s and
+    // skew the figure curves. Real wall-clock fan-out speedup is
+    // measured separately (benches/fig3_response_time.rs bench_fanout).
+    let mut cfg = cfg.clone();
+    cfg.search.workers = 1;
+    let cfg = &cfg;
     let mut points = Vec::with_capacity(node_counts.len());
     let mut queries_out = Vec::new();
     // The analyzed corpus does not depend on node count (sources are
@@ -282,14 +291,18 @@ impl Sweep {
 /// of re-running identical experiments. Delete target/sweep_cache to
 /// force fresh measurements.
 pub fn cached_node_sweep(cfg: &GapsConfig, node_counts: &[usize]) -> Result<Sweep> {
+    // workers is in the key defensively: run_node_sweep currently forces
+    // serial dispatch, but a cached sweep must never be reused across
+    // execution modes if that ever changes.
     let key = format!(
-        "docs{}_q{}_s{}_shards{}_seed{}_xla{}_counts{}",
+        "docs{}_q{}_s{}_shards{}_seed{}_xla{}_w{}_counts{}",
         cfg.workload.num_docs,
         cfg.workload.num_queries,
         cfg.workload.seed,
         cfg.workload.sub_shards,
         cfg.grid.seed,
         cfg.search.use_xla,
+        cfg.search.workers,
         node_counts.iter().map(|n| n.to_string()).collect::<Vec<_>>().join("-"),
     );
     let dir = std::path::Path::new("target/sweep_cache");

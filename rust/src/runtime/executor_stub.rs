@@ -1,0 +1,78 @@
+//! Stub executor: compiled in when the `xla` feature is off.
+//!
+//! The offline crate set does not always carry the `xla` PJRT bindings,
+//! so the real executor (executor.rs) is feature-gated. This stub keeps
+//! the whole coordinator/service surface compiling unchanged: it exposes
+//! the same API and fails cleanly at construction, which `GapsSystem::
+//! from_deployment` surfaces as a deploy-time error when `use_xla = true`.
+//! Every artifact-free path (rust scorer, benches, tests) never touches
+//! it.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::artifacts::Manifest;
+use crate::index::{GlobalStats, PackedBlock, Shard};
+use crate::text::NUM_FIELDS;
+
+/// Ranked output for one query row: (block-local index, score).
+pub type RankOutput = Vec<(u32, f32)>;
+
+/// Never constructed without the `xla` feature; the field exists so the
+/// accessors below typecheck against the real executor's signatures.
+pub struct Executor {
+    manifest: Manifest,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor").field("stub", &true).finish()
+    }
+}
+
+impl Executor {
+    pub fn new(_dir: &Path) -> Result<Executor> {
+        bail!(
+            "built without the `xla` feature: the PJRT runtime is unavailable \
+             (set search.use_xla = false / pass --no-xla, or rebuild with \
+             --features xla in an environment that vendors the xla crate)"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn executions(&self) -> u64 {
+        0
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn rank_candidates(
+        &mut self,
+        _shard: &Shard,
+        _stats: &GlobalStats,
+        _candidates: &[u32],
+        _qw: &[f32],
+        _q_count: usize,
+        _field_w: &[f32; NUM_FIELDS],
+        _b: f32,
+    ) -> Result<Vec<RankOutput>> {
+        bail!("xla feature disabled")
+    }
+
+    pub fn rank(
+        &mut self,
+        _block: &PackedBlock,
+        _qw: &[f32],
+        _q_count: usize,
+        _field_w: &[f32; NUM_FIELDS],
+    ) -> Result<Vec<RankOutput>> {
+        bail!("xla feature disabled")
+    }
+}

@@ -8,11 +8,21 @@
 //!
 //! Threading: the `xla` crate's PJRT handles are raw pointers without
 //! Send/Sync, so the executor is owned by the coordinator thread and all
-//! artifact executions are serialized through it. On this 1-core testbed
-//! that costs nothing; node-level parallelism is accounted through the
-//! simulated timelines (DESIGN.md §Substitutions).
+//! artifact executions are serialized through it (the coordinator's
+//! parallel shard fan-out applies to the rust-scorer path only);
+//! node-level parallelism is accounted through the simulated timelines
+//! (DESIGN.md §Substitutions).
+//!
+//! Build gating: the real executor needs the `xla` crate, which the
+//! offline crate set may lack — it compiles behind the `xla` feature,
+//! with `executor_stub.rs` standing in otherwise (same API, errors at
+//! construction).
 
 mod artifacts;
+#[cfg(feature = "xla")]
+mod executor;
+#[cfg(not(feature = "xla"))]
+#[path = "executor_stub.rs"]
 mod executor;
 
 pub use artifacts::{ArtifactSpec, Manifest};

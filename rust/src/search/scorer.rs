@@ -69,11 +69,9 @@ pub fn score_block_rust(
 /// descending, ties by index ascending. Skips padding rows >= `n_real`.
 pub fn topk_row(scores: &[f32], n_real: usize, k: usize) -> Vec<(u32, f32)> {
     let mut idx: Vec<u32> = (0..n_real.min(scores.len()) as u32).collect();
+    // total_cmp: NaN scores sort deterministically instead of panicking.
     idx.sort_unstable_by(|&a, &b| {
-        scores[b as usize]
-            .partial_cmp(&scores[a as usize])
-            .unwrap()
-            .then(a.cmp(&b))
+        scores[b as usize].total_cmp(&scores[a as usize]).then(a.cmp(&b))
     });
     idx.truncate(k);
     idx.into_iter().map(|i| (i, scores[i as usize])).collect()

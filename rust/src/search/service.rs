@@ -17,11 +17,23 @@
 //! overheads are added by the coordinator (they belong to the grid, not
 //! the service).
 
+use std::cell::RefCell;
+
 use crate::config::SearchConfig;
-use crate::index::{build_query_weights, pack_block, GlobalStats, Shard};
+use crate::index::{build_query_weights, pack_block, GlobalStats, RetrievalScratch, Shard};
 #[allow(unused_imports)]
 use crate::runtime::Executor;
 use crate::util::clock::WallClock;
+
+thread_local! {
+    /// Reused retrieval scratch: the counting OR-merge runs against this
+    /// instead of allocating a `HashMap` per query. Thread-local (not a
+    /// `SearchService` field) because the coordinator fans search jobs
+    /// out over scoped worker threads; each worker warms its own scratch
+    /// and reuses it across every shard it serves.
+    static RETRIEVAL_SCRATCH: RefCell<RetrievalScratch> =
+        RefCell::new(RetrievalScratch::new());
+}
 
 use super::query::ParsedQuery;
 use super::scorer::{score_block_rust, topk_row};
@@ -87,12 +99,11 @@ impl SearchService {
             // Pure-filter query (e.g. `year:2014`): all docs are candidates.
             (0..shard.len() as u32).collect()
         } else {
-            shard
-                .inverted
-                .retrieve(&query.buckets, cfg.max_candidates)
-                .into_iter()
-                .map(|(id, _)| id)
-                .collect()
+            RETRIEVAL_SCRATCH.with(|s| {
+                let mut s = s.borrow_mut();
+                shard.inverted.retrieve_into(&query.buckets, cfg.max_candidates, &mut s);
+                s.hits().iter().map(|&(id, _)| id).collect()
+            })
         };
 
         // Multivariate filters.
@@ -169,12 +180,10 @@ impl SearchService {
             }
         }
 
-        // Local top-k across chunks.
+        // Local top-k across chunks. total_cmp: a NaN score (corrupt
+        // artifact output) must not panic the service.
         all_hits.sort_by(|a, b| {
-            b.score
-                .partial_cmp(&a.score)
-                .unwrap()
-                .then(a.global_id.cmp(&b.global_id))
+            b.score.total_cmp(&a.score).then(a.global_id.cmp(&b.global_id))
         });
         all_hits.truncate(cfg.top_k);
 

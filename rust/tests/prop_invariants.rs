@@ -120,6 +120,141 @@ fn prop_merge_contains_global_max() {
     );
 }
 
+// ---------------------------------------------------------------- retrieval
+
+/// Differential oracle: the CSR arena + scratch + bounded-heap retrieval
+/// must return identical (doc, count) sets *and order* to the naive
+/// HashMap + full-sort reference (the seed implementation, kept as
+/// `retrieve_reference`). One scratch is reused across every case so
+/// stale-state bugs (unclean sparse clear) surface too.
+#[test]
+fn prop_csr_retrieval_matches_naive_reference() {
+    use gaps::corpus::{CorpusGenerator, CorpusSpec};
+    use gaps::index::{RetrievalScratch, Shard};
+
+    const FEATURES: usize = 256;
+    let gen = CorpusGenerator::new(CorpusSpec {
+        num_docs: 400,
+        vocab_size: 500,
+        ..CorpusSpec::default()
+    });
+    let shard = Shard::build(0, gen.generate_range(0, 400), FEATURES);
+    let scratch = std::cell::RefCell::new(RetrievalScratch::new());
+
+    check(
+        "csr-retrieval-differential",
+        &prop_cfg(400),
+        |rng, size| {
+            let n = rng.range(1, size.max(2));
+            // Duplicates + out-of-range buckets allowed on purpose.
+            let buckets: Vec<u32> =
+                (0..n).map(|_| rng.below(FEATURES as u64 + 8) as u32).collect();
+            let k = rng.range(1, 80);
+            (buckets, k)
+        },
+        |(buckets, k)| {
+            let mut s = scratch.borrow_mut();
+            shard.inverted.retrieve_into(buckets, *k, &mut s);
+            let want = shard.inverted.retrieve_reference(buckets, *k);
+            if s.hits() == want.as_slice() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "csr returned {} hits, naive {} (k={k}); first diff at {:?}",
+                    s.hits().len(),
+                    want.len(),
+                    s.hits().iter().zip(&want).position(|(a, b)| a != b),
+                ))
+            }
+        },
+    );
+}
+
+/// AND-retrieval differential: the galloping intersection must equal a
+/// straightforward retain/binary-search intersection.
+#[test]
+fn prop_galloping_intersection_matches_naive() {
+    use gaps::corpus::{CorpusGenerator, CorpusSpec};
+    use gaps::index::Shard;
+
+    const FEATURES: usize = 128;
+    let gen = CorpusGenerator::new(CorpusSpec {
+        num_docs: 300,
+        vocab_size: 400,
+        ..CorpusSpec::default()
+    });
+    let shard = Shard::build(0, gen.generate_range(0, 300), FEATURES);
+
+    check(
+        "galloping-intersection-differential",
+        &prop_cfg(300),
+        |rng, size| {
+            let n = rng.range(1, size.max(2).min(6));
+            (0..n).map(|_| rng.below(FEATURES as u64) as u32).collect::<Vec<u32>>()
+        },
+        |buckets| {
+            let got = shard.inverted.retrieve_all(buckets);
+            // Naive: intersect via per-element binary search.
+            let mut uniq = buckets.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            let mut want: Vec<u32> = shard.inverted.postings(uniq[0]).to_vec();
+            for b in &uniq[1..] {
+                let list = shard.inverted.postings(*b);
+                want.retain(|d| list.binary_search(d).is_ok());
+            }
+            want.sort_unstable();
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("gallop {} docs != naive {} docs", got.len(), want.len()))
+            }
+        },
+    );
+}
+
+/// Cross-replica dedup: when several nodes return the same document (the
+/// replica placement guarantees identical scores), the merged top-k must
+/// contain it exactly once and still fill up from the remaining lists.
+#[test]
+fn prop_merge_dedups_replica_lists() {
+    check(
+        "merge-replica-dedup",
+        &prop_cfg(300),
+        |rng, size| {
+            let lists = gen_sorted_lists(rng, size);
+            // Duplicate one list wholesale (a replica answering the same
+            // sources) and permute the pair's position.
+            let mut with_replica = lists.clone();
+            if let Some(l) = lists.first() {
+                with_replica.push(l.clone());
+            }
+            (lists, with_replica, rng.range(1, 16))
+        },
+        |(lists, with_replica, k)| {
+            let base = merge_topk(lists, *k);
+            let dedup = merge_topk(with_replica, *k);
+            // Identical output: the replica contributes nothing new.
+            if base.len() != dedup.len() {
+                return Err(format!("replica changed len {} -> {}", base.len(), dedup.len()));
+            }
+            for (a, b) in base.iter().zip(&dedup) {
+                if a.global_id != b.global_id || a.score != b.score {
+                    return Err(format!("replica changed hit {a:?} -> {b:?}"));
+                }
+            }
+            // And no id appears twice.
+            let mut ids: Vec<u64> = dedup.iter().map(|h| h.global_id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != dedup.len() {
+                return Err("duplicate global_id in merged top-k".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---------------------------------------------------------------- scheduler
 
 struct PlanCase {
