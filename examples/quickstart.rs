@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use gaps::config::GapsConfig;
 use gaps::coordinator::GapsSystem;
+use gaps::search::{Field, SearchRequest};
 use gaps::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -50,6 +51,25 @@ fn main() -> Result<()> {
     println!("== multivariate search (field + year filters) ==");
     let (rendered, _) = gaps::usi::one_shot(&mut sys, "title:grid scheduling year:2005..2012")?;
     print!("{rendered}");
+    println!();
+
+    // --- typed request builder + batched execution ----------------------
+    println!("== typed requests, one batched fan-out ==");
+    let requests = vec![
+        SearchRequest::new("\"grid computing\" -cloud").top_k(3),
+        SearchRequest::new("storage AND replication").top_k(3),
+        SearchRequest::new("scheduling")
+            .require(Field::Venue, "conference")
+            .year(2005..=2012)
+            .explain(true),
+    ];
+    for (req, result) in requests.iter().zip(sys.search_batch(&requests)) {
+        println!("-- {:?} --", req.query);
+        match result {
+            Ok(resp) => print!("{}", gaps::usi::format_response(&resp)),
+            Err(e) => println!("error [{}]: {e}", e.kind()),
+        }
+    }
     println!();
 
     // --- grid dynamicity -------------------------------------------------

@@ -96,7 +96,7 @@ fn batching_ablation() {
     let block = pack_block(&shard, &stats, &candidates, 1024, 0.75);
     let queries: Vec<Vec<u32>> = (0..8)
         .map(|i| {
-            gaps::search::ParsedQuery::parse(&shard.pubs[i * 11].title, 512)
+            gaps::search::Query::parse(&shard.pubs[i * 11].title, 512)
                 .unwrap()
                 .buckets
         })

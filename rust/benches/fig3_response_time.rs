@@ -34,7 +34,7 @@ use gaps::coordinator::{Deployment, GapsSystem};
 use gaps::corpus::{CorpusGenerator, CorpusSpec};
 use gaps::index::{RetrievalScratch, Shard};
 use gaps::metrics::{cached_node_sweep, sample_queries};
-use gaps::search::ParsedQuery;
+use gaps::search::{Query, SearchRequest};
 use gaps::util::bench::Table;
 use gaps::util::json::Json;
 use gaps::util::rng::Rng;
@@ -62,7 +62,7 @@ fn bench_retrieval_micro(features: usize) -> Json {
         attempts += 1;
         assert!(attempts <= 100_000, "corpus yields no usable queries — check CorpusSpec");
         let raw = gen.sample_query(&mut rng);
-        let Ok(q) = ParsedQuery::parse(&raw, features) else { continue };
+        let Ok(q) = Query::parse(&raw, features) else { continue };
         if q.buckets.len() >= 4 {
             queries.push(q.buckets[..4].to_vec());
         } else if attempts > 10_000 && !q.buckets.is_empty() {
@@ -179,6 +179,67 @@ fn bench_fanout(cfg: &GapsConfig) -> Json {
     ])
 }
 
+/// Batched QPS: one `search_batch` of N typed requests (one plan + one
+/// fan-out round + Q>1 scoring rows) vs N sequential `search_request`
+/// calls over the same deployment bits.
+fn bench_batch(cfg: &GapsConfig) -> Json {
+    let nodes = 4usize;
+    let dep = Arc::new(Deployment::build(cfg, nodes).expect("deploy"));
+    let queries = sample_queries(&dep, cfg.workload.num_queries.max(16), 0xBA7C);
+    let requests: Vec<SearchRequest> =
+        queries.iter().map(|q| SearchRequest::new(q.clone())).collect();
+    let n = requests.len();
+
+    let mut c = cfg.clone();
+    c.search.use_xla = false;
+    let mut sys = GapsSystem::from_deployment(c, Arc::clone(&dep)).expect("system");
+    // Warm both paths.
+    for r in sys.search_batch(&requests) {
+        r.expect("warmup batch");
+    }
+    for r in &requests {
+        sys.search_request(r).expect("warmup serial");
+    }
+
+    let rounds = 3usize;
+    let mut serial_s = f64::INFINITY;
+    let mut batch_s = f64::INFINITY;
+    for _ in 0..rounds {
+        let t = Instant::now();
+        for r in &requests {
+            std::hint::black_box(sys.search_request(r).expect("serial search"));
+        }
+        serial_s = serial_s.min(t.elapsed().as_secs_f64());
+
+        let t = Instant::now();
+        for r in std::hint::black_box(sys.search_batch(&requests)) {
+            r.expect("batched search");
+        }
+        batch_s = batch_s.min(t.elapsed().as_secs_f64());
+    }
+    let serial_qps = n as f64 / serial_s.max(1e-12);
+    let batch_qps = n as f64 / batch_s.max(1e-12);
+    println!(
+        "\n== batched execution ({n} queries, {nodes} nodes) ==\n\
+         serial  {:8.2} ms total  ({serial_qps:8.1} qps)\n\
+         batched {:8.2} ms total  ({batch_qps:8.1} qps)\n\
+         speedup = {:.2}x",
+        serial_s * 1e3,
+        batch_s * 1e3,
+        batch_qps / serial_qps.max(1e-12),
+    );
+
+    Json::obj(vec![
+        ("nodes", Json::from(nodes)),
+        ("queries", Json::from(n)),
+        ("serial_ms", Json::from(serial_s * 1e3)),
+        ("batch_ms", Json::from(batch_s * 1e3)),
+        ("serial_qps", Json::from(serial_qps)),
+        ("batch_qps", Json::from(batch_qps)),
+        ("speedup", Json::from(batch_qps / serial_qps.max(1e-12))),
+    ])
+}
+
 fn main() {
     let mut cfg = GapsConfig::default();
     cfg.workload.num_docs = env_usize("GAPS_BENCH_DOCS", 60_000) as u64;
@@ -219,9 +280,10 @@ fn main() {
     print!("{}", t.render());
     t.write_csv("fig3_response_time");
 
-    // Retrieval-core trajectory (micro + fan-out), tracked across PRs.
+    // Retrieval-core trajectory (micro + fan-out + batch), tracked across PRs.
     let micro = bench_retrieval_micro(cfg.search.features);
     let fanout = bench_fanout(&cfg);
+    let batch = bench_batch(&cfg);
     let micro_speedup = micro.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let fan_speedup = fanout.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let fan_workers = fanout.get("workers").and_then(|v| v.as_i64()).unwrap_or(1);
@@ -246,6 +308,7 @@ fn main() {
         ("bench", Json::str("retrieval")),
         ("micro", micro),
         ("fanout", fanout),
+        ("batch", batch),
         ("sweep", sweep_json),
     ]);
     let path = "BENCH_retrieval.json";

@@ -9,7 +9,7 @@
 
 use gaps::config::GapsConfig;
 use gaps::coordinator::GapsSystem;
-use gaps::search::ParsedQuery;
+use gaps::search::Query;
 use gaps::util::bench::{black_box, Bencher, Table};
 use gaps::util::stats::Summary;
 
@@ -64,7 +64,7 @@ fn main() {
     // --- microbenchmarks of the USI parts ------------------------------
     let bencher = Bencher::quick();
     let mut parse = bencher.run("parse multivariate query", || {
-        black_box(ParsedQuery::parse("title:grid scheduling year:2005..2012", 512).unwrap());
+        black_box(Query::parse("title:grid scheduling year:2005..2012", 512).unwrap());
     });
     println!("\n{}", parse.report_line());
     let resp = sys.search("grid computing scheduling").expect("query");

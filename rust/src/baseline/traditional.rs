@@ -15,21 +15,23 @@
 //! * no perf-history database, no adaptation.
 //!
 //! Everything else — corpus, analysis, scoring (same AOT artifacts or
-//! rust scorer), merge — is identical to GAPS, so differences are purely
-//! coordination. See DESIGN.md §Substitutions.
+//! rust scorer), merge, and the typed [`SearchRequest`] surface — is
+//! identical to GAPS, so differences are purely coordination. See
+//! DESIGN.md §Substitutions.
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
-
 use crate::config::{GapsConfig, SchedulePolicy};
-use crate::coordinator::{
-    merge_topk, Deployment, ExecutionPlan, Hit, PerfDb, QueryExecutionEngine, SearchResponse,
-};
 use crate::coordinator::result_wire_bytes;
+use crate::coordinator::{
+    merge_topk, Deployment, ExecutionPlan, Explain, Hit, PerfDb, QueryExecutionEngine,
+    SearchResponse,
+};
 use crate::grid::NodeId;
 use crate::runtime::Executor;
-use crate::search::{LocalHit, ParsedQuery, Scorer, SearchService};
+use crate::search::{
+    LocalHit, Query, ReplicaPref, Scorer, SearchError, SearchRequest, SearchService,
+};
 use crate::util::clock::{TaskTimeline, WallClock};
 
 /// The deployed traditional (centralized) search system.
@@ -53,9 +55,15 @@ impl std::fmt::Debug for TraditionalSearch {
 
 impl TraditionalSearch {
     /// Deploy over a shared deployment (same data as the GAPS system).
-    pub fn from_deployment(cfg: GapsConfig, dep: Arc<Deployment>) -> Result<TraditionalSearch> {
+    pub fn from_deployment(
+        cfg: GapsConfig,
+        dep: Arc<Deployment>,
+    ) -> Result<TraditionalSearch, SearchError> {
         let executor = if cfg.search.use_xla {
-            Some(Executor::new(std::path::Path::new(&cfg.search.artifact_dir))?)
+            Some(
+                Executor::new(std::path::Path::new(&cfg.search.artifact_dir))
+                    .map_err(SearchError::executor)?,
+            )
         } else {
             None
         };
@@ -69,7 +77,7 @@ impl TraditionalSearch {
     }
 
     /// Build fabric + data and deploy.
-    pub fn deploy(cfg: GapsConfig, n_nodes: usize) -> Result<TraditionalSearch> {
+    pub fn deploy(cfg: GapsConfig, n_nodes: usize) -> Result<TraditionalSearch, SearchError> {
         let dep = Arc::new(Deployment::build(&cfg, n_nodes)?);
         Self::from_deployment(cfg, dep)
     }
@@ -78,13 +86,24 @@ impl TraditionalSearch {
         &self.dep
     }
 
-    /// Execute one query through the centralized flow.
-    pub fn search(&mut self, raw: &str) -> Result<SearchResponse> {
-        let plan_clock = WallClock::start();
-        let query = ParsedQuery::parse(raw, self.cfg.search.features)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    /// Execute one raw query string through the centralized flow.
+    pub fn search(&mut self, raw: &str) -> Result<SearchResponse, SearchError> {
+        self.search_request(&SearchRequest::new(raw))
+    }
 
-        // Uniform (round-robin) plan, blind to speeds and history.
+    /// Execute one typed request through the centralized flow.
+    pub fn search_request(
+        &mut self,
+        request: &SearchRequest,
+    ) -> Result<SearchResponse, SearchError> {
+        let plan_clock = WallClock::start();
+        let compiled = request.compile(self.cfg.search.features, self.cfg.search.top_k)?;
+        let top_k = compiled.top_k;
+        let query: &Query = &compiled.query;
+
+        // Uniform (round-robin) plan, blind to speeds and history — and
+        // blind to replica preferences too (a grid-era feature the
+        // traditional system does not have).
         let available: Vec<_> = self
             .dep
             .active
@@ -97,6 +116,8 @@ impl TraditionalSearch {
             &available,
             &PerfDb::default(),
             SchedulePolicy::RoundRobin,
+            ReplicaPref::Any,
+            None,
         )?;
         let plan_s = plan_clock.elapsed_s();
 
@@ -104,6 +125,8 @@ impl TraditionalSearch {
         let coord_info = self.dep.fabric.node(self.coordinator).clone();
         let dispatch_s = self.cfg.grid.dispatch_ms * 1e-3;
         let cold_start_s = self.cfg.grid.cold_start_ms * 1e-3;
+        // The request JSON is invariant across nodes: serialize once.
+        let request_wire = request.wire_bytes();
 
         let mut branches: Vec<TaskTimeline> = Vec::new();
         let mut lists: Vec<Vec<LocalHit>> = Vec::new();
@@ -116,21 +139,26 @@ impl TraditionalSearch {
             let mut work_measured = 0.0f64;
             let mut node_hits: Vec<Vec<LocalHit>> = Vec::new();
             for sid in source_ids {
-                let shard = self.dep.shard(*sid).context("unknown source")?;
+                let shard = self
+                    .dep
+                    .shard(*sid)
+                    .ok_or(SearchError::SourceUnknown { source: *sid })?;
                 let mut scorer = match self.executor.as_mut() {
                     Some(e) => Scorer::Xla(e),
                     None => Scorer::Rust,
                 };
-                let out = self.service.search(shard, &self.dep.stats, &query, &mut scorer)?;
+                let batch = [(query, top_k)];
+                let outs = self.service.search_batch(shard, &self.dep.stats, &batch, &mut scorer)?;
+                let out = outs.into_iter().next().expect("one outcome");
                 work_measured += out.work_s;
                 total_candidates += out.candidates;
                 total_docs += out.shard_docs as u64;
                 node_hits.push(out.hits);
             }
-            let hits = merge_topk(&node_hits, self.cfg.search.top_k);
-            // JDF-equivalent request: query + source list, coarse estimate
-            // mirroring coordinator::jdf wire sizes.
-            let request_bytes = 96 + raw.len() + 8 * source_ids.len();
+            let hits = merge_topk(&node_hits, top_k);
+            // Request-equivalent wire cost: the same typed-request JSON
+            // the JDF ships, plus the source list.
+            let request_bytes = 96 + request_wire + 8 * source_ids.len();
             let branch = TaskTimeline {
                 work_s: work_measured / node_info.speed_factor,
                 net_s: net.transfer_between_s(&coord_info, &node_info, request_bytes)
@@ -154,7 +182,7 @@ impl TraditionalSearch {
         timeline.add(slowest);
 
         let merge_clock = WallClock::start();
-        let merged = merge_topk(&lists, self.cfg.search.top_k);
+        let merged = merge_topk(&lists, top_k);
         timeline.work_s += merge_clock.elapsed_s();
 
         let hits = merged
@@ -170,13 +198,24 @@ impl TraditionalSearch {
             })
             .collect();
 
+        let explain = compiled.explain.then(|| Explain {
+            ast: query.ast.to_string(),
+            keywords: query.keywords.clone(),
+            batch_size: 1, // the traditional system has no batching
+            plan: plan
+                .assignments
+                .iter()
+                .map(|(n, s)| (n.to_string(), s.len()))
+                .collect(),
+        });
         Ok(SearchResponse {
-            query: raw.to_string(),
+            query: request.query.clone(),
             hits,
             timeline,
             jobs: plan.assignments.len(),
             candidates: total_candidates,
             docs_scanned: total_docs,
+            explain,
         })
     }
 }
@@ -210,6 +249,21 @@ mod tests {
         for (gh, th) in g.hits.iter().zip(&t.hits) {
             assert!((gh.score - th.score).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn typed_request_top_k_applies() {
+        let mut trad = TraditionalSearch::deploy(small_cfg(), 4).unwrap();
+        let resp = trad
+            .search_request(&SearchRequest::new("grid data search").top_k(2))
+            .unwrap();
+        assert!(resp.hits.len() <= 2);
+    }
+
+    #[test]
+    fn parse_errors_are_typed() {
+        let mut trad = TraditionalSearch::deploy(small_cfg(), 2).unwrap();
+        assert_eq!(trad.search("the of and").unwrap_err().kind(), "parse");
     }
 
     #[test]

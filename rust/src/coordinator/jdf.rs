@@ -6,10 +6,17 @@
 //! on the search process ... the user query text as well as the location
 //! that should receive the result of the search."
 //!
-//! JDFs serialize to JSON; their byte length is what the network model
-//! charges for dispatch transfers.
+//! A JDF now carries the whole **typed request batch** (one
+//! [`SearchRequest`] per query) rather than one raw query string: the
+//! request's JSON wire form is shared between the JDF, the response
+//! envelope, and a future HTTP front-end, so every boundary speaks one
+//! serialization. JDF byte length is what the network model charges for
+//! dispatch transfers.
+
+use std::sync::Arc;
 
 use crate::grid::NodeId;
+use crate::search::SearchRequest;
 use crate::util::json::Json;
 
 /// Grid-wide job identifier.
@@ -22,21 +29,23 @@ impl std::fmt::Display for JobId {
     }
 }
 
-/// One search job: a query to run over a set of data sources on a node.
+/// One search job: a request batch to run over a set of data sources on
+/// a node.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobDescription {
     pub id: JobId,
-    /// Raw query text (the worker re-parses against its local analyzer —
-    /// the paper ships query text, not parsed structures).
-    pub query: String,
+    /// The typed request batch, shared across the batch's JDFs (one
+    /// `Arc` per fan-out, not one clone per node — the QM's job table
+    /// retains every JDF it ever made). Workers re-compile against
+    /// their local analyzer: the paper ships query text, not parsed
+    /// structures.
+    pub requests: Arc<Vec<SearchRequest>>,
     /// Executing node.
     pub node: NodeId,
     /// Data source ids (sub-shards) this job must search.
     pub sources: Vec<u32>,
     /// Node that receives the result (the VO broker).
     pub reply_to: NodeId,
-    /// Results wanted per query.
-    pub top_k: usize,
 }
 
 impl JobDescription {
@@ -44,11 +53,10 @@ impl JobDescription {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::from(self.id.0)),
-            ("query", Json::str(&self.query)),
+            ("requests", Json::Arr(self.requests.iter().map(|r| r.to_json()).collect())),
             ("node", Json::from(self.node.0 as i64)),
             ("sources", Json::Arr(self.sources.iter().map(|s| Json::from(*s as i64)).collect())),
             ("reply_to", Json::from(self.reply_to.0 as i64)),
-            ("top_k", Json::from(self.top_k)),
         ])
     }
 
@@ -56,7 +64,13 @@ impl JobDescription {
     pub fn from_json(v: &Json) -> Option<JobDescription> {
         Some(JobDescription {
             id: JobId(v.get("id")?.as_i64()? as u64),
-            query: v.get("query")?.as_str()?.to_string(),
+            requests: Arc::new(
+                v.get("requests")?
+                    .as_arr()?
+                    .iter()
+                    .map(SearchRequest::from_json)
+                    .collect::<Option<Vec<_>>>()?,
+            ),
             node: NodeId(v.get("node")?.as_i64()? as u32),
             sources: v
                 .get("sources")?
@@ -65,7 +79,6 @@ impl JobDescription {
                 .map(|x| x.as_i64().map(|i| i as u32))
                 .collect::<Option<Vec<_>>>()?,
             reply_to: NodeId(v.get("reply_to")?.as_i64()? as u32),
-            top_k: v.get("top_k")?.as_i64()? as usize,
         })
     }
 
@@ -78,15 +91,20 @@ impl JobDescription {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::search::ReplicaPref;
 
     fn sample() -> JobDescription {
         JobDescription {
             id: JobId(7),
-            query: "grid computing year:2010..2014".into(),
+            requests: Arc::new(vec![
+                SearchRequest::new("grid computing year:2010..2014"),
+                SearchRequest::new("\"data replication\"")
+                    .top_k(5)
+                    .prefer_replicas(ReplicaPref::SameVo),
+            ]),
             node: NodeId(3),
             sources: vec![1, 5, 9],
             reply_to: NodeId(0),
-            top_k: 10,
         }
     }
 
@@ -104,11 +122,27 @@ mod tests {
         big.sources = (0..100).collect();
         assert!(big.wire_bytes() > small.wire_bytes());
         assert!(small.wire_bytes() > 50);
+        // A bigger batch also costs more wire.
+        let mut batched = sample();
+        let mut reqs = (*batched.requests).clone();
+        reqs.extend((0..8).map(|i| SearchRequest::new(format!("query {i}"))));
+        batched.requests = Arc::new(reqs);
+        assert!(batched.wire_bytes() > small.wire_bytes());
     }
 
     #[test]
     fn from_json_rejects_missing_fields() {
         let v = Json::parse(r#"{"id": 1}"#).unwrap();
         assert!(JobDescription::from_json(&v).is_none());
+    }
+
+    #[test]
+    fn request_serialization_is_shared_with_the_jdf() {
+        // The JDF embeds SearchRequest::to_json verbatim: parsing the
+        // embedded object with the request parser yields the request.
+        let jdf = sample();
+        let wire = jdf.to_json();
+        let embedded = wire.get("requests").unwrap().as_arr().unwrap();
+        assert_eq!(SearchRequest::from_json(&embedded[0]).unwrap(), jdf.requests[0]);
     }
 }

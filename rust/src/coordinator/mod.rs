@@ -39,4 +39,4 @@ pub use perf::PerfDb;
 pub use qee::{ExecutionPlan, QueryExecutionEngine};
 pub use qm::{JobStatus, QueryManager};
 pub use resource_manager::ResourceManager;
-pub use system::{CorpusData, Deployment, GapsSystem, Hit, SearchResponse};
+pub use system::{CorpusData, Deployment, Explain, GapsSystem, Hit, SearchResponse};

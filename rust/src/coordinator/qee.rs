@@ -1,5 +1,5 @@
-//! Query Execution Engine (QEE): turns (query, sources, resources, perf
-//! history) into an execution plan.
+//! Query Execution Engine (QEE): turns (query batch, sources, resources,
+//! perf history) into an execution plan.
 //!
 //! Paper: "The QEE determines the nodes that will perform a search at run
 //! time by utilizing its internal modules ... The execution plan that
@@ -10,13 +10,15 @@
 //! first) go to the live replica that will finish earliest under the
 //! perf-history throughput estimates. The round-robin policy (used by the
 //! traditional baseline and as an ablation) ignores history and speeds.
+//! A request's [`ReplicaPref`] narrows the replica choice before either
+//! policy runs (replicas host identical data, so preference shifts where
+//! work runs, never what is returned).
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
-
 use crate::config::SchedulePolicy;
-use crate::grid::{NodeId, NodeInfo};
+use crate::grid::{NodeId, NodeInfo, VoId};
+use crate::search::{ReplicaPref, SearchError};
 
 use super::locator::DataSource;
 use super::perf::PerfDb;
@@ -47,36 +49,61 @@ pub struct QueryExecutionEngine;
 
 impl QueryExecutionEngine {
     /// Build an execution plan covering every source exactly once, using
-    /// only `available` nodes.
+    /// only `available` nodes. `pref` narrows replica choice; `home_vo`
+    /// anchors [`ReplicaPref::SameVo`] (the root broker's VO).
     pub fn plan(
         &self,
         sources: &[&DataSource],
         available: &[NodeInfo],
         perf: &PerfDb,
         policy: SchedulePolicy,
-    ) -> Result<ExecutionPlan> {
+        pref: ReplicaPref,
+        home_vo: Option<VoId>,
+    ) -> Result<ExecutionPlan, SearchError> {
         if sources.is_empty() {
-            bail!("no data sources registered");
+            return Err(SearchError::NoSources);
         }
         let live: std::collections::BTreeSet<NodeId> =
             available.iter().map(|n| n.id).collect();
         if live.is_empty() {
-            bail!("no nodes available");
+            return Err(SearchError::NoNodes);
         }
+        let vo_of: BTreeMap<NodeId, VoId> = available.iter().map(|n| (n.id, n.vo)).collect();
+
+        // Per-source candidate replicas: live, narrowed by preference
+        // (falling back to all live replicas when the preference cannot
+        // be honored — availability beats affinity).
+        let candidates = |s: &DataSource| -> Result<Vec<NodeId>, SearchError> {
+            let live_replicas: Vec<NodeId> =
+                s.replicas.iter().copied().filter(|r| live.contains(r)).collect();
+            if live_replicas.is_empty() {
+                return Err(SearchError::NoLiveReplica { source: s.id });
+            }
+            let preferred: Vec<NodeId> = match pref {
+                ReplicaPref::Any => live_replicas.clone(),
+                ReplicaPref::Primary => s
+                    .replicas
+                    .first()
+                    .filter(|p| live.contains(*p))
+                    .map(|p| vec![*p])
+                    .unwrap_or_default(),
+                ReplicaPref::SameVo => match home_vo {
+                    Some(h) => live_replicas
+                        .iter()
+                        .copied()
+                        .filter(|r| vo_of.get(r) == Some(&h))
+                        .collect(),
+                    None => Vec::new(),
+                },
+            };
+            Ok(if preferred.is_empty() { live_replicas } else { preferred })
+        };
 
         let mut assignments: BTreeMap<NodeId, Vec<u32>> = BTreeMap::new();
         match policy {
             SchedulePolicy::RoundRobin => {
                 for s in sources {
-                    let replicas: Vec<NodeId> = s
-                        .replicas
-                        .iter()
-                        .copied()
-                        .filter(|r| live.contains(r))
-                        .collect();
-                    if replicas.is_empty() {
-                        bail!("source {} has no live replica", s.id);
-                    }
+                    let replicas = candidates(s)?;
                     // Rotate across replicas by source id: uniform spread,
                     // blind to node speed.
                     let node = replicas[s.id as usize % replicas.len()];
@@ -90,19 +117,16 @@ impl QueryExecutionEngine {
                 let mut load_docs: BTreeMap<NodeId, f64> = BTreeMap::new();
                 for s in order {
                     let mut best: Option<(f64, NodeId)> = None;
-                    for r in &s.replicas {
-                        if !live.contains(r) {
-                            continue;
-                        }
-                        let tput = perf.estimate(*r).max(1e-9);
+                    for r in candidates(s)? {
+                        let tput = perf.estimate(r).max(1e-9);
                         let finish =
-                            (load_docs.get(r).copied().unwrap_or(0.0) + s.doc_count as f64) / tput;
+                            (load_docs.get(&r).copied().unwrap_or(0.0) + s.doc_count as f64) / tput;
                         if best.map(|(bf, _)| finish < bf).unwrap_or(true) {
-                            best = Some((finish, *r));
+                            best = Some((finish, r));
                         }
                     }
                     let Some((_, node)) = best else {
-                        bail!("source {} has no live replica", s.id);
+                        return Err(SearchError::NoLiveReplica { source: s.id });
                     };
                     *load_docs.entry(node).or_default() += s.doc_count as f64;
                     assignments.entry(node).or_default().push(s.id);
@@ -134,6 +158,15 @@ mod tests {
         }
     }
 
+    fn plan_any(
+        sources: &[&DataSource],
+        avail: &[NodeInfo],
+        perf: &PerfDb,
+        policy: SchedulePolicy,
+    ) -> Result<ExecutionPlan, SearchError> {
+        QueryExecutionEngine.plan(sources, avail, perf, policy, ReplicaPref::Any, None)
+    }
+
     #[test]
     fn covers_every_source_exactly_once() {
         let sources = vec![
@@ -145,9 +178,7 @@ mod tests {
         let refs: Vec<&DataSource> = sources.iter().collect();
         let avail = vec![node(0), node(1), node(2)];
         for policy in [SchedulePolicy::PerfHistory, SchedulePolicy::RoundRobin] {
-            let plan = QueryExecutionEngine
-                .plan(&refs, &avail, &PerfDb::default(), policy)
-                .unwrap();
+            let plan = plan_any(&refs, &avail, &PerfDb::default(), policy).unwrap();
             assert_eq!(plan.num_sources(), 4, "{policy:?}");
             let mut all: Vec<u32> =
                 plan.assignments.values().flatten().copied().collect();
@@ -168,9 +199,7 @@ mod tests {
             perf.record(NodeId(0), 400, 1.0);
             perf.record(NodeId(1), 100, 1.0);
         }
-        let plan = QueryExecutionEngine
-            .plan(&refs, &avail, &perf, SchedulePolicy::PerfHistory)
-            .unwrap();
+        let plan = plan_any(&refs, &avail, &perf, SchedulePolicy::PerfHistory).unwrap();
         let n0 = plan.assignments.get(&NodeId(0)).map(|v| v.len()).unwrap_or(0);
         let n1 = plan.assignments.get(&NodeId(1)).map(|v| v.len()).unwrap_or(0);
         assert!(n0 > n1, "fast node got {n0}, slow got {n1}");
@@ -186,9 +215,7 @@ mod tests {
         let avail = vec![node(0), node(1)];
         let mut perf = PerfDb::default();
         perf.record(NodeId(0), 1000, 1.0);
-        let plan = QueryExecutionEngine
-            .plan(&refs, &avail, &perf, SchedulePolicy::RoundRobin)
-            .unwrap();
+        let plan = plan_any(&refs, &avail, &perf, SchedulePolicy::RoundRobin).unwrap();
         let n0 = plan.assignments.get(&NodeId(0)).map(|v| v.len()).unwrap_or(0);
         let n1 = plan.assignments.get(&NodeId(1)).map(|v| v.len()).unwrap_or(0);
         assert_eq!(n0, 4);
@@ -201,35 +228,34 @@ mod tests {
         let refs: Vec<&DataSource> = sources.iter().collect();
         let avail = vec![node(1)]; // node 0 is down
         for policy in [SchedulePolicy::PerfHistory, SchedulePolicy::RoundRobin] {
-            let plan = QueryExecutionEngine
-                .plan(&refs, &avail, &PerfDb::default(), policy)
-                .unwrap();
+            let plan = plan_any(&refs, &avail, &PerfDb::default(), policy).unwrap();
             assert_eq!(plan.nodes(), vec![NodeId(1)], "{policy:?}");
         }
     }
 
     #[test]
-    fn unreachable_source_is_an_error() {
+    fn unreachable_source_is_a_typed_error() {
         let sources = vec![src(0, 100, &[5])];
         let refs: Vec<&DataSource> = sources.iter().collect();
         let avail = vec![node(0)];
-        let err = QueryExecutionEngine
-            .plan(&refs, &avail, &PerfDb::default(), SchedulePolicy::PerfHistory)
-            .unwrap_err();
-        assert!(err.to_string().contains("no live replica"));
+        let err =
+            plan_any(&refs, &avail, &PerfDb::default(), SchedulePolicy::PerfHistory).unwrap_err();
+        assert_eq!(err, SearchError::NoLiveReplica { source: 0 });
     }
 
     #[test]
     fn empty_inputs_rejected() {
-        let qee = QueryExecutionEngine;
-        assert!(qee
-            .plan(&[], &[node(0)], &PerfDb::default(), SchedulePolicy::PerfHistory)
-            .is_err());
+        assert_eq!(
+            plan_any(&[], &[node(0)], &PerfDb::default(), SchedulePolicy::PerfHistory)
+                .unwrap_err(),
+            SearchError::NoSources
+        );
         let sources = vec![src(0, 1, &[0])];
         let refs: Vec<&DataSource> = sources.iter().collect();
-        assert!(qee
-            .plan(&refs, &[], &PerfDb::default(), SchedulePolicy::PerfHistory)
-            .is_err());
+        assert_eq!(
+            plan_any(&refs, &[], &PerfDb::default(), SchedulePolicy::PerfHistory).unwrap_err(),
+            SearchError::NoNodes
+        );
     }
 
     #[test]
@@ -238,11 +264,61 @@ mod tests {
             (0..12).map(|i| src(i, 50, &[i % 3, (i % 3 + 1) % 3])).collect();
         let refs: Vec<&DataSource> = sources.iter().collect();
         let avail = vec![node(0), node(1), node(2)];
-        let plan = QueryExecutionEngine
-            .plan(&refs, &avail, &PerfDb::default(), SchedulePolicy::PerfHistory)
-            .unwrap();
+        let plan =
+            plan_any(&refs, &avail, &PerfDb::default(), SchedulePolicy::PerfHistory).unwrap();
         for n in plan.assignments.values() {
             assert_eq!(n.len(), 4, "uniform speeds => equal split: {plan:?}");
         }
+    }
+
+    #[test]
+    fn primary_pref_pins_live_primaries() {
+        let sources: Vec<DataSource> = (0..4).map(|i| src(i, 100, &[1, 0])).collect();
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        let avail = vec![node(0), node(1)];
+        let plan = QueryExecutionEngine
+            .plan(
+                &refs,
+                &avail,
+                &PerfDb::default(),
+                SchedulePolicy::PerfHistory,
+                ReplicaPref::Primary,
+                None,
+            )
+            .unwrap();
+        // Every source's primary is node 1 and it is live: all jobs there.
+        assert_eq!(plan.nodes(), vec![NodeId(1)]);
+        // Primary down: falls back to the secondary instead of failing.
+        let plan2 = QueryExecutionEngine
+            .plan(
+                &refs,
+                &[node(0)],
+                &PerfDb::default(),
+                SchedulePolicy::PerfHistory,
+                ReplicaPref::Primary,
+                None,
+            )
+            .unwrap();
+        assert_eq!(plan2.nodes(), vec![NodeId(0)]);
+    }
+
+    #[test]
+    fn same_vo_pref_keeps_work_home_when_possible() {
+        // Nodes 0..4 are VO 0, nodes 4..8 are VO 1 (node() maps id/4).
+        let sources: Vec<DataSource> = (0..4).map(|i| src(i, 100, &[4, 0])).collect();
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        let avail: Vec<NodeInfo> = (0..8).map(node).collect();
+        let plan = QueryExecutionEngine
+            .plan(
+                &refs,
+                &avail,
+                &PerfDb::default(),
+                SchedulePolicy::PerfHistory,
+                ReplicaPref::SameVo,
+                Some(VoId(0)),
+            )
+            .unwrap();
+        // The VO-0 replica (node 0) hosts everything.
+        assert_eq!(plan.nodes(), vec![NodeId(0)]);
     }
 }

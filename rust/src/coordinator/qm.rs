@@ -7,8 +7,10 @@
 //! the future search tasks."
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::grid::NodeId;
+use crate::search::SearchRequest;
 
 use super::jdf::{JobDescription, JobId};
 use super::perf::PerfDb;
@@ -46,15 +48,15 @@ impl QueryManager {
         Self::default()
     }
 
-    /// Materialize an execution plan into JDFs (one job per node).
-    /// `source_docs(id)` reports a source's document count for the job
-    /// metadata; `reply_to` is the broker collecting results.
+    /// Materialize an execution plan into JDFs (one job per node, each
+    /// carrying the whole request batch behind the caller's shared
+    /// `Arc` — no copy per node or per retained job record).
+    /// `reply_to_of` names the broker collecting each node's results.
     pub fn create_jobs(
         &mut self,
-        query: &str,
+        requests: &Arc<Vec<SearchRequest>>,
         plan: &ExecutionPlan,
         reply_to_of: impl Fn(NodeId) -> NodeId,
-        top_k: usize,
     ) -> Vec<JobDescription> {
         let mut out = Vec::with_capacity(plan.assignments.len());
         for (node, sources) in &plan.assignments {
@@ -62,11 +64,10 @@ impl QueryManager {
             self.next_id += 1;
             let jdf = JobDescription {
                 id,
-                query: query.to_string(),
+                requests: Arc::clone(requests),
                 node: *node,
                 sources: sources.clone(),
                 reply_to: reply_to_of(*node),
-                top_k,
             };
             self.jobs.insert(
                 id,
@@ -129,11 +130,15 @@ mod tests {
         ExecutionPlan { assignments }
     }
 
+    fn reqs(queries: &[&str]) -> Arc<Vec<SearchRequest>> {
+        Arc::new(queries.iter().map(|q| SearchRequest::new(*q)).collect())
+    }
+
     #[test]
     fn creates_one_job_per_node() {
         let mut qm = QueryManager::new();
         let p = plan(&[(0, &[0, 1]), (3, &[2])]);
-        let jobs = qm.create_jobs("grid", &p, |_| NodeId(0), 10);
+        let jobs = qm.create_jobs(&reqs(&["grid"]), &p, |_| NodeId(0));
         assert_eq!(jobs.len(), 2);
         assert_eq!(jobs[0].node, NodeId(0));
         assert_eq!(jobs[1].sources, vec![2]);
@@ -145,11 +150,20 @@ mod tests {
     }
 
     #[test]
+    fn batched_requests_ride_one_job() {
+        let mut qm = QueryManager::new();
+        let p = plan(&[(0, &[0, 1])]);
+        let jobs = qm.create_jobs(&reqs(&["grid", "cloud storage", "archive"]), &p, |_| NodeId(0));
+        assert_eq!(jobs.len(), 1, "a batch still dispatches once per node");
+        assert_eq!(jobs[0].requests.len(), 3);
+    }
+
+    #[test]
     fn lifecycle_and_perf_recording() {
         let mut qm = QueryManager::new();
         let mut perf = PerfDb::default();
         let p = plan(&[(1, &[0])]);
-        let jobs = qm.create_jobs("q", &p, |_| NodeId(0), 5);
+        let jobs = qm.create_jobs(&reqs(&["q"]), &p, |_| NodeId(0));
         let id = jobs[0].id;
         qm.mark_dispatched(id);
         assert_eq!(qm.status(id), Some(JobStatus::Dispatched));
@@ -163,7 +177,7 @@ mod tests {
     fn failed_jobs_tracked() {
         let mut qm = QueryManager::new();
         let p = plan(&[(1, &[0])]);
-        let jobs = qm.create_jobs("q", &p, |_| NodeId(0), 5);
+        let jobs = qm.create_jobs(&reqs(&["q"]), &p, |_| NodeId(0));
         qm.fail(jobs[0].id);
         assert_eq!(qm.status(jobs[0].id), Some(JobStatus::Failed));
         assert_eq!(qm.completed_jobs(), 0);
@@ -173,8 +187,8 @@ mod tests {
     fn ids_monotone_across_queries() {
         let mut qm = QueryManager::new();
         let p = plan(&[(0, &[0])]);
-        let a = qm.create_jobs("q1", &p, |_| NodeId(0), 5)[0].id;
-        let b = qm.create_jobs("q2", &p, |_| NodeId(0), 5)[0].id;
+        let a = qm.create_jobs(&reqs(&["q1"]), &p, |_| NodeId(0))[0].id;
+        let b = qm.create_jobs(&reqs(&["q2"]), &p, |_| NodeId(0))[0].id;
         assert!(b > a);
     }
 }

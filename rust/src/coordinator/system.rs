@@ -1,4 +1,5 @@
-//! The deployed GAPS system: fabric + data + services + `search()`.
+//! The deployed GAPS system: fabric + data + services + the typed search
+//! surface (`search` / `search_request` / `search_batch`).
 //!
 //! Execution topology (paper Fig 1 + §III):
 //!
@@ -14,6 +15,17 @@
 //!          `-- root merges VO lists -> user
 //! ```
 //!
+//! **Batching:** a request batch is planned once, materialized as one JDF
+//! per node carrying every request, and fanned out in one round — the
+//! per-job dispatch slots, container acquisitions, and worker threads are
+//! paid once for the whole batch instead of once per query, and the
+//! Search Services feed all Q query rows through the artifact scoring
+//! path (`SearchService::search_batch`). Every
+//! response in a batch reports the shared batch critical path as its
+//! timeline (all queries complete when the batch completes). Hits and
+//! scores are bit-identical to sequential execution (enforced by
+//! `tests/prop_batch_parity.rs`).
+//!
 //! Timing: real measured compute (`work_s`, scaled by the node's simulated
 //! speed factor) + accounted fabric costs (`net_s`, `overhead_s`). See
 //! DESIGN.md §Substitutions for why this composition is faithful.
@@ -21,14 +33,16 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
 use crate::config::GapsConfig;
 use crate::corpus::{CorpusGenerator, CorpusSpec, Publication};
 use crate::grid::{GridFabric, NodeId};
 use crate::index::{GlobalStats, Shard};
 use crate::runtime::Executor;
-use crate::search::{LocalHit, ParsedQuery, Scorer, SearchService};
+use crate::search::{
+    CompiledRequest, LocalHit, Query, ReplicaPref, Scorer, SearchError, SearchRequest,
+    SearchService,
+};
+use crate::util::json::Json;
 use crate::util::pool::par_map_scoped;
 
 use crate::util::clock::{TaskTimeline, WallClock};
@@ -48,7 +62,9 @@ use super::resource_manager::ResourceManager;
 pub struct CorpusData {
     /// source id -> analyzed sub-shard.
     pub shards: BTreeMap<u32, Shard>,
-    /// (doc_start, doc_count) per source id, in id order.
+    /// (doc_start, doc_count) per source id, in id order (doc_start is
+    /// strictly increasing — the binary search in
+    /// [`Deployment::publication`] relies on it).
     pub ranges: Vec<(u64, u64)>,
     /// The corpus generator (query sampling, record lookups).
     pub generator: CorpusGenerator,
@@ -58,7 +74,7 @@ pub struct CorpusData {
 
 impl CorpusData {
     /// Generate + analyze the corpus as `num_sources` contiguous shards.
-    pub fn build(cfg: &GapsConfig, num_sources: u64) -> Result<CorpusData> {
+    pub fn build(cfg: &GapsConfig, num_sources: u64) -> Result<CorpusData, SearchError> {
         let spec = CorpusSpec {
             seed: cfg.workload.seed,
             num_docs: cfg.workload.num_docs,
@@ -68,7 +84,10 @@ impl CorpusData {
         let num_sources = num_sources.max(1);
         let docs_per = cfg.workload.num_docs / num_sources;
         if docs_per == 0 {
-            bail!("corpus too small: {} docs over {num_sources} sources", cfg.workload.num_docs);
+            return Err(SearchError::config(format!(
+                "corpus too small: {} docs over {num_sources} sources",
+                cfg.workload.num_docs
+            )));
         }
         let mut shards = BTreeMap::new();
         let mut ranges = Vec::with_capacity(num_sources as usize);
@@ -106,7 +125,7 @@ impl Deployment {
     /// Build a deployment from scratch (corpus + placement). Sweeps that
     /// reuse one corpus across node counts should call [`CorpusData::
     /// build`] once and [`Deployment::assemble`] per point instead.
-    pub fn build(cfg: &GapsConfig, n_nodes: usize) -> Result<Deployment> {
+    pub fn build(cfg: &GapsConfig, n_nodes: usize) -> Result<Deployment, SearchError> {
         let num_sources = cfg.workload.sub_shards.max(n_nodes).max(1) as u64;
         let data = Arc::new(CorpusData::build(cfg, num_sources)?);
         Deployment::assemble(cfg, n_nodes, data)
@@ -116,13 +135,24 @@ impl Deployment {
     /// primary (round-robin over active nodes) plus a replica — same-VO
     /// when the VO has another active member (cheap LAN replication),
     /// any other active node otherwise.
-    pub fn assemble(cfg: &GapsConfig, n_nodes: usize, data: Arc<CorpusData>) -> Result<Deployment> {
+    pub fn assemble(
+        cfg: &GapsConfig,
+        n_nodes: usize,
+        data: Arc<CorpusData>,
+    ) -> Result<Deployment, SearchError> {
         let fabric = GridFabric::build(&cfg.grid);
         if n_nodes == 0 || n_nodes > fabric.nodes.len() {
-            bail!("n_nodes {} out of range 1..={}", n_nodes, fabric.nodes.len());
+            return Err(SearchError::config(format!(
+                "n_nodes {} out of range 1..={}",
+                n_nodes,
+                fabric.nodes.len()
+            )));
         }
         if data.features != cfg.search.features {
-            bail!("corpus analyzed with F={}, config wants F={}", data.features, cfg.search.features);
+            return Err(SearchError::config(format!(
+                "corpus analyzed with F={}, config wants F={}",
+                data.features, cfg.search.features
+            )));
         }
         let active = fabric.first_nodes_balanced(n_nodes);
 
@@ -143,7 +173,9 @@ impl Deployment {
                 &data.shards[&(sid as u32)].stats,
             );
         }
-        let stats = locator.global_stats().context("no sources registered")?;
+        let stats = locator
+            .global_stats()
+            .ok_or_else(|| SearchError::config("no sources registered"))?;
         Ok(Deployment { fabric, active, data, locator, stats })
     }
 
@@ -158,17 +190,20 @@ impl Deployment {
     }
 
     /// Look up the publication record behind a corpus-global doc id.
+    /// Binary search over the sorted `(doc_start, doc_count)` ranges —
+    /// this runs once per returned hit per query, so the seed's linear
+    /// scan over all sources was O(sources) on the response hot path.
     pub fn publication(&self, global_id: u64) -> Option<&Publication> {
-        for src in self.locator.sources() {
-            if (src.doc_start..src.doc_start + src.doc_count).contains(&global_id) {
-                return self
-                    .data
-                    .shards
-                    .get(&src.id)
-                    .map(|s| &s.pubs[(global_id - src.doc_start) as usize]);
-            }
+        let ranges = &self.data.ranges;
+        let idx = ranges.partition_point(|&(start, _)| start <= global_id).checked_sub(1)?;
+        let (start, count) = ranges[idx];
+        if global_id >= start + count {
+            return None;
         }
-        None
+        self.data
+            .shards
+            .get(&(idx as u32))
+            .map(|s| &s.pubs[(global_id - start) as usize])
     }
 }
 
@@ -180,19 +215,78 @@ pub struct Hit {
     pub title: String,
 }
 
+/// Diagnostics attached to a response when the request asked for
+/// `explain(true)`: the parsed AST, the scored terms, and the execution
+/// plan the batch ran under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Explain {
+    /// Canonical rendering of the parsed boolean tree.
+    pub ast: String,
+    /// Deduplicated scored keywords.
+    pub keywords: Vec<String>,
+    /// Requests sharing this plan/fan-out round.
+    pub batch_size: usize,
+    /// (node, assigned sources) of the shared execution plan.
+    pub plan: Vec<(String, usize)>,
+}
+
+impl Explain {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ast", Json::str(&self.ast)),
+            ("keywords", Json::Arr(self.keywords.iter().map(|k| Json::str(k.clone())).collect())),
+            ("batch_size", Json::from(self.batch_size)),
+            (
+                "plan",
+                Json::Arr(
+                    self.plan
+                        .iter()
+                        .map(|(n, s)| Json::Arr(vec![Json::str(n.clone()), Json::from(*s)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<Explain> {
+        Some(Explain {
+            ast: v.get("ast")?.as_str()?.to_string(),
+            keywords: v
+                .get("keywords")?
+                .as_arr()?
+                .iter()
+                .map(|k| k.as_str().map(str::to_string))
+                .collect::<Option<Vec<_>>>()?,
+            batch_size: v.get("batch_size")?.as_i64()? as usize,
+            plan: v
+                .get("plan")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr()?;
+                    Some((p.first()?.as_str()?.to_string(), p.get(1)?.as_i64()? as usize))
+                })
+                .collect::<Option<Vec<_>>>()?,
+        })
+    }
+}
+
 /// End-to-end response: hits + the composed timeline.
 #[derive(Debug, Clone)]
 pub struct SearchResponse {
     pub query: String,
     pub hits: Vec<Hit>,
     /// Composed critical-path timeline (work / net / overhead split).
+    /// For a batched request this is the shared batch critical path.
     pub timeline: TaskTimeline,
-    /// Jobs dispatched for this query.
+    /// Jobs dispatched for this query's batch.
     pub jobs: usize,
-    /// Candidates retrieved across all nodes.
+    /// Candidates retrieved across all nodes (this query only).
     pub candidates: usize,
     /// Documents in all searched sources.
     pub docs_scanned: u64,
+    /// Plan/AST diagnostics (present when the request set `explain`).
+    pub explain: Option<Explain>,
 }
 
 impl SearchResponse {
@@ -200,41 +294,123 @@ impl SearchResponse {
     pub fn response_s(&self) -> f64 {
         self.timeline.total_s()
     }
+
+    /// JSON wire form — the envelope a front-end would return. Shares
+    /// the `util::json` substrate with [`SearchRequest`] and the JDF.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("query", Json::str(&self.query)),
+            (
+                "hits",
+                Json::Arr(
+                    self.hits
+                        .iter()
+                        .map(|h| {
+                            Json::obj(vec![
+                                ("id", Json::from(h.global_id)),
+                                ("score", Json::from(h.score as f64)),
+                                ("title", Json::str(&h.title)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "timeline",
+                Json::obj(vec![
+                    ("work_s", Json::from(self.timeline.work_s)),
+                    ("net_s", Json::from(self.timeline.net_s)),
+                    ("overhead_s", Json::from(self.timeline.overhead_s)),
+                ]),
+            ),
+            ("jobs", Json::from(self.jobs)),
+            ("candidates", Json::from(self.candidates)),
+            ("docs_scanned", Json::from(self.docs_scanned)),
+        ];
+        if let Some(e) = &self.explain {
+            pairs.push(("explain", e.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse the JSON wire form.
+    pub fn from_json(v: &Json) -> Option<SearchResponse> {
+        let tl = v.get("timeline")?;
+        Some(SearchResponse {
+            query: v.get("query")?.as_str()?.to_string(),
+            hits: v
+                .get("hits")?
+                .as_arr()?
+                .iter()
+                .map(|h| {
+                    Some(Hit {
+                        global_id: h.get("id")?.as_i64()? as u64,
+                        score: h.get("score")?.as_f64()? as f32,
+                        title: h.get("title")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Option<Vec<_>>>()?,
+            timeline: TaskTimeline {
+                work_s: tl.get("work_s")?.as_f64()?,
+                net_s: tl.get("net_s")?.as_f64()?,
+                overhead_s: tl.get("overhead_s")?.as_f64()?,
+            },
+            jobs: v.get("jobs")?.as_i64()? as usize,
+            candidates: v.get("candidates")?.as_i64()? as usize,
+            docs_scanned: v.get("docs_scanned")?.as_i64()? as u64,
+            explain: match v.get("explain") {
+                Some(e) => Some(Explain::from_json(e)?),
+                None => None,
+            },
+        })
+    }
 }
 
-/// Pure compute result of one search job (fabric costs are accounted by
-/// the caller): merged local hits + measured work + scan counters.
+/// Pure compute result of one batched search job (fabric costs are
+/// accounted by the caller): per-query merged local hits + measured work
+/// + scan counters.
 struct JobOutput {
-    hits: Vec<LocalHit>,
+    /// Per query (batch order): top hits merged across the job's sources.
+    per_query_hits: Vec<Vec<LocalHit>>,
+    /// Per query: candidates retrieved across the job's sources.
+    per_query_candidates: Vec<usize>,
     work_measured: f64,
-    candidates: usize,
+    /// Docs in the job's sources (scanned once *per query*).
     docs: u64,
 }
 
-/// Execute one job's search work over its sources. Free function (not a
-/// `GapsSystem` method) so the parallel fan-out can call it from worker
-/// threads while the coordinator keeps its `&mut self` bookkeeping.
+/// Execute one job's search work over its sources for the whole query
+/// batch. Free function (not a `GapsSystem` method) so the parallel
+/// fan-out can call it from worker threads while the coordinator keeps
+/// its `&mut self` bookkeeping.
 fn run_job(
     service: &SearchService,
     dep: &Deployment,
-    query: &ParsedQuery,
+    queries: &[(&Query, usize)],
     job: &JobDescription,
     scorer: &mut Scorer<'_>,
-    top_k: usize,
-) -> Result<JobOutput> {
+) -> Result<JobOutput, SearchError> {
+    let nq = queries.len();
     let mut work_measured = 0.0f64;
-    let mut candidates = 0usize;
+    let mut per_query_candidates = vec![0usize; nq];
     let mut docs = 0u64;
-    let mut hits_lists: Vec<Vec<LocalHit>> = Vec::with_capacity(job.sources.len());
+    let mut hits_lists: Vec<Vec<Vec<LocalHit>>> = vec![Vec::with_capacity(job.sources.len()); nq];
     for sid in &job.sources {
-        let shard = dep.shard(*sid).context("unknown source")?;
-        let out = service.search(shard, &dep.stats, query, scorer)?;
-        work_measured += out.work_s;
-        candidates += out.candidates;
-        docs += out.shard_docs as u64;
-        hits_lists.push(out.hits);
+        let shard = dep.shard(*sid).ok_or(SearchError::SourceUnknown { source: *sid })?;
+        let outs = service.search_batch(shard, &dep.stats, queries, scorer)?;
+        docs += shard.len() as u64;
+        for (qi, out) in outs.into_iter().enumerate() {
+            work_measured += out.work_s;
+            per_query_candidates[qi] += out.candidates;
+            hits_lists[qi].push(out.hits);
+        }
     }
-    Ok(JobOutput { hits: merge_topk(&hits_lists, top_k), work_measured, candidates, docs })
+    let per_query_hits = hits_lists
+        .into_iter()
+        .zip(queries)
+        .map(|(lists, (_, top_k))| merge_topk(&lists, *top_k))
+        .collect();
+    Ok(JobOutput { per_query_hits, per_query_candidates, work_measured, docs })
 }
 
 /// The deployed GAPS system.
@@ -267,19 +443,25 @@ impl std::fmt::Debug for GapsSystem {
 
 impl GapsSystem {
     /// Deploy GAPS on `n_nodes` nodes (builds fabric + data).
-    pub fn deploy(cfg: GapsConfig, n_nodes: usize) -> Result<GapsSystem> {
+    pub fn deploy(cfg: GapsConfig, n_nodes: usize) -> Result<GapsSystem, SearchError> {
         let dep = Arc::new(Deployment::build(&cfg, n_nodes)?);
         Self::from_deployment(cfg, dep)
     }
 
     /// Deploy over an existing (shared) deployment.
-    pub fn from_deployment(cfg: GapsConfig, dep: Arc<Deployment>) -> Result<GapsSystem> {
+    pub fn from_deployment(
+        cfg: GapsConfig,
+        dep: Arc<Deployment>,
+    ) -> Result<GapsSystem, SearchError> {
         let mut rm = ResourceManager::new(3);
         for &n in &dep.active {
             rm.register(dep.fabric.node(n).clone());
         }
         let executor = if cfg.search.use_xla {
-            Some(Executor::new(std::path::Path::new(&cfg.search.artifact_dir))?)
+            Some(
+                Executor::new(std::path::Path::new(&cfg.search.artifact_dir))
+                    .map_err(SearchError::executor)?,
+            )
         } else {
             None
         };
@@ -330,25 +512,122 @@ impl GapsSystem {
         self.rm.heartbeat(node);
     }
 
-    /// Execute one query end to end. This is the paper's GAPS flow.
-    pub fn search(&mut self, raw: &str) -> Result<SearchResponse> {
-        let plan_clock = WallClock::start();
-        let query = ParsedQuery::parse(raw, self.cfg.search.features)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    /// Execute one raw query string with default request knobs.
+    pub fn search(&mut self, raw: &str) -> Result<SearchResponse, SearchError> {
+        self.search_request(&SearchRequest::new(raw))
+    }
 
-        // Plan: resources + sources -> node assignments (QEE).
+    /// Execute one typed request end to end.
+    pub fn search_request(
+        &mut self,
+        request: &SearchRequest,
+    ) -> Result<SearchResponse, SearchError> {
+        self.search_batch(std::slice::from_ref(request))
+            .pop()
+            .expect("one result per request")
+    }
+
+    /// Execute a request batch: plan once, dispatch one JDF per node
+    /// carrying every query, fan out once, and feed Q>1 rows through the
+    /// scoring path. Results come back in request order; per-request
+    /// failures (e.g. parse errors) do not fail the rest of the batch.
+    ///
+    /// Requests with different [`ReplicaPref`]s cannot share an
+    /// execution plan; they are planned and fanned out per preference
+    /// group (a homogeneous batch — the common case — is exactly one
+    /// plan + one fan-out round).
+    pub fn search_batch(
+        &mut self,
+        requests: &[SearchRequest],
+    ) -> Vec<Result<SearchResponse, SearchError>> {
+        let mut results: Vec<Option<Result<SearchResponse, SearchError>>> =
+            (0..requests.len()).map(|_| None).collect();
+
+        // Compile every request; parse failures settle immediately. The
+        // compile time is measured and folded into each group's timeline
+        // (the seed accounted parse time inside `search()`, and the
+        // traditional baseline still does — the figures must compare
+        // symmetric accountings).
+        let compile_clock = WallClock::start();
+        let features = self.cfg.search.features;
+        let default_top_k = self.cfg.search.top_k;
+        let mut compiled: Vec<Option<CompiledRequest>> = Vec::with_capacity(requests.len());
+        for (i, req) in requests.iter().enumerate() {
+            match req.compile(features, default_top_k) {
+                Ok(c) => compiled.push(Some(c)),
+                Err(e) => {
+                    results[i] = Some(Err(e));
+                    compiled.push(None);
+                }
+            }
+        }
+        let compile_s = compile_clock.elapsed_s();
+        let valid_total = compiled.iter().filter(|c| c.is_some()).count().max(1);
+
+        // Group by replica preference (usually one group).
+        let mut groups: BTreeMap<ReplicaPref, Vec<usize>> = BTreeMap::new();
+        for (i, c) in compiled.iter().enumerate() {
+            if let Some(c) = c {
+                groups.entry(c.replicas).or_default().push(i);
+            }
+        }
+
+        for (pref, indices) in groups {
+            let group_requests: Arc<Vec<SearchRequest>> =
+                Arc::new(indices.iter().map(|&i| requests[i].clone()).collect());
+            let group_compiled: Vec<&CompiledRequest> =
+                indices.iter().map(|&i| compiled[i].as_ref().expect("compiled")).collect();
+            // This group's proportional share of the batch compile time.
+            let compile_share = compile_s * indices.len() as f64 / valid_total as f64;
+            match self.run_group(pref, &group_requests, &group_compiled, compile_share) {
+                Ok(responses) => {
+                    for (slot, resp) in indices.iter().zip(responses) {
+                        results[*slot] = Some(Ok(resp));
+                    }
+                }
+                Err(e) => {
+                    for slot in &indices {
+                        results[*slot] = Some(Err(e.clone()));
+                    }
+                }
+            }
+        }
+
+        results.into_iter().map(|r| r.expect("every request settled")).collect()
+    }
+
+    /// Plan + dispatch + execute + merge one replica-preference group.
+    /// This is the paper's GAPS flow, generalized to Q >= 1 queries.
+    fn run_group(
+        &mut self,
+        pref: ReplicaPref,
+        requests: &Arc<Vec<SearchRequest>>,
+        compiled: &[&CompiledRequest],
+        compile_s: f64,
+    ) -> Result<Vec<SearchResponse>, SearchError> {
+        let nq = compiled.len();
+        let plan_clock = WallClock::start();
+        let queries: Vec<(&Query, usize)> =
+            compiled.iter().map(|c| (&c.query, c.top_k)).collect();
+
+        // Plan: resources + sources -> node assignments (QEE), once for
+        // the whole group.
         let available = self.rm.available();
         let sources = self.dep.locator.sources();
-        let plan = self.qee.plan(&sources, &available, &self.perf, self.cfg.search.policy)?;
+        let home_vo = self.dep.fabric.node(self.root_broker).vo;
+        let plan = self.qee.plan(
+            &sources,
+            &available,
+            &self.perf,
+            self.cfg.search.policy,
+            pref,
+            Some(home_vo),
+        )?;
 
-        // QM materializes the JDFs (reply-to = each node's VO broker).
+        // QM materializes the JDFs (reply-to = each node's VO broker),
+        // every JDF carrying the whole request batch.
         let fabric = &self.dep.fabric;
-        let jobs = self.qm.create_jobs(
-            raw,
-            &plan,
-            |n| fabric.vo_of(n).broker,
-            self.cfg.search.top_k,
-        );
+        let jobs = self.qm.create_jobs(requests, &plan, |n| fabric.vo_of(n).broker);
         let plan_s = plan_clock.elapsed_s();
 
         // Group jobs by VO for the decentralized dispatch.
@@ -362,8 +641,10 @@ impl GapsSystem {
         let root_info = self.dep.fabric.node(self.root_broker).clone();
 
         // ---- Dispatch bookkeeping (serial: QM + containers) -----------
-        // Flatten jobs in (vo, j_idx) order; the fan-out below returns
-        // outputs in the same order, keeping merges deterministic.
+        // One container acquisition + dispatch slot per *job*, not per
+        // query: the batch amortizes startup accounting. Flatten jobs in
+        // (vo, j_idx) order; the fan-out below returns outputs in the
+        // same order, keeping merges deterministic.
         let mut flat_jobs: Vec<&JobDescription> = Vec::with_capacity(jobs.len());
         let mut startups: Vec<f64> = Vec::with_capacity(jobs.len());
         for vo_jobs in by_vo.values() {
@@ -372,21 +653,20 @@ impl GapsSystem {
                 let handle = self
                     .containers
                     .get_mut(&job.node)
-                    .context("node has no container")?
+                    .ok_or_else(|| SearchError::internal("node has no container"))?
                     .acquire("search-service")
-                    .context("search-service not deployed")?;
+                    .ok_or_else(|| SearchError::internal("search-service not deployed"))?;
                 flat_jobs.push(job);
                 startups.push(handle.startup_s);
             }
         }
 
         // ---- Execute every node's job (parallel shard fan-out) --------
-        // Real concurrent work on the gridpool substrate. Per-job wall
-        // time is measured inside each job; under contention that
-        // measurement inflates, so the figure sweeps pin workers = 1
-        // (see metrics::run_node_sweep) while serving paths default to
-        // all cores.
-        let top_k = self.cfg.search.top_k;
+        // Real concurrent work on the gridpool substrate, one round for
+        // the whole batch. Per-job wall time is measured inside each job;
+        // under contention that measurement inflates, so the figure
+        // sweeps pin workers = 1 (see metrics::run_node_sweep) while
+        // serving paths default to all cores.
         let workers = self.cfg.search.effective_workers().min(flat_jobs.len().max(1));
         let outputs: Vec<JobOutput> = match self.executor.as_mut() {
             Some(exec) => {
@@ -395,33 +675,39 @@ impl GapsSystem {
                 let mut outs = Vec::with_capacity(flat_jobs.len());
                 for job in &flat_jobs {
                     let mut scorer = Scorer::Xla(&mut *exec);
-                    outs.push(run_job(&self.service, &self.dep, &query, job, &mut scorer, top_k)?);
+                    outs.push(run_job(&self.service, &self.dep, &queries, job, &mut scorer)?);
                 }
                 outs
             }
             None if workers <= 1 => {
                 let mut outs = Vec::with_capacity(flat_jobs.len());
                 for job in &flat_jobs {
-                    outs.push(run_job(&self.service, &self.dep, &query, job, &mut Scorer::Rust, top_k)?);
+                    outs.push(run_job(&self.service, &self.dep, &queries, job, &mut Scorer::Rust)?);
                 }
                 outs
             }
             None => {
                 let service = &self.service;
                 let dep: &Deployment = &self.dep;
-                let q = &query;
+                let qs = &queries;
                 par_map_scoped(&flat_jobs, workers, |job| {
-                    run_job(service, dep, q, job, &mut Scorer::Rust, top_k)
+                    run_job(service, dep, qs, job, &mut Scorer::Rust)
                 })
                 .into_iter()
-                .collect::<Result<Vec<_>>>()?
+                .collect::<Result<Vec<_>, SearchError>>()?
             }
         };
 
         // ---- Assemble per-VO timelines from the job outputs -----------
+        // JDF wire sizes, serialized once per job per fan-out (the JSON
+        // rendering covers the whole request batch, so re-serializing at
+        // every accounting site would cost O(jobs x batch) twice over).
+        let wire_of: BTreeMap<super::jdf::JobId, usize> =
+            jobs.iter().map(|j| (j.id, j.wire_bytes())).collect();
         let mut vo_timelines: Vec<TaskTimeline> = Vec::new();
-        let mut vo_lists: Vec<Vec<LocalHit>> = Vec::new();
-        let mut total_candidates = 0usize;
+        // [query][vo] -> merged VO list.
+        let mut vo_lists: Vec<Vec<Vec<LocalHit>>> = vec![Vec::new(); nq];
+        let mut total_candidates = vec![0usize; nq];
         let mut total_docs = 0u64;
         let mut completions: Vec<(super::jdf::JobId, u64, f64)> = Vec::new();
         let mut outputs = outputs.into_iter();
@@ -431,7 +717,7 @@ impl GapsSystem {
             let vo_broker = self.dep.fabric.vos[*vo as usize].broker;
             let vo_broker_info = self.dep.fabric.node(vo_broker).clone();
             // Root QEE hands this VO's QEE its slice (serial at root).
-            let jdf_bytes: usize = vo_jobs.iter().map(|j| j.wire_bytes()).sum();
+            let jdf_bytes: usize = vo_jobs.iter().map(|j| wire_of[&j.id]).sum();
             let mut vo_tl = TaskTimeline {
                 work_s: 0.0,
                 net_s: net.transfer_between_s(&root_info, &vo_broker_info, jdf_bytes),
@@ -440,28 +726,34 @@ impl GapsSystem {
 
             // VO broker dispatches its jobs serially; nodes run in parallel.
             let mut node_branches: Vec<TaskTimeline> = Vec::new();
-            let mut node_lists: Vec<Vec<LocalHit>> = Vec::new();
+            // [query][node] -> node list.
+            let mut node_lists: Vec<Vec<Vec<LocalHit>>> = vec![Vec::new(); nq];
             for (j_idx, job) in vo_jobs.iter().enumerate() {
                 let out = outputs.next().expect("one output per job");
                 let startup_s = startups.next().expect("one handle per job");
                 let node_info = self.dep.fabric.node(job.node).clone();
-                total_candidates += out.candidates;
                 total_docs += out.docs;
+                let reply_hits: usize = out.per_query_hits.iter().map(|h| h.len()).sum();
                 let work_acc = out.work_measured / node_info.speed_factor;
-                completions.push((job.id, out.docs, work_acc));
+                // Perf history: docs are scanned once per query in the
+                // batch, so throughput accounting scales by nq.
+                completions.push((job.id, out.docs * nq as u64, work_acc));
 
                 let branch = TaskTimeline {
                     work_s: work_acc,
-                    net_s: net.transfer_between_s(&vo_broker_info, &node_info, job.wire_bytes())
+                    net_s: net.transfer_between_s(&vo_broker_info, &node_info, wire_of[&job.id])
                         + net.transfer_between_s(
                             &node_info,
                             &vo_broker_info,
-                            result_wire_bytes(out.hits.len()),
+                            result_wire_bytes(reply_hits),
                         ),
                     overhead_s: (j_idx + 1) as f64 * dispatch_s + startup_s,
                 };
                 node_branches.push(branch);
-                node_lists.push(out.hits);
+                for (qi, hits) in out.per_query_hits.into_iter().enumerate() {
+                    total_candidates[qi] += out.per_query_candidates[qi];
+                    node_lists[qi].push(hits);
+                }
             }
 
             // Barrier at the VO broker: slowest member dominates.
@@ -470,16 +762,17 @@ impl GapsSystem {
                 .fold(TaskTimeline::default(), |acc, b| acc.max(b));
             vo_tl.add(slowest);
 
-            // VO-level merge (measured) + WAN reply to root.
+            // VO-level merge (measured, all queries) + WAN reply to root.
             let merge_clock = WallClock::start();
-            let vo_merged = merge_topk(&node_lists, self.cfg.search.top_k);
+            let mut reply_hits = 0usize;
+            for (qi, lists) in node_lists.into_iter().enumerate() {
+                let merged = merge_topk(&lists, compiled[qi].top_k);
+                reply_hits += merged.len();
+                vo_lists[qi].push(merged);
+            }
             vo_tl.work_s += merge_clock.elapsed_s();
-            vo_tl.net_s += net.transfer_between_s(
-                &vo_broker_info,
-                &root_info,
-                result_wire_bytes(vo_merged.len()),
-            );
-            vo_lists.push(vo_merged);
+            vo_tl.net_s +=
+                net.transfer_between_s(&vo_broker_info, &root_info, result_wire_bytes(reply_hits));
             vo_timelines.push(vo_tl);
         }
 
@@ -488,37 +781,58 @@ impl GapsSystem {
             self.qm.complete(id, docs, work_s, &mut self.perf);
         }
 
-        // Root barrier + final merge.
-        let mut timeline = TaskTimeline { work_s: plan_s, net_s: 0.0, overhead_s: 0.0 };
+        // Root barrier + final merge (shared batch critical path). The
+        // USI-side compile share counts as root work, like plan time.
+        let mut timeline =
+            TaskTimeline { work_s: compile_s + plan_s, net_s: 0.0, overhead_s: 0.0 };
         let slowest_vo = vo_timelines
             .into_iter()
             .fold(TaskTimeline::default(), |acc, b| acc.max(b));
         timeline.add(slowest_vo);
         let merge_clock = WallClock::start();
-        let merged = merge_topk(&vo_lists, self.cfg.search.top_k);
+        let merged_per_query: Vec<Vec<LocalHit>> = vo_lists
+            .into_iter()
+            .enumerate()
+            .map(|(qi, lists)| merge_topk(&lists, compiled[qi].top_k))
+            .collect();
         timeline.work_s += merge_clock.elapsed_s();
 
-        let hits = merged
-            .into_iter()
-            .map(|h| Hit {
-                global_id: h.global_id,
-                score: h.score,
-                title: self
-                    .dep
-                    .publication(h.global_id)
-                    .map(|p| p.title.clone())
-                    .unwrap_or_default(),
-            })
-            .collect();
-
-        Ok(SearchResponse {
-            query: raw.to_string(),
-            hits,
-            timeline,
-            jobs: jobs.len(),
-            candidates: total_candidates,
-            docs_scanned: total_docs,
-        })
+        // ---- Materialize responses ------------------------------------
+        let docs_per_query = total_docs; // every query scans every job's sources
+        let mut responses = Vec::with_capacity(nq);
+        for (qi, merged) in merged_per_query.into_iter().enumerate() {
+            let hits = merged
+                .into_iter()
+                .map(|h| Hit {
+                    global_id: h.global_id,
+                    score: h.score,
+                    title: self
+                        .dep
+                        .publication(h.global_id)
+                        .map(|p| p.title.clone())
+                        .unwrap_or_default(),
+                })
+                .collect();
+            let explain = compiled[qi].explain.then(|| Explain {
+                ast: compiled[qi].query.ast.to_string(),
+                keywords: compiled[qi].query.keywords.clone(),
+                batch_size: nq,
+                plan: jobs
+                    .iter()
+                    .map(|j| (j.node.to_string(), j.sources.len()))
+                    .collect(),
+            });
+            responses.push(SearchResponse {
+                query: requests[qi].query.clone(),
+                hits,
+                timeline: timeline.clone(),
+                jobs: jobs.len(),
+                candidates: total_candidates[qi],
+                docs_scanned: docs_per_query,
+                explain,
+            });
+        }
+        Ok(responses)
     }
 
     /// Service acquisitions on a node (container metrics).
@@ -534,6 +848,7 @@ impl GapsSystem {
 mod tests {
     use super::*;
     use crate::config::{GapsConfig, SchedulePolicy};
+    use crate::search::Field;
 
     fn small_cfg() -> GapsConfig {
         let mut cfg = GapsConfig::default();
@@ -581,11 +896,14 @@ mod tests {
     #[test]
     fn publication_lookup_roundtrips() {
         let dep = Deployment::build(&small_cfg(), 3).unwrap();
-        for id in [0u64, 17, 599] {
+        // Exhaustive: the binary search must agree with identity on every
+        // id, including both ends of every source range.
+        for id in 0u64..600 {
             let p = dep.publication(id).unwrap();
             assert_eq!(p.id, id);
         }
         assert!(dep.publication(600).is_none());
+        assert!(dep.publication(u64::MAX).is_none());
     }
 
     #[test]
@@ -604,6 +922,198 @@ mod tests {
         assert!(resp.timeline.work_s > 0.0);
         assert!(resp.timeline.net_s > 0.0);
         assert!(resp.timeline.overhead_s > 0.0);
+        assert!(resp.explain.is_none());
+    }
+
+    #[test]
+    fn typed_request_controls_top_k_and_explain() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let req = SearchRequest::new("grid data search").top_k(3).explain(true);
+        let resp = sys.search_request(&req).unwrap();
+        assert!(resp.hits.len() <= 3);
+        let explain = resp.explain.expect("explain requested");
+        assert_eq!(explain.batch_size, 1);
+        assert!(!explain.plan.is_empty());
+        assert!(explain.keywords.contains(&"grid".to_string()));
+    }
+
+    #[test]
+    fn builder_year_filter_is_hard() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let year = sys.deployment().publication(10).unwrap().year;
+        let req = SearchRequest::new("").year(year..=year).top_k(50);
+        let resp = sys.search_request(&req).unwrap();
+        assert!(!resp.hits.is_empty());
+        for h in &resp.hits {
+            assert_eq!(sys.deployment().publication(h.global_id).unwrap().year, year);
+        }
+    }
+
+    #[test]
+    fn require_field_builder_constrains_hits() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let title_word = sys
+            .deployment()
+            .publication(25)
+            .unwrap()
+            .title
+            .split_whitespace()
+            .find(|w| !crate::text::terms(w).is_empty())
+            .unwrap()
+            .to_string();
+        let req = SearchRequest::new("grid data").require(Field::Title, title_word.clone());
+        match sys.search_request(&req) {
+            Ok(resp) => {
+                let stemmed = crate::text::terms(&title_word);
+                let bucket =
+                    crate::text::term_feature(&stemmed[0], sys.cfg.search.features) as u32;
+                for h in &resp.hits {
+                    let dep = sys.deployment();
+                    let src = dep
+                        .locator
+                        .sources()
+                        .into_iter()
+                        .find(|s| (s.doc_start..s.doc_start + s.doc_count).contains(&h.global_id))
+                        .unwrap()
+                        .id;
+                    let shard = dep.shard(src).unwrap();
+                    let lid = (h.global_id - dep.locator.source(src).unwrap().doc_start) as usize;
+                    let has = shard.docs[lid].field_tf[Field::Title as usize]
+                        .iter()
+                        .any(|(b, _)| *b == bucket);
+                    assert!(has, "hit {} lacks required title term", h.global_id);
+                }
+            }
+            Err(e) => panic!("require() request failed: {e}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_query_terms_do_not_change_results() {
+        // Satellite regression: `grid grid computing` must return exactly
+        // the hits (ids and scores) of `grid computing` — duplicates are
+        // deduplicated at compile time instead of inflating OR match
+        // counts and doubling the BM25F query weight.
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let a = sys.search("grid grid computing data data data").unwrap();
+        let b = sys.search("grid computing data").unwrap();
+        let ids_a: Vec<u64> = a.hits.iter().map(|h| h.global_id).collect();
+        let ids_b: Vec<u64> = b.hits.iter().map(|h| h.global_id).collect();
+        assert_eq!(ids_a, ids_b, "duplicated terms changed the hit set");
+        for (ha, hb) in a.hits.iter().zip(&b.hits) {
+            assert_eq!(ha.score.to_bits(), hb.score.to_bits(), "score diverged");
+        }
+        assert_eq!(a.candidates, b.candidates);
+    }
+
+    #[test]
+    fn batch_returns_one_response_per_request_in_order() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let reqs = vec![
+            SearchRequest::new("grid computing"),
+            SearchRequest::new("the of and"), // parse error mid-batch
+            SearchRequest::new("data search").top_k(2),
+        ];
+        let out = sys.search_batch(&reqs);
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_ok());
+        assert_eq!(out[1].as_ref().unwrap_err().kind(), "parse");
+        let third = out[2].as_ref().unwrap();
+        assert!(third.hits.len() <= 2);
+        assert_eq!(third.query, "data search");
+    }
+
+    #[test]
+    fn batch_matches_sequential_results() {
+        let cfg = small_cfg();
+        let dep = Arc::new(Deployment::build(&cfg, 4).unwrap());
+        let mut batch_sys = GapsSystem::from_deployment(cfg.clone(), Arc::clone(&dep)).unwrap();
+        let mut serial_sys = GapsSystem::from_deployment(cfg, dep).unwrap();
+        let reqs: Vec<SearchRequest> = [
+            "grid data search",
+            "massive academic publications",
+            "year:2000..2014 grid",
+            "\"grid computing\"",
+        ]
+        .iter()
+        .map(|q| SearchRequest::new(*q))
+        .collect();
+        let batch = batch_sys.search_batch(&reqs);
+        for (req, b) in reqs.iter().zip(batch) {
+            let b = b.unwrap();
+            let s = serial_sys.search_request(req).unwrap();
+            let ids_b: Vec<u64> = b.hits.iter().map(|h| h.global_id).collect();
+            let ids_s: Vec<u64> = s.hits.iter().map(|h| h.global_id).collect();
+            assert_eq!(ids_b, ids_s, "batch hits diverged for {:?}", req.query);
+            for (hb, hs) in b.hits.iter().zip(&s.hits) {
+                assert_eq!(hb.score.to_bits(), hs.score.to_bits());
+            }
+            assert_eq!(b.candidates, s.candidates);
+            assert_eq!(b.docs_scanned, s.docs_scanned);
+        }
+    }
+
+    #[test]
+    fn batch_amortizes_dispatch() {
+        // One batch of 4 queries acquires each node's service once; four
+        // sequential searches acquire it four times.
+        let cfg = small_cfg();
+        let dep = Arc::new(Deployment::build(&cfg, 4).unwrap());
+        let mut batch_sys = GapsSystem::from_deployment(cfg.clone(), Arc::clone(&dep)).unwrap();
+        let mut serial_sys = GapsSystem::from_deployment(cfg, dep).unwrap();
+        let reqs: Vec<SearchRequest> =
+            (0..4).map(|i| SearchRequest::new(format!("grid data search {i}"))).collect();
+        for r in batch_sys.search_batch(&reqs) {
+            r.unwrap();
+        }
+        for r in &reqs {
+            serial_sys.search_request(r).unwrap();
+        }
+        let total = |sys: &GapsSystem| -> u64 {
+            sys.deployment().active.iter().map(|&n| sys.service_acquisitions(n)).sum()
+        };
+        let (batch_acq, serial_acq) = (total(&batch_sys), total(&serial_sys));
+        assert!(
+            batch_acq < serial_acq,
+            "batch should amortize acquisitions: {batch_acq} vs {serial_acq}"
+        );
+    }
+
+    #[test]
+    fn replica_pref_changes_placement_not_results() {
+        let cfg = small_cfg();
+        let dep = Arc::new(Deployment::build(&cfg, 6).unwrap());
+        let mut sys = GapsSystem::from_deployment(cfg, dep).unwrap();
+        let q = "grid distributed search";
+        let any = sys.search_request(&SearchRequest::new(q)).unwrap();
+        let primary = sys
+            .search_request(&SearchRequest::new(q).prefer_replicas(ReplicaPref::Primary))
+            .unwrap();
+        let same_vo = sys
+            .search_request(&SearchRequest::new(q).prefer_replicas(ReplicaPref::SameVo))
+            .unwrap();
+        let ids: Vec<u64> = any.hits.iter().map(|h| h.global_id).collect();
+        for other in [&primary, &same_vo] {
+            let other_ids: Vec<u64> = other.hits.iter().map(|h| h.global_id).collect();
+            assert_eq!(ids, other_ids, "replica preference changed results");
+        }
+        assert_eq!(any.docs_scanned, primary.docs_scanned);
+    }
+
+    #[test]
+    fn response_json_roundtrips() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let resp = sys
+            .search_request(&SearchRequest::new("grid computing data").explain(true))
+            .unwrap();
+        let parsed = SearchResponse::from_json(&resp.to_json()).unwrap();
+        assert_eq!(parsed.query, resp.query);
+        assert_eq!(parsed.hits, resp.hits);
+        assert_eq!(parsed.jobs, resp.jobs);
+        assert_eq!(parsed.candidates, resp.candidates);
+        assert_eq!(parsed.docs_scanned, resp.docs_scanned);
+        assert_eq!(parsed.explain, resp.explain);
+        assert!((parsed.timeline.work_s - resp.timeline.work_s).abs() < 1e-12);
     }
 
     #[test]
@@ -639,14 +1149,17 @@ mod tests {
     }
 
     #[test]
-    fn all_replicas_down_is_an_error() {
+    fn all_replicas_down_is_a_typed_error() {
         let mut cfg = small_cfg();
         cfg.workload.sub_shards = 2;
         let mut sys = GapsSystem::deploy(cfg, 2).unwrap();
         for &n in sys.deployment().active.clone().iter() {
             sys.fail_node(n);
         }
-        assert!(sys.search("grid").is_err());
+        match sys.search("grid") {
+            Err(SearchError::NoNodes) | Err(SearchError::NoLiveReplica { .. }) => {}
+            other => panic!("expected a typed availability error, got {other:?}"),
+        }
     }
 
     #[test]

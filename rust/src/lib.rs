@@ -19,6 +19,40 @@
 //! AOT artifacts through the PJRT C API (`xla` crate) and the Search
 //! Services execute them directly from Rust.
 //!
+//! ## Public search API
+//!
+//! The search surface is typed end to end: build a
+//! [`search::SearchRequest`], execute it through
+//! [`coordinator::GapsSystem::search_request`] (or a whole batch through
+//! [`coordinator::GapsSystem::search_batch`] — one plan, one fan-out
+//! round, Q>1 artifact scoring rows), and branch on the
+//! [`search::SearchError`] taxonomy on failure:
+//!
+//! ```no_run
+//! use gaps::config::GapsConfig;
+//! use gaps::coordinator::GapsSystem;
+//! use gaps::search::{Field, ReplicaPref, SearchRequest};
+//!
+//! let mut sys = GapsSystem::deploy(GapsConfig::default(), 12)?;
+//! let resp = sys.search_request(
+//!     &SearchRequest::new("\"grid computing\" scheduling -cloud")
+//!         .top_k(20)
+//!         .year(2010..=2014)
+//!         .require(Field::Title, "grid")
+//!         .prefer_replicas(ReplicaPref::SameVo)
+//!         .explain(true),
+//! )?;
+//! println!("{} hits", resp.hits.len());
+//! # Ok::<(), gaps::search::SearchError>(())
+//! ```
+//!
+//! Query text follows the grammar documented in [`search::query`]:
+//! free keywords (an OR group), quoted phrases, uppercase `AND`/`OR`
+//! operators, `-`/`NOT` negation, parentheses, `field:term` scopes
+//! (title/abstract/authors/venue), and `year:Y` / `year:Y..Y` ranges.
+//! Requests and responses share one JSON wire encoding (`util::json`)
+//! with the Job Description Files the Query Manager ships to nodes.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-figure reproductions (response time, speedup, efficiency).
 

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!
-//! * `search <query...>` — deploy and run one query, print results.
+//! * `search <query...>` — deploy and run one query (or a batch through
+//!   one fan-out round, queries separated by a space-padded `/`), print
+//!   results. `--explain` attaches AST + plan diagnostics.
 //! * `repl`              — interactive USI session.
 //! * `sweep`             — the paper's node sweep (Figs 3/4/5 series).
 //! * `corpus`            — generate a corpus and save shard JSONL files.
@@ -17,10 +19,11 @@ use anyhow::{bail, Context, Result};
 use gaps::config::GapsConfig;
 use gaps::coordinator::GapsSystem;
 use gaps::metrics::{run_node_sweep, System};
+use gaps::search::SearchRequest;
 use gaps::util::bench::Table;
 use gaps::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] = &["no-xla", "no-resident-services", "verbose", "help"];
+const BOOL_FLAGS: &[&str] = &["no-xla", "no-resident-services", "verbose", "help", "explain"];
 
 fn main() {
     if let Err(e) = run() {
@@ -56,7 +59,8 @@ fn print_usage() {
         "gaps — Grid-based Academic Publications Search (reproduction)\n\n\
          usage: gaps <search|repl|sweep|corpus|info> [flags] [query...]\n\n\
          subcommands:\n\
-           search <query...>   one-shot search (e.g. gaps search grid computing)\n\
+           search <query...>   one-shot search (e.g. gaps search grid computing);\n\
+                               \" / \" separates a batch, --explain shows AST + plan\n\
            repl                interactive USI session\n\
            sweep               node sweep: response time / speedup / efficiency\n\
            corpus --out DIR    generate the corpus as shard JSONL files\n\
@@ -73,20 +77,48 @@ fn n_nodes(args: &Args, cfg: &GapsConfig) -> Result<usize> {
 }
 
 fn cmd_search(args: &Args, cfg: GapsConfig) -> Result<()> {
-    let query = args.positionals.join(" ");
-    if query.trim().is_empty() {
+    // `gaps search a b / c d` runs a batch of two queries ("a b", "c d")
+    // through one plan + fan-out round. Only a space-padded " / " is a
+    // separator, so query text containing a slash (e.g. "client/server")
+    // is not hijacked into a batch.
+    let joined = args.positionals.join(" ");
+    let queries: Vec<&str> =
+        joined.split(" / ").map(str::trim).filter(|q| !q.is_empty()).collect();
+    if queries.is_empty() {
         bail!("search needs a query, e.g.: gaps search grid computing");
     }
     let n = n_nodes(args, &cfg)?;
     eprintln!("{}", cfg.describe());
     let mut sys = GapsSystem::deploy(cfg, n)?;
-    let (rendered, timing) = gaps::usi::one_shot(&mut sys, &query)?;
-    print!("{rendered}");
-    println!(
-        "usi overhead: {:.3} ms ({:.2}% of total)",
-        timing.interface_s * 1e3,
-        timing.interface_fraction() * 100.0
-    );
+    let requests: Vec<SearchRequest> = queries
+        .iter()
+        .map(|q| SearchRequest::new(*q).explain(args.has("explain")))
+        .collect();
+    if let [request] = requests.as_slice() {
+        let (rendered, timing) = gaps::usi::one_shot_request(&mut sys, request)?;
+        print!("{rendered}");
+        println!(
+            "usi overhead: {:.3} ms ({:.2}% of total)",
+            timing.interface_s * 1e3,
+            timing.interface_fraction() * 100.0
+        );
+        return Ok(());
+    }
+    let mut failures = 0usize;
+    let total = requests.len();
+    for (request, result) in requests.iter().zip(sys.search_batch(&requests)) {
+        println!("=== {:?} ===", request.query);
+        match result {
+            Ok(resp) => print!("{}", gaps::usi::format_response(&resp)),
+            Err(e) => {
+                failures += 1;
+                println!("error: {e}");
+            }
+        }
+    }
+    if failures == total {
+        bail!("all {total} batch queries failed");
+    }
     Ok(())
 }
 
@@ -95,7 +127,8 @@ fn cmd_repl(args: &Args, cfg: GapsConfig) -> Result<()> {
     eprintln!("{}", cfg.describe());
     let mut sys = GapsSystem::deploy(cfg, n)?;
     let stdin = std::io::stdin();
-    gaps::usi::repl(&mut sys, stdin.lock(), std::io::stdout())
+    gaps::usi::repl(&mut sys, stdin.lock(), std::io::stdout())?;
+    Ok(())
 }
 
 fn cmd_sweep(args: &Args, cfg: GapsConfig) -> Result<()> {

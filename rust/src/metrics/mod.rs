@@ -18,6 +18,7 @@ use anyhow::Result;
 use crate::baseline::TraditionalSearch;
 use crate::config::GapsConfig;
 use crate::coordinator::{CorpusData, Deployment, GapsSystem};
+use crate::search::SearchRequest;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -134,12 +135,15 @@ fn aggregate(best: &[crate::util::clock::TaskTimeline]) -> SystemPoint {
     }
 }
 
-/// Run the query mix through one GAPS system, collecting stats.
+/// Run the query mix through one GAPS system (typed requests, one per
+/// query), collecting stats.
 pub fn measure_gaps(sys: &mut GapsSystem, queries: &[String]) -> Result<SystemPoint> {
+    let requests: Vec<SearchRequest> =
+        queries.iter().map(|q| SearchRequest::new(q.clone())).collect();
     let mut best = vec![crate::util::clock::TaskTimeline::default(); queries.len()];
     for pass in 0..MEASURE_PASSES {
-        for (i, q) in queries.iter().enumerate() {
-            let r = sys.search(q)?;
+        for (i, req) in requests.iter().enumerate() {
+            let r = sys.search_request(req)?;
             if pass == 0 || r.response_s() < best[i].total_s() {
                 best[i] = r.timeline;
             }
@@ -150,10 +154,12 @@ pub fn measure_gaps(sys: &mut GapsSystem, queries: &[String]) -> Result<SystemPo
 
 /// Run the query mix through the traditional baseline.
 pub fn measure_traditional(sys: &mut TraditionalSearch, queries: &[String]) -> Result<SystemPoint> {
+    let requests: Vec<SearchRequest> =
+        queries.iter().map(|q| SearchRequest::new(q.clone())).collect();
     let mut best = vec![crate::util::clock::TaskTimeline::default(); queries.len()];
     for pass in 0..MEASURE_PASSES {
-        for (i, q) in queries.iter().enumerate() {
-            let r = sys.search(q)?;
+        for (i, req) in requests.iter().enumerate() {
+            let r = sys.search_request(req)?;
             if pass == 0 || r.response_s() < best[i].total_s() {
                 best[i] = r.timeline;
             }

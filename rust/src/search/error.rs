@@ -1,0 +1,165 @@
+//! Structured search errors: the typed failure taxonomy of the public
+//! search surface.
+//!
+//! Every `pub fn` on the `coordinator`, `search`, and `usi` boundaries
+//! returns [`SearchError`] — `anyhow` is retained *internally* (runtime,
+//! IO plumbing) and flattened into a variant at the boundary, so callers
+//! (the CLI, the REPL, a future HTTP front-end) can branch on failure
+//! kind instead of string-matching error messages.
+
+use crate::util::json::Json;
+
+/// Typed failure of a search request (or of deploying the system that
+/// would serve it).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SearchError {
+    /// The query text failed to parse or analyze (bad grammar, unknown
+    /// field, empty/invalid year range, no searchable terms, ...).
+    Parse { message: String },
+    /// No data sources are registered with the locator.
+    NoSources,
+    /// No live nodes are available to plan onto.
+    NoNodes,
+    /// Every replica of a data source is down: the query cannot cover
+    /// the corpus (grid dynamicity exhausted the replication factor).
+    NoLiveReplica { source: u32 },
+    /// A job referenced a data source the deployment does not host.
+    SourceUnknown { source: u32 },
+    /// The scoring runtime (PJRT executor / artifacts) failed.
+    ExecutorFailure { message: String },
+    /// The deployment/configuration is invalid (node count out of range,
+    /// corpus too small, feature-space mismatch, ...).
+    InvalidConfig { message: String },
+    /// An I/O failure on the interface path (REPL stream, config file).
+    Io { message: String },
+    /// Internal invariant breach (a bug, not a user error).
+    Internal { message: String },
+}
+
+impl SearchError {
+    /// Build a parse error.
+    pub fn parse(message: impl Into<String>) -> SearchError {
+        SearchError::Parse { message: message.into() }
+    }
+
+    /// Build an executor error.
+    pub fn executor(message: impl std::fmt::Display) -> SearchError {
+        SearchError::ExecutorFailure { message: message.to_string() }
+    }
+
+    /// Build a config error.
+    pub fn config(message: impl std::fmt::Display) -> SearchError {
+        SearchError::InvalidConfig { message: message.to_string() }
+    }
+
+    /// Build an internal-invariant error.
+    pub fn internal(message: impl std::fmt::Display) -> SearchError {
+        SearchError::Internal { message: message.to_string() }
+    }
+
+    /// Stable machine-readable kind tag (wire encoding + error parity
+    /// checks in tests).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SearchError::Parse { .. } => "parse",
+            SearchError::NoSources => "no-sources",
+            SearchError::NoNodes => "no-nodes",
+            SearchError::NoLiveReplica { .. } => "no-live-replica",
+            SearchError::SourceUnknown { .. } => "source-unknown",
+            SearchError::ExecutorFailure { .. } => "executor-failure",
+            SearchError::InvalidConfig { .. } => "invalid-config",
+            SearchError::Io { .. } => "io",
+            SearchError::Internal { .. } => "internal",
+        }
+    }
+
+    /// JSON wire form: `{"kind": ..., "message": ..., "source"?: n}`.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("kind", Json::str(self.kind()))];
+        match self {
+            SearchError::NoLiveReplica { source } | SearchError::SourceUnknown { source } => {
+                pairs.push(("source", Json::from(*source as i64)));
+            }
+            _ => {}
+        }
+        pairs.push(("message", Json::str(self.to_string())));
+        Json::obj(pairs)
+    }
+}
+
+impl std::fmt::Display for SearchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SearchError::Parse { message } => write!(f, "query error: {message}"),
+            SearchError::NoSources => write!(f, "no data sources registered"),
+            SearchError::NoNodes => write!(f, "no nodes available"),
+            SearchError::NoLiveReplica { source } => {
+                write!(f, "source {source} has no live replica")
+            }
+            SearchError::SourceUnknown { source } => write!(f, "unknown source {source}"),
+            SearchError::ExecutorFailure { message } => write!(f, "executor failure: {message}"),
+            SearchError::InvalidConfig { message } => write!(f, "invalid config: {message}"),
+            SearchError::Io { message } => write!(f, "io error: {message}"),
+            SearchError::Internal { message } => write!(f, "internal error: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for SearchError {}
+
+impl From<std::io::Error> for SearchError {
+    fn from(e: std::io::Error) -> SearchError {
+        SearchError::Io { message: e.to_string() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_stable_and_distinct() {
+        let all = [
+            SearchError::parse("x"),
+            SearchError::NoSources,
+            SearchError::NoNodes,
+            SearchError::NoLiveReplica { source: 3 },
+            SearchError::SourceUnknown { source: 9 },
+            SearchError::executor("boom"),
+            SearchError::config("bad"),
+            SearchError::Io { message: "eof".into() },
+            SearchError::internal("bug"),
+        ];
+        let mut kinds: Vec<&str> = all.iter().map(|e| e.kind()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds.len(), all.len(), "kind tags must be unique");
+    }
+
+    #[test]
+    fn json_carries_kind_and_source() {
+        let e = SearchError::NoLiveReplica { source: 7 };
+        let j = e.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("no-live-replica"));
+        assert_eq!(j.get("source").unwrap().as_i64(), Some(7));
+        assert!(j.get("message").unwrap().as_str().unwrap().contains("7"));
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe");
+        let e: SearchError = io.into();
+        assert_eq!(e.kind(), "io");
+    }
+
+    #[test]
+    fn interops_with_internal_anyhow() {
+        // Internal layers keep anyhow: `?` must lift SearchError into it.
+        fn inner() -> anyhow::Result<()> {
+            let r: Result<(), SearchError> = Err(SearchError::NoSources);
+            r?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("no data sources"));
+    }
+}

@@ -1,11 +1,21 @@
-//! Search layer: the query language (keyword + multivariate), the
-//! pure-rust BM25F scorer (baseline scorer and runtime cross-check), and
-//! the per-node Search Service (the paper's SS grid service).
+//! Search layer: the typed request surface ([`SearchRequest`]), the query
+//! language (recursive boolean AST + tokenizing parser, see [`query`]),
+//! the structured error taxonomy ([`SearchError`]), the pure-rust BM25F
+//! scorer (baseline scorer and runtime cross-check), and the per-node
+//! Search Service (the paper's SS grid service) with batched Q>1
+//! execution.
 
-mod query;
+mod error;
+pub mod query;
+mod request;
 mod scorer;
 pub mod service;
 
-pub use query::{ParsedQuery, QueryError, RangeFilter};
-pub use scorer::score_block_rust;
+pub use error::SearchError;
+pub use query::{Query, QueryNode, RangeFilter};
+pub use request::{CompiledRequest, ReplicaPref, SearchRequest};
+pub use scorer::{score_block_rust, topk_row};
 pub use service::{LocalHit, Scorer, SearchOutcome, SearchService};
+
+// Re-exported so request builders don't need a separate `text` import.
+pub use crate::text::Field;

@@ -1,21 +1,48 @@
-//! Query language: keyword and multivariate search.
+//! Query language: recursive AST + tokenizing parser + compiled query.
 //!
 //! The paper's USI "provides keyword-based and multivariate-based search
-//! types". Grammar:
+//! types". The seed's flat keyword/field-term vectors have been replaced
+//! by a real boolean AST ([`QueryNode`]) produced by a tokenizing parser.
+//! Grammar:
 //!
 //! ```text
-//! query      := clause+
-//! clause     := word                  free keyword (scored, any field)
-//!             | field ':' word        field-scoped keyword (scored + must
-//!                                     appear in that field)
-//!             | 'year' ':' y ('..' y)?   hard year filter
-//! field      := title | abstract | authors | venue
+//! query    := or_expr
+//! or_expr  := seq ('OR' seq)*          explicit disjunction
+//! seq      := unary+                   whitespace sequence (see below)
+//! unary    := ('-' | 'NOT') unary      negation (hard exclusion)
+//!           | atom
+//! atom     := '(' or_expr ')'          grouping
+//!           | '"' word* '"'            phrase: every term required (AND)
+//!           | word 'AND' word ...      explicit conjunction
+//!           | field ':' word           field-scoped required term
+//!           | 'year' ':' y ('..' y)?   hard year filter (inclusive)
+//!           | word                     free keyword (scored)
+//! field    := title | abstract | authors | venue
 //! ```
 //!
-//! Examples: `grid computing`, `title:grid venue:conference`,
-//! `scheduling year:2010..2014`.
+//! Sequence semantics: inside one whitespace sequence, the bare keywords
+//! form a single *should* group — a document must match **at least one**
+//! of them — while every other clause (phrases, `AND` chains, field
+//! terms, year ranges, negations, parenthesized groups) must **all**
+//! hold. `AND`/`OR`/`NOT` are operators only in full uppercase;
+//! lowercase `and`/`or`/`not` flow through the analyzer like any word.
+//!
+//! Examples: `grid computing`, `"grid computing" scheduling`,
+//! `title:grid venue:conference`, `scheduling -cloud year:2010..2014`,
+//! `storage AND replication OR archive`.
+//!
+//! Compilation dedups scored terms (so `grid grid computing` ranks and
+//! retrieves exactly like `grid computing`) and lowers the AST onto the
+//! CSR retrieval primitives: a pure conjunction uses the galloping
+//! AND-intersection; trees the OR probe can fully reach use the counting
+//! OR-merge plus a per-candidate matcher pass; trees satisfiable through
+//! a term-free branch (`year:2014`, `grid OR year:2014`) fall back to a
+//! shard scan with the matcher (see [`Query::or_pool_covers`]).
 
+use crate::index::Shard;
 use crate::text::{term_feature, terms, Field};
+
+use super::error::SearchError;
 
 /// Inclusive year range filter.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,84 +57,577 @@ impl RangeFilter {
     }
 }
 
-/// Parse failure.
+/// A node of the parsed query tree. Terms are normalized (lowercased,
+/// stemmed) exactly like document text, so `QueryNode` equality is
+/// analyzer-level equality.
 #[derive(Debug, Clone, PartialEq)]
-pub struct QueryError(pub String);
+pub enum QueryNode {
+    /// Every child must match.
+    And(Vec<QueryNode>),
+    /// At least one child must match.
+    Or(Vec<QueryNode>),
+    /// The child must not match.
+    Not(Box<QueryNode>),
+    /// Normalized term, matched in any field (and scored).
+    Term(String),
+    /// Normalized term that must appear in a specific field (and scored).
+    FieldTerm(Field, String),
+    /// Hard publication-year filter.
+    YearRange(RangeFilter),
+}
 
-impl std::fmt::Display for QueryError {
+impl std::fmt::Display for QueryNode {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "query error: {}", self.0)
+        match self {
+            QueryNode::And(cs) => write_joined(f, cs, " AND "),
+            QueryNode::Or(cs) => write_joined(f, cs, " OR "),
+            QueryNode::Not(c) => write!(f, "-{c}"),
+            QueryNode::Term(t) => write!(f, "{t}"),
+            QueryNode::FieldTerm(field, t) => write!(f, "{}:{t}", field.name()),
+            QueryNode::YearRange(r) => write!(f, "year:{}..{}", r.min, r.max),
+        }
     }
 }
 
-impl std::error::Error for QueryError {}
+fn write_joined(
+    f: &mut std::fmt::Formatter<'_>,
+    cs: &[QueryNode],
+    sep: &str,
+) -> std::fmt::Result {
+    write!(f, "(")?;
+    for (i, c) in cs.iter().enumerate() {
+        if i > 0 {
+            write!(f, "{sep}")?;
+        }
+        write!(f, "{c}")?;
+    }
+    write!(f, ")")
+}
 
-/// A parsed, analyzed query ready for retrieval + ranking.
+/// Bucket-level matcher compiled from the AST: term strings are hashed
+/// into the feature space once, so per-candidate evaluation is
+/// allocation-free integer comparisons.
 #[derive(Debug, Clone, PartialEq)]
-pub struct ParsedQuery {
-    /// Original query text (for logging / JDF).
+enum Matcher {
+    And(Vec<Matcher>),
+    Or(Vec<Matcher>),
+    Not(Box<Matcher>),
+    AnyField(u32),
+    InField(Field, u32),
+    Year(RangeFilter),
+}
+
+impl Matcher {
+    fn eval(&self, shard: &Shard, lid: u32) -> bool {
+        match self {
+            Matcher::And(cs) => cs.iter().all(|c| c.eval(shard, lid)),
+            Matcher::Or(cs) => cs.iter().any(|c| c.eval(shard, lid)),
+            Matcher::Not(c) => !c.eval(shard, lid),
+            Matcher::AnyField(b) => shard.docs[lid as usize]
+                .field_tf
+                .iter()
+                .any(|tf| tf.iter().any(|(bb, _)| bb == b)),
+            Matcher::InField(field, b) => shard.docs[lid as usize].field_tf[*field as usize]
+                .iter()
+                .any(|(bb, _)| bb == b),
+            Matcher::Year(r) => r.contains(shard.pubs[lid as usize].year),
+        }
+    }
+}
+
+/// A parsed, analyzed, compiled query ready for retrieval + ranking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    /// Original query text (logging / JDF / responses).
     pub raw: String,
-    /// Scored keyword terms (normalized).
+    /// The parsed boolean tree.
+    pub ast: QueryNode,
+    /// Scored keyword terms (normalized, **deduplicated**, first
+    /// occurrence order): every positive `Term`/`FieldTerm` in the tree.
     pub keywords: Vec<String>,
-    /// Feature buckets of `keywords` in the artifact space.
+    /// Feature buckets of `keywords` in the artifact space (parallel).
     pub buckets: Vec<u32>,
-    /// Field-scoped required terms: (field, normalized term).
-    pub field_terms: Vec<(Field, String)>,
-    /// Optional hard year filter.
-    pub year: Option<RangeFilter>,
+    /// Compiled per-candidate matcher.
+    matcher: Matcher,
+    /// Whether candidates need a matcher pass beyond the OR-probe.
+    needs_filter: bool,
+    /// Whether the whole positive structure is a pure term conjunction
+    /// (phrase / `AND` chain): retrieval can use the galloping
+    /// AND-intersection and skip the matcher pass entirely.
+    conjunctive: bool,
+    /// Whether the counting-OR probe over `buckets` reaches every
+    /// matching document. False when the tree can be satisfied without
+    /// any positive term — e.g. `year:2014`, or `grid OR year:2014`
+    /// whose year branch alone matches — in which case retrieval must
+    /// scan the shard and rely on the matcher.
+    pool_complete: bool,
 }
 
-impl ParsedQuery {
-    /// Parse + analyze a query string into the `features`-bucket space.
-    pub fn parse(raw: &str, features: usize) -> Result<ParsedQuery, QueryError> {
-        let mut keywords = Vec::new();
-        let mut field_terms = Vec::new();
-        let mut year = None;
-
-        for tok in raw.split_whitespace() {
-            if let Some((head, rest)) = tok.split_once(':') {
-                let head_lc = head.to_ascii_lowercase();
-                if head_lc == "year" {
-                    year = Some(parse_year_filter(rest)?);
-                    continue;
-                }
-                if let Some(field) = Field::parse(&head_lc) {
-                    let normalized = terms(rest);
-                    if normalized.is_empty() {
-                        return Err(QueryError(format!("empty term in '{tok}'")));
-                    }
-                    for t in normalized {
-                        keywords.push(t.clone());
-                        field_terms.push((field, t));
-                    }
-                    continue;
-                }
-                return Err(QueryError(format!("unknown field '{head}' in '{tok}'")));
-            }
-            keywords.extend(terms(tok));
+impl Query {
+    /// Parse + analyze + compile a query string into the `features`-bucket
+    /// space.
+    pub fn parse(raw: &str, features: usize) -> Result<Query, SearchError> {
+        let tokens = lex(raw)?;
+        let mut p = Parser { tokens, pos: 0 };
+        let ast = p.or_expr()?;
+        if p.pos != p.tokens.len() {
+            return Err(SearchError::parse(format!(
+                "unexpected '{}' after query",
+                p.tokens[p.pos]
+            )));
         }
-
-        if keywords.is_empty() && year.is_none() {
-            return Err(QueryError("query has no searchable terms".into()));
-        }
-        let buckets = keywords.iter().map(|t| term_feature(t, features) as u32).collect();
-        Ok(ParsedQuery { raw: raw.to_string(), keywords, buckets, field_terms, year })
+        Query::compile(raw, ast, features)
     }
 
-    /// Whether this query uses multivariate constraints.
+    /// Compile an AST (from the parser or built programmatically by the
+    /// request builder) into a runnable query.
+    pub fn compile(raw: &str, ast: QueryNode, features: usize) -> Result<Query, SearchError> {
+        let ast = simplify(ast);
+        let mut keywords: Vec<String> = Vec::new();
+        collect_scored(&ast, false, &mut keywords);
+        // Dedup scored terms: a repeated term must not inflate OR match
+        // counts or double its BM25F query weight.
+        let mut seen = std::collections::BTreeSet::new();
+        keywords.retain(|t| seen.insert(t.clone()));
+        if keywords.is_empty() && !has_positive_year(&ast) {
+            return Err(SearchError::parse("query has no searchable terms"));
+        }
+        let buckets: Vec<u32> =
+            keywords.iter().map(|t| term_feature(t, features) as u32).collect();
+        let matcher = build_matcher(&ast, features);
+        let conjunctive = is_term_conjunction(&ast);
+        let needs_filter = !conjunctive && !is_term_disjunction(&ast);
+        let pool_complete = requires_term(&ast);
+        Ok(Query {
+            raw: raw.to_string(),
+            ast,
+            keywords,
+            buckets,
+            matcher,
+            needs_filter,
+            conjunctive,
+            pool_complete,
+        })
+    }
+
+    /// Whether this query uses multivariate constraints (field scopes,
+    /// year ranges, boolean structure beyond a keyword group).
     pub fn is_multivariate(&self) -> bool {
-        !self.field_terms.is_empty() || self.year.is_some()
+        fn walk(n: &QueryNode) -> bool {
+            match n {
+                QueryNode::Term(_) => false,
+                QueryNode::Or(cs) => cs.iter().any(walk),
+                QueryNode::FieldTerm(..) | QueryNode::YearRange(_) => true,
+                QueryNode::And(_) | QueryNode::Not(_) => true,
+            }
+        }
+        walk(&self.ast)
+    }
+
+    /// Whether the positive structure is a pure term conjunction —
+    /// retrieval should use the galloping AND-intersection over
+    /// [`buckets`](Query::buckets).
+    pub fn is_conjunctive(&self) -> bool {
+        self.conjunctive
+    }
+
+    /// Whether OR-probe candidates still need [`Query::matches`]
+    /// (boolean structure the probe cannot express).
+    pub fn needs_filter(&self) -> bool {
+        self.needs_filter
+    }
+
+    /// Whether the counting-OR probe over [`buckets`](Query::buckets)
+    /// reaches every matching document. When false (pure filters like
+    /// `year:2014`, or trees satisfiable through a term-free branch like
+    /// `grid OR year:2014`), retrieval must scan the shard and rely on
+    /// the matcher instead.
+    pub fn or_pool_covers(&self) -> bool {
+        self.pool_complete
+    }
+
+    /// Evaluate the compiled matcher against one shard-local document.
+    pub fn matches(&self, shard: &Shard, lid: u32) -> bool {
+        self.matcher.eval(shard, lid)
     }
 }
 
-fn parse_year_filter(spec: &str) -> Result<RangeFilter, QueryError> {
-    let parse_y = |s: &str| -> Result<u32, QueryError> {
-        s.parse::<u32>().map_err(|_| QueryError(format!("bad year '{s}'")))
+/// Flatten nested same-kind combinators and unwrap singleton groups.
+fn simplify(node: QueryNode) -> QueryNode {
+    match node {
+        QueryNode::And(cs) => {
+            let mut flat = Vec::with_capacity(cs.len());
+            for c in cs {
+                match simplify(c) {
+                    QueryNode::And(inner) => flat.extend(inner),
+                    other => flat.push(other),
+                }
+            }
+            if flat.len() == 1 { flat.pop().unwrap() } else { QueryNode::And(flat) }
+        }
+        QueryNode::Or(cs) => {
+            let mut flat = Vec::with_capacity(cs.len());
+            for c in cs {
+                match simplify(c) {
+                    QueryNode::Or(inner) => flat.extend(inner),
+                    other => flat.push(other),
+                }
+            }
+            if flat.len() == 1 { flat.pop().unwrap() } else { QueryNode::Or(flat) }
+        }
+        QueryNode::Not(c) => QueryNode::Not(Box::new(simplify(*c))),
+        leaf => leaf,
+    }
+}
+
+/// Collect scored (positive) terms in tree order.
+fn collect_scored(node: &QueryNode, negated: bool, out: &mut Vec<String>) {
+    match node {
+        QueryNode::And(cs) | QueryNode::Or(cs) => {
+            for c in cs {
+                collect_scored(c, negated, out);
+            }
+        }
+        QueryNode::Not(c) => collect_scored(c, !negated, out),
+        QueryNode::Term(t) | QueryNode::FieldTerm(_, t) => {
+            if !negated {
+                out.push(t.clone());
+            }
+        }
+        QueryNode::YearRange(_) => {}
+    }
+}
+
+fn has_positive_year(node: &QueryNode) -> bool {
+    match node {
+        QueryNode::And(cs) | QueryNode::Or(cs) => cs.iter().any(has_positive_year),
+        QueryNode::Not(_) => false,
+        QueryNode::YearRange(_) => true,
+        _ => false,
+    }
+}
+
+fn build_matcher(node: &QueryNode, features: usize) -> Matcher {
+    match node {
+        QueryNode::And(cs) => Matcher::And(cs.iter().map(|c| build_matcher(c, features)).collect()),
+        QueryNode::Or(cs) => Matcher::Or(cs.iter().map(|c| build_matcher(c, features)).collect()),
+        QueryNode::Not(c) => Matcher::Not(Box::new(build_matcher(c, features))),
+        QueryNode::Term(t) => Matcher::AnyField(term_feature(t, features) as u32),
+        QueryNode::FieldTerm(f, t) => Matcher::InField(*f, term_feature(t, features) as u32),
+        QueryNode::YearRange(r) => Matcher::Year(*r),
+    }
+}
+
+/// `Term` or `And[Term...]`: exact galloping-intersection shape.
+fn is_term_conjunction(node: &QueryNode) -> bool {
+    match node {
+        QueryNode::And(cs) => cs.iter().all(|c| matches!(c, QueryNode::Term(_))),
+        _ => false,
+    }
+}
+
+/// `Term` or `Or[Term...]`: exact counting-OR shape (no filter needed).
+fn is_term_disjunction(node: &QueryNode) -> bool {
+    match node {
+        QueryNode::Term(_) => true,
+        QueryNode::Or(cs) => cs.iter().all(|c| matches!(c, QueryNode::Term(_))),
+        _ => false,
+    }
+}
+
+/// Whether every document matching `node` necessarily carries at least
+/// one positive scored term — i.e. whether the counting-OR probe over
+/// the scored buckets is a complete candidate generator for this tree.
+fn requires_term(node: &QueryNode) -> bool {
+    match node {
+        QueryNode::Term(_) | QueryNode::FieldTerm(..) => true,
+        QueryNode::YearRange(_) | QueryNode::Not(_) => false,
+        QueryNode::And(cs) => cs.iter().any(requires_term),
+        QueryNode::Or(cs) => cs.iter().all(requires_term),
+    }
+}
+
+// ------------------------------------------------------------------ lexer
+
+#[derive(Debug, Clone, PartialEq)]
+enum Token {
+    LParen,
+    RParen,
+    Or,
+    And,
+    Not,
+    Phrase(String),
+    Word(String),
+}
+
+impl std::fmt::Display for Token {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Token::LParen => write!(f, "("),
+            Token::RParen => write!(f, ")"),
+            Token::Or => write!(f, "OR"),
+            Token::And => write!(f, "AND"),
+            Token::Not => write!(f, "-"),
+            Token::Phrase(p) => write!(f, "\"{p}\""),
+            Token::Word(w) => write!(f, "{w}"),
+        }
+    }
+}
+
+fn lex(raw: &str) -> Result<Vec<Token>, SearchError> {
+    let mut out = Vec::new();
+    let mut chars = raw.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        match c {
+            c if c.is_whitespace() => {
+                chars.next();
+            }
+            '(' => {
+                chars.next();
+                out.push(Token::LParen);
+            }
+            ')' => {
+                chars.next();
+                out.push(Token::RParen);
+            }
+            '"' => {
+                chars.next();
+                let mut body = String::new();
+                loop {
+                    match chars.next() {
+                        Some('"') => break,
+                        Some(ch) => body.push(ch),
+                        None => return Err(SearchError::parse("unterminated phrase quote")),
+                    }
+                }
+                out.push(Token::Phrase(body));
+            }
+            '-' => {
+                chars.next();
+                out.push(Token::Not);
+            }
+            _ => {
+                let mut word = String::new();
+                while let Some(&ch) = chars.peek() {
+                    if ch.is_whitespace() || matches!(ch, '(' | ')' | '"') {
+                        break;
+                    }
+                    word.push(ch);
+                    chars.next();
+                }
+                // Uppercase-only operator keywords; anything else flows
+                // through the analyzer below.
+                match word.as_str() {
+                    "OR" => out.push(Token::Or),
+                    "AND" => out.push(Token::And),
+                    "NOT" => out.push(Token::Not),
+                    _ => out.push(Token::Word(word)),
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------------------- parser
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Token> {
+        self.tokens.get(self.pos)
+    }
+
+    fn or_expr(&mut self) -> Result<QueryNode, SearchError> {
+        // An arm that dissolves entirely in analysis (all stopwords) is
+        // dropped, not fatal: `grid OR the` is `grid`. Only a query
+        // whose every arm dissolves has no searchable terms.
+        let mut arms: Vec<QueryNode> = Vec::new();
+        if let Some(arm) = self.sequence()? {
+            arms.push(arm);
+        }
+        while self.peek() == Some(&Token::Or) {
+            self.pos += 1;
+            if let Some(arm) = self.sequence()? {
+                arms.push(arm);
+            }
+        }
+        if arms.is_empty() {
+            return Err(SearchError::parse("query has no searchable terms"));
+        }
+        Ok(if arms.len() == 1 { arms.pop().unwrap() } else { QueryNode::Or(arms) })
+    }
+
+    /// A whitespace sequence: bare keywords coalesce into one should
+    /// (`Or`) group; every other clause is a hard conjunct. `AND` binds
+    /// the clause immediately to its left (in token order) and the next
+    /// unary into an explicit conjunction (a hard clause).
+    ///
+    /// `Ok(None)` means the whole sequence dissolved in analysis (every
+    /// token was a stopword) — the caller decides whether that is fatal.
+    fn sequence(&mut self) -> Result<Option<QueryNode>, SearchError> {
+        // Clauses in token order; the flag marks bare keywords (should
+        // semantics). Kept as one list so `AND` always grabs its true
+        // left neighbour, whatever kind it was.
+        let mut clauses: Vec<(bool, QueryNode)> = Vec::new();
+        let mut parsed_any = false;
+        loop {
+            match self.peek() {
+                None | Some(Token::RParen) | Some(Token::Or) => break,
+                Some(Token::And) => {
+                    self.pos += 1;
+                    match clauses.pop() {
+                        Some((prev_kind, prev)) => match self.unary()? {
+                            Some(next) => {
+                                let joined = match prev {
+                                    QueryNode::And(mut cs) => {
+                                        cs.push(next);
+                                        QueryNode::And(cs)
+                                    }
+                                    other => QueryNode::And(vec![other, next]),
+                                };
+                                clauses.push((false, joined));
+                            }
+                            // Right operand dissolved (`grid AND the`):
+                            // the conjunction is a no-op, keep the left
+                            // clause as it was.
+                            None => clauses.push((prev_kind, prev)),
+                        },
+                        // Left operand dissolved (`the AND grid`): the
+                        // conjunction is a no-op prefix; the right
+                        // operand joins the sequence normally.
+                        None if parsed_any => {
+                            if let Some(clause) = self.unary()? {
+                                let is_should = matches!(clause, QueryNode::Term(_));
+                                clauses.push((is_should, clause));
+                            }
+                        }
+                        None => return Err(SearchError::parse("dangling AND")),
+                    }
+                }
+                _ => {
+                    parsed_any = true;
+                    if let Some(clause) = self.unary()? {
+                        let is_should = matches!(clause, QueryNode::Term(_));
+                        clauses.push((is_should, clause));
+                    }
+                    // `None`: the clause dissolved in analysis (stopword,
+                    // empty after stemming) — legal, just skipped.
+                }
+            }
+        }
+        if !parsed_any && clauses.is_empty() {
+            return Err(SearchError::parse("empty query clause"));
+        }
+        let mut shoulds: Vec<QueryNode> = Vec::new();
+        let mut musts: Vec<QueryNode> = Vec::new();
+        for (is_should, clause) in clauses {
+            if is_should {
+                shoulds.push(clause);
+            } else {
+                musts.push(clause);
+            }
+        }
+        if shoulds.len() > 1 {
+            musts.push(QueryNode::Or(shoulds));
+        } else {
+            musts.extend(shoulds);
+        }
+        if musts.is_empty() {
+            // Every token dissolved (e.g. all stopwords).
+            return Ok(None);
+        }
+        Ok(Some(if musts.len() == 1 { musts.pop().unwrap() } else { QueryNode::And(musts) }))
+    }
+
+    /// One negation-prefixed atom. `Ok(None)` means the atom dissolved
+    /// during analysis (stopword-only word or phrase under a `-`).
+    fn unary(&mut self) -> Result<Option<QueryNode>, SearchError> {
+        if self.peek() == Some(&Token::Not) {
+            self.pos += 1;
+            let inner = self.unary()?;
+            return Ok(inner.map(|n| QueryNode::Not(Box::new(n))));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Option<QueryNode>, SearchError> {
+        match self.peek().cloned() {
+            Some(Token::LParen) => {
+                self.pos += 1;
+                let inner = self.or_expr()?;
+                if self.peek() != Some(&Token::RParen) {
+                    return Err(SearchError::parse("missing ')'"));
+                }
+                self.pos += 1;
+                Ok(Some(inner))
+            }
+            Some(Token::Phrase(body)) => {
+                self.pos += 1;
+                let ts = terms(&body);
+                if ts.is_empty() {
+                    return Err(SearchError::parse(format!(
+                        "phrase \"{body}\" has no searchable terms"
+                    )));
+                }
+                if ts.len() == 1 {
+                    return Ok(Some(QueryNode::Term(ts.into_iter().next().unwrap())));
+                }
+                Ok(Some(QueryNode::And(ts.into_iter().map(QueryNode::Term).collect())))
+            }
+            Some(Token::Word(w)) => {
+                self.pos += 1;
+                if let Some((head, rest)) = w.split_once(':') {
+                    let head_lc = head.to_ascii_lowercase();
+                    if head_lc == "year" {
+                        return Ok(Some(QueryNode::YearRange(parse_year_filter(rest)?)));
+                    }
+                    if let Some(field) = Field::parse(&head_lc) {
+                        let normalized = terms(rest);
+                        if normalized.is_empty() {
+                            return Err(SearchError::parse(format!("empty term in '{w}'")));
+                        }
+                        let mut nodes: Vec<QueryNode> = normalized
+                            .into_iter()
+                            .map(|t| QueryNode::FieldTerm(field, t))
+                            .collect();
+                        return Ok(Some(if nodes.len() == 1 {
+                            nodes.pop().unwrap()
+                        } else {
+                            QueryNode::And(nodes)
+                        }));
+                    }
+                    return Err(SearchError::parse(format!("unknown field '{head}' in '{w}'")));
+                }
+                let ts = terms(&w);
+                match ts.len() {
+                    0 => Ok(None), // stopword / empty after analysis
+                    1 => Ok(Some(QueryNode::Term(ts.into_iter().next().unwrap()))),
+                    // A word that analyzes into several terms (e.g.
+                    // hyphenated): treat like an unquoted mini-phrase.
+                    _ => Ok(Some(QueryNode::And(ts.into_iter().map(QueryNode::Term).collect()))),
+                }
+            }
+            Some(tok @ (Token::RParen | Token::Or | Token::And)) => {
+                Err(SearchError::parse(format!("unexpected '{tok}'")))
+            }
+            Some(Token::Not) => unreachable!("handled by unary"),
+            None => Err(SearchError::parse("unexpected end of query")),
+        }
+    }
+}
+
+pub(crate) fn parse_year_filter(spec: &str) -> Result<RangeFilter, SearchError> {
+    let parse_y = |s: &str| -> Result<u32, SearchError> {
+        s.parse::<u32>().map_err(|_| SearchError::parse(format!("bad year '{s}'")))
     };
     if let Some((lo, hi)) = spec.split_once("..") {
         let (min, max) = (parse_y(lo)?, parse_y(hi)?);
         if min > max {
-            return Err(QueryError(format!("empty year range {min}..{max}")));
+            return Err(SearchError::parse(format!("empty year range {min}..{max}")));
         }
         Ok(RangeFilter { min, max })
     } else {
@@ -122,60 +642,263 @@ mod tests {
 
     #[test]
     fn keyword_query() {
-        let q = ParsedQuery::parse("grid computing publications", 512).unwrap();
+        let q = Query::parse("grid computing publications", 512).unwrap();
         assert_eq!(q.keywords, vec!["grid", "comput", "publication"]);
         assert_eq!(q.buckets.len(), 3);
         assert!(!q.is_multivariate());
-        assert!(q.year.is_none());
+        assert!(!q.is_conjunctive());
+        assert!(!q.needs_filter());
+        assert_eq!(
+            q.ast,
+            QueryNode::Or(vec![
+                QueryNode::Term("grid".into()),
+                QueryNode::Term("comput".into()),
+                QueryNode::Term("publication".into()),
+            ])
+        );
     }
 
     #[test]
     fn field_scoped_terms() {
-        let q = ParsedQuery::parse("title:grid venue:conference", 512).unwrap();
-        assert_eq!(q.field_terms.len(), 2);
-        assert_eq!(q.field_terms[0].0, Field::Title);
-        assert_eq!(q.field_terms[1], (Field::Venue, "conference".to_string()));
+        let q = Query::parse("title:grid venue:conference", 512).unwrap();
+        assert_eq!(
+            q.ast,
+            QueryNode::And(vec![
+                QueryNode::FieldTerm(Field::Title, "grid".into()),
+                QueryNode::FieldTerm(Field::Venue, "conference".into()),
+            ])
+        );
         // Field terms are also scored keywords.
         assert_eq!(q.keywords.len(), 2);
         assert!(q.is_multivariate());
+        assert!(q.needs_filter());
     }
 
     #[test]
     fn year_filters() {
-        let q = ParsedQuery::parse("scheduling year:2010..2014", 512).unwrap();
-        assert_eq!(q.year, Some(RangeFilter { min: 2010, max: 2014 }));
-        assert!(q.year.unwrap().contains(2012));
-        assert!(!q.year.unwrap().contains(2009));
-        let q1 = ParsedQuery::parse("x year:2005", 512).unwrap();
-        assert_eq!(q1.year, Some(RangeFilter { min: 2005, max: 2005 }));
+        let q = Query::parse("scheduling year:2010..2014", 512).unwrap();
+        assert_eq!(
+            q.ast,
+            QueryNode::And(vec![
+                QueryNode::YearRange(RangeFilter { min: 2010, max: 2014 }),
+                QueryNode::Term("schedul".into()),
+            ])
+        );
+        let q1 = Query::parse("x year:2005", 512).unwrap();
+        let y2005 = QueryNode::YearRange(RangeFilter { min: 2005, max: 2005 });
+        assert!(matches!(q1.ast, QueryNode::And(ref cs) if cs.contains(&y2005)));
     }
 
     #[test]
     fn errors() {
-        assert!(ParsedQuery::parse("", 512).is_err());
-        assert!(ParsedQuery::parse("the of and", 512).is_err()); // all stopwords
-        assert!(ParsedQuery::parse("body:grid", 512).is_err()); // unknown field
-        assert!(ParsedQuery::parse("year:20x4", 512).is_err());
-        assert!(ParsedQuery::parse("year:2014..2010", 512).is_err());
-        assert!(ParsedQuery::parse("title:", 512).is_err());
+        for bad in [
+            "",
+            "the of and",     // all stopwords
+            "body:grid",      // unknown field
+            "year:20x4",      // bad year
+            "year:2014..2010",// empty range
+            "title:",         // empty field term
+            "\"grid",         // unterminated phrase
+            "(grid",          // missing paren
+            "grid AND",       // dangling AND
+            "AND grid",       // dangling AND
+            "grid OR",        // dangling OR
+        ] {
+            assert!(Query::parse(bad, 512).is_err(), "should reject {bad:?}");
+        }
     }
 
     #[test]
     fn year_only_query_is_valid() {
-        let q = ParsedQuery::parse("year:2014", 512).unwrap();
+        let q = Query::parse("year:2014", 512).unwrap();
         assert!(q.keywords.is_empty());
         assert!(q.is_multivariate());
+        assert!(q.needs_filter());
     }
 
     #[test]
     fn buckets_in_feature_space() {
-        let q = ParsedQuery::parse("massive academic publications", 128).unwrap();
+        let q = Query::parse("massive academic publications", 128).unwrap();
         assert!(q.buckets.iter().all(|&b| b < 128));
     }
 
     #[test]
     fn query_terms_normalized_like_documents() {
-        let q = ParsedQuery::parse("Searching PUBLICATIONS", 512).unwrap();
+        let q = Query::parse("Searching PUBLICATIONS", 512).unwrap();
         assert_eq!(q.keywords, vec!["search", "publication"]);
+    }
+
+    #[test]
+    fn duplicate_terms_dedup() {
+        let a = Query::parse("grid grid computing", 512).unwrap();
+        let b = Query::parse("grid computing", 512).unwrap();
+        assert_eq!(a.keywords, b.keywords);
+        assert_eq!(a.buckets, b.buckets);
+    }
+
+    #[test]
+    fn phrase_is_a_conjunction() {
+        let q = Query::parse("\"grid computing\"", 512).unwrap();
+        assert_eq!(
+            q.ast,
+            QueryNode::And(vec![
+                QueryNode::Term("grid".into()),
+                QueryNode::Term("comput".into()),
+            ])
+        );
+        assert!(q.is_conjunctive());
+        assert!(!q.needs_filter());
+        assert_eq!(q.keywords, vec!["grid", "comput"]);
+    }
+
+    #[test]
+    fn and_binds_its_left_neighbour() {
+        // `AND` must capture the clause directly to its left (the
+        // phrase), not a distant bare keyword: grid/cloud stay a
+        // should group.
+        let q = Query::parse("grid cloud \"data replication\" AND storage", 512).unwrap();
+        match &q.ast {
+            QueryNode::And(cs) => {
+                let should_group = QueryNode::Or(vec![
+                    QueryNode::Term("grid".into()),
+                    QueryNode::Term("cloud".into()),
+                ]);
+                assert!(cs.contains(&should_group), "should group lost: {:?}", q.ast);
+                assert!(cs.contains(&QueryNode::Term("storage".into())));
+            }
+            other => panic!("expected And root, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_and_chain() {
+        let q = Query::parse("storage AND replication AND archive", 512).unwrap();
+        assert!(q.is_conjunctive());
+        assert_eq!(q.keywords.len(), 3);
+    }
+
+    #[test]
+    fn explicit_or_groups_sequences() {
+        let q = Query::parse("grid computing OR archive year:2000..2005", 512).unwrap();
+        match &q.ast {
+            // The left sequence's should group flattens into the root Or;
+            // the right sequence stays a hard conjunction.
+            QueryNode::Or(arms) => {
+                assert_eq!(arms.len(), 3);
+                assert!(matches!(arms[2], QueryNode::And(_)));
+            }
+            other => panic!("expected Or root, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn negation_excludes() {
+        let q = Query::parse("grid -cloud", 512).unwrap();
+        assert_eq!(
+            q.ast,
+            QueryNode::And(vec![
+                QueryNode::Not(Box::new(QueryNode::Term("cloud".into()))),
+                QueryNode::Term("grid".into()),
+            ])
+        );
+        // Negated terms are not scored.
+        assert_eq!(q.keywords, vec!["grid"]);
+        assert!(q.needs_filter());
+    }
+
+    #[test]
+    fn stopword_operands_dissolve_gracefully() {
+        // A stopword right operand makes the AND a no-op instead of a
+        // fatal "dangling AND"; a stopword-only OR arm is dropped.
+        let a = Query::parse("grid AND the cloud", 512).unwrap();
+        assert_eq!(a.keywords, vec!["grid", "cloud"]);
+        assert!(!a.is_conjunctive(), "no-op AND must not force a conjunction");
+        let b = Query::parse("grid OR the", 512).unwrap();
+        assert_eq!(b.ast, QueryNode::Term("grid".into()));
+        // Symmetric: a stopword left operand also dissolves the AND.
+        let c = Query::parse("the AND grid", 512).unwrap();
+        assert_eq!(c.ast, QueryNode::Term("grid".into()));
+        // But a truly empty arm (nothing to analyze) is still an error.
+        assert!(Query::parse("grid OR", 512).is_err());
+    }
+
+    #[test]
+    fn not_keyword_is_negation() {
+        let a = Query::parse("grid NOT cloud", 512).unwrap();
+        let b = Query::parse("grid -cloud", 512).unwrap();
+        assert_eq!(a.ast, b.ast);
+    }
+
+    #[test]
+    fn lowercase_operators_are_words() {
+        // `and`/`or` are stopwords: they dissolve instead of operating.
+        let q = Query::parse("grid and computing", 512).unwrap();
+        assert_eq!(q.keywords, vec!["grid", "comput"]);
+        assert!(!q.is_conjunctive());
+    }
+
+    #[test]
+    fn pool_coverage_detection() {
+        // OR probe complete: every match carries a scored term.
+        for raw in ["grid computing", "grid AND cloud", "title:grid", "grid year:2014"] {
+            assert!(Query::parse(raw, 512).unwrap().or_pool_covers(), "{raw}");
+        }
+        // OR probe incomplete: a term-free branch can satisfy the tree.
+        for raw in ["year:2014", "(grid OR year:2014)", "grid OR year:2014", "year:2014 -grid"]
+        {
+            assert!(!Query::parse(raw, 512).unwrap().or_pool_covers(), "{raw}");
+        }
+    }
+
+    #[test]
+    fn parens_group() {
+        let q = Query::parse("(grid OR cloud) year:2010..2014", 512).unwrap();
+        match &q.ast {
+            QueryNode::And(cs) => {
+                assert!(cs.iter().any(|c| matches!(c, QueryNode::Or(_))));
+                assert!(cs.iter().any(|c| matches!(c, QueryNode::YearRange(_))));
+            }
+            other => panic!("expected And root, got {other:?}"),
+        }
+        assert!(q.needs_filter());
+    }
+
+    #[test]
+    fn display_roundtrips_through_parser() {
+        for raw in [
+            "grid computing",
+            "\"grid computing\" -cloud year:2010..2014",
+            "(grid OR cloud) title:scheduling",
+            "storage AND replication",
+        ] {
+            let q = Query::parse(raw, 512).unwrap();
+            let rendered = q.ast.to_string();
+            let q2 = Query::parse(&rendered, 512).unwrap();
+            assert_eq!(q.ast, q2.ast, "display of {raw:?} -> {rendered:?} reparsed differently");
+        }
+    }
+
+    #[test]
+    fn matcher_evaluates_against_shard() {
+        use crate::corpus::{CorpusGenerator, CorpusSpec};
+        let gen = CorpusGenerator::new(CorpusSpec {
+            num_docs: 40,
+            vocab_size: 300,
+            ..CorpusSpec::default()
+        });
+        let shard = Shard::build(0, gen.generate_range(0, 40), 256);
+        let year = shard.pubs[7].year;
+        let q = Query::parse(&format!("year:{year}"), 256).unwrap();
+        assert!(q.matches(&shard, 7));
+        let q2 = Query::parse(&format!("year:{}", year + 1000), 256).unwrap();
+        assert!(!q2.matches(&shard, 7));
+        // Negation flips.
+        let title_word = shard.pubs[7].title.split_whitespace().next().unwrap().to_string();
+        let with = Query::parse(&title_word, 256);
+        if let Ok(with) = with {
+            let without = Query::parse(&format!("year:{year} -{title_word}"), 256).unwrap();
+            assert!(with.matches(&shard, 7));
+            assert!(!without.matches(&shard, 7));
+        }
     }
 }

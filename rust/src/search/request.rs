@@ -1,0 +1,326 @@
+//! Typed search requests: the builder the USI, CLI, benches, and a
+//! future HTTP front-end all construct, plus its JSON wire encoding
+//! (shared with the Job Description File, so one serialization crosses
+//! every boundary).
+//!
+//! ```no_run
+//! use gaps::search::{Field, ReplicaPref, SearchRequest};
+//!
+//! let req = SearchRequest::new("grid computing")
+//!     .top_k(20)
+//!     .year(2010..=2014)
+//!     .require(Field::Title, "grid")
+//!     .prefer_replicas(ReplicaPref::SameVo)
+//!     .explain(true);
+//! # let _ = req;
+//! ```
+
+use crate::text::{terms, Field};
+use crate::util::json::Json;
+
+use super::error::SearchError;
+use super::query::{Query, QueryNode, RangeFilter};
+
+/// Replica-selection preference for planning (the data itself is
+/// identical on every replica, so this only shifts *where* work runs,
+/// never *what* is returned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum ReplicaPref {
+    /// Planner's free choice among live replicas (default).
+    #[default]
+    Any,
+    /// Prefer replicas in the root broker's VO (keeps dispatch on the
+    /// LAN when the placement allows it).
+    SameVo,
+    /// Prefer each source's primary replica when it is live.
+    Primary,
+}
+
+impl ReplicaPref {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplicaPref::Any => "any",
+            ReplicaPref::SameVo => "same-vo",
+            ReplicaPref::Primary => "primary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ReplicaPref> {
+        match s.to_ascii_lowercase().as_str() {
+            "any" => Some(ReplicaPref::Any),
+            "same-vo" | "samevo" | "same_vo" => Some(ReplicaPref::SameVo),
+            "primary" => Some(ReplicaPref::Primary),
+            _ => None,
+        }
+    }
+}
+
+/// A typed search request. Build with [`SearchRequest::new`] + the
+/// chainable setters; execute with `GapsSystem::search_request` /
+/// `GapsSystem::search_batch`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchRequest {
+    /// Query text in the grammar of [`super::query`].
+    pub query: String,
+    /// Per-request result count (`None`: the deployment's configured
+    /// `search.top_k`).
+    pub top_k: Option<usize>,
+    /// Extra hard year constraint, ANDed with the query text.
+    pub year: Option<RangeFilter>,
+    /// Extra hard field-scoped terms, ANDed with the query text. The
+    /// text is analyzer-normalized at compile time.
+    pub require: Vec<(Field, String)>,
+    /// Replica-selection preference for the execution plan.
+    pub replicas: ReplicaPref,
+    /// Attach a [`crate::coordinator::Explain`] record to the response.
+    pub explain: bool,
+}
+
+impl SearchRequest {
+    /// A request for `query` with every knob at its default.
+    pub fn new(query: impl Into<String>) -> SearchRequest {
+        SearchRequest {
+            query: query.into(),
+            top_k: None,
+            year: None,
+            require: Vec::new(),
+            replicas: ReplicaPref::Any,
+            explain: false,
+        }
+    }
+
+    /// Results wanted (overrides the deployment default).
+    pub fn top_k(mut self, k: usize) -> SearchRequest {
+        self.top_k = Some(k);
+        self
+    }
+
+    /// Hard inclusive year filter, ANDed with the query text.
+    pub fn year(mut self, range: std::ops::RangeInclusive<u32>) -> SearchRequest {
+        self.year = Some(RangeFilter { min: *range.start(), max: *range.end() });
+        self
+    }
+
+    /// Require `text`'s terms to appear in `field` (ANDed with the query
+    /// text; also scored).
+    pub fn require(mut self, field: Field, text: impl Into<String>) -> SearchRequest {
+        self.require.push((field, text.into()));
+        self
+    }
+
+    /// Replica-selection preference.
+    pub fn prefer_replicas(mut self, pref: ReplicaPref) -> SearchRequest {
+        self.replicas = pref;
+        self
+    }
+
+    /// Attach plan/AST diagnostics to the response.
+    pub fn explain(mut self, on: bool) -> SearchRequest {
+        self.explain = on;
+        self
+    }
+
+    /// Parse the query text and graft the builder constraints onto the
+    /// AST, resolving `top_k` against the deployment default.
+    pub fn compile(
+        &self,
+        features: usize,
+        default_top_k: usize,
+    ) -> Result<CompiledRequest, SearchError> {
+        let mut extra: Vec<QueryNode> = Vec::new();
+        if let Some(year) = self.year {
+            if year.min > year.max {
+                return Err(SearchError::parse(format!(
+                    "empty year range {}..{}",
+                    year.min, year.max
+                )));
+            }
+            extra.push(QueryNode::YearRange(year));
+        }
+        for (field, text) in &self.require {
+            let normalized = terms(text);
+            if normalized.is_empty() {
+                return Err(SearchError::parse(format!(
+                    "required {} term {text:?} has no searchable terms",
+                    field.name()
+                )));
+            }
+            extra.extend(normalized.into_iter().map(|t| QueryNode::FieldTerm(*field, t)));
+        }
+        let query = if extra.is_empty() {
+            Query::parse(&self.query, features)?
+        } else if self.query.trim().is_empty() {
+            Query::compile(&self.query, QueryNode::And(extra), features)?
+        } else {
+            let parsed = Query::parse(&self.query, features)?;
+            extra.insert(0, parsed.ast);
+            Query::compile(&self.query, QueryNode::And(extra), features)?
+        };
+        Ok(CompiledRequest {
+            query,
+            top_k: self.top_k.unwrap_or(default_top_k),
+            replicas: self.replicas,
+            explain: self.explain,
+        })
+    }
+
+    // ------------------------------------------------------------- wire
+
+    /// JSON wire form (shared by the JDF and the response envelope).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("query", Json::str(&self.query))];
+        if let Some(k) = self.top_k {
+            pairs.push(("top_k", Json::from(k)));
+        }
+        if let Some(y) = self.year {
+            pairs.push((
+                "year",
+                Json::obj(vec![
+                    ("min", Json::from(y.min as i64)),
+                    ("max", Json::from(y.max as i64)),
+                ]),
+            ));
+        }
+        if !self.require.is_empty() {
+            pairs.push((
+                "require",
+                Json::Arr(
+                    self.require
+                        .iter()
+                        .map(|(f, t)| Json::Arr(vec![Json::str(f.name()), Json::str(t.clone())]))
+                        .collect(),
+                ),
+            ));
+        }
+        if self.replicas != ReplicaPref::Any {
+            pairs.push(("replicas", Json::str(self.replicas.name())));
+        }
+        if self.explain {
+            pairs.push(("explain", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse the JSON wire form.
+    pub fn from_json(v: &Json) -> Option<SearchRequest> {
+        let mut req = SearchRequest::new(v.get("query")?.as_str()?);
+        if let Some(k) = v.get("top_k") {
+            req.top_k = Some(k.as_i64()? as usize);
+        }
+        if let Some(y) = v.get("year") {
+            req.year = Some(RangeFilter {
+                min: y.get("min")?.as_i64()? as u32,
+                max: y.get("max")?.as_i64()? as u32,
+            });
+        }
+        if let Some(reqs) = v.get("require") {
+            for pair in reqs.as_arr()? {
+                let pair = pair.as_arr()?;
+                let field = Field::parse(pair.first()?.as_str()?)?;
+                req.require.push((field, pair.get(1)?.as_str()?.to_string()));
+            }
+        }
+        if let Some(r) = v.get("replicas") {
+            req.replicas = ReplicaPref::parse(r.as_str()?)?;
+        }
+        if let Some(e) = v.get("explain") {
+            req.explain = e.as_bool()?;
+        }
+        Some(req)
+    }
+
+    /// Wire size in bytes (charged to the network model by the JDF).
+    pub fn wire_bytes(&self) -> usize {
+        self.to_json().to_string_compact().len()
+    }
+}
+
+/// A request compiled against a deployment's feature space: the parsed
+/// [`Query`] plus resolved per-request execution knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledRequest {
+    pub query: Query,
+    pub top_k: usize,
+    pub replicas: ReplicaPref,
+    pub explain: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains_and_compiles() {
+        let req = SearchRequest::new("grid computing")
+            .top_k(20)
+            .year(2010..=2014)
+            .require(Field::Title, "grid")
+            .prefer_replicas(ReplicaPref::SameVo)
+            .explain(true);
+        let c = req.compile(512, 10).unwrap();
+        assert_eq!(c.top_k, 20);
+        assert_eq!(c.replicas, ReplicaPref::SameVo);
+        assert!(c.explain);
+        assert!(c.query.is_multivariate());
+        // Builder constraints are hard conjuncts on the AST.
+        let rendered = c.query.ast.to_string();
+        assert!(rendered.contains("year:2010..2014"), "{rendered}");
+        assert!(rendered.contains("title:grid"), "{rendered}");
+    }
+
+    #[test]
+    fn default_top_k_resolves_from_deployment() {
+        let c = SearchRequest::new("grid").compile(512, 7).unwrap();
+        assert_eq!(c.top_k, 7);
+        assert_eq!(c.replicas, ReplicaPref::Any);
+    }
+
+    #[test]
+    fn builder_only_request_is_valid() {
+        // No query text, but a hard year filter: legal (pure filter).
+        let c = SearchRequest::new("").year(2005..=2009).compile(512, 10).unwrap();
+        assert!(c.query.keywords.is_empty());
+        assert!(c.query.is_multivariate());
+    }
+
+    #[test]
+    fn bad_inputs_are_parse_errors() {
+        assert_eq!(SearchRequest::new("").compile(512, 10).unwrap_err().kind(), "parse");
+        assert_eq!(
+            SearchRequest::new("grid")
+                .require(Field::Venue, "the")
+                .compile(512, 10)
+                .unwrap_err()
+                .kind(),
+            "parse"
+        );
+        assert_eq!(
+            SearchRequest::new("body:grid").compile(512, 10).unwrap_err().kind(),
+            "parse"
+        );
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let req = SearchRequest::new("\"grid computing\" -cloud")
+            .top_k(5)
+            .year(2000..=2003)
+            .require(Field::Authors, "zhang")
+            .prefer_replicas(ReplicaPref::Primary)
+            .explain(true);
+        let parsed = SearchRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(parsed, req);
+        // Defaults serialize compactly and roundtrip too.
+        let bare = SearchRequest::new("grid");
+        assert_eq!(SearchRequest::from_json(&bare.to_json()).unwrap(), bare);
+        assert!(bare.wire_bytes() < req.wire_bytes());
+    }
+
+    #[test]
+    fn replica_pref_parse_roundtrip() {
+        for p in [ReplicaPref::Any, ReplicaPref::SameVo, ReplicaPref::Primary] {
+            assert_eq!(ReplicaPref::parse(p.name()), Some(p));
+        }
+        assert_eq!(ReplicaPref::parse("bogus"), None);
+    }
+}

@@ -1,21 +1,26 @@
-//! Search Service (SS): the per-node grid service that executes one search
-//! job against its local shard.
+//! Search Service (SS): the per-node grid service that executes search
+//! jobs against its local shard.
 //!
 //! Paper: "The local Search Service module was a Java program installed in
 //! each worker node ... responsible for performing the search process in
 //! the local dataset." Here it is a rust service with a two-phase local
 //! search:
 //!
-//! 1. **retrieve** — inverted-index OR-probe over the query buckets,
-//!    producing up to `max_candidates` candidates (+ multivariate
-//!    filtering: field-scoped terms and year ranges);
-//! 2. **rank** — candidates are packed into dense blocks and scored by the
-//!    AOT artifact on the PJRT runtime ([`Scorer::Xla`]) or the pure-rust
-//!    fallback ([`Scorer::Rust`], also the traditional baseline's path).
+//! 1. **retrieve** — per query: the galloping AND-intersection for pure
+//!    conjunctions (phrases, `AND` chains), the counting OR-merge over
+//!    the query buckets otherwise, followed by the compiled AST matcher
+//!    for boolean structure the probes cannot express (negations, field
+//!    scopes, year ranges, nested groups);
+//! 2. **rank** — on the artifact path ([`Scorer::Xla`]) a batch whose
+//!    queries share one candidate set is scored with Q>1 query rows per
+//!    block (the ABI's batched execution); heterogeneous batches and the
+//!    pure-rust fallback ([`Scorer::Rust`]) score per-query exact-size
+//!    blocks — BM25F scores are per (query, doc) and independent of the
+//!    other block rows, so every formulation returns identical hits.
 //!
-//! The returned [`SearchOutcome`] carries measured work time; fabric
-//! overheads are added by the coordinator (they belong to the grid, not
-//! the service).
+//! The returned [`SearchOutcome`]s carry measured work time; fabric
+//! costs are added by the coordinator (they belong to the grid, not the
+//! service).
 
 use std::cell::RefCell;
 
@@ -29,13 +34,18 @@ thread_local! {
     /// Reused retrieval scratch: the counting OR-merge runs against this
     /// instead of allocating a `HashMap` per query. Thread-local (not a
     /// `SearchService` field) because the coordinator fans search jobs
-    /// out over scoped worker threads; each worker warms its own scratch
-    /// and reuses it across every shard it serves.
+    /// out over scoped worker threads; each worker reuses its scratch
+    /// across every shard and batched query of one fan-out. Scoped
+    /// workers die with the fan-out, so cross-request reuse only
+    /// happens on serial paths until the resident-pool item on the
+    /// ROADMAP lands (batching already amortizes the respawn across
+    /// the queries of a batch).
     static RETRIEVAL_SCRATCH: RefCell<RetrievalScratch> =
         RefCell::new(RetrievalScratch::new());
 }
 
-use super::query::ParsedQuery;
+use super::error::SearchError;
+use super::query::Query;
 use super::scorer::{score_block_rust, topk_row};
 
 /// One hit from a local shard: corpus-global doc id + BM25F score.
@@ -45,7 +55,7 @@ pub struct LocalHit {
     pub score: f32,
 }
 
-/// Result of one local search job.
+/// Result of one local search job (per query).
 #[derive(Debug, Clone)]
 pub struct SearchOutcome {
     /// Top hits (sorted by score descending), at most `top_k`.
@@ -54,7 +64,8 @@ pub struct SearchOutcome {
     pub candidates: usize,
     /// Documents in the shard (for scan-rate metrics).
     pub shard_docs: usize,
-    /// Measured wall time of the local work (seconds).
+    /// Measured wall time of the local work (seconds; for a batch, the
+    /// per-query share of the shared pass).
     pub work_s: f64,
 }
 
@@ -83,116 +94,270 @@ impl SearchService {
         &self.cfg
     }
 
-    /// Execute one search job against `shard`.
+    /// Execute one query against `shard` with the configured `top_k`.
     pub fn search(
         &self,
         shard: &Shard,
         stats: &GlobalStats,
-        query: &ParsedQuery,
+        query: &Query,
         scorer: &mut Scorer<'_>,
-    ) -> anyhow::Result<SearchOutcome> {
+    ) -> Result<SearchOutcome, SearchError> {
+        let top_k = self.cfg.top_k;
+        let mut out = self.search_batch(shard, stats, &[(query, top_k)], scorer)?;
+        Ok(out.pop().expect("one outcome per query"))
+    }
+
+    /// Execute a whole query batch against `shard` in one pass:
+    /// per-query retrieval (shared scratch), then ranking — batched
+    /// Q-row artifact executions where candidate sets align, per-query
+    /// blocks otherwise (see [`Scorer`] and the module docs). Each
+    /// `(query, top_k)` pair yields one [`SearchOutcome`], order
+    /// preserved.
+    pub fn search_batch(
+        &self,
+        shard: &Shard,
+        stats: &GlobalStats,
+        queries: &[(&Query, usize)],
+        scorer: &mut Scorer<'_>,
+    ) -> Result<Vec<SearchOutcome>, SearchError> {
         let clock = WallClock::start();
         let cfg = &self.cfg;
-
-        // ---- Phase 1: retrieval ------------------------------------
-        let mut candidates: Vec<u32> = if query.buckets.is_empty() {
-            // Pure-filter query (e.g. `year:2014`): all docs are candidates.
-            (0..shard.len() as u32).collect()
-        } else {
-            RETRIEVAL_SCRATCH.with(|s| {
-                let mut s = s.borrow_mut();
-                shard.inverted.retrieve_into(&query.buckets, cfg.max_candidates, &mut s);
-                s.hits().iter().map(|&(id, _)| id).collect()
-            })
-        };
-
-        // Multivariate filters.
-        if let Some(range) = query.year {
-            candidates.retain(|&lid| range.contains(shard.pubs[lid as usize].year));
+        let nq = queries.len();
+        if nq == 0 {
+            return Ok(Vec::new());
         }
-        for (field, term) in &query.field_terms {
-            let bucket = crate::text::term_feature(term, cfg.features) as u32;
-            candidates.retain(|&lid| {
-                shard.docs[lid as usize].field_tf[*field as usize]
-                    .iter()
-                    .any(|(b, _)| *b == bucket)
-            });
-        }
-        candidates.truncate(cfg.max_candidates);
 
-        let retrieved = candidates.len();
-        if retrieved == 0 {
-            return Ok(SearchOutcome {
-                hits: Vec::new(),
-                candidates: 0,
-                shard_docs: shard.len(),
-                work_s: clock.elapsed_s(),
-            });
+        // ---- Phase 1: per-query retrieval ---------------------------
+        let mut cand_sets: Vec<Vec<u32>> = Vec::with_capacity(nq);
+        for (query, _) in queries {
+            let mut candidates: Vec<u32> = if query.is_conjunctive() {
+                // Pure term conjunction: galloping AND-intersection.
+                shard.inverted.retrieve_all(&query.buckets)
+            } else if !query.or_pool_covers() {
+                // The OR probe cannot reach every match (pure filters
+                // like `year:2014`, or a term-free branch like
+                // `grid OR year:2014`): scan the shard with the matcher
+                // fused in, stopping at the candidate budget.
+                (0..shard.len() as u32)
+                    .filter(|&lid| query.matches(shard, lid))
+                    .take(cfg.max_candidates)
+                    .collect()
+            } else {
+                // Counting OR-merge over the scored buckets, then the
+                // compiled AST matcher for structure beyond the probe.
+                let mut pool: Vec<u32> = RETRIEVAL_SCRATCH.with(|s| {
+                    let mut s = s.borrow_mut();
+                    shard.inverted.retrieve_into(&query.buckets, cfg.max_candidates, &mut s);
+                    s.hits().iter().map(|&(id, _)| id).collect()
+                });
+                if query.needs_filter() {
+                    pool.retain(|&lid| query.matches(shard, lid));
+                }
+                pool
+            };
+            candidates.truncate(cfg.max_candidates);
+            cand_sets.push(candidates);
         }
 
         // ---- Phase 2: ranking ---------------------------------------
-        let queries = vec![query.buckets.clone()];
-        let mut all_hits: Vec<LocalHit> = Vec::new();
-
+        let mut per_query_hits: Vec<Vec<LocalHit>> = vec![Vec::new(); nq];
         match scorer {
             Scorer::Xla(exec) => {
-                // Chunk candidates to the largest artifact block; each
-                // chunk is packed by the executor's reused packer
-                // (§Perf P2) into the smallest variant that fits.
-                let max_d = exec
-                    .manifest()
+                // Artifact path: Q>1 rows per execution when the batch
+                // shares one candidate set, per-query blocks otherwise.
+                let hits = &mut per_query_hits;
+                self.rank_xla(exec, shard, stats, queries, &cand_sets, hits)?;
+            }
+            Scorer::Rust => {
+                // Fallback scorer: per-query exact-size blocks + bounded
+                // top-k selection (PR 1's path). BM25F scores are per
+                // (query, doc) and block-independent, so this is
+                // bit-identical to any shared-block formulation while
+                // doing |own candidates| work per query instead of
+                // |union| — the rust scorer gains nothing from Q>1 rows.
+                for (qi, (query, top_k)) in queries.iter().enumerate() {
+                    let cands = &cand_sets[qi];
+                    if cands.is_empty() {
+                        continue;
+                    }
+                    let qw = build_query_weights(
+                        std::slice::from_ref(&query.buckets),
+                        stats,
+                        cfg.features,
+                        1,
+                    );
+                    let block = pack_block(shard, stats, cands, cands.len(), cfg.b);
+                    let scores =
+                        score_block_rust(&block, &qw, 1, &cfg.field_weights, k1_const());
+                    for (local_idx, score) in topk_row(&scores, block.n_real, *top_k) {
+                        per_query_hits[qi].push(LocalHit {
+                            global_id: shard.docs[cands[local_idx as usize] as usize].global_id,
+                            score,
+                        });
+                    }
+                }
+            }
+        }
+
+        // Per-query top-k. total_cmp: a NaN score (corrupt artifact
+        // output) must not panic the service.
+        let work_total = clock.elapsed_s();
+        let work_each = work_total / nq as f64;
+        let mut outcomes = Vec::with_capacity(nq);
+        for (qi, (_, top_k)) in queries.iter().enumerate() {
+            let mut hits = std::mem::take(&mut per_query_hits[qi]);
+            hits.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.global_id.cmp(&b.global_id)));
+            hits.truncate(*top_k);
+            outcomes.push(SearchOutcome {
+                hits,
+                candidates: cand_sets[qi].len(),
+                shard_docs: shard.len(),
+                work_s: work_each,
+            });
+        }
+        Ok(outcomes)
+    }
+
+    /// Artifact path of the batch ranking.
+    ///
+    /// The artifact returns only its top `k` rows per block, computed
+    /// over the whole block — so shared Q-row blocks are only exact
+    /// when every query wants the same docs. Strategy:
+    ///
+    /// * **Homogeneous batch** (all candidate sets equal — always true
+    ///   for Q = 1): feed Q>1 query rows per block over the shared
+    ///   candidate list, amortizing executions across the batch. If a
+    ///   request's `top_k` exceeds the artifact `k`, blocks are capped
+    ///   at `k` so per-block truncation cannot drop qualifying docs.
+    /// * **Heterogeneous batch**: per-query solo-style executions over
+    ///   each query's own candidates (exactly the pre-batch path) —
+    ///   exact, and strictly cheaper than scoring every query against
+    ///   the whole union in `k`-sized blocks.
+    fn rank_xla(
+        &self,
+        exec: &mut Executor,
+        shard: &Shard,
+        stats: &GlobalStats,
+        queries: &[(&Query, usize)],
+        cand_sets: &[Vec<u32>],
+        per_query_hits: &mut [Vec<LocalHit>],
+    ) -> Result<(), SearchError> {
+        let cfg = &self.cfg;
+        let no_artifact =
+            || SearchError::executor(format!("no artifact for F={}", cfg.features));
+        let heterogeneous = cand_sets.windows(2).any(|w| w[0] != w[1]);
+
+        if heterogeneous {
+            let (max_d, k_min) = {
+                let m = exec.manifest();
+                let d = m
                     .max_block(1, cfg.features)
                     .map(|a| a.d)
-                    .ok_or_else(|| {
-                        anyhow::anyhow!("no artifact for F={}", cfg.features)
-                    })?;
-                let qw = build_query_weights(&queries, stats, cfg.features, 1);
-                for chunk in candidates.chunks(max_d) {
-                    let ranked = exec.rank_candidates(
-                        shard,
-                        stats,
-                        chunk,
-                        &qw,
-                        1,
-                        &cfg.field_weights,
-                        cfg.b,
-                    )?;
+                    .ok_or_else(no_artifact)?;
+                let k = m
+                    .artifacts
+                    .iter()
+                    .filter(|a| a.f == cfg.features)
+                    .map(|a| a.k)
+                    .min()
+                    .ok_or_else(no_artifact)?;
+                (d, k)
+            };
+            for (qi, (query, top_k)) in queries.iter().enumerate() {
+                if cand_sets[qi].is_empty() {
+                    continue;
+                }
+                // Same exactness guard as the homogeneous branch: if the
+                // request wants more hits than the artifact returns per
+                // block, shrink blocks to k so truncation cannot drop
+                // qualifying docs.
+                let chunk_cap = if *top_k > k_min { max_d.min(k_min.max(1)) } else { max_d };
+                let qw = build_query_weights(
+                    std::slice::from_ref(&query.buckets),
+                    stats,
+                    cfg.features,
+                    1,
+                );
+                for chunk in cand_sets[qi].chunks(chunk_cap) {
+                    let ranked = exec
+                        .rank_candidates(shard, stats, chunk, &qw, 1, &cfg.field_weights, cfg.b)
+                        .map_err(SearchError::executor)?;
                     for &(local_idx, score) in &ranked[0] {
-                        all_hits.push(LocalHit {
+                        per_query_hits[qi].push(LocalHit {
                             global_id: shard.docs[chunk[local_idx as usize] as usize].global_id,
                             score,
                         });
                     }
                 }
             }
-            Scorer::Rust => {
-                let qw = build_query_weights(&queries, stats, cfg.features, 1);
-                // One exact-size block (no padding needed off the ABI path).
-                let block = pack_block(shard, stats, &candidates, candidates.len(), cfg.b);
-                let scores =
-                    score_block_rust(&block, &qw, 1, &cfg.field_weights, k1_const());
-                for (local_idx, score) in topk_row(&scores, block.n_real, cfg.top_k) {
-                    all_hits.push(LocalHit {
-                        global_id: shard.docs[candidates[local_idx as usize] as usize].global_id,
-                        score,
-                    });
+            return Ok(());
+        }
+
+        // Homogeneous: one shared candidate list (kept in retrieval
+        // order, matching the solo path's chunk partitioning exactly).
+        let shared = &cand_sets[0];
+        if shared.is_empty() {
+            return Ok(());
+        }
+        let rows: Vec<Vec<u32>> = queries.iter().map(|(q, _)| q.buckets.clone()).collect();
+        let q_cap = {
+            let m = exec.manifest();
+            m.artifacts
+                .iter()
+                .filter(|a| a.f == cfg.features)
+                .map(|a| a.q)
+                .max()
+                .ok_or_else(no_artifact)?
+        };
+        let max_top_k = queries.iter().map(|(_, k)| *k).max().unwrap_or(0);
+        for (chunk_idx, q_chunk) in rows.chunks(q_cap).enumerate() {
+            let q_base = chunk_idx * q_cap;
+            // Block capacity for *this* query count (the largest-D
+            // artifact may only support Q = 1).
+            let max_d = {
+                let m = exec.manifest();
+                let d = m
+                    .max_block(q_chunk.len(), cfg.features)
+                    .map(|a| a.d)
+                    .ok_or_else(no_artifact)?;
+                let k_min = m
+                    .artifacts
+                    .iter()
+                    .filter(|a| a.f == cfg.features && a.q >= q_chunk.len())
+                    .map(|a| a.k)
+                    .min()
+                    .ok_or_else(no_artifact)?;
+                if max_top_k > k_min {
+                    d.min(k_min.max(1))
+                } else {
+                    d
+                }
+            };
+            let qw = build_query_weights(q_chunk, stats, cfg.features, q_cap.max(q_chunk.len()));
+            for d_chunk in shared.chunks(max_d) {
+                let ranked = exec
+                    .rank_candidates(
+                        shard,
+                        stats,
+                        d_chunk,
+                        &qw,
+                        q_chunk.len(),
+                        &cfg.field_weights,
+                        cfg.b,
+                    )
+                    .map_err(SearchError::executor)?;
+                for (qi_local, row) in ranked.iter().enumerate() {
+                    let qi = q_base + qi_local;
+                    for &(local_idx, score) in row {
+                        per_query_hits[qi].push(LocalHit {
+                            global_id: shard.docs[d_chunk[local_idx as usize] as usize].global_id,
+                            score,
+                        });
+                    }
                 }
             }
         }
-
-        // Local top-k across chunks. total_cmp: a NaN score (corrupt
-        // artifact output) must not panic the service.
-        all_hits.sort_by(|a, b| {
-            b.score.total_cmp(&a.score).then(a.global_id.cmp(&b.global_id))
-        });
-        all_hits.truncate(cfg.top_k);
-
-        Ok(SearchOutcome {
-            hits: all_hits,
-            candidates: retrieved,
-            shard_docs: shard.len(),
-            work_s: clock.elapsed_s(),
-        })
+        Ok(())
     }
 }
 
@@ -219,9 +384,9 @@ mod tests {
     }
 
     /// A query built from an existing doc's title (guaranteed hits).
-    fn title_query(shard: &Shard, local: usize) -> ParsedQuery {
+    fn title_query(shard: &Shard, local: usize) -> Query {
         let title = shard.pubs[local].title.clone();
-        ParsedQuery::parse(&title, 512).unwrap()
+        Query::parse(&title, 512).unwrap()
     }
 
     #[test]
@@ -249,7 +414,7 @@ mod tests {
         let mut cfg = SearchConfig { use_xla: false, ..SearchConfig::default() };
         cfg.top_k = 3;
         let ss = SearchService::new(cfg);
-        let q = ParsedQuery::parse("grid data search distributed", 512).unwrap();
+        let q = Query::parse("grid data search distributed", 512).unwrap();
         let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
         assert!(out.hits.len() <= 3);
     }
@@ -259,7 +424,7 @@ mod tests {
         let (shard, stats, ss) = setup(80);
         let year = shard.pubs[5].year;
         let raw = format!("{} year:{year}", shard.pubs[5].title);
-        let q = ParsedQuery::parse(&raw, 512).unwrap();
+        let q = Query::parse(&raw, 512).unwrap();
         let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
         for h in &out.hits {
             assert_eq!(shard.pubs[h.global_id as usize].year, year);
@@ -270,7 +435,7 @@ mod tests {
     #[test]
     fn year_only_query_scans_shard() {
         let (shard, stats, ss) = setup(50);
-        let q = ParsedQuery::parse("year:2000..2014", 512).unwrap();
+        let q = Query::parse("year:2000..2014", 512).unwrap();
         let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
         // All hits satisfy the filter; scores are 0 (no keywords).
         for h in &out.hits {
@@ -288,7 +453,7 @@ mod tests {
             .next()
             .unwrap()
             .to_string();
-        let q = ParsedQuery::parse(&format!("venue:{venue_word}"), 512).unwrap();
+        let q = Query::parse(&format!("venue:{venue_word}"), 512).unwrap();
         let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
         let stemmed = crate::text::tokenize(&venue_word)[0].term.clone();
         for h in &out.hits {
@@ -310,10 +475,108 @@ mod tests {
     #[test]
     fn no_match_query_returns_empty() {
         let (shard, stats, ss) = setup(30);
-        let q = ParsedQuery::parse("qqqqzzzz xxxyyy", 512).unwrap();
+        let q = Query::parse("qqqqzzzz xxxyyy", 512).unwrap();
         let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
         // Terms may collide into occupied buckets, but usually empty:
         // at minimum the call must succeed and respect top_k.
         assert!(out.hits.len() <= ss.config().top_k);
+    }
+
+    #[test]
+    fn phrase_requires_every_term() {
+        let (shard, stats, ss) = setup(80);
+        let title = shard.pubs[9].title.clone();
+        let q = Query::parse(&format!("\"{title}\""), 512).unwrap();
+        assert!(q.is_conjunctive());
+        let out = ss.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
+        assert!(
+            out.hits.iter().any(|h| h.global_id == 9),
+            "doc 9 missing from phrase search {:?}",
+            out.hits
+        );
+        // Every hit carries every phrase bucket somewhere.
+        for h in &out.hits {
+            for b in &q.buckets {
+                let has = shard.docs[h.global_id as usize]
+                    .field_tf
+                    .iter()
+                    .any(|tf| tf.iter().any(|(bb, _)| bb == b));
+                assert!(has, "hit {} lacks phrase bucket {b}", h.global_id);
+            }
+        }
+    }
+
+    #[test]
+    fn negation_excludes_matching_docs() {
+        let (shard, stats, ss) = setup(80);
+        let w = shard.pubs[4].title.split_whitespace().next().unwrap().to_string();
+        let stemmed = crate::text::terms(&w);
+        if stemmed.is_empty() {
+            return; // the word was a stopword: nothing to assert
+        }
+        let b = crate::text::term_feature(&stemmed[0], 512) as u32;
+        let neg = Query::parse(&format!("year:1990..2030 -{w}"), 512).unwrap();
+        let out = ss.search(&shard, &stats, &neg, &mut Scorer::Rust).unwrap();
+        assert!(
+            !out.hits.iter().any(|h| h.global_id == 4),
+            "doc 4 must be excluded by -{w}"
+        );
+        for h in &out.hits {
+            let has = shard.docs[h.global_id as usize]
+                .field_tf
+                .iter()
+                .any(|tf| tf.iter().any(|(bb, _)| *bb == b));
+            assert!(!has, "hit {} matches excluded bucket", h.global_id);
+        }
+    }
+
+    #[test]
+    fn year_branch_of_an_or_is_reachable() {
+        // `x OR year:Y` must return docs matching only the year branch —
+        // the OR probe alone cannot see them, so retrieval falls back to
+        // a shard scan + matcher.
+        let (shard, stats, _ss) = setup(60);
+        let year = shard.pubs[11].year;
+        let q = Query::parse(&format!("qqqqzzzz OR year:{year}"), 512).unwrap();
+        assert!(!q.or_pool_covers());
+        let mut cfg = SearchConfig { use_xla: false, ..SearchConfig::default() };
+        cfg.top_k = 60;
+        let ss_wide = SearchService::new(cfg);
+        let out = ss_wide.search(&shard, &stats, &q, &mut Scorer::Rust).unwrap();
+        assert!(
+            out.hits.iter().any(|h| h.global_id == 11),
+            "doc 11 (year {year}) missing from OR-with-year query"
+        );
+    }
+
+    #[test]
+    fn batch_outcomes_match_solo_searches() {
+        let (shard, stats, ss) = setup(100);
+        let queries: Vec<Query> = vec![
+            title_query(&shard, 3),
+            Query::parse("grid data search", 512).unwrap(),
+            Query::parse("year:2000..2014 distributed", 512).unwrap(),
+        ];
+        let batch_input: Vec<(&Query, usize)> = queries.iter().map(|q| (q, 10)).collect();
+        let batch = ss
+            .search_batch(&shard, &stats, &batch_input, &mut Scorer::Rust)
+            .unwrap();
+        assert_eq!(batch.len(), 3);
+        for (q, b) in queries.iter().zip(&batch) {
+            let solo = ss.search(&shard, &stats, q, &mut Scorer::Rust).unwrap();
+            assert_eq!(solo.hits, b.hits, "batch diverged for {:?}", q.raw);
+            assert_eq!(solo.candidates, b.candidates);
+        }
+    }
+
+    #[test]
+    fn duplicate_terms_match_dedup_results() {
+        let (shard, stats, ss) = setup(100);
+        let a = Query::parse("grid grid data", 512).unwrap();
+        let b = Query::parse("grid data", 512).unwrap();
+        let oa = ss.search(&shard, &stats, &a, &mut Scorer::Rust).unwrap();
+        let ob = ss.search(&shard, &stats, &b, &mut Scorer::Rust).unwrap();
+        assert_eq!(oa.hits, ob.hits, "duplicate term changed hits/scores");
+        assert_eq!(oa.candidates, ob.candidates);
     }
 }

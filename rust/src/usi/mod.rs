@@ -5,15 +5,17 @@
 //! and multivariate-based search types ... the USI overhead is very small
 //! as compared with the response time."
 //!
-//! Two modes: one-shot (`format_response`) used by the `gaps search`
-//! subcommand and examples, and an interactive REPL (`repl`) for the
-//! `gaps repl` subcommand. The USI layer is deliberately thin — its cost
-//! is measured by `benches/usi_overhead.rs` to validate the paper's
-//! overhead claim.
+//! Two modes: one-shot ([`one_shot`] / [`one_shot_request`]) used by the
+//! `gaps search` subcommand and examples, and an interactive REPL
+//! ([`repl`]) for the `gaps repl` subcommand. Both build typed
+//! [`SearchRequest`]s and report typed [`SearchError`]s. The USI layer is
+//! deliberately thin — its cost is measured by `benches/usi_overhead.rs`
+//! to validate the paper's overhead claim.
 
 use std::io::{BufRead, Write};
 
 use crate::coordinator::{GapsSystem, SearchResponse};
+use crate::search::{SearchError, SearchRequest};
 use crate::util::clock::WallClock;
 
 /// Render a search response the way the USI displays it.
@@ -30,6 +32,15 @@ pub fn format_response(resp: &SearchResponse) -> String {
         resp.timeline.net_s * 1e3,
         resp.timeline.overhead_s * 1e3,
     ));
+    if let Some(explain) = &resp.explain {
+        out.push_str(&format!(
+            "explain: ast={}  keywords={:?}  batch={}\n",
+            explain.ast, explain.keywords, explain.batch_size
+        ));
+        for (node, sources) in &explain.plan {
+            out.push_str(&format!("explain: {node} <- {sources} sources\n"));
+        }
+    }
     if resp.hits.is_empty() {
         out.push_str("no results.\n");
     }
@@ -61,13 +72,29 @@ impl UsiTiming {
     }
 }
 
-/// One-shot query through the USI with the overhead split measured.
-pub fn one_shot(sys: &mut GapsSystem, query: &str) -> anyhow::Result<(String, UsiTiming)> {
+/// One-shot raw-text query through the USI with the overhead split
+/// measured.
+pub fn one_shot(sys: &mut GapsSystem, query: &str) -> Result<(String, UsiTiming), SearchError> {
     let iface = WallClock::start();
-    let trimmed = query.trim().to_string(); // input handling
+    let request = SearchRequest::new(query.trim()); // input handling
     let pre_s = iface.elapsed_s();
+    one_shot_prepared(sys, &request, pre_s)
+}
 
-    let resp = sys.search(&trimmed)?;
+/// One-shot typed request through the USI.
+pub fn one_shot_request(
+    sys: &mut GapsSystem,
+    request: &SearchRequest,
+) -> Result<(String, UsiTiming), SearchError> {
+    one_shot_prepared(sys, request, 0.0)
+}
+
+fn one_shot_prepared(
+    sys: &mut GapsSystem,
+    request: &SearchRequest,
+    pre_s: f64,
+) -> Result<(String, UsiTiming), SearchError> {
+    let resp = sys.search_request(request)?;
     let grid_s = resp.response_s();
 
     let fmt_clock = WallClock::start();
@@ -77,14 +104,25 @@ pub fn one_shot(sys: &mut GapsSystem, query: &str) -> anyhow::Result<(String, Us
 }
 
 /// Interactive REPL over stdin/stdout (the `gaps repl` subcommand).
-/// Commands: a query per line; `:quit` exits; `:fail <node>` / `:recover
-/// <node>` exercise grid dynamicity; `:stats` shows the job table.
+/// Commands: a query per line; `:quit` exits; `:batch a | b | c` runs a
+/// request batch in one fan-out; `:topk N` / `:explain` set session
+/// request knobs; `:fail <node>` / `:recover <node>` exercise grid
+/// dynamicity; `:stats` shows the job table.
 pub fn repl(
     sys: &mut GapsSystem,
     input: impl BufRead,
     mut output: impl Write,
-) -> anyhow::Result<()> {
+) -> Result<(), SearchError> {
     writeln!(output, "GAPS USI — type a query, :help for commands")?;
+    let mut top_k: Option<usize> = None;
+    let mut explain = false;
+    let build = |query: &str, top_k: Option<usize>, explain: bool| {
+        let mut req = SearchRequest::new(query).explain(explain);
+        if let Some(k) = top_k {
+            req = req.top_k(k);
+        }
+        req
+    };
     for line in input.lines() {
         let line = line?;
         let line = line.trim();
@@ -98,7 +136,8 @@ pub fn repl(
                 Some("help") => {
                     writeln!(
                         output,
-                        ":quit  :stats  :fail <node#>  :recover <node#>  — anything else is a query"
+                        ":quit  :stats  :batch q1 | q2 | ...  :topk N  :explain  \
+                         :fail <node#>  :recover <node#>  — anything else is a query"
                     )?;
                 }
                 Some("stats") => {
@@ -108,6 +147,38 @@ pub fn repl(
                         sys.query_manager().total_jobs(),
                         sys.query_manager().completed_jobs()
                     )?;
+                }
+                Some("topk") => match parts.next().and_then(|s| s.parse::<usize>().ok()) {
+                    Some(k) => {
+                        top_k = Some(k);
+                        writeln!(output, "top_k={k} for this session")?;
+                    }
+                    None => writeln!(output, "usage: :topk <n>")?,
+                },
+                Some("explain") => {
+                    explain = !explain;
+                    writeln!(output, "explain={explain}")?;
+                }
+                Some("batch") => {
+                    let rest = cmd.strip_prefix("batch").unwrap_or("").trim();
+                    let requests: Vec<SearchRequest> = rest
+                        .split('|')
+                        .map(str::trim)
+                        .filter(|q| !q.is_empty())
+                        .map(|q| build(q, top_k, explain))
+                        .collect();
+                    if requests.is_empty() {
+                        writeln!(output, "usage: :batch query1 | query2 | ...")?;
+                        continue;
+                    }
+                    let n = requests.len();
+                    for (i, result) in sys.search_batch(&requests).into_iter().enumerate() {
+                        writeln!(output, "--- batch {}/{} ---", i + 1, n)?;
+                        match result {
+                            Ok(resp) => write!(output, "{}", format_response(&resp))?,
+                            Err(e) => writeln!(output, "error: {e}")?,
+                        }
+                    }
                 }
                 Some("fail") => match parts.next().and_then(|s| s.parse::<u32>().ok()) {
                     Some(n) => {
@@ -127,7 +198,7 @@ pub fn repl(
             }
             continue;
         }
-        match one_shot(sys, line) {
+        match one_shot_request(sys, &build(line, top_k, explain)) {
             Ok((rendered, timing)) => {
                 write!(output, "{rendered}")?;
                 writeln!(
@@ -169,6 +240,14 @@ mod tests {
     }
 
     #[test]
+    fn one_shot_request_renders_explain() {
+        let mut sys = system();
+        let req = SearchRequest::new("grid data").top_k(3).explain(true);
+        let (rendered, _) = one_shot_request(&mut sys, &req).unwrap();
+        assert!(rendered.contains("explain: ast="), "{rendered}");
+    }
+
+    #[test]
     fn format_handles_empty_results() {
         let resp = SearchResponse {
             query: "x".into(),
@@ -177,6 +256,7 @@ mod tests {
             jobs: 0,
             candidates: 0,
             docs_scanned: 0,
+            explain: None,
         };
         assert!(format_response(&resp).contains("no results"));
     }
@@ -193,6 +273,21 @@ mod tests {
         assert!(text.contains("node1 marked down"));
         assert!(text.contains("node1 recovered"));
         assert!(text.contains("unknown command"));
+    }
+
+    #[test]
+    fn repl_batch_and_knobs() {
+        let mut sys = system();
+        let input = ":topk 2\n:explain\n:batch grid computing | data search | the of\n:quit\n";
+        let mut out = Vec::new();
+        repl(&mut sys, std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("top_k=2"));
+        assert!(text.contains("explain=true"));
+        assert!(text.contains("--- batch 1/3 ---"));
+        assert!(text.contains("--- batch 3/3 ---"));
+        assert!(text.contains("explain: ast="), "{text}");
+        assert!(text.contains("error: query error"), "{text}");
     }
 
     #[test]

@@ -60,7 +60,7 @@ fn xla_scores_match_rust_scorer() {
     let (shard, stats) = setup(300, 512);
 
     // Query from document 12's title: real overlap guaranteed.
-    let q = gaps::search::ParsedQuery::parse(&shard.pubs[12].title, 512).unwrap();
+    let q = gaps::search::Query::parse(&shard.pubs[12].title, 512).unwrap();
     let candidates: Vec<u32> = (0..256).collect();
     let block = pack_block(&shard, &stats, &candidates, 256, 0.75);
     let qw = build_query_weights(&[q.buckets.clone()], &stats, 512, 1);
@@ -96,7 +96,7 @@ fn padding_never_appears_in_results() {
     // Only 5 real candidates in a 256-capacity block.
     let candidates: Vec<u32> = (0..5).collect();
     let block = pack_block(&shard, &stats, &candidates, 256, 0.75);
-    let q = gaps::search::ParsedQuery::parse(&shard.pubs[2].title, 512).unwrap();
+    let q = gaps::search::Query::parse(&shard.pubs[2].title, 512).unwrap();
     let qw = build_query_weights(&[q.buckets.clone()], &stats, 512, 1);
     let ranked = exec.rank(&block, &qw, 1, &FIELD_W).unwrap();
     for &(idx, _) in &ranked[0] {
@@ -114,7 +114,7 @@ fn batched_queries_match_single_queries() {
 
     let queries: Vec<Vec<u32>> = (0..4)
         .map(|i| {
-            gaps::search::ParsedQuery::parse(&shard.pubs[i * 7].title, 512)
+            gaps::search::Query::parse(&shard.pubs[i * 7].title, 512)
                 .unwrap()
                 .buckets
         })
@@ -144,7 +144,7 @@ fn large_block_variant_works() {
     let (shard, stats) = setup(1100, 512);
     let candidates: Vec<u32> = (0..1024).collect();
     let block = pack_block(&shard, &stats, &candidates, 1024, 0.75);
-    let q = gaps::search::ParsedQuery::parse(&shard.pubs[900].title, 512).unwrap();
+    let q = gaps::search::Query::parse(&shard.pubs[900].title, 512).unwrap();
     let qw = build_query_weights(&[q.buckets.clone()], &stats, 512, 1);
     let ranked = exec.rank(&block, &qw, 1, &FIELD_W).unwrap();
     // Doc 900 is in the block and should surface.

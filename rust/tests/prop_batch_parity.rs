@@ -1,0 +1,245 @@
+//! Batch-vs-serial parity: `search_batch([q1..qn])` must return
+//! bit-identical hits and scores to n sequential `search_request` calls,
+//! across scheduling policies, replica preferences, and with a failed
+//! node — while issuing one plan and one fan-out round per batch.
+//!
+//! Parity holds by construction (replicas host identical data and BM25F
+//! scores are per-(query, doc), independent of the rest of the scoring
+//! block); this property test keeps it true as the batch path evolves.
+
+use std::sync::{Arc, OnceLock};
+
+use gaps::config::{GapsConfig, SchedulePolicy};
+use gaps::coordinator::{Deployment, GapsSystem};
+use gaps::metrics::sample_queries;
+use gaps::search::{Field, ReplicaPref, SearchError, SearchRequest};
+use gaps::util::prop::{check, Config};
+use gaps::util::rng::Rng;
+
+fn cfg(policy: SchedulePolicy) -> GapsConfig {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 600;
+    cfg.workload.sub_shards = 8;
+    cfg.search.use_xla = false;
+    cfg.search.policy = policy;
+    cfg
+}
+
+/// One deployment + query pool shared across every case (building the
+/// corpus is the expensive part; systems are cheap to re-deploy).
+fn fixture() -> &'static (Arc<Deployment>, Vec<String>) {
+    static FIXTURE: OnceLock<(Arc<Deployment>, Vec<String>)> = OnceLock::new();
+    FIXTURE.get_or_init(|| {
+        let dep = Arc::new(Deployment::build(&cfg(SchedulePolicy::PerfHistory), 6).unwrap());
+        let queries = sample_queries(&dep, 24, 0xBA7C4);
+        (dep, queries)
+    })
+}
+
+#[derive(Debug, Clone)]
+struct BatchCase {
+    requests: Vec<SearchRequest>,
+    policy: SchedulePolicy,
+    fail_node: bool,
+}
+
+fn gen_request(rng: &mut Rng, pool: &[String]) -> SearchRequest {
+    let base = pool[rng.range(0, pool.len())].clone();
+    let mut query = base;
+    // Mutations exercising the grammar: duplicates, phrases, AND chains,
+    // negations, invalid inputs.
+    if rng.chance(0.2) {
+        // Duplicate the first word (dedup regression surface).
+        if let Some(w) = query.split_whitespace().next().map(str::to_string) {
+            query = format!("{w} {query}");
+        }
+    }
+    if rng.chance(0.15) {
+        // Quote the first two words into a phrase.
+        let words: Vec<&str> = query.split_whitespace().collect();
+        if words.len() >= 2 {
+            query = format!("\"{} {}\" {}", words[0], words[1], words[2..].join(" "));
+        }
+    }
+    if rng.chance(0.15) {
+        query = query.replacen(' ', " AND ", 1);
+    }
+    if rng.chance(0.1) {
+        query.push_str(" -zzzyqx");
+    }
+    if rng.chance(0.08) {
+        // Deliberately invalid inputs: error parity matters too.
+        query = ["", "the of and", "bogus:grid", "year:20x4"][rng.range(0, 4)].to_string();
+    }
+    let mut req = SearchRequest::new(query);
+    if rng.chance(0.4) {
+        req = req.top_k(rng.range(1, 15));
+    }
+    if rng.chance(0.2) {
+        let lo = 1998 + rng.below(10) as u32;
+        req = req.year(lo..=lo + 6);
+    }
+    if rng.chance(0.1) {
+        req = req.require(Field::Title, "grid");
+    }
+    if rng.chance(0.3) {
+        req = req.prefer_replicas(match rng.range(0, 3) {
+            0 => ReplicaPref::Any,
+            1 => ReplicaPref::SameVo,
+            _ => ReplicaPref::Primary,
+        });
+    }
+    if rng.chance(0.1) {
+        req = req.explain(true);
+    }
+    req
+}
+
+fn gen_case(rng: &mut Rng, size: usize) -> BatchCase {
+    let (_, pool) = fixture();
+    let n = rng.range(1, size.clamp(2, 7));
+    BatchCase {
+        requests: (0..n).map(|_| gen_request(rng, pool)).collect(),
+        policy: if rng.chance(0.5) {
+            SchedulePolicy::PerfHistory
+        } else {
+            SchedulePolicy::RoundRobin
+        },
+        fail_node: rng.chance(0.3),
+    }
+}
+
+fn run_case(case: &BatchCase) -> Result<(), String> {
+    let (dep, _) = fixture();
+    let mut batch_sys =
+        GapsSystem::from_deployment(cfg(case.policy), Arc::clone(dep)).map_err(|e| e.to_string())?;
+    let mut serial_sys =
+        GapsSystem::from_deployment(cfg(case.policy), Arc::clone(dep)).map_err(|e| e.to_string())?;
+    if case.fail_node {
+        let victim = dep.active[1];
+        batch_sys.fail_node(victim);
+        serial_sys.fail_node(victim);
+    }
+
+    let batch: Vec<Result<_, SearchError>> = batch_sys.search_batch(&case.requests);
+    if batch.len() != case.requests.len() {
+        return Err(format!("{} results for {} requests", batch.len(), case.requests.len()));
+    }
+    for (i, (req, b)) in case.requests.iter().zip(&batch).enumerate() {
+        let s = serial_sys.search_request(req);
+        match (b, s) {
+            (Err(be), Err(se)) => {
+                if be.kind() != se.kind() {
+                    return Err(format!(
+                        "request {i} {:?}: batch error {} vs serial error {}",
+                        req.query,
+                        be.kind(),
+                        se.kind()
+                    ));
+                }
+            }
+            (Ok(_), Err(se)) => {
+                return Err(format!("request {i} {:?}: serial failed ({se}), batch ok", req.query));
+            }
+            (Err(be), Ok(_)) => {
+                return Err(format!("request {i} {:?}: batch failed ({be}), serial ok", req.query));
+            }
+            (Ok(b), Ok(s)) => {
+                let ids_b: Vec<u64> = b.hits.iter().map(|h| h.global_id).collect();
+                let ids_s: Vec<u64> = s.hits.iter().map(|h| h.global_id).collect();
+                if ids_b != ids_s {
+                    return Err(format!(
+                        "request {i} {:?}: hits {ids_b:?} != {ids_s:?}",
+                        req.query
+                    ));
+                }
+                for (hb, hs) in b.hits.iter().zip(&s.hits) {
+                    if hb.score.to_bits() != hs.score.to_bits() {
+                        return Err(format!(
+                            "request {i} {:?}: score {} != {} for doc {}",
+                            req.query, hb.score, hs.score, hb.global_id
+                        ));
+                    }
+                }
+                if b.candidates != s.candidates {
+                    return Err(format!(
+                        "request {i} {:?}: candidates {} != {}",
+                        req.query, b.candidates, s.candidates
+                    ));
+                }
+                if b.docs_scanned != s.docs_scanned {
+                    return Err(format!(
+                        "request {i} {:?}: docs {} != {}",
+                        req.query, b.docs_scanned, s.docs_scanned
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_batch_matches_serial_execution() {
+    let prop_cfg = Config { cases: 60, max_size: 7, ..Config::default() };
+    check("batch-serial-parity", &prop_cfg, gen_case, run_case);
+}
+
+/// XLA-path parity (the branchy side of `rank_xla`): batched hits must
+/// match sequential hits on the artifact scorer too, including a
+/// `top_k` above the artifact's per-block `k`. Skips (like
+/// `integration_e2e.rs`) when `make artifacts` has not run.
+#[test]
+fn xla_batch_matches_serial() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let mut xla_cfg = cfg(SchedulePolicy::PerfHistory);
+    xla_cfg.search.use_xla = true;
+    let (dep, pool) = fixture();
+    let Ok(mut batch_sys) = GapsSystem::from_deployment(xla_cfg.clone(), Arc::clone(dep)) else {
+        eprintln!("SKIP: xla executor unavailable in this build");
+        return;
+    };
+    let mut serial_sys = GapsSystem::from_deployment(xla_cfg, Arc::clone(dep)).unwrap();
+    let requests: Vec<SearchRequest> = pool
+        .iter()
+        .take(4)
+        .enumerate()
+        // Mix of top_k values, including one above the artifact k=32.
+        .map(|(i, q)| SearchRequest::new(q.clone()).top_k([5, 10, 50, 3][i]))
+        .collect();
+    for (req, b) in requests.iter().zip(batch_sys.search_batch(&requests)) {
+        let b = b.unwrap();
+        let s = serial_sys.search_request(req).unwrap();
+        assert_eq!(
+            b.hits.iter().map(|h| h.global_id).collect::<Vec<_>>(),
+            s.hits.iter().map(|h| h.global_id).collect::<Vec<_>>(),
+            "xla batch hits diverged for {:?}",
+            req.query
+        );
+    }
+}
+
+/// The amortization contract: a batch acquires each node's search
+/// service once per fan-out, not once per query.
+#[test]
+fn batch_issues_one_fanout_round() {
+    let (dep, pool) = fixture();
+    let mut sys =
+        GapsSystem::from_deployment(cfg(SchedulePolicy::PerfHistory), Arc::clone(dep)).unwrap();
+    let requests: Vec<SearchRequest> =
+        pool.iter().take(6).map(|q| SearchRequest::new(q.clone())).collect();
+    for r in sys.search_batch(&requests) {
+        r.unwrap();
+    }
+    for &node in &dep.active {
+        assert!(
+            sys.service_acquisitions(node) <= 1,
+            "node {node} acquired more than once for a single batch"
+        );
+    }
+    // Jobs: one per participating node, not per (node, query).
+    assert!(sys.query_manager().total_jobs() <= dep.active.len());
+}

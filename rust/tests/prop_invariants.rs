@@ -333,7 +333,14 @@ fn prop_plan_covers_every_source_exactly_once() {
             }
             let refs: Vec<&DataSource> = case.sources.iter().collect();
             let plan = QueryExecutionEngine
-                .plan(&refs, &case.nodes, &perf, case.policy)
+                .plan(
+                    &refs,
+                    &case.nodes,
+                    &perf,
+                    case.policy,
+                    gaps::search::ReplicaPref::Any,
+                    None,
+                )
                 .expect("all replicas live");
             let mut assigned: Vec<u32> =
                 plan.assignments.values().flatten().copied().collect();
@@ -357,7 +364,14 @@ fn prop_plan_respects_replica_placement() {
         |case| {
             let refs: Vec<&DataSource> = case.sources.iter().collect();
             let plan = QueryExecutionEngine
-                .plan(&refs, &case.nodes, &PerfDb::default(), case.policy)
+                .plan(
+                    &refs,
+                    &case.nodes,
+                    &PerfDb::default(),
+                    case.policy,
+                    gaps::search::ReplicaPref::Any,
+                    None,
+                )
                 .unwrap();
             for (node, sids) in &plan.assignments {
                 for sid in sids {
