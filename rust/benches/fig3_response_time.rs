@@ -15,24 +15,35 @@
 //! Additionally this bench tracks the retrieval hot path across PRs in
 //! machine-readable `BENCH_retrieval.json`:
 //!
-//! * **micro** — per-query retrieve time on a large shard, CSR arena +
-//!   scratch + bounded heap vs the naive HashMap reference (the seed
-//!   implementation, kept as `retrieve_reference`);
+//! * **micro** — per-query retrieve time on a large shard, block-max
+//!   WAND + scratch vs the naive HashMap reference (the seed
+//!   implementation semantics, kept as `retrieve_reference`);
 //! * **fanout** — end-to-end `search()` wall time at 4 nodes, parallel
 //!   gridpool dispatch vs serial (`workers = 1`);
-//! * **sweep** — the Fig 3 response-time percentiles.
+//! * **sweep** — the Fig 3 response-time percentiles;
+//! * **counters** — deterministic block-max pruning counters on a
+//!   *fixed* workload (seeds, sizes, and k are constants — deliberately
+//!   not env-resizable), written to `BENCH_counters.json` and gated
+//!   against the committed `BENCH_baseline.json`. Unlike the wall-clock
+//!   series, the counter gate runs even under `GAPS_BENCH_NO_ASSERT`:
+//!   integer counters at fixed seeds cannot flake on shared runners, so
+//!   CI holds the line on pruning effectiveness there.
 //!
 //! Run: `cargo bench --bench fig3_response_time`
 //! Env: GAPS_BENCH_DOCS / GAPS_BENCH_QUERIES resize the sweep workload,
-//!      GAPS_BENCH_MICRO_DOCS resizes the micro-benchmark shard.
+//!      GAPS_BENCH_MICRO_DOCS resizes the micro-benchmark shard,
+//!      GAPS_BENCH_BASELINE points at an alternate baseline file,
+//!      GAPS_BENCH_WRITE_BASELINE=1 skips the gate and rewrites the
+//!      baseline file from this run (commit the result after intentional
+//!      retrieval changes).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use gaps::config::GapsConfig;
-use gaps::coordinator::{Deployment, GapsSystem};
+use gaps::coordinator::{counters_to_json, Deployment, GapsSystem};
 use gaps::corpus::{CorpusGenerator, CorpusSpec};
-use gaps::index::{RetrievalScratch, Shard};
+use gaps::index::{RetrievalCounters, RetrievalScratch, Shard};
 use gaps::metrics::{cached_node_sweep, sample_queries};
 use gaps::search::{Query, SearchRequest};
 use gaps::util::bench::Table;
@@ -117,6 +128,177 @@ fn bench_retrieval_micro(features: usize) -> Json {
         ("naive_p95_us", Json::from(naive.percentile(95.0) * 1e6)),
         ("speedup_p50", Json::from(speedup)),
     ])
+}
+
+/// Deterministic block-max pruning counters on a **fixed** workload:
+/// 40k-doc shard, F=512, 32 disjunctive queries sampled from corpus
+/// topics at a fixed seed (the Fig 3 query mix), k = the default
+/// `max_candidates`. Everything is a local constant — deliberately not
+/// env-resizable and not read from `GapsConfig`, so the committed
+/// `BENCH_baseline.json` pins these numbers exactly and CI fails if
+/// pruning effectiveness regresses.
+fn bench_counters() -> Json {
+    const DOCS: u64 = 40_000;
+    const FEATURES: usize = 512; // SearchConfig::default().features
+    const NUM_QUERIES: usize = 32;
+    const MAX_CANDIDATES: usize = 1024; // SearchConfig::default().max_candidates
+    const SEED: u64 = 0xB10C_3A5;
+    let features = FEATURES;
+    eprintln!("counters: analyzing fixed {DOCS}-doc shard (F={features})...");
+    let gen = CorpusGenerator::new(CorpusSpec { num_docs: DOCS, ..CorpusSpec::default() });
+    let shard = Shard::build(0, gen.generate_range(0, DOCS), features);
+
+    // Disjunctive topical queries with >= 3 scored terms (the same
+    // sampler the Fig 3 sweep uses; short draws are rejected so the mix
+    // is genuinely disjunctive).
+    let mut rng = Rng::new(SEED);
+    let mut queries: Vec<Vec<u32>> = Vec::with_capacity(NUM_QUERIES);
+    let mut attempts = 0usize;
+    while queries.len() < NUM_QUERIES {
+        attempts += 1;
+        assert!(attempts <= 100_000, "corpus yields no disjunctive queries");
+        let raw = gen.sample_query(&mut rng);
+        let Ok(q) = Query::parse(&raw, features) else { continue };
+        if q.buckets.len() >= 3 {
+            queries.push(q.buckets.clone());
+        }
+    }
+
+    let mut scratch = RetrievalScratch::new();
+    let mut total = RetrievalCounters::default();
+    for q in &queries {
+        shard.inverted.retrieve_into(q, MAX_CANDIDATES, &mut scratch);
+        total.merge(scratch.counters());
+    }
+    println!(
+        "\n== retrieval counters ({DOCS} docs, {NUM_QUERIES} queries, k={MAX_CANDIDATES}) ==\n\
+         postings touched {}/{} ({:.1}% skipped)\n\
+         blocks skipped   {}/{} ({:.1}%)\n\
+         candidates emitted {}",
+        total.postings_touched,
+        total.postings_total,
+        total.skipped_fraction() * 100.0,
+        total.blocks_skipped,
+        total.blocks_total,
+        100.0 * total.blocks_skipped as f64 / total.blocks_total.max(1) as f64,
+        total.candidates_emitted,
+    );
+
+    Json::obj(vec![
+        ("bench", Json::str("counters")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("docs", Json::from(DOCS)),
+                ("features", Json::from(features)),
+                ("queries", Json::from(NUM_QUERIES)),
+                ("max_candidates", Json::from(MAX_CANDIDATES)),
+                ("seed", Json::from(SEED)),
+            ]),
+        ),
+        ("counters", counters_to_json(&total)),
+    ])
+}
+
+/// The workload fields that must match between a counter report and the
+/// baseline for the gate comparison to be meaningful.
+const WORKLOAD_KEYS: [&str; 5] = ["docs", "features", "queries", "max_candidates", "seed"];
+
+/// Gate the deterministic counters against the committed baseline:
+/// effectiveness must stay above the hard 30% floor and within 5% of the
+/// baseline's recorded fraction (same workload only — a baseline
+/// recorded for a different workload fails loudly instead of masking a
+/// regression). Panics (fails the bench / CI) on regression. Runs
+/// regardless of `GAPS_BENCH_NO_ASSERT`. `GAPS_BENCH_WRITE_BASELINE=1`
+/// skips the gate and records this run as the new reference instead —
+/// the escape hatch for *intentional* retrieval changes (gating first
+/// would panic before the write, making regeneration impossible).
+fn gate_counters(report: &Json) {
+    let skipped = report
+        .get("counters")
+        .and_then(|c| c.get("skipped_fraction"))
+        .and_then(|v| v.as_f64())
+        .expect("counter report has skipped_fraction");
+    let baseline_path = std::env::var("GAPS_BENCH_BASELINE")
+        .unwrap_or_else(|_| "BENCH_baseline.json".to_string());
+
+    if std::env::var("GAPS_BENCH_WRITE_BASELINE").is_ok() {
+        let mut pairs = vec![("provisional", Json::Bool(false))];
+        if let (Some(w), Some(c)) = (report.get("workload"), report.get("counters")) {
+            pairs.push(("workload", w.clone()));
+            pairs.push(("counters", c.clone()));
+        }
+        std::fs::write(&baseline_path, Json::obj(pairs).to_string_pretty())
+            .unwrap_or_else(|e| panic!("write {baseline_path}: {e}"));
+        println!(
+            "wrote {baseline_path} ({:.1}% skipped; commit it to pin this run as the \
+             gate baseline — gate skipped this run)",
+            skipped * 100.0
+        );
+        return;
+    }
+
+    assert!(
+        skipped > 0.30,
+        "block-max pruning below the 30% floor: {:.1}% of postings skipped",
+        skipped * 100.0
+    );
+
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let base = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("{baseline_path}: invalid JSON: {e}"));
+            // The comparison is only meaningful on the exact same
+            // workload: every pinned field must match.
+            for key in WORKLOAD_KEYS {
+                let got = report.get("workload").and_then(|w| w.get(key)).and_then(|v| v.as_i64());
+                let want = base.get("workload").and_then(|w| w.get(key)).and_then(|v| v.as_i64());
+                assert!(
+                    got.is_some() && got == want,
+                    "{baseline_path}: workload.{key} = {want:?} does not match this \
+                     bench's {got:?} — the baseline was recorded for a different \
+                     workload; regenerate it with GAPS_BENCH_WRITE_BASELINE=1 and commit."
+                );
+            }
+            let base_skipped = base
+                .get("counters")
+                .and_then(|c| c.get("skipped_fraction"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or_else(|| panic!("{baseline_path}: missing counters.skipped_fraction"));
+            let floor = base_skipped * 0.95;
+            assert!(
+                skipped >= floor,
+                "pruning effectiveness regressed >5%: {:.2}% skipped vs baseline {:.2}% \
+                 (floor {:.2}%). If the retrieval change is intentional, regenerate the \
+                 baseline with GAPS_BENCH_WRITE_BASELINE=1 and commit it.",
+                skipped * 100.0,
+                base_skipped * 100.0,
+                floor * 100.0,
+            );
+            let provisional = base
+                .get("provisional")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false);
+            if provisional {
+                println!(
+                    "note: {baseline_path} is provisional — regenerate with \
+                     GAPS_BENCH_WRITE_BASELINE=1 cargo bench --bench \
+                     fig3_response_time and commit it to tighten the gate to \
+                     this host-independent run ({:.1}% skipped).",
+                    skipped * 100.0
+                );
+            }
+            println!(
+                "counter gate OK: {:.1}% skipped (baseline {:.1}%, floor {:.1}%)",
+                skipped * 100.0,
+                base_skipped * 100.0,
+                floor * 100.0
+            );
+        }
+        Err(_) => println!(
+            "note: {baseline_path} missing — counter gate ran against the 30% floor only"
+        ),
+    }
 }
 
 /// End-to-end fan-out: `search()` wall time at 4 nodes, parallel
@@ -314,6 +496,17 @@ fn main() {
     let path = "BENCH_retrieval.json";
     std::fs::write(path, report.to_string_pretty()).expect("write BENCH_retrieval.json");
     println!("\nwrote {path}");
+
+    // ---- Deterministic pruning counters + CI gate --------------------
+    // Runs before (and independently of) the wall-clock assertions:
+    // integer counters at fixed seeds are reproducible anywhere, so this
+    // gate holds even on noisy shared runners (GAPS_BENCH_NO_ASSERT does
+    // not disable it).
+    let counter_report = bench_counters();
+    std::fs::write("BENCH_counters.json", counter_report.to_string_pretty())
+        .expect("write BENCH_counters.json");
+    println!("wrote BENCH_counters.json");
+    gate_counters(&counter_report);
 
     // Checks are enforced on real bench runs so regressions fail loudly;
     // GAPS_BENCH_NO_ASSERT=1 (CI smoke on shared runners, tiny query

@@ -131,6 +131,7 @@ impl TraditionalSearch {
         let mut branches: Vec<TaskTimeline> = Vec::new();
         let mut lists: Vec<Vec<LocalHit>> = Vec::new();
         let mut total_candidates = 0usize;
+        let mut total_counters = crate::index::RetrievalCounters::default();
         let mut total_docs = 0u64;
 
         // The central coordinator dispatches every job itself, serially.
@@ -152,6 +153,7 @@ impl TraditionalSearch {
                 let out = outs.into_iter().next().expect("one outcome");
                 work_measured += out.work_s;
                 total_candidates += out.candidates;
+                total_counters.merge(&out.counters);
                 total_docs += out.shard_docs as u64;
                 node_hits.push(out.hits);
             }
@@ -207,6 +209,7 @@ impl TraditionalSearch {
                 .iter()
                 .map(|(n, s)| (n.to_string(), s.len()))
                 .collect(),
+            counters: total_counters,
         });
         Ok(SearchResponse {
             query: request.query.clone(),

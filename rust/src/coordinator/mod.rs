@@ -39,4 +39,7 @@ pub use perf::PerfDb;
 pub use qee::{ExecutionPlan, QueryExecutionEngine};
 pub use qm::{JobStatus, QueryManager};
 pub use resource_manager::ResourceManager;
-pub use system::{CorpusData, Deployment, Explain, GapsSystem, Hit, SearchResponse};
+pub use system::{
+    counters_from_json, counters_to_json, CorpusData, Deployment, Explain, GapsSystem, Hit,
+    SearchResponse,
+};

@@ -36,7 +36,7 @@ use std::sync::Arc;
 use crate::config::GapsConfig;
 use crate::corpus::{CorpusGenerator, CorpusSpec, Publication};
 use crate::grid::{GridFabric, NodeId};
-use crate::index::{GlobalStats, Shard};
+use crate::index::{GlobalStats, RetrievalCounters, Shard};
 use crate::runtime::Executor;
 use crate::search::{
     CompiledRequest, LocalHit, Query, ReplicaPref, Scorer, SearchError, SearchRequest,
@@ -216,8 +216,9 @@ pub struct Hit {
 }
 
 /// Diagnostics attached to a response when the request asked for
-/// `explain(true)`: the parsed AST, the scored terms, and the execution
-/// plan the batch ran under.
+/// `explain(true)`: the parsed AST, the scored terms, the execution
+/// plan the batch ran under, and the aggregated retrieval work counters
+/// (block-max pruning effectiveness) for this query across every shard.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Explain {
     /// Canonical rendering of the parsed boolean tree.
@@ -228,6 +229,8 @@ pub struct Explain {
     pub batch_size: usize,
     /// (node, assigned sources) of the shared execution plan.
     pub plan: Vec<(String, usize)>,
+    /// Retrieval counters summed over every shard this query touched.
+    pub counters: RetrievalCounters,
 }
 
 impl Explain {
@@ -245,6 +248,7 @@ impl Explain {
                         .collect(),
                 ),
             ),
+            ("counters", counters_to_json(&self.counters)),
         ])
     }
 
@@ -267,8 +271,33 @@ impl Explain {
                     Some((p.first()?.as_str()?.to_string(), p.get(1)?.as_i64()? as usize))
                 })
                 .collect::<Option<Vec<_>>>()?,
+            counters: counters_from_json(v.get("counters")?)?,
         })
     }
+}
+
+/// JSON encoding of [`RetrievalCounters`] (shared by the explain record
+/// and the bench counter reports).
+pub fn counters_to_json(c: &RetrievalCounters) -> Json {
+    Json::obj(vec![
+        ("postings_touched", Json::from(c.postings_touched)),
+        ("postings_total", Json::from(c.postings_total)),
+        ("blocks_skipped", Json::from(c.blocks_skipped)),
+        ("blocks_total", Json::from(c.blocks_total)),
+        ("candidates_emitted", Json::from(c.candidates_emitted)),
+        ("skipped_fraction", Json::from(c.skipped_fraction())),
+    ])
+}
+
+/// Parse the JSON encoding produced by [`counters_to_json`].
+pub fn counters_from_json(v: &Json) -> Option<RetrievalCounters> {
+    Some(RetrievalCounters {
+        postings_touched: v.get("postings_touched")?.as_i64()? as u64,
+        postings_total: v.get("postings_total")?.as_i64()? as u64,
+        blocks_skipped: v.get("blocks_skipped")?.as_i64()? as u64,
+        blocks_total: v.get("blocks_total")?.as_i64()? as u64,
+        candidates_emitted: v.get("candidates_emitted")?.as_i64()? as u64,
+    })
 }
 
 /// End-to-end response: hits + the composed timeline.
@@ -374,6 +403,8 @@ struct JobOutput {
     per_query_hits: Vec<Vec<LocalHit>>,
     /// Per query: candidates retrieved across the job's sources.
     per_query_candidates: Vec<usize>,
+    /// Per query: retrieval work counters summed across the job's sources.
+    per_query_counters: Vec<RetrievalCounters>,
     work_measured: f64,
     /// Docs in the job's sources (scanned once *per query*).
     docs: u64,
@@ -393,6 +424,7 @@ fn run_job(
     let nq = queries.len();
     let mut work_measured = 0.0f64;
     let mut per_query_candidates = vec![0usize; nq];
+    let mut per_query_counters = vec![RetrievalCounters::default(); nq];
     let mut docs = 0u64;
     let mut hits_lists: Vec<Vec<Vec<LocalHit>>> = vec![Vec::with_capacity(job.sources.len()); nq];
     for sid in &job.sources {
@@ -402,6 +434,7 @@ fn run_job(
         for (qi, out) in outs.into_iter().enumerate() {
             work_measured += out.work_s;
             per_query_candidates[qi] += out.candidates;
+            per_query_counters[qi].merge(&out.counters);
             hits_lists[qi].push(out.hits);
         }
     }
@@ -410,7 +443,7 @@ fn run_job(
         .zip(queries)
         .map(|(lists, (_, top_k))| merge_topk(&lists, *top_k))
         .collect();
-    Ok(JobOutput { per_query_hits, per_query_candidates, work_measured, docs })
+    Ok(JobOutput { per_query_hits, per_query_candidates, per_query_counters, work_measured, docs })
 }
 
 /// The deployed GAPS system.
@@ -708,6 +741,7 @@ impl GapsSystem {
         // [query][vo] -> merged VO list.
         let mut vo_lists: Vec<Vec<Vec<LocalHit>>> = vec![Vec::new(); nq];
         let mut total_candidates = vec![0usize; nq];
+        let mut total_counters = vec![RetrievalCounters::default(); nq];
         let mut total_docs = 0u64;
         let mut completions: Vec<(super::jdf::JobId, u64, f64)> = Vec::new();
         let mut outputs = outputs.into_iter();
@@ -752,6 +786,7 @@ impl GapsSystem {
                 node_branches.push(branch);
                 for (qi, hits) in out.per_query_hits.into_iter().enumerate() {
                     total_candidates[qi] += out.per_query_candidates[qi];
+                    total_counters[qi].merge(&out.per_query_counters[qi]);
                     node_lists[qi].push(hits);
                 }
             }
@@ -821,6 +856,7 @@ impl GapsSystem {
                     .iter()
                     .map(|j| (j.node.to_string(), j.sources.len()))
                     .collect(),
+                counters: total_counters[qi],
             });
             responses.push(SearchResponse {
                 query: requests[qi].query.clone(),

@@ -81,7 +81,11 @@ pub fn build_query_weights(
 /// are reused across calls and cleared *sparsely* — instead of zeroing the
 /// whole `[NF, D, F]` tile (8.4 MB at d=1024) per call, only the entries
 /// written by the previous pack are reset. §Perf P2: candidate tiles are
-/// ~1–5% dense, so this cuts the packer's memory traffic ~20x.
+/// ~1–5% dense, so this cuts the packer's memory traffic ~20x. A shape
+/// change (different `d` or `f`, routine on the per-query exact-size
+/// rust-scorer path) resizes the buffers in place — capacity is retained,
+/// so steady state stays allocation-free even across varying candidate
+/// counts.
 #[derive(Debug, Default)]
 pub struct Packer {
     block: Option<PackedBlock>,
@@ -106,29 +110,32 @@ impl Packer {
     ) -> &PackedBlock {
         assert!(candidates.len() <= d, "candidates {} exceed block capacity {d}", candidates.len());
         let f = shard.features;
-        // (Re)allocate on first use or shape change; else sparse-clear.
-        let need_alloc = self
-            .block
-            .as_ref()
-            .map(|blk| blk.d != d || blk.f != f)
-            .unwrap_or(true);
-        if need_alloc {
+        if self.block.is_none() {
             self.block = Some(PackedBlock {
-                doc_tf: vec![0.0; NUM_FIELDS * d * f],
-                len_norm: vec![0.0; NUM_FIELDS * d],
+                doc_tf: Vec::new(),
+                len_norm: Vec::new(),
                 local_ids: Vec::new(),
                 n_real: 0,
-                d,
-                f,
+                d: 0,
+                f: 0,
             });
             self.written.clear();
         }
         let block = self.block.as_mut().expect("block allocated");
-        // Sparse clear of the previous pack's entries.
+        // Sparse clear of the previous pack's entries *at the previous
+        // layout* — after this the buffer is all zeros, so resizing to a
+        // new [NF, d, f] shape keeps the all-zero invariant (resize only
+        // appends zeros or drops zeros; capacity is retained).
         for &idx in &self.written {
             block.doc_tf[idx as usize] = 0.0;
         }
         self.written.clear();
+        if block.d != d || block.f != f {
+            block.doc_tf.resize(NUM_FIELDS * d * f, 0.0);
+            block.len_norm.resize(NUM_FIELDS * d, 0.0);
+            block.d = d;
+            block.f = f;
+        }
         block.len_norm.iter_mut().for_each(|x| *x = 0.0); // small: NF*D
 
         for (row, &local_id) in candidates.iter().enumerate() {
@@ -249,15 +256,25 @@ mod tests {
     }
 
     #[test]
-    fn packer_reallocates_on_shape_change() {
+    fn packer_resizes_in_place_on_shape_change() {
         let (shard, stats) = shard_and_stats(10, 64);
         let mut packer = Packer::new();
-        let a = packer.pack(&shard, &stats, &[0, 1], 4, 0.75).clone();
-        assert_eq!(a.d, 4);
-        let b = packer.pack(&shard, &stats, &[0, 1, 2], 8, 0.75).clone();
-        assert_eq!(b.d, 8);
-        let fresh = pack_block(&shard, &stats, &[0, 1, 2], 8, 0.75);
-        assert_eq!(b.doc_tf, fresh.doc_tf);
+        // Grow, shrink, regrow: every layout change must still match a
+        // from-scratch pack (stale entries cleared at the *old* layout
+        // before the buffer is reshaped).
+        for (cands, d) in [
+            (&[0u32, 1][..], 4usize),
+            (&[0, 1, 2][..], 8),
+            (&[3][..], 2),
+            (&[0, 1, 2, 3][..], 8),
+        ] {
+            let reused = packer.pack(&shard, &stats, cands, d, 0.75).clone();
+            assert_eq!(reused.d, d);
+            let fresh = pack_block(&shard, &stats, cands, d, 0.75);
+            assert_eq!(reused.doc_tf, fresh.doc_tf, "d={d}");
+            assert_eq!(reused.len_norm, fresh.len_norm, "d={d}");
+            assert_eq!(reused.local_ids, fresh.local_ids);
+        }
     }
 
     #[test]

@@ -1,47 +1,158 @@
 //! Inverted index over hashed features: the retrieval half of the Search
-//! Service. Postings are per feature bucket (any field), sorted by local
-//! doc id; retrieval is a counting OR-merge that returns candidates
-//! ordered by match count (docs matching more distinct query terms first).
+//! Service. Postings carry a quantized impact alongside each doc id, and
+//! every posting list is segmented into fixed-size blocks with per-block
+//! metadata, so OR-retrieval can run WAND-style block-max pruning: the
+//! top-k heap threshold proves whole blocks (and whole document ranges)
+//! unable to place, and they are skipped without being accumulated.
 //!
-//! Layout: postings live in one flattened CSR arena (`offsets` + `data`)
-//! instead of a `Vec<Vec<u32>>` — a single contiguous allocation whose
-//! sequential probes stay cache-friendly at 100k+ docs per shard. The
-//! counting OR-merge runs against a reusable [`RetrievalScratch`] (no
-//! per-query `HashMap`), and top-`max_candidates` selection is a bounded
-//! min-heap: O(postings + k log k) instead of sorting every candidate.
+//! # Binary layout
+//!
+//! One flattened CSR arena per shard:
+//!
+//! ```text
+//! offsets:       [features + 1] u32   bucket b's postings live at
+//!                                     docs/impacts[offsets[b]..offsets[b+1]]
+//! docs:          [num_postings] u32   local doc ids, sorted per bucket
+//! impacts:       [num_postings] u8    quantized per-(doc,bucket) impact,
+//!                                     parallel to `docs`
+//! block_offsets: [features + 1] u32   bucket b's block metadata lives at
+//!                                     blocks[block_offsets[b]..block_offsets[b+1]]
+//! blocks:        [num_blocks] BlockMeta
+//! ```
+//!
+//! Each block covers up to [`BLOCK_SIZE`] consecutive postings of one
+//! bucket and records the largest doc id (`last_doc`, for galloping the
+//! AND path and seeking at block granularity) and the largest impact
+//! (`max_impact`, for the WAND upper bounds) inside it.
+//!
+//! # Impact quantization
+//!
+//! A posting's impact is the document's total term frequency for that
+//! bucket summed across every field, rounded and saturated into
+//! `1..=255` (`quantize_impact`). A document's retrieval score for a
+//! query is `sum over matched terms of (TERM_UNIT + impact)`: the
+//! [`TERM_UNIT`] = 256 step keeps the seed ordering — docs matching more
+//! *distinct* query terms always rank first — while the impact refines
+//! ties toward term-frequency-heavy documents, so the BM25F ranker
+//! receives a pre-ranked candidate set.
+//!
+//! # Retrieval
+//!
+//! [`InvertedIndex::retrieve_into`] is a document-at-a-time WAND with
+//! block-max refinement: term cursors are kept sorted by current doc id;
+//! list-level upper bounds pick the pivot (documents before it cannot
+//! reach the current heap threshold and their postings are skipped
+//! without accumulation); at the pivot, per-block `max_impact` bounds can
+//! prove the pivot range hopeless and jump every involved cursor to the
+//! nearest block boundary. The result is bit-identical to the naive
+//! [`InvertedIndex::retrieve_reference`] oracle (same scores, same
+//! (score desc, doc asc) order), which is retained for differential
+//! tests and benchmarks. [`RetrievalCounters`] reports how much work the
+//! pruning avoided — deterministic integers, fit for CI gating where
+//! wall-clock is noise.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use super::store::ShardDoc;
 
-/// Immutable inverted index for one shard, stored as a CSR arena.
-#[derive(Debug, Clone)]
-pub struct InvertedIndex {
-    /// Bucket `b`'s postings live in `data[offsets[b]..offsets[b+1]]`.
-    offsets: Vec<u32>,
-    /// Flattened postings: per-bucket runs of sorted local doc ids.
-    data: Vec<u32>,
-    /// Documents in the shard this index covers (scratch sizing).
-    num_docs: u32,
+/// Postings per block. 128 keeps block metadata ~1.5% of posting bytes
+/// while making a skipped block worth two cache lines of doc ids.
+pub const BLOCK_SIZE: usize = 128;
+
+/// Retrieval-score step per matched query term. Strictly larger than any
+/// quantized impact (255), so distinct-term match count dominates the
+/// ordering and impacts only break ties within a match count.
+pub const TERM_UNIT: u32 = 256;
+
+/// Quantize a summed-across-fields term frequency into a u8 impact.
+/// Monotone, saturating: 1 at tf<=1, 255 at tf>=255.
+pub fn quantize_impact(tf_total: f32) -> u8 {
+    tf_total.round().clamp(1.0, 255.0) as u8
+}
+
+/// Per-block metadata over a run of up to [`BLOCK_SIZE`] postings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockMeta {
+    /// Largest (= last) doc id in the block.
+    pub last_doc: u32,
+    /// Largest quantized impact in the block.
+    pub max_impact: u8,
+}
+
+/// Deterministic work counters for one (or an accumulation of) retrieval
+/// calls. Counting model: a posting is **touched** when it is
+/// accumulated into a candidate score (the only per-posting work the
+/// merge does); postings passed over by block jumps, in-block seeks, or
+/// never reached before termination are **skipped**. The seed counting
+/// OR-merge touches every posting of every queried bucket, so
+/// `skipped_fraction()` is exactly the work the pruning saved.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetrievalCounters {
+    /// Postings accumulated into candidate scores.
+    pub postings_touched: u64,
+    /// Total postings in the queried buckets (the no-pruning cost).
+    pub postings_total: u64,
+    /// Whole blocks bypassed via block metadata.
+    pub blocks_skipped: u64,
+    /// Total blocks in the queried buckets.
+    pub blocks_total: u64,
+    /// Documents fully scored (candidates offered to the heap).
+    pub candidates_emitted: u64,
+}
+
+impl RetrievalCounters {
+    /// Accumulate another call's counters into this one.
+    pub fn merge(&mut self, o: &RetrievalCounters) {
+        self.postings_touched += o.postings_touched;
+        self.postings_total += o.postings_total;
+        self.blocks_skipped += o.blocks_skipped;
+        self.blocks_total += o.blocks_total;
+        self.candidates_emitted += o.candidates_emitted;
+    }
+
+    /// Fraction of queried postings never accumulated (0 when no
+    /// postings were queried). The CI perf gate holds the line on this.
+    pub fn skipped_fraction(&self) -> f64 {
+        if self.postings_total == 0 {
+            0.0
+        } else {
+            1.0 - self.postings_touched as f64 / self.postings_total as f64
+        }
+    }
+}
+
+/// One term's read position inside the arena. Plain indices (no borrows)
+/// so cursors can live in the reusable scratch.
+#[derive(Debug, Clone, Copy)]
+struct Cursor {
+    /// Arena index of the list's first posting.
+    start: u32,
+    /// Posting count of the list.
+    len: u32,
+    /// Current position, relative to `start`.
+    pos: u32,
+    /// Index of the list's first block in `blocks`.
+    block0: u32,
+    /// List-level upper bound: TERM_UNIT + max impact over the list.
+    ub: u32,
 }
 
 /// Reusable per-query retrieval state. Owning one of these (per thread)
-/// makes `retrieve_into` allocation-free in steady state: the dense count
-/// array is cleared sparsely via the touched list, never rebuilt.
+/// makes `retrieve_into` allocation-free in steady state.
 #[derive(Debug, Default)]
 pub struct RetrievalScratch {
-    /// Dense per-doc distinct-term match counts (0 = untouched).
-    counts: Vec<u16>,
-    /// Docs whose count is nonzero this query (sparse-clear list).
-    touched: Vec<u32>,
     /// Dedup buffer for query buckets.
     uniq: Vec<u32>,
+    /// WAND term cursors for the current query.
+    cursors: Vec<Cursor>,
     /// Bounded selection heap; `Reverse` makes the std max-heap a
     /// min-heap whose root is the worst candidate currently kept.
-    heap: BinaryHeap<Reverse<(u16, Reverse<u32>)>>,
-    /// Result buffer: (local_id, match count), best first.
-    out: Vec<(u32, u16)>,
+    heap: BinaryHeap<Reverse<(u32, Reverse<u32>)>>,
+    /// Result buffer: (local_id, retrieval score), best first.
+    out: Vec<(u32, u32)>,
+    /// Work counters of the last `retrieve_into` call.
+    counters: RetrievalCounters,
 }
 
 impl RetrievalScratch {
@@ -50,21 +161,49 @@ impl RetrievalScratch {
     }
 
     /// Hits produced by the last `retrieve_into` call.
-    pub fn hits(&self) -> &[(u32, u16)] {
+    pub fn hits(&self) -> &[(u32, u32)] {
         &self.out
     }
 
     /// Take ownership of the last result (used by the one-shot wrapper).
-    pub fn take_hits(&mut self) -> Vec<(u32, u16)> {
+    pub fn take_hits(&mut self) -> Vec<(u32, u32)> {
         std::mem::take(&mut self.out)
+    }
+
+    /// Work counters of the last `retrieve_into` call.
+    pub fn counters(&self) -> &RetrievalCounters {
+        &self.counters
     }
 }
 
+/// Immutable inverted index for one shard (layout in the module docs).
+#[derive(Debug, Clone)]
+pub struct InvertedIndex {
+    offsets: Vec<u32>,
+    docs: Vec<u32>,
+    impacts: Vec<u8>,
+    block_offsets: Vec<u32>,
+    blocks: Vec<BlockMeta>,
+    num_docs: u32,
+    block_size: u32,
+}
+
 impl InvertedIndex {
-    /// Build from analyzed docs (each doc indexed once per bucket even if
-    /// the bucket occurs in several fields). Two-pass CSR construction:
-    /// count, prefix-sum, fill.
+    /// Build from analyzed docs with the default [`BLOCK_SIZE`].
     pub fn build(docs: &[ShardDoc], features: usize) -> InvertedIndex {
+        InvertedIndex::build_with_block_size(docs, features, BLOCK_SIZE)
+    }
+
+    /// Build with an explicit block size (tests sweep small sizes to
+    /// exercise block boundaries; results must be identical across
+    /// sizes). Three passes: count, prefix-sum, fill + accumulate
+    /// impacts, then derive block metadata.
+    pub fn build_with_block_size(
+        docs: &[ShardDoc],
+        features: usize,
+        block_size: usize,
+    ) -> InvertedIndex {
+        assert!(block_size > 0, "block size must be positive");
         // Pass 1: posting count per bucket. `last[b]` is the last doc id
         // counted for bucket b — docs arrive in increasing local id, so
         // comparing against it dedups multi-field occurrences.
@@ -72,13 +211,11 @@ impl InvertedIndex {
         let mut last = vec![u32::MAX; features];
         for (local_id, doc) in docs.iter().enumerate() {
             let lid = local_id as u32;
-            for tf in &doc.field_tf {
-                for (bucket, _) in tf {
-                    let b = *bucket as usize;
-                    if last[b] != lid {
-                        last[b] = lid;
-                        counts[b] += 1;
-                    }
+            for (bucket, _) in doc.bucket_tf_iter() {
+                let b = bucket as usize;
+                if last[b] != lid {
+                    last[b] = lid;
+                    counts[b] += 1;
                 }
             }
         }
@@ -88,38 +225,95 @@ impl InvertedIndex {
             offsets[b + 1] = offsets[b] + counts[b];
         }
 
-        // Pass 2: fill the arena through per-bucket write cursors.
-        let mut data = vec![0u32; offsets[features] as usize];
+        // Pass 2: fill doc ids through per-bucket write cursors and
+        // accumulate the cross-field tf per posting (a bucket occurring
+        // in several fields contributes the sum of its tfs). `slot[b]`
+        // remembers where the current doc's posting went so later fields
+        // accumulate instead of re-emitting.
+        let n_postings = offsets[features] as usize;
+        let mut ids = vec![0u32; n_postings];
+        let mut tf_acc = vec![0f32; n_postings];
         let mut cursor: Vec<u32> = offsets[..features].to_vec();
+        let mut slot = vec![0u32; features];
         last.fill(u32::MAX);
         for (local_id, doc) in docs.iter().enumerate() {
             let lid = local_id as u32;
-            for tf in &doc.field_tf {
-                for (bucket, _) in tf {
-                    let b = *bucket as usize;
-                    if last[b] != lid {
-                        last[b] = lid;
-                        data[cursor[b] as usize] = lid;
-                        cursor[b] += 1;
-                    }
+            for (bucket, tf) in doc.bucket_tf_iter() {
+                let b = bucket as usize;
+                if last[b] != lid {
+                    last[b] = lid;
+                    slot[b] = cursor[b];
+                    ids[cursor[b] as usize] = lid;
+                    tf_acc[cursor[b] as usize] = tf;
+                    cursor[b] += 1;
+                } else {
+                    tf_acc[slot[b] as usize] += tf;
                 }
             }
         }
-        InvertedIndex { offsets, data, num_docs: docs.len() as u32 }
+        let impacts: Vec<u8> = tf_acc.into_iter().map(quantize_impact).collect();
+
+        // Block metadata: per bucket, chunk its run into block_size
+        // pieces and record (last doc id, max impact) of each.
+        let mut block_offsets = vec![0u32; features + 1];
+        let mut blocks: Vec<BlockMeta> = Vec::new();
+        for b in 0..features {
+            let (lo, hi) = (offsets[b] as usize, offsets[b + 1] as usize);
+            for chunk_lo in (lo..hi).step_by(block_size) {
+                let chunk_hi = (chunk_lo + block_size).min(hi);
+                let max_impact =
+                    impacts[chunk_lo..chunk_hi].iter().copied().max().unwrap_or(0);
+                blocks.push(BlockMeta { last_doc: ids[chunk_hi - 1], max_impact });
+            }
+            block_offsets[b + 1] = blocks.len() as u32;
+        }
+
+        InvertedIndex {
+            offsets,
+            docs: ids,
+            impacts,
+            block_offsets,
+            blocks,
+            num_docs: docs.len() as u32,
+            block_size: block_size as u32,
+        }
     }
 
-    /// Posting list for a bucket (empty slice if absent).
+    /// Posting doc ids for a bucket (empty slice if absent).
     pub fn postings(&self, bucket: u32) -> &[u32] {
         let b = bucket as usize;
         if b + 1 >= self.offsets.len() {
             return &[];
         }
-        &self.data[self.offsets[b] as usize..self.offsets[b + 1] as usize]
+        &self.docs[self.offsets[b] as usize..self.offsets[b + 1] as usize]
+    }
+
+    /// Quantized impacts for a bucket, parallel to [`postings`](Self::postings).
+    pub fn impacts(&self, bucket: u32) -> &[u8] {
+        let b = bucket as usize;
+        if b + 1 >= self.offsets.len() {
+            return &[];
+        }
+        &self.impacts[self.offsets[b] as usize..self.offsets[b + 1] as usize]
+    }
+
+    /// Block metadata for a bucket's posting list.
+    pub fn block_meta(&self, bucket: u32) -> &[BlockMeta] {
+        let b = bucket as usize;
+        if b + 1 >= self.block_offsets.len() {
+            return &[];
+        }
+        &self.blocks[self.block_offsets[b] as usize..self.block_offsets[b + 1] as usize]
     }
 
     /// Total number of postings (index size metric).
     pub fn num_postings(&self) -> usize {
-        self.data.len()
+        self.docs.len()
+    }
+
+    /// Total number of posting blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
     }
 
     /// Documents covered by this index.
@@ -127,10 +321,59 @@ impl InvertedIndex {
         self.num_docs as usize
     }
 
-    /// OR-retrieve candidates for the given query buckets into `scratch`:
-    /// `scratch.hits()` holds (local_id, distinct-terms-matched) sorted by
-    /// match count descending then local id, truncated to
-    /// `max_candidates`. Allocation-free once the scratch has warmed up.
+    /// Postings per block this index was built with.
+    pub fn block_size(&self) -> usize {
+        self.block_size as usize
+    }
+
+    #[inline]
+    fn cur_doc(&self, c: &Cursor) -> u32 {
+        self.docs[(c.start + c.pos) as usize]
+    }
+
+    #[inline]
+    fn cur_impact(&self, c: &Cursor) -> u8 {
+        self.impacts[(c.start + c.pos) as usize]
+    }
+
+    /// Block metadata covering cursor `c`'s current position.
+    #[inline]
+    fn cur_block(&self, c: &Cursor) -> BlockMeta {
+        self.blocks[(c.block0 + c.pos / self.block_size) as usize]
+    }
+
+    /// Advance `c` to the first position whose doc id >= `target`,
+    /// skipping whole blocks via their `last_doc` and binary-searching
+    /// only inside the final block. Postings passed over are *not*
+    /// counted as touched (they were never accumulated).
+    fn seek(&self, c: &mut Cursor, target: u32, counters: &mut RetrievalCounters) {
+        if c.pos >= c.len || self.cur_doc(c) >= target {
+            return;
+        }
+        let bs = self.block_size;
+        let mut blk = c.pos / bs;
+        let nblocks = c.len.div_ceil(bs);
+        while blk < nblocks && self.blocks[(c.block0 + blk) as usize].last_doc < target {
+            counters.blocks_skipped += 1;
+            blk += 1;
+            c.pos = blk * bs;
+        }
+        if c.pos >= c.len {
+            c.pos = c.len;
+            return;
+        }
+        let block_end = ((blk + 1) * bs).min(c.len);
+        let lo = (c.start + c.pos) as usize;
+        let hi = (c.start + block_end) as usize;
+        c.pos += self.docs[lo..hi].partition_point(|&d| d < target) as u32;
+    }
+
+    /// OR-retrieve the top `max_candidates` candidates for the query
+    /// buckets into `scratch`: `scratch.hits()` holds (local_id,
+    /// retrieval score) sorted by score descending then local id —
+    /// bit-identical to [`retrieve_reference`](Self::retrieve_reference)
+    /// — and `scratch.counters()` reports the work skipped. Block-max
+    /// WAND: allocation-free once the scratch has warmed up.
     pub fn retrieve_into(
         &self,
         buckets: &[u32],
@@ -138,13 +381,11 @@ impl InvertedIndex {
         scratch: &mut RetrievalScratch,
     ) {
         scratch.out.clear();
+        scratch.counters = RetrievalCounters::default();
         if max_candidates == 0 {
             return;
         }
-        if scratch.counts.len() < self.num_docs as usize {
-            scratch.counts.resize(self.num_docs as usize, 0);
-        }
-        debug_assert!(scratch.touched.is_empty(), "scratch not cleared");
+        let k = max_candidates;
 
         // Dedup buckets so a repeated query term doesn't double-count.
         scratch.uniq.clear();
@@ -152,136 +393,245 @@ impl InvertedIndex {
         scratch.uniq.sort_unstable();
         scratch.uniq.dedup();
 
-        // Counting OR-merge over the arena (disjoint-field borrows: the
-        // bucket list is read while counts/touched are written).
+        scratch.cursors.clear();
         for &b in &scratch.uniq {
-            for &doc in self.postings(b) {
-                let c = &mut scratch.counts[doc as usize];
-                if *c == 0 {
-                    scratch.touched.push(doc);
+            let bu = b as usize;
+            if bu + 1 >= self.offsets.len() {
+                continue;
+            }
+            let (lo, hi) = (self.offsets[bu], self.offsets[bu + 1]);
+            if lo == hi {
+                continue;
+            }
+            let block0 = self.block_offsets[bu];
+            let nblocks = self.block_offsets[bu + 1] - block0;
+            let list_max = self.blocks[block0 as usize..(block0 + nblocks) as usize]
+                .iter()
+                .map(|m| m.max_impact)
+                .max()
+                .unwrap_or(0);
+            scratch.cursors.push(Cursor {
+                start: lo,
+                len: hi - lo,
+                pos: 0,
+                block0,
+                ub: TERM_UNIT + list_max as u32,
+            });
+            scratch.counters.postings_total += (hi - lo) as u64;
+            scratch.counters.blocks_total += nblocks as u64;
+        }
+
+        scratch.heap.clear();
+        let RetrievalScratch { cursors, heap, counters, out, .. } = scratch;
+
+        loop {
+            cursors.retain(|c| c.pos < c.len);
+            if cursors.is_empty() {
+                break;
+            }
+            // Keep cursors sorted by current doc id. Lists are short-ish
+            // in number (one per distinct query term); insertion sort on
+            // a mostly-sorted vec beats a heap here.
+            cursors.sort_unstable_by_key(|c| self.cur_doc(c));
+
+            // Heap threshold: score of the worst kept candidate once the
+            // heap is full. Skips must be strict (ub < theta): a
+            // candidate *tying* theta can still win its id tie-break.
+            let theta: u32 = if heap.len() == k {
+                heap.peek().expect("heap full").0 .0
+            } else {
+                0
+            };
+
+            // Pivot: first cursor where the cumulative list upper bound
+            // could reach theta. No pivot => no remaining doc can place.
+            let mut acc = 0u64;
+            let mut pivot = None;
+            for (i, c) in cursors.iter().enumerate() {
+                acc += c.ub as u64;
+                if acc >= theta as u64 {
+                    pivot = Some(i);
+                    break;
                 }
-                *c = c.saturating_add(1);
+            }
+            let Some(pivot) = pivot else { break };
+            let pivot_doc = self.cur_doc(&cursors[pivot]);
+
+            if self.cur_doc(&cursors[0]) == pivot_doc {
+                // Cursors are sorted, so cursors[0..=pivot] all sit on
+                // pivot_doc; later cursors may too — extend the group.
+                let mut p_end = pivot;
+                while p_end + 1 < cursors.len()
+                    && self.cur_doc(&cursors[p_end + 1]) == pivot_doc
+                {
+                    p_end += 1;
+                }
+
+                // Block-max refinement: tighter bound from the blocks
+                // actually containing pivot_doc.
+                let mut block_ub = 0u32;
+                let mut min_boundary = u32::MAX;
+                for c in &cursors[..=p_end] {
+                    let m = self.cur_block(c);
+                    block_ub += TERM_UNIT + m.max_impact as u32;
+                    min_boundary = min_boundary.min(m.last_doc);
+                }
+                if block_ub < theta {
+                    // No doc in [pivot_doc, jump) can beat theta: the
+                    // range is covered by these same blocks, and every
+                    // other list starts at or beyond `jump`.
+                    let mut jump = min_boundary.saturating_add(1);
+                    if p_end + 1 < cursors.len() {
+                        jump = jump.min(self.cur_doc(&cursors[p_end + 1]));
+                    }
+                    let jump = jump.max(pivot_doc.saturating_add(1));
+                    for c in cursors[..=p_end].iter_mut() {
+                        self.seek(c, jump, counters);
+                    }
+                } else {
+                    // Score pivot_doc exactly.
+                    let mut score = 0u32;
+                    for c in cursors[..=p_end].iter_mut() {
+                        score += TERM_UNIT + self.cur_impact(c) as u32;
+                        c.pos += 1;
+                        counters.postings_touched += 1;
+                    }
+                    counters.candidates_emitted += 1;
+                    let key = Reverse((score, Reverse(pivot_doc)));
+                    if heap.len() < k {
+                        heap.push(key);
+                    } else if key < *heap.peek().expect("heap nonempty") {
+                        // Better than the worst kept (Reverse flips).
+                        heap.pop();
+                        heap.push(key);
+                    }
+                }
+            } else {
+                // Docs before the pivot cannot reach theta: jump every
+                // earlier cursor forward to the pivot doc.
+                for c in cursors[..pivot].iter_mut() {
+                    self.seek(c, pivot_doc, counters);
+                }
             }
         }
 
-        // Top-k selection. Ordering: higher count wins, ties go to the
-        // smaller doc id — encoded as the tuple (count, Reverse(doc)) so
-        // "greater" means "better".
-        let k = max_candidates;
-        if scratch.touched.len() <= k {
-            for &d in &scratch.touched {
-                scratch.out.push((d, scratch.counts[d as usize]));
-            }
-        } else {
-            scratch.heap.clear();
-            for &d in &scratch.touched {
-                let key = Reverse((scratch.counts[d as usize], Reverse(d)));
-                if scratch.heap.len() < k {
-                    scratch.heap.push(key);
-                } else if key < *scratch.heap.peek().expect("heap nonempty") {
-                    // Better than the worst kept (Reverse flips the order).
-                    scratch.heap.pop();
-                    scratch.heap.push(key);
-                }
-            }
-            scratch
-                .out
-                .extend(scratch.heap.drain().map(|Reverse((c, Reverse(d)))| (d, c)));
-        }
-        scratch.out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-
-        // Sparse clear for the next query.
-        for &d in &scratch.touched {
-            scratch.counts[d as usize] = 0;
-        }
-        scratch.touched.clear();
+        out.extend(heap.drain().map(|Reverse((s, Reverse(d)))| (d, s)));
+        out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
     }
 
     /// One-shot OR-retrieve (allocates a fresh scratch; hot paths hold a
     /// [`RetrievalScratch`] and call [`InvertedIndex::retrieve_into`]).
-    pub fn retrieve(&self, buckets: &[u32], max_candidates: usize) -> Vec<(u32, u16)> {
+    pub fn retrieve(&self, buckets: &[u32], max_candidates: usize) -> Vec<(u32, u32)> {
         let mut scratch = RetrievalScratch::new();
         self.retrieve_into(buckets, max_candidates, &mut scratch);
         scratch.take_hits()
     }
 
-    /// Naive reference OR-retrieve: per-query `HashMap` counts + full
-    /// sort (the seed implementation). Kept as the differential-testing
+    /// Naive reference OR-retrieve: per-query `HashMap` accumulation of
+    /// the same stored impacts + full sort. Kept as the differential
     /// oracle (`tests/prop_invariants.rs`) and the micro-benchmark
-    /// baseline — result semantics of the arena path must match this
+    /// baseline — result semantics of the block-max path must match this
     /// exactly.
-    pub fn retrieve_reference(&self, buckets: &[u32], max_candidates: usize) -> Vec<(u32, u16)> {
-        let mut counts: std::collections::HashMap<u32, u16> = std::collections::HashMap::new();
+    pub fn retrieve_reference(&self, buckets: &[u32], max_candidates: usize) -> Vec<(u32, u32)> {
+        let mut scores: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
         let mut uniq: Vec<u32> = buckets.to_vec();
         uniq.sort_unstable();
         uniq.dedup();
         for b in uniq {
-            for &doc in self.postings(b) {
-                let c = counts.entry(doc).or_insert(0);
-                *c = c.saturating_add(1);
+            for (&doc, &imp) in self.postings(b).iter().zip(self.impacts(b)) {
+                *scores.entry(doc).or_insert(0) += TERM_UNIT + imp as u32;
             }
         }
-        let mut out: Vec<(u32, u16)> = counts.into_iter().collect();
+        let mut out: Vec<(u32, u32)> = scores.into_iter().collect();
         out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
         out.truncate(max_candidates);
         out
     }
 
-    /// AND-retrieve: docs containing *all* buckets (used by the
-    /// multivariate field filters). Returns sorted local ids. Intersects
-    /// smallest-list-first with galloping (exponential) search — probes
-    /// for successive targets resume from the previous cursor, so runs of
-    /// near-misses cost O(log gap) instead of O(log n) each.
-    pub fn retrieve_all(&self, buckets: &[u32]) -> Vec<u32> {
-        if buckets.is_empty() {
+    /// AND-retrieve: up to `limit` docs containing *all* buckets (used
+    /// by the multivariate field filters), in increasing local id.
+    /// Leapfrog intersection seeded from the shortest posting list; the
+    /// per-list seeks skip whole blocks via their `last_doc` metadata.
+    /// The explicit `limit` caps the result allocation — a huge shard
+    /// cannot make a term-free conjunction balloon the candidate buffer.
+    pub fn retrieve_all(&self, buckets: &[u32], limit: usize) -> Vec<u32> {
+        let mut counters = RetrievalCounters::default();
+        self.retrieve_all_counted(buckets, limit, &mut counters)
+    }
+
+    /// [`retrieve_all`](Self::retrieve_all), reporting work counters.
+    pub fn retrieve_all_counted(
+        &self,
+        buckets: &[u32],
+        limit: usize,
+        counters: &mut RetrievalCounters,
+    ) -> Vec<u32> {
+        *counters = RetrievalCounters::default();
+        if buckets.is_empty() || limit == 0 {
             return Vec::new();
         }
         let mut uniq: Vec<u32> = buckets.to_vec();
         uniq.sort_unstable();
         uniq.dedup();
-        // Start from the shortest posting list, intersect the rest.
+        // Drive from the shortest posting list.
         uniq.sort_by_key(|b| self.postings(*b).len());
-        let mut acc: Vec<u32> = self.postings(uniq[0]).to_vec();
-        for b in &uniq[1..] {
-            if acc.is_empty() {
-                break;
+
+        let mut cursors: Vec<Cursor> = Vec::with_capacity(uniq.len());
+        for &b in &uniq {
+            let bu = b as usize;
+            if bu + 1 >= self.offsets.len() || self.offsets[bu] == self.offsets[bu + 1] {
+                return Vec::new(); // empty list => empty intersection
             }
-            let list = self.postings(*b);
-            let mut cursor = 0usize;
-            let mut w = 0usize;
-            for i in 0..acc.len() {
-                let d = acc[i];
-                cursor = gallop_to(list, cursor, d);
-                if cursor == list.len() {
+            let (lo, hi) = (self.offsets[bu], self.offsets[bu + 1]);
+            cursors.push(Cursor {
+                start: lo,
+                len: hi - lo,
+                pos: 0,
+                block0: self.block_offsets[bu],
+                ub: 0,
+            });
+            counters.postings_total += (hi - lo) as u64;
+            counters.blocks_total +=
+                (self.block_offsets[bu + 1] - self.block_offsets[bu]) as u64;
+            // Every cursor's initial head gets examined.
+            counters.postings_touched += 1;
+        }
+
+        let mut out = Vec::new();
+        let mut target = self.cur_doc(&cursors[0]);
+        'outer: loop {
+            let mut agreed = true;
+            for c in cursors.iter_mut() {
+                let before = c.pos;
+                self.seek(c, target, counters);
+                if c.pos >= c.len {
+                    break 'outer;
+                }
+                // A position is examined once, when first landed on.
+                if c.pos != before {
+                    counters.postings_touched += 1;
+                }
+                let d = self.cur_doc(c);
+                if d > target {
+                    target = d;
+                    agreed = false;
                     break;
                 }
-                if list[cursor] == d {
-                    acc[w] = d;
-                    w += 1;
+            }
+            if agreed {
+                out.push(target);
+                counters.candidates_emitted += 1;
+                if out.len() >= limit {
+                    break;
+                }
+                match target.checked_add(1) {
+                    Some(t) => target = t,
+                    None => break,
                 }
             }
-            acc.truncate(w);
         }
-        acc
+        out
     }
-}
-
-/// First index `i >= lo` with `list[i] >= target` in a sorted list, found
-/// by doubling steps from `lo` then binary-searching the final window.
-fn gallop_to(list: &[u32], mut lo: usize, target: u32) -> usize {
-    if lo >= list.len() || list[lo] >= target {
-        return lo;
-    }
-    // Invariant: list[lo] < target.
-    let mut step = 1usize;
-    while lo + step < list.len() && list[lo + step] < target {
-        lo += step;
-        step <<= 1;
-    }
-    let hi = (lo + step).min(list.len());
-    // Answer lies in (lo, hi]: every element before lo+1 is < target and
-    // list[hi] >= target (or hi == len).
-    lo + 1 + list[lo + 1..hi].partition_point(|&x| x < target)
 }
 
 #[cfg(test)]
@@ -290,23 +640,31 @@ mod tests {
     use crate::text::NUM_FIELDS;
 
     /// Build a ShardDoc from (bucket, tf) pairs in field 0.
-    fn doc(global_id: u64, buckets: &[u32]) -> ShardDoc {
+    fn doc(global_id: u64, buckets: &[(u32, f32)]) -> ShardDoc {
         let mut field_tf: [Vec<(u32, f32)>; NUM_FIELDS] = Default::default();
-        field_tf[0] = buckets.iter().map(|&b| (b, 1.0)).collect();
-        ShardDoc { global_id, field_tf, field_len: [buckets.len() as f32, 0.0, 0.0, 0.0] }
+        field_tf[0] = buckets.to_vec();
+        let len: f32 = buckets.iter().map(|&(_, tf)| tf).sum();
+        ShardDoc { global_id, field_tf, field_len: [len, 0.0, 0.0, 0.0] }
+    }
+
+    fn doc1(global_id: u64, buckets: &[u32]) -> ShardDoc {
+        let pairs: Vec<(u32, f32)> = buckets.iter().map(|&b| (b, 1.0)).collect();
+        doc(global_id, &pairs)
     }
 
     fn index() -> InvertedIndex {
         InvertedIndex::build(
             &[
-                doc(0, &[1, 2, 3]),
-                doc(1, &[2, 3]),
-                doc(2, &[3]),
-                doc(3, &[4]),
+                doc1(0, &[1, 2, 3]),
+                doc1(1, &[2, 3]),
+                doc1(2, &[3]),
+                doc1(3, &[4]),
             ],
             8,
         )
     }
+
+    const U: u32 = TERM_UNIT + 1; // unit-tf per-term score
 
     #[test]
     fn postings_sorted_and_correct() {
@@ -315,15 +673,49 @@ mod tests {
         assert_eq!(ix.postings(2), &[0, 1]);
         assert_eq!(ix.postings(3), &[0, 1, 2]);
         assert_eq!(ix.postings(7), &[] as &[u32]);
+        assert_eq!(ix.impacts(3), &[1, 1, 1]);
         assert_eq!(ix.num_postings(), 7);
         assert_eq!(ix.num_docs(), 4);
     }
 
     #[test]
-    fn or_retrieval_orders_by_match_count() {
+    fn block_meta_tracks_last_doc_and_max_impact() {
+        let docs: Vec<ShardDoc> = (0..10)
+            .map(|i| doc(i as u64, &[(0, (i + 1) as f32)]))
+            .collect();
+        let ix = InvertedIndex::build_with_block_size(&docs, 2, 4);
+        let blocks = ix.block_meta(0);
+        assert_eq!(blocks.len(), 3); // 10 postings / block size 4
+        assert_eq!(blocks[0], BlockMeta { last_doc: 3, max_impact: 4 });
+        assert_eq!(blocks[1], BlockMeta { last_doc: 7, max_impact: 8 });
+        assert_eq!(blocks[2], BlockMeta { last_doc: 9, max_impact: 10 });
+        assert_eq!(ix.num_blocks(), 3);
+        assert_eq!(ix.block_size(), 4);
+    }
+
+    #[test]
+    fn or_retrieval_orders_by_match_count_then_impact() {
         let ix = index();
         let got = ix.retrieve(&[1, 2, 3], 10);
-        assert_eq!(got, vec![(0, 3), (1, 2), (2, 1)]);
+        assert_eq!(got, vec![(0, 3 * U), (1, 2 * U), (2, U)]);
+    }
+
+    #[test]
+    fn impact_breaks_ties_within_match_count() {
+        // Same distinct-match count, different tf: heavier doc first.
+        let ix = InvertedIndex::build(
+            &[doc(0, &[(1, 1.0)]), doc(1, &[(1, 5.0)])],
+            4,
+        );
+        let got = ix.retrieve(&[1], 10);
+        assert_eq!(got, vec![(1, TERM_UNIT + 5), (0, TERM_UNIT + 1)]);
+        // But any extra distinct match still dominates any tf.
+        let ix2 = InvertedIndex::build(
+            &[doc(0, &[(1, 200.0)]), doc(1, &[(1, 1.0), (2, 1.0)])],
+            4,
+        );
+        let got2 = ix2.retrieve(&[1, 2], 10);
+        assert_eq!(got2[0].0, 1, "two distinct matches beat one heavy match");
     }
 
     #[test]
@@ -338,25 +730,39 @@ mod tests {
     fn duplicate_query_buckets_count_once() {
         let ix = index();
         let got = ix.retrieve(&[2, 2, 2], 10);
-        assert_eq!(got, vec![(0, 1), (1, 1)]);
+        assert_eq!(got, vec![(0, U), (1, U)]);
     }
 
     #[test]
-    fn and_retrieval_intersects() {
+    fn and_retrieval_intersects_with_limit() {
         let ix = index();
-        assert_eq!(ix.retrieve_all(&[2, 3]), vec![0, 1]);
-        assert_eq!(ix.retrieve_all(&[1, 4]), Vec::<u32>::new());
-        assert_eq!(ix.retrieve_all(&[]), Vec::<u32>::new());
+        assert_eq!(ix.retrieve_all(&[2, 3], 100), vec![0, 1]);
+        assert_eq!(ix.retrieve_all(&[2, 3], 1), vec![0]);
+        assert_eq!(ix.retrieve_all(&[1, 4], 100), Vec::<u32>::new());
+        assert_eq!(ix.retrieve_all(&[], 100), Vec::<u32>::new());
+        assert_eq!(ix.retrieve_all(&[2, 3], 0), Vec::<u32>::new());
     }
 
     #[test]
-    fn multifield_doc_indexed_once_per_bucket() {
+    fn multifield_doc_accumulates_impact_across_fields() {
         let mut field_tf: [Vec<(u32, f32)>; NUM_FIELDS] = Default::default();
         field_tf[0] = vec![(5, 1.0)];
         field_tf[1] = vec![(5, 3.0)];
         let d = ShardDoc { global_id: 0, field_tf, field_len: [1.0, 3.0, 0.0, 0.0] };
         let ix = InvertedIndex::build(&[d], 8);
         assert_eq!(ix.postings(5), &[0]);
+        assert_eq!(ix.impacts(5), &[4], "impact sums tf across fields");
+    }
+
+    #[test]
+    fn impact_quantization_saturates() {
+        assert_eq!(quantize_impact(0.0), 1);
+        assert_eq!(quantize_impact(1.0), 1);
+        assert_eq!(quantize_impact(2.4), 2);
+        assert_eq!(quantize_impact(255.0), 255);
+        assert_eq!(quantize_impact(1e9), 255);
+        let ix = InvertedIndex::build(&[doc(0, &[(1, 1e6)])], 4);
+        assert_eq!(ix.impacts(1), &[255]);
     }
 
     #[test]
@@ -371,47 +777,113 @@ mod tests {
         let ix = index();
         let mut scratch = RetrievalScratch::new();
         ix.retrieve_into(&[1, 2, 3], 10, &mut scratch);
-        assert_eq!(scratch.hits(), &[(0, 3), (1, 2), (2, 1)]);
-        // A second, disjoint query must not see counts from the first.
+        assert_eq!(scratch.hits(), &[(0, 3 * U), (1, 2 * U), (2, U)]);
+        // A second, disjoint query must not see state from the first.
         ix.retrieve_into(&[4], 10, &mut scratch);
-        assert_eq!(scratch.hits(), &[(3, 1)]);
+        assert_eq!(scratch.hits(), &[(3, U)]);
         ix.retrieve_into(&[100], 10, &mut scratch);
         assert!(scratch.hits().is_empty());
     }
 
     #[test]
-    fn heap_selection_matches_reference() {
-        // Enough docs that every truncation path (heap vs copy-all) runs.
+    fn wand_selection_matches_reference() {
+        // Enough docs that truncation and pruning paths both run, with
+        // varied tf so impacts differ.
         let docs: Vec<ShardDoc> = (0..200)
             .map(|i| {
-                let buckets: Vec<u32> = (0..8).filter(|b| (i + b) % 3 != 0).map(|b| b as u32).collect();
-                doc(i as u64, &buckets)
+                let pairs: Vec<(u32, f32)> = (0..8u32)
+                    .filter(|b| (i + *b as usize) % 3 != 0)
+                    .map(|b| (b, 1.0 + (i % 5) as f32))
+                    .collect();
+                doc(i as u64, &pairs)
             })
             .collect();
-        let ix = InvertedIndex::build(&docs, 8);
-        let query = [0u32, 1, 2, 3, 4, 5, 6, 7];
-        for k in [1usize, 3, 10, 50, 199, 200, 500] {
-            assert_eq!(ix.retrieve(&query, k), ix.retrieve_reference(&query, k), "k={k}");
+        for bs in [2usize, 7, 64, BLOCK_SIZE] {
+            let ix = InvertedIndex::build_with_block_size(&docs, 8, bs);
+            let query = [0u32, 1, 2, 3, 4, 5, 6, 7];
+            for k in [1usize, 3, 10, 50, 199, 200, 500] {
+                assert_eq!(
+                    ix.retrieve(&query, k),
+                    ix.retrieve_reference(&query, k),
+                    "bs={bs} k={k}"
+                );
+            }
         }
     }
 
     #[test]
-    fn match_count_saturates_instead_of_overflowing() {
-        // One doc present in more buckets than u16 can count: the match
-        // count must clamp at u16::MAX, not panic (debug) or wrap
-        // (release).
-        let n = (u16::MAX as usize) + 10;
-        let buckets: Vec<u32> = (0..n as u32).collect();
-        let d = doc(0, &buckets);
-        let ix = InvertedIndex::build(&[d], n);
-        let got = ix.retrieve(&buckets, 4);
-        assert_eq!(got, vec![(0, u16::MAX)]);
-        assert_eq!(ix.retrieve_reference(&buckets, 4), vec![(0, u16::MAX)]);
+    fn counters_account_for_all_postings() {
+        let docs: Vec<ShardDoc> = (0..300)
+            .map(|i| {
+                let mut pairs = vec![(0u32, 1.0f32)];
+                if i % 3 == 0 {
+                    pairs.push((1, 2.0));
+                }
+                if i % 11 == 0 {
+                    pairs.push((2, 1.0));
+                }
+                doc(i as u64, &pairs)
+            })
+            .collect();
+        let ix = InvertedIndex::build_with_block_size(&docs, 4, 16);
+        let mut scratch = RetrievalScratch::new();
+        ix.retrieve_into(&[0, 1, 2], 8, &mut scratch);
+        let c = scratch.counters();
+        assert_eq!(c.postings_total, ix.num_postings() as u64);
+        assert_eq!(c.blocks_total, ix.num_blocks() as u64);
+        assert!(c.postings_touched <= c.postings_total);
+        assert!(c.candidates_emitted >= scratch.hits().len() as u64);
+        // With k=8 over 300 matching docs the threshold must have pruned.
+        assert!(
+            c.postings_touched < c.postings_total,
+            "no pruning happened: {c:?}"
+        );
+        assert!(c.skipped_fraction() > 0.0);
+    }
+
+    #[test]
+    fn counters_merge_accumulates() {
+        let mut a = RetrievalCounters {
+            postings_touched: 10,
+            postings_total: 100,
+            blocks_skipped: 2,
+            blocks_total: 8,
+            candidates_emitted: 5,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.postings_total, 200);
+        assert_eq!(a.postings_touched, 20);
+        assert_eq!(a.blocks_skipped, 4);
+        assert!((a.skipped_fraction() - 0.9).abs() < 1e-12);
+        assert_eq!(RetrievalCounters::default().skipped_fraction(), 0.0);
+    }
+
+    #[test]
+    fn and_retrieval_skips_blocks() {
+        // List A dense, B hits every 50th doc: seeking A to B's docs
+        // must bypass whole blocks.
+        let docs: Vec<ShardDoc> = (0..2000)
+            .map(|i| {
+                let mut pairs = vec![(0u32, 1.0f32)];
+                if i % 50 == 0 {
+                    pairs.push((1, 1.0));
+                }
+                doc(i as u64, &pairs)
+            })
+            .collect();
+        let ix = InvertedIndex::build_with_block_size(&docs, 4, 16);
+        let mut counters = RetrievalCounters::default();
+        let got = ix.retrieve_all_counted(&[0, 1], 1000, &mut counters);
+        let expect: Vec<u32> = (0..2000u32).filter(|i| i % 50 == 0).collect();
+        assert_eq!(got, expect);
+        assert!(counters.blocks_skipped > 0, "{counters:?}");
+        assert!(counters.postings_touched < counters.postings_total);
     }
 
     #[test]
     fn galloping_intersection_matches_linear() {
-        // Structured gaps exercise the doubling probe: list A is dense,
+        // Structured gaps exercise the block skipping: list A is dense,
         // list B hits every 7th element, C every 13th.
         let docs: Vec<ShardDoc> = (0..500)
             .map(|i| {
@@ -422,25 +894,34 @@ mod tests {
                 if i % 13 == 0 {
                     b.push(2);
                 }
-                doc(i as u64, &b)
+                doc1(i as u64, &b)
             })
             .collect();
-        let ix = InvertedIndex::build(&docs, 4);
-        let expect: Vec<u32> = (0..500u32).filter(|i| i % 7 == 0 && i % 13 == 0).collect();
-        assert_eq!(ix.retrieve_all(&[0, 1, 2]), expect);
-        assert_eq!(ix.retrieve_all(&[2, 1, 0]), expect, "order-independent");
+        for bs in [3usize, 32, BLOCK_SIZE] {
+            let ix = InvertedIndex::build_with_block_size(&docs, 4, bs);
+            let expect: Vec<u32> =
+                (0..500u32).filter(|i| i % 7 == 0 && i % 13 == 0).collect();
+            assert_eq!(ix.retrieve_all(&[0, 1, 2], 500), expect, "bs={bs}");
+            assert_eq!(ix.retrieve_all(&[2, 1, 0], 500), expect, "order-independent");
+        }
     }
 
     #[test]
-    fn gallop_to_finds_lower_bound() {
-        let list = [2u32, 4, 6, 8, 10, 12, 14];
-        assert_eq!(gallop_to(&list, 0, 1), 0);
-        assert_eq!(gallop_to(&list, 0, 2), 0);
-        assert_eq!(gallop_to(&list, 0, 7), 3);
-        assert_eq!(gallop_to(&list, 2, 7), 3);
-        assert_eq!(gallop_to(&list, 0, 14), 6);
-        assert_eq!(gallop_to(&list, 0, 15), 7);
-        assert_eq!(gallop_to(&list, 7, 15), 7);
-        assert_eq!(gallop_to(&[], 0, 3), 0);
+    fn results_identical_across_block_sizes() {
+        let docs: Vec<ShardDoc> = (0..150)
+            .map(|i| {
+                let pairs: Vec<(u32, f32)> = (0..6u32)
+                    .filter(|b| (i * 7 + *b as usize) % 4 != 0)
+                    .map(|b| (b, 1.0 + (i % 3) as f32))
+                    .collect();
+                doc(i as u64, &pairs)
+            })
+            .collect();
+        let reference = InvertedIndex::build_with_block_size(&docs, 8, 1)
+            .retrieve(&[0, 1, 2, 3, 4, 5], 20);
+        for bs in [2usize, 5, 33, 128, 4096] {
+            let ix = InvertedIndex::build_with_block_size(&docs, 8, bs);
+            assert_eq!(ix.retrieve(&[0, 1, 2, 3, 4, 5], 20), reference, "bs={bs}");
+        }
     }
 }

@@ -1,19 +1,58 @@
-//! Indexing substrate: document store + shards, the inverted index used
-//! for candidate retrieval, and the dense packer that turns candidates
-//! into the `[NF, D, F]` tiles the AOT scoring artifacts consume.
+//! Indexing substrate: document store + shards, the impact-bearing
+//! inverted index used for candidate retrieval, and the dense packer that
+//! turns candidates into the `[NF, D, F]` tiles the AOT scoring artifacts
+//! consume.
 //!
 //! Request-path split (mirrors a modern retrieve-then-rank engine, and the
 //! paper's "local search service scans its local dataset"):
 //!
-//! 1. **retrieve** — inverted-index probe produces candidate local ids;
+//! 1. **retrieve** — block-max pruned inverted-index probe produces a
+//!    pre-ranked candidate set of local ids (WAND over quantized
+//!    impacts; see below);
 //! 2. **rank** — candidates are packed into dense blocks and scored by the
 //!    Layer-1/2 artifact through the PJRT runtime (or the pure-rust
 //!    fallback scorer, used for the traditional baseline and tests).
+//!
+//! # Posting / block binary layout
+//!
+//! Each shard's [`InvertedIndex`] is four flat arrays (one allocation
+//! each, CSR-style):
+//!
+//! ```text
+//! offsets[features+1]: u32        per-bucket posting ranges
+//! docs[P]:             u32        sorted local doc ids
+//! impacts[P]:          u8         quantized impacts, parallel to docs
+//! block_offsets[features+1]: u32  per-bucket block ranges
+//! blocks[B]:           BlockMeta  { last_doc: u32, max_impact: u8 }
+//! ```
+//!
+//! Posting `i` of bucket `b` lives at `docs[offsets[b] + i]` /
+//! `impacts[offsets[b] + i]`; its block metadata at
+//! `blocks[block_offsets[b] + i / BLOCK_SIZE]`. A block covers up to
+//! [`BLOCK_SIZE`] postings: `last_doc` lets both the WAND OR path and the
+//! AND intersection seek at block granularity, `max_impact` bounds the
+//! block's best possible score contribution so whole blocks are skipped
+//! when they cannot beat the current top-k threshold.
+//!
+//! # Impact quantization
+//!
+//! `impact = clamp(round(sum over fields of tf[field][bucket]), 1, 255)`
+//! — monotone in total term frequency, saturating at 255
+//! ([`quantize_impact`]). Retrieval scores are
+//! `sum over matched terms (TERM_UNIT + impact)` with
+//! [`TERM_UNIT`] `= 256 > 255`, so distinct-term match count strictly
+//! dominates (the seed ordering is preserved) and impacts refine ties;
+//! the same u8 impacts are available as inputs to a future SIMD/Pallas
+//! scoring kernel. Work avoided by the pruning is reported through the
+//! deterministic [`RetrievalCounters`], which CI gates on.
 
 mod dense;
 mod inverted;
 mod store;
 
 pub use dense::{build_query_weights, pack_block, PackedBlock, Packer};
-pub use inverted::{InvertedIndex, RetrievalScratch};
+pub use inverted::{
+    quantize_impact, BlockMeta, InvertedIndex, RetrievalCounters, RetrievalScratch, BLOCK_SIZE,
+    TERM_UNIT,
+};
 pub use store::{GlobalStats, Shard, ShardDoc, ShardStats};

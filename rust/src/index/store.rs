@@ -1,6 +1,9 @@
 //! Shard store: per-node document data in both raw (for result rendering /
 //! filtering) and analyzed (hashed sparse term vectors) forms, plus the
-//! corpus-level statistics BM25 needs.
+//! corpus-level statistics BM25 needs. The analyzed docs feed the
+//! impact-bearing inverted index (`index::inverted`): each posting's
+//! quantized impact is derived from the cross-field tf sums exposed by
+//! [`ShardDoc::bucket_tf_iter`].
 
 use crate::corpus::Publication;
 use crate::text::{HashingVectorizer, NUM_FIELDS};
@@ -17,6 +20,16 @@ pub struct ShardDoc {
     pub field_tf: [Vec<(u32, f32)>; NUM_FIELDS],
     /// Per-field token counts (BM25 lengths).
     pub field_len: [f32; NUM_FIELDS],
+}
+
+impl ShardDoc {
+    /// All (bucket, tf) pairs across every field, in field order. A
+    /// bucket occurring in several fields yields several pairs; the
+    /// inverted-index build accumulates them into one posting whose
+    /// impact is the cross-field tf sum (see `index::inverted`).
+    pub fn bucket_tf_iter(&self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.field_tf.iter().flat_map(|tf| tf.iter().copied())
+    }
 }
 
 /// Per-shard statistics contributed to the corpus-global BM25 stats.

@@ -12,7 +12,7 @@ mod scorer;
 pub mod service;
 
 pub use error::SearchError;
-pub use query::{Query, QueryNode, RangeFilter};
+pub use query::{Query, QueryNode, RangeFilter, RetrievalHint};
 pub use request::{CompiledRequest, ReplicaPref, SearchRequest};
 pub use scorer::{score_block_rust, topk_row};
 pub use service::{LocalHit, Scorer, SearchOutcome, SearchService};

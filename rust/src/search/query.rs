@@ -44,6 +44,26 @@ use crate::text::{term_feature, terms, Field};
 
 use super::error::SearchError;
 
+/// Retrieval strategy chosen at compile time: which index primitive the
+/// Search Service should drive, and whether the matcher pass is needed.
+/// Computed once per query so the per-shard hot loop branches on a
+/// precomputed tag instead of re-deriving structure from the AST.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetrievalHint {
+    /// Pure term conjunction (phrase / `AND` chain): the galloping
+    /// AND-intersection, no matcher pass.
+    GallopAnd,
+    /// Pure term disjunction: block-max pruned OR retrieval alone is
+    /// exact — no matcher pass.
+    PrunedOr,
+    /// The OR probe reaches every match but the tree carries structure
+    /// the probe cannot express: pruned OR + per-candidate matcher.
+    PrunedOrFiltered,
+    /// A term-free branch can satisfy the tree (`year:2014`,
+    /// `grid OR year:2014`): scan the shard with the matcher fused in.
+    ScanMatcher,
+}
+
 /// Inclusive year range filter.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RangeFilter {
@@ -161,6 +181,8 @@ pub struct Query {
     /// whose year branch alone matches — in which case retrieval must
     /// scan the shard and rely on the matcher.
     pool_complete: bool,
+    /// Precomputed retrieval strategy (see [`RetrievalHint`]).
+    hint: RetrievalHint,
 }
 
 impl Query {
@@ -198,6 +220,15 @@ impl Query {
         let conjunctive = is_term_conjunction(&ast);
         let needs_filter = !conjunctive && !is_term_disjunction(&ast);
         let pool_complete = requires_term(&ast);
+        let hint = if conjunctive {
+            RetrievalHint::GallopAnd
+        } else if !pool_complete {
+            RetrievalHint::ScanMatcher
+        } else if needs_filter {
+            RetrievalHint::PrunedOrFiltered
+        } else {
+            RetrievalHint::PrunedOr
+        };
         Ok(Query {
             raw: raw.to_string(),
             ast,
@@ -207,6 +238,7 @@ impl Query {
             needs_filter,
             conjunctive,
             pool_complete,
+            hint,
         })
     }
 
@@ -244,6 +276,13 @@ impl Query {
     /// the matcher instead.
     pub fn or_pool_covers(&self) -> bool {
         self.pool_complete
+    }
+
+    /// The retrieval strategy compiled for this query (see
+    /// [`RetrievalHint`]). Consistent with [`Query::is_conjunctive`],
+    /// [`Query::needs_filter`], and [`Query::or_pool_covers`].
+    pub fn retrieval_hint(&self) -> RetrievalHint {
+        self.hint
     }
 
     /// Evaluate the compiled matcher against one shard-local document.
@@ -835,6 +874,24 @@ mod tests {
         let q = Query::parse("grid and computing", 512).unwrap();
         assert_eq!(q.keywords, vec!["grid", "comput"]);
         assert!(!q.is_conjunctive());
+    }
+
+    #[test]
+    fn retrieval_hints_match_structure() {
+        let cases = [
+            ("\"grid computing\"", RetrievalHint::GallopAnd),
+            ("storage AND replication", RetrievalHint::GallopAnd),
+            ("grid computing publications", RetrievalHint::PrunedOr),
+            ("grid OR cloud", RetrievalHint::PrunedOr),
+            ("grid -cloud", RetrievalHint::PrunedOrFiltered),
+            ("title:grid venue:conference", RetrievalHint::PrunedOrFiltered),
+            ("grid year:2014", RetrievalHint::PrunedOrFiltered),
+            ("year:2014", RetrievalHint::ScanMatcher),
+            ("grid OR year:2014", RetrievalHint::ScanMatcher),
+        ];
+        for (raw, want) in cases {
+            assert_eq!(Query::parse(raw, 512).unwrap().retrieval_hint(), want, "{raw}");
+        }
     }
 
     #[test]

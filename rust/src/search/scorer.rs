@@ -67,13 +67,22 @@ pub fn score_block_rust(
 
 /// Exact top-k over one query's score row: (index, score) sorted by score
 /// descending, ties by index ascending. Skips padding rows >= `n_real`.
+/// Partial selection first: with max_candidates-sized rows and small k,
+/// O(n + k log k) instead of sorting the whole row.
 pub fn topk_row(scores: &[f32], n_real: usize, k: usize) -> Vec<(u32, f32)> {
+    if k == 0 {
+        return Vec::new();
+    }
     let mut idx: Vec<u32> = (0..n_real.min(scores.len()) as u32).collect();
     // total_cmp: NaN scores sort deterministically instead of panicking.
-    idx.sort_unstable_by(|&a, &b| {
-        scores[b as usize].total_cmp(&scores[a as usize]).then(a.cmp(&b))
-    });
-    idx.truncate(k);
+    let better = |a: &u32, b: &u32| {
+        scores[*b as usize].total_cmp(&scores[*a as usize]).then(a.cmp(b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k, better);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(better);
     idx.into_iter().map(|i| (i, scores[i as usize])).collect()
 }
 

@@ -25,14 +25,16 @@
 use std::cell::RefCell;
 
 use crate::config::SearchConfig;
-use crate::index::{build_query_weights, pack_block, GlobalStats, RetrievalScratch, Shard};
+use crate::index::{
+    build_query_weights, GlobalStats, Packer, RetrievalCounters, RetrievalScratch, Shard,
+};
 #[allow(unused_imports)]
 use crate::runtime::Executor;
 use crate::util::clock::WallClock;
 
 thread_local! {
-    /// Reused retrieval scratch: the counting OR-merge runs against this
-    /// instead of allocating a `HashMap` per query. Thread-local (not a
+    /// Reused retrieval scratch: the block-max WAND merge runs against
+    /// this instead of allocating per query. Thread-local (not a
     /// `SearchService` field) because the coordinator fans search jobs
     /// out over scoped worker threads; each worker reuses its scratch
     /// across every shard and batched query of one fan-out. Scoped
@@ -42,10 +44,15 @@ thread_local! {
     /// the queries of a batch).
     static RETRIEVAL_SCRATCH: RefCell<RetrievalScratch> =
         RefCell::new(RetrievalScratch::new());
+
+    /// Reused dense packer for the rust-scorer ranking path (same
+    /// rationale): candidate tiles are sparse-cleared instead of
+    /// reallocated per query.
+    static PACKER: RefCell<Packer> = RefCell::new(Packer::new());
 }
 
 use super::error::SearchError;
-use super::query::Query;
+use super::query::{Query, RetrievalHint};
 use super::scorer::{score_block_rust, topk_row};
 
 /// One hit from a local shard: corpus-global doc id + BM25F score.
@@ -64,6 +71,9 @@ pub struct SearchOutcome {
     pub candidates: usize,
     /// Documents in the shard (for scan-rate metrics).
     pub shard_docs: usize,
+    /// Deterministic retrieval work counters (postings touched/skipped,
+    /// blocks skipped) for this query on this shard.
+    pub counters: RetrievalCounters,
     /// Measured wall time of the local work (seconds; for a batch, the
     /// per-query share of the shared pass).
     pub work_s: f64,
@@ -128,35 +138,57 @@ impl SearchService {
         }
 
         // ---- Phase 1: per-query retrieval ---------------------------
+        // Dispatch on the hint compiled into the query (see
+        // `query::RetrievalHint`) instead of re-deriving structure here.
         let mut cand_sets: Vec<Vec<u32>> = Vec::with_capacity(nq);
+        let mut cand_counters: Vec<RetrievalCounters> = Vec::with_capacity(nq);
         for (query, _) in queries {
-            let mut candidates: Vec<u32> = if query.is_conjunctive() {
-                // Pure term conjunction: galloping AND-intersection.
-                shard.inverted.retrieve_all(&query.buckets)
-            } else if !query.or_pool_covers() {
-                // The OR probe cannot reach every match (pure filters
-                // like `year:2014`, or a term-free branch like
-                // `grid OR year:2014`): scan the shard with the matcher
-                // fused in, stopping at the candidate budget.
-                (0..shard.len() as u32)
-                    .filter(|&lid| query.matches(shard, lid))
-                    .take(cfg.max_candidates)
-                    .collect()
-            } else {
-                // Counting OR-merge over the scored buckets, then the
-                // compiled AST matcher for structure beyond the probe.
-                let mut pool: Vec<u32> = RETRIEVAL_SCRATCH.with(|s| {
-                    let mut s = s.borrow_mut();
-                    shard.inverted.retrieve_into(&query.buckets, cfg.max_candidates, &mut s);
-                    s.hits().iter().map(|&(id, _)| id).collect()
-                });
-                if query.needs_filter() {
-                    pool.retain(|&lid| query.matches(shard, lid));
+            let mut counters = RetrievalCounters::default();
+            let mut candidates: Vec<u32> = match query.retrieval_hint() {
+                RetrievalHint::GallopAnd => {
+                    // Pure term conjunction: galloping AND-intersection,
+                    // capped at the candidate budget.
+                    shard.inverted.retrieve_all_counted(
+                        &query.buckets,
+                        cfg.max_candidates,
+                        &mut counters,
+                    )
                 }
-                pool
+                RetrievalHint::ScanMatcher => {
+                    // The OR probe cannot reach every match (pure filters
+                    // like `year:2014`, or a term-free branch like
+                    // `grid OR year:2014`): scan the shard with the
+                    // matcher fused in, stopping at the candidate budget.
+                    let scanned: Vec<u32> = (0..shard.len() as u32)
+                        .filter(|&lid| query.matches(shard, lid))
+                        .take(cfg.max_candidates)
+                        .collect();
+                    counters.candidates_emitted = scanned.len() as u64;
+                    scanned
+                }
+                hint @ (RetrievalHint::PrunedOr | RetrievalHint::PrunedOrFiltered) => {
+                    // Block-max pruned OR over the scored buckets, then
+                    // the compiled AST matcher for structure beyond the
+                    // probe. Candidates arrive pre-ranked by impact.
+                    let mut pool: Vec<u32> = RETRIEVAL_SCRATCH.with(|s| {
+                        let mut s = s.borrow_mut();
+                        shard.inverted.retrieve_into(
+                            &query.buckets,
+                            cfg.max_candidates,
+                            &mut s,
+                        );
+                        counters = *s.counters();
+                        s.hits().iter().map(|&(id, _)| id).collect()
+                    });
+                    if hint == RetrievalHint::PrunedOrFiltered {
+                        pool.retain(|&lid| query.matches(shard, lid));
+                    }
+                    pool
+                }
             };
             candidates.truncate(cfg.max_candidates);
             cand_sets.push(candidates);
+            cand_counters.push(counters);
         }
 
         // ---- Phase 2: ranking ---------------------------------------
@@ -186,15 +218,19 @@ impl SearchService {
                         cfg.features,
                         1,
                     );
-                    let block = pack_block(shard, stats, cands, cands.len(), cfg.b);
-                    let scores =
-                        score_block_rust(&block, &qw, 1, &cfg.field_weights, k1_const());
-                    for (local_idx, score) in topk_row(&scores, block.n_real, *top_k) {
-                        per_query_hits[qi].push(LocalHit {
-                            global_id: shard.docs[cands[local_idx as usize] as usize].global_id,
-                            score,
-                        });
-                    }
+                    PACKER.with(|p| {
+                        let mut p = p.borrow_mut();
+                        let block = p.pack(shard, stats, cands, cands.len(), cfg.b);
+                        let scores =
+                            score_block_rust(block, &qw, 1, &cfg.field_weights, k1_const());
+                        for (local_idx, score) in topk_row(&scores, block.n_real, *top_k) {
+                            per_query_hits[qi].push(LocalHit {
+                                global_id: shard.docs[cands[local_idx as usize] as usize]
+                                    .global_id,
+                                score,
+                            });
+                        }
+                    });
                 }
             }
         }
@@ -212,6 +248,7 @@ impl SearchService {
                 hits,
                 candidates: cand_sets[qi].len(),
                 shard_docs: shard.len(),
+                counters: cand_counters[qi],
                 work_s: work_each,
             });
         }

@@ -37,6 +37,16 @@ pub fn format_response(resp: &SearchResponse) -> String {
             "explain: ast={}  keywords={:?}  batch={}\n",
             explain.ast, explain.keywords, explain.batch_size
         ));
+        let c = &explain.counters;
+        out.push_str(&format!(
+            "explain: retrieval touched {}/{} postings ({:.1}% skipped), \
+             {} blocks skipped, {} candidates\n",
+            c.postings_touched,
+            c.postings_total,
+            c.skipped_fraction() * 100.0,
+            c.blocks_skipped,
+            c.candidates_emitted,
+        ));
         for (node, sources) in &explain.plan {
             out.push_str(&format!("explain: {node} <- {sources} sources\n"));
         }

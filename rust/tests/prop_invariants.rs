@@ -122,13 +122,13 @@ fn prop_merge_contains_global_max() {
 
 // ---------------------------------------------------------------- retrieval
 
-/// Differential oracle: the CSR arena + scratch + bounded-heap retrieval
-/// must return identical (doc, count) sets *and order* to the naive
-/// HashMap + full-sort reference (the seed implementation, kept as
-/// `retrieve_reference`). One scratch is reused across every case so
-/// stale-state bugs (unclean sparse clear) surface too.
+/// Differential oracle: the block-max WAND retrieval must return
+/// identical (doc, score) sets *and order* to the naive HashMap +
+/// full-sort reference (`retrieve_reference`) — pruning may only skip
+/// work, never change results. One scratch is reused across every case
+/// so stale-state bugs (unclean cursor/heap reuse) surface too.
 #[test]
-fn prop_csr_retrieval_matches_naive_reference() {
+fn prop_blockmax_retrieval_matches_naive_reference() {
     use gaps::corpus::{CorpusGenerator, CorpusSpec};
     use gaps::index::{RetrievalScratch, Shard};
 
@@ -142,7 +142,7 @@ fn prop_csr_retrieval_matches_naive_reference() {
     let scratch = std::cell::RefCell::new(RetrievalScratch::new());
 
     check(
-        "csr-retrieval-differential",
+        "blockmax-retrieval-differential",
         &prop_cfg(400),
         |rng, size| {
             let n = rng.range(1, size.max(2));
@@ -156,22 +156,88 @@ fn prop_csr_retrieval_matches_naive_reference() {
             let mut s = scratch.borrow_mut();
             shard.inverted.retrieve_into(buckets, *k, &mut s);
             let want = shard.inverted.retrieve_reference(buckets, *k);
-            if s.hits() == want.as_slice() {
-                Ok(())
-            } else {
-                Err(format!(
-                    "csr returned {} hits, naive {} (k={k}); first diff at {:?}",
+            if s.hits() != want.as_slice() {
+                return Err(format!(
+                    "blockmax returned {} hits, naive {} (k={k}); first diff at {:?}",
                     s.hits().len(),
                     want.len(),
                     s.hits().iter().zip(&want).position(|(a, b)| a != b),
-                ))
+                ));
             }
+            let c = s.counters();
+            if c.postings_touched > c.postings_total {
+                return Err(format!("counters overcount: {c:?}"));
+            }
+            Ok(())
         },
     );
 }
 
-/// AND-retrieval differential: the galloping intersection must equal a
-/// straightforward retain/binary-search intersection.
+/// Satellite: block-max top-k results (ids and scores) pinned identical
+/// to `retrieve_reference` across random corpora, block sizes, and k
+/// values. Small block sizes force block boundaries into the middle of
+/// every posting list, exercising the seek/jump edges.
+#[test]
+fn prop_blockmax_identical_across_corpora_block_sizes_and_k() {
+    use gaps::corpus::{CorpusGenerator, CorpusSpec};
+    use gaps::index::{InvertedIndex, RetrievalScratch, Shard};
+
+    const FEATURES: usize = 256;
+    const BLOCK_SIZES: [usize; 4] = [1, 3, 17, 128];
+    // Corpora of different shapes (docs, vocab, seed).
+    let corpora = [(350u64, 300usize, 11u64), (120, 900, 23), (500, 200, 5)];
+    let variants: Vec<(Shard, Vec<InvertedIndex>)> = corpora
+        .iter()
+        .map(|&(n, vocab, seed)| {
+            let gen = CorpusGenerator::new(CorpusSpec {
+                num_docs: n,
+                vocab_size: vocab,
+                seed,
+                ..CorpusSpec::default()
+            });
+            let shard = Shard::build(0, gen.generate_range(0, n), FEATURES);
+            let indexes = BLOCK_SIZES
+                .iter()
+                .map(|&bs| InvertedIndex::build_with_block_size(&shard.docs, FEATURES, bs))
+                .collect();
+            (shard, indexes)
+        })
+        .collect();
+    let scratch = std::cell::RefCell::new(RetrievalScratch::new());
+
+    check(
+        "blockmax-block-size-differential",
+        &prop_cfg(200),
+        |rng, size| {
+            let corpus = rng.range(0, corpora.len());
+            let n = rng.range(1, size.max(2).min(10));
+            let buckets: Vec<u32> =
+                (0..n).map(|_| rng.below(FEATURES as u64) as u32).collect();
+            let k = rng.range(1, 600);
+            (corpus, buckets, k)
+        },
+        |(corpus, buckets, k)| {
+            let (shard, indexes) = &variants[*corpus];
+            let want = shard.inverted.retrieve_reference(buckets, *k);
+            let mut s = scratch.borrow_mut();
+            for (bs, ix) in BLOCK_SIZES.iter().zip(indexes) {
+                ix.retrieve_into(buckets, *k, &mut s);
+                if s.hits() != want.as_slice() {
+                    return Err(format!(
+                        "corpus {corpus} bs={bs} k={k}: {} hits != reference {}",
+                        s.hits().len(),
+                        want.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// AND-retrieval differential: the block-skipping leapfrog intersection
+/// must equal a straightforward retain/binary-search intersection, and
+/// respect its candidate limit.
 #[test]
 fn prop_galloping_intersection_matches_naive() {
     use gaps::corpus::{CorpusGenerator, CorpusSpec};
@@ -190,10 +256,13 @@ fn prop_galloping_intersection_matches_naive() {
         &prop_cfg(300),
         |rng, size| {
             let n = rng.range(1, size.max(2).min(6));
-            (0..n).map(|_| rng.below(FEATURES as u64) as u32).collect::<Vec<u32>>()
+            let buckets: Vec<u32> =
+                (0..n).map(|_| rng.below(FEATURES as u64) as u32).collect();
+            let limit = rng.range(1, 400);
+            (buckets, limit)
         },
-        |buckets| {
-            let got = shard.inverted.retrieve_all(buckets);
+        |(buckets, limit)| {
+            let got = shard.inverted.retrieve_all(buckets, *limit);
             // Naive: intersect via per-element binary search.
             let mut uniq = buckets.clone();
             uniq.sort_unstable();
@@ -204,10 +273,15 @@ fn prop_galloping_intersection_matches_naive() {
                 want.retain(|d| list.binary_search(d).is_ok());
             }
             want.sort_unstable();
+            want.truncate(*limit);
             if got == want {
                 Ok(())
             } else {
-                Err(format!("gallop {} docs != naive {} docs", got.len(), want.len()))
+                Err(format!(
+                    "leapfrog {} docs != naive {} docs (limit {limit})",
+                    got.len(),
+                    want.len()
+                ))
             }
         },
     );
