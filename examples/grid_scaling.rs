@@ -1,4 +1,4 @@
-//! End-to-end validation driver (EXPERIMENTS.md §E2E): the paper's full
+//! End-to-end validation driver: the paper's full
 //! evaluation on a real (synthetic-corpus) workload through the production
 //! XLA scoring path.
 //!

@@ -1,4 +1,4 @@
-//! Ablations over the design choices DESIGN.md calls out (not in the
+//! Ablations over the repo's design choices (not in the
 //! paper, but they isolate *why* GAPS wins):
 //!
 //! 1. **Scheduling policy** — perf-history LPT vs blind round-robin on a
@@ -7,7 +7,7 @@
 //! 2. **Resident services** — the globus-container design vs per-job
 //!    cold starts (paper §III.3).
 //! 3. **Query batching** — one q8 artifact execution vs 8 q1 executions
-//!    (the MXU-utilization argument in DESIGN.md §Hardware-Adaptation:
+//!    (the MXU-utilization argument:
 //!    the contraction's MXU rows scale with Q).
 //!
 //! Run: `cargo bench --bench ablations`
@@ -122,6 +122,6 @@ fn batching_ablation() {
     let speedup = unbatched.summary.p50() / batched.summary.p50();
     println!(
         "batching speedup: {speedup:.2}x for 8 queries (MXU rows scale with Q \
-         on real TPUs — see DESIGN.md §Hardware-Adaptation)"
+         on real TPUs)"
     );
 }

@@ -20,6 +20,10 @@
 //!   implementation semantics, kept as `retrieve_reference`);
 //! * **fanout** — end-to-end `search()` wall time at 4 nodes, parallel
 //!   gridpool dispatch vs serial (`workers = 1`);
+//! * **serve** — multi-user closed-loop QPS: 8 concurrent users through
+//!   the admission queue (coalesced `search_batch` rounds on the
+//!   resident gridpool) vs a single closed-loop user, with the
+//!   admission counters (rounds formed, average/largest batch);
 //! * **sweep** — the Fig 3 response-time percentiles;
 //! * **counters** — deterministic block-max pruning counters on a
 //!   *fixed* workload (seeds, sizes, and k are constants — deliberately
@@ -38,7 +42,7 @@
 //!      retrieval changes).
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use gaps::config::GapsConfig;
 use gaps::coordinator::{counters_to_json, Deployment, GapsSystem};
@@ -46,6 +50,7 @@ use gaps::corpus::{CorpusGenerator, CorpusSpec};
 use gaps::index::{RetrievalCounters, RetrievalScratch, Shard};
 use gaps::metrics::{cached_node_sweep, sample_queries};
 use gaps::search::{Query, SearchRequest};
+use gaps::serve::{QueueConfig, QueueStats, SearchServer};
 use gaps::util::bench::Table;
 use gaps::util::json::Json;
 use gaps::util::rng::Rng;
@@ -422,6 +427,109 @@ fn bench_batch(cfg: &GapsConfig) -> Json {
     ])
 }
 
+/// Multi-user closed-loop serving: U concurrent users, each looping over
+/// the query mix and submitting single-query requests through the
+/// admission queue (the executor coalesces co-arrivals into
+/// `search_batch` rounds on the resident gridpool). The paper's
+/// experiment shape — many independent searchers, one always-on grid —
+/// measured as sustained QPS, against a single closed-loop user on the
+/// identical deployment.
+fn bench_serve(cfg: &GapsConfig) -> Json {
+    let nodes = 4usize;
+    let dep = Arc::new(Deployment::build(cfg, nodes).expect("deploy"));
+    // Closed-loop users only submit requests that compile — a sampled
+    // query with no searchable terms would settle as a parse error and
+    // pollute the QPS series.
+    let queries: Vec<String> = sample_queries(&dep, cfg.workload.num_queries.max(16), 0x5E7E)
+        .into_iter()
+        .filter(|q| {
+            SearchRequest::new(q.clone()).compile(cfg.search.features, cfg.search.top_k).is_ok()
+        })
+        .collect();
+    assert!(!queries.is_empty(), "no usable serve queries sampled");
+    let rounds = 3usize;
+
+    let run = |users: usize| -> (f64, QueueStats) {
+        let mut c = cfg.clone();
+        c.search.use_xla = false;
+        let dep = Arc::clone(&dep);
+        // Zero linger: closed-loop users coalesce *naturally* (arrivals
+        // queue up while the executor runs the previous round), and the
+        // solo baseline is not taxed with idle linger latency.
+        let server = SearchServer::start(
+            QueueConfig { max_batch: 16, max_linger: Duration::ZERO },
+            move || GapsSystem::from_deployment(c, dep),
+        )
+        .expect("serve start");
+        let queue = server.queue();
+        // Warm the deployment (pool threads, scratches, page cache).
+        queue.submit(SearchRequest::new(queries[0].clone())).expect("warmup");
+        // Report admission counters for the measured workload only (the
+        // warm-up added one singleton round of its own).
+        let warm = server.stats();
+
+        let t = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..users {
+                let queue = &queue;
+                let queries = &queries;
+                s.spawn(move || {
+                    for _ in 0..rounds {
+                        for q in queries {
+                            queue.submit(SearchRequest::new(q.clone())).expect("serve");
+                        }
+                    }
+                });
+            }
+        });
+        let elapsed = t.elapsed().as_secs_f64();
+        let total = server.stats();
+        server.shutdown();
+        let stats = QueueStats {
+            submitted: total.submitted - warm.submitted,
+            executed: total.executed - warm.executed,
+            batches: total.batches - warm.batches,
+            coalesced: total.coalesced - warm.coalesced,
+            // Max since boot; the size-1 warm-up round cannot hold it.
+            largest_batch: total.largest_batch,
+        };
+        ((users * rounds * queries.len()) as f64 / elapsed.max(1e-12), stats)
+    };
+
+    let (solo_qps, _) = run(1);
+    let users = 8usize;
+    let (multi_qps, stats) = run(users);
+    let avg_batch = stats.executed as f64 / stats.batches.max(1) as f64;
+    println!(
+        "\n== multi-user serving ({} queries x {rounds} rounds, {nodes} nodes) ==\n\
+         1 user   {solo_qps:8.1} qps\n\
+         {users} users  {multi_qps:8.1} qps  (x{:.2})\n\
+         admission: {} rounds for {} requests (avg batch {avg_batch:.1}, \
+         largest {}, {} coalesced)",
+        queries.len(),
+        multi_qps / solo_qps.max(1e-12),
+        stats.batches,
+        stats.executed,
+        stats.largest_batch,
+        stats.coalesced,
+    );
+
+    Json::obj(vec![
+        ("nodes", Json::from(nodes)),
+        ("queries", Json::from(queries.len())),
+        ("rounds", Json::from(rounds)),
+        ("users", Json::from(users)),
+        ("solo_qps", Json::from(solo_qps)),
+        ("multi_qps", Json::from(multi_qps)),
+        ("speedup", Json::from(multi_qps / solo_qps.max(1e-12))),
+        ("admission_batches", Json::from(stats.batches)),
+        ("admission_requests", Json::from(stats.executed)),
+        ("avg_batch", Json::from(avg_batch)),
+        ("largest_batch", Json::from(stats.largest_batch)),
+        ("coalesced", Json::from(stats.coalesced)),
+    ])
+}
+
 fn main() {
     let mut cfg = GapsConfig::default();
     cfg.workload.num_docs = env_usize("GAPS_BENCH_DOCS", 60_000) as u64;
@@ -462,10 +570,12 @@ fn main() {
     print!("{}", t.render());
     t.write_csv("fig3_response_time");
 
-    // Retrieval-core trajectory (micro + fan-out + batch), tracked across PRs.
+    // Retrieval-core trajectory (micro + fan-out + batch + multi-user
+    // serving), tracked across PRs.
     let micro = bench_retrieval_micro(cfg.search.features);
     let fanout = bench_fanout(&cfg);
     let batch = bench_batch(&cfg);
+    let serve = bench_serve(&cfg);
     let micro_speedup = micro.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let fan_speedup = fanout.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let fan_workers = fanout.get("workers").and_then(|v| v.as_i64()).unwrap_or(1);
@@ -486,11 +596,22 @@ fn main() {
             ),
         ),
     ]);
+    // Structural (not wall-clock) serving check: a loaded admission
+    // queue must actually form multi-request rounds. Enforced even on
+    // CI smoke runs — under 8 closed-loop users, singleton-only rounds
+    // mean the queue is broken, not the host noisy.
+    let coalesced = serve.get("coalesced").and_then(|v| v.as_i64()).unwrap_or(0);
+    assert!(
+        coalesced > 0,
+        "8 closed-loop users produced no coalesced rounds — admission queue inert"
+    );
+
     let report = Json::obj(vec![
         ("bench", Json::str("retrieval")),
         ("micro", micro),
         ("fanout", fanout),
         ("batch", batch),
+        ("serve", serve),
         ("sweep", sweep_json),
     ]);
     let path = "BENCH_retrieval.json";

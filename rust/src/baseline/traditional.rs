@@ -17,7 +17,7 @@
 //! Everything else — corpus, analysis, scoring (same AOT artifacts or
 //! rust scorer), merge, and the typed [`SearchRequest`] surface — is
 //! identical to GAPS, so differences are purely coordination. See
-//! DESIGN.md §Substitutions.
+//! ARCHITECTURE.md §Substitutions.
 
 use std::sync::Arc;
 

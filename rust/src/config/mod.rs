@@ -5,7 +5,7 @@
 //! file (`--config file.json`) -> individual CLI flags (`--nodes 8`).
 //! Every knob is documented where it is defined; `GapsConfig::describe()`
 //! dumps the effective config (printed by the launcher at startup, and
-//! recorded in EXPERIMENTS.md runs).
+//! recorded alongside experiment runs).
 
 use crate::util::cli::{Args, CliError};
 use crate::util::json::Json;

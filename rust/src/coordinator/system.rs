@@ -26,9 +26,15 @@
 //! scores are bit-identical to sequential execution (enforced by
 //! `tests/prop_batch_parity.rs`).
 //!
+//! **Fan-out substrate:** node jobs execute on the system's *resident*
+//! gridpool ([`crate::util::pool::Pool::scope_map`]) — workers are
+//! spawned once at deployment and reused for every batch, so a serving
+//! workload (see [`crate::serve`]) pays no per-batch thread spawns and
+//! keeps per-worker retrieval scratches warm across batches.
+//!
 //! Timing: real measured compute (`work_s`, scaled by the node's simulated
 //! speed factor) + accounted fabric costs (`net_s`, `overhead_s`). See
-//! DESIGN.md §Substitutions for why this composition is faithful.
+//! ARCHITECTURE.md §Substitutions for why this composition is faithful.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -43,7 +49,7 @@ use crate::search::{
     SearchService,
 };
 use crate::util::json::Json;
-use crate::util::pool::par_map_scoped;
+use crate::util::pool::Pool;
 
 use crate::util::clock::{TaskTimeline, WallClock};
 
@@ -462,6 +468,13 @@ pub struct GapsSystem {
     containers: BTreeMap<NodeId, crate::grid::ServiceContainer>,
     /// The broker the USI talks to (broker of the first active node's VO).
     root_broker: NodeId,
+    /// Resident gridpool the batch fan-out runs on (`None` when the
+    /// `search.workers` knob resolves to serial dispatch). Long-lived:
+    /// workers — and their thread-local retrieval scratches / packers —
+    /// survive across batches, so a multi-user serving workload pays the
+    /// thread spawn and scratch warm-up once per deployment instead of
+    /// once per batch.
+    pool: Option<Pool>,
 }
 
 impl std::fmt::Debug for GapsSystem {
@@ -509,6 +522,15 @@ impl GapsSystem {
             c.deploy("search-service");
             containers.insert(n, c);
         }
+        // The resident gridpool is sized once from the workers knob; a
+        // serial configuration (workers = 1) keeps dispatch on the
+        // coordinator thread, which the figure sweeps rely on for clean
+        // per-job wall-time measurement. The XLA path serializes through
+        // the coordinator thread regardless (PJRT handles are !Send), so
+        // an executor-backed system skips the pool entirely instead of
+        // parking idle workers.
+        let workers = cfg.search.effective_workers();
+        let pool = (workers > 1 && executor.is_none()).then(|| Pool::new(workers));
         Ok(GapsSystem {
             service: SearchService::new(cfg.search.clone()),
             cfg,
@@ -520,6 +542,7 @@ impl GapsSystem {
             executor,
             containers,
             root_broker,
+            pool,
         })
     }
 
@@ -561,14 +584,36 @@ impl GapsSystem {
     }
 
     /// Execute a request batch: plan once, dispatch one JDF per node
-    /// carrying every query, fan out once, and feed Q>1 rows through the
-    /// scoring path. Results come back in request order; per-request
-    /// failures (e.g. parse errors) do not fail the rest of the batch.
+    /// carrying every query, fan out once over the resident gridpool,
+    /// and feed Q>1 rows through the scoring path. Results come back in
+    /// request order; per-request failures (e.g. parse errors) do not
+    /// fail the rest of the batch.
     ///
     /// Requests with different [`ReplicaPref`]s cannot share an
     /// execution plan; they are planned and fanned out per preference
     /// group (a homogeneous batch — the common case — is exactly one
     /// plan + one fan-out round).
+    ///
+    /// ```
+    /// use gaps::config::GapsConfig;
+    /// use gaps::coordinator::GapsSystem;
+    /// use gaps::search::SearchRequest;
+    ///
+    /// let mut cfg = GapsConfig::default();
+    /// cfg.workload.num_docs = 400;
+    /// cfg.workload.sub_shards = 4;
+    /// cfg.search.use_xla = false;
+    /// let mut sys = GapsSystem::deploy(cfg, 2)?;
+    /// let results = sys.search_batch(&[
+    ///     SearchRequest::new("grid computing"),
+    ///     SearchRequest::new("data retrieval").top_k(3),
+    /// ]);
+    /// assert_eq!(results.len(), 2); // one result per request, in order
+    /// for r in results {
+    ///     assert!(r?.jobs >= 1);
+    /// }
+    /// # Ok::<(), gaps::search::SearchError>(())
+    /// ```
     pub fn search_batch(
         &mut self,
         requests: &[SearchRequest],
@@ -695,14 +740,17 @@ impl GapsSystem {
         }
 
         // ---- Execute every node's job (parallel shard fan-out) --------
-        // Real concurrent work on the gridpool substrate, one round for
-        // the whole batch. Per-job wall time is measured inside each job;
-        // under contention that measurement inflates, so the figure
-        // sweeps pin workers = 1 (see metrics::run_node_sweep) while
-        // serving paths default to all cores.
-        let workers = self.cfg.search.effective_workers().min(flat_jobs.len().max(1));
-        let outputs: Vec<JobOutput> = match self.executor.as_mut() {
-            Some(exec) => {
+        // Real concurrent work on the *resident* gridpool, one round for
+        // the whole batch: jobs are scope-submitted to the long-lived
+        // workers (`Pool::scope_map`), so no threads are spawned per
+        // batch and worker thread-locals (retrieval scratches, packers)
+        // stay warm from batch to batch. Per-job wall time is measured
+        // inside each job; under contention that measurement inflates, so
+        // the figure sweeps pin workers = 1 (see metrics::run_node_sweep,
+        // which leaves `pool` unbuilt) while serving paths default to all
+        // cores.
+        let outputs: Vec<JobOutput> = match (self.executor.as_mut(), self.pool.as_ref()) {
+            (Some(exec), _) => {
                 // PJRT handles are !Send: artifact execution stays on the
                 // coordinator thread (see runtime::mod docs).
                 let mut outs = Vec::with_capacity(flat_jobs.len());
@@ -712,22 +760,22 @@ impl GapsSystem {
                 }
                 outs
             }
-            None if workers <= 1 => {
+            (None, Some(pool)) if flat_jobs.len() > 1 => {
+                let service = &self.service;
+                let dep: &Deployment = &self.dep;
+                let qs = &queries;
+                pool.scope_map(&flat_jobs, |job| {
+                    run_job(service, dep, qs, job, &mut Scorer::Rust)
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>, SearchError>>()?
+            }
+            _ => {
                 let mut outs = Vec::with_capacity(flat_jobs.len());
                 for job in &flat_jobs {
                     outs.push(run_job(&self.service, &self.dep, &queries, job, &mut Scorer::Rust)?);
                 }
                 outs
-            }
-            None => {
-                let service = &self.service;
-                let dep: &Deployment = &self.dep;
-                let qs = &queries;
-                par_map_scoped(&flat_jobs, workers, |job| {
-                    run_job(service, dep, qs, job, &mut Scorer::Rust)
-                })
-                .into_iter()
-                .collect::<Result<Vec<_>, SearchError>>()?
             }
         };
 

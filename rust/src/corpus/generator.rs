@@ -1,6 +1,6 @@
 //! Deterministic synthetic publication generator.
 //!
-//! Structure (per DESIGN.md §Substitutions):
+//! Structure (per ARCHITECTURE.md §Substitutions):
 //! * a domain vocabulary of real CS stems plus generated filler words,
 //!   drawn Zipfian so term frequencies match natural text structure;
 //! * `num_topics` topic distributions; each document mixes 1–3 topics,

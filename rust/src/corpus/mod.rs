@@ -3,7 +3,7 @@
 //! The paper's datasets are "articles collected from different academic
 //! repositories ... open access information about the articles", scaling
 //! to ~10M records — data we do not have, so this module synthesizes an
-//! equivalent workload (DESIGN.md §Substitutions): Zipfian vocabulary,
+//! equivalent workload (ARCHITECTURE.md §Substitutions): Zipfian vocabulary,
 //! topic-mixture titles/abstracts, an author pool with power-law
 //! productivity, venue pools and a year range. Everything is derived
 //! deterministically from a seed, so corpora are reproducible and can be

@@ -2,7 +2,7 @@
 //!
 //! The paper's testbed is 12 physical hosts in 3 Virtual Organizations
 //! running Globus 4.0.2 with a Certificate Authority on each broker. We
-//! reproduce the *behaviourally relevant* parts in-process (DESIGN.md
+//! reproduce the *behaviourally relevant* parts in-process (ARCHITECTURE.md
 //! §Substitutions):
 //!
 //! * heterogeneous node speeds ("the grid nodes have different

@@ -9,7 +9,9 @@
 //!   with its Job Description Files and performance-history scheduling,
 //!   Resource Manager, Data Source Locator, per-node Search Services, and
 //!   the result merger — plus every substrate the paper assumes (grid
-//!   fabric, corpus, text pipeline, inverted index, baseline, metrics).
+//!   fabric, corpus, text pipeline, inverted index, baseline, metrics)
+//!   and the multi-user serving layer ([`serve`]) the paper's workload
+//!   implies.
 //! * **Layer 2 (python/compile/model.py)** — the BM25F candidate-ranking
 //!   compute graph, AOT-lowered to HLO text artifacts at build time.
 //! * **Layer 1 (python/compile/kernels/bm25.py)** — the tiled Pallas
@@ -19,30 +21,42 @@
 //! AOT artifacts through the PJRT C API (`xla` crate) and the Search
 //! Services execute them directly from Rust.
 //!
+//! See `ARCHITECTURE.md` for the paper-component-to-module map and the
+//! request lifecycle, `BENCHMARKS.md` for what the `BENCH_*.json` series
+//! mean, and the repository `README.md` for a quickstart over all three
+//! entry points (CLI, USI REPL, HTTP).
+//!
 //! ## Public search API
 //!
 //! The search surface is typed end to end: build a
 //! [`search::SearchRequest`], execute it through
 //! [`coordinator::GapsSystem::search_request`] (or a whole batch through
 //! [`coordinator::GapsSystem::search_batch`] — one plan, one fan-out
-//! round, Q>1 artifact scoring rows), and branch on the
-//! [`search::SearchError`] taxonomy on failure:
+//! round over the resident gridpool, Q>1 scoring rows), and branch on
+//! the [`search::SearchError`] taxonomy on failure:
 //!
-//! ```no_run
+//! ```
 //! use gaps::config::GapsConfig;
 //! use gaps::coordinator::GapsSystem;
 //! use gaps::search::{Field, ReplicaPref, SearchRequest};
 //!
-//! let mut sys = GapsSystem::deploy(GapsConfig::default(), 12)?;
+//! // Small corpus so this example executes quickly under `cargo test`.
+//! let mut cfg = GapsConfig::default();
+//! cfg.workload.num_docs = 600;
+//! cfg.workload.sub_shards = 6;
+//! cfg.search.use_xla = false; // pure-rust scorer: no artifacts needed
+//!
+//! let mut sys = GapsSystem::deploy(cfg, 3)?;
 //! let resp = sys.search_request(
-//!     &SearchRequest::new("\"grid computing\" scheduling -cloud")
+//!     &SearchRequest::new("grid computing scheduling")
 //!         .top_k(20)
-//!         .year(2010..=2014)
-//!         .require(Field::Title, "grid")
+//!         .year(1995..=2014)
 //!         .prefer_replicas(ReplicaPref::SameVo)
 //!         .explain(true),
 //! )?;
-//! println!("{} hits", resp.hits.len());
+//! assert!(resp.hits.len() <= 20);
+//! assert!(resp.explain.is_some());
+//! # let _ = Field::Title;
 //! # Ok::<(), gaps::search::SearchError>(())
 //! ```
 //!
@@ -51,10 +65,19 @@
 //! operators, `-`/`NOT` negation, parentheses, `field:term` scopes
 //! (title/abstract/authors/venue), and `year:Y` / `year:Y..Y` ranges.
 //! Requests and responses share one JSON wire encoding (`util::json`)
-//! with the Job Description Files the Query Manager ships to nodes.
+//! with the Job Description Files the Query Manager ships to nodes — and
+//! with the HTTP front-end.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-figure reproductions (response time, speedup, efficiency).
+//! ## Serving multiple users
+//!
+//! The [`serve`] module is the always-on front the paper's multi-user
+//! experiment assumes: a [`serve::SearchServer`] owns the deployed
+//! system on a dedicated executor thread, a [`serve::AdmissionQueue`]
+//! coalesces concurrently arriving independent requests into
+//! `search_batch` rounds (results stay bit-identical to serial
+//! execution), and a [`serve::HttpServer`] exposes `POST /search`,
+//! `POST /search_batch` and `GET /healthz` over the shared JSON wire
+//! forms. `gaps serve` is the CLI entry point.
 
 pub mod baseline;
 pub mod config;
@@ -65,6 +88,7 @@ pub mod runtime;
 pub mod search;
 pub mod index;
 pub mod metrics;
+pub mod serve;
 pub mod text;
 pub mod usi;
 pub mod util;

@@ -6,6 +6,8 @@
 //!   one fan-out round, queries separated by a space-padded `/`), print
 //!   results. `--explain` attaches AST + plan diagnostics.
 //! * `repl`              — interactive USI session.
+//! * `serve`             — multi-user HTTP front-end over an admission
+//!   queue (`--addr`, `--max-batch`, `--linger-ms`; see `gaps::serve`).
 //! * `sweep`             — the paper's node sweep (Figs 3/4/5 series).
 //! * `corpus`            — generate a corpus and save shard JSONL files.
 //! * `info`              — show the effective configuration and fabric.
@@ -47,6 +49,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref().unwrap() {
         "search" => cmd_search(&args, cfg),
         "repl" => cmd_repl(&args, cfg),
+        "serve" => cmd_serve(&args, cfg),
         "sweep" => cmd_sweep(&args, cfg),
         "corpus" => cmd_corpus(&args, cfg),
         "info" => cmd_info(cfg),
@@ -62,6 +65,10 @@ fn print_usage() {
            search <query...>   one-shot search (e.g. gaps search grid computing);\n\
                                \" / \" separates a batch, --explain shows AST + plan\n\
            repl                interactive USI session\n\
+           serve               HTTP front-end (POST /search, POST /search_batch,\n\
+                               GET /healthz) over an admission queue that coalesces\n\
+                               concurrent queries; --addr HOST:PORT (default\n\
+                               127.0.0.1:7171), --max-batch N, --linger-ms N\n\
            sweep               node sweep: response time / speedup / efficiency\n\
            corpus --out DIR    generate the corpus as shard JSONL files\n\
            info                print the effective configuration\n\n\
@@ -128,6 +135,31 @@ fn cmd_repl(args: &Args, cfg: GapsConfig) -> Result<()> {
     let mut sys = GapsSystem::deploy(cfg, n)?;
     let stdin = std::io::stdin();
     gaps::usi::repl(&mut sys, stdin.lock(), std::io::stdout())?;
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg: GapsConfig) -> Result<()> {
+    let n = n_nodes(args, &cfg)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7171").to_string();
+    let queue_cfg = gaps::serve::QueueConfig {
+        max_batch: args.get_parse("max-batch", 16usize)?,
+        max_linger: std::time::Duration::from_millis(args.get_parse("linger-ms", 2u64)?),
+    };
+    eprintln!("{}", cfg.describe());
+    eprintln!(
+        "admission queue: max_batch={} max_linger={:?}",
+        queue_cfg.max_batch, queue_cfg.max_linger
+    );
+    // The system deploys on (and never leaves) the executor thread.
+    let server = gaps::serve::SearchServer::start(queue_cfg, move || GapsSystem::deploy(cfg, n))?;
+    let http = gaps::serve::HttpServer::bind(&addr, server.queue())
+        .with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "serving on http://{} — POST /search, POST /search_batch, GET /healthz",
+        http.local_addr()?
+    );
+    http.serve()?; // blocks until killed
+    server.shutdown();
     Ok(())
 }
 

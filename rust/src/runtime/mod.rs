@@ -1,7 +1,7 @@
 //! PJRT runtime: loads the AOT HLO artifacts produced by the python
 //! compile path and executes them from the rust request path.
 //!
-//! Wiring (see /opt/xla-example/load_hlo and DESIGN.md): HLO *text* ->
+//! Wiring (see /opt/xla-example/load_hlo): HLO *text* ->
 //! `HloModuleProto::from_text_file` -> `XlaComputation` -> `PjRtClient::
 //! cpu().compile` -> `execute`. Artifacts are compiled once at startup
 //! and cached; Python never runs at request time.
@@ -11,7 +11,7 @@
 //! artifact executions are serialized through it (the coordinator's
 //! parallel shard fan-out applies to the rust-scorer path only);
 //! node-level parallelism is accounted through the simulated timelines
-//! (DESIGN.md §Substitutions).
+//! (ARCHITECTURE.md §Substitutions).
 //!
 //! Build gating: the real executor needs the `xla` crate, which the
 //! offline crate set may lack — it compiles behind the `xla` feature,

@@ -3,7 +3,7 @@
 //! (shared with the Job Description File, so one serialization crosses
 //! every boundary).
 //!
-//! ```no_run
+//! ```
 //! use gaps::search::{Field, ReplicaPref, SearchRequest};
 //!
 //! let req = SearchRequest::new("grid computing")
@@ -12,7 +12,9 @@
 //!     .require(Field::Title, "grid")
 //!     .prefer_replicas(ReplicaPref::SameVo)
 //!     .explain(true);
-//! # let _ = req;
+//! // One JSON wire form, shared with the JDF and the HTTP front-end:
+//! let wire = req.to_json();
+//! assert_eq!(SearchRequest::from_json(&wire), Some(req));
 //! ```
 
 use crate::text::{terms, Field};

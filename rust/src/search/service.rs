@@ -36,12 +36,11 @@ thread_local! {
     /// Reused retrieval scratch: the block-max WAND merge runs against
     /// this instead of allocating per query. Thread-local (not a
     /// `SearchService` field) because the coordinator fans search jobs
-    /// out over scoped worker threads; each worker reuses its scratch
-    /// across every shard and batched query of one fan-out. Scoped
-    /// workers die with the fan-out, so cross-request reuse only
-    /// happens on serial paths until the resident-pool item on the
-    /// ROADMAP lands (batching already amortizes the respawn across
-    /// the queries of a batch).
+    /// out over the resident gridpool workers (`Pool::scope_map`); each
+    /// worker reuses its scratch across every shard and batched query of
+    /// a fan-out, and — because the pool workers are long-lived — across
+    /// *batches* too: in a multi-user serving workload the scratch warms
+    /// up once per deployment, not once per request round.
     static RETRIEVAL_SCRATCH: RefCell<RetrievalScratch> =
         RefCell::new(RetrievalScratch::new());
 

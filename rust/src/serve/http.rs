@@ -1,0 +1,458 @@
+//! Hand-rolled HTTP/1.1 front-end over the admission queue.
+//!
+//! The offline crate set has no hyper/axum, and the protocol surface the
+//! serving layer needs is tiny, so this is a from-scratch implementation
+//! on `std::net::TcpListener`: request-line + headers + `Content-Length`
+//! body, one response per connection (`Connection: close`). Every body in
+//! and out is the *existing* `util::json` wire form — the same encoding
+//! the Query Manager ships in JDFs — so an HTTP client, the USI, and the
+//! grid's internal serialization all speak one dialect.
+//!
+//! Routes:
+//!
+//! | Route                | Body in                       | Body out |
+//! |----------------------|-------------------------------|----------|
+//! | `POST /search`       | `SearchRequest` JSON          | `SearchResponse` JSON, or `SearchError` JSON with a mapped status |
+//! | `POST /search_batch` | `{"requests": [...]}` (or a bare array) | `{"results": [{"ok": ...} \| {"error": ...}]}` |
+//! | `GET /healthz`       | —                             | `{"status": "ok", "queue": {...}}` (admission counters) |
+//!
+//! Error statuses ([`status_for`]): `parse` → 400; `no-sources`,
+//! `no-nodes`, `no-live-replica` → 503; everything else (server-side
+//! faults) → 500. Protocol-level failures use 404/405/411/413/400 with a
+//! `{"kind", "message"}` body shaped like `SearchError::to_json`.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::search::{SearchError, SearchRequest};
+use crate::util::json::Json;
+
+use super::queue::AdmissionQueue;
+
+/// Largest accepted request body (a request batch of thousands of typed
+/// queries fits comfortably; anything bigger is a client error).
+const MAX_BODY: usize = 1 << 20;
+
+/// Largest accepted request head (request line + headers): a peer
+/// streaming an endless newline-free request line runs into this cap, so
+/// a handler thread's buffers stay bounded. The body has its own
+/// separate [`MAX_BODY`] cap.
+const MAX_HEAD: usize = 16 << 10;
+
+/// HTTP status for a typed search failure. Client-side query problems
+/// are 400s; capacity/availability exhaustion (every replica of some
+/// source down, no live nodes) is 503; internal faults are 500s.
+pub fn status_for(e: &SearchError) -> u16 {
+    match e {
+        SearchError::Parse { .. } => 400,
+        SearchError::NoSources | SearchError::NoNodes | SearchError::NoLiveReplica { .. } => 503,
+        SearchError::SourceUnknown { .. }
+        | SearchError::ExecutorFailure { .. }
+        | SearchError::InvalidConfig { .. }
+        | SearchError::Io { .. }
+        | SearchError::Internal { .. } => 500,
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+/// `{"kind": ..., "message": ...}` — protocol errors share the shape of
+/// `SearchError::to_json` so clients parse one error envelope.
+fn error_body(kind: &str, message: &str) -> Json {
+    Json::obj(vec![("kind", Json::str(kind)), ("message", Json::str(message))])
+}
+
+/// A parsed request: method + path + raw body.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// Read one HTTP/1.1 request. Errors are `(status, message)` pairs ready
+/// to be rendered as an error response.
+fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)> {
+    // The head reads through a MAX_HEAD cap of its own: a head that
+    // never terminates runs into the limit, `read_line` returns the
+    // bounded partial line, and parsing rejects it — memory stays
+    // bounded without the head eating into the body's budget.
+    let mut head = reader.take(MAX_HEAD as u64);
+    let mut line = String::new();
+    head.read_line(&mut line)
+        .map_err(|e| (400u16, format!("reading request line: {e}")))?;
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/1.") => {
+            (m.to_string(), p.to_string())
+        }
+        _ => return Err((400, format!("malformed request line {:?}", line.trim_end()))),
+    };
+
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut header = String::new();
+        head.read_line(&mut header)
+            .map_err(|e| (400u16, format!("reading headers: {e}")))?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = Some(
+                    value
+                        .trim()
+                        .parse()
+                        .map_err(|_| (400u16, format!("bad content-length {value:?}")))?,
+                );
+            }
+        }
+    }
+
+    // Body bytes read from the un-capped inner reader again (the
+    // `read_exact` buffer of `n <= MAX_BODY` bytes is its own bound) so
+    // a header-heavy request cannot starve a legitimate full-size body.
+    let reader = head.into_inner();
+    let body = match content_length {
+        // Only POST carries a body here; other methods (incl. the ones
+        // the router answers with 405) are read body-less so routing,
+        // not framing, decides their status.
+        None if method == "POST" => {
+            return Err((411, "POST requires a Content-Length header".into()))
+        }
+        None => Vec::new(),
+        Some(n) if n > MAX_BODY => {
+            return Err((413, format!("body of {n} bytes exceeds the {MAX_BODY} cap")))
+        }
+        Some(_) if method == "GET" || method == "HEAD" => Vec::new(),
+        Some(n) => {
+            let mut body = vec![0u8; n];
+            reader
+                .read_exact(&mut body)
+                .map_err(|e| (400u16, format!("reading {n}-byte body: {e}")))?;
+            body
+        }
+    };
+    Ok(HttpRequest { method, path, body })
+}
+
+fn parse_body_json(body: &[u8]) -> Result<Json, (u16, String)> {
+    let text = std::str::from_utf8(body).map_err(|_| (400u16, "body is not UTF-8".to_string()))?;
+    Json::parse(text).map_err(|e| (400, format!("body is not valid JSON: {e}")))
+}
+
+/// Requests of `POST /search_batch`: `{"requests": [...]}` or a bare
+/// array of request objects.
+fn parse_batch(v: &Json) -> Result<Vec<SearchRequest>, (u16, String)> {
+    let items = v
+        .get("requests")
+        .and_then(Json::as_arr)
+        .or_else(|| v.as_arr())
+        .ok_or_else(|| (400u16, "expected {\"requests\": [...]} or a JSON array".to_string()))?;
+    items
+        .iter()
+        .enumerate()
+        .map(|(i, item)| {
+            SearchRequest::from_json(item)
+                .ok_or_else(|| (400, format!("requests[{i}] is not a search request")))
+        })
+        .collect()
+}
+
+/// Route one request to a `(status, body)` pair. Pure apart from the
+/// admission-queue interaction, so the protocol is unit-testable.
+fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (
+            200,
+            Json::obj(vec![
+                ("status", Json::str("ok")),
+                ("queue", queue.stats().to_json()),
+            ]),
+        ),
+        ("POST", "/search") => {
+            let parsed = parse_body_json(&req.body).and_then(|v| {
+                SearchRequest::from_json(&v)
+                    .ok_or_else(|| (400, "body is not a search request".to_string()))
+            });
+            match parsed {
+                Ok(request) => match queue.submit(request) {
+                    Ok(resp) => (200, resp.to_json()),
+                    Err(e) => (status_for(&e), e.to_json()),
+                },
+                Err((status, msg)) => (status, error_body("bad-request", &msg)),
+            }
+        }
+        ("POST", "/search_batch") => {
+            match parse_body_json(&req.body).and_then(|v| parse_batch(&v)) {
+                Ok(requests) => {
+                    let results = queue
+                        .submit_batch(requests)
+                        .into_iter()
+                        .map(|r| match r {
+                            Ok(resp) => Json::obj(vec![("ok", resp.to_json())]),
+                            Err(e) => Json::obj(vec![("error", e.to_json())]),
+                        })
+                        .collect();
+                    (200, Json::obj(vec![("results", Json::Arr(results))]))
+                }
+                Err((status, msg)) => (status, error_body("bad-request", &msg)),
+            }
+        }
+        (_, "/healthz" | "/search" | "/search_batch") => (
+            405,
+            error_body("method-not-allowed", &format!("{} not allowed here", req.method)),
+        ),
+        (_, path) => (404, error_body("not-found", &format!("no route {path}"))),
+    }
+}
+
+fn write_response(stream: &mut impl Write, status: u16, body: &Json) -> io::Result<()> {
+    let body = body.to_string_compact();
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn handle_connection(stream: TcpStream, queue: &AdmissionQueue) -> io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let (status, body) = match read_request(&mut reader) {
+        Ok(req) => respond(&req, queue),
+        Err((status, msg)) => (status, error_body("bad-request", &msg)),
+    };
+    let mut writer = stream;
+    write_response(&mut writer, status, &body)
+}
+
+/// The HTTP listener: accepts connections and serves each on its own
+/// thread (handlers block on the admission queue while their round
+/// coalesces — cheap OS threads are exactly right for that).
+pub struct HttpServer {
+    listener: TcpListener,
+    queue: Arc<AdmissionQueue>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Handle for stopping a running [`HttpServer::serve`] loop from another
+/// thread.
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ShutdownHandle {
+    /// Stop the accept loop (idempotent). Wakes the blocking `accept`
+    /// with a throwaway local connection.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl HttpServer {
+    /// Bind the front-end. `addr` may use port 0 for an ephemeral port
+    /// (see [`HttpServer::local_addr`]).
+    pub fn bind(addr: &str, queue: Arc<AdmissionQueue>) -> io::Result<HttpServer> {
+        Ok(HttpServer {
+            listener: TcpListener::bind(addr)?,
+            queue,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (the real port when bound with port 0).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// A handle that stops [`HttpServer::serve`] from another thread.
+    pub fn shutdown_handle(&self) -> io::Result<ShutdownHandle> {
+        Ok(ShutdownHandle { stop: Arc::clone(&self.stop), addr: self.local_addr()? })
+    }
+
+    /// Accept loop: blocks until [`ShutdownHandle::stop`] is called.
+    /// Connection handlers run on per-connection threads; accept errors
+    /// are skipped after a short backoff (a persistent failure such as
+    /// fd exhaustion must not busy-spin the acceptor at 100% CPU while
+    /// the very handlers holding the fds try to finish).
+    pub fn serve(self) -> io::Result<()> {
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(stream) => stream,
+                Err(_) => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    continue;
+                }
+            };
+            let queue = Arc::clone(&self.queue);
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, &queue);
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::queue::QueueConfig;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<HttpRequest, (u16, String)> {
+        read_request(&mut Cursor::new(raw.as_bytes()))
+    }
+
+    #[test]
+    fn parses_get_and_post() {
+        let get = parse("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(get.method, "GET");
+        assert_eq!(get.path, "/healthz");
+        assert!(get.body.is_empty());
+
+        let post = parse(
+            "POST /search HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 17\r\n\r\n{\"query\": \"grid\"}",
+        )
+        .unwrap();
+        assert_eq!(post.method, "POST");
+        assert_eq!(std::str::from_utf8(&post.body).unwrap(), "{\"query\": \"grid\"}");
+    }
+
+    #[test]
+    fn content_length_is_case_insensitive() {
+        let post =
+            parse("POST /search HTTP/1.1\r\ncontent-length: 2\r\n\r\nok").unwrap();
+        assert_eq!(post.body, b"ok");
+    }
+
+    #[test]
+    fn post_without_length_is_411() {
+        let err = parse("POST /search HTTP/1.1\r\n\r\n{}").unwrap_err();
+        assert_eq!(err.0, 411);
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let err = parse(&format!(
+            "POST /search HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        ))
+        .unwrap_err();
+        assert_eq!(err.0, 413);
+    }
+
+    #[test]
+    fn garbage_request_line_is_400() {
+        assert_eq!(parse("nonsense\r\n\r\n").unwrap_err().0, 400);
+        assert_eq!(parse("GET /x SPDY/9\r\n\r\n").unwrap_err().0, 400);
+        assert_eq!(
+            parse("POST /x HTTP/1.1\r\nContent-Length: soon\r\n\r\n").unwrap_err().0,
+            400
+        );
+    }
+
+    #[test]
+    fn endless_request_line_is_bounded_and_rejected() {
+        // A newline-free head longer than the total read cap must be
+        // cut off at the cap and rejected, not buffered without bound.
+        let raw = "A".repeat(MAX_HEAD + MAX_BODY + 4096);
+        let err = parse(&raw).unwrap_err();
+        assert_eq!(err.0, 400);
+    }
+
+    #[test]
+    fn truncated_body_is_400() {
+        let err =
+            parse("POST /search HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort").unwrap_err();
+        assert_eq!(err.0, 400);
+    }
+
+    #[test]
+    fn status_mapping_is_total_and_documented() {
+        // The README table and this mapping must agree.
+        assert_eq!(status_for(&SearchError::parse("x")), 400);
+        assert_eq!(status_for(&SearchError::NoSources), 503);
+        assert_eq!(status_for(&SearchError::NoNodes), 503);
+        assert_eq!(status_for(&SearchError::NoLiveReplica { source: 1 }), 503);
+        assert_eq!(status_for(&SearchError::SourceUnknown { source: 1 }), 500);
+        assert_eq!(status_for(&SearchError::executor("x")), 500);
+        assert_eq!(status_for(&SearchError::config("x")), 500);
+        assert_eq!(status_for(&SearchError::Io { message: "x".into() }), 500);
+        assert_eq!(status_for(&SearchError::internal("x")), 500);
+    }
+
+    #[test]
+    fn healthz_and_unknown_routes_without_executor() {
+        // Routes that never touch the executor are fully testable here.
+        let queue = AdmissionQueue::new(QueueConfig::default());
+        let get = |method: &str, path: &str| HttpRequest {
+            method: method.into(),
+            path: path.into(),
+            body: Vec::new(),
+        };
+        let (status, body) = respond(&get("GET", "/healthz"), &queue);
+        assert_eq!(status, 200);
+        assert_eq!(body.get("status").unwrap().as_str(), Some("ok"));
+        assert!(body.get("queue").unwrap().get("submitted").is_some());
+
+        assert_eq!(respond(&get("GET", "/nope"), &queue).0, 404);
+        assert_eq!(respond(&get("DELETE", "/search"), &queue).0, 405);
+        assert_eq!(respond(&get("POST", "/healthz"), &queue).0, 405);
+    }
+
+    #[test]
+    fn malformed_search_bodies_are_400_without_executor() {
+        let queue = AdmissionQueue::new(QueueConfig::default());
+        let post = |path: &str, body: &str| HttpRequest {
+            method: "POST".into(),
+            path: path.into(),
+            body: body.as_bytes().to_vec(),
+        };
+        assert_eq!(respond(&post("/search", "not json"), &queue).0, 400);
+        assert_eq!(respond(&post("/search", "{\"no_query\": 1}"), &queue).0, 400);
+        assert_eq!(respond(&post("/search_batch", "{\"requests\": [7]}"), &queue).0, 400);
+        assert_eq!(respond(&post("/search_batch", "17"), &queue).0, 400);
+    }
+
+    #[test]
+    fn batch_parse_accepts_both_shapes() {
+        let wrapped =
+            Json::parse("{\"requests\": [{\"query\": \"a\"}, {\"query\": \"b\"}]}").unwrap();
+        assert_eq!(parse_batch(&wrapped).unwrap().len(), 2);
+        let bare = Json::parse("[{\"query\": \"a\"}]").unwrap();
+        assert_eq!(parse_batch(&bare).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn response_writer_emits_valid_http() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, &Json::obj(vec![("a", Json::from(1i64))])).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 7\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"a\":1}"), "{text}");
+    }
+}

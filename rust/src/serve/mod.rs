@@ -1,0 +1,194 @@
+//! The multi-user serving layer: resident system + admission-queue
+//! batching + HTTP front-end.
+//!
+//! The paper's experiment is a *multi-user* workload — concurrent
+//! searchers hitting grid services that are loaded once and stay
+//! resident. This module is that always-on front:
+//!
+//! ```text
+//! users ──HTTP──> HttpServer ──submit──> AdmissionQueue ──rounds──> executor thread
+//!   (per-conn threads)        (coalesces co-arrivals)        (owns the GapsSystem,
+//!                                                             calls search_batch)
+//! ```
+//!
+//! * [`AdmissionQueue`] coalesces concurrently arriving independent
+//!   requests into `search_batch` rounds (tunable [`QueueConfig`]:
+//!   max batch size, max linger; deterministic FIFO drain). Results are
+//!   bit-identical to serial execution — coalescing is purely a
+//!   throughput play (`tests/prop_serve_parity.rs`).
+//! * [`SearchServer`] owns the executor thread. The [`GapsSystem`] is
+//!   **built on and never leaves** that thread (the deploy closure runs
+//!   there), which keeps the design compatible with thread-pinned
+//!   scoring runtimes (PJRT handles are `!Send`).
+//! * [`HttpServer`] is a thin `std::net` HTTP/1.1 front speaking the
+//!   existing `util::json` wire forms on `POST /search`,
+//!   `POST /search_batch` and `GET /healthz` (see [`http`]).
+//!
+//! The `gaps serve` subcommand wires all three together; embedders can
+//! use the pieces directly:
+//!
+//! ```
+//! use std::time::Duration;
+//! use gaps::config::GapsConfig;
+//! use gaps::coordinator::GapsSystem;
+//! use gaps::search::SearchRequest;
+//! use gaps::serve::{QueueConfig, SearchServer};
+//!
+//! let mut cfg = GapsConfig::default();
+//! cfg.workload.num_docs = 400;
+//! cfg.workload.sub_shards = 4;
+//! cfg.search.use_xla = false;
+//! let server = SearchServer::start(
+//!     QueueConfig { max_batch: 8, max_linger: Duration::from_millis(1) },
+//!     move || GapsSystem::deploy(cfg, 3),
+//! )?;
+//! let resp = server.queue().submit(SearchRequest::new("grid computing"))?;
+//! assert!(resp.response_s() > 0.0);
+//! server.shutdown();
+//! # Ok::<(), gaps::search::SearchError>(())
+//! ```
+
+pub mod http;
+pub mod queue;
+
+pub use http::{status_for, HttpServer, ShutdownHandle};
+pub use queue::{AdmissionQueue, AdmittedBatch, QueueConfig, QueueStats, ResponseTicket};
+
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use crate::coordinator::GapsSystem;
+use crate::search::SearchError;
+
+/// A running serving layer: admission queue + the executor thread that
+/// owns the deployed [`GapsSystem`].
+///
+/// Dropping (or [`SearchServer::shutdown`]) closes the queue, drains
+/// pending rounds, and joins the executor.
+pub struct SearchServer {
+    queue: Arc<AdmissionQueue>,
+    executor: Option<thread::JoinHandle<()>>,
+}
+
+impl SearchServer {
+    /// Boot the serving layer. `deploy` runs **on the executor thread**
+    /// and builds the system that will answer every round — so the
+    /// system never has to be `Send`, and deployment cost (corpus
+    /// analysis, index builds, pool spawn) is paid exactly once for the
+    /// server's lifetime. A deploy failure is returned here, not hidden
+    /// in the executor.
+    pub fn start<F>(cfg: QueueConfig, deploy: F) -> Result<SearchServer, SearchError>
+    where
+        F: FnOnce() -> Result<GapsSystem, SearchError> + Send + 'static,
+    {
+        let queue = Arc::new(AdmissionQueue::new(cfg));
+        let exec_queue = Arc::clone(&queue);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), SearchError>>();
+        let executor = thread::Builder::new()
+            .name("gaps-serve-exec".into())
+            .spawn(move || match deploy() {
+                Ok(mut sys) => {
+                    let _ = ready_tx.send(Ok(()));
+                    queue::run(&exec_queue, &mut sys);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            })?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(SearchServer { queue, executor: Some(executor) }),
+            Ok(Err(e)) => {
+                let _ = executor.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = executor.join();
+                Err(SearchError::internal("serve executor died during deployment"))
+            }
+        }
+    }
+
+    /// The admission queue (share it with front-ends / submitters).
+    pub fn queue(&self) -> Arc<AdmissionQueue> {
+        Arc::clone(&self.queue)
+    }
+
+    /// Admission counters snapshot.
+    pub fn stats(&self) -> QueueStats {
+        self.queue.stats()
+    }
+
+    /// Close the queue, drain pending rounds, join the executor.
+    pub fn shutdown(mut self) {
+        self.finish();
+    }
+
+    fn finish(&mut self) {
+        self.queue.shutdown();
+        if let Some(handle) = self.executor.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for SearchServer {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GapsConfig;
+    use crate::search::SearchRequest;
+    use std::time::Duration;
+
+    fn small_cfg() -> GapsConfig {
+        let mut cfg = GapsConfig::default();
+        cfg.workload.num_docs = 400;
+        cfg.workload.sub_shards = 4;
+        cfg.search.use_xla = false;
+        cfg
+    }
+
+    #[test]
+    fn server_answers_submissions() {
+        let cfg = small_cfg();
+        let server = SearchServer::start(
+            QueueConfig { max_batch: 4, max_linger: Duration::ZERO },
+            move || GapsSystem::deploy(cfg, 3),
+        )
+        .unwrap();
+        let resp = server.queue().submit(SearchRequest::new("grid computing")).unwrap();
+        assert!(resp.jobs >= 1);
+        let err = server.queue().submit(SearchRequest::new("the of and")).unwrap_err();
+        assert_eq!(err.kind(), "parse");
+        let stats = server.stats();
+        assert_eq!(stats.submitted, 2);
+        assert_eq!(stats.executed, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn deploy_failure_surfaces_at_start() {
+        let mut cfg = small_cfg();
+        cfg.workload.num_docs = 1; // corpus too small for its sub-shards
+        let err = SearchServer::start(QueueConfig::default(), move || {
+            GapsSystem::deploy(cfg, 3)
+        })
+        .unwrap_err();
+        assert_eq!(err.kind(), "invalid-config");
+    }
+
+    #[test]
+    fn shutdown_rejects_new_submissions() {
+        let cfg = small_cfg();
+        let server =
+            SearchServer::start(QueueConfig::default(), move || GapsSystem::deploy(cfg, 2))
+                .unwrap();
+        let queue = server.queue();
+        server.shutdown();
+        assert!(queue.submit(SearchRequest::new("grid")).is_err());
+    }
+}

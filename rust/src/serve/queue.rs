@@ -1,0 +1,493 @@
+//! Admission queue: coalesces concurrently arriving, independent
+//! [`SearchRequest`]s into one `search_batch` call.
+//!
+//! This is the paper's multi-user workload expressed on the typed search
+//! surface: many users submit single queries, the grid executes *rounds*.
+//! PR 2's batching made one round cheap for Q queries (one plan, one JDF
+//! per node, one fan-out); the admission queue is the front that turns
+//! independent concurrent submissions into such rounds.
+//!
+//! Mechanics: submitters enqueue `(request, reply slot)` pairs under one
+//! mutex — arrival order is the lock acquisition order and is the
+//! **deterministic drain order**. A single executor (the thread that owns
+//! the `GapsSystem`) pops batches with [`AdmissionQueue::next_batch`]:
+//! it waits for the first pending request, then *lingers* up to
+//! [`QueueConfig::max_linger`] past that request's arrival for
+//! co-arrivals (or until [`QueueConfig::max_batch`] are waiting), then
+//! drains FIFO. Coalescing changes *when* work happens, never *what* is
+//! returned: batch execution is bit-identical to sequential execution
+//! (`tests/prop_batch_parity.rs`), so a coalesced user observes exactly
+//! the hits a dedicated system would have produced
+//! (`tests/prop_serve_parity.rs`).
+//!
+//! [`QueueStats`] counts admissions/batches/coalesced requests; the HTTP
+//! front-end exposes them on `GET /healthz` so coalescing is observable
+//! from outside.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{GapsSystem, SearchResponse};
+use crate::search::{SearchError, SearchRequest};
+use crate::util::json::Json;
+
+/// Coalescing knobs (the `gaps serve` CLI exposes both).
+#[derive(Debug, Clone, Copy)]
+pub struct QueueConfig {
+    /// Most requests coalesced into one `search_batch` call (>= 1).
+    pub max_batch: usize,
+    /// How long a drain waits past the oldest pending request's arrival
+    /// for co-arriving requests. Zero means "drain whatever is queued
+    /// the moment the executor looks".
+    pub max_linger: Duration,
+}
+
+impl Default for QueueConfig {
+    fn default() -> QueueConfig {
+        QueueConfig { max_batch: 16, max_linger: Duration::from_millis(2) }
+    }
+}
+
+/// Deterministic admission counters (exposed via `GET /healthz`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Requests handed to the executor (== `submitted` once drained).
+    pub executed: u64,
+    /// `search_batch` rounds the executor ran.
+    pub batches: u64,
+    /// Requests that shared their round with at least one other request
+    /// — the observable evidence of coalescing.
+    pub coalesced: u64,
+    /// Largest round drained so far.
+    pub largest_batch: u64,
+}
+
+impl QueueStats {
+    /// JSON form (the `/healthz` `queue` object).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::from(self.submitted)),
+            ("executed", Json::from(self.executed)),
+            ("batches", Json::from(self.batches)),
+            ("coalesced", Json::from(self.coalesced)),
+            ("largest_batch", Json::from(self.largest_batch)),
+        ])
+    }
+}
+
+/// One enqueued request plus its way back to the submitter.
+struct Pending {
+    request: SearchRequest,
+    arrived: Instant,
+    reply: mpsc::Sender<Result<SearchResponse, SearchError>>,
+}
+
+struct Inner {
+    pending: VecDeque<Pending>,
+    /// `false` after [`AdmissionQueue::shutdown`]: new submissions are
+    /// rejected; already-pending requests still drain.
+    open: bool,
+    stats: QueueStats,
+}
+
+/// The multi-user admission front over one executor-owned [`GapsSystem`].
+///
+/// Shared (`Arc`) between any number of submitting threads (HTTP
+/// handlers, bench users) and exactly one executor loop ([`run`]).
+pub struct AdmissionQueue {
+    cfg: QueueConfig,
+    inner: Mutex<Inner>,
+    /// Signaled on every enqueue and on shutdown.
+    arrived: Condvar,
+}
+
+/// A submitted request's pending response.
+pub struct ResponseTicket {
+    rx: mpsc::Receiver<Result<SearchResponse, SearchError>>,
+}
+
+impl ResponseTicket {
+    /// Block until the coalesced round containing this request ran.
+    pub fn wait(self) -> Result<SearchResponse, SearchError> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(SearchError::internal("serve executor is gone")))
+    }
+}
+
+/// A drained round: requests in deterministic (arrival) order.
+pub struct AdmittedBatch {
+    requests: Vec<SearchRequest>,
+    replies: Vec<mpsc::Sender<Result<SearchResponse, SearchError>>>,
+}
+
+impl AdmittedBatch {
+    /// The round's requests, in drain order.
+    pub fn requests(&self) -> &[SearchRequest] {
+        &self.requests
+    }
+
+    /// Deliver the round's results (one per request, same order).
+    /// Disconnected submitters (e.g. a dropped HTTP connection) are
+    /// skipped silently.
+    pub fn complete(self, results: Vec<Result<SearchResponse, SearchError>>) {
+        debug_assert_eq!(self.replies.len(), results.len(), "one result per admitted request");
+        for (reply, result) in self.replies.into_iter().zip(results) {
+            let _ = reply.send(result);
+        }
+    }
+}
+
+impl AdmissionQueue {
+    /// An open queue. `max_batch` is clamped up to 1.
+    pub fn new(mut cfg: QueueConfig) -> AdmissionQueue {
+        cfg.max_batch = cfg.max_batch.max(1);
+        AdmissionQueue {
+            cfg,
+            inner: Mutex::new(Inner {
+                pending: VecDeque::new(),
+                open: true,
+                stats: QueueStats::default(),
+            }),
+            arrived: Condvar::new(),
+        }
+    }
+
+    /// The configured coalescing knobs.
+    pub fn config(&self) -> QueueConfig {
+        self.cfg
+    }
+
+    /// Snapshot of the admission counters.
+    pub fn stats(&self) -> QueueStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Enqueue one request without blocking for its result.
+    pub fn enqueue(&self, request: SearchRequest) -> ResponseTicket {
+        self.enqueue_all(vec![request]).pop().expect("one ticket per request")
+    }
+
+    /// Enqueue several requests atomically (they occupy consecutive
+    /// drain positions). Used by `POST /search_batch` so a user-provided
+    /// batch cannot be interleaved with other users' requests.
+    pub fn enqueue_all(&self, requests: Vec<SearchRequest>) -> Vec<ResponseTicket> {
+        let mut tickets = Vec::with_capacity(requests.len());
+        let mut inner = self.inner.lock().unwrap();
+        let arrived = Instant::now();
+        for request in requests {
+            let (tx, rx) = mpsc::channel();
+            if inner.open {
+                inner.stats.submitted += 1;
+                inner.pending.push_back(Pending { request, arrived, reply: tx });
+            } else {
+                // Reject after shutdown: settle the ticket immediately.
+                let _ = tx.send(Err(SearchError::internal("admission queue is shut down")));
+            }
+            tickets.push(ResponseTicket { rx });
+        }
+        drop(inner);
+        self.arrived.notify_all();
+        tickets
+    }
+
+    /// Submit one request and block until its coalesced round ran.
+    pub fn submit(&self, request: SearchRequest) -> Result<SearchResponse, SearchError> {
+        self.enqueue(request).wait()
+    }
+
+    /// Submit a pre-formed batch and block for all of its results
+    /// (request order preserved).
+    pub fn submit_batch(
+        &self,
+        requests: Vec<SearchRequest>,
+    ) -> Vec<Result<SearchResponse, SearchError>> {
+        self.enqueue_all(requests).into_iter().map(ResponseTicket::wait).collect()
+    }
+
+    /// Executor side: block for the next coalesced round. Returns `None`
+    /// once the queue is shut down *and* drained — the executor's signal
+    /// to exit.
+    pub fn next_batch(&self) -> Option<AdmittedBatch> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.pending.is_empty() {
+                break;
+            }
+            if !inner.open {
+                return None;
+            }
+            inner = self.arrived.wait(inner).unwrap();
+        }
+
+        // Linger for co-arrivals: up to `max_linger` past the *oldest*
+        // pending request's arrival (a request never waits longer than
+        // the linger budget, even if the executor was busy), or until a
+        // full round is waiting.
+        let deadline = inner.pending.front().expect("pending nonempty").arrived
+            + self.cfg.max_linger;
+        while inner.open && inner.pending.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) =
+                self.arrived.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+
+        let n = inner.pending.len().min(self.cfg.max_batch);
+        let mut requests = Vec::with_capacity(n);
+        let mut replies = Vec::with_capacity(n);
+        for p in inner.pending.drain(..n) {
+            requests.push(p.request);
+            replies.push(p.reply);
+        }
+        inner.stats.batches += 1;
+        inner.stats.executed += n as u64;
+        if n >= 2 {
+            inner.stats.coalesced += n as u64;
+        }
+        inner.stats.largest_batch = inner.stats.largest_batch.max(n as u64);
+        Some(AdmittedBatch { requests, replies })
+    }
+
+    /// Close the queue: new submissions are rejected, pending requests
+    /// still drain, and [`AdmissionQueue::next_batch`] returns `None`
+    /// once they have.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().open = false;
+        self.arrived.notify_all();
+    }
+
+    /// Executor-death path: close the queue AND fail every pending
+    /// request immediately — nothing is left to run them, so letting
+    /// them drain (or letting submitters block forever on tickets whose
+    /// senders sit in the dead queue) would hang every client.
+    fn abort(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.open = false;
+        for p in inner.pending.drain(..) {
+            let _ = p.reply.send(Err(SearchError::internal("serve executor terminated")));
+        }
+        drop(inner);
+        self.arrived.notify_all();
+    }
+}
+
+/// The executor loop: drain coalesced rounds into
+/// [`GapsSystem::search_batch`] until the queue shuts down. Runs on the
+/// thread that owns the system (see [`super::SearchServer`]), so the
+/// system itself never crosses a thread boundary.
+///
+/// However the loop exits — normal shutdown or an unwinding panic from
+/// the system — the queue is closed behind it and any still-pending
+/// requests are failed, so submitters never block on an executor that
+/// no longer exists. (After a clean shutdown-and-drain this is a
+/// no-op.)
+pub fn run(queue: &AdmissionQueue, sys: &mut GapsSystem) {
+    struct AbortOnExit<'a>(&'a AdmissionQueue);
+    impl Drop for AbortOnExit<'_> {
+        fn drop(&mut self) {
+            self.0.abort();
+        }
+    }
+    let _guard = AbortOnExit(queue);
+    while let Some(batch) = queue.next_batch() {
+        let results = sys.search_batch(batch.requests());
+        batch.complete(results);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue(max_batch: usize, linger: Duration) -> AdmissionQueue {
+        AdmissionQueue::new(QueueConfig { max_batch, max_linger: linger })
+    }
+
+    fn req(i: usize) -> SearchRequest {
+        SearchRequest::new(format!("query {i}"))
+    }
+
+    #[test]
+    fn drains_fifo_in_max_batch_chunks() {
+        // 5 queued, max_batch 3 -> rounds of [0,1,2] then [3,4].
+        let q = queue(3, Duration::ZERO);
+        let _tickets: Vec<_> = (0..5).map(|i| q.enqueue(req(i))).collect();
+        let first = q.next_batch().expect("first round");
+        let texts: Vec<&str> = first.requests().iter().map(|r| r.query.as_str()).collect();
+        assert_eq!(texts, ["query 0", "query 1", "query 2"]);
+        let second = q.next_batch().expect("second round");
+        let texts: Vec<&str> = second.requests().iter().map(|r| r.query.as_str()).collect();
+        assert_eq!(texts, ["query 3", "query 4"]);
+        let stats = q.stats();
+        assert_eq!(stats.submitted, 5);
+        assert_eq!(stats.executed, 5);
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.coalesced, 5);
+        assert_eq!(stats.largest_batch, 3);
+    }
+
+    #[test]
+    fn max_batch_one_never_coalesces() {
+        let q = queue(1, Duration::from_secs(60));
+        let _t0 = q.enqueue(req(0));
+        let _t1 = q.enqueue(req(1));
+        // A full round is already waiting, so next_batch must not linger
+        // (the 60s budget would hang the test if it did).
+        for expect in ["query 0", "query 1"] {
+            let b = q.next_batch().expect("round");
+            assert_eq!(b.requests().len(), 1);
+            assert_eq!(b.requests()[0].query, expect);
+        }
+        assert_eq!(q.stats().coalesced, 0);
+        assert_eq!(q.stats().largest_batch, 1);
+    }
+
+    #[test]
+    fn full_round_skips_linger() {
+        // Exactly max_batch pending: the drain must return immediately
+        // even with an hour of linger budget.
+        let q = queue(4, Duration::from_secs(3600));
+        let _tickets: Vec<_> = (0..4).map(|i| q.enqueue(req(i))).collect();
+        let b = q.next_batch().expect("round");
+        assert_eq!(b.requests().len(), 4);
+    }
+
+    #[test]
+    fn zero_linger_drains_what_is_queued() {
+        let q = queue(16, Duration::ZERO);
+        let _t0 = q.enqueue(req(0));
+        let _t1 = q.enqueue(req(1));
+        let b = q.next_batch().expect("round");
+        assert_eq!(b.requests().len(), 2, "both were already queued");
+    }
+
+    #[test]
+    fn expired_linger_drains_immediately() {
+        // The linger window is anchored at the oldest *arrival*: if the
+        // executor shows up late, the deadline is already past.
+        let q = queue(16, Duration::from_millis(200));
+        let _t = q.enqueue(req(0));
+        std::thread::sleep(Duration::from_millis(250));
+        let t = Instant::now();
+        let b = q.next_batch().expect("round");
+        assert_eq!(b.requests().len(), 1);
+        // A buggy drain that anchors the window at drain time would wait
+        // the full 200ms here; the correct one returns at once.
+        assert!(t.elapsed() < Duration::from_millis(150), "lingered past the deadline");
+    }
+
+    #[test]
+    fn linger_collects_late_arrivals() {
+        // A request arriving inside the window joins the round (the
+        // drain waits out the whole window since max_batch stays out of
+        // reach, so keep the window short).
+        let q = AdmissionQueue::new(QueueConfig {
+            max_batch: 8,
+            max_linger: Duration::from_millis(300),
+        });
+        let _t0 = q.enqueue(req(0));
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(20));
+                let _t1 = q.enqueue(req(1));
+            });
+            let b = q.next_batch().expect("round");
+            assert_eq!(b.requests().len(), 2, "late arrival missed the round");
+        });
+    }
+
+    #[test]
+    fn shutdown_drains_then_ends() {
+        let q = queue(2, Duration::ZERO);
+        let _tickets: Vec<_> = (0..3).map(|i| q.enqueue(req(i))).collect();
+        q.shutdown();
+        assert_eq!(q.next_batch().expect("round").requests().len(), 2);
+        assert_eq!(q.next_batch().expect("round").requests().len(), 1);
+        assert!(q.next_batch().is_none(), "drained + closed means None");
+        assert!(q.next_batch().is_none(), "None is sticky");
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        let q = queue(4, Duration::ZERO);
+        q.shutdown();
+        let err = q.submit(req(0)).expect_err("closed queue must reject");
+        assert_eq!(err.kind(), "internal");
+        assert_eq!(q.stats().submitted, 0);
+    }
+
+    #[test]
+    fn complete_settles_tickets_in_order() {
+        let q = queue(8, Duration::ZERO);
+        let tickets: Vec<_> = (0..3).map(|i| q.enqueue(req(i))).collect();
+        let batch = q.next_batch().expect("round");
+        let n = batch.requests().len();
+        // Fabricate per-request outcomes without a deployed system.
+        let results =
+            (0..n).map(|i| Err(SearchError::parse(format!("result {i}")))).collect();
+        batch.complete(results);
+        for (i, t) in tickets.into_iter().enumerate() {
+            let e = t.wait().expect_err("fabricated error result");
+            assert!(e.to_string().contains(&format!("result {i}")), "ticket order broken");
+        }
+    }
+
+    #[test]
+    fn dropped_ticket_does_not_poison_the_round() {
+        let q = queue(8, Duration::ZERO);
+        let t0 = q.enqueue(req(0));
+        let t1 = q.enqueue(req(1));
+        drop(t0); // submitter went away (e.g. closed HTTP connection)
+        let batch = q.next_batch().expect("round");
+        batch.complete(vec![
+            Err(SearchError::parse("a")),
+            Err(SearchError::parse("b")),
+        ]);
+        assert!(t1.wait().is_err(), "surviving ticket still settles");
+    }
+
+    #[test]
+    fn stats_json_carries_all_counters() {
+        let q = queue(4, Duration::ZERO);
+        let _t: Vec<_> = (0..2).map(|i| q.enqueue(req(i))).collect();
+        q.next_batch().expect("round");
+        let j = q.stats().to_json();
+        assert_eq!(j.get("submitted").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("batches").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("coalesced").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("largest_batch").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn abort_fails_pending_and_closes() {
+        // The executor-death path: pending tickets settle with an error
+        // instead of hanging, and the queue stays closed.
+        let q = queue(8, Duration::ZERO);
+        let t0 = q.enqueue(req(0));
+        let t1 = q.enqueue(req(1));
+        q.abort();
+        for t in [t0, t1] {
+            let e = t.wait().expect_err("aborted ticket must fail");
+            assert_eq!(e.kind(), "internal");
+        }
+        assert!(q.next_batch().is_none(), "aborted queue has no rounds");
+        assert!(q.submit(req(2)).is_err(), "aborted queue rejects submissions");
+    }
+
+    #[test]
+    fn max_batch_zero_is_clamped() {
+        let q = queue(0, Duration::ZERO);
+        assert_eq!(q.config().max_batch, 1);
+    }
+}

@@ -11,6 +11,13 @@
 //! [`SearchRequest`]s and report typed [`SearchError`]s. The USI layer is
 //! deliberately thin — its cost is measured by `benches/usi_overhead.rs`
 //! to validate the paper's overhead claim.
+//!
+//! The USI is one of three entry points over the same typed surface: the
+//! CLI/REPL here serve a single interactive user, while the
+//! [`crate::serve`] HTTP front-end serves many concurrent users through
+//! the admission queue (same requests, same JSON wire forms, same
+//! responses — `:batch a | b` in the REPL and two coalesced `POST
+//! /search` calls produce identical hits).
 
 use std::io::{BufRead, Write};
 

@@ -6,8 +6,15 @@
 //! is a plain Mutex<VecDeque> + Condvar job queue; no tokio in the
 //! offline vendored crate set, and the paper's concurrency pattern —
 //! fan out search jobs, join on a barrier — maps directly onto this.
+//!
+//! [`Pool::scope`] is the borrow-friendly submit API: jobs may capture
+//! references into the caller's stack because the scope blocks until
+//! every job has drained. It is what lets the coordinator fan a batch
+//! out over the *resident* gridpool (warm worker thread-locals, no
+//! per-batch thread spawns) instead of `std::thread::scope`.
 
 use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -81,6 +88,52 @@ impl Pool {
         JobHandle { rx }
     }
 
+    /// Run a scope whose jobs may borrow from the caller's stack.
+    ///
+    /// This is the borrow-friendly counterpart of [`par_map_scoped`] on
+    /// the *resident* pool: jobs submitted through the [`PoolScope`] run
+    /// on the long-lived workers (no per-call thread spawns, and worker
+    /// thread-locals — e.g. the Search Service's retrieval scratches —
+    /// stay warm across scopes), yet they may capture non-`'static`
+    /// references because `scope` does not return until every submitted
+    /// job has finished.
+    ///
+    /// If a scoped job panics, the panic is caught on the worker (the
+    /// worker survives and keeps serving the pool) and re-raised from
+    /// `scope` on the submitting thread after the drain.
+    pub fn scope<'env, R>(&self, f: impl FnOnce(&PoolScope<'_, 'env>) -> R) -> R {
+        let scope = PoolScope {
+            pool: self,
+            state: Arc::new(ScopeState::default()),
+            env: PhantomData,
+        };
+        // `scope` is dropped (and its Drop drains) even if `f` panics, so
+        // borrowed data is never freed while a job can still touch it.
+        let result = f(&scope);
+        scope.finish();
+        result
+    }
+
+    /// Run `f` over `items` on the resident pool and collect the results
+    /// in item order. Scoped version of [`Pool::map`]: `items`, `f` and
+    /// the result buffer are borrowed, not moved, so callers keep using
+    /// them afterwards.
+    pub fn scope_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        let mut results: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+        let f = &f; // shared by every job closure (the jobs only need &F)
+        self.scope(|s| {
+            for (item, slot) in items.iter().zip(results.iter_mut()) {
+                s.submit(move || *slot = Some(f(item)));
+            }
+        });
+        results.into_iter().map(|r| r.expect("scoped job finished")).collect()
+    }
+
     /// Run `f` over all items on the pool and collect results in order.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
@@ -110,6 +163,106 @@ impl Drop for Pool {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Progress of one [`Pool::scope`]: outstanding jobs + panic count.
+#[derive(Default)]
+struct ScopeState {
+    progress: Mutex<ScopeProgress>,
+    done: Condvar,
+}
+
+#[derive(Default)]
+struct ScopeProgress {
+    pending: usize,
+    panicked: usize,
+}
+
+impl ScopeState {
+    fn begin(&self) {
+        self.progress.lock().unwrap().pending += 1;
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut p = self.progress.lock().unwrap();
+        p.pending -= 1;
+        if panicked {
+            p.panicked += 1;
+        }
+        if p.pending == 0 {
+            drop(p);
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every submitted job has finished; returns the panic
+    /// count.
+    fn drain(&self) -> usize {
+        let mut p = self.progress.lock().unwrap();
+        while p.pending > 0 {
+            p = self.done.wait(p).unwrap();
+        }
+        p.panicked
+    }
+}
+
+/// Handle for submitting borrow-carrying jobs inside a [`Pool::scope`]
+/// call. `'env` is the lifetime of the data jobs may borrow; the scope
+/// guarantees every job finishes before `'env` data can go away.
+pub struct PoolScope<'pool, 'env> {
+    pool: &'pool Pool,
+    state: Arc<ScopeState>,
+    /// Invariant over `'env` (mirrors `std::thread::Scope`): the borrow
+    /// lifetime must not be shortened behind the scope's back.
+    env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> PoolScope<'_, 'env> {
+    /// Enqueue `job` on the resident workers. The job may borrow `'env`
+    /// data; [`Pool::scope`] blocks until it has run.
+    pub fn submit<F>(&self, job: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.state.begin();
+        let state = Arc::clone(&self.state);
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(job);
+        // SAFETY: the queue requires 'static jobs, but this job only
+        // lives until `scope` returns: both the normal path (`finish`)
+        // and the unwind path (`Drop`) drain the scope before giving
+        // control back to the owner of the `'env` borrows. The panic is
+        // caught so the counter is decremented (and the worker survives)
+        // even when the job unwinds.
+        let job = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'env>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(job)
+        };
+        self.pool.submit(move || {
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            state.complete(outcome.is_err());
+        });
+    }
+
+    /// Drain and propagate job panics (normal exit path). The `Drop`
+    /// drain that follows is a no-op: `pending` is already 0.
+    fn finish(self) {
+        let panicked = self.state.drain();
+        if panicked > 0 {
+            panic!("{panicked} scoped pool job(s) panicked");
+        }
+    }
+}
+
+impl Drop for PoolScope<'_, '_> {
+    fn drop(&mut self) {
+        // Unwind path (the scope closure panicked before `finish`): jobs
+        // still borrow `'env` data further up the unwinding stack, so
+        // block here until they are done. Job panics are swallowed — the
+        // original panic is already propagating.
+        self.state.drain();
     }
 }
 
@@ -149,7 +302,10 @@ impl<T> JobHandle<T> {
 }
 
 /// Scoped parallel map without a resident pool (std::thread::scope):
-/// used where task-local borrows make the 'static pool inconvenient.
+/// spawns fresh threads per call. Retained for one-shot contexts that
+/// have no pool at hand; anything on a request path should prefer
+/// [`Pool::scope`] / [`Pool::scope_map`], which reuse resident workers
+/// (no spawn cost, warm worker thread-locals).
 pub fn par_map_scoped<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -243,6 +399,89 @@ mod tests {
         let empty: Vec<u64> = vec![];
         assert!(par_map_scoped(&empty, 4, |x| *x).is_empty());
         assert_eq!(par_map_scoped(&[7u64], 4, |x| *x + 1), vec![8]);
+    }
+
+    #[test]
+    fn scope_jobs_borrow_caller_stack() {
+        // The whole point of `scope`: jobs write through non-'static
+        // borrows, on resident workers.
+        let pool = Pool::new(4);
+        let items: Vec<u64> = (0..40).collect();
+        let mut out = vec![0u64; items.len()];
+        pool.scope(|s| {
+            for (item, slot) in items.iter().zip(out.iter_mut()) {
+                s.submit(move || *slot = item * 3);
+            }
+        });
+        assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_matches_serial_and_preserves_order() {
+        let pool = Pool::new(3);
+        let items: Vec<u64> = (0..57).collect();
+        let out = pool.scope_map(&items, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+        assert!(pool.scope_map(&[] as &[u64], |x| *x).is_empty());
+        assert_eq!(pool.scope_map(&[7u64], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn scope_drains_before_returning() {
+        // Shutdown-drain: by the time `scope` returns, every job has run
+        // to completion — no job may still touch the borrowed counter.
+        let pool = Pool::new(2);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..16 {
+                let c = &counter;
+                s.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+        // And the pool shuts down cleanly afterwards (Drop joins workers).
+        drop(pool);
+    }
+
+    #[test]
+    fn scope_runs_on_resident_workers() {
+        // Two scopes on a 1-worker pool run on the *same* OS thread —
+        // the residency that keeps per-thread scratches warm.
+        let pool = Pool::new(1);
+        let mut first = None;
+        let mut second = None;
+        pool.scope(|s| {
+            let slot = &mut first;
+            s.submit(move || *slot = Some(std::thread::current().id()));
+        });
+        pool.scope(|s| {
+            let slot = &mut second;
+            s.submit(move || *slot = Some(std::thread::current().id()));
+        });
+        assert_eq!(first.expect("ran"), second.expect("ran"));
+    }
+
+    #[test]
+    fn scope_propagates_job_panic_but_pool_survives() {
+        let pool = Pool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.submit(|| panic!("scoped job boom"));
+            });
+        }));
+        assert!(caught.is_err(), "scope must re-raise the job panic");
+        // Workers caught the unwind and keep serving.
+        assert_eq!(pool.scope_map(&[1u64, 2, 3], |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_scope_returns_value() {
+        let pool = Pool::new(2);
+        let v = pool.scope(|_| 42);
+        assert_eq!(v, 42);
     }
 
     #[test]

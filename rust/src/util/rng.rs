@@ -3,7 +3,7 @@
 //!
 //! Everything in GAPS that involves randomness (corpus synthesis, node
 //! heterogeneity, network jitter, workload generation, property tests) is
-//! seeded through [`Rng`], so every experiment in EXPERIMENTS.md is exactly
+//! seeded through [`Rng`], so every recorded experiment is exactly
 //! reproducible from its recorded seed.
 //!
 //! The generator is xoshiro256** seeded via splitmix64 — tiny, fast, and

@@ -1,0 +1,201 @@
+//! End-to-end HTTP front-end test: bind the full serving stack
+//! (HTTP listener -> admission queue -> executor-owned system) on an
+//! ephemeral port and round-trip real JSON over real sockets.
+//!
+//! CI runs this file as an explicit job step (see
+//! `.github/workflows/ci.yml`) — the serving layer is a release
+//! surface, not an implementation detail.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::{GapsSystem, SearchResponse};
+use gaps::serve::{HttpServer, QueueConfig, SearchServer, ShutdownHandle};
+use gaps::util::json::Json;
+
+fn small_cfg() -> GapsConfig {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 400;
+    cfg.workload.sub_shards = 4;
+    cfg.search.use_xla = false;
+    cfg
+}
+
+/// A full serving stack on an ephemeral port, torn down on drop.
+struct TestStack {
+    addr: SocketAddr,
+    stopper: ShutdownHandle,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    server: Option<SearchServer>,
+}
+
+impl TestStack {
+    fn start(queue_cfg: QueueConfig) -> TestStack {
+        let cfg = small_cfg();
+        let server =
+            SearchServer::start(queue_cfg, move || GapsSystem::deploy(cfg, 3)).unwrap();
+        let http = HttpServer::bind("127.0.0.1:0", server.queue()).unwrap();
+        let addr = http.local_addr().unwrap();
+        let stopper = http.shutdown_handle().unwrap();
+        let accept_thread = std::thread::spawn(move || {
+            http.serve().unwrap();
+        });
+        TestStack { addr, stopper, accept_thread: Some(accept_thread), server: Some(server) }
+    }
+
+    fn stats(&self) -> gaps::serve::QueueStats {
+        self.server.as_ref().unwrap().stats()
+    }
+}
+
+impl Drop for TestStack {
+    fn drop(&mut self) {
+        self.stopper.stop();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+        }
+    }
+}
+
+/// Minimal HTTP/1.1 client: one request, one response, parsed status +
+/// JSON body.
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: gaps-test\r\n");
+    if let Some(body) = body {
+        req.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            body.len()
+        ));
+    }
+    req.push_str("Connection: close\r\n\r\n");
+    if let Some(body) = body {
+        req.push_str(body);
+    }
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("receive");
+
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    (status, Json::parse(body).unwrap_or_else(|e| panic!("bad body {body:?}: {e}")))
+}
+
+#[test]
+fn healthz_reports_queue_counters() {
+    let stack = TestStack::start(QueueConfig::default());
+    let (status, body) = http(stack.addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    assert_eq!(body.get("status").unwrap().as_str(), Some("ok"));
+    let queue = body.get("queue").expect("queue counters");
+    for key in ["submitted", "executed", "batches", "coalesced", "largest_batch"] {
+        assert!(queue.get(key).is_some(), "missing {key}");
+    }
+}
+
+#[test]
+fn search_roundtrips_the_shared_wire_forms() {
+    let stack = TestStack::start(QueueConfig {
+        max_batch: 8,
+        max_linger: Duration::from_millis(1),
+    });
+    let (status, body) = http(
+        stack.addr,
+        "POST",
+        "/search",
+        Some(r#"{"query": "grid computing", "top_k": 5, "explain": true}"#),
+    );
+    assert_eq!(status, 200, "{body:?}");
+    // The response is the *existing* SearchResponse wire form.
+    let resp = SearchResponse::from_json(&body).expect("SearchResponse JSON");
+    assert_eq!(resp.query, "grid computing");
+    assert!(resp.hits.len() <= 5);
+    assert!(resp.jobs >= 1);
+    assert!(resp.explain.is_some(), "explain requested over the wire");
+}
+
+#[test]
+fn search_errors_map_to_statuses() {
+    let stack = TestStack::start(QueueConfig::default());
+    // Parse failure -> 400 with the typed error envelope.
+    let (status, body) =
+        http(stack.addr, "POST", "/search", Some(r#"{"query": "the of and"}"#));
+    assert_eq!(status, 400);
+    assert_eq!(body.get("kind").unwrap().as_str(), Some("parse"));
+    assert!(body.get("message").is_some());
+
+    // Malformed protocol bodies.
+    assert_eq!(http(stack.addr, "POST", "/search", Some("not json")).0, 400);
+    assert_eq!(http(stack.addr, "POST", "/search", Some("{\"q\": 1}")).0, 400);
+
+    // Routing errors.
+    assert_eq!(http(stack.addr, "GET", "/nope", None).0, 404);
+    assert_eq!(http(stack.addr, "DELETE", "/search", None).0, 405);
+}
+
+#[test]
+fn search_batch_settles_every_request() {
+    let stack = TestStack::start(QueueConfig::default());
+    let body = r#"{"requests": [
+        {"query": "grid computing"},
+        {"query": "the of and"},
+        {"query": "data retrieval", "top_k": 2}
+    ]}"#;
+    let (status, body) = http(stack.addr, "POST", "/search_batch", Some(body));
+    assert_eq!(status, 200);
+    let results = body.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 3);
+    assert!(results[0].get("ok").is_some(), "{:?}", results[0]);
+    let err = results[1].get("error").expect("parse error mid-batch");
+    assert_eq!(err.get("kind").unwrap().as_str(), Some("parse"));
+    let third = SearchResponse::from_json(results[2].get("ok").unwrap()).unwrap();
+    assert!(third.hits.len() <= 2);
+}
+
+#[test]
+fn concurrent_http_clients_are_coalesced() {
+    // Generous linger so concurrently arriving HTTP requests land in
+    // shared rounds; the /healthz counters make that observable.
+    let stack = TestStack::start(QueueConfig {
+        max_batch: 16,
+        max_linger: Duration::from_millis(300),
+    });
+    let users = 6;
+    let addr = stack.addr;
+    let barrier = Arc::new(Barrier::new(users));
+    std::thread::scope(|s| {
+        for i in 0..users {
+            let barrier = Arc::clone(&barrier);
+            s.spawn(move || {
+                barrier.wait();
+                let (status, body) = http(
+                    addr,
+                    "POST",
+                    "/search",
+                    Some(&format!(r#"{{"query": "grid data search {i}"}}"#)),
+                );
+                assert_eq!(status, 200, "{body:?}");
+            });
+        }
+    });
+    let stats = stack.stats();
+    assert_eq!(stats.submitted, users as u64);
+    assert_eq!(stats.executed, users as u64);
+    assert!(stats.batches < users as u64, "no coalescing: {stats:?}");
+    assert!(stats.largest_batch >= 2, "no multi-request round: {stats:?}");
+
+    // The counters are also visible over the wire.
+    let (_, health) = http(addr, "GET", "/healthz", None);
+    let batches = health.get("queue").unwrap().get("batches").unwrap().as_i64().unwrap();
+    assert!(batches >= 1);
+}

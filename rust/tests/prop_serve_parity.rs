@@ -1,0 +1,258 @@
+//! Coalesced-vs-serial parity for the serving layer: requests submitted
+//! *concurrently* through the admission queue — and therefore executed
+//! in whatever coalesced rounds the queue forms — must return
+//! bit-identical hits, scores and counters to sequential
+//! `search_request` calls on an identical deployment, and error kinds
+//! must match for invalid requests.
+//!
+//! This extends `prop_batch_parity.rs` one layer up: that test pins
+//! `search_batch == serial`, this one pins `admission queue ==
+//! serial` *including* the queue's timing-dependent round formation —
+//! whatever rounds the linger window happens to form, results must not
+//! depend on them.
+
+use std::sync::{Arc, Barrier, OnceLock};
+use std::time::Duration;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::{Deployment, GapsSystem, SearchResponse};
+use gaps::metrics::sample_queries;
+use gaps::search::{Field, SearchError, SearchRequest};
+use gaps::serve::{QueueConfig, SearchServer};
+use gaps::util::prop::{check, Config};
+use gaps::util::rng::Rng;
+
+fn cfg() -> GapsConfig {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 600;
+    cfg.workload.sub_shards = 8;
+    cfg.search.use_xla = false;
+    cfg
+}
+
+/// One deployment + query pool shared across every case.
+fn fixture() -> &'static (Arc<Deployment>, Vec<String>) {
+    static FIXTURE: OnceLock<(Arc<Deployment>, Vec<String>)> = OnceLock::new();
+    FIXTURE.get_or_init(|| {
+        let dep = Arc::new(Deployment::build(&cfg(), 4).unwrap());
+        let queries = sample_queries(&dep, 24, 0x5E7E_1);
+        (dep, queries)
+    })
+}
+
+#[derive(Debug, Clone)]
+struct ServeCase {
+    requests: Vec<SearchRequest>,
+    max_batch: usize,
+    linger_ms: u64,
+}
+
+fn gen_request(rng: &mut Rng, pool: &[String]) -> SearchRequest {
+    let mut query = pool[rng.range(0, pool.len())].clone();
+    if rng.chance(0.15) {
+        query.push_str(" -zzzyqx");
+    }
+    if rng.chance(0.1) {
+        // Invalid inputs: the queue must ferry error parity too.
+        query = ["", "the of and", "bogus:grid"][rng.range(0, 3)].to_string();
+    }
+    let mut req = SearchRequest::new(query);
+    if rng.chance(0.4) {
+        req = req.top_k(rng.range(1, 12));
+    }
+    if rng.chance(0.2) {
+        let lo = 1998 + rng.below(10) as u32;
+        req = req.year(lo..=lo + 6);
+    }
+    if rng.chance(0.1) {
+        req = req.require(Field::Title, "grid");
+    }
+    if rng.chance(0.15) {
+        req = req.explain(true);
+    }
+    req
+}
+
+fn gen_case(rng: &mut Rng, size: usize) -> ServeCase {
+    let (_, pool) = fixture();
+    let n = rng.range(2, size.clamp(3, 9));
+    ServeCase {
+        requests: (0..n).map(|_| gen_request(rng, pool)).collect(),
+        // Sweep the coalescing shapes: singleton rounds, tight rounds,
+        // everything-in-one-round.
+        max_batch: [1, 2, 3, 16][rng.range(0, 4)],
+        linger_ms: [0, 1, 20][rng.range(0, 3)],
+    }
+}
+
+fn assert_same(
+    i: usize,
+    query: &str,
+    served: &Result<SearchResponse, SearchError>,
+    serial: Result<SearchResponse, SearchError>,
+) -> Result<(), String> {
+    match (served, serial) {
+        (Err(qe), Err(se)) => {
+            if qe.kind() != se.kind() {
+                return Err(format!(
+                    "request {i} {query:?}: served error {} vs serial error {}",
+                    qe.kind(),
+                    se.kind()
+                ));
+            }
+        }
+        (Ok(_), Err(se)) => {
+            return Err(format!("request {i} {query:?}: serial failed ({se}), served ok"));
+        }
+        (Err(qe), Ok(_)) => {
+            return Err(format!("request {i} {query:?}: served failed ({qe}), serial ok"));
+        }
+        (Ok(q), Ok(s)) => {
+            let ids_q: Vec<u64> = q.hits.iter().map(|h| h.global_id).collect();
+            let ids_s: Vec<u64> = s.hits.iter().map(|h| h.global_id).collect();
+            if ids_q != ids_s {
+                return Err(format!("request {i} {query:?}: hits {ids_q:?} != {ids_s:?}"));
+            }
+            for (hq, hs) in q.hits.iter().zip(&s.hits) {
+                if hq.score.to_bits() != hs.score.to_bits() {
+                    return Err(format!(
+                        "request {i} {query:?}: score {} != {} for doc {}",
+                        hq.score, hs.score, hq.global_id
+                    ));
+                }
+            }
+            if q.candidates != s.candidates {
+                return Err(format!(
+                    "request {i} {query:?}: candidates {} != {}",
+                    q.candidates, s.candidates
+                ));
+            }
+            if q.docs_scanned != s.docs_scanned {
+                return Err(format!(
+                    "request {i} {query:?}: docs {} != {}",
+                    q.docs_scanned, s.docs_scanned
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn run_case(case: &ServeCase) -> Result<(), String> {
+    let (dep, _) = fixture();
+
+    // Serving side: executor-owned system over the shared deployment.
+    let dep_for_server = Arc::clone(dep);
+    let server = SearchServer::start(
+        QueueConfig {
+            max_batch: case.max_batch,
+            max_linger: Duration::from_millis(case.linger_ms),
+        },
+        move || GapsSystem::from_deployment(cfg(), dep_for_server),
+    )
+    .map_err(|e| e.to_string())?;
+
+    // Submit every request concurrently: all submitters release together
+    // so the linger window genuinely coalesces co-arrivals.
+    let queue = server.queue();
+    let barrier = Barrier::new(case.requests.len());
+    let mut served: Vec<Option<Result<SearchResponse, SearchError>>> =
+        (0..case.requests.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (req, slot) in case.requests.iter().zip(served.iter_mut()) {
+            let queue = &queue;
+            let barrier = &barrier;
+            s.spawn(move || {
+                barrier.wait();
+                *slot = Some(queue.submit(req.clone()));
+            });
+        }
+    });
+    let stats = server.stats();
+    server.shutdown();
+
+    // Serial oracle on an identical fresh system.
+    let mut serial_sys =
+        GapsSystem::from_deployment(cfg(), Arc::clone(dep)).map_err(|e| e.to_string())?;
+    for (i, (req, served)) in case.requests.iter().zip(&served).enumerate() {
+        let served = served.as_ref().expect("every submitter settled");
+        assert_same(i, &req.query, served, serial_sys.search_request(req))?;
+    }
+
+    // Accounting invariants (round shapes are timing-dependent, totals
+    // are not).
+    if stats.submitted != case.requests.len() as u64 {
+        return Err(format!(
+            "submitted {} != {} requests",
+            stats.submitted,
+            case.requests.len()
+        ));
+    }
+    if stats.executed != stats.submitted {
+        return Err(format!("executed {} != submitted {}", stats.executed, stats.submitted));
+    }
+    if stats.largest_batch > case.max_batch as u64 {
+        return Err(format!(
+            "round of {} exceeded max_batch {}",
+            stats.largest_batch, case.max_batch
+        ));
+    }
+    if case.max_batch == 1 && stats.coalesced != 0 {
+        return Err(format!("max_batch=1 coalesced {} requests", stats.coalesced));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_coalesced_serving_matches_serial_execution() {
+    let prop_cfg = Config { cases: 30, max_size: 9, ..Config::default() };
+    check("serve-serial-parity", &prop_cfg, gen_case, run_case);
+}
+
+/// Deterministic coalescing evidence: with a generous linger window and
+/// concurrent submitters, the queue must actually form multi-request
+/// rounds (the admission counters are the observable), and the results
+/// must still match serial execution.
+#[test]
+fn concurrent_users_are_observably_coalesced() {
+    let (dep, pool) = fixture();
+    let dep_for_server = Arc::clone(dep);
+    let server = SearchServer::start(
+        QueueConfig { max_batch: 16, max_linger: Duration::from_millis(300) },
+        move || GapsSystem::from_deployment(cfg(), dep_for_server),
+    )
+    .unwrap();
+
+    let requests: Vec<SearchRequest> =
+        pool.iter().take(6).map(|q| SearchRequest::new(q.clone())).collect();
+    let queue = server.queue();
+    let barrier = Barrier::new(requests.len());
+    let mut served: Vec<Option<Result<SearchResponse, SearchError>>> =
+        (0..requests.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (req, slot) in requests.iter().zip(served.iter_mut()) {
+            let queue = &queue;
+            let barrier = &barrier;
+            s.spawn(move || {
+                barrier.wait();
+                *slot = Some(queue.submit(req.clone()));
+            });
+        }
+    });
+    let stats = server.stats();
+    server.shutdown();
+
+    // All six arrived inside one 300ms window: strictly fewer rounds
+    // than requests, and at least one round held >= 2 requests.
+    assert_eq!(stats.submitted, 6);
+    assert!(stats.batches < 6, "no coalescing happened: {stats:?}");
+    assert!(stats.coalesced >= 2, "no multi-request round: {stats:?}");
+    assert!(stats.largest_batch >= 2, "{stats:?}");
+
+    let mut serial_sys = GapsSystem::from_deployment(cfg(), Arc::clone(dep)).unwrap();
+    for (i, (req, served)) in requests.iter().zip(&served).enumerate() {
+        let served = served.as_ref().expect("settled");
+        assert_same(i, &req.query, served, serial_sys.search_request(req))
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+}

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo links in markdown files.
+
+Usage: python3 tools/check_links.py README.md ARCHITECTURE.md ...
+
+Checks every inline markdown link `[text](target)`:
+  * external targets (http://, https://, mailto:) are skipped;
+  * pure-anchor targets (#section) are checked against the headings of
+    the same file;
+  * everything else must resolve (relative to the linking file) to an
+    existing file or directory; a #anchor suffix on a .md target is
+    checked against that file's headings.
+
+CI runs this over the top-level docs so refactors cannot silently orphan
+the documentation graph.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def heading_anchors(path: Path) -> set:
+    """GitHub-style anchors for every markdown heading in `path`."""
+    anchors = set()
+    in_code = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code or not line.startswith("#"):
+            continue
+        title = line.lstrip("#").strip()
+        # GitHub slugging: lowercase, drop non-alphanumerics except
+        # spaces/hyphens, spaces -> hyphens.
+        slug = re.sub(r"[^\w\- ]", "", title.lower()).replace(" ", "-")
+        anchors.add(slug)
+    return anchors
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    # Ignore links inside fenced code blocks (curl transcripts etc).
+    stripped = re.sub(r"```.*?```", "", text, flags=re.S)
+    for match in LINK_RE.finditer(stripped):
+        target = match.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:] not in heading_anchors(path):
+                errors.append(f"{path}: broken anchor {target}")
+            continue
+        file_part, _, anchor = target.partition("#")
+        resolved = (path.parent / file_part).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: broken link {target} (missing {resolved})")
+            continue
+        if anchor and resolved.suffix == ".md":
+            if anchor not in heading_anchors(resolved):
+                errors.append(f"{path}: broken anchor {target}")
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors = []
+    for name in argv:
+        path = Path(name)
+        if not path.exists():
+            errors.append(f"{name}: file does not exist")
+            continue
+        errors.extend(check_file(path))
+    for e in errors:
+        print(f"BROKEN: {e}", file=sys.stderr)
+    if not errors:
+        print(f"link check OK: {len(argv)} file(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
