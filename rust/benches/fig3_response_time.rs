@@ -24,6 +24,10 @@
 //!   the admission queue (coalesced `search_batch` rounds on the
 //!   resident gridpool) vs a single closed-loop user, with the
 //!   admission counters (rounds formed, average/largest batch);
+//! * **availability** — fixed-seed chaos schedules replayed against a
+//!   fault-free oracle: success/degraded/error rates and failover retry
+//!   counters, with structural invariants asserted even under
+//!   `GAPS_BENCH_NO_ASSERT`;
 //! * **sweep** — the Fig 3 response-time percentiles;
 //! * **counters** — deterministic block-max pruning counters on a
 //!   *fixed* workload (seeds, sizes, and k are constants — deliberately
@@ -46,6 +50,7 @@ use std::time::{Duration, Instant};
 
 use gaps::config::GapsConfig;
 use gaps::coordinator::{counters_to_json, Deployment, GapsSystem};
+use gaps::fault::ChaosPlan;
 use gaps::corpus::{CorpusGenerator, CorpusSpec};
 use gaps::index::{RetrievalCounters, RetrievalScratch, Shard};
 use gaps::metrics::{cached_node_sweep, sample_queries};
@@ -457,7 +462,7 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
         // queue up while the executor runs the previous round), and the
         // solo baseline is not taxed with idle linger latency.
         let server = SearchServer::start(
-            QueueConfig { max_batch: 16, max_linger: Duration::ZERO },
+            QueueConfig { max_batch: 16, max_linger: Duration::ZERO, ..QueueConfig::default() },
             move || GapsSystem::from_deployment(c, dep),
         )
         .expect("serve start");
@@ -492,6 +497,8 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
             coalesced: total.coalesced - warm.coalesced,
             // Max since boot; the size-1 warm-up round cannot hold it.
             largest_batch: total.largest_batch,
+            shed: total.shed - warm.shed,
+            expired: total.expired - warm.expired,
         };
         ((users * rounds * queries.len()) as f64 / elapsed.max(1e-12), stats)
     };
@@ -527,6 +534,119 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
         ("avg_batch", Json::from(avg_batch)),
         ("largest_batch", Json::from(stats.largest_batch)),
         ("coalesced", Json::from(stats.coalesced)),
+    ])
+}
+
+/// Availability under deterministic chaos: a fixed set of seeded fault
+/// schedules ([`ChaosPlan::from_seed`]) replayed against a fixed query
+/// mix on a fixed 800-doc deployment, every response classified against
+/// a fault-free oracle on the identical deployment. The classification
+/// invariants (clean responses bit-identical, degradation only with
+/// `allow_partial`, errors typed) are **structural** and asserted even
+/// under `GAPS_BENCH_NO_ASSERT` — integer outcomes at fixed seeds cannot
+/// flake on shared runners. The success/degraded rates and failover
+/// counters land in the `availability` section of `BENCH_retrieval.json`
+/// so the fault-tolerance trajectory is tracked across PRs.
+fn bench_availability(cfg: &GapsConfig) -> Json {
+    const SEEDS: [u64; 12] = [1, 2, 3, 5, 8, 13, 21, 34, 55, 89, 144, 233];
+    let nodes = 6usize;
+    let mut c = cfg.clone();
+    c.workload.num_docs = 800;
+    c.workload.sub_shards = 8;
+    c.search.use_xla = false;
+    let dep = Arc::new(Deployment::build(&c, nodes).expect("deploy"));
+    // Fixed query mix; only compiling queries (a parse error tells us
+    // nothing about availability). Every other request opts into
+    // graceful degradation, the rest demand full fidelity.
+    let requests: Vec<SearchRequest> = sample_queries(&dep, 8, 0xA7A1_1)
+        .into_iter()
+        .filter(|q| {
+            SearchRequest::new(q.clone()).compile(c.search.features, c.search.top_k).is_ok()
+        })
+        .enumerate()
+        .map(|(i, q)| {
+            let req = SearchRequest::new(q);
+            if i % 2 == 0 {
+                req.allow_partial(true)
+            } else {
+                req
+            }
+        })
+        .collect();
+    assert!(!requests.is_empty(), "no usable availability queries sampled");
+
+    let (mut exact, mut degraded, mut errors) = (0u64, 0u64, 0u64);
+    let (mut jobs_failed, mut replans, mut recoveries) = (0u64, 0u64, 0u64);
+    for &seed in &SEEDS {
+        let mut oracle =
+            GapsSystem::from_deployment(c.clone(), Arc::clone(&dep)).expect("oracle");
+        let mut chaos =
+            GapsSystem::from_deployment(c.clone(), Arc::clone(&dep)).expect("chaos");
+        chaos.set_fault_injector(ChaosPlan::from_seed(seed, &dep.active));
+
+        let want = oracle.search_batch(&requests);
+        let got = chaos.search_batch(&requests);
+        for ((req, want), got) in requests.iter().zip(&want).zip(&got) {
+            match got {
+                Ok(resp) if !resp.degraded => {
+                    let want = want
+                        .as_ref()
+                        .unwrap_or_else(|e| panic!("seed {seed}: oracle failed ({e})"));
+                    let ids_w: Vec<u64> = want.hits.iter().map(|h| h.global_id).collect();
+                    let ids_g: Vec<u64> = resp.hits.iter().map(|h| h.global_id).collect();
+                    assert_eq!(ids_w, ids_g, "seed {seed}: chaos hits diverged from oracle");
+                    exact += 1;
+                }
+                Ok(resp) => {
+                    assert!(req.allow_partial, "seed {seed}: degraded without allow_partial");
+                    assert!(
+                        !resp.missing_sources.is_empty(),
+                        "seed {seed}: degraded with empty missing-source list"
+                    );
+                    degraded += 1;
+                }
+                Err(e) => {
+                    assert!(
+                        matches!(
+                            e.kind(),
+                            "unavailable" | "no-live-replica" | "no-nodes" | "deadline-exceeded"
+                        ),
+                        "seed {seed}: unexpected error kind {:?}",
+                        e.kind()
+                    );
+                    errors += 1;
+                }
+            }
+        }
+        let fs = chaos.failover_stats();
+        jobs_failed += fs.jobs_failed;
+        replans += fs.replans;
+        recoveries += fs.recoveries;
+    }
+
+    let total = exact + degraded + errors;
+    let success_rate = (exact + degraded) as f64 / total.max(1) as f64;
+    println!(
+        "\n== availability under chaos ({} seeds x {} requests, {nodes} nodes) ==\n\
+         exact     {exact:5}  (bit-identical to the fault-free oracle)\n\
+         degraded  {degraded:5}  (truthful partial results via allow_partial)\n\
+         errors    {errors:5}  (typed availability errors)\n\
+         answered  {:.1}%   failover: {jobs_failed} jobs failed, {replans} replans, \
+         {recoveries} node recoveries",
+        requests.len(),
+        success_rate * 100.0,
+    );
+
+    Json::obj(vec![
+        ("seeds", Json::from(SEEDS.len())),
+        ("requests_per_seed", Json::from(requests.len())),
+        ("exact", Json::from(exact)),
+        ("degraded", Json::from(degraded)),
+        ("errors", Json::from(errors)),
+        ("success_rate", Json::from(success_rate)),
+        ("jobs_failed", Json::from(jobs_failed)),
+        ("replans", Json::from(replans)),
+        ("recoveries", Json::from(recoveries)),
     ])
 }
 
@@ -576,6 +696,7 @@ fn main() {
     let fanout = bench_fanout(&cfg);
     let batch = bench_batch(&cfg);
     let serve = bench_serve(&cfg);
+    let availability = bench_availability(&cfg);
     let micro_speedup = micro.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let fan_speedup = fanout.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let fan_workers = fanout.get("workers").and_then(|v| v.as_i64()).unwrap_or(1);
@@ -612,6 +733,7 @@ fn main() {
         ("fanout", fanout),
         ("batch", batch),
         ("serve", serve),
+        ("availability", availability),
         ("sweep", sweep_json),
     ]);
     let path = "BENCH_retrieval.json";

@@ -218,6 +218,8 @@ impl TraditionalSearch {
             jobs: plan.assignments.len(),
             candidates: total_candidates,
             docs_scanned: total_docs,
+            degraded: false,
+            missing_sources: Vec::new(),
             explain,
         })
     }

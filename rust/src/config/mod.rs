@@ -64,6 +64,9 @@ pub struct GridConfig {
     /// jobs serially, so this is the term that makes centralized
     /// coordination degrade with node count (Fig 4's traditional curve).
     pub dispatch_ms: f64,
+    /// Probation window: ticks a Down node must wait before the
+    /// coordinator health-probes it for rejoin (grid churn recovery).
+    pub probe_after_ticks: u64,
     /// RNG seed for fabric heterogeneity.
     pub seed: u64,
 }
@@ -81,6 +84,7 @@ impl Default for GridConfig {
             resident_services: true,
             cold_start_ms: 350.0,
             dispatch_ms: 8.0,
+            probe_after_ticks: 2,
             seed: 0x6169D,
         }
     }
@@ -144,6 +148,12 @@ pub struct SearchConfig {
     /// reference the Fig 4/5 speedup curves compare against). The XLA
     /// scorer path always executes serially — PJRT handles are !Send.
     pub workers: usize,
+    /// Mid-flight failover: extra planning rounds allowed after per-node
+    /// job failures before the batch gives up (0 = fail on first fault).
+    pub failover_retries: usize,
+    /// Simulated per-attempt backoff charged to the response timeline on
+    /// each failover retry (ms, scaled by the attempt number).
+    pub retry_backoff_ms: f64,
 }
 
 impl SearchConfig {
@@ -168,6 +178,8 @@ impl Default for SearchConfig {
             artifact_dir: "artifacts".into(),
             policy: SchedulePolicy::PerfHistory,
             workers: 0,
+            failover_retries: 2,
+            retry_backoff_ms: 25.0,
         }
     }
 }
@@ -211,6 +223,7 @@ impl GapsConfig {
             "resident_services" => g.resident_services = as_bool(key, v)?,
             "cold_start_ms" => g.cold_start_ms = as_f64(key, v)?,
             "dispatch_ms" => g.dispatch_ms = as_f64(key, v)?,
+            "probe_after_ticks" => g.probe_after_ticks = as_usize(key, v)? as u64,
             "seed" => g.seed = as_usize(key, v)? as u64,
             _ => return Err(CliError(format!("unknown grid key '{key}'"))),
         }
@@ -236,6 +249,8 @@ impl GapsConfig {
             "top_k" => s.top_k = as_usize(key, v)?,
             "max_candidates" => s.max_candidates = as_usize(key, v)?,
             "workers" => s.workers = as_usize(key, v)?,
+            "failover_retries" => s.failover_retries = as_usize(key, v)?,
+            "retry_backoff_ms" => s.retry_backoff_ms = as_f64(key, v)?,
             "b" => s.b = as_f64(key, v)? as f32,
             "use_xla" => s.use_xla = as_bool(key, v)?,
             "artifact_dir" => {
@@ -290,6 +305,7 @@ impl GapsConfig {
         s.top_k = args.get_parse("top-k", s.top_k)?;
         s.max_candidates = args.get_parse("max-candidates", s.max_candidates)?;
         s.workers = args.get_parse("workers", s.workers)?;
+        s.failover_retries = args.get_parse("failover-retries", s.failover_retries)?;
         if let Some(p) = args.get("policy") {
             s.policy = SchedulePolicy::parse(p)
                 .ok_or_else(|| CliError(format!("unknown policy '{p}'")))?;
@@ -308,7 +324,8 @@ impl GapsConfig {
         format!(
             "grid: {} VOs x {} nodes (speed {:.2}-{:.2}, lan {}us wan {}us, {} services)\n\
              workload: {} docs, {} queries (seed {})\n\
-             search: F={} top_k={} max_cand={} policy={} xla={} artifacts={} workers={}",
+             search: F={} top_k={} max_cand={} policy={} xla={} artifacts={} workers={} \
+             failover_retries={}",
             self.grid.num_vos,
             self.grid.nodes_per_vo,
             self.grid.speed_min,
@@ -326,6 +343,7 @@ impl GapsConfig {
             self.search.use_xla,
             self.search.artifact_dir,
             self.search.workers,
+            self.search.failover_retries,
         )
     }
 }
@@ -415,6 +433,24 @@ mod tests {
         assert_eq!(SchedulePolicy::parse("gaps"), Some(SchedulePolicy::PerfHistory));
         assert_eq!(SchedulePolicy::parse("traditional"), Some(SchedulePolicy::RoundRobin));
         assert_eq!(SchedulePolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_parse() {
+        let mut c = GapsConfig::default();
+        assert_eq!(c.search.failover_retries, 2);
+        assert_eq!(c.grid.probe_after_ticks, 2);
+        c.apply_json(
+            &Json::parse(
+                r#"{"grid": {"probe_after_ticks": 5},
+                     "search": {"failover_retries": 0, "retry_backoff_ms": 10}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.grid.probe_after_ticks, 5);
+        assert_eq!(c.search.failover_retries, 0);
+        assert_eq!(c.search.retry_backoff_ms, 10.0);
     }
 
     #[test]

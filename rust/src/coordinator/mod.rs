@@ -40,6 +40,6 @@ pub use qee::{ExecutionPlan, QueryExecutionEngine};
 pub use qm::{JobStatus, QueryManager};
 pub use resource_manager::ResourceManager;
 pub use system::{
-    counters_from_json, counters_to_json, CorpusData, Deployment, Explain, GapsSystem, Hit,
-    SearchResponse,
+    counters_from_json, counters_to_json, CorpusData, Deployment, Explain, FailoverStats,
+    GapsSystem, Hit, SearchResponse,
 };

@@ -60,6 +60,30 @@ impl QueryExecutionEngine {
         pref: ReplicaPref,
         home_vo: Option<VoId>,
     ) -> Result<ExecutionPlan, SearchError> {
+        let (plan, uncovered) =
+            self.plan_partial(sources, available, perf, policy, pref, home_vo)?;
+        if let Some(&source) = uncovered.first() {
+            return Err(SearchError::NoLiveReplica { source });
+        }
+        Ok(plan)
+    }
+
+    /// Like [`QueryExecutionEngine::plan`], but sources with no live
+    /// replica do not fail the plan: they are returned as the sorted
+    /// `uncovered` list alongside a plan over the coverable sources.
+    /// This is the planning primitive for mid-flight failover and
+    /// `allow_partial` degradation (the caller decides whether uncovered
+    /// sources are an error or a truthful gap). Errors only on empty
+    /// inputs (`NoSources` / `NoNodes`).
+    pub fn plan_partial(
+        &self,
+        sources: &[&DataSource],
+        available: &[NodeInfo],
+        perf: &PerfDb,
+        policy: SchedulePolicy,
+        pref: ReplicaPref,
+        home_vo: Option<VoId>,
+    ) -> Result<(ExecutionPlan, Vec<u32>), SearchError> {
         if sources.is_empty() {
             return Err(SearchError::NoSources);
         }
@@ -72,12 +96,13 @@ impl QueryExecutionEngine {
 
         // Per-source candidate replicas: live, narrowed by preference
         // (falling back to all live replicas when the preference cannot
-        // be honored — availability beats affinity).
-        let candidates = |s: &DataSource| -> Result<Vec<NodeId>, SearchError> {
+        // be honored — availability beats affinity). `None`: no live
+        // replica at all.
+        let candidates = |s: &DataSource| -> Option<Vec<NodeId>> {
             let live_replicas: Vec<NodeId> =
                 s.replicas.iter().copied().filter(|r| live.contains(r)).collect();
             if live_replicas.is_empty() {
-                return Err(SearchError::NoLiveReplica { source: s.id });
+                return None;
             }
             let preferred: Vec<NodeId> = match pref {
                 ReplicaPref::Any => live_replicas.clone(),
@@ -96,14 +121,18 @@ impl QueryExecutionEngine {
                     None => Vec::new(),
                 },
             };
-            Ok(if preferred.is_empty() { live_replicas } else { preferred })
+            Some(if preferred.is_empty() { live_replicas } else { preferred })
         };
 
         let mut assignments: BTreeMap<NodeId, Vec<u32>> = BTreeMap::new();
+        let mut uncovered: Vec<u32> = Vec::new();
         match policy {
             SchedulePolicy::RoundRobin => {
                 for s in sources {
-                    let replicas = candidates(s)?;
+                    let Some(replicas) = candidates(s) else {
+                        uncovered.push(s.id);
+                        continue;
+                    };
                     // Rotate across replicas by source id: uniform spread,
                     // blind to node speed.
                     let node = replicas[s.id as usize % replicas.len()];
@@ -116,8 +145,12 @@ impl QueryExecutionEngine {
                 order.sort_by(|a, b| b.doc_count.cmp(&a.doc_count).then(a.id.cmp(&b.id)));
                 let mut load_docs: BTreeMap<NodeId, f64> = BTreeMap::new();
                 for s in order {
+                    let Some(replicas) = candidates(s) else {
+                        uncovered.push(s.id);
+                        continue;
+                    };
                     let mut best: Option<(f64, NodeId)> = None;
-                    for r in candidates(s)? {
+                    for r in replicas {
                         let tput = perf.estimate(r).max(1e-9);
                         let finish =
                             (load_docs.get(&r).copied().unwrap_or(0.0) + s.doc_count as f64) / tput;
@@ -125,9 +158,7 @@ impl QueryExecutionEngine {
                             best = Some((finish, r));
                         }
                     }
-                    let Some((_, node)) = best else {
-                        return Err(SearchError::NoLiveReplica { source: s.id });
-                    };
+                    let (_, node) = best.expect("candidates() returns non-empty lists");
                     *load_docs.entry(node).or_default() += s.doc_count as f64;
                     assignments.entry(node).or_default().push(s.id);
                 }
@@ -136,7 +167,8 @@ impl QueryExecutionEngine {
                 }
             }
         }
-        Ok(ExecutionPlan { assignments })
+        uncovered.sort_unstable();
+        Ok((ExecutionPlan { assignments }, uncovered))
     }
 }
 
@@ -241,6 +273,22 @@ mod tests {
         let err =
             plan_any(&refs, &avail, &PerfDb::default(), SchedulePolicy::PerfHistory).unwrap_err();
         assert_eq!(err, SearchError::NoLiveReplica { source: 0 });
+    }
+
+    #[test]
+    fn partial_plan_reports_uncovered_sources() {
+        // Source 1 only lives on a down node; sources 0 and 2 are fine.
+        let sources = vec![src(0, 100, &[0]), src(1, 100, &[5]), src(2, 100, &[0])];
+        let refs: Vec<&DataSource> = sources.iter().collect();
+        let avail = vec![node(0)];
+        for policy in [SchedulePolicy::PerfHistory, SchedulePolicy::RoundRobin] {
+            let (plan, uncovered) = QueryExecutionEngine
+                .plan_partial(&refs, &avail, &PerfDb::default(), policy, ReplicaPref::Any, None)
+                .unwrap();
+            assert_eq!(uncovered, vec![1], "{policy:?}");
+            assert_eq!(plan.num_sources(), 2, "{policy:?}");
+            assert_eq!(plan.nodes(), vec![NodeId(0)], "{policy:?}");
+        }
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! system resources." Nodes heartbeat; missing heartbeats mark a node
 //! Down (grid dynamicity — "organizations resources that join or leaves
 //! the system at any time"), and plans route around it.
+//!
+//! Downed nodes are not dead forever: they enter *probation*. After
+//! [`ResourceManager::probe_due`] reports a node's down-time exceeding
+//! the probation window, the coordinator probes it and feeds the result
+//! back via [`ResourceManager::record_probe`] — a healthy probe rejoins
+//! the node, a failed one restarts its probation clock.
 
 use std::collections::BTreeMap;
 
@@ -17,6 +23,8 @@ struct Entry {
     status: NodeStatus,
     /// Logical timestamp of the last heartbeat.
     last_heartbeat: u64,
+    /// Logical timestamp at which the node went Down (probation clock).
+    down_at: Option<u64>,
 }
 
 /// The resource registry.
@@ -37,7 +45,7 @@ impl ResourceManager {
     pub fn register(&mut self, info: NodeInfo) {
         self.nodes.insert(
             info.id,
-            Entry { info, status: NodeStatus::Up, last_heartbeat: self.now },
+            Entry { info, status: NodeStatus::Up, last_heartbeat: self.now, down_at: None },
         );
     }
 
@@ -46,6 +54,7 @@ impl ResourceManager {
         if let Some(e) = self.nodes.get_mut(&id) {
             e.last_heartbeat = self.now;
             e.status = NodeStatus::Up;
+            e.down_at = None;
         }
     }
 
@@ -55,14 +64,57 @@ impl ResourceManager {
         for e in self.nodes.values_mut() {
             if e.status == NodeStatus::Up && self.now - e.last_heartbeat > self.stale_after {
                 e.status = NodeStatus::Down;
+                e.down_at = Some(self.now);
             }
         }
     }
 
-    /// Explicitly mark a node down (failure injection).
+    /// One coordinator round: every currently-Up node heartbeats (the
+    /// fabric is simulated in-process, so a node that has not been
+    /// *observed* failing is presumed alive), then the clock ticks. This
+    /// is what advances probation clocks between search batches.
+    pub fn begin_round(&mut self) {
+        let up: Vec<NodeId> = self
+            .nodes
+            .values()
+            .filter(|e| e.status == NodeStatus::Up)
+            .map(|e| e.info.id)
+            .collect();
+        for id in up {
+            self.heartbeat(id);
+        }
+        self.tick();
+    }
+
+    /// Explicitly mark a node down (failure injection / mid-flight job
+    /// failure).
     pub fn mark_down(&mut self, id: NodeId) {
         if let Some(e) = self.nodes.get_mut(&id) {
-            e.status = NodeStatus::Down;
+            if e.status != NodeStatus::Down {
+                e.status = NodeStatus::Down;
+                e.down_at = Some(self.now);
+            }
+        }
+    }
+
+    /// Down nodes whose probation window (`after` ticks since they went
+    /// down) has elapsed — the coordinator should health-probe these.
+    pub fn probe_due(&self, after: u64) -> Vec<NodeId> {
+        self.nodes
+            .values()
+            .filter(|e| e.status == NodeStatus::Down)
+            .filter(|e| e.down_at.map(|d| self.now.saturating_sub(d) >= after).unwrap_or(true))
+            .map(|e| e.info.id)
+            .collect()
+    }
+
+    /// Feed back a health-probe result: a healthy node rejoins
+    /// immediately, an unhealthy one restarts its probation clock.
+    pub fn record_probe(&mut self, id: NodeId, healthy: bool) {
+        if healthy {
+            self.heartbeat(id);
+        } else if let Some(e) = self.nodes.get_mut(&id) {
+            e.down_at = Some(self.now);
         }
     }
 
@@ -143,5 +195,54 @@ mod tests {
         rm.register(info(0));
         rm.mark_down(NodeId(0));
         assert_eq!(rm.status(NodeId(0)), Some(NodeStatus::Down));
+    }
+
+    #[test]
+    fn probation_elapses_before_probe_is_due() {
+        let mut rm = ResourceManager::new(3);
+        rm.register(info(0));
+        rm.register(info(1));
+        rm.begin_round();
+        rm.mark_down(NodeId(0));
+        // Freshly downed: not yet due with a 2-tick probation window.
+        assert!(rm.probe_due(2).is_empty());
+        rm.begin_round();
+        assert!(rm.probe_due(2).is_empty(), "only 1 tick since mark_down");
+        rm.begin_round();
+        assert_eq!(rm.probe_due(2), vec![NodeId(0)]);
+        // Up nodes never show up as probe candidates.
+        assert!(!rm.probe_due(0).contains(&NodeId(1)));
+    }
+
+    #[test]
+    fn probe_results_rejoin_or_rearm() {
+        let mut rm = ResourceManager::new(3);
+        rm.register(info(0));
+        rm.mark_down(NodeId(0));
+        rm.begin_round();
+        rm.begin_round();
+        assert_eq!(rm.probe_due(2), vec![NodeId(0)]);
+        // Unhealthy probe restarts the probation clock.
+        rm.record_probe(NodeId(0), false);
+        assert!(rm.probe_due(2).is_empty());
+        rm.begin_round();
+        rm.begin_round();
+        assert_eq!(rm.probe_due(2), vec![NodeId(0)]);
+        // Healthy probe rejoins.
+        rm.record_probe(NodeId(0), true);
+        assert_eq!(rm.status(NodeId(0)), Some(NodeStatus::Up));
+        assert!(rm.probe_due(0).is_empty());
+    }
+
+    #[test]
+    fn begin_round_keeps_up_nodes_alive() {
+        // begin_round's implicit heartbeats mean the logical clock can
+        // advance arbitrarily without expiring healthy nodes.
+        let mut rm = ResourceManager::new(2);
+        rm.register(info(0));
+        for _ in 0..10 {
+            rm.begin_round();
+        }
+        assert_eq!(rm.status(NodeId(0)), Some(NodeStatus::Up));
     }
 }

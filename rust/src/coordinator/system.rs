@@ -38,9 +38,11 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::config::GapsConfig;
 use crate::corpus::{CorpusGenerator, CorpusSpec, Publication};
+use crate::fault::{ChaosPlan, FaultDecision, FaultInjector};
 use crate::grid::{GridFabric, NodeId};
 use crate::index::{GlobalStats, RetrievalCounters, Shard};
 use crate::runtime::Executor;
@@ -320,6 +322,12 @@ pub struct SearchResponse {
     pub candidates: usize,
     /// Documents in all searched sources.
     pub docs_scanned: u64,
+    /// True when the request allowed partial coverage and some sources
+    /// were unreachable: `hits` ranks only the reachable corpus.
+    pub degraded: bool,
+    /// The unreachable source ids behind a degraded response (sorted;
+    /// empty when `degraded` is false).
+    pub missing_sources: Vec<u32>,
     /// Plan/AST diagnostics (present when the request set `explain`).
     pub explain: Option<Explain>,
 }
@@ -362,6 +370,13 @@ impl SearchResponse {
             ("candidates", Json::from(self.candidates)),
             ("docs_scanned", Json::from(self.docs_scanned)),
         ];
+        if self.degraded {
+            pairs.push(("degraded", Json::Bool(true)));
+            pairs.push((
+                "missing_sources",
+                Json::Arr(self.missing_sources.iter().map(|&s| Json::from(s as i64)).collect()),
+            ));
+        }
         if let Some(e) = &self.explain {
             pairs.push(("explain", e.to_json()));
         }
@@ -393,6 +408,18 @@ impl SearchResponse {
             jobs: v.get("jobs")?.as_i64()? as usize,
             candidates: v.get("candidates")?.as_i64()? as usize,
             docs_scanned: v.get("docs_scanned")?.as_i64()? as u64,
+            degraded: match v.get("degraded") {
+                Some(d) => d.as_bool()?,
+                None => false,
+            },
+            missing_sources: match v.get("missing_sources") {
+                Some(m) => m
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_i64().map(|x| x as u32))
+                    .collect::<Option<Vec<_>>>()?,
+                None => Vec::new(),
+            },
             explain: match v.get("explain") {
                 Some(e) => Some(Explain::from_json(e)?),
                 None => None,
@@ -420,20 +447,46 @@ struct JobOutput {
 /// batch. Free function (not a `GapsSystem` method) so the parallel
 /// fan-out can call it from worker threads while the coordinator keeps
 /// its `&mut self` bookkeeping.
+///
+/// `faults` is the executor-path fail-point: a chaos-scheduled node
+/// crashes before its first source, crashes halfway through its source
+/// list (partial work is discarded — re-searching a source on another
+/// replica is idempotent), or sleeps an injected delay before running
+/// normally.
 fn run_job(
     service: &SearchService,
     dep: &Deployment,
     queries: &[(&Query, usize)],
     job: &JobDescription,
     scorer: &mut Scorer<'_>,
+    faults: Option<&FaultInjector>,
 ) -> Result<JobOutput, SearchError> {
+    let decision = faults.map_or(FaultDecision::Proceed, |f| f.decide(job.node));
+    match decision {
+        FaultDecision::CrashBefore => {
+            return Err(SearchError::unavailable(format!(
+                "injected fault: node {} crashed before executing job {:?}",
+                job.node, job.id
+            )));
+        }
+        FaultDecision::Delay(d) => std::thread::sleep(d),
+        FaultDecision::Proceed | FaultDecision::CrashMid => {}
+    }
+    let crash_after =
+        matches!(decision, FaultDecision::CrashMid).then(|| job.sources.len() / 2);
     let nq = queries.len();
     let mut work_measured = 0.0f64;
     let mut per_query_candidates = vec![0usize; nq];
     let mut per_query_counters = vec![RetrievalCounters::default(); nq];
     let mut docs = 0u64;
     let mut hits_lists: Vec<Vec<Vec<LocalHit>>> = vec![Vec::with_capacity(job.sources.len()); nq];
-    for sid in &job.sources {
+    for (si, sid) in job.sources.iter().enumerate() {
+        if crash_after == Some(si) {
+            return Err(SearchError::unavailable(format!(
+                "injected fault: node {} crashed mid-batch in job {:?}",
+                job.node, job.id
+            )));
+        }
         let shard = dep.shard(*sid).ok_or(SearchError::SourceUnknown { source: *sid })?;
         let outs = service.search_batch(shard, &dep.stats, queries, scorer)?;
         docs += shard.len() as u64;
@@ -450,6 +503,25 @@ fn run_job(
         .map(|(lists, (_, top_k))| merge_topk(&lists, *top_k))
         .collect();
     Ok(JobOutput { per_query_hits, per_query_candidates, per_query_counters, work_measured, docs })
+}
+
+/// Counters for the fault-tolerance machinery: how often jobs failed
+/// mid-flight, how many re-planning rounds ran, and how the probation /
+/// recovery cycle behaved. Cumulative over the system's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FailoverStats {
+    /// Per-node jobs that failed during a fan-out round.
+    pub jobs_failed: u64,
+    /// Re-planning rounds triggered by failed jobs.
+    pub replans: u64,
+    /// Nodes marked Down because one of their jobs failed.
+    pub nodes_marked_down: u64,
+    /// Health probes issued to downed nodes whose probation elapsed.
+    pub probes: u64,
+    /// Probes that came back healthy (node rejoined).
+    pub recoveries: u64,
+    /// Responses returned with `degraded: true`.
+    pub degraded_responses: u64,
 }
 
 /// The deployed GAPS system.
@@ -475,6 +547,11 @@ pub struct GapsSystem {
     /// thread spawn and scratch warm-up once per deployment instead of
     /// once per batch.
     pool: Option<Pool>,
+    /// Deterministic fault injection on the executor path (`None` in
+    /// production; see [`crate::fault`]).
+    injector: Option<Arc<FaultInjector>>,
+    /// Failover/probation counters.
+    fstats: FailoverStats,
 }
 
 impl std::fmt::Debug for GapsSystem {
@@ -543,6 +620,8 @@ impl GapsSystem {
             containers,
             root_broker,
             pool,
+            injector: None,
+            fstats: FailoverStats::default(),
         })
     }
 
@@ -558,7 +637,10 @@ impl GapsSystem {
         &self.qm
     }
 
-    /// Inject a node failure (resource dynamicity).
+    /// Inject a node failure (resource dynamicity). The node stays Down
+    /// until an explicit [`GapsSystem::recover_node`] or until its
+    /// probation window (`grid.probe_after_ticks` batches) elapses and a
+    /// health probe succeeds.
     pub fn fail_node(&mut self, node: NodeId) {
         self.rm.mark_down(node);
     }
@@ -566,6 +648,33 @@ impl GapsSystem {
     /// Heartbeat a node back into the grid.
     pub fn recover_node(&mut self, node: NodeId) {
         self.rm.heartbeat(node);
+    }
+
+    /// Arm deterministic fault injection: every subsequent batch consults
+    /// the plan's schedule at the `run_job` fail-point and for probation
+    /// health probes. Replayable — same plan, same requests, same
+    /// behavior.
+    pub fn set_fault_injector(&mut self, plan: ChaosPlan) {
+        self.injector = Some(Arc::new(FaultInjector::new(plan)));
+    }
+
+    /// Cumulative fault-tolerance counters.
+    pub fn failover_stats(&self) -> FailoverStats {
+        self.fstats
+    }
+
+    /// Probe downed nodes whose probation window elapsed; healthy ones
+    /// rejoin the grid (runs once per batch, before planning).
+    fn probe_downed(&mut self) {
+        for node in self.rm.probe_due(self.cfg.grid.probe_after_ticks) {
+            self.fstats.probes += 1;
+            let healthy =
+                self.injector.as_deref().map(|i| i.probe_healthy(node)).unwrap_or(true);
+            self.rm.record_probe(node, healthy);
+            if healthy {
+                self.fstats.recoveries += 1;
+            }
+        }
     }
 
     /// Execute one raw query string with default request knobs.
@@ -589,10 +698,21 @@ impl GapsSystem {
     /// request order; per-request failures (e.g. parse errors) do not
     /// fail the rest of the batch.
     ///
-    /// Requests with different [`ReplicaPref`]s cannot share an
-    /// execution plan; they are planned and fanned out per preference
-    /// group (a homogeneous batch — the common case — is exactly one
-    /// plan + one fan-out round).
+    /// Requests with different [`ReplicaPref`]s, `allow_partial` modes,
+    /// or deadlines cannot share an execution plan; they are planned and
+    /// fanned out per group (a homogeneous batch — the common case — is
+    /// exactly one plan + one fan-out round).
+    ///
+    /// **Fault tolerance:** a per-node job that fails mid-flight marks
+    /// its node Down and the affected sources are re-planned onto
+    /// surviving replicas (`search.failover_retries` rounds). Because
+    /// the node → VO → root merges are placement-invariant, a failover
+    /// round returns hits bit-identical to the fault-free run whenever
+    /// live replicas still cover every source. Requests with
+    /// `allow_partial` degrade gracefully (top-k over reachable sources,
+    /// `degraded: true`) when coverage is impossible; others fail with a
+    /// typed availability error. Downed nodes re-enter through probation
+    /// (see [`crate::coordinator::ResourceManager`]).
     ///
     /// ```
     /// use gaps::config::GapsConfig;
@@ -618,6 +738,7 @@ impl GapsSystem {
         &mut self,
         requests: &[SearchRequest],
     ) -> Vec<Result<SearchResponse, SearchError>> {
+        let started = Instant::now();
         let mut results: Vec<Option<Result<SearchResponse, SearchError>>> =
             (0..requests.len()).map(|_| None).collect();
 
@@ -642,22 +763,30 @@ impl GapsSystem {
         let compile_s = compile_clock.elapsed_s();
         let valid_total = compiled.iter().filter(|c| c.is_some()).count().max(1);
 
-        // Group by replica preference (usually one group).
-        let mut groups: BTreeMap<ReplicaPref, Vec<usize>> = BTreeMap::new();
+        // One grid round per batch: Up nodes heartbeat, stale nodes
+        // expire, and downed nodes whose probation window elapsed get
+        // health-probed back into the available set.
+        self.rm.begin_round();
+        self.probe_downed();
+
+        // Group by (replica preference, degradation mode, deadline):
+        // requests in a group share one plan and one failover policy
+        // (usually the whole batch is one group).
+        let mut groups: BTreeMap<(ReplicaPref, bool, Option<u64>), Vec<usize>> = BTreeMap::new();
         for (i, c) in compiled.iter().enumerate() {
             if let Some(c) = c {
-                groups.entry(c.replicas).or_default().push(i);
+                groups.entry((c.replicas, c.allow_partial, c.deadline_ms)).or_default().push(i);
             }
         }
 
-        for (pref, indices) in groups {
+        for ((pref, _, _), indices) in groups {
             let group_requests: Arc<Vec<SearchRequest>> =
                 Arc::new(indices.iter().map(|&i| requests[i].clone()).collect());
             let group_compiled: Vec<&CompiledRequest> =
                 indices.iter().map(|&i| compiled[i].as_ref().expect("compiled")).collect();
             // This group's proportional share of the batch compile time.
             let compile_share = compile_s * indices.len() as f64 / valid_total as f64;
-            match self.run_group(pref, &group_requests, &group_compiled, compile_share) {
+            match self.run_group(pref, &group_requests, &group_compiled, compile_share, started) {
                 Ok(responses) => {
                     for (slot, resp) in indices.iter().zip(responses) {
                         results[*slot] = Some(Ok(resp));
@@ -674,117 +803,240 @@ impl GapsSystem {
         results.into_iter().map(|r| r.expect("every request settled")).collect()
     }
 
-    /// Plan + dispatch + execute + merge one replica-preference group.
-    /// This is the paper's GAPS flow, generalized to Q >= 1 queries.
+    /// Plan + dispatch + execute + merge one request group, with
+    /// mid-flight failover. This is the paper's GAPS flow, generalized
+    /// to Q >= 1 queries and to a grid where nodes can crash under us: a
+    /// failed per-node job marks its node Down and only that job's
+    /// sources are re-planned onto surviving replicas in the next
+    /// attempt; completed jobs are never re-run. Because every merge
+    /// level is placement-invariant, the final top-k is bit-identical to
+    /// a fault-free run whenever live replicas still cover every source.
     fn run_group(
         &mut self,
         pref: ReplicaPref,
         requests: &Arc<Vec<SearchRequest>>,
         compiled: &[&CompiledRequest],
         compile_s: f64,
+        started: Instant,
     ) -> Result<Vec<SearchResponse>, SearchError> {
         let nq = compiled.len();
-        let plan_clock = WallClock::start();
+        // Group invariants (the batch grouping keys on these).
+        let allow_partial = compiled[0].allow_partial;
+        let deadline = compiled[0].deadline_ms;
         let queries: Vec<(&Query, usize)> =
             compiled.iter().map(|c| (&c.query, c.top_k)).collect();
-
-        // Plan: resources + sources -> node assignments (QEE), once for
-        // the whole group.
-        let available = self.rm.available();
-        let sources = self.dep.locator.sources();
         let home_vo = self.dep.fabric.node(self.root_broker).vo;
-        let plan = self.qee.plan(
-            &sources,
-            &available,
-            &self.perf,
-            self.cfg.search.policy,
-            pref,
-            Some(home_vo),
-        )?;
+        let faults = self.injector.clone();
 
-        // QM materializes the JDFs (reply-to = each node's VO broker),
-        // every JDF carrying the whole request batch.
-        let fabric = &self.dep.fabric;
-        let jobs = self.qm.create_jobs(requests, &plan, |n| fabric.vo_of(n).broker);
-        let plan_s = plan_clock.elapsed_s();
+        // Sources still awaiting a successful job: drained by completed
+        // jobs, refilled by failed ones, abandoned into `missing` when no
+        // live replica can host them.
+        let mut pending: Vec<u32> =
+            self.dep.locator.sources().iter().map(|s| s.id).collect();
+        let mut missing: Vec<u32> = Vec::new();
+        // Completed jobs across all attempts: (vo, job, startup_s, output).
+        let mut done: Vec<(u32, JobDescription, f64, JobOutput)> = Vec::new();
+        let mut last_err: Option<SearchError> = None;
+        let mut plan_s = 0.0f64;
+        // Simulated backoff between failover attempts (accounted on the
+        // root timeline, not slept).
+        let mut retry_backoff_s = 0.0f64;
 
-        // Group jobs by VO for the decentralized dispatch.
-        let mut by_vo: BTreeMap<u32, Vec<&JobDescription>> = BTreeMap::new();
-        for j in &jobs {
-            by_vo.entry(self.dep.fabric.node(j.node).vo.0).or_default().push(j);
+        for attempt in 0..=self.cfg.search.failover_retries {
+            if pending.is_empty() {
+                break;
+            }
+            if let Some(ms) = deadline {
+                if started.elapsed() >= Duration::from_millis(ms) {
+                    return Err(SearchError::DeadlineExceeded { deadline_ms: ms });
+                }
+            }
+            if attempt > 0 {
+                self.fstats.replans += 1;
+                retry_backoff_s += self.cfg.search.retry_backoff_ms * 1e-3 * attempt as f64;
+            }
+
+            // Plan: resources + the still-pending sources -> node
+            // assignments (QEE). Sources with no live replica drop out of
+            // the attempt loop here.
+            let available = self.rm.available();
+            if available.is_empty() {
+                if attempt == 0 {
+                    return Err(SearchError::NoNodes);
+                }
+                missing.append(&mut pending);
+                break;
+            }
+            let plan_clock = WallClock::start();
+            let all_sources = self.dep.locator.sources();
+            let sources: Vec<_> =
+                all_sources.into_iter().filter(|s| pending.contains(&s.id)).collect();
+            let (plan, uncovered) = self.qee.plan_partial(
+                &sources,
+                &available,
+                &self.perf,
+                self.cfg.search.policy,
+                pref,
+                Some(home_vo),
+            )?;
+            if !uncovered.is_empty() {
+                pending.retain(|s| !uncovered.contains(s));
+                missing.extend(uncovered);
+            }
+            if plan.assignments.is_empty() {
+                continue;
+            }
+
+            // QM materializes the JDFs (reply-to = each node's VO broker),
+            // every JDF carrying the whole request batch.
+            let fabric = &self.dep.fabric;
+            let jobs = self.qm.create_jobs(requests, &plan, |n| fabric.vo_of(n).broker);
+            plan_s += plan_clock.elapsed_s();
+
+            // ---- Dispatch bookkeeping (serial: QM + containers) -------
+            // One container acquisition + dispatch slot per *job*, not
+            // per query: the batch amortizes startup accounting. Flatten
+            // jobs in (vo, j_idx) order; the fan-out below returns
+            // outcomes in the same order, keeping merges deterministic.
+            let mut attempt_by_vo: BTreeMap<u32, Vec<JobDescription>> = BTreeMap::new();
+            for j in jobs {
+                attempt_by_vo.entry(self.dep.fabric.node(j.node).vo.0).or_default().push(j);
+            }
+            let mut flat: Vec<(u32, JobDescription)> = Vec::new();
+            let mut startups: Vec<f64> = Vec::new();
+            for (vo, vo_jobs) in attempt_by_vo {
+                for job in vo_jobs {
+                    self.qm.mark_dispatched(job.id);
+                    let handle = self
+                        .containers
+                        .get_mut(&job.node)
+                        .ok_or_else(|| SearchError::internal("node has no container"))?
+                        .acquire("search-service")
+                        .ok_or_else(|| SearchError::internal("search-service not deployed"))?;
+                    startups.push(handle.startup_s);
+                    flat.push((vo, job));
+                }
+            }
+
+            // ---- Execute every node's job (parallel shard fan-out) ----
+            // Real concurrent work on the *resident* gridpool, one round
+            // per attempt: jobs are scope-submitted to the long-lived
+            // workers (`Pool::scope_map`), so no threads are spawned per
+            // batch and worker thread-locals (retrieval scratches,
+            // packers) stay warm from batch to batch. Per-job wall time
+            // is measured inside each job; under contention that
+            // measurement inflates, so the figure sweeps pin workers = 1
+            // (see metrics::run_node_sweep, which leaves `pool` unbuilt)
+            // while serving paths default to all cores. A job failure
+            // does NOT abort the round: surviving nodes' outputs are kept
+            // and only the failed job's sources re-enter `pending`.
+            let outcomes: Vec<Result<JobOutput, SearchError>> =
+                match (self.executor.as_mut(), self.pool.as_ref()) {
+                    (Some(exec), _) => {
+                        // PJRT handles are !Send: artifact execution stays
+                        // on the coordinator thread (see runtime::mod docs).
+                        let mut outs = Vec::with_capacity(flat.len());
+                        for (_, job) in &flat {
+                            let mut scorer = Scorer::Xla(&mut *exec);
+                            outs.push(run_job(
+                                &self.service,
+                                &self.dep,
+                                &queries,
+                                job,
+                                &mut scorer,
+                                faults.as_deref(),
+                            ));
+                        }
+                        outs
+                    }
+                    (None, Some(pool)) if flat.len() > 1 => {
+                        let service = &self.service;
+                        let dep: &Deployment = &self.dep;
+                        let qs = &queries;
+                        let inj = faults.as_deref();
+                        pool.scope_map(&flat, |(_, job)| {
+                            run_job(service, dep, qs, job, &mut Scorer::Rust, inj)
+                        })
+                    }
+                    _ => {
+                        let mut outs = Vec::with_capacity(flat.len());
+                        for (_, job) in &flat {
+                            outs.push(run_job(
+                                &self.service,
+                                &self.dep,
+                                &queries,
+                                job,
+                                &mut Scorer::Rust,
+                                faults.as_deref(),
+                            ));
+                        }
+                        outs
+                    }
+                };
+
+            // ---- Triage outcomes: keep successes, refill `pending` ----
+            let mut retry: Vec<u32> = Vec::new();
+            for (((vo, job), startup_s), outcome) in
+                flat.into_iter().zip(startups).zip(outcomes)
+            {
+                match outcome {
+                    Ok(out) => done.push((vo, job, startup_s, out)),
+                    Err(e) => {
+                        self.fstats.jobs_failed += 1;
+                        self.fstats.nodes_marked_down += 1;
+                        self.qm.fail(job.id);
+                        self.rm.mark_down(job.node);
+                        retry.extend(job.sources.iter().copied());
+                        last_err = Some(e);
+                    }
+                }
+            }
+            retry.sort_unstable();
+            pending = retry;
         }
+
+        // Coverage verdict: strict requests fail loudly, partial requests
+        // degrade truthfully.
+        if !allow_partial {
+            if let Some(&source) = missing.first() {
+                return Err(SearchError::NoLiveReplica { source });
+            }
+            if !pending.is_empty() {
+                return Err(last_err
+                    .unwrap_or_else(|| SearchError::unavailable("failover retries exhausted")));
+            }
+        } else {
+            missing.append(&mut pending);
+        }
+        missing.sort_unstable();
+        missing.dedup();
+        let degraded = !missing.is_empty();
+        if degraded {
+            self.fstats.degraded_responses += nq as u64;
+        }
+
+        // ---- Assemble per-VO timelines from the completed jobs --------
+        // Jobs regroup by VO across attempts (a failover re-run lands in
+        // its node's VO like any other job). JDF wire sizes are
+        // serialized once per job (the JSON rendering covers the whole
+        // request batch, so re-serializing at every accounting site would
+        // cost O(jobs x batch) twice over).
+        let mut by_vo: BTreeMap<u32, Vec<(JobDescription, f64, JobOutput)>> = BTreeMap::new();
+        for (vo, job, startup_s, out) in done {
+            by_vo.entry(vo).or_default().push((job, startup_s, out));
+        }
+        let wire_of: BTreeMap<super::jdf::JobId, usize> =
+            by_vo.values().flatten().map(|(j, _, _)| (j.id, j.wire_bytes())).collect();
+        let jobs_done: usize = by_vo.values().map(|v| v.len()).sum();
+        let plan_view: Vec<(String, usize)> = by_vo
+            .values()
+            .flatten()
+            .map(|(j, _, _)| (j.node.to_string(), j.sources.len()))
+            .collect();
 
         let dispatch_s = self.cfg.grid.dispatch_ms * 1e-3;
         let net = &self.dep.fabric.net;
         let root_info = self.dep.fabric.node(self.root_broker).clone();
-
-        // ---- Dispatch bookkeeping (serial: QM + containers) -----------
-        // One container acquisition + dispatch slot per *job*, not per
-        // query: the batch amortizes startup accounting. Flatten jobs in
-        // (vo, j_idx) order; the fan-out below returns outputs in the
-        // same order, keeping merges deterministic.
-        let mut flat_jobs: Vec<&JobDescription> = Vec::with_capacity(jobs.len());
-        let mut startups: Vec<f64> = Vec::with_capacity(jobs.len());
-        for vo_jobs in by_vo.values() {
-            for job in vo_jobs {
-                self.qm.mark_dispatched(job.id);
-                let handle = self
-                    .containers
-                    .get_mut(&job.node)
-                    .ok_or_else(|| SearchError::internal("node has no container"))?
-                    .acquire("search-service")
-                    .ok_or_else(|| SearchError::internal("search-service not deployed"))?;
-                flat_jobs.push(job);
-                startups.push(handle.startup_s);
-            }
-        }
-
-        // ---- Execute every node's job (parallel shard fan-out) --------
-        // Real concurrent work on the *resident* gridpool, one round for
-        // the whole batch: jobs are scope-submitted to the long-lived
-        // workers (`Pool::scope_map`), so no threads are spawned per
-        // batch and worker thread-locals (retrieval scratches, packers)
-        // stay warm from batch to batch. Per-job wall time is measured
-        // inside each job; under contention that measurement inflates, so
-        // the figure sweeps pin workers = 1 (see metrics::run_node_sweep,
-        // which leaves `pool` unbuilt) while serving paths default to all
-        // cores.
-        let outputs: Vec<JobOutput> = match (self.executor.as_mut(), self.pool.as_ref()) {
-            (Some(exec), _) => {
-                // PJRT handles are !Send: artifact execution stays on the
-                // coordinator thread (see runtime::mod docs).
-                let mut outs = Vec::with_capacity(flat_jobs.len());
-                for job in &flat_jobs {
-                    let mut scorer = Scorer::Xla(&mut *exec);
-                    outs.push(run_job(&self.service, &self.dep, &queries, job, &mut scorer)?);
-                }
-                outs
-            }
-            (None, Some(pool)) if flat_jobs.len() > 1 => {
-                let service = &self.service;
-                let dep: &Deployment = &self.dep;
-                let qs = &queries;
-                pool.scope_map(&flat_jobs, |job| {
-                    run_job(service, dep, qs, job, &mut Scorer::Rust)
-                })
-                .into_iter()
-                .collect::<Result<Vec<_>, SearchError>>()?
-            }
-            _ => {
-                let mut outs = Vec::with_capacity(flat_jobs.len());
-                for job in &flat_jobs {
-                    outs.push(run_job(&self.service, &self.dep, &queries, job, &mut Scorer::Rust)?);
-                }
-                outs
-            }
-        };
-
-        // ---- Assemble per-VO timelines from the job outputs -----------
-        // JDF wire sizes, serialized once per job per fan-out (the JSON
-        // rendering covers the whole request batch, so re-serializing at
-        // every accounting site would cost O(jobs x batch) twice over).
-        let wire_of: BTreeMap<super::jdf::JobId, usize> =
-            jobs.iter().map(|j| (j.id, j.wire_bytes())).collect();
         let mut vo_timelines: Vec<TaskTimeline> = Vec::new();
         // [query][vo] -> merged VO list.
         let mut vo_lists: Vec<Vec<Vec<LocalHit>>> = vec![Vec::new(); nq];
@@ -792,14 +1044,12 @@ impl GapsSystem {
         let mut total_counters = vec![RetrievalCounters::default(); nq];
         let mut total_docs = 0u64;
         let mut completions: Vec<(super::jdf::JobId, u64, f64)> = Vec::new();
-        let mut outputs = outputs.into_iter();
-        let mut startups = startups.into_iter();
 
-        for (vo_idx, (vo, vo_jobs)) in by_vo.iter().enumerate() {
-            let vo_broker = self.dep.fabric.vos[*vo as usize].broker;
+        for (vo_idx, (vo, vo_jobs)) in by_vo.into_iter().enumerate() {
+            let vo_broker = self.dep.fabric.vos[vo as usize].broker;
             let vo_broker_info = self.dep.fabric.node(vo_broker).clone();
             // Root QEE hands this VO's QEE its slice (serial at root).
-            let jdf_bytes: usize = vo_jobs.iter().map(|j| wire_of[&j.id]).sum();
+            let jdf_bytes: usize = vo_jobs.iter().map(|(j, _, _)| wire_of[&j.id]).sum();
             let mut vo_tl = TaskTimeline {
                 work_s: 0.0,
                 net_s: net.transfer_between_s(&root_info, &vo_broker_info, jdf_bytes),
@@ -810,9 +1060,7 @@ impl GapsSystem {
             let mut node_branches: Vec<TaskTimeline> = Vec::new();
             // [query][node] -> node list.
             let mut node_lists: Vec<Vec<Vec<LocalHit>>> = vec![Vec::new(); nq];
-            for (j_idx, job) in vo_jobs.iter().enumerate() {
-                let out = outputs.next().expect("one output per job");
-                let startup_s = startups.next().expect("one handle per job");
+            for (j_idx, (job, startup_s, out)) in vo_jobs.into_iter().enumerate() {
                 let node_info = self.dep.fabric.node(job.node).clone();
                 total_docs += out.docs;
                 let reply_hits: usize = out.per_query_hits.iter().map(|h| h.len()).sum();
@@ -865,9 +1113,14 @@ impl GapsSystem {
         }
 
         // Root barrier + final merge (shared batch critical path). The
-        // USI-side compile share counts as root work, like plan time.
-        let mut timeline =
-            TaskTimeline { work_s: compile_s + plan_s, net_s: 0.0, overhead_s: 0.0 };
+        // USI-side compile share counts as root work, like plan time;
+        // failover backoff shows up as root overhead (zero on the
+        // fault-free path, so timelines match run for run).
+        let mut timeline = TaskTimeline {
+            work_s: compile_s + plan_s,
+            net_s: 0.0,
+            overhead_s: retry_backoff_s,
+        };
         let slowest_vo = vo_timelines
             .into_iter()
             .fold(TaskTimeline::default(), |acc, b| acc.max(b));
@@ -900,19 +1153,18 @@ impl GapsSystem {
                 ast: compiled[qi].query.ast.to_string(),
                 keywords: compiled[qi].query.keywords.clone(),
                 batch_size: nq,
-                plan: jobs
-                    .iter()
-                    .map(|j| (j.node.to_string(), j.sources.len()))
-                    .collect(),
+                plan: plan_view.clone(),
                 counters: total_counters[qi],
             });
             responses.push(SearchResponse {
                 query: requests[qi].query.clone(),
                 hits,
                 timeline: timeline.clone(),
-                jobs: jobs.len(),
+                jobs: jobs_done,
                 candidates: total_candidates[qi],
                 docs_scanned: docs_per_query,
+                degraded,
+                missing_sources: missing.clone(),
                 explain,
             });
         }
@@ -1289,5 +1541,129 @@ mod tests {
         let ids_a: Vec<u64> = ra.hits.iter().map(|h| h.global_id).collect();
         let ids_b: Vec<u64> = rb.hits.iter().map(|h| h.global_id).collect();
         assert_eq!(ids_a, ids_b);
+    }
+
+    #[test]
+    fn failover_reruns_failed_jobs_with_identical_results() {
+        // A node crashing mid-flight must be invisible in the results:
+        // its job's sources re-plan onto live replicas and the merged
+        // top-k stays bit-identical to the fault-free run.
+        use crate::fault::{ChaosPlan, FaultKind};
+        let cfg = small_cfg();
+        let dep = Arc::new(Deployment::build(&cfg, 4).unwrap());
+        let mut oracle = GapsSystem::from_deployment(cfg.clone(), Arc::clone(&dep)).unwrap();
+        let mut chaos = GapsSystem::from_deployment(cfg, dep).unwrap();
+        let victim = chaos.deployment().active[1];
+        chaos.set_fault_injector(
+            ChaosPlan::new().with_fault(victim, FaultKind::CrashBeforeExecute),
+        );
+        let want = oracle.search("grid computing search").unwrap();
+        let got = chaos.search("grid computing search").unwrap();
+        assert_eq!(got.docs_scanned, 600, "failover must keep full coverage");
+        assert!(!got.degraded);
+        assert!(got.missing_sources.is_empty());
+        let ids_w: Vec<u64> = want.hits.iter().map(|h| h.global_id).collect();
+        let ids_g: Vec<u64> = got.hits.iter().map(|h| h.global_id).collect();
+        assert_eq!(ids_w, ids_g, "failover changed the hit set");
+        for (w, g) in want.hits.iter().zip(&got.hits) {
+            assert_eq!(w.score.to_bits(), g.score.to_bits(), "failover changed a score");
+        }
+        assert_eq!(want.candidates, got.candidates);
+        let fs = chaos.failover_stats();
+        assert!(fs.jobs_failed >= 1, "victim never failed a job");
+        assert!(fs.replans >= 1, "no failover replan happened");
+        assert!(fs.nodes_marked_down >= 1);
+    }
+
+    #[test]
+    fn flaky_node_recovers_after_probation() {
+        use crate::fault::{ChaosPlan, FaultKind};
+        let mut cfg = small_cfg();
+        cfg.grid.probe_after_ticks = 1;
+        let mut sys = GapsSystem::deploy(cfg, 2).unwrap();
+        let victim = sys.deployment().active[1];
+        sys.set_fault_injector(
+            ChaosPlan::new().with_fault(victim, FaultKind::FlakyThenRecover { failures: 1 }),
+        );
+        // Batch 1: the flaky job fails once, fails over in-flight, and
+        // the victim goes Down.
+        let r1 = sys.search("grid computing").unwrap();
+        assert_eq!(r1.docs_scanned, 600);
+        // Batch 2: probation elapsed, the health probe finds the node
+        // recovered (failure budget spent), and it rejoins the grid.
+        let r2 = sys.search("grid computing").unwrap();
+        assert_eq!(r2.docs_scanned, 600);
+        let fs = sys.failover_stats();
+        assert!(fs.jobs_failed >= 1, "flaky node never failed");
+        assert!(fs.probes >= 1, "probation probe never ran");
+        assert!(fs.recoveries >= 1, "flaky node never rejoined");
+    }
+
+    #[test]
+    fn partial_results_when_no_replica_survives() {
+        // Crash every replica of source 0: a strict request fails with a
+        // typed availability error; an allow_partial request degrades
+        // truthfully instead.
+        use crate::fault::{ChaosPlan, FaultKind};
+        let cfg = small_cfg();
+        let dep = Arc::new(Deployment::build(&cfg, 4).unwrap());
+        let replicas = dep.locator.source(0).unwrap().replicas.clone();
+        let mut plan = ChaosPlan::new();
+        for &n in &replicas {
+            plan = plan.with_fault(n, FaultKind::CrashBeforeExecute);
+        }
+
+        let mut strict = GapsSystem::from_deployment(cfg.clone(), Arc::clone(&dep)).unwrap();
+        strict.set_fault_injector(plan.clone());
+        let err = strict.search("grid computing").unwrap_err();
+        assert!(
+            err.kind() == "no-live-replica" || err.kind() == "unavailable",
+            "unexpected error kind {:?}",
+            err.kind()
+        );
+
+        let mut partial = GapsSystem::from_deployment(cfg, dep).unwrap();
+        partial.set_fault_injector(plan);
+        let resp = partial
+            .search_request(&SearchRequest::new("grid computing").allow_partial(true))
+            .unwrap();
+        assert!(resp.degraded, "losing a source must flag degraded");
+        assert!(resp.missing_sources.contains(&0));
+        // Scanned docs = corpus minus exactly the missing sources.
+        let missing_docs: u64 = resp
+            .missing_sources
+            .iter()
+            .map(|&s| partial.deployment().locator.source(s).unwrap().doc_count)
+            .sum();
+        assert_eq!(resp.docs_scanned, 600 - missing_docs);
+        // No hit may leak out of a missing source's doc range.
+        for h in &resp.hits {
+            for &s in &resp.missing_sources {
+                let src = partial.deployment().locator.source(s).unwrap();
+                assert!(
+                    !(src.doc_start..src.doc_start + src.doc_count).contains(&h.global_id),
+                    "hit {} leaked from missing source {s}",
+                    h.global_id
+                );
+            }
+        }
+        // The degraded wire form roundtrips.
+        let parsed = SearchResponse::from_json(&resp.to_json()).unwrap();
+        assert!(parsed.degraded);
+        assert_eq!(parsed.missing_sources, resp.missing_sources);
+    }
+
+    #[test]
+    fn zero_deadline_is_exceeded() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 2).unwrap();
+        let err = sys
+            .search_request(&SearchRequest::new("grid computing").deadline_ms(0))
+            .unwrap_err();
+        assert_eq!(err.kind(), "deadline-exceeded");
+        // A generous deadline does not trip.
+        let ok = sys
+            .search_request(&SearchRequest::new("grid computing").deadline_ms(60_000))
+            .unwrap();
+        assert!(!ok.degraded);
     }
 }

@@ -1,0 +1,324 @@
+//! Deterministic fault injection for the executor path.
+//!
+//! The paper's grid treats node churn as the normal case ("organizations
+//! resources that join or leaves the system at any time"); this module is
+//! the harness that makes that case *testable*: a seeded [`ChaosPlan`]
+//! assigns each node at most one [`FaultKind`], and a [`FaultInjector`]
+//! turns the plan into per-job [`FaultDecision`]s at the `run_job`
+//! fail-point inside `coordinator::system`. There is **no randomness at
+//! runtime** — every schedule is a pure function of its `u64` seed (via
+//! [`crate::util::rng::Rng`]) plus the deterministic order of injector
+//! consultations, so any chaos run (and any failure it uncovers) replays
+//! exactly from the recorded seed.
+//!
+//! The injector also answers health *probes* (the `ResourceManager`'s
+//! probation checks): crashed nodes stay unhealthy, slow nodes probe
+//! healthy, and flaky nodes recover once their failure budget is spent —
+//! which is how `flaky-N-then-recover` schedules exercise the
+//! down/probation/rejoin lifecycle end to end.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::grid::NodeId;
+use crate::util::rng::Rng;
+
+/// A node's scripted misbehavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Every job crashes before touching any source (permanent).
+    CrashBeforeExecute,
+    /// Every job crashes after processing half its sources (permanent).
+    /// Partial work is discarded by the coordinator — re-searching a
+    /// source is idempotent.
+    CrashMidBatch,
+    /// Jobs complete, but only after an injected delay (never crashes).
+    SlowNode { delay_ms: u64 },
+    /// The first `failures` consultations (jobs *or* health probes)
+    /// fail; afterwards the node behaves normally — the shape that
+    /// exercises probation recovery.
+    FlakyThenRecover { failures: u32 },
+}
+
+impl FaultKind {
+    /// Whether this fault can make a job crash (as opposed to merely
+    /// slowing it down). Used by the chaos property test to check that a
+    /// degraded response's missing-source list is *truthful*: every
+    /// replica of a missing source must be crash-capable.
+    pub fn can_crash(self) -> bool {
+        !matches!(self, FaultKind::SlowNode { .. })
+    }
+}
+
+/// What the injector tells `run_job` to do for one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultDecision {
+    /// Execute normally.
+    Proceed,
+    /// Sleep this long, then execute normally (the sleep is wall-clock
+    /// only — measured work and scores are untouched).
+    Delay(Duration),
+    /// Fail before processing any source.
+    CrashBefore,
+    /// Process half the job's sources, then fail.
+    CrashMid,
+}
+
+/// A seeded per-node fault schedule. Immutable once built; share one
+/// plan between the system under test and the assertions checking it.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    /// The seed this plan was derived from (0 for hand-built plans).
+    pub seed: u64,
+    faults: BTreeMap<NodeId, FaultKind>,
+}
+
+impl ChaosPlan {
+    /// An empty plan (no faults). Add nodes with [`ChaosPlan::with_fault`].
+    pub fn new() -> ChaosPlan {
+        ChaosPlan::default()
+    }
+
+    /// Derive a schedule for `nodes` from a seed: each node independently
+    /// stays healthy with probability 1/2, otherwise draws a uniform
+    /// fault kind (delays 1..=5 ms, flaky budgets 1..=3 failures).
+    pub fn from_seed(seed: u64, nodes: &[NodeId]) -> ChaosPlan {
+        let mut rng = Rng::new(seed);
+        let mut faults = BTreeMap::new();
+        for &node in nodes {
+            // One fork per node: a node's fault depends only on (seed,
+            // node id), not on how many nodes precede it in the slice.
+            let mut r = rng.fork(node.0 as u64 + 1);
+            if r.chance(0.5) {
+                continue;
+            }
+            let kind = match r.below(4) {
+                0 => FaultKind::CrashBeforeExecute,
+                1 => FaultKind::CrashMidBatch,
+                2 => FaultKind::SlowNode { delay_ms: 1 + r.below(5) },
+                _ => FaultKind::FlakyThenRecover { failures: 1 + r.below(3) as u32 },
+            };
+            faults.insert(node, kind);
+        }
+        // Consume the parent stream so two plans built back to back from
+        // the same Rng-seeded driver do not alias.
+        let _ = rng.next_u64();
+        ChaosPlan { seed, faults }
+    }
+
+    /// Script one node's fault (builder form, for directed tests).
+    pub fn with_fault(mut self, node: NodeId, kind: FaultKind) -> ChaosPlan {
+        self.faults.insert(node, kind);
+        self
+    }
+
+    /// The scripted fault for a node, if any.
+    pub fn fault(&self, node: NodeId) -> Option<FaultKind> {
+        self.faults.get(&node).copied()
+    }
+
+    /// Nodes with a scripted fault, in id order.
+    pub fn faulty_nodes(&self) -> Vec<NodeId> {
+        self.faults.keys().copied().collect()
+    }
+
+    /// Whether a node's scripted fault can crash jobs (healthy and
+    /// slow-only nodes are not crash-capable).
+    pub fn can_crash(&self, node: NodeId) -> bool {
+        self.fault(node).map(FaultKind::can_crash).unwrap_or(false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+/// Runtime state over a [`ChaosPlan`]: tracks per-node strike counts so
+/// `flaky-N-then-recover` schedules are stateful but still deterministic
+/// (the count of consultations per node is fixed by the schedule, not by
+/// thread timing). `Sync` so the gridpool fan-out can consult it from
+/// worker threads.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: ChaosPlan,
+    /// Consultations consumed per flaky node.
+    strikes: Mutex<BTreeMap<NodeId, u32>>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: ChaosPlan) -> FaultInjector {
+        FaultInjector { plan, strikes: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The schedule this injector executes.
+    pub fn plan(&self) -> &ChaosPlan {
+        &self.plan
+    }
+
+    /// Decide one job's fate on `node` (the `run_job` fail-point).
+    pub fn decide(&self, node: NodeId) -> FaultDecision {
+        match self.plan.fault(node) {
+            None => FaultDecision::Proceed,
+            Some(FaultKind::CrashBeforeExecute) => FaultDecision::CrashBefore,
+            Some(FaultKind::CrashMidBatch) => FaultDecision::CrashMid,
+            Some(FaultKind::SlowNode { delay_ms }) => {
+                FaultDecision::Delay(Duration::from_millis(delay_ms))
+            }
+            Some(FaultKind::FlakyThenRecover { failures }) => {
+                if self.consume_strike(node, failures) {
+                    FaultDecision::CrashBefore
+                } else {
+                    FaultDecision::Proceed
+                }
+            }
+        }
+    }
+
+    /// Answer a health probe (the `ResourceManager` probation check).
+    /// Probes *consume* flaky strikes like jobs do, so a flaky node
+    /// recovers after its budget whichever way it is exercised.
+    pub fn probe_healthy(&self, node: NodeId) -> bool {
+        match self.plan.fault(node) {
+            None | Some(FaultKind::SlowNode { .. }) => true,
+            Some(FaultKind::CrashBeforeExecute) | Some(FaultKind::CrashMidBatch) => false,
+            Some(FaultKind::FlakyThenRecover { failures }) => {
+                !self.consume_strike(node, failures)
+            }
+        }
+    }
+
+    /// True while the node still has failure budget (and burns one unit).
+    fn consume_strike(&self, node: NodeId, failures: u32) -> bool {
+        let mut strikes = self.strikes.lock().unwrap();
+        let used = strikes.entry(node).or_insert(0);
+        if *used < failures {
+            *used += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(n: u32) -> Vec<NodeId> {
+        (0..n).map(NodeId).collect()
+    }
+
+    #[test]
+    fn same_seed_same_plan() {
+        let a = ChaosPlan::from_seed(0xFEED, &nodes(12));
+        let b = ChaosPlan::from_seed(0xFEED, &nodes(12));
+        assert_eq!(a, b, "schedules must replay from the seed");
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let plans: Vec<ChaosPlan> =
+            (0..16).map(|s| ChaosPlan::from_seed(s, &nodes(12))).collect();
+        let distinct: std::collections::BTreeSet<String> =
+            plans.iter().map(|p| format!("{:?}", p.faulty_nodes())).collect();
+        assert!(distinct.len() > 1, "16 seeds produced identical schedules");
+    }
+
+    #[test]
+    fn node_fault_is_independent_of_slice_order() {
+        // A node's fault depends on (seed, node id) only.
+        let all = ChaosPlan::from_seed(7, &nodes(12));
+        let tail = ChaosPlan::from_seed(7, &[NodeId(10), NodeId(11)]);
+        assert_eq!(all.fault(NodeId(10)), tail.fault(NodeId(10)));
+        assert_eq!(all.fault(NodeId(11)), tail.fault(NodeId(11)));
+    }
+
+    #[test]
+    fn seeds_cover_every_fault_kind() {
+        let mut seen_crash = false;
+        let mut seen_mid = false;
+        let mut seen_slow = false;
+        let mut seen_flaky = false;
+        for seed in 0..64 {
+            for n in nodes(12) {
+                match ChaosPlan::from_seed(seed, &nodes(12)).fault(n) {
+                    Some(FaultKind::CrashBeforeExecute) => seen_crash = true,
+                    Some(FaultKind::CrashMidBatch) => seen_mid = true,
+                    Some(FaultKind::SlowNode { delay_ms }) => {
+                        assert!((1..=5).contains(&delay_ms));
+                        seen_slow = true;
+                    }
+                    Some(FaultKind::FlakyThenRecover { failures }) => {
+                        assert!((1..=3).contains(&failures));
+                        seen_flaky = true;
+                    }
+                    None => {}
+                }
+            }
+        }
+        assert!(seen_crash && seen_mid && seen_slow && seen_flaky);
+    }
+
+    #[test]
+    fn crash_capability_excludes_slow_nodes() {
+        let plan = ChaosPlan::new()
+            .with_fault(NodeId(0), FaultKind::CrashBeforeExecute)
+            .with_fault(NodeId(1), FaultKind::SlowNode { delay_ms: 2 })
+            .with_fault(NodeId(2), FaultKind::FlakyThenRecover { failures: 1 });
+        assert!(plan.can_crash(NodeId(0)));
+        assert!(!plan.can_crash(NodeId(1)));
+        assert!(plan.can_crash(NodeId(2)));
+        assert!(!plan.can_crash(NodeId(3)), "healthy nodes cannot crash");
+    }
+
+    #[test]
+    fn permanent_crashes_never_recover() {
+        let inj = FaultInjector::new(
+            ChaosPlan::new().with_fault(NodeId(0), FaultKind::CrashBeforeExecute),
+        );
+        for _ in 0..5 {
+            assert_eq!(inj.decide(NodeId(0)), FaultDecision::CrashBefore);
+            assert!(!inj.probe_healthy(NodeId(0)));
+        }
+        assert_eq!(inj.decide(NodeId(9)), FaultDecision::Proceed, "unscripted node");
+        assert!(inj.probe_healthy(NodeId(9)));
+    }
+
+    #[test]
+    fn flaky_recovers_after_its_budget() {
+        let inj = FaultInjector::new(
+            ChaosPlan::new().with_fault(NodeId(3), FaultKind::FlakyThenRecover { failures: 2 }),
+        );
+        assert_eq!(inj.decide(NodeId(3)), FaultDecision::CrashBefore);
+        assert_eq!(inj.decide(NodeId(3)), FaultDecision::CrashBefore);
+        assert_eq!(inj.decide(NodeId(3)), FaultDecision::Proceed, "budget spent");
+        assert!(inj.probe_healthy(NodeId(3)));
+    }
+
+    #[test]
+    fn probes_consume_flaky_strikes_too() {
+        let inj = FaultInjector::new(
+            ChaosPlan::new().with_fault(NodeId(3), FaultKind::FlakyThenRecover { failures: 1 }),
+        );
+        assert!(!inj.probe_healthy(NodeId(3)), "first probe burns the strike");
+        assert!(inj.probe_healthy(NodeId(3)));
+        assert_eq!(inj.decide(NodeId(3)), FaultDecision::Proceed);
+    }
+
+    #[test]
+    fn slow_nodes_delay_but_stay_healthy() {
+        let inj = FaultInjector::new(
+            ChaosPlan::new().with_fault(NodeId(1), FaultKind::SlowNode { delay_ms: 4 }),
+        );
+        assert_eq!(
+            inj.decide(NodeId(1)),
+            FaultDecision::Delay(Duration::from_millis(4))
+        );
+        assert!(inj.probe_healthy(NodeId(1)));
+    }
+}

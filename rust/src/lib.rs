@@ -83,6 +83,7 @@ pub mod baseline;
 pub mod config;
 pub mod coordinator;
 pub mod corpus;
+pub mod fault;
 pub mod grid;
 pub mod runtime;
 pub mod search;

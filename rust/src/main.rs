@@ -7,7 +7,8 @@
 //!   results. `--explain` attaches AST + plan diagnostics.
 //! * `repl`              — interactive USI session.
 //! * `serve`             — multi-user HTTP front-end over an admission
-//!   queue (`--addr`, `--max-batch`, `--linger-ms`; see `gaps::serve`).
+//!   queue (`--addr`, `--max-batch`, `--linger-ms`, `--max-depth`,
+//!   `--read-timeout-ms`; see `gaps::serve`).
 //! * `sweep`             — the paper's node sweep (Figs 3/4/5 series).
 //! * `corpus`            — generate a corpus and save shard JSONL files.
 //! * `info`              — show the effective configuration and fabric.
@@ -68,7 +69,9 @@ fn print_usage() {
            serve               HTTP front-end (POST /search, POST /search_batch,\n\
                                GET /healthz) over an admission queue that coalesces\n\
                                concurrent queries; --addr HOST:PORT (default\n\
-                               127.0.0.1:7171), --max-batch N, --linger-ms N\n\
+                               127.0.0.1:7171), --max-batch N, --linger-ms N,\n\
+                               --max-depth N (shed beyond it, 503 + Retry-After),\n\
+                               --read-timeout-ms N (stalled clients get 408)\n\
            sweep               node sweep: response time / speedup / efficiency\n\
            corpus --out DIR    generate the corpus as shard JSONL files\n\
            info                print the effective configuration\n\n\
@@ -144,15 +147,21 @@ fn cmd_serve(args: &Args, cfg: GapsConfig) -> Result<()> {
     let queue_cfg = gaps::serve::QueueConfig {
         max_batch: args.get_parse("max-batch", 16usize)?,
         max_linger: std::time::Duration::from_millis(args.get_parse("linger-ms", 2u64)?),
+        max_depth: args.get_parse("max-depth", 1024usize)?,
+    };
+    let read_timeout_ms = args.get_parse("read-timeout-ms", 10_000u64)?;
+    let http_cfg = gaps::serve::HttpConfig {
+        read_timeout: std::time::Duration::from_millis(read_timeout_ms),
+        write_timeout: std::time::Duration::from_millis(read_timeout_ms),
     };
     eprintln!("{}", cfg.describe());
     eprintln!(
-        "admission queue: max_batch={} max_linger={:?}",
-        queue_cfg.max_batch, queue_cfg.max_linger
+        "admission queue: max_batch={} max_linger={:?} max_depth={}",
+        queue_cfg.max_batch, queue_cfg.max_linger, queue_cfg.max_depth
     );
     // The system deploys on (and never leaves) the executor thread.
     let server = gaps::serve::SearchServer::start(queue_cfg, move || GapsSystem::deploy(cfg, n))?;
-    let http = gaps::serve::HttpServer::bind(&addr, server.queue())
+    let http = gaps::serve::HttpServer::bind_with(&addr, server.queue(), http_cfg)
         .with_context(|| format!("binding {addr}"))?;
     eprintln!(
         "serving on http://{} — POST /search, POST /search_batch, GET /healthz",

@@ -32,6 +32,16 @@ pub enum SearchError {
     InvalidConfig { message: String },
     /// An I/O failure on the interface path (REPL stream, config file).
     Io { message: String },
+    /// The service cannot take the request right now (executor shutting
+    /// down, injected crash, node lost mid-flight) — a retryable
+    /// availability condition, not a server fault.
+    Unavailable { message: String },
+    /// The request's `deadline_ms` budget elapsed before a result was
+    /// produced.
+    DeadlineExceeded { deadline_ms: u64 },
+    /// The admission queue is at its high-water depth; retry after the
+    /// hinted delay.
+    Overloaded { retry_after_ms: u64 },
     /// Internal invariant breach (a bug, not a user error).
     Internal { message: String },
 }
@@ -57,6 +67,11 @@ impl SearchError {
         SearchError::Internal { message: message.to_string() }
     }
 
+    /// Build an availability error (retryable; not a server fault).
+    pub fn unavailable(message: impl std::fmt::Display) -> SearchError {
+        SearchError::Unavailable { message: message.to_string() }
+    }
+
     /// Stable machine-readable kind tag (wire encoding + error parity
     /// checks in tests).
     pub fn kind(&self) -> &'static str {
@@ -69,6 +84,9 @@ impl SearchError {
             SearchError::ExecutorFailure { .. } => "executor-failure",
             SearchError::InvalidConfig { .. } => "invalid-config",
             SearchError::Io { .. } => "io",
+            SearchError::Unavailable { .. } => "unavailable",
+            SearchError::DeadlineExceeded { .. } => "deadline-exceeded",
+            SearchError::Overloaded { .. } => "overloaded",
             SearchError::Internal { .. } => "internal",
         }
     }
@@ -79,6 +97,12 @@ impl SearchError {
         match self {
             SearchError::NoLiveReplica { source } | SearchError::SourceUnknown { source } => {
                 pairs.push(("source", Json::from(*source as i64)));
+            }
+            SearchError::DeadlineExceeded { deadline_ms } => {
+                pairs.push(("deadline_ms", Json::from(*deadline_ms as i64)));
+            }
+            SearchError::Overloaded { retry_after_ms } => {
+                pairs.push(("retry_after_ms", Json::from(*retry_after_ms as i64)));
             }
             _ => {}
         }
@@ -100,6 +124,15 @@ impl std::fmt::Display for SearchError {
             SearchError::ExecutorFailure { message } => write!(f, "executor failure: {message}"),
             SearchError::InvalidConfig { message } => write!(f, "invalid config: {message}"),
             SearchError::Io { message } => write!(f, "io error: {message}"),
+            SearchError::Unavailable { message } => {
+                write!(f, "service unavailable: {message}")
+            }
+            SearchError::DeadlineExceeded { deadline_ms } => {
+                write!(f, "deadline of {deadline_ms} ms exceeded")
+            }
+            SearchError::Overloaded { retry_after_ms } => {
+                write!(f, "admission queue full; retry after {retry_after_ms} ms")
+            }
             SearchError::Internal { message } => write!(f, "internal error: {message}"),
         }
     }
@@ -128,6 +161,9 @@ mod tests {
             SearchError::executor("boom"),
             SearchError::config("bad"),
             SearchError::Io { message: "eof".into() },
+            SearchError::unavailable("draining"),
+            SearchError::DeadlineExceeded { deadline_ms: 50 },
+            SearchError::Overloaded { retry_after_ms: 25 },
             SearchError::internal("bug"),
         ];
         let mut kinds: Vec<&str> = all.iter().map(|e| e.kind()).collect();
@@ -143,6 +179,16 @@ mod tests {
         assert_eq!(j.get("kind").unwrap().as_str(), Some("no-live-replica"));
         assert_eq!(j.get("source").unwrap().as_i64(), Some(7));
         assert!(j.get("message").unwrap().as_str().unwrap().contains("7"));
+    }
+
+    #[test]
+    fn json_carries_budget_hints() {
+        let d = SearchError::DeadlineExceeded { deadline_ms: 120 }.to_json();
+        assert_eq!(d.get("kind").unwrap().as_str(), Some("deadline-exceeded"));
+        assert_eq!(d.get("deadline_ms").unwrap().as_i64(), Some(120));
+        let o = SearchError::Overloaded { retry_after_ms: 40 }.to_json();
+        assert_eq!(o.get("kind").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(o.get("retry_after_ms").unwrap().as_i64(), Some(40));
     }
 
     #[test]

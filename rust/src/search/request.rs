@@ -74,6 +74,15 @@ pub struct SearchRequest {
     pub require: Vec<(Field, String)>,
     /// Replica-selection preference for the execution plan.
     pub replicas: ReplicaPref,
+    /// Wall-clock budget for the whole request, in milliseconds. When it
+    /// elapses before planning (or before a failover retry) completes,
+    /// the request fails with `SearchError::DeadlineExceeded`.
+    pub deadline_ms: Option<u64>,
+    /// Accept a degraded response: when some sources have no live
+    /// replica, return top-k over the reachable sources (with
+    /// `degraded: true` and the missing-source list in the wire form)
+    /// instead of failing the request.
+    pub allow_partial: bool,
     /// Attach a [`crate::coordinator::Explain`] record to the response.
     pub explain: bool,
 }
@@ -87,6 +96,8 @@ impl SearchRequest {
             year: None,
             require: Vec::new(),
             replicas: ReplicaPref::Any,
+            deadline_ms: None,
+            allow_partial: false,
             explain: false,
         }
     }
@@ -113,6 +124,20 @@ impl SearchRequest {
     /// Replica-selection preference.
     pub fn prefer_replicas(mut self, pref: ReplicaPref) -> SearchRequest {
         self.replicas = pref;
+        self
+    }
+
+    /// Wall-clock budget in milliseconds (typed `DeadlineExceeded` /
+    /// HTTP 504 when it elapses).
+    pub fn deadline_ms(mut self, ms: u64) -> SearchRequest {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Accept a degraded (partial-coverage) response instead of a hard
+    /// availability error when sources are unreachable.
+    pub fn allow_partial(mut self, on: bool) -> SearchRequest {
+        self.allow_partial = on;
         self
     }
 
@@ -162,6 +187,8 @@ impl SearchRequest {
             query,
             top_k: self.top_k.unwrap_or(default_top_k),
             replicas: self.replicas,
+            deadline_ms: self.deadline_ms,
+            allow_partial: self.allow_partial,
             explain: self.explain,
         })
     }
@@ -197,6 +224,12 @@ impl SearchRequest {
         if self.replicas != ReplicaPref::Any {
             pairs.push(("replicas", Json::str(self.replicas.name())));
         }
+        if let Some(ms) = self.deadline_ms {
+            pairs.push(("deadline_ms", Json::from(ms as i64)));
+        }
+        if self.allow_partial {
+            pairs.push(("allow_partial", Json::Bool(true)));
+        }
         if self.explain {
             pairs.push(("explain", Json::Bool(true)));
         }
@@ -225,6 +258,12 @@ impl SearchRequest {
         if let Some(r) = v.get("replicas") {
             req.replicas = ReplicaPref::parse(r.as_str()?)?;
         }
+        if let Some(ms) = v.get("deadline_ms") {
+            req.deadline_ms = Some(ms.as_i64()? as u64);
+        }
+        if let Some(p) = v.get("allow_partial") {
+            req.allow_partial = p.as_bool()?;
+        }
         if let Some(e) = v.get("explain") {
             req.explain = e.as_bool()?;
         }
@@ -244,6 +283,8 @@ pub struct CompiledRequest {
     pub query: Query,
     pub top_k: usize,
     pub replicas: ReplicaPref,
+    pub deadline_ms: Option<u64>,
+    pub allow_partial: bool,
     pub explain: bool,
 }
 
@@ -258,10 +299,14 @@ mod tests {
             .year(2010..=2014)
             .require(Field::Title, "grid")
             .prefer_replicas(ReplicaPref::SameVo)
+            .deadline_ms(500)
+            .allow_partial(true)
             .explain(true);
         let c = req.compile(512, 10).unwrap();
         assert_eq!(c.top_k, 20);
         assert_eq!(c.replicas, ReplicaPref::SameVo);
+        assert_eq!(c.deadline_ms, Some(500));
+        assert!(c.allow_partial);
         assert!(c.explain);
         assert!(c.query.is_multivariate());
         // Builder constraints are hard conjuncts on the AST.
@@ -309,6 +354,8 @@ mod tests {
             .year(2000..=2003)
             .require(Field::Authors, "zhang")
             .prefer_replicas(ReplicaPref::Primary)
+            .deadline_ms(250)
+            .allow_partial(true)
             .explain(true);
         let parsed = SearchRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(parsed, req);

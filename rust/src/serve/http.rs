@@ -17,14 +17,22 @@
 //! | `GET /healthz`       | —                             | `{"status": "ok", "queue": {...}}` (admission counters) |
 //!
 //! Error statuses ([`status_for`]): `parse` → 400; `no-sources`,
-//! `no-nodes`, `no-live-replica` → 503; everything else (server-side
-//! faults) → 500. Protocol-level failures use 404/405/411/413/400 with a
-//! `{"kind", "message"}` body shaped like `SearchError::to_json`.
+//! `no-nodes`, `no-live-replica`, `unavailable` → 503; `overloaded` →
+//! 503 with a `Retry-After` header; `deadline-exceeded` → 504;
+//! everything else (server-side faults) → 500. Protocol-level failures
+//! use 404/405/408/411/413/400 with a `{"kind", "message"}` body shaped
+//! like `SearchError::to_json`.
+//!
+//! Sockets carry read/write timeouts ([`HttpConfig`]): a client that
+//! stalls mid-request is answered 408 instead of pinning its handler
+//! thread forever, and a peer that stops reading its response cannot
+//! wedge the writer.
 
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::search::{SearchError, SearchRequest};
 use crate::util::json::Json;
@@ -41,18 +49,55 @@ const MAX_BODY: usize = 1 << 20;
 /// separate [`MAX_BODY`] cap.
 const MAX_HEAD: usize = 16 << 10;
 
+/// Socket-level knobs for the front-end (the `gaps serve` CLI exposes
+/// the read timeout; the write timeout rides along).
+#[derive(Debug, Clone, Copy)]
+pub struct HttpConfig {
+    /// Per-socket read timeout: a client that stalls mid-request is
+    /// answered 408 instead of holding its handler thread forever. Zero
+    /// disables the timeout (blocking reads).
+    pub read_timeout: Duration,
+    /// Per-socket write timeout for the response path. Zero disables.
+    pub write_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            read_timeout: Duration::from_millis(10_000),
+            write_timeout: Duration::from_millis(10_000),
+        }
+    }
+}
+
 /// HTTP status for a typed search failure. Client-side query problems
 /// are 400s; capacity/availability exhaustion (every replica of some
-/// source down, no live nodes) is 503; internal faults are 500s.
+/// source down, no live nodes, draining, shedding) is 503; a blown
+/// per-request deadline is the gateway-timeout 504; internal faults are
+/// 500s.
 pub fn status_for(e: &SearchError) -> u16 {
     match e {
         SearchError::Parse { .. } => 400,
-        SearchError::NoSources | SearchError::NoNodes | SearchError::NoLiveReplica { .. } => 503,
+        SearchError::NoSources
+        | SearchError::NoNodes
+        | SearchError::NoLiveReplica { .. }
+        | SearchError::Unavailable { .. }
+        | SearchError::Overloaded { .. } => 503,
+        SearchError::DeadlineExceeded { .. } => 504,
         SearchError::SourceUnknown { .. }
         | SearchError::ExecutorFailure { .. }
         | SearchError::InvalidConfig { .. }
         | SearchError::Io { .. }
         | SearchError::Internal { .. } => 500,
+    }
+}
+
+/// `Retry-After` hint (whole seconds, rounded up) for errors that carry
+/// one — currently only admission-queue shedding.
+fn retry_after_secs(e: &SearchError) -> Option<u64> {
+    match e {
+        SearchError::Overloaded { retry_after_ms } => Some((retry_after_ms + 999) / 1000),
+        _ => None,
     }
 }
 
@@ -62,10 +107,12 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         411 => "Length Required",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Error",
     }
 }
@@ -83,6 +130,17 @@ struct HttpRequest {
     body: Vec<u8>,
 }
 
+/// Status for an I/O failure while reading the request: a socket read
+/// timeout (a stalled or too-slow client; `WouldBlock` on Unix,
+/// `TimedOut` on Windows) is 408, anything else is a client framing
+/// error.
+fn read_status(e: &io::Error) -> u16 {
+    match e.kind() {
+        io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => 408,
+        _ => 400,
+    }
+}
+
 /// Read one HTTP/1.1 request. Errors are `(status, message)` pairs ready
 /// to be rendered as an error response.
 fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)> {
@@ -93,7 +151,7 @@ fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)>
     let mut head = reader.take(MAX_HEAD as u64);
     let mut line = String::new();
     head.read_line(&mut line)
-        .map_err(|e| (400u16, format!("reading request line: {e}")))?;
+        .map_err(|e| (read_status(&e), format!("reading request line: {e}")))?;
     let mut parts = line.split_whitespace();
     let (method, path) = match (parts.next(), parts.next(), parts.next()) {
         (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/1.") => {
@@ -106,7 +164,7 @@ fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)>
     loop {
         let mut header = String::new();
         head.read_line(&mut header)
-            .map_err(|e| (400u16, format!("reading headers: {e}")))?;
+            .map_err(|e| (read_status(&e), format!("reading headers: {e}")))?;
         let header = header.trim_end();
         if header.is_empty() {
             break;
@@ -143,7 +201,7 @@ fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)>
             let mut body = vec![0u8; n];
             reader
                 .read_exact(&mut body)
-                .map_err(|e| (400u16, format!("reading {n}-byte body: {e}")))?;
+                .map_err(|e| (read_status(&e), format!("reading {n}-byte body: {e}")))?;
             body
         }
     };
@@ -173,9 +231,10 @@ fn parse_batch(v: &Json) -> Result<Vec<SearchRequest>, (u16, String)> {
         .collect()
 }
 
-/// Route one request to a `(status, body)` pair. Pure apart from the
-/// admission-queue interaction, so the protocol is unit-testable.
-fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json) {
+/// Route one request to a `(status, body, Retry-After)` triple. Pure
+/// apart from the admission-queue interaction, so the protocol is
+/// unit-testable.
+fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json, Option<u64>) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => (
             200,
@@ -183,6 +242,7 @@ fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json) {
                 ("status", Json::str("ok")),
                 ("queue", queue.stats().to_json()),
             ]),
+            None,
         ),
         ("POST", "/search") => {
             let parsed = parse_body_json(&req.body).and_then(|v| {
@@ -191,10 +251,10 @@ fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json) {
             });
             match parsed {
                 Ok(request) => match queue.submit(request) {
-                    Ok(resp) => (200, resp.to_json()),
-                    Err(e) => (status_for(&e), e.to_json()),
+                    Ok(resp) => (200, resp.to_json(), None),
+                    Err(e) => (status_for(&e), e.to_json(), retry_after_secs(&e)),
                 },
-                Err((status, msg)) => (status, error_body("bad-request", &msg)),
+                Err((status, msg)) => (status, error_body("bad-request", &msg), None),
             }
         }
         ("POST", "/search_batch") => {
@@ -208,23 +268,30 @@ fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json) {
                             Err(e) => Json::obj(vec![("error", e.to_json())]),
                         })
                         .collect();
-                    (200, Json::obj(vec![("results", Json::Arr(results))]))
+                    (200, Json::obj(vec![("results", Json::Arr(results))]), None)
                 }
-                Err((status, msg)) => (status, error_body("bad-request", &msg)),
+                Err((status, msg)) => (status, error_body("bad-request", &msg), None),
             }
         }
         (_, "/healthz" | "/search" | "/search_batch") => (
             405,
             error_body("method-not-allowed", &format!("{} not allowed here", req.method)),
+            None,
         ),
-        (_, path) => (404, error_body("not-found", &format!("no route {path}"))),
+        (_, path) => (404, error_body("not-found", &format!("no route {path}")), None),
     }
 }
 
-fn write_response(stream: &mut impl Write, status: u16, body: &Json) -> io::Result<()> {
+fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    body: &Json,
+    retry_after: Option<u64>,
+) -> io::Result<()> {
     let body = body.to_string_compact();
+    let retry = retry_after.map(|s| format!("Retry-After: {s}\r\n")).unwrap_or_default();
     let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n",
         reason(status),
         body.len(),
     );
@@ -233,14 +300,25 @@ fn write_response(stream: &mut impl Write, status: u16, body: &Json) -> io::Resu
     stream.flush()
 }
 
-fn handle_connection(stream: TcpStream, queue: &AdmissionQueue) -> io::Result<()> {
+fn handle_connection(stream: TcpStream, queue: &AdmissionQueue, cfg: HttpConfig) -> io::Result<()> {
+    // `set_read_timeout(Some(ZERO))` is an error on std sockets — zero
+    // means "no timeout" here, so gate instead of passing it through.
+    if cfg.read_timeout > Duration::ZERO {
+        stream.set_read_timeout(Some(cfg.read_timeout))?;
+    }
+    if cfg.write_timeout > Duration::ZERO {
+        stream.set_write_timeout(Some(cfg.write_timeout))?;
+    }
     let mut reader = BufReader::new(stream.try_clone()?);
-    let (status, body) = match read_request(&mut reader) {
+    let (status, body, retry_after) = match read_request(&mut reader) {
         Ok(req) => respond(&req, queue),
-        Err((status, msg)) => (status, error_body("bad-request", &msg)),
+        Err((status, msg)) => {
+            let kind = if status == 408 { "timeout" } else { "bad-request" };
+            (status, error_body(kind, &msg), None)
+        }
     };
     let mut writer = stream;
-    write_response(&mut writer, status, &body)
+    write_response(&mut writer, status, &body, retry_after)
 }
 
 /// The HTTP listener: accepts connections and serves each on its own
@@ -249,6 +327,7 @@ fn handle_connection(stream: TcpStream, queue: &AdmissionQueue) -> io::Result<()
 pub struct HttpServer {
     listener: TcpListener,
     queue: Arc<AdmissionQueue>,
+    cfg: HttpConfig,
     stop: Arc<AtomicBool>,
 }
 
@@ -270,12 +349,22 @@ impl ShutdownHandle {
 }
 
 impl HttpServer {
-    /// Bind the front-end. `addr` may use port 0 for an ephemeral port
-    /// (see [`HttpServer::local_addr`]).
+    /// Bind the front-end with default socket timeouts. `addr` may use
+    /// port 0 for an ephemeral port (see [`HttpServer::local_addr`]).
     pub fn bind(addr: &str, queue: Arc<AdmissionQueue>) -> io::Result<HttpServer> {
+        Self::bind_with(addr, queue, HttpConfig::default())
+    }
+
+    /// Bind the front-end with explicit socket timeouts.
+    pub fn bind_with(
+        addr: &str,
+        queue: Arc<AdmissionQueue>,
+        cfg: HttpConfig,
+    ) -> io::Result<HttpServer> {
         Ok(HttpServer {
             listener: TcpListener::bind(addr)?,
             queue,
+            cfg,
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -308,8 +397,9 @@ impl HttpServer {
                 }
             };
             let queue = Arc::clone(&self.queue);
+            let cfg = self.cfg;
             std::thread::spawn(move || {
-                let _ = handle_connection(stream, &queue);
+                let _ = handle_connection(stream, &queue, cfg);
             });
         }
         Ok(())
@@ -397,6 +487,9 @@ mod tests {
         assert_eq!(status_for(&SearchError::NoSources), 503);
         assert_eq!(status_for(&SearchError::NoNodes), 503);
         assert_eq!(status_for(&SearchError::NoLiveReplica { source: 1 }), 503);
+        assert_eq!(status_for(&SearchError::unavailable("draining")), 503);
+        assert_eq!(status_for(&SearchError::Overloaded { retry_after_ms: 25 }), 503);
+        assert_eq!(status_for(&SearchError::DeadlineExceeded { deadline_ms: 5 }), 504);
         assert_eq!(status_for(&SearchError::SourceUnknown { source: 1 }), 500);
         assert_eq!(status_for(&SearchError::executor("x")), 500);
         assert_eq!(status_for(&SearchError::config("x")), 500);
@@ -413,8 +506,9 @@ mod tests {
             path: path.into(),
             body: Vec::new(),
         };
-        let (status, body) = respond(&get("GET", "/healthz"), &queue);
+        let (status, body, retry) = respond(&get("GET", "/healthz"), &queue);
         assert_eq!(status, 200);
+        assert_eq!(retry, None);
         assert_eq!(body.get("status").unwrap().as_str(), Some("ok"));
         assert!(body.get("queue").unwrap().get("submitted").is_some());
 
@@ -449,10 +543,36 @@ mod tests {
     #[test]
     fn response_writer_emits_valid_http() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, &Json::obj(vec![("a", Json::from(1i64))])).unwrap();
+        write_response(&mut out, 200, &Json::obj(vec![("a", Json::from(1i64))]), None).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
         assert!(text.contains("Content-Length: 7\r\n"), "{text}");
+        assert!(!text.contains("Retry-After"), "{text}");
         assert!(text.ends_with("\r\n\r\n{\"a\":1}"), "{text}");
+    }
+
+    #[test]
+    fn shed_responses_carry_retry_after() {
+        // The header value rounds the millisecond hint up to whole
+        // seconds, so a 1.5s linger advises a 2s backoff.
+        let e = SearchError::Overloaded { retry_after_ms: 1500 };
+        assert_eq!(retry_after_secs(&e), Some(2));
+        assert_eq!(retry_after_secs(&SearchError::NoNodes), None);
+
+        let mut out = Vec::new();
+        write_response(&mut out, 503, &e.to_json(), retry_after_secs(&e)).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 2\r\n"), "{text}");
+    }
+
+    #[test]
+    fn read_timeouts_map_to_408() {
+        let timed = io::Error::new(io::ErrorKind::TimedOut, "slow client");
+        let blocked = io::Error::new(io::ErrorKind::WouldBlock, "slow client");
+        let broken = io::Error::new(io::ErrorKind::UnexpectedEof, "truncated");
+        assert_eq!(read_status(&timed), 408);
+        assert_eq!(read_status(&blocked), 408);
+        assert_eq!(read_status(&broken), 400);
     }
 }

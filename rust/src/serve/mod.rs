@@ -39,7 +39,11 @@
 //! cfg.workload.sub_shards = 4;
 //! cfg.search.use_xla = false;
 //! let server = SearchServer::start(
-//!     QueueConfig { max_batch: 8, max_linger: Duration::from_millis(1) },
+//!     QueueConfig {
+//!         max_batch: 8,
+//!         max_linger: Duration::from_millis(1),
+//!         ..QueueConfig::default()
+//!     },
 //!     move || GapsSystem::deploy(cfg, 3),
 //! )?;
 //! let resp = server.queue().submit(SearchRequest::new("grid computing"))?;
@@ -51,7 +55,7 @@
 pub mod http;
 pub mod queue;
 
-pub use http::{status_for, HttpServer, ShutdownHandle};
+pub use http::{status_for, HttpConfig, HttpServer, ShutdownHandle};
 pub use queue::{AdmissionQueue, AdmittedBatch, QueueConfig, QueueStats, ResponseTicket};
 
 use std::sync::{mpsc, Arc};
@@ -156,7 +160,7 @@ mod tests {
     fn server_answers_submissions() {
         let cfg = small_cfg();
         let server = SearchServer::start(
-            QueueConfig { max_batch: 4, max_linger: Duration::ZERO },
+            QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
             move || GapsSystem::deploy(cfg, 3),
         )
         .unwrap();

@@ -20,9 +20,17 @@
 //! the hits a dedicated system would have produced
 //! (`tests/prop_serve_parity.rs`).
 //!
-//! [`QueueStats`] counts admissions/batches/coalesced requests; the HTTP
-//! front-end exposes them on `GET /healthz` so coalescing is observable
-//! from outside.
+//! **Back-pressure:** the queue has a high-water mark
+//! ([`QueueConfig::max_depth`]). Submissions beyond it are shed
+//! immediately with a typed [`SearchError::Overloaded`] carrying a
+//! retry hint — bounded queues fail fast instead of building unbounded
+//! latency. Requests whose [`SearchRequest::deadline_ms`] already
+//! elapsed *while queued* are settled with `DeadlineExceeded` at drain
+//! time instead of wasting executor work.
+//!
+//! [`QueueStats`] counts admissions/batches/coalesced/shed/expired
+//! requests; the HTTP front-end exposes them on `GET /healthz` so
+//! coalescing and load shedding are observable from outside.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -42,11 +50,14 @@ pub struct QueueConfig {
     /// for co-arriving requests. Zero means "drain whatever is queued
     /// the moment the executor looks".
     pub max_linger: Duration,
+    /// High-water mark: submissions beyond this many pending requests
+    /// are shed with [`SearchError::Overloaded`] instead of queued.
+    pub max_depth: usize,
 }
 
 impl Default for QueueConfig {
     fn default() -> QueueConfig {
-        QueueConfig { max_batch: 16, max_linger: Duration::from_millis(2) }
+        QueueConfig { max_batch: 16, max_linger: Duration::from_millis(2), max_depth: 1024 }
     }
 }
 
@@ -64,6 +75,11 @@ pub struct QueueStats {
     pub coalesced: u64,
     /// Largest round drained so far.
     pub largest_batch: u64,
+    /// Submissions rejected at the high-water mark (load shedding).
+    pub shed: u64,
+    /// Requests whose deadline elapsed while queued (settled at drain
+    /// time without reaching the executor).
+    pub expired: u64,
 }
 
 impl QueueStats {
@@ -75,6 +91,8 @@ impl QueueStats {
             ("batches", Json::from(self.batches)),
             ("coalesced", Json::from(self.coalesced)),
             ("largest_batch", Json::from(self.largest_batch)),
+            ("shed", Json::from(self.shed)),
+            ("expired", Json::from(self.expired)),
         ])
     }
 }
@@ -174,19 +192,29 @@ impl AdmissionQueue {
 
     /// Enqueue several requests atomically (they occupy consecutive
     /// drain positions). Used by `POST /search_batch` so a user-provided
-    /// batch cannot be interleaved with other users' requests.
+    /// batch cannot be interleaved with other users' requests. Requests
+    /// beyond the high-water mark are shed individually (a batch that
+    /// straddles the mark is admitted up to it).
     pub fn enqueue_all(&self, requests: Vec<SearchRequest>) -> Vec<ResponseTicket> {
         let mut tickets = Vec::with_capacity(requests.len());
         let mut inner = self.inner.lock().unwrap();
         let arrived = Instant::now();
+        let retry_after_ms = self.cfg.max_linger.as_millis().max(1) as u64;
         for request in requests {
             let (tx, rx) = mpsc::channel();
-            if inner.open {
+            if !inner.open {
+                // Reject after shutdown: settle the ticket immediately
+                // with a retryable availability error (the service is
+                // draining, not broken).
+                let _ = tx.send(Err(SearchError::unavailable("admission queue is shut down")));
+            } else if inner.pending.len() >= self.cfg.max_depth {
+                // Load shedding: fail fast at the high-water mark rather
+                // than queue unbounded latency.
+                inner.stats.shed += 1;
+                let _ = tx.send(Err(SearchError::Overloaded { retry_after_ms }));
+            } else {
                 inner.stats.submitted += 1;
                 inner.pending.push_back(Pending { request, arrived, reply: tx });
-            } else {
-                // Reject after shutdown: settle the ticket immediately.
-                let _ = tx.send(Err(SearchError::internal("admission queue is shut down")));
             }
             tickets.push(ResponseTicket { rx });
         }
@@ -211,52 +239,73 @@ impl AdmissionQueue {
 
     /// Executor side: block for the next coalesced round. Returns `None`
     /// once the queue is shut down *and* drained — the executor's signal
-    /// to exit.
+    /// to exit. Requests whose deadline elapsed while queued are settled
+    /// with `DeadlineExceeded` here and never reach the executor.
     pub fn next_batch(&self) -> Option<AdmittedBatch> {
         let mut inner = self.inner.lock().unwrap();
-        loop {
-            if !inner.pending.is_empty() {
-                break;
+        'rounds: loop {
+            loop {
+                if !inner.pending.is_empty() {
+                    break;
+                }
+                if !inner.open {
+                    return None;
+                }
+                inner = self.arrived.wait(inner).unwrap();
             }
-            if !inner.open {
-                return None;
-            }
-            inner = self.arrived.wait(inner).unwrap();
-        }
 
-        // Linger for co-arrivals: up to `max_linger` past the *oldest*
-        // pending request's arrival (a request never waits longer than
-        // the linger budget, even if the executor was busy), or until a
-        // full round is waiting.
-        let deadline = inner.pending.front().expect("pending nonempty").arrived
-            + self.cfg.max_linger;
-        while inner.open && inner.pending.len() < self.cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+            // Linger for co-arrivals: up to `max_linger` past the *oldest*
+            // pending request's arrival (a request never waits longer than
+            // the linger budget, even if the executor was busy), or until a
+            // full round is waiting.
+            let deadline = inner.pending.front().expect("pending nonempty").arrived
+                + self.cfg.max_linger;
+            while inner.open && inner.pending.len() < self.cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) =
+                    self.arrived.wait_timeout(inner, deadline - now).unwrap();
+                inner = guard;
+                if timeout.timed_out() {
+                    break;
+                }
             }
-            let (guard, timeout) =
-                self.arrived.wait_timeout(inner, deadline - now).unwrap();
-            inner = guard;
-            if timeout.timed_out() {
-                break;
-            }
-        }
 
-        let n = inner.pending.len().min(self.cfg.max_batch);
-        let mut requests = Vec::with_capacity(n);
-        let mut replies = Vec::with_capacity(n);
-        for p in inner.pending.drain(..n) {
-            requests.push(p.request);
-            replies.push(p.reply);
+            let n = inner.pending.len().min(self.cfg.max_batch);
+            let drained: Vec<Pending> = inner.pending.drain(..n).collect();
+            let mut requests = Vec::with_capacity(n);
+            let mut replies = Vec::with_capacity(n);
+            for p in drained {
+                let blown = p
+                    .request
+                    .deadline_ms
+                    .map(|ms| p.arrived.elapsed() >= Duration::from_millis(ms))
+                    .unwrap_or(false);
+                if blown {
+                    inner.stats.expired += 1;
+                    let ms = p.request.deadline_ms.unwrap_or(0);
+                    let _ = p.reply.send(Err(SearchError::DeadlineExceeded { deadline_ms: ms }));
+                    continue;
+                }
+                requests.push(p.request);
+                replies.push(p.reply);
+            }
+            if requests.is_empty() {
+                // Every drained request had expired in the queue; go back
+                // to waiting (or exit, if shut down and drained).
+                continue 'rounds;
+            }
+            let n = requests.len();
+            inner.stats.batches += 1;
+            inner.stats.executed += n as u64;
+            if n >= 2 {
+                inner.stats.coalesced += n as u64;
+            }
+            inner.stats.largest_batch = inner.stats.largest_batch.max(n as u64);
+            return Some(AdmittedBatch { requests, replies });
         }
-        inner.stats.batches += 1;
-        inner.stats.executed += n as u64;
-        if n >= 2 {
-            inner.stats.coalesced += n as u64;
-        }
-        inner.stats.largest_batch = inner.stats.largest_batch.max(n as u64);
-        Some(AdmittedBatch { requests, replies })
     }
 
     /// Close the queue: new submissions are rejected, pending requests
@@ -311,7 +360,11 @@ mod tests {
     use super::*;
 
     fn queue(max_batch: usize, linger: Duration) -> AdmissionQueue {
-        AdmissionQueue::new(QueueConfig { max_batch, max_linger: linger })
+        AdmissionQueue::new(QueueConfig {
+            max_batch,
+            max_linger: linger,
+            ..QueueConfig::default()
+        })
     }
 
     fn req(i: usize) -> SearchRequest {
@@ -395,6 +448,7 @@ mod tests {
         let q = AdmissionQueue::new(QueueConfig {
             max_batch: 8,
             max_linger: Duration::from_millis(300),
+            ..QueueConfig::default()
         });
         let _t0 = q.enqueue(req(0));
         std::thread::scope(|s| {
@@ -420,11 +474,69 @@ mod tests {
 
     #[test]
     fn submit_after_shutdown_is_rejected() {
+        // A draining queue is *unavailable* (retryable 503), not an
+        // internal fault: clients and load balancers treat the two very
+        // differently.
         let q = queue(4, Duration::ZERO);
         q.shutdown();
         let err = q.submit(req(0)).expect_err("closed queue must reject");
-        assert_eq!(err.kind(), "internal");
+        assert_eq!(err.kind(), "unavailable");
         assert_eq!(q.stats().submitted, 0);
+    }
+
+    #[test]
+    fn overload_sheds_beyond_max_depth() {
+        let q = AdmissionQueue::new(QueueConfig {
+            max_batch: 4,
+            max_linger: Duration::from_millis(7),
+            max_depth: 2,
+        });
+        let _t0 = q.enqueue(req(0));
+        let _t1 = q.enqueue(req(1));
+        let shed = q.enqueue(req(2));
+        let err = shed.wait().expect_err("beyond the high-water mark must shed");
+        assert_eq!(err.kind(), "overloaded");
+        match err {
+            SearchError::Overloaded { retry_after_ms } => assert_eq!(retry_after_ms, 7),
+            other => panic!("unexpected error {other:?}"),
+        }
+        let stats = q.stats();
+        assert_eq!(stats.submitted, 2, "shed requests are not admissions");
+        assert_eq!(stats.shed, 1);
+        // Draining frees capacity again.
+        q.next_batch().expect("round");
+        let _t3 = q.enqueue(req(3));
+        assert_eq!(q.stats().submitted, 3);
+        assert_eq!(q.stats().shed, 1);
+    }
+
+    #[test]
+    fn queued_past_deadline_settles_without_executing() {
+        let q = queue(4, Duration::ZERO);
+        let t_dead = q.enqueue(SearchRequest::new("stale").deadline_ms(1));
+        let t_live = q.enqueue(SearchRequest::new("fresh"));
+        std::thread::sleep(Duration::from_millis(20));
+        let b = q.next_batch().expect("round");
+        assert_eq!(b.requests().len(), 1, "expired request reached the executor");
+        assert_eq!(b.requests()[0].query, "fresh");
+        b.complete(vec![Err(SearchError::parse("x"))]);
+        let e = t_dead.wait().expect_err("deadline blew in the queue");
+        assert_eq!(e.kind(), "deadline-exceeded");
+        assert!(t_live.wait().is_err(), "live ticket still settles");
+        let stats = q.stats();
+        assert_eq!(stats.expired, 1);
+        assert_eq!(stats.executed, 1, "only the live request executed");
+    }
+
+    #[test]
+    fn fully_expired_round_does_not_stall_shutdown() {
+        let q = queue(4, Duration::ZERO);
+        let t = q.enqueue(SearchRequest::new("stale").deadline_ms(1));
+        std::thread::sleep(Duration::from_millis(10));
+        q.shutdown();
+        assert!(q.next_batch().is_none(), "expired round must not hang the drain");
+        assert_eq!(t.wait().expect_err("expired").kind(), "deadline-exceeded");
+        assert_eq!(q.stats().expired, 1);
     }
 
     #[test]
@@ -467,6 +579,8 @@ mod tests {
         assert_eq!(j.get("batches").unwrap().as_i64(), Some(1));
         assert_eq!(j.get("coalesced").unwrap().as_i64(), Some(2));
         assert_eq!(j.get("largest_batch").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("shed").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("expired").unwrap().as_i64(), Some(0));
     }
 
     #[test]

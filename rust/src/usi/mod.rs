@@ -273,6 +273,8 @@ mod tests {
             jobs: 0,
             candidates: 0,
             docs_scanned: 0,
+            degraded: false,
+            missing_sources: Vec::new(),
             explain: None,
         };
         assert!(format_response(&resp).contains("no results"));

@@ -13,7 +13,8 @@ use std::time::Duration;
 
 use gaps::config::GapsConfig;
 use gaps::coordinator::{GapsSystem, SearchResponse};
-use gaps::serve::{HttpServer, QueueConfig, SearchServer, ShutdownHandle};
+use gaps::fault::{ChaosPlan, FaultKind};
+use gaps::serve::{HttpConfig, HttpServer, QueueConfig, SearchServer, ShutdownHandle};
 use gaps::util::json::Json;
 
 fn small_cfg() -> GapsConfig {
@@ -35,9 +36,15 @@ struct TestStack {
 impl TestStack {
     fn start(queue_cfg: QueueConfig) -> TestStack {
         let cfg = small_cfg();
-        let server =
-            SearchServer::start(queue_cfg, move || GapsSystem::deploy(cfg, 3)).unwrap();
-        let http = HttpServer::bind("127.0.0.1:0", server.queue()).unwrap();
+        Self::start_with(queue_cfg, HttpConfig::default(), move || GapsSystem::deploy(cfg, 3))
+    }
+
+    fn start_with<F>(queue_cfg: QueueConfig, http_cfg: HttpConfig, deploy: F) -> TestStack
+    where
+        F: FnOnce() -> Result<GapsSystem, gaps::search::SearchError> + Send + 'static,
+    {
+        let server = SearchServer::start(queue_cfg, deploy).unwrap();
+        let http = HttpServer::bind_with("127.0.0.1:0", server.queue(), http_cfg).unwrap();
         let addr = http.local_addr().unwrap();
         let stopper = http.shutdown_handle().unwrap();
         let accept_thread = std::thread::spawn(move || {
@@ -98,8 +105,88 @@ fn healthz_reports_queue_counters() {
     assert_eq!(status, 200);
     assert_eq!(body.get("status").unwrap().as_str(), Some("ok"));
     let queue = body.get("queue").expect("queue counters");
-    for key in ["submitted", "executed", "batches", "coalesced", "largest_batch"] {
+    for key in ["submitted", "executed", "batches", "coalesced", "largest_batch", "shed", "expired"]
+    {
         assert!(queue.get(key).is_some(), "missing {key}");
+    }
+}
+
+/// Send raw bytes and read whatever response comes back (for requests
+/// the well-formed [`http`] helper cannot express).
+fn http_raw(addr: SocketAddr, raw: &[u8]) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(raw).expect("send");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("receive");
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {text:?}"));
+    (status, text)
+}
+
+#[test]
+fn oversized_body_is_413_over_the_wire() {
+    let stack = TestStack::start(QueueConfig::default());
+    // The server must reject on the declared length alone — no body
+    // bytes are ever sent, so a 413 here proves it did not try to
+    // buffer 2 MB first.
+    let (status, text) = http_raw(
+        stack.addr,
+        b"POST /search HTTP/1.1\r\nHost: gaps-test\r\nContent-Length: 2097152\r\n\r\n",
+    );
+    assert_eq!(status, 413, "{text}");
+    assert!(text.contains("bad-request"), "{text}");
+}
+
+#[test]
+fn stalled_client_is_answered_408() {
+    // A client that sends half a request and then goes quiet must get a
+    // 408 once the socket read timeout fires — not pin its handler
+    // thread forever.
+    let cfg = small_cfg();
+    let http_cfg = HttpConfig {
+        read_timeout: Duration::from_millis(150),
+        write_timeout: Duration::from_millis(1000),
+    };
+    let stack = TestStack::start_with(QueueConfig::default(), http_cfg, move || {
+        GapsSystem::deploy(cfg, 3)
+    });
+
+    let mut stream = TcpStream::connect(stack.addr).expect("connect");
+    // Declared 20-byte body, 4 bytes delivered, then silence.
+    stream
+        .write_all(b"POST /search HTTP/1.1\r\nHost: gaps-test\r\nContent-Length: 20\r\n\r\n{\"qu")
+        .expect("send partial");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("receive");
+    assert!(text.starts_with("HTTP/1.1 408 "), "{text}");
+    assert!(text.contains("\"timeout\""), "{text}");
+}
+
+#[test]
+fn downed_node_recovers_behind_the_http_front() {
+    // A flaky node fails its first job (mid-flight failover keeps the
+    // response complete), sits out probation, recovers, and rejoins —
+    // all invisible to HTTP clients except in the failover counters.
+    let mut cfg = small_cfg();
+    cfg.grid.probe_after_ticks = 1;
+    let stack = TestStack::start_with(QueueConfig::default(), HttpConfig::default(), move || {
+        let mut sys = GapsSystem::deploy(cfg, 3)?;
+        let victim = sys.deployment().active[1];
+        sys.set_fault_injector(
+            ChaosPlan::new().with_fault(victim, FaultKind::FlakyThenRecover { failures: 1 }),
+        );
+        Ok(sys)
+    });
+    for _ in 0..2 {
+        let (status, body) =
+            http(stack.addr, "POST", "/search", Some(r#"{"query": "grid computing"}"#));
+        assert_eq!(status, 200, "{body:?}");
+        let resp = SearchResponse::from_json(&body).unwrap();
+        assert!(!resp.degraded, "failover must keep full coverage");
+        assert_eq!(resp.docs_scanned, 400);
     }
 }
 
@@ -108,6 +195,7 @@ fn search_roundtrips_the_shared_wire_forms() {
     let stack = TestStack::start(QueueConfig {
         max_batch: 8,
         max_linger: Duration::from_millis(1),
+        ..QueueConfig::default()
     });
     let (status, body) = http(
         stack.addr,
@@ -169,6 +257,7 @@ fn concurrent_http_clients_are_coalesced() {
     let stack = TestStack::start(QueueConfig {
         max_batch: 16,
         max_linger: Duration::from_millis(300),
+        ..QueueConfig::default()
     });
     let users = 6;
     let addr = stack.addr;

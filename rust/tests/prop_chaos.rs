@@ -1,0 +1,252 @@
+//! Chaos property: under an arbitrary seeded fault schedule, every
+//! response the system returns is exactly one of
+//!
+//! (a) **bit-identical** to the fault-free oracle (failover hid the
+//!     faults entirely — same hits, same score bits, same counters);
+//! (b) a **truthful degraded** response: the request opted in with
+//!     `allow_partial`, the missing-source list is sorted, deduplicated
+//!     and non-empty, every replica of every missing source carries a
+//!     crash-capable injected fault, no hit leaks out of a missing
+//!     source's doc range, and `docs_scanned` accounts for exactly the
+//!     reachable remainder of the corpus; or
+//! (c) a **typed** availability/deadline/parse error from the known set
+//!
+//! — never a panic, a hang, or a silently wrong answer. Schedules are
+//! pure functions of a `u64` seed ([`ChaosPlan::from_seed`]), so any
+//! failure this test finds replays exactly (`GAPS_PROP_SEED=...`).
+
+use std::sync::{Arc, OnceLock};
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::{Deployment, GapsSystem, SearchResponse};
+use gaps::fault::ChaosPlan;
+use gaps::metrics::sample_queries;
+use gaps::search::{SearchError, SearchRequest};
+use gaps::util::prop::{check, Config};
+use gaps::util::rng::Rng;
+
+const TOTAL_DOCS: u64 = 600;
+
+fn cfg() -> GapsConfig {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = TOTAL_DOCS as usize;
+    cfg.workload.sub_shards = 8;
+    cfg.search.use_xla = false;
+    cfg
+}
+
+/// One deployment + query pool shared across every case (systems are
+/// rebuilt per case — they are cheap over a shared deployment — so a
+/// case's fault history never bleeds into the next).
+fn fixture() -> &'static (Arc<Deployment>, Vec<String>) {
+    static FIXTURE: OnceLock<(Arc<Deployment>, Vec<String>)> = OnceLock::new();
+    FIXTURE.get_or_init(|| {
+        let dep = Arc::new(Deployment::build(&cfg(), 6).unwrap());
+        let queries = sample_queries(&dep, 24, 0xC4A05_1);
+        (dep, queries)
+    })
+}
+
+#[derive(Debug, Clone)]
+struct ChaosCase {
+    /// Seed for [`ChaosPlan::from_seed`] over the active nodes.
+    seed: u64,
+    requests: Vec<SearchRequest>,
+}
+
+fn gen_case(rng: &mut Rng, size: usize) -> ChaosCase {
+    let (_, pool) = fixture();
+    let n = rng.range(1, size.clamp(2, 6));
+    let requests = (0..n)
+        .map(|_| {
+            let mut query = pool[rng.range(0, pool.len())].clone();
+            if rng.chance(0.08) {
+                // Stopword-only input: parse errors must ride through
+                // chaos unchanged.
+                query = "the of and".to_string();
+            }
+            let mut req = SearchRequest::new(query);
+            if rng.chance(0.5) {
+                req = req.allow_partial(true);
+            }
+            if rng.chance(0.3) {
+                req = req.top_k(rng.range(1, 12));
+            }
+            if rng.chance(0.05) {
+                // An already-blown deadline: must surface as the typed
+                // deadline error, faults or not.
+                req = req.deadline_ms(0);
+            }
+            req
+        })
+        .collect();
+    ChaosCase { seed: rng.next_u64(), requests }
+}
+
+/// Error kinds a chaos run may legitimately surface.
+const TYPED_KINDS: &[&str] =
+    &["parse", "deadline-exceeded", "unavailable", "no-live-replica", "no-nodes"];
+
+fn classify(
+    i: usize,
+    req: &SearchRequest,
+    plan: &ChaosPlan,
+    dep: &Deployment,
+    want: &Result<SearchResponse, SearchError>,
+    got: &Result<SearchResponse, SearchError>,
+) -> Result<(), String> {
+    let label = format!("request {i} {:?} (seed {})", req.query, plan.seed);
+    match got {
+        // (a) clean response: bit-identical to the fault-free oracle.
+        Ok(resp) if !resp.degraded => {
+            if !resp.missing_sources.is_empty() {
+                return Err(format!("{label}: non-degraded but missing {:?}", resp.missing_sources));
+            }
+            let want = match want {
+                Ok(w) => w,
+                Err(e) => return Err(format!("{label}: chaos ok but oracle failed ({e})")),
+            };
+            let ids_w: Vec<u64> = want.hits.iter().map(|h| h.global_id).collect();
+            let ids_g: Vec<u64> = resp.hits.iter().map(|h| h.global_id).collect();
+            if ids_w != ids_g {
+                return Err(format!("{label}: hits {ids_g:?} != oracle {ids_w:?}"));
+            }
+            for (w, g) in want.hits.iter().zip(&resp.hits) {
+                if w.score.to_bits() != g.score.to_bits() {
+                    return Err(format!(
+                        "{label}: score {} != oracle {} for doc {}",
+                        g.score, w.score, g.global_id
+                    ));
+                }
+            }
+            if resp.candidates != want.candidates || resp.docs_scanned != want.docs_scanned {
+                return Err(format!(
+                    "{label}: counters ({}, {}) != oracle ({}, {})",
+                    resp.candidates, resp.docs_scanned, want.candidates, want.docs_scanned
+                ));
+            }
+            Ok(())
+        }
+        // (b) degraded response: opted-in, and truthful about the damage.
+        Ok(resp) => {
+            if !req.allow_partial {
+                return Err(format!("{label}: degraded without allow_partial"));
+            }
+            let mut canon = resp.missing_sources.clone();
+            canon.sort_unstable();
+            canon.dedup();
+            if canon != resp.missing_sources || canon.is_empty() {
+                return Err(format!(
+                    "{label}: missing list not sorted/deduped/non-empty: {:?}",
+                    resp.missing_sources
+                ));
+            }
+            let mut missing_docs = 0u64;
+            for &s in &resp.missing_sources {
+                let src = dep
+                    .locator
+                    .source(s)
+                    .ok_or_else(|| format!("{label}: unknown missing source {s}"))?;
+                // Truthfulness: a source may only go missing if every
+                // replica carries a fault that can actually crash jobs.
+                for &node in &src.replicas {
+                    if !plan.can_crash(node) {
+                        return Err(format!(
+                            "{label}: source {s} reported missing but replica {node} \
+                             has no crash-capable fault"
+                        ));
+                    }
+                }
+                missing_docs += src.doc_count;
+                for h in &resp.hits {
+                    if (src.doc_start..src.doc_start + src.doc_count).contains(&h.global_id) {
+                        return Err(format!(
+                            "{label}: hit {} leaked from missing source {s}",
+                            h.global_id
+                        ));
+                    }
+                }
+            }
+            if resp.docs_scanned != TOTAL_DOCS - missing_docs {
+                return Err(format!(
+                    "{label}: docs_scanned {} != {} - {missing_docs} missing",
+                    resp.docs_scanned, TOTAL_DOCS
+                ));
+            }
+            Ok(())
+        }
+        // (c) typed error from the documented set.
+        Err(e) => {
+            if !TYPED_KINDS.contains(&e.kind()) {
+                return Err(format!("{label}: unexpected error kind {:?} ({e})", e.kind()));
+            }
+            // A parse error is a property of the request, not the
+            // faults: the oracle must agree.
+            if e.kind() == "parse" && !matches!(want, Err(w) if w.kind() == "parse") {
+                return Err(format!("{label}: chaos-only parse error"));
+            }
+            Ok(())
+        }
+    }
+}
+
+fn run_case(case: &ChaosCase) -> Result<(), String> {
+    let (dep, _) = fixture();
+    let mut oracle =
+        GapsSystem::from_deployment(cfg(), Arc::clone(dep)).map_err(|e| e.to_string())?;
+    let mut chaos =
+        GapsSystem::from_deployment(cfg(), Arc::clone(dep)).map_err(|e| e.to_string())?;
+    let plan = ChaosPlan::from_seed(case.seed, &dep.active);
+    chaos.set_fault_injector(plan.clone());
+
+    let want = oracle.search_batch(&case.requests);
+    let got = chaos.search_batch(&case.requests);
+    for (i, ((req, want), got)) in case.requests.iter().zip(&want).zip(&got).enumerate() {
+        classify(i, req, &plan, dep, want, got)?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_chaos_responses_are_exact_degraded_or_typed() {
+    let prop_cfg = Config { cases: 40, max_size: 6, ..Config::default() };
+    check("chaos-response-trichotomy", &prop_cfg, gen_case, run_case);
+}
+
+/// Determinism evidence: the same seed drives the same schedule to the
+/// same outcomes — hit ids, score bits, degradation flags, missing
+/// lists and error kinds all replay.
+#[test]
+fn chaos_outcomes_replay_from_the_seed() {
+    let (dep, pool) = fixture();
+    let requests: Vec<SearchRequest> = pool
+        .iter()
+        .take(4)
+        .map(|q| SearchRequest::new(q.clone()).allow_partial(true))
+        .collect();
+    for seed in [1u64, 42, 0xBAD_5EED] {
+        let mut runs: Vec<Vec<String>> = Vec::new();
+        for _ in 0..2 {
+            let mut sys = GapsSystem::from_deployment(cfg(), Arc::clone(dep)).unwrap();
+            sys.set_fault_injector(ChaosPlan::from_seed(seed, &dep.active));
+            let outcomes = sys
+                .search_batch(&requests)
+                .into_iter()
+                .map(|r| match r {
+                    Ok(resp) => {
+                        let ids: Vec<u64> = resp.hits.iter().map(|h| h.global_id).collect();
+                        let bits: Vec<u64> =
+                            resp.hits.iter().map(|h| h.score.to_bits()).collect();
+                        format!(
+                            "ok degraded={} missing={:?} ids={ids:?} bits={bits:?}",
+                            resp.degraded, resp.missing_sources
+                        )
+                    }
+                    Err(e) => format!("err {}", e.kind()),
+                })
+                .collect();
+            runs.push(outcomes);
+        }
+        assert_eq!(runs[0], runs[1], "seed {seed} did not replay");
+    }
+}

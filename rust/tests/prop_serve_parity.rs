@@ -147,6 +147,7 @@ fn run_case(case: &ServeCase) -> Result<(), String> {
         QueueConfig {
             max_batch: case.max_batch,
             max_linger: Duration::from_millis(case.linger_ms),
+            ..QueueConfig::default()
         },
         move || GapsSystem::from_deployment(cfg(), dep_for_server),
     )
@@ -218,7 +219,11 @@ fn concurrent_users_are_observably_coalesced() {
     let (dep, pool) = fixture();
     let dep_for_server = Arc::clone(dep);
     let server = SearchServer::start(
-        QueueConfig { max_batch: 16, max_linger: Duration::from_millis(300) },
+        QueueConfig {
+            max_batch: 16,
+            max_linger: Duration::from_millis(300),
+            ..QueueConfig::default()
+        },
         move || GapsSystem::from_deployment(cfg(), dep_for_server),
     )
     .unwrap();
