@@ -28,6 +28,12 @@
 //!   fault-free oracle: success/degraded/error rates and failover retry
 //!   counters, with structural invariants asserted even under
 //!   `GAPS_BENCH_NO_ASSERT`;
+//! * **persistence** — cold boot (generate + analyze + index) vs
+//!   snapshot load of the same deployment, plus live ingestion
+//!   throughput (docs/s through `GapsSystem::ingest`, seals included).
+//!   The parity checks inside it (snapshot-booted node bit-identical to
+//!   the writer) are **structural** and asserted even under
+//!   `GAPS_BENCH_NO_ASSERT`;
 //! * **sweep** — the Fig 3 response-time percentiles;
 //! * **counters** — deterministic block-max pruning counters on a
 //!   *fixed* workload (seeds, sizes, and k are constants — deliberately
@@ -499,6 +505,8 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
             largest_batch: total.largest_batch,
             shed: total.shed - warm.shed,
             expired: total.expired - warm.expired,
+            ingest_batches: total.ingest_batches - warm.ingest_batches,
+            ingest_docs: total.ingest_docs - warm.ingest_docs,
         };
         ((users * rounds * queries.len()) as f64 / elapsed.max(1e-12), stats)
     };
@@ -650,6 +658,117 @@ fn bench_availability(cfg: &GapsConfig) -> Json {
     ])
 }
 
+/// Persistence: cold boot (generate + tokenize + index the corpus) vs
+/// booting the identical deployment from an on-disk snapshot, plus live
+/// ingestion throughput (docs/s through `GapsSystem::ingest`, seals and
+/// compaction merges included). The wall-clock ratio is the headline —
+/// snapshot load skips the whole analysis pipeline — but the parity
+/// checks are **structural** and asserted even under
+/// `GAPS_BENCH_NO_ASSERT`: a snapshot that loads fast and serves
+/// different bits is a broken snapshot, not a slow one.
+fn bench_persistence(cfg: &GapsConfig) -> Json {
+    let nodes = 4usize;
+    let mut c = cfg.clone();
+    c.search.use_xla = false;
+    c.storage.seal_docs = 64;
+
+    let t = Instant::now();
+    let mut sys = GapsSystem::deploy(c.clone(), nodes).expect("cold deploy");
+    let cold_s = t.elapsed().as_secs_f64();
+
+    // Live ingestion: fresh publications from the same generator family
+    // (generation is pure in `(seed, i)`, so a wider generator extends
+    // the corpus seamlessly), measured through ingest + flush so seal
+    // and merge work is part of the cost, exactly as a serving node
+    // pays it.
+    let base = sys.deployment().locator.total_docs();
+    let ingest_n = (c.workload.num_docs / 8).clamp(256, 4096);
+    let spec = CorpusSpec {
+        seed: c.workload.seed,
+        num_docs: base + ingest_n,
+        ..CorpusSpec::default()
+    };
+    let fresh = CorpusGenerator::new(spec).generate_range(base, ingest_n);
+    let t = Instant::now();
+    let rep = sys.ingest(fresh);
+    let flushed = sys.flush_ingest();
+    let ingest_s = t.elapsed().as_secs_f64();
+    let docs_per_s = ingest_n as f64 / ingest_s.max(1e-12);
+    assert_eq!(rep.accepted as u64, ingest_n, "ingest dropped documents");
+    let seals = rep.sealed + flushed.sealed;
+    let merges = rep.merges + flushed.merges;
+
+    let dir = std::env::temp_dir().join("gaps_bench_persistence");
+    let _ = std::fs::remove_dir_all(&dir);
+    let t = Instant::now();
+    sys.write_snapshot(&dir).expect("write snapshot");
+    let write_s = t.elapsed().as_secs_f64();
+    let snapshot_bytes: u64 = std::fs::read_dir(&dir)
+        .expect("snapshot dir")
+        .map(|e| e.unwrap().metadata().unwrap().len())
+        .sum();
+
+    let t = Instant::now();
+    let mut restored =
+        GapsSystem::deploy_from_snapshot(c.clone(), nodes, &dir).expect("snapshot boot");
+    let load_s = t.elapsed().as_secs_f64();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Structural parity: the snapshot-booted node answers with the
+    // writer's exact bits (ids and scores), at the writer's epoch.
+    assert_eq!(restored.index_epoch(), sys.index_epoch());
+    assert_eq!(
+        restored.index_health().searchable_docs,
+        sys.index_health().searchable_docs
+    );
+    for q in sample_queries(sys.deployment(), 4, 0x5AFE) {
+        match (sys.search(&q), restored.search(&q)) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.hits.len(), b.hits.len(), "snapshot parity broke for {q:?}");
+                for (x, y) in a.hits.iter().zip(&b.hits) {
+                    assert_eq!(x.global_id, y.global_id, "snapshot parity broke for {q:?}");
+                    assert_eq!(
+                        x.score.to_bits(),
+                        y.score.to_bits(),
+                        "snapshot parity broke for {q:?}"
+                    );
+                }
+            }
+            (a, b) => {
+                assert_eq!(a.is_err(), b.is_err(), "snapshot parity broke for {q:?}")
+            }
+        }
+    }
+
+    let load_speedup = cold_s / load_s.max(1e-12);
+    println!(
+        "\n== persistence ({base} + {ingest_n} docs, {nodes} nodes) ==\n\
+         cold boot     {:8.1} ms  (generate + analyze + index)\n\
+         snapshot load {:8.1} ms  ({load_speedup:.2}x vs cold boot; {:.1} MiB \
+         on disk, written in {:.1} ms)\n\
+         ingestion     {docs_per_s:8.0} docs/s  ({seals} seals, {merges} merges)",
+        cold_s * 1e3,
+        load_s * 1e3,
+        snapshot_bytes as f64 / (1024.0 * 1024.0),
+        write_s * 1e3,
+    );
+
+    Json::obj(vec![
+        ("nodes", Json::from(nodes)),
+        ("base_docs", Json::from(base)),
+        ("ingest_docs", Json::from(ingest_n)),
+        ("cold_boot_ms", Json::from(cold_s * 1e3)),
+        ("snapshot_load_ms", Json::from(load_s * 1e3)),
+        ("load_speedup", Json::from(load_speedup)),
+        ("snapshot_write_ms", Json::from(write_s * 1e3)),
+        ("snapshot_bytes", Json::from(snapshot_bytes)),
+        ("ingest_docs_per_s", Json::from(docs_per_s)),
+        ("seals", Json::from(seals)),
+        ("merges", Json::from(merges)),
+        ("epoch", Json::from(sys.index_epoch())),
+    ])
+}
+
 fn main() {
     let mut cfg = GapsConfig::default();
     cfg.workload.num_docs = env_usize("GAPS_BENCH_DOCS", 60_000) as u64;
@@ -697,6 +816,9 @@ fn main() {
     let batch = bench_batch(&cfg);
     let serve = bench_serve(&cfg);
     let availability = bench_availability(&cfg);
+    let persistence = bench_persistence(&cfg);
+    let load_speedup =
+        persistence.get("load_speedup").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let micro_speedup = micro.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let fan_speedup = fanout.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let fan_workers = fanout.get("workers").and_then(|v| v.as_i64()).unwrap_or(1);
@@ -734,6 +856,7 @@ fn main() {
         ("batch", batch),
         ("serve", serve),
         ("availability", availability),
+        ("persistence", persistence),
         ("sweep", sweep_json),
     ]);
     let path = "BENCH_retrieval.json";
@@ -763,6 +886,14 @@ fn main() {
         assert!(
             micro_speedup >= 2.0,
             "retrieval micro speedup regressed: {micro_speedup:.2}x (floor 2x, target 3x)"
+        );
+    }
+    if enforce {
+        // Snapshot boot skips generation + tokenization + indexing —
+        // on any real corpus it must beat the cold path outright.
+        assert!(
+            load_speedup > 1.0,
+            "snapshot load slower than cold boot: {load_speedup:.2}x"
         );
     }
     if enforce && fan_workers >= 4 {

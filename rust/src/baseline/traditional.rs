@@ -210,6 +210,7 @@ impl TraditionalSearch {
                 .map(|(n, s)| (n.to_string(), s.len()))
                 .collect(),
             counters: total_counters,
+            epoch: 0, // the traditional baseline never ingests
         });
         Ok(SearchResponse {
             query: request.query.clone(),

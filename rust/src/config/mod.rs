@@ -184,12 +184,34 @@ impl Default for SearchConfig {
     }
 }
 
+/// Persistence + live-ingestion knobs (the `storage` config section).
+#[derive(Debug, Clone)]
+pub struct StorageConfig {
+    /// Snapshot directory: `gaps serve`/`gaps search` boot from it when
+    /// set (`--snapshot DIR`), `gaps snapshot` writes into it. Empty =
+    /// build the corpus from the generator as before.
+    pub snapshot_dir: String,
+    /// Buffered publications per source before the ingest buffer seals
+    /// into an immutable overlay segment (searchable from that point).
+    pub seal_docs: usize,
+    /// Sealed overlay segments per source that trigger a compaction
+    /// merge into one segment (values < 2 disable merging).
+    pub merge_fanout: usize,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig { snapshot_dir: String::new(), seal_docs: 512, merge_fanout: 4 }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone, Default)]
 pub struct GapsConfig {
     pub grid: GridConfig,
     pub workload: WorkloadConfig,
     pub search: SearchConfig,
+    pub storage: StorageConfig,
 }
 
 impl GapsConfig {
@@ -204,6 +226,7 @@ impl GapsConfig {
                 "grid" => apply_section(body, |k, v| self.set_grid(k, v))?,
                 "workload" => apply_section(body, |k, v| self.set_workload(k, v))?,
                 "search" => apply_section(body, |k, v| self.set_search(k, v))?,
+                "storage" => apply_section(body, |k, v| self.set_storage(k, v))?,
                 other => return Err(CliError(format!("unknown config section '{other}'"))),
             }
         }
@@ -282,6 +305,22 @@ impl GapsConfig {
         Ok(())
     }
 
+    fn set_storage(&mut self, key: &str, v: &Json) -> Result<(), CliError> {
+        let st = &mut self.storage;
+        match key {
+            "snapshot_dir" => {
+                st.snapshot_dir = v
+                    .as_str()
+                    .ok_or_else(|| CliError(format!("storage.{key} must be a string")))?
+                    .to_string()
+            }
+            "seal_docs" => st.seal_docs = as_usize(key, v)?,
+            "merge_fanout" => st.merge_fanout = as_usize(key, v)?,
+            _ => return Err(CliError(format!("unknown storage key '{key}'"))),
+        }
+        Ok(())
+    }
+
     /// Apply CLI flag overrides (flat names; see README "Configuration").
     pub fn apply_args(&mut self, args: &Args) -> Result<(), CliError> {
         if let Some(path) = args.get("config") {
@@ -316,6 +355,12 @@ impl GapsConfig {
         if let Some(dir) = args.get("artifacts") {
             s.artifact_dir = dir.to_string();
         }
+        let st = &mut self.storage;
+        st.seal_docs = args.get_parse("seal-docs", st.seal_docs)?;
+        st.merge_fanout = args.get_parse("merge-fanout", st.merge_fanout)?;
+        if let Some(dir) = args.get("snapshot") {
+            st.snapshot_dir = dir.to_string();
+        }
         Ok(())
     }
 
@@ -325,7 +370,8 @@ impl GapsConfig {
             "grid: {} VOs x {} nodes (speed {:.2}-{:.2}, lan {}us wan {}us, {} services)\n\
              workload: {} docs, {} queries (seed {})\n\
              search: F={} top_k={} max_cand={} policy={} xla={} artifacts={} workers={} \
-             failover_retries={}",
+             failover_retries={}\n\
+             storage: snapshot_dir={} seal_docs={} merge_fanout={}",
             self.grid.num_vos,
             self.grid.nodes_per_vo,
             self.grid.speed_min,
@@ -344,6 +390,9 @@ impl GapsConfig {
             self.search.artifact_dir,
             self.search.workers,
             self.search.failover_retries,
+            if self.storage.snapshot_dir.is_empty() { "-" } else { &self.storage.snapshot_dir },
+            self.storage.seal_docs,
+            self.storage.merge_fanout,
         )
     }
 }
@@ -461,6 +510,41 @@ mod tests {
         assert_eq!(c.search.effective_workers(), 3);
         c.search.workers = 0;
         assert!(c.search.effective_workers() >= 1, "auto resolves to >=1");
+    }
+
+    #[test]
+    fn storage_knobs_parse() {
+        let mut c = GapsConfig::default();
+        assert!(c.storage.snapshot_dir.is_empty());
+        assert_eq!(c.storage.seal_docs, 512);
+        assert_eq!(c.storage.merge_fanout, 4);
+        c.apply_json(
+            &Json::parse(
+                r#"{"storage": {"snapshot_dir": "/tmp/snap", "seal_docs": 64, "merge_fanout": 2}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.storage.snapshot_dir, "/tmp/snap");
+        assert_eq!(c.storage.seal_docs, 64);
+        assert_eq!(c.storage.merge_fanout, 2);
+        // Unknown storage keys are typos, not silently ignored.
+        assert!(c.apply_json(&Json::parse(r#"{"storage": {"seal_dox": 1}}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn storage_cli_flags_apply() {
+        let mut c = GapsConfig::default();
+        let toks: Vec<String> =
+            ["--snapshot", "/tmp/snap2", "--seal-docs", "32", "--merge-fanout", "3"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let args = Args::parse(&toks, false, &[]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.storage.snapshot_dir, "/tmp/snap2");
+        assert_eq!(c.storage.seal_docs, 32);
+        assert_eq!(c.storage.merge_fanout, 3);
     }
 
     #[test]

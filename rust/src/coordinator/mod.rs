@@ -41,5 +41,5 @@ pub use qm::{JobStatus, QueryManager};
 pub use resource_manager::ResourceManager;
 pub use system::{
     counters_from_json, counters_to_json, CorpusData, Deployment, Explain, FailoverStats,
-    GapsSystem, Hit, SearchResponse,
+    GapsSystem, Hit, IndexHealth, IngestReport, SearchResponse,
 };

@@ -37,6 +37,7 @@
 //! ARCHITECTURE.md §Substitutions for why this composition is faithful.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -44,7 +45,11 @@ use crate::config::GapsConfig;
 use crate::corpus::{CorpusGenerator, CorpusSpec, Publication};
 use crate::fault::{ChaosPlan, FaultDecision, FaultInjector};
 use crate::grid::{GridFabric, NodeId};
-use crate::index::{GlobalStats, RetrievalCounters, Shard};
+use crate::index::{GlobalStats, RetrievalCounters, Shard, ShardStats};
+use crate::storage::{
+    merge_shards, read_shard_snapshot, write_shard_snapshot, ManifestOverlay, ManifestSource,
+    SnapshotManifest,
+};
 use crate::runtime::Executor;
 use crate::search::{
     CompiledRequest, LocalHit, Query, ReplicaPref, Scorer, SearchError, SearchRequest,
@@ -239,6 +244,11 @@ pub struct Explain {
     pub plan: Vec<(String, usize)>,
     /// Retrieval counters summed over every shard this query touched.
     pub counters: RetrievalCounters,
+    /// Index epoch the response was computed at: bumped by every
+    /// ingestion seal and overlay merge, 0 for a never-ingested
+    /// deployment. Lets clients (and a future result cache) detect that
+    /// the searchable corpus changed between two responses.
+    pub epoch: u64,
 }
 
 impl Explain {
@@ -257,6 +267,7 @@ impl Explain {
                 ),
             ),
             ("counters", counters_to_json(&self.counters)),
+            ("epoch", Json::from(self.epoch)),
         ])
     }
 
@@ -280,6 +291,8 @@ impl Explain {
                 })
                 .collect::<Option<Vec<_>>>()?,
             counters: counters_from_json(v.get("counters")?)?,
+            // Absent in pre-persistence wire forms: default to epoch 0.
+            epoch: v.get("epoch").and_then(Json::as_i64).unwrap_or(0) as u64,
         })
     }
 }
@@ -448,6 +461,12 @@ struct JobOutput {
 /// fan-out can call it from worker threads while the coordinator keeps
 /// its `&mut self` bookkeeping.
 ///
+/// `stats` is the global statistics snapshot the batch scores against
+/// (the deployment's base stats, or the live stats including sealed
+/// ingestion overlays), `overlays` the sealed-segment map: a source's
+/// overlay segments are searched right after its base shard on the same
+/// node, and their hits enter the same placement-invariant merge.
+///
 /// `faults` is the executor-path fail-point: a chaos-scheduled node
 /// crashes before its first source, crashes halfway through its source
 /// list (partial work is discarded — re-searching a source on another
@@ -456,6 +475,8 @@ struct JobOutput {
 fn run_job(
     service: &SearchService,
     dep: &Deployment,
+    stats: &GlobalStats,
+    overlays: &BTreeMap<u32, SourceOverlay>,
     queries: &[(&Query, usize)],
     job: &JobDescription,
     scorer: &mut Scorer<'_>,
@@ -488,13 +509,28 @@ fn run_job(
             )));
         }
         let shard = dep.shard(*sid).ok_or(SearchError::SourceUnknown { source: *sid })?;
-        let outs = service.search_batch(shard, &dep.stats, queries, scorer)?;
+        let outs = service.search_batch(shard, stats, queries, scorer)?;
         docs += shard.len() as u64;
         for (qi, out) in outs.into_iter().enumerate() {
             work_measured += out.work_s;
             per_query_candidates[qi] += out.candidates;
             per_query_counters[qi].merge(&out.counters);
             hits_lists[qi].push(out.hits);
+        }
+        // Sealed ingestion overlays ride with their base source: an
+        // overlay segment is just another (small) shard, searched with
+        // the same stats and merged through the same top-k path.
+        if let Some(ov) = overlays.get(sid) {
+            for seg in &ov.sealed {
+                let outs = service.search_batch(seg, stats, queries, scorer)?;
+                docs += seg.len() as u64;
+                for (qi, out) in outs.into_iter().enumerate() {
+                    work_measured += out.work_s;
+                    per_query_candidates[qi] += out.candidates;
+                    per_query_counters[qi].merge(&out.counters);
+                    hits_lists[qi].push(out.hits);
+                }
+            }
         }
     }
     let per_query_hits = hits_lists
@@ -522,6 +558,153 @@ pub struct FailoverStats {
     pub recoveries: u64,
     /// Responses returned with `degraded: true`.
     pub degraded_responses: u64,
+}
+
+/// Per-source live-ingestion overlay: sealed immutable overlay segments
+/// (searchable, each an independently analyzed [`Shard`]) plus the
+/// unsealed buffer (accepted but not yet searchable).
+#[derive(Debug, Default)]
+struct SourceOverlay {
+    sealed: Vec<Shard>,
+    buffer: Vec<Publication>,
+}
+
+/// Live-ingestion state layered over the immutable base deployment.
+/// Tombstone-free and additive: publications only ever arrive, so the
+/// overlay model is append + seal + merge — no deletes to reconcile.
+#[derive(Debug)]
+struct IngestState {
+    /// source id -> its ingestion overlay (only sources that received
+    /// ingested docs have an entry).
+    overlays: BTreeMap<u32, SourceOverlay>,
+    /// Next corpus-global doc id ingestion will assign.
+    next_global_id: u64,
+    /// Index epoch: bumped by every seal and every overlay merge.
+    epoch: u64,
+    /// Cumulative seal / merge counts (health reporting).
+    seals: u64,
+    merges: u64,
+    /// Global stats covering base + sealed overlays, recomputed in
+    /// canonical (source id, segment) order on every seal/merge so a
+    /// snapshot-restored system reproduces them bit for bit. `None`
+    /// until the first seal — the no-ingest path scores against exactly
+    /// the deployment's own stats.
+    live_stats: Option<GlobalStats>,
+}
+
+impl IngestState {
+    fn new(next_global_id: u64) -> IngestState {
+        IngestState {
+            overlays: BTreeMap::new(),
+            next_global_id,
+            epoch: 0,
+            seals: 0,
+            merges: 0,
+            live_stats: None,
+        }
+    }
+}
+
+/// What one [`GapsSystem::ingest`] / [`GapsSystem::flush_ingest`] call
+/// did to the index.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IngestReport {
+    /// Publications accepted (assigned global ids) by this call.
+    pub accepted: usize,
+    /// Publications still buffered (unsearchable) across all sources.
+    pub buffered: usize,
+    /// Overlay segments sealed by this call.
+    pub sealed: usize,
+    /// Overlay compaction merges performed by this call.
+    pub merges: usize,
+    /// Index epoch after this call.
+    pub epoch: u64,
+}
+
+impl IngestReport {
+    /// JSON wire form (the `POST /ingest` response body).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accepted", Json::from(self.accepted)),
+            ("buffered", Json::from(self.buffered)),
+            ("sealed", Json::from(self.sealed)),
+            ("merges", Json::from(self.merges)),
+            ("epoch", Json::from(self.epoch)),
+        ])
+    }
+
+    /// Parse the wire form produced by [`IngestReport::to_json`].
+    pub fn from_json(v: &Json) -> Option<IngestReport> {
+        Some(IngestReport {
+            accepted: v.get("accepted")?.as_i64()? as usize,
+            buffered: v.get("buffered")?.as_i64()? as usize,
+            sealed: v.get("sealed")?.as_i64()? as usize,
+            merges: v.get("merges")?.as_i64()? as usize,
+            epoch: v.get("epoch")?.as_i64()? as u64,
+        })
+    }
+}
+
+/// Index-level health: the persistence/ingestion view `/healthz`
+/// reports next to the serving-queue statistics.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IndexHealth {
+    /// Index epoch (0 = never ingested).
+    pub epoch: u64,
+    /// Searchable docs: base corpus + sealed overlay segments.
+    pub searchable_docs: u64,
+    /// Ingested docs still buffered (unsearchable until their seal).
+    pub buffered_docs: u64,
+    /// (source id, sealed overlay segment count), sources with at least
+    /// one sealed segment only, ascending by source id.
+    pub segments: Vec<(u32, usize)>,
+    /// Cumulative seal / merge counts.
+    pub seals: u64,
+    pub merges: u64,
+}
+
+impl IndexHealth {
+    /// JSON wire form (the `index` object of `/healthz`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::from(self.epoch)),
+            ("searchable_docs", Json::from(self.searchable_docs)),
+            ("buffered_docs", Json::from(self.buffered_docs)),
+            (
+                "segments",
+                Json::Arr(
+                    self.segments
+                        .iter()
+                        .map(|&(sid, n)| {
+                            Json::Arr(vec![Json::from(sid as i64), Json::from(n)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("seals", Json::from(self.seals)),
+            ("merges", Json::from(self.merges)),
+        ])
+    }
+
+    /// Parse the wire form produced by [`IndexHealth::to_json`].
+    pub fn from_json(v: &Json) -> Option<IndexHealth> {
+        Some(IndexHealth {
+            epoch: v.get("epoch")?.as_i64()? as u64,
+            searchable_docs: v.get("searchable_docs")?.as_i64()? as u64,
+            buffered_docs: v.get("buffered_docs")?.as_i64()? as u64,
+            segments: v
+                .get("segments")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr()?;
+                    Some((p.first()?.as_i64()? as u32, p.get(1)?.as_i64()? as usize))
+                })
+                .collect::<Option<Vec<_>>>()?,
+            seals: v.get("seals")?.as_i64()? as u64,
+            merges: v.get("merges")?.as_i64()? as u64,
+        })
+    }
 }
 
 /// The deployed GAPS system.
@@ -552,6 +735,8 @@ pub struct GapsSystem {
     injector: Option<Arc<FaultInjector>>,
     /// Failover/probation counters.
     fstats: FailoverStats,
+    /// Live-ingestion overlays + epoch (see [`crate::storage`]).
+    ingest: IngestState,
 }
 
 impl std::fmt::Debug for GapsSystem {
@@ -608,6 +793,7 @@ impl GapsSystem {
         // parking idle workers.
         let workers = cfg.search.effective_workers();
         let pool = (workers > 1 && executor.is_none()).then(|| Pool::new(workers));
+        let dep_total_docs = dep.locator.total_docs();
         Ok(GapsSystem {
             service: SearchService::new(cfg.search.clone()),
             cfg,
@@ -622,6 +808,9 @@ impl GapsSystem {
             pool,
             injector: None,
             fstats: FailoverStats::default(),
+            // Base ids are contiguous from 0: ingestion continues where
+            // the generator stopped.
+            ingest: IngestState::new(dep_total_docs),
         })
     }
 
@@ -661,6 +850,299 @@ impl GapsSystem {
     /// Cumulative fault-tolerance counters.
     pub fn failover_stats(&self) -> FailoverStats {
         self.fstats
+    }
+
+    // ---- Live ingestion + persistence ---------------------------------
+
+    /// Corpus-global publication lookup across the base deployment and
+    /// every ingestion overlay (sealed segments and still-buffered
+    /// docs: a caller that just ingested can always resolve the ids it
+    /// was handed, searchable or not).
+    pub fn publication(&self, global_id: u64) -> Option<&Publication> {
+        if let Some(p) = self.dep.publication(global_id) {
+            return Some(p);
+        }
+        for ov in self.ingest.overlays.values() {
+            // Ids ascend within a segment and within the buffer (they
+            // are assigned sequentially at ingest), so binary search
+            // applies per segment.
+            for seg in &ov.sealed {
+                if let Ok(i) = seg.pubs.binary_search_by_key(&global_id, |p| p.id) {
+                    return Some(&seg.pubs[i]);
+                }
+            }
+            if let Ok(i) = ov.buffer.binary_search_by_key(&global_id, |p| p.id) {
+                return Some(&ov.buffer[i]);
+            }
+        }
+        None
+    }
+
+    /// Ingest publications while serving. Each is assigned the next
+    /// corpus-global id (any incoming id is overwritten) and routed to
+    /// the least-loaded source's buffer; buffers seal into immutable,
+    /// *searchable* overlay segments once they reach
+    /// `storage.seal_docs`, and a source's sealed segments compact into
+    /// one when `storage.merge_fanout` of them accumulate. Every seal
+    /// and merge bumps the index epoch. Buffered docs are not
+    /// searchable until their seal — [`GapsSystem::flush_ingest`]
+    /// forces one.
+    pub fn ingest(&mut self, pubs: Vec<Publication>) -> IngestReport {
+        let accepted = pubs.len();
+        let source_ids: Vec<u32> =
+            self.dep.locator.sources().iter().map(|s| s.id).collect();
+        for mut p in pubs {
+            p.id = self.ingest.next_global_id;
+            self.ingest.next_global_id += 1;
+            // Least-loaded routing: fewest overlay docs (sealed +
+            // buffered), ties to the smallest source id — deterministic,
+            // so replayed ingest streams rebuild identical overlays.
+            let target = source_ids
+                .iter()
+                .copied()
+                .min_by_key(|sid| {
+                    let docs = self.ingest.overlays.get(sid).map_or(0, |o| {
+                        o.buffer.len() + o.sealed.iter().map(|s| s.len()).sum::<usize>()
+                    });
+                    (docs, *sid)
+                })
+                .expect("deployment has at least one source");
+            self.ingest.overlays.entry(target).or_default().buffer.push(p);
+        }
+        let (sealed, merges) = self.roll_overlays(self.cfg.storage.seal_docs.max(1));
+        IngestReport {
+            accepted,
+            buffered: self.buffered_docs() as usize,
+            sealed,
+            merges,
+            epoch: self.ingest.epoch,
+        }
+    }
+
+    /// Force-seal every non-empty ingest buffer regardless of
+    /// `storage.seal_docs` (before a snapshot, or to make a small tail
+    /// of ingested docs searchable immediately).
+    pub fn flush_ingest(&mut self) -> IngestReport {
+        let (sealed, merges) = self.roll_overlays(1);
+        IngestReport {
+            accepted: 0,
+            buffered: self.buffered_docs() as usize,
+            sealed,
+            merges,
+            epoch: self.ingest.epoch,
+        }
+    }
+
+    /// Seal every buffer holding at least `threshold` docs, then run
+    /// the per-source compaction policy. Returns (seals, merges).
+    fn roll_overlays(&mut self, threshold: usize) -> (usize, usize) {
+        let fanout = self.cfg.storage.merge_fanout;
+        let features = self.cfg.search.features;
+        let mut sealed = 0usize;
+        let mut merges = 0usize;
+        for (&sid, ov) in self.ingest.overlays.iter_mut() {
+            if ov.buffer.len() >= threshold.max(1) {
+                // Seal: analyze the buffer into an immutable segment.
+                // From here on it is searchable and snapshot-persistable.
+                let seg = Shard::build(sid, std::mem::take(&mut ov.buffer), features);
+                ov.sealed.push(seg);
+                self.ingest.epoch += 1;
+                self.ingest.seals += 1;
+                sealed += 1;
+            }
+            while fanout >= 2 && ov.sealed.len() >= fanout {
+                // Compact the oldest `fanout` segments into one (doc ids
+                // stay ascending: seals happen in id order per source,
+                // and merge_shards concatenates without re-analyzing).
+                let parts: Vec<Shard> = ov.sealed.drain(..fanout).collect();
+                let merged = merge_shards(sid, parts);
+                ov.sealed.insert(0, merged);
+                self.ingest.epoch += 1;
+                self.ingest.merges += 1;
+                merges += 1;
+            }
+        }
+        if sealed > 0 || merges > 0 {
+            self.recompute_live_stats();
+        }
+        (sealed, merges)
+    }
+
+    /// Recompute the live global stats in canonical order — base shards
+    /// ascending by source id, then overlay segments ascending by
+    /// (source id, segment index). A snapshot-restored system folds the
+    /// identical sequence, so restored scores are bit-identical.
+    fn recompute_live_stats(&mut self) {
+        let mut acc = ShardStats::empty(self.cfg.search.features);
+        for shard in self.dep.data.shards.values() {
+            acc.merge(&shard.stats);
+        }
+        let mut any = false;
+        for ov in self.ingest.overlays.values() {
+            for seg in &ov.sealed {
+                acc.merge(&seg.stats);
+                any = true;
+            }
+        }
+        self.ingest.live_stats = any.then(|| acc.finalize());
+    }
+
+    fn buffered_docs(&self) -> u64 {
+        self.ingest.overlays.values().map(|o| o.buffer.len() as u64).sum()
+    }
+
+    /// Current index epoch (bumped by every seal/merge; 0 = never
+    /// ingested). `Explain` carries the same value per response.
+    pub fn index_epoch(&self) -> u64 {
+        self.ingest.epoch
+    }
+
+    /// Index-level health: epoch, searchable/buffered doc counts, and
+    /// per-source overlay segment counts (`/healthz` reports this).
+    pub fn index_health(&self) -> IndexHealth {
+        let overlay_docs: u64 = self
+            .ingest
+            .overlays
+            .values()
+            .flat_map(|o| o.sealed.iter())
+            .map(|s| s.len() as u64)
+            .sum();
+        IndexHealth {
+            epoch: self.ingest.epoch,
+            searchable_docs: self.dep.locator.total_docs() + overlay_docs,
+            buffered_docs: self.buffered_docs(),
+            segments: self
+                .ingest
+                .overlays
+                .iter()
+                .filter(|(_, o)| !o.sealed.is_empty())
+                .map(|(&sid, o)| (sid, o.sealed.len()))
+                .collect(),
+            seals: self.ingest.seals,
+            merges: self.ingest.merges,
+        }
+    }
+
+    /// Persist the deployment into `dir`: one checksummed `.gsnap` per
+    /// base source, one per sealed overlay segment, then the manifest
+    /// (written last, so a directory with a readable manifest is
+    /// complete). Buffered, unsealed docs are *not* captured — call
+    /// [`GapsSystem::flush_ingest`] first to include them.
+    pub fn write_snapshot(&self, dir: &Path) -> Result<SnapshotManifest, SearchError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| SearchError::Io { message: format!("{}: {e}", dir.display()) })?;
+        let mut sources = Vec::new();
+        for src in self.dep.locator.sources() {
+            let shard = self
+                .dep
+                .shard(src.id)
+                .ok_or(SearchError::SourceUnknown { source: src.id })?;
+            let file = format!("shard_{:04}.gsnap", src.id);
+            write_shard_snapshot(shard, &dir.join(&file))?;
+            sources.push(ManifestSource {
+                id: src.id,
+                doc_start: src.doc_start,
+                doc_count: src.doc_count,
+                file,
+            });
+        }
+        let mut overlays = Vec::new();
+        for (&sid, ov) in &self.ingest.overlays {
+            for (k, seg) in ov.sealed.iter().enumerate() {
+                let file = format!("overlay_{sid:04}_{k:04}.gsnap");
+                write_shard_snapshot(seg, &dir.join(&file))?;
+                overlays.push(ManifestOverlay { source: sid, file });
+            }
+        }
+        let manifest = SnapshotManifest {
+            features: self.cfg.search.features,
+            epoch: self.ingest.epoch,
+            num_docs: self.dep.locator.total_docs(),
+            next_global_id: self.ingest.next_global_id,
+            sources,
+            overlays,
+        };
+        manifest.write(dir)?;
+        Ok(manifest)
+    }
+
+    /// Boot a system from a snapshot directory instead of generating
+    /// and re-analyzing the corpus: read the manifest, load every base
+    /// source and overlay segment (bounds-checked, checksummed,
+    /// invariant-validated), and place them on `n_nodes` exactly as
+    /// [`Deployment::assemble`] would. Retrieval is bit-identical to
+    /// the system the snapshot was taken from
+    /// (`tests/integration_persistence.rs`).
+    pub fn deploy_from_snapshot(
+        cfg: GapsConfig,
+        n_nodes: usize,
+        dir: &Path,
+    ) -> Result<GapsSystem, SearchError> {
+        let manifest = SnapshotManifest::read(dir)?;
+        if manifest.features != cfg.search.features {
+            return Err(SearchError::config(format!(
+                "snapshot analyzed with F={}, config wants F={}",
+                manifest.features, cfg.search.features
+            )));
+        }
+        let mut shards = BTreeMap::new();
+        let mut ranges = Vec::with_capacity(manifest.sources.len());
+        let mut base_docs = 0u64;
+        for (i, src) in manifest.sources.iter().enumerate() {
+            if src.id as usize != i {
+                return Err(SearchError::config(format!(
+                    "manifest sources must be contiguous by id: slot {i} holds id {}",
+                    src.id
+                )));
+            }
+            let shard = read_shard_snapshot(&dir.join(&src.file))?;
+            if shard.len() as u64 != src.doc_count {
+                return Err(SearchError::config(format!(
+                    "source {} holds {} docs, manifest promises {}",
+                    src.id,
+                    shard.len(),
+                    src.doc_count
+                )));
+            }
+            base_docs += src.doc_count;
+            shards.insert(src.id, shard);
+            ranges.push((src.doc_start, src.doc_count));
+        }
+        if base_docs != manifest.num_docs {
+            return Err(SearchError::config(format!(
+                "manifest num_docs {} != sum of source doc_counts {base_docs}",
+                manifest.num_docs
+            )));
+        }
+        // The generator is rebuilt from the config spec: it only drives
+        // query sampling / REPL lookups, never the restored shards.
+        let spec = CorpusSpec {
+            seed: cfg.workload.seed,
+            num_docs: cfg.workload.num_docs,
+            ..CorpusSpec::default()
+        };
+        let data = Arc::new(CorpusData {
+            shards,
+            ranges,
+            generator: CorpusGenerator::new(spec),
+            features: manifest.features,
+        });
+        let dep = Arc::new(Deployment::assemble(&cfg, n_nodes, data)?);
+        let mut sys = GapsSystem::from_deployment(cfg, dep)?;
+        for ov in &manifest.overlays {
+            if sys.dep.locator.source(ov.source).is_none() {
+                return Err(SearchError::config(format!(
+                    "manifest overlay references unknown source {}",
+                    ov.source
+                )));
+            }
+            let seg = read_shard_snapshot(&dir.join(&ov.file))?;
+            sys.ingest.overlays.entry(ov.source).or_default().sealed.push(seg);
+        }
+        sys.recompute_live_stats();
+        sys.ingest.epoch = manifest.epoch;
+        sys.ingest.next_global_id = manifest.next_global_id.max(sys.ingest.next_global_id);
+        Ok(sys)
     }
 
     /// Probe downed nodes whose probation window elapsed; healthy ones
@@ -930,6 +1412,14 @@ impl GapsSystem {
             // while serving paths default to all cores. A job failure
             // does NOT abort the round: surviving nodes' outputs are kept
             // and only the failed job's sources re-enter `pending`.
+            // Sealed ingestion overlays and the stats they score under:
+            // `live_stats` is `None` until the first seal, so a
+            // never-ingested system scores against exactly the
+            // deployment's own stats (bit-identical to pre-ingestion
+            // behavior).
+            let stats: &GlobalStats =
+                self.ingest.live_stats.as_ref().unwrap_or(&self.dep.stats);
+            let overlays = &self.ingest.overlays;
             let outcomes: Vec<Result<JobOutput, SearchError>> =
                 match (self.executor.as_mut(), self.pool.as_ref()) {
                     (Some(exec), _) => {
@@ -941,6 +1431,8 @@ impl GapsSystem {
                             outs.push(run_job(
                                 &self.service,
                                 &self.dep,
+                                stats,
+                                overlays,
                                 &queries,
                                 job,
                                 &mut scorer,
@@ -955,7 +1447,7 @@ impl GapsSystem {
                         let qs = &queries;
                         let inj = faults.as_deref();
                         pool.scope_map(&flat, |(_, job)| {
-                            run_job(service, dep, qs, job, &mut Scorer::Rust, inj)
+                            run_job(service, dep, stats, overlays, qs, job, &mut Scorer::Rust, inj)
                         })
                     }
                     _ => {
@@ -964,6 +1456,8 @@ impl GapsSystem {
                             outs.push(run_job(
                                 &self.service,
                                 &self.dep,
+                                stats,
+                                overlays,
                                 &queries,
                                 job,
                                 &mut Scorer::Rust,
@@ -1142,8 +1636,10 @@ impl GapsSystem {
                 .map(|h| Hit {
                     global_id: h.global_id,
                     score: h.score,
+                    // Overlay-aware lookup: a hit may come from a sealed
+                    // ingestion segment the base deployment knows nothing
+                    // about.
                     title: self
-                        .dep
                         .publication(h.global_id)
                         .map(|p| p.title.clone())
                         .unwrap_or_default(),
@@ -1155,6 +1651,7 @@ impl GapsSystem {
                 batch_size: nq,
                 plan: plan_view.clone(),
                 counters: total_counters[qi],
+                epoch: self.ingest.epoch,
             });
             responses.push(SearchResponse {
                 query: requests[qi].query.clone(),
@@ -1651,6 +2148,187 @@ mod tests {
         let parsed = SearchResponse::from_json(&resp.to_json()).unwrap();
         assert!(parsed.degraded);
         assert_eq!(parsed.missing_sources, resp.missing_sources);
+    }
+
+    /// Sample follow-on publications *beyond* the deployed corpus:
+    /// generation is pure in (seed, id), so widening `num_docs` on a
+    /// fresh generator yields new docs disjoint from the base ids.
+    fn extra_pubs(sys: &GapsSystem, n: u64) -> Vec<Publication> {
+        let base = sys.deployment().locator.total_docs();
+        let spec = CorpusSpec {
+            seed: sys.cfg.workload.seed,
+            num_docs: base + n,
+            ..CorpusSpec::default()
+        };
+        CorpusGenerator::new(spec).generate_range(base, n)
+    }
+
+    #[test]
+    fn ingest_buffers_then_seals_and_is_searchable() {
+        let mut cfg = small_cfg();
+        cfg.storage.seal_docs = 4;
+        let mut sys = GapsSystem::deploy(cfg, 4).unwrap();
+        assert_eq!(sys.index_epoch(), 0);
+
+        // Below the seal threshold: accepted but not yet searchable.
+        let batch = extra_pubs(&sys, 40);
+        let first_title = batch[0].title.clone();
+        let rep = sys.ingest(batch[..10].to_vec());
+        assert_eq!(rep.accepted, 10);
+        assert_eq!(rep.sealed, 0, "10 docs over 8 sources must stay buffered");
+        assert_eq!(rep.epoch, 0);
+        let h = sys.index_health();
+        assert_eq!(h.buffered_docs, 10);
+        assert_eq!(h.searchable_docs, 600);
+        // The assigned ids resolve even while buffered.
+        assert!(sys.publication(600).is_some());
+
+        // Push every source past the threshold: seals happen, epoch
+        // moves, and the docs become searchable without a restart.
+        let rep = sys.ingest(batch[10..].to_vec());
+        assert_eq!(rep.accepted, 30);
+        assert!(rep.sealed > 0, "40 docs over 8 sources must seal some buffers");
+        assert!(rep.epoch > 0);
+        sys.flush_ingest();
+        let h = sys.index_health();
+        assert_eq!(h.buffered_docs, 0);
+        assert_eq!(h.searchable_docs, 640);
+        assert!(h.seals > 0);
+        assert!(!h.segments.is_empty());
+
+        let resp = sys
+            .search_request(&SearchRequest::new(&first_title).explain(true))
+            .unwrap();
+        assert!(
+            resp.hits.iter().any(|hit| hit.global_id == 600),
+            "ingested doc 600 not found by its own title: {:?}",
+            resp.hits.iter().map(|hit| hit.global_id).collect::<Vec<_>>()
+        );
+        assert_eq!(resp.explain.unwrap().epoch, sys.index_epoch());
+        assert_eq!(resp.docs_scanned, 640);
+        // Title materialization crossed into the overlay lookup.
+        let hit = resp.hits.iter().find(|hit| hit.global_id == 600).unwrap();
+        assert_eq!(hit.title, first_title);
+    }
+
+    #[test]
+    fn overlay_merge_compacts_segments() {
+        let mut cfg = small_cfg();
+        cfg.workload.sub_shards = 2;
+        cfg.storage.seal_docs = 4;
+        cfg.storage.merge_fanout = 2;
+        let mut sys = GapsSystem::deploy(cfg, 2).unwrap();
+        let pubs = extra_pubs(&sys, 32);
+        let mut merges = 0usize;
+        for chunk in pubs.chunks(8) {
+            let rep = sys.ingest(chunk.to_vec());
+            merges += rep.merges;
+        }
+        assert!(merges > 0, "fanout-2 compaction never fired");
+        let h = sys.index_health();
+        assert_eq!(h.searchable_docs, 600 + 32);
+        assert!(h.merges > 0);
+        // Compaction keeps every source's segment count under fanout.
+        for &(_, n) in &h.segments {
+            assert!(n < 2 + 1, "source kept {n} segments past fanout");
+        }
+        // Every ingested doc remains findable after compaction.
+        for want in [600u64, 615, 631] {
+            let title = sys.publication(want).unwrap().title.clone();
+            let resp = sys.search(&title).unwrap();
+            assert!(
+                resp.hits.iter().any(|hit| hit.global_id == want),
+                "doc {want} lost by compaction"
+            );
+        }
+    }
+
+    #[test]
+    fn ingest_does_not_change_base_results_before_seal() {
+        // Buffered (unsealed) docs must be invisible: searches return
+        // byte-identical results to a never-ingested system.
+        let cfg = small_cfg();
+        let dep = Arc::new(Deployment::build(&cfg, 4).unwrap());
+        let mut clean = GapsSystem::from_deployment(cfg.clone(), Arc::clone(&dep)).unwrap();
+        let mut dirty = GapsSystem::from_deployment(cfg, dep).unwrap();
+        let pubs = extra_pubs(&dirty, 5); // below seal_docs: stays buffered
+        dirty.ingest(pubs);
+        for q in ["grid data search", "massive academic publications"] {
+            let a = clean.search(q).unwrap();
+            let b = dirty.search(q).unwrap();
+            let ids_a: Vec<u64> = a.hits.iter().map(|h| h.global_id).collect();
+            let ids_b: Vec<u64> = b.hits.iter().map(|h| h.global_id).collect();
+            assert_eq!(ids_a, ids_b);
+            for (x, y) in a.hits.iter().zip(&b.hits) {
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+            assert_eq!(a.docs_scanned, b.docs_scanned);
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_restores_ingested_state() {
+        let dir = std::env::temp_dir().join("gaps_test_system_snapshot");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = small_cfg();
+        cfg.storage.seal_docs = 8;
+        let mut sys = GapsSystem::deploy(cfg.clone(), 4).unwrap();
+        sys.ingest(extra_pubs(&sys, 24));
+        sys.flush_ingest();
+        let manifest = sys.write_snapshot(&dir).unwrap();
+        assert_eq!(manifest.num_docs, 600);
+        assert_eq!(manifest.next_global_id, 624);
+        assert!(!manifest.overlays.is_empty());
+
+        let mut restored = GapsSystem::deploy_from_snapshot(cfg, 4, &dir).unwrap();
+        assert_eq!(restored.index_epoch(), sys.index_epoch());
+        let (ha, hb) = (sys.index_health(), restored.index_health());
+        assert_eq!(ha.searchable_docs, hb.searchable_docs);
+        assert_eq!(ha.segments, hb.segments);
+        for q in ["grid computing search", "data distributed"] {
+            let a = sys.search(q).unwrap();
+            let b = restored.search(q).unwrap();
+            let ids_a: Vec<u64> = a.hits.iter().map(|h| h.global_id).collect();
+            let ids_b: Vec<u64> = b.hits.iter().map(|h| h.global_id).collect();
+            assert_eq!(ids_a, ids_b, "restored hits diverged for {q:?}");
+            for (x, y) in a.hits.iter().zip(&b.hits) {
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+        // Ingestion resumes where the snapshot left off.
+        let rep = restored.ingest(extra_pubs(&sys, 1));
+        assert_eq!(rep.accepted, 1);
+        assert!(restored.publication(624).is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshot_rejects_feature_mismatch() {
+        let dir = std::env::temp_dir().join("gaps_test_system_snapshot_f");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = small_cfg();
+        let sys = GapsSystem::deploy(cfg.clone(), 2).unwrap();
+        sys.write_snapshot(&dir).unwrap();
+        let mut other = cfg;
+        other.search.features = 256;
+        let err = GapsSystem::deploy_from_snapshot(other, 2, &dir).unwrap_err();
+        assert_eq!(err.kind(), "invalid-config");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn index_health_json_roundtrips() {
+        let health = IndexHealth {
+            epoch: 7,
+            searchable_docs: 1234,
+            buffered_docs: 5,
+            segments: vec![(0, 2), (3, 1)],
+            seals: 4,
+            merges: 1,
+        };
+        let parsed = IndexHealth::from_json(&health.to_json()).unwrap();
+        assert_eq!(parsed, health);
+        assert!(IndexHealth::from_json(&Json::str("nope")).is_none());
     }
 
     #[test]

@@ -188,6 +188,20 @@ pub struct InvertedIndex {
     block_size: u32,
 }
 
+/// Borrowed view of the raw CSR arena, in the on-disk layout order
+/// (see the module docs). Consumed by the snapshot codec and by the
+/// byte-identity round-trip tests.
+#[derive(Debug, Clone, Copy)]
+pub struct ArenaView<'a> {
+    pub offsets: &'a [u32],
+    pub docs: &'a [u32],
+    pub impacts: &'a [u8],
+    pub block_offsets: &'a [u32],
+    pub blocks: &'a [BlockMeta],
+    pub num_docs: u32,
+    pub block_size: u32,
+}
+
 impl InvertedIndex {
     /// Build from analyzed docs with the default [`BLOCK_SIZE`].
     pub fn build(docs: &[ShardDoc], features: usize) -> InvertedIndex {
@@ -277,6 +291,104 @@ impl InvertedIndex {
             num_docs: docs.len() as u32,
             block_size: block_size as u32,
         }
+    }
+
+    /// Raw arena view for serialization (and byte-identity assertions).
+    pub fn raw_parts(&self) -> ArenaView<'_> {
+        ArenaView {
+            offsets: &self.offsets,
+            docs: &self.docs,
+            impacts: &self.impacts,
+            block_offsets: &self.block_offsets,
+            blocks: &self.blocks,
+            num_docs: self.num_docs,
+            block_size: self.block_size,
+        }
+    }
+
+    /// Reassemble an index from raw arena arrays (the snapshot load
+    /// path). Every structural invariant the retrieval code relies on is
+    /// re-validated — a decoded-but-inconsistent arena (e.g. a snapshot
+    /// from a buggy writer) is rejected with a description instead of
+    /// producing out-of-bounds panics at query time.
+    pub fn from_raw_parts(
+        offsets: Vec<u32>,
+        docs: Vec<u32>,
+        impacts: Vec<u8>,
+        block_offsets: Vec<u32>,
+        blocks: Vec<BlockMeta>,
+        num_docs: u32,
+        block_size: u32,
+    ) -> Result<InvertedIndex, String> {
+        if block_size == 0 {
+            return Err("block_size must be positive".into());
+        }
+        if offsets.is_empty() || block_offsets.len() != offsets.len() {
+            return Err(format!(
+                "offset arrays inconsistent: {} offsets vs {} block offsets",
+                offsets.len(),
+                block_offsets.len()
+            ));
+        }
+        if offsets[0] != 0 || block_offsets[0] != 0 {
+            return Err("offset arrays must start at 0".into());
+        }
+        if !offsets.windows(2).all(|w| w[0] <= w[1])
+            || !block_offsets.windows(2).all(|w| w[0] <= w[1])
+        {
+            return Err("offset arrays must be monotone".into());
+        }
+        let n_postings = *offsets.last().expect("nonempty") as usize;
+        if docs.len() != n_postings || impacts.len() != n_postings {
+            return Err(format!(
+                "posting arrays inconsistent: {} offsets-end vs {} docs vs {} impacts",
+                n_postings,
+                docs.len(),
+                impacts.len()
+            ));
+        }
+        if *block_offsets.last().expect("nonempty") as usize != blocks.len() {
+            return Err(format!(
+                "block arrays inconsistent: {} block-offsets-end vs {} blocks",
+                block_offsets.last().unwrap(),
+                blocks.len()
+            ));
+        }
+        let bs = block_size as usize;
+        let features = offsets.len() - 1;
+        for b in 0..features {
+            let (lo, hi) = (offsets[b] as usize, offsets[b + 1] as usize);
+            let len = hi - lo;
+            let nblocks = (block_offsets[b + 1] - block_offsets[b]) as usize;
+            if nblocks != len.div_ceil(bs) {
+                return Err(format!(
+                    "bucket {b}: {len} postings need {} blocks, found {nblocks}",
+                    len.div_ceil(bs)
+                ));
+            }
+            let run = &docs[lo..hi];
+            if !run.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("bucket {b}: doc ids not strictly increasing"));
+            }
+            if run.last().is_some_and(|&d| d >= num_docs) {
+                return Err(format!("bucket {b}: doc id out of range"));
+            }
+            // Block metadata must describe the postings it covers — the
+            // seek path trusts `last_doc` to skip entire blocks.
+            let block0 = block_offsets[b] as usize;
+            for (i, chunk_lo) in (lo..hi).step_by(bs).enumerate() {
+                let chunk_hi = (chunk_lo + bs).min(hi);
+                let meta = blocks[block0 + i];
+                if meta.last_doc != docs[chunk_hi - 1] {
+                    return Err(format!("bucket {b} block {i}: last_doc mismatch"));
+                }
+                let max = impacts[chunk_lo..chunk_hi].iter().copied().max().unwrap_or(0);
+                if meta.max_impact != max {
+                    return Err(format!("bucket {b} block {i}: max_impact mismatch"));
+                }
+            }
+        }
+        Ok(InvertedIndex { offsets, docs, impacts, block_offsets, blocks, num_docs, block_size })
     }
 
     /// Posting doc ids for a bucket (empty slice if absent).
@@ -904,6 +1016,50 @@ mod tests {
             assert_eq!(ix.retrieve_all(&[0, 1, 2], 500), expect, "bs={bs}");
             assert_eq!(ix.retrieve_all(&[2, 1, 0], 500), expect, "order-independent");
         }
+    }
+
+    #[test]
+    fn raw_parts_round_trip_and_validation() {
+        let ix = index();
+        let v = ix.raw_parts();
+        let rebuilt = InvertedIndex::from_raw_parts(
+            v.offsets.to_vec(),
+            v.docs.to_vec(),
+            v.impacts.to_vec(),
+            v.block_offsets.to_vec(),
+            v.blocks.to_vec(),
+            v.num_docs,
+            v.block_size,
+        )
+        .expect("identical arena must validate");
+        assert_eq!(rebuilt.retrieve(&[1, 2, 3], 10), ix.retrieve(&[1, 2, 3], 10));
+        assert_eq!(rebuilt.raw_parts().docs, ix.raw_parts().docs);
+
+        // Inconsistent arenas are rejected, not panicked on.
+        let bad = InvertedIndex::from_raw_parts(
+            v.offsets.to_vec(),
+            vec![],
+            vec![],
+            v.block_offsets.to_vec(),
+            v.blocks.to_vec(),
+            v.num_docs,
+            v.block_size,
+        );
+        assert!(bad.is_err());
+        let mut docs = v.docs.to_vec();
+        docs.swap(1, 2); // break per-bucket ordering
+        let bad2 = InvertedIndex::from_raw_parts(
+            v.offsets.to_vec(),
+            docs,
+            v.impacts.to_vec(),
+            v.block_offsets.to_vec(),
+            v.blocks.to_vec(),
+            v.num_docs,
+            v.block_size,
+        );
+        assert!(bad2.is_err());
+        assert!(InvertedIndex::from_raw_parts(vec![0], vec![], vec![], vec![0], vec![], 0, 0)
+            .is_err());
     }
 
     #[test]

@@ -52,7 +52,7 @@ mod store;
 
 pub use dense::{build_query_weights, pack_block, PackedBlock, Packer};
 pub use inverted::{
-    quantize_impact, BlockMeta, InvertedIndex, RetrievalCounters, RetrievalScratch, BLOCK_SIZE,
-    TERM_UNIT,
+    quantize_impact, ArenaView, BlockMeta, InvertedIndex, RetrievalCounters, RetrievalScratch,
+    BLOCK_SIZE, TERM_UNIT,
 };
 pub use store::{GlobalStats, Shard, ShardDoc, ShardStats};

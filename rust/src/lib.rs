@@ -76,8 +76,21 @@
 //! coalesces concurrently arriving independent requests into
 //! `search_batch` rounds (results stay bit-identical to serial
 //! execution), and a [`serve::HttpServer`] exposes `POST /search`,
-//! `POST /search_batch` and `GET /healthz` over the shared JSON wire
-//! forms. `gaps serve` is the CLI entry point.
+//! `POST /search_batch`, `POST /ingest` and `GET /healthz` over the
+//! shared JSON wire forms. `gaps serve` is the CLI entry point.
+//!
+//! ## Persistence and live ingestion
+//!
+//! The [`storage`] module makes the index durable and live-updatable:
+//! checksummed on-disk snapshots of every shard's CSR arena
+//! (`gaps snapshot` writes them, `--snapshot DIR` boots from them in
+//! milliseconds, bit-identical to the writer), Lucene-style immutable
+//! overlay segments so publications ingested while serving become
+//! searchable at their seal with tiered background compaction
+//! ([`storage::SegmentedIndex`]), and an index epoch — bumped on every
+//! seal and merge — reported through `GET /healthz` and the `explain`
+//! diagnostics. `gaps ingest` streams JSONL publications into a
+//! running server.
 
 pub mod baseline;
 pub mod config;
@@ -90,6 +103,7 @@ pub mod search;
 pub mod index;
 pub mod metrics;
 pub mod serve;
+pub mod storage;
 pub mod text;
 pub mod usi;
 pub mod util;

@@ -8,14 +8,21 @@
 //! * `repl`              — interactive USI session.
 //! * `serve`             — multi-user HTTP front-end over an admission
 //!   queue (`--addr`, `--max-batch`, `--linger-ms`, `--max-depth`,
-//!   `--read-timeout-ms`; see `gaps::serve`).
+//!   `--read-timeout-ms`; see `gaps::serve`). `POST /ingest` feeds the
+//!   live-ingestion lane.
 //! * `sweep`             — the paper's node sweep (Figs 3/4/5 series).
 //! * `corpus`            — generate a corpus and save shard JSONL files.
+//! * `snapshot`          — deploy and write a binary index snapshot
+//!   (`--out DIR`; see `gaps::storage`).
+//! * `ingest`            — stream a JSONL publication file into a
+//!   running server (`--addr`, `--in FILE`, `--batch N`).
 //! * `info`              — show the effective configuration and fabric.
 //!
 //! Common flags (see `config::GapsConfig::apply_args`): `--config <file>`,
 //! `--vos N`, `--nodes-per-vo N`, `--docs N`, `--queries N`, `--top-k N`,
 //! `--policy perf|rr`, `--no-xla`, `--artifacts DIR`, `--seed N`.
+//! `--snapshot DIR` makes `search`/`repl`/`serve` boot from an on-disk
+//! snapshot instead of regenerating and re-indexing the corpus.
 
 use anyhow::{bail, Context, Result};
 
@@ -53,6 +60,8 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args, cfg),
         "sweep" => cmd_sweep(&args, cfg),
         "corpus" => cmd_corpus(&args, cfg),
+        "snapshot" => cmd_snapshot(&args, cfg),
+        "ingest" => cmd_ingest(&args),
         "info" => cmd_info(cfg),
         other => bail!("unknown subcommand '{other}' (try --help)"),
     }
@@ -61,29 +70,48 @@ fn run() -> Result<()> {
 fn print_usage() {
     println!(
         "gaps — Grid-based Academic Publications Search (reproduction)\n\n\
-         usage: gaps <search|repl|sweep|corpus|info> [flags] [query...]\n\n\
+         usage: gaps <search|repl|serve|sweep|corpus|snapshot|ingest|info> [flags] [query...]\n\n\
          subcommands:\n\
            search <query...>   one-shot search (e.g. gaps search grid computing);\n\
                                \" / \" separates a batch, --explain shows AST + plan\n\
            repl                interactive USI session\n\
            serve               HTTP front-end (POST /search, POST /search_batch,\n\
-                               GET /healthz) over an admission queue that coalesces\n\
-                               concurrent queries; --addr HOST:PORT (default\n\
-                               127.0.0.1:7171), --max-batch N, --linger-ms N,\n\
+                               POST /ingest, GET /healthz) over an admission queue\n\
+                               that coalesces concurrent queries; --addr HOST:PORT\n\
+                               (default 127.0.0.1:7171), --max-batch N, --linger-ms N,\n\
                                --max-depth N (shed beyond it, 503 + Retry-After),\n\
                                --read-timeout-ms N (stalled clients get 408)\n\
            sweep               node sweep: response time / speedup / efficiency\n\
            corpus --out DIR    generate the corpus as shard JSONL files\n\
+           snapshot --out DIR  deploy and write a binary index snapshot (shards,\n\
+                               quantized impacts, block metadata, manifest)\n\
+           ingest --in FILE    stream a JSONL publication file into a running\n\
+                               server; --addr HOST:PORT, --batch N docs per POST\n\
            info                print the effective configuration\n\n\
          common flags: --config FILE --vos N --nodes-per-vo N --nodes N\n\
            --docs N --queries N --top-k N --policy perf|rr --no-xla\n\
-           --artifacts DIR --seed N --no-resident-services"
+           --artifacts DIR --seed N --no-resident-services\n\
+           --snapshot DIR (boot search/repl/serve from a snapshot)\n\
+           --seal-docs N --merge-fanout N (live-ingestion knobs)"
     );
 }
 
 /// Number of participating nodes for a command (defaults to the fabric).
 fn n_nodes(args: &Args, cfg: &GapsConfig) -> Result<usize> {
     args.get_parse("nodes", cfg.grid.total_nodes()).map_err(Into::into)
+}
+
+/// Deploy the system: from an on-disk snapshot when `--snapshot DIR`
+/// (or the config's `storage.snapshot_dir`) is set, from the corpus
+/// generator otherwise.
+fn deploy_system(cfg: GapsConfig, n: usize) -> Result<GapsSystem> {
+    if cfg.storage.snapshot_dir.is_empty() {
+        Ok(GapsSystem::deploy(cfg, n)?)
+    } else {
+        let dir = std::path::PathBuf::from(&cfg.storage.snapshot_dir);
+        eprintln!("booting from snapshot {}", dir.display());
+        Ok(GapsSystem::deploy_from_snapshot(cfg, n, &dir)?)
+    }
 }
 
 fn cmd_search(args: &Args, cfg: GapsConfig) -> Result<()> {
@@ -99,7 +127,7 @@ fn cmd_search(args: &Args, cfg: GapsConfig) -> Result<()> {
     }
     let n = n_nodes(args, &cfg)?;
     eprintln!("{}", cfg.describe());
-    let mut sys = GapsSystem::deploy(cfg, n)?;
+    let mut sys = deploy_system(cfg, n)?;
     let requests: Vec<SearchRequest> = queries
         .iter()
         .map(|q| SearchRequest::new(*q).explain(args.has("explain")))
@@ -135,7 +163,7 @@ fn cmd_search(args: &Args, cfg: GapsConfig) -> Result<()> {
 fn cmd_repl(args: &Args, cfg: GapsConfig) -> Result<()> {
     let n = n_nodes(args, &cfg)?;
     eprintln!("{}", cfg.describe());
-    let mut sys = GapsSystem::deploy(cfg, n)?;
+    let mut sys = deploy_system(cfg, n)?;
     let stdin = std::io::stdin();
     gaps::usi::repl(&mut sys, stdin.lock(), std::io::stdout())?;
     Ok(())
@@ -160,11 +188,21 @@ fn cmd_serve(args: &Args, cfg: GapsConfig) -> Result<()> {
         queue_cfg.max_batch, queue_cfg.max_linger, queue_cfg.max_depth
     );
     // The system deploys on (and never leaves) the executor thread.
-    let server = gaps::serve::SearchServer::start(queue_cfg, move || GapsSystem::deploy(cfg, n))?;
+    // SearchError implements Display/Error, so the deploy closure can
+    // fold the snapshot path in directly.
+    let server = gaps::serve::SearchServer::start(queue_cfg, move || {
+        if cfg.storage.snapshot_dir.is_empty() {
+            GapsSystem::deploy(cfg, n)
+        } else {
+            let dir = std::path::PathBuf::from(&cfg.storage.snapshot_dir);
+            eprintln!("booting from snapshot {}", dir.display());
+            GapsSystem::deploy_from_snapshot(cfg, n, &dir)
+        }
+    })?;
     let http = gaps::serve::HttpServer::bind_with(&addr, server.queue(), http_cfg)
         .with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "serving on http://{} — POST /search, POST /search_batch, GET /healthz",
+        "serving on http://{} — POST /search, POST /search_batch, POST /ingest, GET /healthz",
         http.local_addr()?
     );
     http.serve()?; // blocks until killed
@@ -229,6 +267,102 @@ fn cmd_corpus(args: &Args, cfg: GapsConfig) -> Result<()> {
         "wrote {} shards ({} docs) to {out_dir}/",
         dep.locator.len(),
         dep.locator.total_docs()
+    );
+    Ok(())
+}
+
+fn cmd_snapshot(args: &Args, cfg: GapsConfig) -> Result<()> {
+    let out = args.get("out").unwrap_or("snapshot_out").to_string();
+    let n = n_nodes(args, &cfg)?;
+    eprintln!("{}", cfg.describe());
+    // `--snapshot DIR` composes: load an existing snapshot, re-write it
+    // (with any ingested overlays) to --out.
+    let sys = deploy_system(cfg, n)?;
+    let manifest = sys.write_snapshot(std::path::Path::new(&out))?;
+    println!(
+        "wrote snapshot to {out}/: {} sources ({} docs), {} overlay segments, epoch {}",
+        manifest.sources.len(),
+        manifest.num_docs,
+        manifest.overlays.len(),
+        manifest.epoch
+    );
+    Ok(())
+}
+
+/// Minimal HTTP/1.1 POST over `std::net` (the serve front-end answers
+/// one request per connection, `Connection: close`).
+fn http_post(addr: &str, path: &str, body: &str) -> Result<(u16, gaps::util::json::Json)> {
+    use std::io::{Read, Write};
+    let mut stream =
+        std::net::TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let head = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).context("reading response")?;
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .context("malformed HTTP response")?;
+    let json_body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    let json = gaps::util::json::Json::parse(json_body)
+        .map_err(|e| anyhow::anyhow!("response body is not JSON: {e}"))?;
+    Ok((status, json))
+}
+
+fn cmd_ingest(args: &Args) -> Result<()> {
+    use gaps::corpus::Publication;
+    use gaps::util::json::Json;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7171").to_string();
+    let path = args.get("in").context("ingest needs --in FILE.jsonl")?;
+    let batch_size = args.get_parse("batch", 256usize)?.max(1);
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut docs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: not JSON: {e}", lineno + 1))?;
+        let p = Publication::from_json(&v)
+            .with_context(|| format!("{path}:{}: not a publication object", lineno + 1))?;
+        docs.push(p);
+    }
+    if docs.is_empty() {
+        bail!("{path} holds no publications");
+    }
+    let total = docs.len();
+    let batches = total.div_ceil(batch_size);
+    let (mut accepted, mut sealed, mut merges) = (0usize, 0usize, 0usize);
+    let mut last = None;
+    for chunk in docs.chunks(batch_size) {
+        let body = Json::obj(vec![(
+            "docs",
+            Json::Arr(chunk.iter().map(|p| p.to_json()).collect()),
+        )])
+        .to_string_compact();
+        let (status, resp) = http_post(&addr, "/ingest", &body)?;
+        if status != 200 {
+            bail!("POST /ingest -> {status}: {}", resp.to_string_compact());
+        }
+        let report = gaps::coordinator::IngestReport::from_json(&resp)
+            .context("malformed ingest report in response")?;
+        accepted += report.accepted;
+        sealed += report.sealed;
+        merges += report.merges;
+        last = Some(report);
+    }
+    let last = last.expect("at least one batch was sent");
+    println!(
+        "ingested {accepted}/{total} docs in {batches} batches: {sealed} seals, \
+         {merges} merges, epoch {}, {} still buffered",
+        last.epoch, last.buffered
     );
     Ok(())
 }

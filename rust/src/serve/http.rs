@@ -14,7 +14,8 @@
 //! |----------------------|-------------------------------|----------|
 //! | `POST /search`       | `SearchRequest` JSON          | `SearchResponse` JSON, or `SearchError` JSON with a mapped status |
 //! | `POST /search_batch` | `{"requests": [...]}` (or a bare array) | `{"results": [{"ok": ...} \| {"error": ...}]}` |
-//! | `GET /healthz`       | —                             | `{"status": "ok", "queue": {...}}` (admission counters) |
+//! | `POST /ingest`       | `{"docs": [...]}` (or a bare array of publication objects) | `IngestReport` JSON (`{"accepted", "buffered", "sealed", "merges", "epoch"}`) |
+//! | `GET /healthz`       | —                             | `{"status": "ok", "queue": {...}, "index": {...}}` (admission counters + index epoch / segment health) |
 //!
 //! Error statuses ([`status_for`]): `parse` → 400; `no-sources`,
 //! `no-nodes`, `no-live-replica`, `unavailable` → 503; `overloaded` →
@@ -34,6 +35,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::corpus::Publication;
 use crate::search::{SearchError, SearchRequest};
 use crate::util::json::Json;
 
@@ -231,19 +233,41 @@ fn parse_batch(v: &Json) -> Result<Vec<SearchRequest>, (u16, String)> {
         .collect()
 }
 
+/// Requests of `POST /ingest`: `{"docs": [...]}` or a bare array of
+/// publication objects.
+fn parse_ingest(v: &Json) -> Result<Vec<Publication>, (u16, String)> {
+    let items = v
+        .get("docs")
+        .and_then(Json::as_arr)
+        .or_else(|| v.as_arr())
+        .ok_or_else(|| (400u16, "expected {\"docs\": [...]} or a JSON array".to_string()))?;
+    items
+        .iter()
+        .enumerate()
+        .map(|(i, item)| {
+            Publication::from_json(item)
+                .ok_or_else(|| (400, format!("docs[{i}] is not a publication object")))
+        })
+        .collect()
+}
+
 /// Route one request to a `(status, body, Retry-After)` triple. Pure
 /// apart from the admission-queue interaction, so the protocol is
 /// unit-testable.
 fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json, Option<u64>) {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => (
-            200,
-            Json::obj(vec![
+        ("GET", "/healthz") => {
+            let mut fields = vec![
                 ("status", Json::str("ok")),
                 ("queue", queue.stats().to_json()),
-            ]),
-            None,
-        ),
+            ];
+            // The index object appears once the executor has published
+            // (always, on a served system; absent on a bare queue).
+            if let Some(health) = queue.index_health() {
+                fields.push(("index", health.to_json()));
+            }
+            (200, Json::obj(fields), None)
+        }
         ("POST", "/search") => {
             let parsed = parse_body_json(&req.body).and_then(|v| {
                 SearchRequest::from_json(&v)
@@ -273,7 +297,16 @@ fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json, Option<u64>
                 Err((status, msg)) => (status, error_body("bad-request", &msg), None),
             }
         }
-        (_, "/healthz" | "/search" | "/search_batch") => (
+        ("POST", "/ingest") => {
+            match parse_body_json(&req.body).and_then(|v| parse_ingest(&v)) {
+                Ok(docs) => match queue.submit_ingest(docs) {
+                    Ok(report) => (200, report.to_json(), None),
+                    Err(e) => (status_for(&e), e.to_json(), retry_after_secs(&e)),
+                },
+                Err((status, msg)) => (status, error_body("bad-request", &msg), None),
+            }
+        }
+        (_, "/healthz" | "/search" | "/search_batch" | "/ingest") => (
             405,
             error_body("method-not-allowed", &format!("{} not allowed here", req.method)),
             None,
@@ -515,6 +548,62 @@ mod tests {
         assert_eq!(respond(&get("GET", "/nope"), &queue).0, 404);
         assert_eq!(respond(&get("DELETE", "/search"), &queue).0, 405);
         assert_eq!(respond(&get("POST", "/healthz"), &queue).0, 405);
+        assert_eq!(respond(&get("GET", "/ingest"), &queue).0, 405);
+    }
+
+    #[test]
+    fn healthz_reports_index_health_once_published() {
+        use crate::coordinator::IndexHealth;
+        let queue = AdmissionQueue::new(QueueConfig::default());
+        let get = HttpRequest { method: "GET".into(), path: "/healthz".into(), body: Vec::new() };
+
+        // Before the executor publishes: no `index` object.
+        let (_, body, _) = respond(&get, &queue);
+        assert!(body.get("index").is_none());
+
+        queue.publish_index_health(IndexHealth {
+            epoch: 7,
+            searchable_docs: 640,
+            buffered_docs: 2,
+            segments: vec![(1, 3)],
+            seals: 6,
+            merges: 1,
+        });
+        let (status, body, _) = respond(&get, &queue);
+        assert_eq!(status, 200);
+        let index = body.get("index").expect("index object after publication");
+        assert_eq!(index.get("epoch").unwrap().as_i64(), Some(7));
+        assert_eq!(index.get("searchable_docs").unwrap().as_i64(), Some(640));
+        assert_eq!(
+            IndexHealth::from_json(index).expect("round-trips").segments,
+            vec![(1, 3)]
+        );
+    }
+
+    #[test]
+    fn malformed_ingest_bodies_are_400_without_executor() {
+        let queue = AdmissionQueue::new(QueueConfig::default());
+        let post = |body: &str| HttpRequest {
+            method: "POST".into(),
+            path: "/ingest".into(),
+            body: body.as_bytes().to_vec(),
+        };
+        assert_eq!(respond(&post("not json"), &queue).0, 400);
+        assert_eq!(respond(&post("{\"no_docs\": 1}"), &queue).0, 400);
+        assert_eq!(respond(&post("{\"docs\": [7]}"), &queue).0, 400);
+        assert_eq!(respond(&post("{\"docs\": [{\"title\": \"only\"}]}"), &queue).0, 400);
+        // Rejected bodies never reach the ingestion lane.
+        assert_eq!(queue.stats().ingest_batches, 0);
+    }
+
+    #[test]
+    fn ingest_parse_accepts_both_shapes() {
+        let doc = "{\"id\": 1, \"title\": \"t\", \"abstract\": \"a\", \
+                   \"authors\": \"x\", \"venue\": \"v\", \"year\": 2026}";
+        let wrapped = Json::parse(&format!("{{\"docs\": [{doc}]}}")).unwrap();
+        assert_eq!(parse_ingest(&wrapped).unwrap().len(), 1);
+        let bare = Json::parse(&format!("[{doc}, {doc}]")).unwrap();
+        assert_eq!(parse_ingest(&bare).unwrap().len(), 2);
     }
 
     #[test]

@@ -15,7 +15,13 @@
 //!   requests into `search_batch` rounds (tunable [`QueueConfig`]:
 //!   max batch size, max linger; deterministic FIFO drain). Results are
 //!   bit-identical to serial execution — coalescing is purely a
-//!   throughput play (`tests/prop_serve_parity.rs`).
+//!   throughput play (`tests/prop_serve_parity.rs`). A second,
+//!   search-independent **ingestion lane** carries `POST /ingest`
+//!   batches of publications to the same executor ([`Round`]): writes
+//!   drain first and without linger, the executor feeds them to
+//!   [`GapsSystem::ingest`], and the resulting [`IndexHealth`] (index
+//!   epoch, searchable/buffered docs, per-source segment counts) is
+//!   published back through the queue for `GET /healthz`.
 //! * [`SearchServer`] owns the executor thread. The [`GapsSystem`] is
 //!   **built on and never leaves** that thread (the deploy closure runs
 //!   there), which keeps the design compatible with thread-pinned
@@ -56,12 +62,15 @@ pub mod http;
 pub mod queue;
 
 pub use http::{status_for, HttpConfig, HttpServer, ShutdownHandle};
-pub use queue::{AdmissionQueue, AdmittedBatch, QueueConfig, QueueStats, ResponseTicket};
+pub use queue::{
+    AdmissionQueue, AdmittedBatch, IngestBatch, IngestTicket, QueueConfig, QueueStats,
+    ResponseTicket, Round,
+};
 
 use std::sync::{mpsc, Arc};
 use std::thread;
 
-use crate::coordinator::GapsSystem;
+use crate::coordinator::{GapsSystem, IndexHealth};
 use crate::search::SearchError;
 
 /// A running serving layer: admission queue + the executor thread that
@@ -92,6 +101,9 @@ impl SearchServer {
             .name("gaps-serve-exec".into())
             .spawn(move || match deploy() {
                 Ok(mut sys) => {
+                    // Publish before the ready signal so callers see an
+                    // index health from the instant `start` returns.
+                    exec_queue.publish_index_health(sys.index_health());
                     let _ = ready_tx.send(Ok(()));
                     queue::run(&exec_queue, &mut sys);
                 }
@@ -120,6 +132,14 @@ impl SearchServer {
     /// Admission counters snapshot.
     pub fn stats(&self) -> QueueStats {
         self.queue.stats()
+    }
+
+    /// Last index health the executor published (epoch, searchable and
+    /// buffered docs, per-source segment counts). Always `Some` once
+    /// `start` returned, since the executor publishes before its first
+    /// round.
+    pub fn index_health(&self) -> Option<IndexHealth> {
+        self.queue.index_health()
     }
 
     /// Close the queue, drain pending rounds, join the executor.
@@ -183,6 +203,46 @@ mod tests {
         })
         .unwrap_err();
         assert_eq!(err.kind(), "invalid-config");
+    }
+
+    #[test]
+    fn ingested_docs_become_searchable_without_restart() {
+        use crate::corpus::Publication;
+        let mut cfg = small_cfg();
+        cfg.storage.seal_docs = 1; // every ingest seals immediately
+        let server = SearchServer::start(
+            QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
+            move || GapsSystem::deploy(cfg, 3),
+        )
+        .unwrap();
+        let h0 = server.index_health().expect("health published before start returns");
+        assert_eq!(h0.epoch, 0);
+        assert_eq!(h0.searchable_docs, 400);
+
+        let docs = vec![Publication {
+            id: 0, // reassigned by ingestion
+            title: "zyzzogeton retrieval".into(),
+            abstract_text: "a freshly ingested publication about zyzzogeton".into(),
+            authors: "A. Author".into(),
+            venue: "TEST".into(),
+            year: 2026,
+        }];
+        let report = server.queue().submit_ingest(docs).unwrap();
+        assert_eq!(report.accepted, 1);
+        assert!(report.sealed >= 1, "seal_docs=1 must seal in the same round");
+        assert!(report.epoch >= 1);
+
+        // Searchable on the very next round — no restart, no redeploy.
+        let resp = server.queue().submit(SearchRequest::new("zyzzogeton")).unwrap();
+        assert!(
+            resp.hits.iter().any(|h| h.title.contains("zyzzogeton")),
+            "ingested doc must be retrievable after its seal"
+        );
+        let h = server.index_health().expect("health republished after ingest");
+        assert!(h.epoch >= 1, "seal must bump the published epoch");
+        assert_eq!(h.searchable_docs, 401);
+        assert_eq!(h.buffered_docs, 0);
+        server.shutdown();
     }
 
     #[test]

@@ -31,13 +31,26 @@
 //! [`QueueStats`] counts admissions/batches/coalesced/shed/expired
 //! requests; the HTTP front-end exposes them on `GET /healthz` so
 //! coalescing and load shedding are observable from outside.
+//!
+//! **Ingestion lane:** the queue carries a second, search-independent
+//! lane of [`Publication`] batches (`POST /ingest`). The executor drains
+//! rounds with [`AdmissionQueue::next_round`]: a pending ingest batch
+//! runs *first* and without linger (writes never wait on a search
+//! coalescing window), then search rounds drain exactly as
+//! [`AdmissionQueue::next_batch`] would have — the search lane's
+//! semantics (and its fourteen unit tests) are untouched. After every
+//! ingest round the executor publishes the system's [`IndexHealth`]
+//! into the queue's health cell, which `GET /healthz` reports as the
+//! `index` object — epoch bumps from seals and merges are visible to
+//! clients without touching the executor.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{GapsSystem, SearchResponse};
+use crate::coordinator::{GapsSystem, IndexHealth, IngestReport, SearchResponse};
+use crate::corpus::Publication;
 use crate::search::{SearchError, SearchRequest};
 use crate::util::json::Json;
 
@@ -80,6 +93,10 @@ pub struct QueueStats {
     /// Requests whose deadline elapsed while queued (settled at drain
     /// time without reaching the executor).
     pub expired: u64,
+    /// Ingest batches accepted into the ingestion lane.
+    pub ingest_batches: u64,
+    /// Publications accepted across all ingest batches.
+    pub ingest_docs: u64,
 }
 
 impl QueueStats {
@@ -93,6 +110,8 @@ impl QueueStats {
             ("largest_batch", Json::from(self.largest_batch)),
             ("shed", Json::from(self.shed)),
             ("expired", Json::from(self.expired)),
+            ("ingest_batches", Json::from(self.ingest_batches)),
+            ("ingest_docs", Json::from(self.ingest_docs)),
         ])
     }
 }
@@ -104,12 +123,23 @@ struct Pending {
     reply: mpsc::Sender<Result<SearchResponse, SearchError>>,
 }
 
+/// One enqueued ingest batch plus its way back to the submitter.
+struct IngestPending {
+    docs: Vec<Publication>,
+    reply: mpsc::Sender<Result<IngestReport, SearchError>>,
+}
+
 struct Inner {
     pending: VecDeque<Pending>,
+    /// The ingestion lane: drained ahead of search rounds, no linger.
+    ingest_pending: VecDeque<IngestPending>,
     /// `false` after [`AdmissionQueue::shutdown`]: new submissions are
     /// rejected; already-pending requests still drain.
     open: bool,
     stats: QueueStats,
+    /// Last [`IndexHealth`] the executor published (after deployment and
+    /// after every ingest round). `None` until the executor first runs.
+    index_health: Option<IndexHealth>,
 }
 
 /// The multi-user admission front over one executor-owned [`GapsSystem`].
@@ -135,6 +165,61 @@ impl ResponseTicket {
             .recv()
             .unwrap_or_else(|_| Err(SearchError::internal("serve executor is gone")))
     }
+}
+
+/// A submitted ingest batch's pending report.
+pub struct IngestTicket {
+    rx: mpsc::Receiver<Result<IngestReport, SearchError>>,
+}
+
+impl IngestTicket {
+    /// Block until the executor ran (or failed) this ingest batch.
+    pub fn wait(self) -> Result<IngestReport, SearchError> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(SearchError::internal("serve executor is gone")))
+    }
+}
+
+/// A drained ingest round: one submitted batch of publications.
+pub struct IngestBatch {
+    docs: Vec<Publication>,
+    reply: mpsc::Sender<Result<IngestReport, SearchError>>,
+}
+
+impl IngestBatch {
+    /// Number of publications in the batch.
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// Whether the batch is empty (a client may POST `{"docs": []}`).
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    /// Move the publications out (the executor feeds them to
+    /// [`GapsSystem::ingest`], then settles the ticket via
+    /// [`IngestBatch::complete`]).
+    pub fn take_docs(&mut self) -> Vec<Publication> {
+        std::mem::take(&mut self.docs)
+    }
+
+    /// Deliver the batch's ingest report (or failure) to the submitter.
+    /// A disconnected submitter is skipped silently.
+    pub fn complete(self, result: Result<IngestReport, SearchError>) {
+        let _ = self.reply.send(result);
+    }
+}
+
+/// One executor round: either a coalesced search batch or an ingest
+/// batch (see [`AdmissionQueue::next_round`]).
+pub enum Round {
+    /// A coalesced search round (exactly what [`AdmissionQueue::next_batch`]
+    /// returns).
+    Search(AdmittedBatch),
+    /// One ingest batch, drained ahead of any search round.
+    Ingest(IngestBatch),
 }
 
 /// A drained round: requests in deterministic (arrival) order.
@@ -168,8 +253,10 @@ impl AdmissionQueue {
             cfg,
             inner: Mutex::new(Inner {
                 pending: VecDeque::new(),
+                ingest_pending: VecDeque::new(),
                 open: true,
                 stats: QueueStats::default(),
+                index_health: None,
             }),
             arrived: Condvar::new(),
         }
@@ -226,6 +313,44 @@ impl AdmissionQueue {
     /// Submit one request and block until its coalesced round ran.
     pub fn submit(&self, request: SearchRequest) -> Result<SearchResponse, SearchError> {
         self.enqueue(request).wait()
+    }
+
+    /// Enqueue one ingest batch on the ingestion lane without blocking.
+    /// The lane is not subject to the search high-water mark (writes are
+    /// batched by the client and bounded by the HTTP body cap), but a
+    /// shut-down queue rejects it with the same retryable availability
+    /// error as a search submission.
+    pub fn enqueue_ingest(&self, docs: Vec<Publication>) -> IngestTicket {
+        let (tx, rx) = mpsc::channel();
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.open {
+            let _ = tx.send(Err(SearchError::unavailable("admission queue is shut down")));
+        } else {
+            inner.stats.ingest_batches += 1;
+            inner.stats.ingest_docs += docs.len() as u64;
+            inner.ingest_pending.push_back(IngestPending { docs, reply: tx });
+        }
+        drop(inner);
+        self.arrived.notify_all();
+        IngestTicket { rx }
+    }
+
+    /// Submit an ingest batch and block for its report.
+    pub fn submit_ingest(&self, docs: Vec<Publication>) -> Result<IngestReport, SearchError> {
+        self.enqueue_ingest(docs).wait()
+    }
+
+    /// Executor side: publish the system's index health after a round
+    /// that changed it (deployment, seal, merge). Read back by
+    /// `GET /healthz` via [`AdmissionQueue::index_health`].
+    pub fn publish_index_health(&self, health: IndexHealth) {
+        self.inner.lock().unwrap().index_health = Some(health);
+    }
+
+    /// Last published index health (`None` before the executor's first
+    /// publication — e.g. on a queue with no executor attached).
+    pub fn index_health(&self) -> Option<IndexHealth> {
+        self.inner.lock().unwrap().index_health.clone()
     }
 
     /// Submit a pre-formed batch and block for all of its results
@@ -308,6 +433,43 @@ impl AdmissionQueue {
         }
     }
 
+    /// Executor side: block for the next round of *either* lane. A
+    /// pending ingest batch is returned first and without linger —
+    /// writes never wait out a search coalescing window — then search
+    /// rounds drain with exactly [`AdmissionQueue::next_batch`]'s
+    /// semantics. Returns `None` once the queue is shut down and both
+    /// lanes are drained.
+    pub fn next_round(&self) -> Option<Round> {
+        loop {
+            {
+                let mut inner = self.inner.lock().unwrap();
+                loop {
+                    if let Some(p) = inner.ingest_pending.pop_front() {
+                        return Some(Round::Ingest(IngestBatch {
+                            docs: p.docs,
+                            reply: p.reply,
+                        }));
+                    }
+                    if !inner.pending.is_empty() {
+                        break;
+                    }
+                    if !inner.open {
+                        return None;
+                    }
+                    inner = self.arrived.wait(inner).unwrap();
+                }
+            }
+            // Search work is waiting: delegate to `next_batch` for the
+            // full linger/expiry/drain logic (it re-takes the lock; an
+            // ingest batch arriving inside the linger window runs next
+            // round). `None` here means the search lane drained fully
+            // expired after shutdown — loop to re-check the ingest lane.
+            if let Some(batch) = self.next_batch() {
+                return Some(Round::Search(batch));
+            }
+        }
+    }
+
     /// Close the queue: new submissions are rejected, pending requests
     /// still drain, and [`AdmissionQueue::next_batch`] returns `None`
     /// once they have.
@@ -326,15 +488,21 @@ impl AdmissionQueue {
         for p in inner.pending.drain(..) {
             let _ = p.reply.send(Err(SearchError::internal("serve executor terminated")));
         }
+        for p in inner.ingest_pending.drain(..) {
+            let _ = p.reply.send(Err(SearchError::internal("serve executor terminated")));
+        }
         drop(inner);
         self.arrived.notify_all();
     }
 }
 
-/// The executor loop: drain coalesced rounds into
-/// [`GapsSystem::search_batch`] until the queue shuts down. Runs on the
+/// The executor loop: drain rounds — coalesced search batches into
+/// [`GapsSystem::search_batch`], ingest batches into
+/// [`GapsSystem::ingest`] — until the queue shuts down. Runs on the
 /// thread that owns the system (see [`super::SearchServer`]), so the
-/// system itself never crosses a thread boundary.
+/// system itself never crosses a thread boundary. The system's
+/// [`IndexHealth`] is published into the queue once at start and after
+/// every ingest round (the only rounds that can move the index epoch).
 ///
 /// However the loop exits — normal shutdown or an unwinding panic from
 /// the system — the queue is closed behind it and any still-pending
@@ -349,9 +517,19 @@ pub fn run(queue: &AdmissionQueue, sys: &mut GapsSystem) {
         }
     }
     let _guard = AbortOnExit(queue);
-    while let Some(batch) = queue.next_batch() {
-        let results = sys.search_batch(batch.requests());
-        batch.complete(results);
+    queue.publish_index_health(sys.index_health());
+    while let Some(round) = queue.next_round() {
+        match round {
+            Round::Search(batch) => {
+                let results = sys.search_batch(batch.requests());
+                batch.complete(results);
+            }
+            Round::Ingest(mut batch) => {
+                let report = sys.ingest(batch.take_docs());
+                queue.publish_index_health(sys.index_health());
+                batch.complete(Ok(report));
+            }
+        }
     }
 }
 
@@ -603,5 +781,106 @@ mod tests {
     fn max_batch_zero_is_clamped() {
         let q = queue(0, Duration::ZERO);
         assert_eq!(q.config().max_batch, 1);
+    }
+
+    fn doc(i: u64) -> Publication {
+        Publication {
+            id: i,
+            title: format!("ingested doc {i}"),
+            abstract_text: "live ingestion exercises the second lane".into(),
+            authors: "A. Author".into(),
+            venue: "TEST".into(),
+            year: 2026,
+        }
+    }
+
+    #[test]
+    fn ingest_rounds_drain_before_search() {
+        // A search request arrives first, an ingest batch second — the
+        // ingest batch still runs first (writes skip the linger window).
+        let q = queue(8, Duration::ZERO);
+        let _search = q.enqueue(req(0));
+        let _ingest = q.enqueue_ingest(vec![doc(0), doc(1)]);
+        match q.next_round().expect("round") {
+            Round::Ingest(b) => assert_eq!(b.len(), 2),
+            Round::Search(_) => panic!("ingest must preempt search"),
+        }
+        match q.next_round().expect("round") {
+            Round::Search(b) => assert_eq!(b.requests().len(), 1),
+            Round::Ingest(_) => panic!("ingest lane should be drained"),
+        }
+        let stats = q.stats();
+        assert_eq!(stats.ingest_batches, 1);
+        assert_eq!(stats.ingest_docs, 2);
+        assert_eq!(stats.executed, 1, "search counters unaffected by ingest");
+    }
+
+    #[test]
+    fn ingest_round_settles_its_ticket() {
+        let q = queue(4, Duration::ZERO);
+        let ticket = q.enqueue_ingest(vec![doc(7)]);
+        let round = q.next_round().expect("round");
+        let Round::Ingest(mut batch) = round else { panic!("expected ingest round") };
+        assert!(!batch.is_empty());
+        let docs = batch.take_docs();
+        assert_eq!(docs.len(), 1);
+        assert_eq!(docs[0].title, "ingested doc 7");
+        batch.complete(Ok(IngestReport { accepted: 1, epoch: 3, ..IngestReport::default() }));
+        let report = ticket.wait().expect("report");
+        assert_eq!(report.accepted, 1);
+        assert_eq!(report.epoch, 3);
+    }
+
+    #[test]
+    fn next_round_drains_then_ends_after_shutdown() {
+        let q = queue(4, Duration::ZERO);
+        let _t = q.enqueue(req(0));
+        let _i = q.enqueue_ingest(vec![doc(0)]);
+        q.shutdown();
+        assert!(matches!(q.next_round(), Some(Round::Ingest(_))));
+        assert!(matches!(q.next_round(), Some(Round::Search(_))));
+        assert!(q.next_round().is_none(), "both lanes drained + closed means None");
+    }
+
+    #[test]
+    fn ingest_after_shutdown_is_rejected() {
+        let q = queue(4, Duration::ZERO);
+        q.shutdown();
+        let err = q.submit_ingest(vec![doc(0)]).expect_err("closed queue must reject");
+        assert_eq!(err.kind(), "unavailable");
+        assert_eq!(q.stats().ingest_batches, 0);
+    }
+
+    #[test]
+    fn abort_fails_pending_ingest() {
+        let q = queue(4, Duration::ZERO);
+        let t = q.enqueue_ingest(vec![doc(0)]);
+        q.abort();
+        assert_eq!(t.wait().expect_err("aborted").kind(), "internal");
+    }
+
+    #[test]
+    fn index_health_cell_publishes_and_reads_back() {
+        let q = queue(4, Duration::ZERO);
+        assert!(q.index_health().is_none(), "no executor has published yet");
+        let health = IndexHealth {
+            epoch: 5,
+            searchable_docs: 640,
+            buffered_docs: 3,
+            segments: vec![(0, 2), (4, 1)],
+            seals: 4,
+            merges: 1,
+        };
+        q.publish_index_health(health.clone());
+        assert_eq!(q.index_health(), Some(health));
+    }
+
+    #[test]
+    fn stats_json_carries_ingest_counters() {
+        let q = queue(4, Duration::ZERO);
+        let _t = q.enqueue_ingest(vec![doc(0), doc(1), doc(2)]);
+        let j = q.stats().to_json();
+        assert_eq!(j.get("ingest_batches").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("ingest_docs").unwrap().as_i64(), Some(3));
     }
 }

@@ -1,0 +1,41 @@
+//! Persistence and live-update substrate: on-disk shard snapshots and
+//! the segmented, additively updatable index.
+//!
+//! Two layers, both tombstone-free (publications are append-only —
+//! academic records are never deleted in this corpus model):
+//!
+//! * [`snapshot`] — a versioned, checksummed binary container for one
+//!   shard: raw publications, analyzed docs, BM25 statistics, and the
+//!   CSR posting arena exactly as it sits in memory. Loading a snapshot
+//!   is one `read` + bounds-checked decoding + invariant re-validation —
+//!   no re-tokenization, no re-vectorization, no index rebuild — so a
+//!   node restarts in milliseconds instead of re-analyzing its corpus.
+//!   A [`snapshot::SnapshotManifest`] ties the per-shard files of a
+//!   whole deployment together (base sources + ingestion overlays +
+//!   the index epoch).
+//! * [`segment`] — Lucene-style immutable segments: a
+//!   [`SegmentedIndex`] answers retrieval across N sealed segments plus
+//!   one in-memory mutable segment, merging per-segment top-k with the
+//!   same bounded-heap ordering the monolithic index uses, so results
+//!   are bit-identical to a single index over the same docs
+//!   (property-tested against the `retrieve_reference` oracle in
+//!   `tests/prop_segments.rs`). A tiered merge policy compacts sealed
+//!   segments in the background; every seal/merge bumps the index
+//!   epoch — the invalidation hook `/healthz`, `Explain`, and the
+//!   future result cache key on.
+//!
+//! The coordinator builds on both: `GapsSystem::write_snapshot` /
+//! `deploy_from_snapshot` persist and restore whole deployments, and
+//! live ingestion (`POST /ingest`, `gaps ingest`) buffers publications
+//! per source, seals them into immutable overlay shards at
+//! `storage.seal_docs`, and compacts overlays with
+//! [`segment::merge_shards`] at `storage.merge_fanout`.
+
+pub mod segment;
+pub mod snapshot;
+
+pub use segment::{merge_shards, SegmentedIndex};
+pub use snapshot::{
+    read_shard_snapshot, write_shard_snapshot, ManifestOverlay, ManifestSource, SnapshotManifest,
+    MANIFEST_NAME, SNAPSHOT_VERSION,
+};

@@ -1,0 +1,390 @@
+//! Lucene-style segmented index: N sealed immutable segments plus one
+//! in-memory mutable segment, all over one contiguous doc array.
+//!
+//! The model is tombstone-free and purely additive (publications are
+//! never deleted): documents append to the mutable tail, [`seal`]
+//! freezes the tail into an immutable segment, and a tiered
+//! [`merge_tiered`] policy compacts runs of similar-size sealed
+//! segments back into one. Because every segment is an
+//! [`InvertedIndex`] over an adjacent slice of the same doc array,
+//! retrieval scores are per-document and independent of segmentation —
+//! so per-segment top-k, merged under the monolithic ordering
+//! (score desc, local id asc) and truncated, is **bit-identical** to a
+//! single index over all docs. `tests/prop_segments.rs` pins this
+//! against the `retrieve_reference` oracle across random segment
+//! boundaries.
+//!
+//! Every seal and every merge bumps the [`epoch`](SegmentedIndex::epoch)
+//! counter — the invalidation signal `/healthz` and `Explain` report
+//! and a future result cache keys on.
+//!
+//! [`seal`]: SegmentedIndex::seal
+//! [`merge_tiered`]: SegmentedIndex::merge_tiered
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::index::{
+    InvertedIndex, RetrievalCounters, RetrievalScratch, Shard, ShardDoc, ShardStats, BLOCK_SIZE,
+};
+
+/// One sealed segment: an immutable index over `docs[start..start+len]`.
+#[derive(Debug, Clone)]
+struct Segment {
+    /// Offset of the segment's first doc in the owning doc array. A
+    /// segment-local id `l` is the overall local id `start + l`.
+    start: usize,
+    index: InvertedIndex,
+}
+
+/// Segmented index over one logical shard's docs (module docs).
+#[derive(Debug, Clone)]
+pub struct SegmentedIndex {
+    features: usize,
+    block_size: usize,
+    /// All docs in local-id order; segments cover adjacent slices.
+    docs: Vec<ShardDoc>,
+    /// Sealed segments in doc order: `sealed[i].start + len == sealed[i+1].start`.
+    sealed: Vec<Segment>,
+    /// Start of the mutable tail (`== docs.len()` when empty).
+    mutable_start: usize,
+    /// Index over `docs[mutable_start..]`; `None` iff the tail is empty.
+    mutable: Option<InvertedIndex>,
+    epoch: u64,
+    seals: u64,
+    merges: u64,
+}
+
+impl SegmentedIndex {
+    pub fn new(features: usize) -> SegmentedIndex {
+        SegmentedIndex::with_block_size(features, BLOCK_SIZE)
+    }
+
+    pub fn with_block_size(features: usize, block_size: usize) -> SegmentedIndex {
+        assert!(block_size > 0, "block size must be positive");
+        SegmentedIndex {
+            features,
+            block_size,
+            docs: Vec::new(),
+            sealed: Vec::new(),
+            mutable_start: 0,
+            mutable: None,
+            epoch: 0,
+            seals: 0,
+            merges: 0,
+        }
+    }
+
+    /// Append docs to the mutable segment. The mutable index is rebuilt
+    /// eagerly (once per call, over the whole tail) so retrieval stays
+    /// `&self`; ingestion batches amortize the rebuild.
+    pub fn add_docs(&mut self, new_docs: Vec<ShardDoc>) {
+        if new_docs.is_empty() {
+            return;
+        }
+        self.docs.extend(new_docs);
+        self.mutable = Some(InvertedIndex::build_with_block_size(
+            &self.docs[self.mutable_start..],
+            self.features,
+            self.block_size,
+        ));
+    }
+
+    /// Freeze the mutable tail into a sealed immutable segment. Returns
+    /// false (and does not bump the epoch) when the tail is empty.
+    pub fn seal(&mut self) -> bool {
+        let Some(index) = self.mutable.take() else { return false };
+        self.sealed.push(Segment { start: self.mutable_start, index });
+        self.mutable_start = self.docs.len();
+        self.seals += 1;
+        self.epoch += 1;
+        true
+    }
+
+    /// Tier of a segment for the merge policy: how many times `fanout`
+    /// divides into its doc count. Segments born from equal seal
+    /// thresholds share a tier; merging `fanout` of them promotes the
+    /// result one tier up — classic tiered compaction.
+    fn tier(len: usize, fanout: usize) -> u32 {
+        let mut len = len.max(1);
+        let mut t = 0;
+        while len >= fanout {
+            len /= fanout;
+            t += 1;
+        }
+        t
+    }
+
+    /// Tiered background merge: while any `fanout` adjacent sealed
+    /// segments share a size tier, rebuild them into one segment
+    /// (exact — the merged index is `InvertedIndex::build` over the
+    /// combined doc slice, so merged results stay bit-identical).
+    /// Returns the number of merges performed; each bumps the epoch.
+    pub fn merge_tiered(&mut self, fanout: usize) -> usize {
+        if fanout < 2 {
+            return 0;
+        }
+        let mut merged = 0;
+        loop {
+            let tiers: Vec<u32> =
+                self.sealed.iter().map(|s| Self::tier(s.index.num_docs(), fanout)).collect();
+            let run = (0..self.sealed.len().saturating_sub(fanout - 1))
+                .find(|&i| tiers[i..i + fanout].iter().all(|&t| t == tiers[i]));
+            let Some(i) = run else { break };
+            let start = self.sealed[i].start;
+            let end = start
+                + self.sealed[i..i + fanout].iter().map(|s| s.index.num_docs()).sum::<usize>();
+            let index = InvertedIndex::build_with_block_size(
+                &self.docs[start..end],
+                self.features,
+                self.block_size,
+            );
+            self.sealed[i] = Segment { start, index };
+            self.sealed.drain(i + 1..i + fanout);
+            merged += 1;
+            self.merges += 1;
+            self.epoch += 1;
+        }
+        merged
+    }
+
+    /// Current index epoch (bumped on every seal and every merge).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Seals performed so far.
+    pub fn seals(&self) -> u64 {
+        self.seals
+    }
+
+    /// Merges performed so far.
+    pub fn merges(&self) -> u64 {
+        self.merges
+    }
+
+    /// Number of sealed segments.
+    pub fn num_sealed(&self) -> usize {
+        self.sealed.len()
+    }
+
+    /// Docs currently in the mutable (unsealed) tail.
+    pub fn mutable_len(&self) -> usize {
+        self.docs.len() - self.mutable_start
+    }
+
+    /// Total docs across every segment.
+    pub fn num_docs(&self) -> usize {
+        self.docs.len()
+    }
+
+    /// All docs in local-id order.
+    pub fn docs(&self) -> &[ShardDoc] {
+        &self.docs
+    }
+
+    /// Segment views in doc order: sealed first, then the mutable tail.
+    fn segments(&self) -> impl Iterator<Item = (usize, &InvertedIndex)> + '_ {
+        self.sealed
+            .iter()
+            .map(|s| (s.start, &s.index))
+            .chain(self.mutable.iter().map(move |ix| (self.mutable_start, ix)))
+    }
+
+    /// OR-retrieve the top `max_candidates` candidates across every
+    /// segment: per-segment block-max WAND, merged through the same
+    /// bounded min-heap ordering the monolithic index uses. Returns
+    /// (local_id, score) sorted score desc then id asc — bit-identical
+    /// to one `InvertedIndex` over all docs — plus the aggregated work
+    /// counters (posting totals sum exactly; block geometry may differ
+    /// from the monolithic layout).
+    pub fn retrieve_into(
+        &self,
+        buckets: &[u32],
+        max_candidates: usize,
+        scratch: &mut RetrievalScratch,
+    ) -> (Vec<(u32, u32)>, RetrievalCounters) {
+        let mut counters = RetrievalCounters::default();
+        let mut heap: BinaryHeap<Reverse<(u32, Reverse<u32>)>> =
+            BinaryHeap::with_capacity(max_candidates + 1);
+        for (start, index) in self.segments() {
+            index.retrieve_into(buckets, max_candidates, scratch);
+            counters.merge(scratch.counters());
+            for &(lid, score) in scratch.hits() {
+                let key = Reverse((score, Reverse(start as u32 + lid)));
+                if heap.len() < max_candidates {
+                    heap.push(key);
+                } else if let Some(worst) = heap.peek() {
+                    if key < *worst {
+                        heap.pop();
+                        heap.push(key);
+                    }
+                }
+            }
+        }
+        let mut out: Vec<(u32, u32)> =
+            heap.into_iter().map(|Reverse((s, Reverse(d)))| (d, s)).collect();
+        out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        (out, counters)
+    }
+
+    /// AND-retrieve up to `limit` docs containing all buckets, in
+    /// increasing local id: segments are visited in doc order with the
+    /// remaining-limit budget, so the result equals the monolithic
+    /// `retrieve_all` prefix.
+    pub fn retrieve_all(&self, buckets: &[u32], limit: usize) -> (Vec<u32>, RetrievalCounters) {
+        let mut counters = RetrievalCounters::default();
+        let mut out = Vec::new();
+        for (start, index) in self.segments() {
+            if out.len() >= limit {
+                break;
+            }
+            let mut seg_counters = RetrievalCounters::default();
+            let hits = index.retrieve_all_counted(buckets, limit - out.len(), &mut seg_counters);
+            counters.merge(&seg_counters);
+            out.extend(hits.into_iter().map(|lid| start as u32 + lid));
+        }
+        (out, counters)
+    }
+}
+
+/// Compact several shards (immutable overlay segments of one data
+/// source) into one: concatenate raw + analyzed docs in segment order,
+/// merge the additive statistics, and rebuild the inverted index from
+/// the already-analyzed docs — no re-tokenization. The resulting shard
+/// ranks identically to serving the parts separately and merging
+/// top-k, which is what makes background compaction invisible to
+/// queries.
+pub fn merge_shards(id: u32, parts: Vec<Shard>) -> Shard {
+    assert!(!parts.is_empty(), "merge_shards needs at least one part");
+    let features = parts[0].features;
+    let mut pubs = Vec::with_capacity(parts.iter().map(|p| p.pubs.len()).sum());
+    let mut docs = Vec::with_capacity(parts.iter().map(|p| p.docs.len()).sum());
+    let mut stats = ShardStats::empty(features);
+    for part in parts {
+        assert_eq!(part.features, features, "feature space mismatch in merge");
+        stats.merge(&part.stats);
+        pubs.extend(part.pubs);
+        docs.extend(part.docs);
+    }
+    let inverted = InvertedIndex::build(&docs, features);
+    Shard { id, features, pubs, docs, inverted, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusGenerator, CorpusSpec};
+
+    fn corpus_docs(n: u64) -> Vec<ShardDoc> {
+        let spec = CorpusSpec { num_docs: n, vocab_size: 300, ..CorpusSpec::default() };
+        let gen = CorpusGenerator::new(spec);
+        Shard::build(0, gen.generate_range(0, n), 64).docs
+    }
+
+    fn monolith(docs: &[ShardDoc]) -> InvertedIndex {
+        InvertedIndex::build(docs, 64)
+    }
+
+    #[test]
+    fn empty_index_answers_empty() {
+        let seg = SegmentedIndex::new(64);
+        let mut scratch = RetrievalScratch::new();
+        let (hits, counters) = seg.retrieve_into(&[1, 2, 3], 10, &mut scratch);
+        assert!(hits.is_empty());
+        assert_eq!(counters, RetrievalCounters::default());
+        assert_eq!(seg.retrieve_all(&[1], 10).0, Vec::<u32>::new());
+        assert_eq!(seg.epoch(), 0);
+    }
+
+    #[test]
+    fn segmented_matches_monolithic_and_seal_bumps_epoch() {
+        let docs = corpus_docs(120);
+        let mono = monolith(&docs);
+        let mut seg = SegmentedIndex::new(64);
+        seg.add_docs(docs[..50].to_vec());
+        assert!(seg.seal());
+        assert_eq!(seg.epoch(), 1);
+        seg.add_docs(docs[50..90].to_vec());
+        assert!(seg.seal());
+        seg.add_docs(docs[90..].to_vec()); // stays mutable
+        assert_eq!(seg.num_sealed(), 2);
+        assert_eq!(seg.mutable_len(), 30);
+
+        let mut scratch = RetrievalScratch::new();
+        for query in [vec![0u32, 1, 2], vec![5, 9], vec![63]] {
+            for k in [1usize, 5, 40, 200] {
+                let (hits, counters) = seg.retrieve_into(&query, k, &mut scratch);
+                assert_eq!(hits, mono.retrieve(&query, k), "query {query:?} k={k}");
+                assert!(counters.postings_touched <= counters.postings_total);
+            }
+            let (all, _) = seg.retrieve_all(&query, 500);
+            assert_eq!(all, mono.retrieve_all(&query, 500), "AND {query:?}");
+        }
+    }
+
+    #[test]
+    fn sealing_empty_tail_is_a_noop() {
+        let mut seg = SegmentedIndex::new(8);
+        assert!(!seg.seal());
+        assert_eq!(seg.epoch(), 0);
+        seg.add_docs(corpus_docs(5));
+        assert!(seg.seal());
+        assert!(!seg.seal(), "second seal with empty tail must not fire");
+        assert_eq!(seg.epoch(), 1);
+    }
+
+    #[test]
+    fn tiered_merge_compacts_and_preserves_results() {
+        let docs = corpus_docs(160);
+        let mono = monolith(&docs);
+        let mut seg = SegmentedIndex::new(64);
+        for chunk in docs.chunks(20) {
+            seg.add_docs(chunk.to_vec());
+            seg.seal();
+        }
+        assert_eq!(seg.num_sealed(), 8);
+        let epoch_before = seg.epoch();
+        let merges = seg.merge_tiered(4);
+        assert!(merges >= 2, "8 equal segments at fanout 4 merge at least twice");
+        assert!(seg.num_sealed() < 8);
+        assert_eq!(seg.epoch(), epoch_before + merges as u64);
+        assert_eq!(seg.merges(), merges as u64);
+
+        let mut scratch = RetrievalScratch::new();
+        let (hits, _) = seg.retrieve_into(&[0, 1, 2, 3], 25, &mut scratch);
+        assert_eq!(hits, mono.retrieve(&[0, 1, 2, 3], 25));
+        // Segment starts must still partition the doc array.
+        let (all, _) = seg.retrieve_all(&[0], seg.num_docs());
+        assert_eq!(all, mono.retrieve_all(&[0], seg.num_docs()));
+    }
+
+    #[test]
+    fn merge_fanout_below_two_is_disabled() {
+        let mut seg = SegmentedIndex::new(8);
+        for chunk in corpus_docs(40).chunks(10) {
+            seg.add_docs(chunk.to_vec());
+            seg.seal();
+        }
+        assert_eq!(seg.merge_tiered(0), 0);
+        assert_eq!(seg.merge_tiered(1), 0);
+        assert_eq!(seg.num_sealed(), 4);
+    }
+
+    #[test]
+    fn merge_shards_concatenates_and_rebuilds() {
+        let spec = CorpusSpec { num_docs: 60, vocab_size: 300, ..CorpusSpec::default() };
+        let gen = CorpusGenerator::new(spec);
+        let a = Shard::build(7, gen.generate_range(0, 40), 64);
+        let b = Shard::build(7, gen.generate_range(40, 20), 64);
+        let whole = Shard::build(7, gen.generate_range(0, 60), 64);
+        let merged = merge_shards(7, vec![a, b]);
+        assert_eq!(merged.pubs, whole.pubs);
+        assert_eq!(merged.docs, whole.docs);
+        assert_eq!(merged.stats, whole.stats);
+        assert_eq!(
+            merged.inverted.retrieve(&[1, 2, 3], 10),
+            whole.inverted.retrieve(&[1, 2, 3], 10)
+        );
+    }
+}

@@ -1,0 +1,756 @@
+//! On-disk shard snapshots: a versioned, checksummed binary container
+//! for everything a Search Service needs to serve a shard — raw
+//! publications, analyzed docs, BM25 statistics, and the CSR posting
+//! arena byte-for-byte as built in memory.
+//!
+//! # File format (`*.gsnap`)
+//!
+//! ```text
+//! magic    [8]  b"GAPSNAP1"
+//! version  u32  SNAPSHOT_VERSION (little-endian, like every integer)
+//! sections u32  section count
+//! then per section:
+//!   tag      [4]  ascii section name
+//!   len      u64  payload byte length
+//!   checksum u64  FNV-1a-64 over the payload
+//!   payload  [len]
+//! ```
+//!
+//! Sections (each must appear exactly once):
+//!
+//! * `META` — shard id, feature-space size
+//! * `PUBS` — raw publications (id, title, abstract, authors, venue, year)
+//! * `DOCS` — analyzed docs: per-field sparse (bucket, tf) + field lengths
+//! * `STAT` — the shard's `ShardStats` contribution to global BM25 stats
+//! * `INDX` — the raw CSR arena (offsets / docs / impacts / block
+//!   offsets / block metadata), written in layout order so a load is a
+//!   straight copy into the same `Vec`s the builder would have produced
+//!
+//! # Failure taxonomy
+//!
+//! Loading never panics on hostile input. Filesystem failures and
+//! *corruption* (truncation anywhere, checksum mismatch) surface as
+//! [`SearchError::Io`]; a file that simply is not a snapshot of this
+//! version (bad magic, unknown version or section, structurally
+//! inconsistent arrays, invariant-violating arena) surfaces as
+//! [`SearchError::InvalidConfig`]. `tests/prop_snapshot.rs` bit-flips
+//! and truncates real snapshots at every offset class to hold this line.
+
+use std::path::Path;
+
+use crate::corpus::Publication;
+use crate::index::{BlockMeta, InvertedIndex, Shard, ShardDoc, ShardStats};
+use crate::search::SearchError;
+use crate::text::NUM_FIELDS;
+use crate::util::json::Json;
+
+/// Leading magic of every snapshot file.
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"GAPSNAP1";
+
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// File name of the deployment manifest inside a snapshot directory.
+pub const MANIFEST_NAME: &str = "MANIFEST.json";
+
+const SECTION_TAGS: [&[u8; 4]; 5] = [b"META", b"PUBS", b"DOCS", b"STAT", b"INDX"];
+
+/// FNV-1a 64-bit — tiny, dependency-free, and plenty to catch the
+/// random corruption (truncated copies, flipped bits) snapshots meet in
+/// practice. Not cryptographic; snapshots are trusted-operator data.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn io_err(path: &Path, what: impl std::fmt::Display) -> SearchError {
+    SearchError::Io { message: format!("{}: {what}", path.display()) }
+}
+
+fn format_err(path: &Path, what: impl std::fmt::Display) -> SearchError {
+    SearchError::config(format!("{}: {what}", path.display()))
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn u32s(&mut self, xs: &[u32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.u32(x);
+        }
+    }
+}
+
+fn encode_meta(shard: &Shard) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u32(shard.id);
+    w.u64(shard.features as u64);
+    w.buf
+}
+
+fn encode_pubs(pubs: &[Publication]) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u64(pubs.len() as u64);
+    for p in pubs {
+        w.u64(p.id);
+        w.str(&p.title);
+        w.str(&p.abstract_text);
+        w.str(&p.authors);
+        w.str(&p.venue);
+        w.u32(p.year);
+    }
+    w.buf
+}
+
+fn encode_docs(docs: &[ShardDoc]) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u64(docs.len() as u64);
+    for d in docs {
+        w.u64(d.global_id);
+        for field in &d.field_tf {
+            w.u64(field.len() as u64);
+            for &(bucket, tf) in field {
+                w.u32(bucket);
+                w.f32(tf);
+            }
+        }
+        for &len in &d.field_len {
+            w.f32(len);
+        }
+    }
+    w.buf
+}
+
+fn encode_stats(stats: &ShardStats) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u64(stats.num_docs);
+    w.u64(stats.df.len() as u64);
+    for &df in &stats.df {
+        w.u64(df);
+    }
+    for &s in &stats.field_len_sum {
+        w.f64(s);
+    }
+    w.buf
+}
+
+fn encode_index(ix: &InvertedIndex) -> Vec<u8> {
+    let v = ix.raw_parts();
+    let mut w = Writer::default();
+    w.u32s(v.offsets);
+    w.u32s(v.docs);
+    w.u64(v.impacts.len() as u64);
+    w.buf.extend_from_slice(v.impacts);
+    w.u32s(v.block_offsets);
+    w.u64(v.blocks.len() as u64);
+    for b in v.blocks {
+        w.u32(b.last_doc);
+        w.u8(b.max_impact);
+    }
+    w.u32(v.num_docs);
+    w.u32(v.block_size);
+    w.buf
+}
+
+/// Serialize one shard into the snapshot container bytes.
+pub fn encode_shard_snapshot(shard: &Shard) -> Vec<u8> {
+    let sections: [(&[u8; 4], Vec<u8>); 5] = [
+        (b"META", encode_meta(shard)),
+        (b"PUBS", encode_pubs(&shard.pubs)),
+        (b"DOCS", encode_docs(&shard.docs)),
+        (b"STAT", encode_stats(&shard.stats)),
+        (b"INDX", encode_index(&shard.inverted)),
+    ];
+    let mut out = Vec::with_capacity(
+        16 + sections.iter().map(|(_, p)| p.len() + 20).sum::<usize>(),
+    );
+    out.extend_from_slice(&SNAPSHOT_MAGIC);
+    out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for (tag, payload) in &sections {
+        out.extend_from_slice(*tag);
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+/// Write one shard's snapshot file.
+pub fn write_shard_snapshot(shard: &Shard, path: &Path) -> Result<(), SearchError> {
+    std::fs::write(path, encode_shard_snapshot(shard)).map_err(|e| io_err(path, e))
+}
+
+// ---------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over one section payload.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    path: &'a Path,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8], path: &'a Path) -> Reader<'a> {
+        Reader { buf, pos: 0, path }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SearchError> {
+        if self.buf.len() - self.pos < n {
+            return Err(io_err(self.path, "truncated snapshot section"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, SearchError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, SearchError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, SearchError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32, SearchError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64, SearchError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A u64 count that must plausibly fit in the remaining bytes (each
+    /// element is at least `elem_size` bytes) — rejects absurd lengths
+    /// before any allocation is sized from them.
+    fn count(&mut self, elem_size: usize) -> Result<usize, SearchError> {
+        let n = self.u64()?;
+        let remaining = (self.buf.len() - self.pos) as u64;
+        match n.checked_mul(elem_size as u64) {
+            Some(bytes) if bytes <= remaining => Ok(n as usize),
+            _ => Err(io_err(self.path, "truncated snapshot section")),
+        }
+    }
+
+    fn str(&mut self) -> Result<String, SearchError> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| format_err(self.path, "snapshot string is not UTF-8"))
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, SearchError> {
+        let n = self.count(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    fn finish(self) -> Result<(), SearchError> {
+        if self.pos != self.buf.len() {
+            return Err(format_err(self.path, "trailing bytes in snapshot section"));
+        }
+        Ok(())
+    }
+}
+
+fn decode_pubs(r: &mut Reader) -> Result<Vec<Publication>, SearchError> {
+    // A publication encodes to >= 44 bytes (id + 4 empty strings + year).
+    let n = r.count(44)?;
+    let mut pubs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = r.u64()?;
+        let title = r.str()?;
+        let abstract_text = r.str()?;
+        let authors = r.str()?;
+        let venue = r.str()?;
+        let year = r.u32()?;
+        pubs.push(Publication { id, title, abstract_text, authors, venue, year });
+    }
+    Ok(pubs)
+}
+
+fn decode_docs(r: &mut Reader) -> Result<Vec<ShardDoc>, SearchError> {
+    // A doc encodes to >= 56 bytes (id + 4 empty fields + 4 lengths).
+    let n = r.count(56)?;
+    let mut docs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let global_id = r.u64()?;
+        let mut field_tf: [Vec<(u32, f32)>; NUM_FIELDS] = Default::default();
+        for field in field_tf.iter_mut() {
+            let pairs = r.count(8)?;
+            field.reserve(pairs);
+            for _ in 0..pairs {
+                let bucket = r.u32()?;
+                let tf = r.f32()?;
+                field.push((bucket, tf));
+            }
+        }
+        let mut field_len = [0.0f32; NUM_FIELDS];
+        for len in field_len.iter_mut() {
+            *len = r.f32()?;
+        }
+        docs.push(ShardDoc { global_id, field_tf, field_len });
+    }
+    Ok(docs)
+}
+
+fn decode_stats(r: &mut Reader) -> Result<ShardStats, SearchError> {
+    let num_docs = r.u64()?;
+    let n = r.count(8)?;
+    let mut df = Vec::with_capacity(n);
+    for _ in 0..n {
+        df.push(r.u64()?);
+    }
+    let mut field_len_sum = [0.0f64; NUM_FIELDS];
+    for s in field_len_sum.iter_mut() {
+        *s = r.f64()?;
+    }
+    Ok(ShardStats { num_docs, df, field_len_sum })
+}
+
+fn decode_index(r: &mut Reader) -> Result<InvertedIndex, SearchError> {
+    let path = r.path;
+    let offsets = r.u32s()?;
+    let docs = r.u32s()?;
+    let n_impacts = r.count(1)?;
+    let impacts = r.take(n_impacts)?.to_vec();
+    let block_offsets = r.u32s()?;
+    let n_blocks = r.count(5)?;
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        let last_doc = r.u32()?;
+        let max_impact = r.u8()?;
+        blocks.push(BlockMeta { last_doc, max_impact });
+    }
+    let num_docs = r.u32()?;
+    let block_size = r.u32()?;
+    InvertedIndex::from_raw_parts(
+        offsets,
+        docs,
+        impacts,
+        block_offsets,
+        blocks,
+        num_docs,
+        block_size,
+    )
+    .map_err(|e| format_err(path, format!("inconsistent posting arena: {e}")))
+}
+
+/// Decode a snapshot container from raw bytes (the single-read load
+/// path; `path` only labels errors).
+pub fn decode_shard_snapshot(bytes: &[u8], path: &Path) -> Result<Shard, SearchError> {
+    let mut top = Reader::new(bytes, path);
+    let magic = top.take(8).map_err(|_| format_err(path, "not a gaps snapshot (too short)"))?;
+    if magic != SNAPSHOT_MAGIC {
+        return Err(format_err(path, "not a gaps snapshot (bad magic)"));
+    }
+    let version = top.u32()?;
+    if version != SNAPSHOT_VERSION {
+        return Err(format_err(
+            path,
+            format!("unsupported snapshot version {version} (expected {SNAPSHOT_VERSION})"),
+        ));
+    }
+    let n_sections = top.u32()? as usize;
+    if n_sections != SECTION_TAGS.len() {
+        return Err(format_err(path, format!("expected {} sections", SECTION_TAGS.len())));
+    }
+
+    let mut payloads: [Option<&[u8]>; 5] = [None; 5];
+    for _ in 0..n_sections {
+        let tag: [u8; 4] = top.take(4)?.try_into().expect("4 bytes");
+        let len = top.count(1)?;
+        let checksum = top.u64()?;
+        let payload = top.take(len)?;
+        if fnv1a64(payload) != checksum {
+            return Err(io_err(
+                path,
+                format!("checksum mismatch in section {:?}", String::from_utf8_lossy(&tag)),
+            ));
+        }
+        let slot = SECTION_TAGS
+            .iter()
+            .position(|t| **t == tag)
+            .ok_or_else(|| {
+                format_err(
+                    path,
+                    format!("unknown snapshot section {:?}", String::from_utf8_lossy(&tag)),
+                )
+            })?;
+        if payloads[slot].replace(payload).is_some() {
+            return Err(format_err(path, "duplicate snapshot section"));
+        }
+    }
+    top.finish()?;
+    let section = |slot: usize| payloads[slot].expect("all sections present");
+
+    let mut meta = Reader::new(section(0), path);
+    let id = meta.u32()?;
+    let features = meta.u64()? as usize;
+    meta.finish()?;
+
+    let mut pr = Reader::new(section(1), path);
+    let pubs = decode_pubs(&mut pr)?;
+    pr.finish()?;
+
+    let mut dr = Reader::new(section(2), path);
+    let docs = decode_docs(&mut dr)?;
+    dr.finish()?;
+
+    let mut sr = Reader::new(section(3), path);
+    let stats = decode_stats(&mut sr)?;
+    sr.finish()?;
+
+    let mut ir = Reader::new(section(4), path);
+    let inverted = decode_index(&mut ir)?;
+    ir.finish()?;
+
+    // Cross-section invariants: the arrays must describe one shard.
+    if pubs.len() != docs.len() {
+        return Err(format_err(
+            path,
+            format!("{} publications vs {} analyzed docs", pubs.len(), docs.len()),
+        ));
+    }
+    if inverted.num_docs() != docs.len() {
+        return Err(format_err(
+            path,
+            format!("index covers {} docs, shard has {}", inverted.num_docs(), docs.len()),
+        ));
+    }
+    if stats.df.len() != features || inverted.raw_parts().offsets.len() != features + 1 {
+        return Err(format_err(path, "feature-space size mismatch between sections"));
+    }
+    if stats.num_docs != docs.len() as u64 {
+        return Err(format_err(path, "stats doc count mismatch"));
+    }
+    Ok(Shard { id, features, pubs, docs, inverted, stats })
+}
+
+/// Load one shard from its snapshot file: a single `read` followed by
+/// in-memory decoding and invariant re-validation.
+pub fn read_shard_snapshot(path: &Path) -> Result<Shard, SearchError> {
+    let bytes = std::fs::read(path).map_err(|e| io_err(path, e))?;
+    decode_shard_snapshot(&bytes, path)
+}
+
+// ---------------------------------------------------------------------
+// Deployment manifest
+// ---------------------------------------------------------------------
+
+/// One base data source in a deployment snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestSource {
+    pub id: u32,
+    pub doc_start: u64,
+    pub doc_count: u64,
+    /// Snapshot file name, relative to the manifest directory.
+    pub file: String,
+}
+
+/// One sealed ingestion-overlay segment, in seal order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestOverlay {
+    /// Base source the overlay extends.
+    pub source: u32,
+    /// Snapshot file name, relative to the manifest directory.
+    pub file: String,
+}
+
+/// `MANIFEST.json`: the directory-level description of a deployment
+/// snapshot — which per-shard files exist, how global doc ids map onto
+/// base sources, and the ingestion state (epoch, next id, overlays).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotManifest {
+    pub features: usize,
+    pub epoch: u64,
+    /// Docs covered by the base sources (excluding overlays).
+    pub num_docs: u64,
+    /// Next global id ingestion will assign.
+    pub next_global_id: u64,
+    pub sources: Vec<ManifestSource>,
+    pub overlays: Vec<ManifestOverlay>,
+}
+
+impl SnapshotManifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str("gaps-snapshot")),
+            ("version", Json::from(SNAPSHOT_VERSION as i64)),
+            ("features", Json::from(self.features as i64)),
+            ("epoch", Json::from(self.epoch as i64)),
+            ("num_docs", Json::from(self.num_docs as i64)),
+            ("next_global_id", Json::from(self.next_global_id as i64)),
+            (
+                "sources",
+                Json::Arr(
+                    self.sources
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("id", Json::from(s.id as i64)),
+                                ("doc_start", Json::from(s.doc_start as i64)),
+                                ("doc_count", Json::from(s.doc_count as i64)),
+                                ("file", Json::str(&s.file)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "overlays",
+                Json::Arr(
+                    self.overlays
+                        .iter()
+                        .map(|o| {
+                            Json::obj(vec![
+                                ("source", Json::from(o.source as i64)),
+                                ("file", Json::str(&o.file)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SnapshotManifest, String> {
+        let field = |k: &str| v.get(k).ok_or_else(|| format!("manifest missing '{k}'"));
+        let int = |k: &str| -> Result<u64, String> {
+            field(k)?
+                .as_i64()
+                .filter(|x| *x >= 0)
+                .map(|x| x as u64)
+                .ok_or_else(|| format!("manifest '{k}' must be a non-negative integer"))
+        };
+        if field("format")?.as_str() != Some("gaps-snapshot") {
+            return Err("manifest 'format' is not 'gaps-snapshot'".into());
+        }
+        let version = int("version")?;
+        if version != SNAPSHOT_VERSION as u64 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let sources_json = field("sources")?
+            .as_arr()
+            .ok_or_else(|| "manifest 'sources' must be an array".to_string())?;
+        let mut sources = Vec::with_capacity(sources_json.len());
+        for s in sources_json {
+            let get = |k: &str| -> Result<u64, String> {
+                s.get(k)
+                    .and_then(|x| x.as_i64())
+                    .filter(|x| *x >= 0)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| format!("manifest source missing '{k}'"))
+            };
+            sources.push(ManifestSource {
+                id: get("id")? as u32,
+                doc_start: get("doc_start")?,
+                doc_count: get("doc_count")?,
+                file: s
+                    .get("file")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| "manifest source missing 'file'".to_string())?
+                    .to_string(),
+            });
+        }
+        let overlays_json = field("overlays")?
+            .as_arr()
+            .ok_or_else(|| "manifest 'overlays' must be an array".to_string())?;
+        let mut overlays = Vec::with_capacity(overlays_json.len());
+        for o in overlays_json {
+            overlays.push(ManifestOverlay {
+                source: o
+                    .get("source")
+                    .and_then(|x| x.as_i64())
+                    .filter(|x| *x >= 0)
+                    .ok_or_else(|| "manifest overlay missing 'source'".to_string())?
+                    as u32,
+                file: o
+                    .get("file")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| "manifest overlay missing 'file'".to_string())?
+                    .to_string(),
+            });
+        }
+        Ok(SnapshotManifest {
+            features: int("features")? as usize,
+            epoch: int("epoch")?,
+            num_docs: int("num_docs")?,
+            next_global_id: int("next_global_id")?,
+            sources,
+            overlays,
+        })
+    }
+
+    /// Write `MANIFEST.json` into the snapshot directory.
+    pub fn write(&self, dir: &Path) -> Result<(), SearchError> {
+        let path = dir.join(MANIFEST_NAME);
+        std::fs::write(&path, self.to_json().to_string_pretty()).map_err(|e| io_err(&path, e))
+    }
+
+    /// Read `MANIFEST.json` from a snapshot directory.
+    pub fn read(dir: &Path) -> Result<SnapshotManifest, SearchError> {
+        let path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path).map_err(|e| io_err(&path, e))?;
+        let v = Json::parse(&text).map_err(|e| format_err(&path, e))?;
+        SnapshotManifest::from_json(&v).map_err(|e| format_err(&path, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusGenerator, CorpusSpec};
+
+    fn small_shard(n: u64) -> Shard {
+        let spec = CorpusSpec { num_docs: n, vocab_size: 400, ..CorpusSpec::default() };
+        let gen = CorpusGenerator::new(spec);
+        Shard::build(3, gen.generate_range(0, n), 128)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("gaps_test_snapshot");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let shard = small_shard(40);
+        let path = tmp("rt.gsnap");
+        write_shard_snapshot(&shard, &path).unwrap();
+        let loaded = read_shard_snapshot(&path).unwrap();
+        assert_eq!(loaded.id, shard.id);
+        assert_eq!(loaded.features, shard.features);
+        assert_eq!(loaded.pubs, shard.pubs);
+        assert_eq!(loaded.docs, shard.docs);
+        assert_eq!(loaded.stats, shard.stats);
+        let (a, b) = (loaded.inverted.raw_parts(), shard.inverted.raw_parts());
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.docs, b.docs);
+        assert_eq!(a.impacts, b.impacts);
+        assert_eq!(a.block_offsets, b.block_offsets);
+        assert_eq!(a.blocks, b.blocks);
+        assert_eq!(a.num_docs, b.num_docs);
+        assert_eq!(a.block_size, b.block_size);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let shard = small_shard(5);
+        let mut bytes = encode_shard_snapshot(&shard);
+        bytes[0] ^= 0xFF;
+        let e = decode_shard_snapshot(&bytes, Path::new("x")).unwrap_err();
+        assert_eq!(e.kind(), "invalid-config");
+        let mut bytes2 = encode_shard_snapshot(&shard);
+        bytes2[8] = 99; // version
+        let e2 = decode_shard_snapshot(&bytes2, Path::new("x")).unwrap_err();
+        assert_eq!(e2.kind(), "invalid-config");
+    }
+
+    #[test]
+    fn payload_corruption_is_an_io_error() {
+        let shard = small_shard(8);
+        let bytes = encode_shard_snapshot(&shard);
+        // Flip one byte deep inside the first payload (past tag+len+sum).
+        let mut corrupt = bytes.clone();
+        let i = 16 + 16 + 2;
+        corrupt[i] ^= 0x01;
+        let e = decode_shard_snapshot(&corrupt, Path::new("x")).unwrap_err();
+        assert_eq!(e.kind(), "io", "checksum must catch a payload bit flip: {e}");
+    }
+
+    #[test]
+    fn truncation_is_typed_never_a_panic() {
+        let shard = small_shard(8);
+        let bytes = encode_shard_snapshot(&shard);
+        for cut in [0, 4, 8, 15, 16, 40, bytes.len() / 2, bytes.len() - 1] {
+            let e = decode_shard_snapshot(&bytes[..cut], Path::new("x")).unwrap_err();
+            assert!(
+                matches!(e.kind(), "io" | "invalid-config"),
+                "cut={cut}: unexpected kind {}",
+                e.kind()
+            );
+        }
+    }
+
+    #[test]
+    fn missing_file_is_io() {
+        let e = read_shard_snapshot(Path::new("/nonexistent/x.gsnap")).unwrap_err();
+        assert_eq!(e.kind(), "io");
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let m = SnapshotManifest {
+            features: 512,
+            epoch: 7,
+            num_docs: 1000,
+            next_global_id: 1024,
+            sources: vec![ManifestSource {
+                id: 0,
+                doc_start: 0,
+                doc_count: 1000,
+                file: "shard_0000.gsnap".into(),
+            }],
+            overlays: vec![ManifestOverlay { source: 0, file: "overlay_0000_0001.gsnap".into() }],
+        };
+        let back = SnapshotManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        let dir = std::env::temp_dir().join("gaps_test_snapshot_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        m.write(&dir).unwrap();
+        assert_eq!(SnapshotManifest::read(&dir).unwrap(), m);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(SnapshotManifest::from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong =
+            Json::parse(r#"{"format":"zip","version":1,"features":1,"epoch":0,"num_docs":0,"next_global_id":0,"sources":[],"overlays":[]}"#)
+                .unwrap();
+        assert!(SnapshotManifest::from_json(&wrong).is_err());
+    }
+}

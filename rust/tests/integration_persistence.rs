@@ -1,0 +1,230 @@
+//! Persistence acceptance tests: a node deployed from an on-disk
+//! snapshot must be **bit-identical** — hit ids, score bits, work
+//! counters, index epoch — to the node that wrote it, and documents
+//! ingested while serving must become searchable after their seal with
+//! no restart, observable end-to-end over HTTP (`POST /ingest`,
+//! `GET /healthz`).
+//!
+//! CI runs this file as an explicit job step (see
+//! `.github/workflows/ci.yml`) — the snapshot format is a deployment
+//! surface, not an implementation detail.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::{GapsSystem, SearchResponse};
+use gaps::corpus::{CorpusGenerator, CorpusSpec, Publication};
+use gaps::serve::{HttpConfig, HttpServer, QueueConfig, SearchServer};
+use gaps::util::json::Json;
+
+fn small_cfg() -> GapsConfig {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 600;
+    cfg.workload.sub_shards = 8;
+    cfg.search.use_xla = false;
+    cfg
+}
+
+/// Fresh publications drawn from the same generator family as the
+/// deployed corpus, starting past its last id (generation is pure in
+/// `(seed, i)`, so a wider generator extends the corpus seamlessly).
+fn extra_pubs(sys: &GapsSystem, n: u64) -> Vec<Publication> {
+    let base = sys.deployment().locator.total_docs();
+    let spec = CorpusSpec {
+        seed: sys.cfg.workload.seed,
+        num_docs: base + n,
+        ..CorpusSpec::default()
+    };
+    CorpusGenerator::new(spec).generate_range(base, n)
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const QUERIES: [&str; 5] = [
+    "grid computing",
+    "data distributed retrieval",
+    "search AND grid",
+    "publication OR archive",
+    "academic massive search",
+];
+
+/// The headline acceptance criterion: deploy, ingest past several
+/// seals, snapshot, boot a second node from the snapshot, and require
+/// responses that are indistinguishable at the bit level.
+#[test]
+fn snapshot_deployed_node_is_bit_identical_to_generator_built() {
+    let mut cfg = small_cfg();
+    cfg.storage.seal_docs = 4;
+    cfg.storage.merge_fanout = 2;
+    let mut sys = GapsSystem::deploy(cfg.clone(), 3).unwrap();
+
+    // Ingest enough to seal overlay segments on every source (and leave
+    // a buffered remainder, which the snapshot must also carry).
+    let fresh = extra_pubs(&sys, 70);
+    let rep = sys.ingest(fresh);
+    assert!(rep.sealed >= 1, "70 docs over 8 sources at seal_docs=4 must seal");
+    assert!(rep.epoch >= 1);
+
+    let dir = temp_dir("gaps_it_persistence_parity");
+    let manifest = sys.write_snapshot(&dir).unwrap();
+    assert_eq!(manifest.epoch, sys.index_epoch());
+
+    let mut restored = GapsSystem::deploy_from_snapshot(cfg, 3, &dir).unwrap();
+
+    // Same epoch, same health, same per-source segment layout.
+    assert_eq!(restored.index_epoch(), sys.index_epoch());
+    let (ha, hb) = (sys.index_health(), restored.index_health());
+    assert_eq!(ha.searchable_docs, hb.searchable_docs);
+    assert_eq!(ha.buffered_docs, hb.buffered_docs);
+    assert_eq!(ha.segments, hb.segments);
+
+    for q in QUERIES {
+        let a = sys.search(q).unwrap();
+        let b = restored.search(q).unwrap();
+        assert_eq!(a.hits.len(), b.hits.len(), "hit count diverged for {q:?}");
+        for (x, y) in a.hits.iter().zip(&b.hits) {
+            assert_eq!(x.global_id, y.global_id, "hit ids diverged for {q:?}");
+            assert_eq!(
+                x.score.to_bits(),
+                y.score.to_bits(),
+                "score bits diverged for {q:?} on doc {}",
+                x.global_id
+            );
+            assert_eq!(x.title, y.title);
+        }
+        assert_eq!(a.docs_scanned, b.docs_scanned, "coverage diverged for {q:?}");
+        assert_eq!(a.candidates, b.candidates, "candidates diverged for {q:?}");
+    }
+}
+
+/// A snapshot-booted node is a *live* node: it keeps ingesting on the
+/// same epoch/id line the writer left off at, with no id collisions.
+#[test]
+fn snapshot_boot_continues_ingestion_where_the_writer_stopped() {
+    let mut cfg = small_cfg();
+    cfg.storage.seal_docs = 2;
+    let mut sys = GapsSystem::deploy(cfg.clone(), 2).unwrap();
+    let batch = extra_pubs(&sys, 40);
+    let (first, second) = batch.split_at(16);
+    sys.ingest(first.to_vec());
+    let epoch_at_write = sys.index_epoch();
+
+    let dir = temp_dir("gaps_it_persistence_resume");
+    sys.write_snapshot(&dir).unwrap();
+    let mut restored = GapsSystem::deploy_from_snapshot(cfg, 2, &dir).unwrap();
+
+    let rep = restored.ingest(second.to_vec());
+    assert_eq!(rep.accepted, 24);
+    assert!(rep.epoch > epoch_at_write, "resumed ingestion must keep bumping the epoch");
+    restored.flush_ingest();
+
+    // Every ingested publication — the writer's and the resumed ones —
+    // resolves to a distinct id with its own title.
+    let total = restored.index_health().searchable_docs;
+    assert_eq!(total, 600 + 40);
+    for (i, p) in batch.iter().enumerate() {
+        let got = restored.publication(600 + i as u64).unwrap_or_else(|| {
+            panic!("ingested doc {} missing after snapshot resume", 600 + i as u64)
+        });
+        assert_eq!(got.title, p.title, "id collision at {}", 600 + i as u64);
+    }
+}
+
+/// Minimal HTTP/1.1 client for the end-to-end lane below.
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: gaps-test\r\n");
+    if let Some(body) = body {
+        req.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            body.len()
+        ));
+    }
+    req.push_str("Connection: close\r\n\r\n");
+    if let Some(body) = body {
+        req.push_str(body);
+    }
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("receive");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    (status, Json::parse(body).unwrap_or_else(|e| panic!("bad body {body:?}: {e}")))
+}
+
+/// End-to-end over real sockets: ingest while serving, watch the epoch
+/// move in `/healthz`, and retrieve the new document — all without the
+/// server restarting or redeploying.
+#[test]
+fn ingest_over_http_is_searchable_and_reported_in_healthz() {
+    let mut cfg = small_cfg();
+    cfg.workload.num_docs = 400;
+    cfg.workload.sub_shards = 4;
+    cfg.storage.seal_docs = 1; // every ingest seals immediately
+    let server = SearchServer::start(QueueConfig::default(), move || {
+        GapsSystem::deploy(cfg, 3)
+    })
+    .unwrap();
+    let http_srv =
+        HttpServer::bind_with("127.0.0.1:0", server.queue(), HttpConfig::default()).unwrap();
+    let addr = http_srv.local_addr().unwrap();
+    let stopper = http_srv.shutdown_handle().unwrap();
+    let accept = std::thread::spawn(move || http_srv.serve().unwrap());
+
+    // Before any ingest: epoch 0, base corpus only.
+    let (status, health) = http(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    let index = health.get("index").expect("healthz must report the index object");
+    assert_eq!(index.get("epoch").unwrap().as_i64(), Some(0));
+    assert_eq!(index.get("searchable_docs").unwrap().as_i64(), Some(400));
+
+    let body = r#"{"docs": [{
+        "id": 0,
+        "title": "zyzzogeton grid persistence",
+        "abstract": "an http-ingested publication about zyzzogeton",
+        "authors": "A. Author",
+        "venue": "TEST",
+        "year": 2026
+    }]}"#;
+    let (status, report) = http(addr, "POST", "/ingest", Some(body));
+    assert_eq!(status, 200, "{report:?}");
+    assert_eq!(report.get("accepted").unwrap().as_i64(), Some(1));
+    assert!(report.get("sealed").unwrap().as_i64().unwrap() >= 1);
+    let epoch = report.get("epoch").unwrap().as_i64().unwrap();
+    assert!(epoch >= 1);
+
+    // Searchable on the very next request, same process, same sockets.
+    let (status, body) =
+        http(addr, "POST", "/search", Some(r#"{"query": "zyzzogeton"}"#));
+    assert_eq!(status, 200, "{body:?}");
+    let resp = SearchResponse::from_json(&body).unwrap();
+    assert!(
+        resp.hits.iter().any(|h| h.title.contains("zyzzogeton")),
+        "ingested doc must be retrievable after its seal: {resp:?}"
+    );
+
+    // The epoch the client saw in the ingest report is now the epoch
+    // /healthz serves, with the segment visible under its source.
+    let (_, health) = http(addr, "GET", "/healthz", None);
+    let index = health.get("index").unwrap();
+    assert_eq!(index.get("epoch").unwrap().as_i64(), Some(epoch));
+    assert_eq!(index.get("searchable_docs").unwrap().as_i64(), Some(401));
+    assert_eq!(index.get("buffered_docs").unwrap().as_i64(), Some(0));
+    let segments = index.get("segments").unwrap().as_arr().unwrap();
+    assert!(!segments.is_empty(), "sealed segment must appear per-source");
+
+    stopper.stop();
+    accept.join().unwrap();
+    server.shutdown();
+}

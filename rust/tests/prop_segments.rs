@@ -1,0 +1,156 @@
+//! Segmented-index parity properties (referenced from
+//! `gaps::storage::segment`'s module docs): a `SegmentedIndex` over any
+//! partition of a doc array — 1, 2, or up to 5 segments at random
+//! boundaries, with or without an unsealed mutable tail — must return
+//! hits bit-identical (ids *and* scores) to one monolithic
+//! `InvertedIndex` over the same docs, and its work counters must be
+//! exactly the sum of the per-segment counters. Shard-level compaction
+//! (`merge_shards`) must likewise be invisible: merging any partition
+//! of a publication range equals building the whole shard directly.
+
+use std::cell::RefCell;
+
+use gaps::corpus::{CorpusGenerator, CorpusSpec};
+use gaps::index::{InvertedIndex, RetrievalCounters, RetrievalScratch, Shard};
+use gaps::storage::{merge_shards, SegmentedIndex};
+use gaps::util::prop::{check, Config};
+
+fn prop_cfg(cases: usize) -> Config {
+    Config { cases, ..Config::default() }
+}
+
+#[test]
+fn prop_segmented_retrieval_matches_monolithic() {
+    const FEATURES: usize = 128;
+    let spec = CorpusSpec { num_docs: 360, vocab_size: 400, seed: 9, ..CorpusSpec::default() };
+    let gen = CorpusGenerator::new(spec);
+    let docs = Shard::build(0, gen.generate_range(0, 360), FEATURES).docs;
+    let mono = InvertedIndex::build(&docs, FEATURES);
+    let scratch = RefCell::new(RetrievalScratch::new());
+
+    check(
+        "segmented-vs-monolithic",
+        &prop_cfg(120),
+        |rng, size| {
+            // 1, 2 or 5 segments at random boundaries (duplicate cuts
+            // collapse, so "up to"); the last segment optionally stays
+            // mutable instead of sealing.
+            let nseg = [1usize, 2, 5][rng.range(0, 3)];
+            let mut cuts: Vec<usize> =
+                (0..nseg - 1).map(|_| rng.range(1, docs.len())).collect();
+            cuts.push(docs.len());
+            cuts.sort_unstable();
+            cuts.dedup();
+            let mutable_tail = rng.chance(0.5);
+            let n = rng.range(1, size.max(2).min(8));
+            let buckets: Vec<u32> =
+                (0..n).map(|_| rng.below(FEATURES as u64) as u32).collect();
+            let k = rng.range(1, 100);
+            (cuts, mutable_tail, buckets, k)
+        },
+        |(cuts, mutable_tail, buckets, k)| {
+            let mut seg = SegmentedIndex::new(FEATURES);
+            let mut start = 0usize;
+            for (i, &cut) in cuts.iter().enumerate() {
+                seg.add_docs(docs[start..cut].to_vec());
+                if !(i == cuts.len() - 1 && *mutable_tail) {
+                    seg.seal();
+                }
+                start = cut;
+            }
+            assert_eq!(seg.num_docs(), docs.len());
+
+            let mut s = scratch.borrow_mut();
+            let (hits, counters) = seg.retrieve_into(buckets, *k, &mut s);
+            let want = mono.retrieve(buckets, *k);
+            if hits != want {
+                return Err(format!(
+                    "cuts {cuts:?} mutable_tail={mutable_tail} k={k}: \
+                     {} hits != monolithic {}",
+                    hits.len(),
+                    want.len()
+                ));
+            }
+
+            // Counter aggregation: the segmented counters are exactly
+            // the sum over per-segment indexes built from the same
+            // slices (postings partition across segments, so
+            // postings_total also equals the monolithic total).
+            let mut sum = RetrievalCounters::default();
+            let mut prev = 0usize;
+            for &cut in cuts.iter() {
+                let part = InvertedIndex::build(&docs[prev..cut], FEATURES);
+                part.retrieve_into(buckets, *k, &mut s);
+                sum.merge(s.counters());
+                prev = cut;
+            }
+            if counters != sum {
+                return Err(format!("aggregated counters {counters:?} != sum {sum:?}"));
+            }
+            mono.retrieve_into(buckets, *k, &mut s);
+            if counters.postings_total != s.counters().postings_total {
+                return Err(format!(
+                    "postings_total {} != monolithic {}",
+                    counters.postings_total,
+                    s.counters().postings_total
+                ));
+            }
+
+            // AND-retrieval parity rides along on the same partition.
+            let (all, _) = seg.retrieve_all(buckets, docs.len());
+            if all != mono.retrieve_all(buckets, docs.len()) {
+                return Err(format!("retrieve_all diverged for cuts {cuts:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_merge_shards_equals_direct_build() {
+    const FEATURES: usize = 64;
+    let spec = CorpusSpec { num_docs: 150, vocab_size: 300, seed: 17, ..CorpusSpec::default() };
+    let gen = CorpusGenerator::new(spec);
+    let pubs = gen.generate_range(0, 150);
+    let whole = Shard::build(5, pubs.clone(), FEATURES);
+
+    check(
+        "merge-shards-invariance",
+        &prop_cfg(60),
+        |rng, _| {
+            let nparts = rng.range(1, 5);
+            let mut cuts: Vec<usize> =
+                (0..nparts - 1).map(|_| rng.range(1, pubs.len())).collect();
+            cuts.push(pubs.len());
+            cuts.sort_unstable();
+            cuts.dedup();
+            let buckets: Vec<u32> =
+                (0..rng.range(1, 5)).map(|_| rng.below(FEATURES as u64) as u32).collect();
+            (cuts, buckets)
+        },
+        |(cuts, buckets)| {
+            let mut parts = Vec::new();
+            let mut prev = 0usize;
+            for &cut in cuts.iter() {
+                parts.push(Shard::build(5, pubs[prev..cut].to_vec(), FEATURES));
+                prev = cut;
+            }
+            let merged = merge_shards(5, parts);
+            if merged.pubs != whole.pubs {
+                return Err("merged pubs differ from direct build".into());
+            }
+            if merged.docs != whole.docs {
+                return Err("merged docs differ from direct build".into());
+            }
+            if merged.stats != whole.stats {
+                return Err("merged stats differ from direct build".into());
+            }
+            let (got, want) =
+                (merged.inverted.retrieve(buckets, 25), whole.inverted.retrieve(buckets, 25));
+            if got != want {
+                return Err(format!("merged retrieval {} hits != {}", got.len(), want.len()));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,163 @@
+//! Snapshot-format property tests (referenced from `gaps::storage`'s
+//! module docs):
+//!
+//! * round-trip — a decoded snapshot reproduces the in-memory shard
+//!   exactly: byte-identical CSR arena (offsets, postings, quantized
+//!   impacts, block metadata), equal publications/docs/stats, and
+//!   bit-identical retrieval (ids *and* scores) across random queries
+//!   and block sizes;
+//! * hostile input — flipping any bit or truncating at any offset of a
+//!   real snapshot yields a typed `SearchError` (`io` for corruption,
+//!   `invalid-config` for not-a-snapshot), never a panic and never a
+//!   silently-loaded wrong index.
+
+use gaps::corpus::{CorpusGenerator, CorpusSpec};
+use gaps::index::{InvertedIndex, Shard};
+use gaps::storage::snapshot::encode_shard_snapshot;
+use gaps::storage::{read_shard_snapshot, write_shard_snapshot, SnapshotManifest, MANIFEST_NAME};
+use gaps::util::prop::{check, Config};
+
+fn prop_cfg(cases: usize) -> Config {
+    Config { cases, ..Config::default() }
+}
+
+/// A shard over a generated corpus, re-indexed at a chosen block size
+/// (small blocks force block boundaries into the middle of every
+/// posting list, exercising the INDX section's geometry paths).
+fn corpus_shard(n: u64, vocab: usize, seed: u64, features: usize, block_size: usize) -> Shard {
+    let spec = CorpusSpec { num_docs: n, vocab_size: vocab, seed, ..CorpusSpec::default() };
+    let gen = CorpusGenerator::new(spec);
+    let base = Shard::build(3, gen.generate_range(0, n), features);
+    let inverted = InvertedIndex::build_with_block_size(&base.docs, features, block_size);
+    Shard { inverted, ..base }
+}
+
+#[test]
+fn prop_snapshot_roundtrip_is_bit_identical() {
+    const FEATURES: usize = 128;
+    let dir = std::env::temp_dir().join("gaps_prop_snapshot_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // (docs, vocab, seed, block size) — shapes chosen so arenas differ
+    // in every dimension the INDX section encodes.
+    let shapes: [(u64, usize, u64, usize); 3] =
+        [(300, 400, 11, 1), (150, 250, 23, 7), (420, 600, 5, 128)];
+    let variants: Vec<(Shard, Shard)> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(n, vocab, seed, bs))| {
+            let shard = corpus_shard(n, vocab, seed, FEATURES, bs);
+            let path = dir.join(format!("v{i}.gsnap"));
+            write_shard_snapshot(&shard, &path).unwrap();
+            let loaded = read_shard_snapshot(&path).unwrap();
+            (shard, loaded)
+        })
+        .collect();
+
+    for (shard, loaded) in &variants {
+        assert_eq!(shard.id, loaded.id);
+        assert_eq!(shard.features, loaded.features);
+        assert_eq!(shard.pubs, loaded.pubs);
+        assert_eq!(shard.docs, loaded.docs);
+        assert_eq!(shard.stats, loaded.stats);
+        // The arena is byte-identical, not just equivalent.
+        let a = shard.inverted.raw_parts();
+        let b = loaded.inverted.raw_parts();
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.docs, b.docs);
+        assert_eq!(a.impacts, b.impacts);
+        assert_eq!(a.block_offsets, b.block_offsets);
+        assert_eq!(a.blocks, b.blocks);
+        assert_eq!(a.num_docs, b.num_docs);
+        assert_eq!(a.block_size, b.block_size);
+        // And re-encoding reproduces the container byte for byte.
+        assert_eq!(encode_shard_snapshot(shard), encode_shard_snapshot(loaded));
+    }
+
+    // Retrieval through the loaded arena is bit-identical — ids and
+    // scores — to the never-persisted original, across random queries.
+    check(
+        "snapshot-roundtrip-retrieval",
+        &prop_cfg(200),
+        |rng, size| {
+            let variant = rng.range(0, variants.len());
+            let n = rng.range(1, size.max(2).min(8));
+            let buckets: Vec<u32> =
+                (0..n).map(|_| rng.below(FEATURES as u64 + 4) as u32).collect();
+            let k = rng.range(1, 120);
+            (variant, buckets, k)
+        },
+        |(variant, buckets, k)| {
+            let (shard, loaded) = &variants[*variant];
+            let want = shard.inverted.retrieve(buckets, *k);
+            let got = loaded.inverted.retrieve(buckets, *k);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!(
+                    "variant {variant} k={k}: loaded returned {} hits, original {}",
+                    got.len(),
+                    want.len()
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_corrupt_snapshots_fail_typed_never_panic() {
+    let dir = std::env::temp_dir().join("gaps_prop_snapshot_hostile");
+    std::fs::create_dir_all(&dir).unwrap();
+    let shard = corpus_shard(200, 300, 7, 64, 16);
+    let path = dir.join("base.gsnap");
+    write_shard_snapshot(&shard, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let case_path = dir.join("case.gsnap");
+
+    check(
+        "snapshot-hostile-input",
+        &prop_cfg(250),
+        |rng, _| {
+            // Either flip one bit anywhere or truncate strictly shorter
+            // — every offset class (magic, version, section headers,
+            // checksums, payloads) gets hit across the cases.
+            let flip = rng.chance(0.5);
+            let off = rng.below(bytes.len() as u64) as usize;
+            let bit = rng.below(8) as u32;
+            (flip, off, bit)
+        },
+        |(flip, off, bit)| {
+            let mut mutated = bytes.clone();
+            if *flip {
+                mutated[*off] ^= 1u8 << *bit;
+            } else {
+                mutated.truncate(*off);
+            }
+            std::fs::write(&case_path, &mutated).unwrap();
+            match read_shard_snapshot(&case_path) {
+                Err(e) if e.kind() == "io" || e.kind() == "invalid-config" => Ok(()),
+                Err(e) => Err(format!(
+                    "flip={flip} off={off} bit={bit}: untyped error kind {:?}",
+                    e.kind()
+                )),
+                Ok(_) => Err(format!(
+                    "flip={flip} off={off} bit={bit}: corrupted snapshot loaded cleanly"
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn garbage_manifest_is_a_typed_config_error() {
+    let dir = std::env::temp_dir().join("gaps_prop_snapshot_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    for garbage in ["", "not json at all", "{\"format\": \"something-else\"}", "[1, 2, 3]"] {
+        std::fs::write(dir.join(MANIFEST_NAME), garbage).unwrap();
+        let err = SnapshotManifest::read(&dir).expect_err("garbage manifest must not parse");
+        assert_eq!(err.kind(), "invalid-config", "manifest {garbage:?}");
+    }
+    // A missing manifest is an I/O failure, not a format failure.
+    std::fs::remove_file(dir.join(MANIFEST_NAME)).unwrap();
+    assert_eq!(SnapshotManifest::read(&dir).expect_err("missing file").kind(), "io");
+}
