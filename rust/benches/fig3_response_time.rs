@@ -24,6 +24,14 @@
 //!   the admission queue (coalesced `search_batch` rounds on the
 //!   resident gridpool) vs a single closed-loop user, with the
 //!   admission counters (rounds formed, average/largest batch);
+//! * **cache** — fixed-seed zipfian repeat-query workload through the
+//!   serving stack: result-cache hit rate, hot-query p50 cached vs the
+//!   identical stack with the cache disabled, plan-cache counters, and
+//!   a deterministic single-flight burst of identical co-arrivals.
+//!   Written to `BENCH_cache.json` and gated against the committed
+//!   baseline's `cache` section — the hit rate is a deterministic
+//!   function of the fixed seed, so a >5% relative regression fails
+//!   even under `GAPS_BENCH_NO_ASSERT`;
 //! * **availability** — fixed-seed chaos schedules replayed against a
 //!   fault-free oracle: success/degraded/error rates and failover retry
 //!   counters, with structural invariants asserted even under
@@ -47,9 +55,10 @@
 //! Env: GAPS_BENCH_DOCS / GAPS_BENCH_QUERIES resize the sweep workload,
 //!      GAPS_BENCH_MICRO_DOCS resizes the micro-benchmark shard,
 //!      GAPS_BENCH_BASELINE points at an alternate baseline file,
-//!      GAPS_BENCH_WRITE_BASELINE=1 skips the gate and rewrites the
-//!      baseline file from this run (commit the result after intentional
-//!      retrieval changes).
+//!      GAPS_BENCH_WRITE_BASELINE=1 skips the counter and cache gates
+//!      and rewrites the baseline file (both sections) from this run
+//!      (commit the result after intentional retrieval or caching
+//!      changes).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -64,7 +73,7 @@ use gaps::search::{Query, SearchRequest};
 use gaps::serve::{QueueConfig, QueueStats, SearchServer};
 use gaps::util::bench::Table;
 use gaps::util::json::Json;
-use gaps::util::rng::Rng;
+use gaps::util::rng::{Rng, Zipf};
 use gaps::util::stats::Summary;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -220,39 +229,56 @@ fn bench_counters() -> Json {
 /// baseline for the gate comparison to be meaningful.
 const WORKLOAD_KEYS: [&str; 5] = ["docs", "features", "queries", "max_candidates", "seed"];
 
+/// The `cache` section's workload pins, compared the same way.
+const CACHE_WORKLOAD_KEYS: [&str; 7] =
+    ["docs", "nodes", "distinct", "draws", "theta", "seed", "burst"];
+
+/// Baseline location: the committed `BENCH_baseline.json` unless
+/// `GAPS_BENCH_BASELINE` points elsewhere.
+fn baseline_path() -> String {
+    std::env::var("GAPS_BENCH_BASELINE").unwrap_or_else(|_| "BENCH_baseline.json".to_string())
+}
+
+/// `GAPS_BENCH_WRITE_BASELINE=1` path: record this run's deterministic
+/// sections (pruning counters + cache behaviour) as the new reference —
+/// the escape hatch for *intentional* retrieval or caching changes
+/// (gating first would panic before the write, making regeneration
+/// impossible). The gates are skipped on a write run.
+fn write_baseline(counter_report: &Json, cache_report: &Json) {
+    let baseline_path = baseline_path();
+    let mut pairs = vec![("provisional", Json::Bool(false))];
+    if let (Some(w), Some(c)) = (counter_report.get("workload"), counter_report.get("counters")) {
+        pairs.push(("workload", w.clone()));
+        pairs.push(("counters", c.clone()));
+    }
+    let mut cache = Vec::new();
+    for key in ["workload", "hit_rate", "singleflight"] {
+        if let Some(v) = cache_report.get(key) {
+            cache.push((key, v.clone()));
+        }
+    }
+    pairs.push(("cache", Json::obj(cache)));
+    std::fs::write(&baseline_path, Json::obj(pairs).to_string_pretty())
+        .unwrap_or_else(|e| panic!("write {baseline_path}: {e}"));
+    println!(
+        "wrote {baseline_path} (commit it to pin this run as the gate baseline — \
+         counter and cache gates skipped this run)"
+    );
+}
+
 /// Gate the deterministic counters against the committed baseline:
 /// effectiveness must stay above the hard 30% floor and within 5% of the
 /// baseline's recorded fraction (same workload only — a baseline
 /// recorded for a different workload fails loudly instead of masking a
 /// regression). Panics (fails the bench / CI) on regression. Runs
-/// regardless of `GAPS_BENCH_NO_ASSERT`. `GAPS_BENCH_WRITE_BASELINE=1`
-/// skips the gate and records this run as the new reference instead —
-/// the escape hatch for *intentional* retrieval changes (gating first
-/// would panic before the write, making regeneration impossible).
+/// regardless of `GAPS_BENCH_NO_ASSERT`.
 fn gate_counters(report: &Json) {
     let skipped = report
         .get("counters")
         .and_then(|c| c.get("skipped_fraction"))
         .and_then(|v| v.as_f64())
         .expect("counter report has skipped_fraction");
-    let baseline_path = std::env::var("GAPS_BENCH_BASELINE")
-        .unwrap_or_else(|_| "BENCH_baseline.json".to_string());
-
-    if std::env::var("GAPS_BENCH_WRITE_BASELINE").is_ok() {
-        let mut pairs = vec![("provisional", Json::Bool(false))];
-        if let (Some(w), Some(c)) = (report.get("workload"), report.get("counters")) {
-            pairs.push(("workload", w.clone()));
-            pairs.push(("counters", c.clone()));
-        }
-        std::fs::write(&baseline_path, Json::obj(pairs).to_string_pretty())
-            .unwrap_or_else(|e| panic!("write {baseline_path}: {e}"));
-        println!(
-            "wrote {baseline_path} ({:.1}% skipped; commit it to pin this run as the \
-             gate baseline — gate skipped this run)",
-            skipped * 100.0
-        );
-        return;
-    }
+    let baseline_path = baseline_path();
 
     assert!(
         skipped > 0.30,
@@ -481,14 +507,18 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
 
         let t = Instant::now();
         std::thread::scope(|s| {
-            for _ in 0..users {
+            for u in 0..users {
                 let queue = &queue;
                 let queries = &queries;
+                // Staggered starting offsets: identical co-arrivals now
+                // single-flight into one queue slot, so users marching
+                // in lockstep over the same list would form size-1
+                // rounds; offset starts keep *distinct* queries
+                // co-pending, the mix the coalescing path is for.
                 s.spawn(move || {
-                    for _ in 0..rounds {
-                        for q in queries {
-                            queue.submit(SearchRequest::new(q.clone())).expect("serve");
-                        }
+                    for i in 0..rounds * queries.len() {
+                        let q = &queries[(u + i) % queries.len()];
+                        queue.submit(SearchRequest::new(q.clone())).expect("serve");
                     }
                 });
             }
@@ -503,10 +533,17 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
             coalesced: total.coalesced - warm.coalesced,
             // Max since boot; the size-1 warm-up round cannot hold it.
             largest_batch: total.largest_batch,
+            singleflight: total.singleflight - warm.singleflight,
             shed: total.shed - warm.shed,
             expired: total.expired - warm.expired,
             ingest_batches: total.ingest_batches - warm.ingest_batches,
             ingest_docs: total.ingest_docs - warm.ingest_docs,
+            plan_hits: total.plan_hits - warm.plan_hits,
+            plan_misses: total.plan_misses - warm.plan_misses,
+            result_hits: total.result_hits - warm.result_hits,
+            result_misses: total.result_misses - warm.result_misses,
+            result_evicted: total.result_evicted - warm.result_evicted,
+            result_invalidated: total.result_invalidated - warm.result_invalidated,
         };
         ((users * rounds * queries.len()) as f64 / elapsed.max(1e-12), stats)
     };
@@ -520,13 +557,15 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
          1 user   {solo_qps:8.1} qps\n\
          {users} users  {multi_qps:8.1} qps  (x{:.2})\n\
          admission: {} rounds for {} requests (avg batch {avg_batch:.1}, \
-         largest {}, {} coalesced)",
+         largest {}, {} coalesced, {} single-flight; {} result-cache hits)",
         queries.len(),
         multi_qps / solo_qps.max(1e-12),
         stats.batches,
         stats.executed,
         stats.largest_batch,
         stats.coalesced,
+        stats.singleflight,
+        stats.result_hits,
     );
 
     Json::obj(vec![
@@ -542,7 +581,247 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
         ("avg_batch", Json::from(avg_batch)),
         ("largest_batch", Json::from(stats.largest_batch)),
         ("coalesced", Json::from(stats.coalesced)),
+        ("singleflight", Json::from(stats.singleflight)),
+        ("result_hits", Json::from(stats.result_hits)),
     ])
+}
+
+/// Deterministic caching behaviour on a **fixed** zipfian workload: 512
+/// draws from a Zipf(1.1) popularity curve over 16 distinct queries at a
+/// fixed seed, submitted serially through the serving stack. Like
+/// `bench_counters`, every constant is local and deliberately not
+/// env-resizable, so the committed baseline's `cache` section pins the
+/// hit rate exactly. Three series come out:
+///
+/// * **hit rate** — result-cache hits / draws. With a capacity far above
+///   the pool size and no ingest, misses == distinct queries drawn, so
+///   the rate is a pure function of the seed (asserted structurally,
+///   always on).
+/// * **hot-query p50** — per-request wall time, cached vs the identical
+///   stack with `cache.enabled = false` (wall-clock, so only reported
+///   here; the speedup floor lives with the other enforced wall-clock
+///   checks in `main`).
+/// * **single-flight** — a burst of identical requests enqueued under
+///   one queue lock: all but one must attach to the first's flight
+///   (exactly `BURST - 1`, asserted structurally, always on).
+fn bench_cache() -> Json {
+    const DOCS: u64 = 4_000;
+    const NODES: usize = 4;
+    const DISTINCT: usize = 16;
+    const DRAWS: usize = 512;
+    const THETA: f64 = 1.1;
+    const SEED: u64 = 0x2AC4E;
+    const BURST: usize = 8;
+    // Distinct leading terms (distinct stems) guarantee 16 distinct
+    // normalized-AST fingerprints — the hit-rate arithmetic below
+    // depends on pool index i <=> one cache key.
+    const TOPICS: [&str; DISTINCT] = [
+        "cloud", "storage", "retrieval", "indexing", "ranking", "parallel", "distributed",
+        "semantic", "crawler", "cluster", "archive", "metadata", "citation", "corpus",
+        "replication", "scheduling",
+    ];
+
+    let mut c = GapsConfig::default();
+    c.workload.num_docs = DOCS;
+    c.search.use_xla = false;
+    eprintln!("cache: deploying fixed {DOCS}-doc grid ({NODES} nodes)...");
+    let dep = Arc::new(Deployment::build(&c, NODES).expect("deploy"));
+    let queries: Vec<String> =
+        TOPICS.iter().map(|t| format!("{t} grid computing")).collect();
+
+    let zipf = Zipf::new(DISTINCT, THETA);
+    let mut rng = Rng::new(SEED);
+    let seq: Vec<usize> = (0..DRAWS).map(|_| zipf.sample(&mut rng)).collect();
+    let unique = {
+        let mut seen = [false; DISTINCT];
+        for &r in &seq {
+            seen[r] = true;
+        }
+        seen.iter().filter(|&&s| s).count()
+    };
+
+    let start = |cache_on: bool| {
+        let mut cc = c.clone();
+        cc.cache.enabled = cache_on;
+        let dep = Arc::clone(&dep);
+        SearchServer::start(
+            QueueConfig { max_batch: 16, max_linger: Duration::ZERO, ..QueueConfig::default() },
+            move || GapsSystem::from_deployment(cc, dep),
+        )
+        .expect("serve start")
+    };
+
+    // Cold reference: the identical stack with the result cache off.
+    let cold_server = start(false);
+    let cold_queue = cold_server.queue();
+    cold_queue.submit(SearchRequest::new(queries[0].clone())).expect("cold warmup");
+    let mut cold = Summary::new();
+    for &r in &seq {
+        let t = Instant::now();
+        cold_queue.submit(SearchRequest::new(queries[r].clone())).expect("cold serve");
+        cold.add(t.elapsed().as_secs_f64());
+    }
+    cold_server.shutdown();
+
+    // Cached pass: same sequence, cache on. The warm-up query is from
+    // *outside* the pool so it seeds nothing the workload draws.
+    let server = start(true);
+    let queue = server.queue();
+    queue.submit(SearchRequest::new("offpool warmup probe".to_string())).expect("warmup");
+    let warm = server.stats();
+    let (mut cached, mut cold_miss) = (Summary::new(), Summary::new());
+    let mut hits_seen = warm.result_hits;
+    for &r in &seq {
+        let t = Instant::now();
+        queue.submit(SearchRequest::new(queries[r].clone())).expect("cached serve");
+        let dt = t.elapsed().as_secs_f64();
+        // Serial submission: the executor publishes counters before the
+        // reply, so the hit/miss split per request is exact.
+        let now = queue.stats().result_hits;
+        if now > hits_seen {
+            cached.add(dt);
+        } else {
+            cold_miss.add(dt);
+        }
+        hits_seen = now;
+    }
+    let after = server.stats();
+    let hits = after.result_hits - warm.result_hits;
+    let misses = after.result_misses - warm.result_misses;
+    let plan_hits = after.plan_hits - warm.plan_hits;
+    let plan_misses = after.plan_misses - warm.plan_misses;
+    // Structural, always on: with capacity >> pool size and no ingest,
+    // the fixed seed pins the split exactly.
+    assert_eq!(hits + misses, DRAWS as u64, "every draw must probe the result cache");
+    assert_eq!(
+        misses, unique as u64,
+        "result-cache misses must equal the distinct queries drawn"
+    );
+    let hit_rate = hits as f64 / DRAWS as f64;
+
+    // Single-flight burst: BURST copies of one fresh request enqueued
+    // atomically (one lock hold), so exactly BURST-1 attach.
+    let pre = server.stats();
+    let tickets = queue.enqueue_all(
+        (0..BURST).map(|_| SearchRequest::new("coalesced burst probe".to_string())).collect(),
+    );
+    for t in tickets {
+        t.wait().expect("burst");
+    }
+    let singleflight = server.stats().singleflight - pre.singleflight;
+    assert_eq!(
+        singleflight,
+        (BURST - 1) as u64,
+        "identical co-pending requests must share one flight"
+    );
+    server.shutdown();
+
+    let speedup = cold.p50() / cached.p50().max(1e-12);
+    println!(
+        "\n== result cache (zipf({THETA}) over {DISTINCT} queries, {DRAWS} draws, \
+         {NODES} nodes) ==\n\
+         hit rate   {:5.1}%  ({hits} hits / {misses} misses, {unique} distinct drawn)\n\
+         hot p50    {:8.1}us cached vs {:8.1}us cold  ({speedup:.1}x)\n\
+         plan cache {plan_hits} hits / {plan_misses} misses\n\
+         single-flight: {singleflight} of {BURST} identical co-arrivals attached",
+        hit_rate * 100.0,
+        cached.p50() * 1e6,
+        cold.p50() * 1e6,
+    );
+
+    Json::obj(vec![
+        ("bench", Json::str("cache")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("docs", Json::from(DOCS)),
+                ("nodes", Json::from(NODES)),
+                ("distinct", Json::from(DISTINCT)),
+                ("draws", Json::from(DRAWS)),
+                ("theta", Json::from(THETA)),
+                ("seed", Json::from(SEED)),
+                ("burst", Json::from(BURST)),
+            ]),
+        ),
+        ("hit_rate", Json::from(hit_rate)),
+        ("result_hits", Json::from(hits)),
+        ("result_misses", Json::from(misses)),
+        ("unique_queries", Json::from(unique)),
+        ("cold_p50_us", Json::from(cold.p50() * 1e6)),
+        ("cached_p50_us", Json::from(cached.p50() * 1e6)),
+        ("miss_p50_us", Json::from(cold_miss.p50() * 1e6)),
+        ("speedup_p50", Json::from(speedup)),
+        ("plan_hits", Json::from(plan_hits)),
+        ("plan_misses", Json::from(plan_misses)),
+        ("singleflight", Json::from(singleflight)),
+    ])
+}
+
+/// Gate the deterministic cache series against the committed baseline's
+/// `cache` section: the hit rate may not regress more than 5% relative,
+/// and the single-flight burst count must match exactly. Like
+/// `gate_counters`, this runs regardless of `GAPS_BENCH_NO_ASSERT` —
+/// both numbers are pure functions of fixed seeds and cannot flake on
+/// shared runners. Baselines predating the section (or a missing file)
+/// only note the gap instead of failing.
+fn gate_cache(report: &Json) {
+    let hit_rate =
+        report.get("hit_rate").and_then(|v| v.as_f64()).expect("cache report has hit_rate");
+    let singleflight = report
+        .get("singleflight")
+        .and_then(|v| v.as_i64())
+        .expect("cache report has singleflight");
+    let baseline_path = baseline_path();
+    let Ok(text) = std::fs::read_to_string(&baseline_path) else {
+        println!("note: {baseline_path} missing — cache gate ran structural checks only");
+        return;
+    };
+    let base =
+        Json::parse(&text).unwrap_or_else(|e| panic!("{baseline_path}: invalid JSON: {e}"));
+    let Some(cache) = base.get("cache") else {
+        println!(
+            "note: {baseline_path} has no cache section — regenerate with \
+             GAPS_BENCH_WRITE_BASELINE=1 and commit to arm the cache gate"
+        );
+        return;
+    };
+    for key in CACHE_WORKLOAD_KEYS {
+        let got = report.get("workload").and_then(|w| w.get(key)).and_then(|v| v.as_f64());
+        let want = cache.get("workload").and_then(|w| w.get(key)).and_then(|v| v.as_f64());
+        assert!(
+            got.is_some() && got == want,
+            "{baseline_path}: cache.workload.{key} = {want:?} does not match this \
+             bench's {got:?} — the baseline was recorded for a different workload; \
+             regenerate it with GAPS_BENCH_WRITE_BASELINE=1 and commit."
+        );
+    }
+    let base_rate = cache
+        .get("hit_rate")
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("{baseline_path}: missing cache.hit_rate"));
+    let floor = base_rate * 0.95;
+    assert!(
+        hit_rate >= floor,
+        "cache hit rate regressed >5%: {:.2}% vs baseline {:.2}% (floor {:.2}%). If the \
+         caching change is intentional, regenerate the baseline with \
+         GAPS_BENCH_WRITE_BASELINE=1 and commit it.",
+        hit_rate * 100.0,
+        base_rate * 100.0,
+        floor * 100.0,
+    );
+    if let Some(base_sf) = cache.get("singleflight").and_then(|v| v.as_i64()) {
+        assert_eq!(
+            singleflight, base_sf,
+            "single-flight burst count diverged from the committed baseline"
+        );
+    }
+    println!(
+        "cache gate OK: {:.1}% hit rate (baseline {:.1}%, floor {:.1}%), \
+         {singleflight} single-flight",
+        hit_rate * 100.0,
+        base_rate * 100.0,
+        floor * 100.0
+    );
 }
 
 /// Availability under deterministic chaos: a fixed set of seeded fault
@@ -815,8 +1094,10 @@ fn main() {
     let fanout = bench_fanout(&cfg);
     let batch = bench_batch(&cfg);
     let serve = bench_serve(&cfg);
+    let cache = bench_cache();
     let availability = bench_availability(&cfg);
     let persistence = bench_persistence(&cfg);
+    let cache_speedup = cache.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let load_speedup =
         persistence.get("load_speedup").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let micro_speedup = micro.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
@@ -855,6 +1136,7 @@ fn main() {
         ("fanout", fanout),
         ("batch", batch),
         ("serve", serve),
+        ("cache", cache.clone()),
         ("availability", availability),
         ("persistence", persistence),
         ("sweep", sweep_json),
@@ -863,16 +1145,24 @@ fn main() {
     std::fs::write(path, report.to_string_pretty()).expect("write BENCH_retrieval.json");
     println!("\nwrote {path}");
 
-    // ---- Deterministic pruning counters + CI gate --------------------
-    // Runs before (and independently of) the wall-clock assertions:
-    // integer counters at fixed seeds are reproducible anywhere, so this
-    // gate holds even on noisy shared runners (GAPS_BENCH_NO_ASSERT does
-    // not disable it).
+    // ---- Deterministic counters + cache behaviour + CI gates ---------
+    // Run before (and independently of) the wall-clock assertions:
+    // integer counters at fixed seeds are reproducible anywhere, so
+    // these gates hold even on noisy shared runners (GAPS_BENCH_NO_ASSERT
+    // does not disable them).
     let counter_report = bench_counters();
     std::fs::write("BENCH_counters.json", counter_report.to_string_pretty())
         .expect("write BENCH_counters.json");
     println!("wrote BENCH_counters.json");
-    gate_counters(&counter_report);
+    std::fs::write("BENCH_cache.json", cache.to_string_pretty())
+        .expect("write BENCH_cache.json");
+    println!("wrote BENCH_cache.json");
+    if std::env::var("GAPS_BENCH_WRITE_BASELINE").is_ok() {
+        write_baseline(&counter_report, &cache);
+    } else {
+        gate_counters(&counter_report);
+        gate_cache(&cache);
+    }
 
     // Checks are enforced on real bench runs so regressions fail loudly;
     // GAPS_BENCH_NO_ASSERT=1 (CI smoke on shared runners, tiny query
@@ -901,6 +1191,14 @@ fn main() {
             fan_speedup > 1.2,
             "fan-out speedup regressed: {fan_speedup:.2}x with {fan_workers} workers \
              (floor 1.2x, target 1.5x)"
+        );
+    }
+    if enforce {
+        // A cache hit skips the whole grid round; it must beat the cold
+        // path outright on any host (conservative 1x floor for noise).
+        assert!(
+            cache_speedup > 1.0,
+            "cached hot-query p50 not faster than cold execution: {cache_speedup:.2}x"
         );
     }
 

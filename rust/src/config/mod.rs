@@ -205,6 +205,35 @@ impl Default for StorageConfig {
     }
 }
 
+/// Plan/result caching knobs (the `cache` config section).
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Master switch: when false neither the compiled-plan cache nor the
+    /// top-k result cache is consulted (the off-switch for parity
+    /// oracles and cache-suspect debugging). Single-flight coalescing in
+    /// the admission queue stays on either way — it dedups *in-flight*
+    /// work, not completed results.
+    pub enabled: bool,
+    /// Compiled-plan cache capacity, in entries (0 disables just the
+    /// plan cache). Keyed on the raw request, so a hit skips
+    /// lex + parse + plan entirely.
+    pub plan_capacity: usize,
+    /// Top-k result cache capacity, in entries across all shards
+    /// (0 disables just the result cache). Keyed on the normalized-AST
+    /// fingerprint + index epoch; invalidated wholesale when the epoch
+    /// moves (segment seal/merge).
+    pub result_capacity: usize,
+    /// Result-cache shard count (reduces lock contention under
+    /// concurrent submitters; clamped to >= 1).
+    pub result_shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { enabled: true, plan_capacity: 4096, result_capacity: 2048, result_shards: 8 }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone, Default)]
 pub struct GapsConfig {
@@ -212,6 +241,7 @@ pub struct GapsConfig {
     pub workload: WorkloadConfig,
     pub search: SearchConfig,
     pub storage: StorageConfig,
+    pub cache: CacheConfig,
 }
 
 impl GapsConfig {
@@ -227,6 +257,7 @@ impl GapsConfig {
                 "workload" => apply_section(body, |k, v| self.set_workload(k, v))?,
                 "search" => apply_section(body, |k, v| self.set_search(k, v))?,
                 "storage" => apply_section(body, |k, v| self.set_storage(k, v))?,
+                "cache" => apply_section(body, |k, v| self.set_cache(k, v))?,
                 other => return Err(CliError(format!("unknown config section '{other}'"))),
             }
         }
@@ -321,6 +352,18 @@ impl GapsConfig {
         Ok(())
     }
 
+    fn set_cache(&mut self, key: &str, v: &Json) -> Result<(), CliError> {
+        let c = &mut self.cache;
+        match key {
+            "enabled" => c.enabled = as_bool(key, v)?,
+            "plan_capacity" => c.plan_capacity = as_usize(key, v)?,
+            "result_capacity" => c.result_capacity = as_usize(key, v)?,
+            "result_shards" => c.result_shards = as_usize(key, v)?,
+            _ => return Err(CliError(format!("unknown cache key '{key}'"))),
+        }
+        Ok(())
+    }
+
     /// Apply CLI flag overrides (flat names; see README "Configuration").
     pub fn apply_args(&mut self, args: &Args) -> Result<(), CliError> {
         if let Some(path) = args.get("config") {
@@ -361,6 +404,13 @@ impl GapsConfig {
         if let Some(dir) = args.get("snapshot") {
             st.snapshot_dir = dir.to_string();
         }
+        let c = &mut self.cache;
+        if args.has("no-cache") {
+            c.enabled = false;
+        }
+        c.plan_capacity = args.get_parse("cache-plan-capacity", c.plan_capacity)?;
+        c.result_capacity = args.get_parse("cache-result-capacity", c.result_capacity)?;
+        c.result_shards = args.get_parse("cache-result-shards", c.result_shards)?;
         Ok(())
     }
 
@@ -371,7 +421,8 @@ impl GapsConfig {
              workload: {} docs, {} queries (seed {})\n\
              search: F={} top_k={} max_cand={} policy={} xla={} artifacts={} workers={} \
              failover_retries={}\n\
-             storage: snapshot_dir={} seal_docs={} merge_fanout={}",
+             storage: snapshot_dir={} seal_docs={} merge_fanout={}\n\
+             cache: enabled={} plan_capacity={} result_capacity={} result_shards={}",
             self.grid.num_vos,
             self.grid.nodes_per_vo,
             self.grid.speed_min,
@@ -393,6 +444,10 @@ impl GapsConfig {
             if self.storage.snapshot_dir.is_empty() { "-" } else { &self.storage.snapshot_dir },
             self.storage.seal_docs,
             self.storage.merge_fanout,
+            self.cache.enabled,
+            self.cache.plan_capacity,
+            self.cache.result_capacity,
+            self.cache.result_shards,
         )
     }
 }
@@ -545,6 +600,52 @@ mod tests {
         assert_eq!(c.storage.snapshot_dir, "/tmp/snap2");
         assert_eq!(c.storage.seal_docs, 32);
         assert_eq!(c.storage.merge_fanout, 3);
+    }
+
+    #[test]
+    fn cache_knobs_parse() {
+        let mut c = GapsConfig::default();
+        assert!(c.cache.enabled);
+        assert_eq!(c.cache.plan_capacity, 4096);
+        assert_eq!(c.cache.result_capacity, 2048);
+        assert_eq!(c.cache.result_shards, 8);
+        c.apply_json(
+            &Json::parse(
+                r#"{"cache": {"enabled": false, "plan_capacity": 16,
+                     "result_capacity": 32, "result_shards": 2}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(!c.cache.enabled);
+        assert_eq!(c.cache.plan_capacity, 16);
+        assert_eq!(c.cache.result_capacity, 32);
+        assert_eq!(c.cache.result_shards, 2);
+        // Unknown cache keys are typos, not silently ignored.
+        assert!(c.apply_json(&Json::parse(r#"{"cache": {"capasity": 1}}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cache_cli_flags_apply() {
+        let mut c = GapsConfig::default();
+        let toks: Vec<String> = [
+            "--no-cache",
+            "--cache-plan-capacity",
+            "64",
+            "--cache-result-capacity",
+            "128",
+            "--cache-result-shards",
+            "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&toks, false, &["no-cache"]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert!(!c.cache.enabled);
+        assert_eq!(c.cache.plan_capacity, 64);
+        assert_eq!(c.cache.result_capacity, 128);
+        assert_eq!(c.cache.result_shards, 4);
     }
 
     #[test]

@@ -36,7 +36,7 @@
 //! speed factor) + accounted fabric costs (`net_s`, `overhead_s`). See
 //! ARCHITECTURE.md §Substitutions for why this composition is faithful.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -707,6 +707,62 @@ impl IndexHealth {
     }
 }
 
+/// Compiled-plan cache: raw-request key ([`crate::search::request_plan_key`])
+/// -> memoized [`CompiledRequest`]. A hit skips lex + parse + simplify +
+/// matcher compilation and hands back the plan (with its normalized-AST
+/// fingerprint) by clone. FIFO eviction — deterministic, and plans are
+/// cheap enough that recency tracking isn't worth the bookkeeping. The
+/// full request is stored next to each entry and compared on probe, so a
+/// 64-bit key collision degrades to a miss, never a wrong plan. Parse
+/// *errors* are not cached: they are rare, cheap to recompute, and an
+/// error entry would evict a useful plan.
+struct PlanCache {
+    capacity: usize,
+    map: HashMap<u64, (SearchRequest, CompiledRequest)>,
+    order: VecDeque<u64>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity,
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn get(&mut self, key: u64, req: &SearchRequest) -> Option<CompiledRequest> {
+        match self.map.get(&key) {
+            Some((stored, compiled)) if stored == req => {
+                self.hits += 1;
+                Some(compiled.clone())
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn insert(&mut self, key: u64, req: SearchRequest, compiled: CompiledRequest) {
+        if self.capacity == 0 {
+            return;
+        }
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            if let Some(oldest) = self.order.pop_front() {
+                self.map.remove(&oldest);
+            }
+        }
+        if self.map.insert(key, (req, compiled)).is_none() {
+            self.order.push_back(key);
+        }
+    }
+}
+
 /// The deployed GAPS system.
 pub struct GapsSystem {
     pub cfg: GapsConfig,
@@ -737,6 +793,8 @@ pub struct GapsSystem {
     fstats: FailoverStats,
     /// Live-ingestion overlays + epoch (see [`crate::storage`]).
     ingest: IngestState,
+    /// Compiled-plan cache (`cache.*` knobs; see [`PlanCache`]).
+    plan_cache: PlanCache,
 }
 
 impl std::fmt::Debug for GapsSystem {
@@ -794,6 +852,7 @@ impl GapsSystem {
         let workers = cfg.search.effective_workers();
         let pool = (workers > 1 && executor.is_none()).then(|| Pool::new(workers));
         let dep_total_docs = dep.locator.total_docs();
+        let plan_capacity = if cfg.cache.enabled { cfg.cache.plan_capacity } else { 0 };
         Ok(GapsSystem {
             service: SearchService::new(cfg.search.clone()),
             cfg,
@@ -811,6 +870,7 @@ impl GapsSystem {
             // Base ids are contiguous from 0: ingestion continues where
             // the generator stopped.
             ingest: IngestState::new(dep_total_docs),
+            plan_cache: PlanCache::new(plan_capacity),
         })
     }
 
@@ -1164,6 +1224,39 @@ impl GapsSystem {
         self.search_request(&SearchRequest::new(raw))
     }
 
+    /// Compile one request against this deployment, through the
+    /// compiled-plan cache: a repeat of a previously compiled request
+    /// skips lex + parse + simplify + matcher compilation and returns
+    /// the memoized plan (carrying the normalized-AST `fingerprint` the
+    /// result cache keys on). Public so the serving layer can compile
+    /// first, probe its result cache, and execute only the misses —
+    /// the miss path re-enters [`GapsSystem::search_batch`], whose own
+    /// compile loop then hits this same cache, so a cold request is
+    /// compiled exactly once.
+    pub fn compile_request(
+        &mut self,
+        request: &SearchRequest,
+    ) -> Result<CompiledRequest, SearchError> {
+        let features = self.cfg.search.features;
+        let default_top_k = self.cfg.search.top_k;
+        if !self.cfg.cache.enabled || self.cfg.cache.plan_capacity == 0 {
+            return request.compile(features, default_top_k);
+        }
+        let key = crate::search::request_plan_key(request, features, default_top_k);
+        if let Some(compiled) = self.plan_cache.get(key, request) {
+            return Ok(compiled);
+        }
+        let compiled = request.compile(features, default_top_k)?;
+        self.plan_cache.insert(key, request.clone(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Plan-cache effectiveness counters since deployment: `(hits,
+    /// misses)`. Surfaced through the serving layer's `/healthz`.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        (self.plan_cache.hits, self.plan_cache.misses)
+    }
+
     /// Execute one typed request end to end.
     pub fn search_request(
         &mut self,
@@ -1178,7 +1271,9 @@ impl GapsSystem {
     /// carrying every query, fan out once over the resident gridpool,
     /// and feed Q>1 rows through the scoring path. Results come back in
     /// request order; per-request failures (e.g. parse errors) do not
-    /// fail the rest of the batch.
+    /// fail the rest of the batch. Compilation goes through the
+    /// compiled-plan cache (see [`GapsSystem::compile_request`]), so hot
+    /// queries skip parse + plan on repeats.
     ///
     /// Requests with different [`ReplicaPref`]s, `allow_partial` modes,
     /// or deadlines cannot share an execution plan; they are planned and
@@ -1230,11 +1325,10 @@ impl GapsSystem {
         // traditional baseline still does — the figures must compare
         // symmetric accountings).
         let compile_clock = WallClock::start();
-        let features = self.cfg.search.features;
-        let default_top_k = self.cfg.search.top_k;
         let mut compiled: Vec<Option<CompiledRequest>> = Vec::with_capacity(requests.len());
         for (i, req) in requests.iter().enumerate() {
-            match req.compile(features, default_top_k) {
+            // Through the plan cache: hot queries skip parse + plan.
+            match self.compile_request(req) {
                 Ok(c) => compiled.push(Some(c)),
                 Err(e) => {
                     results[i] = Some(Err(e));
@@ -1768,6 +1862,60 @@ mod tests {
         assert_eq!(explain.batch_size, 1);
         assert!(!explain.plan.is_empty());
         assert!(explain.keywords.contains(&"grid".to_string()));
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeats_without_changing_results() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let cold = sys.search("grid computing publications").unwrap();
+        let (h0, m0) = sys.plan_cache_stats();
+        assert_eq!(h0, 0);
+        assert!(m0 >= 1, "cold compile must be a recorded miss");
+        let warm = sys.search("grid computing publications").unwrap();
+        let (h1, _) = sys.plan_cache_stats();
+        assert!(h1 >= 1, "repeat compile must hit the plan cache");
+        // A plan-cache hit is invisible in the results: same hits, same
+        // score bits.
+        assert_eq!(cold.hits.len(), warm.hits.len());
+        for (a, b) in cold.hits.iter().zip(warm.hits.iter()) {
+            assert_eq!(a.global_id, b.global_id);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+    }
+
+    #[test]
+    fn plan_cache_respects_the_off_switch() {
+        let mut cfg = small_cfg();
+        cfg.cache.enabled = false;
+        let mut sys = GapsSystem::deploy(cfg, 4).unwrap();
+        sys.search("grid computing").unwrap();
+        sys.search("grid computing").unwrap();
+        assert_eq!(sys.plan_cache_stats(), (0, 0), "disabled cache must never be consulted");
+    }
+
+    #[test]
+    fn plan_cache_distinguishes_request_knobs() {
+        let mut sys = GapsSystem::deploy(small_cfg(), 4).unwrap();
+        let a = sys.search_request(&SearchRequest::new("grid").top_k(3)).unwrap();
+        let b = sys.search_request(&SearchRequest::new("grid").top_k(7)).unwrap();
+        assert!(a.hits.len() <= 3);
+        assert!(b.hits.len() <= 7);
+        let (h, _) = sys.plan_cache_stats();
+        assert_eq!(h, 0, "different knobs must not share a plan entry");
+    }
+
+    #[test]
+    fn plan_cache_evicts_fifo_at_capacity() {
+        let mut cfg = small_cfg();
+        cfg.cache.plan_capacity = 2;
+        let mut sys = GapsSystem::deploy(cfg, 4).unwrap();
+        sys.search("grid").unwrap();
+        sys.search("comput").unwrap();
+        sys.search("publication").unwrap(); // evicts "grid"
+        sys.search("grid").unwrap(); // miss again
+        let (h, m) = sys.plan_cache_stats();
+        assert_eq!(h, 0);
+        assert_eq!(m, 4);
     }
 
     #[test]

@@ -33,7 +33,8 @@ use gaps::search::SearchRequest;
 use gaps::util::bench::Table;
 use gaps::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] = &["no-xla", "no-resident-services", "verbose", "help", "explain"];
+const BOOL_FLAGS: &[&str] =
+    &["no-xla", "no-resident-services", "no-cache", "verbose", "help", "explain"];
 
 fn main() {
     if let Err(e) = run() {
@@ -92,7 +93,9 @@ fn print_usage() {
            --docs N --queries N --top-k N --policy perf|rr --no-xla\n\
            --artifacts DIR --seed N --no-resident-services\n\
            --snapshot DIR (boot search/repl/serve from a snapshot)\n\
-           --seal-docs N --merge-fanout N (live-ingestion knobs)"
+           --seal-docs N --merge-fanout N (live-ingestion knobs)\n\
+           --no-cache --cache-plan-capacity N --cache-result-capacity N\n\
+           --cache-result-shards N (plan/result caching knobs)"
     );
 }
 

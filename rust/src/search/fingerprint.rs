@@ -1,0 +1,273 @@
+//! Stable cache keys for compiled queries.
+//!
+//! Two keys, two caches:
+//!
+//! - [`query_fingerprint`] — the **normalized-AST fingerprint**: an
+//!   FNV-1a 64 hash over a tagged pre-order encoding of the canonical
+//!   [`QueryNode`] tree (commutative operands sorted, duplicate siblings
+//!   deduped — see `search::query::simplify`), with the result-affecting
+//!   request knobs folded in (`top_k`, `allow_partial`, `explain`).
+//!   `ReplicaPref` and `deadline_ms` are deliberately **excluded**:
+//!   replica choice only shifts *where* work runs (results are
+//!   placement-invariant, property-tested since PR 2) and the deadline
+//!   only affects *whether* a run completes, never what a completed run
+//!   returns. This is the result-cache key (paired with the index epoch).
+//!
+//! - [`request_plan_key`] — the **plan-cache key**: a hash over the *raw*
+//!   [`SearchRequest`] (query text + every builder knob) plus the
+//!   deployment compile inputs (`features`, `default_top_k`). Probing it
+//!   requires no parsing at all, which is the point: a plan-cache hit
+//!   skips lex + parse + simplify + matcher compilation entirely and
+//!   returns the memoized [`CompiledRequest`](super::CompiledRequest) —
+//!   which carries the normalized-AST fingerprint the result cache then
+//!   keys on. Every field is folded in (including `replicas` and
+//!   `deadline_ms`) because the cached value embeds them verbatim.
+//!
+//! Both encodings are length-prefixed and type-tagged so no two distinct
+//! trees or requests share an encoding by concatenation ambiguity.
+
+use super::query::QueryNode;
+use super::request::SearchRequest;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Bumped whenever the encoding changes, so stale persisted artifacts
+/// (none today — caches are in-memory) can never alias a new scheme.
+const ENCODING_VERSION: u8 = 1;
+
+const TAG_AND: u8 = 0x01;
+const TAG_OR: u8 = 0x02;
+const TAG_NOT: u8 = 0x03;
+const TAG_TERM: u8 = 0x04;
+const TAG_FIELD_TERM: u8 = 0x05;
+const TAG_YEAR: u8 = 0x06;
+
+/// Incremental FNV-1a 64 over the crate's standard hash constants
+/// (same parameters as `text::fnv1a`, kept separate because this one
+/// streams mixed-width integers, not one byte slice).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(FNV_OFFSET)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+}
+
+fn encode_node(h: &mut Fnv, node: &QueryNode) {
+    match node {
+        QueryNode::And(cs) => {
+            h.byte(TAG_AND);
+            h.u64(cs.len() as u64);
+            for c in cs {
+                encode_node(h, c);
+            }
+        }
+        QueryNode::Or(cs) => {
+            h.byte(TAG_OR);
+            h.u64(cs.len() as u64);
+            for c in cs {
+                encode_node(h, c);
+            }
+        }
+        QueryNode::Not(c) => {
+            h.byte(TAG_NOT);
+            encode_node(h, c);
+        }
+        QueryNode::Term(t) => {
+            h.byte(TAG_TERM);
+            h.str(t);
+        }
+        QueryNode::FieldTerm(f, t) => {
+            h.byte(TAG_FIELD_TERM);
+            h.byte(*f as u8);
+            h.str(t);
+        }
+        QueryNode::YearRange(r) => {
+            h.byte(TAG_YEAR);
+            h.u32(r.min);
+            h.u32(r.max);
+        }
+    }
+}
+
+/// The normalized-AST fingerprint: result-cache key material. `ast` must
+/// already be canonical (every tree built by `Query::compile` is);
+/// logically identical queries — `b AND a` vs `a AND b` — hash equal
+/// because they *are* equal after canonicalization.
+pub fn query_fingerprint(ast: &QueryNode, top_k: usize, allow_partial: bool, explain: bool) -> u64 {
+    let mut h = Fnv::new();
+    h.byte(ENCODING_VERSION);
+    encode_node(&mut h, ast);
+    h.u64(top_k as u64);
+    h.byte(allow_partial as u8);
+    h.byte(explain as u8);
+    h.0
+}
+
+/// The plan-cache key: raw request + deployment compile inputs, no
+/// parsing required to probe. Covers **every** request field because the
+/// cached [`CompiledRequest`](super::CompiledRequest) embeds them all.
+pub fn request_plan_key(req: &SearchRequest, features: usize, default_top_k: usize) -> u64 {
+    let mut h = Fnv::new();
+    h.byte(ENCODING_VERSION);
+    h.str(&req.query);
+    match req.top_k {
+        Some(k) => {
+            h.byte(1);
+            h.u64(k as u64);
+        }
+        None => h.byte(0),
+    }
+    match req.year {
+        Some(y) => {
+            h.byte(1);
+            h.u32(y.min);
+            h.u32(y.max);
+        }
+        None => h.byte(0),
+    }
+    h.u64(req.require.len() as u64);
+    for (f, t) in &req.require {
+        h.byte(*f as u8);
+        h.str(t);
+    }
+    h.byte(req.replicas as u8);
+    match req.deadline_ms {
+        Some(ms) => {
+            h.byte(1);
+            h.u64(ms);
+        }
+        None => h.byte(0),
+    }
+    h.byte(req.allow_partial as u8);
+    h.byte(req.explain as u8);
+    h.u64(features as u64);
+    h.u64(default_top_k as u64);
+    h.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{Field, ReplicaPref};
+
+    fn fp(raw: &str) -> u64 {
+        SearchRequest::new(raw).compile(512, 10).unwrap().fingerprint
+    }
+
+    #[test]
+    fn reordered_commutative_operands_share_a_fingerprint() {
+        assert_eq!(fp("storage AND replication"), fp("replication AND storage"));
+        assert_eq!(fp("grid OR cloud"), fp("cloud OR grid"));
+        assert_eq!(
+            fp("(grid OR cloud) year:2010..2014"),
+            fp("year:2010..2014 (cloud OR grid)")
+        );
+        // Duplicate operands dedup into the same canonical tree.
+        assert_eq!(fp("grid grid computing"), fp("computing grid"));
+    }
+
+    #[test]
+    fn distinct_queries_get_distinct_fingerprints() {
+        let fps = [
+            fp("grid"),
+            fp("cloud"),
+            fp("grid AND cloud"),
+            fp("grid OR cloud"),
+            fp("grid -cloud"),
+            fp("title:grid"),
+            fp("grid year:2014"),
+            fp("grid year:2015"),
+        ];
+        for (i, a) in fps.iter().enumerate() {
+            for b in &fps[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn result_knobs_fold_into_the_fingerprint() {
+        let base = SearchRequest::new("grid").compile(512, 10).unwrap();
+        let k20 = SearchRequest::new("grid").top_k(20).compile(512, 10).unwrap();
+        let expl = SearchRequest::new("grid").explain(true).compile(512, 10).unwrap();
+        let part = SearchRequest::new("grid").allow_partial(true).compile(512, 10).unwrap();
+        assert_ne!(base.fingerprint, k20.fingerprint);
+        assert_ne!(base.fingerprint, expl.fingerprint);
+        assert_ne!(base.fingerprint, part.fingerprint);
+        // Resolved default top_k hashes like an explicit equal top_k.
+        let k10 = SearchRequest::new("grid").top_k(10).compile(512, 10).unwrap();
+        assert_eq!(base.fingerprint, k10.fingerprint);
+    }
+
+    #[test]
+    fn placement_knobs_do_not_change_the_fingerprint() {
+        // Replica preference and deadline shift where/whether work runs,
+        // never what a completed run returns — same result-cache entry.
+        let base = SearchRequest::new("grid computing").compile(512, 10).unwrap();
+        let pri = SearchRequest::new("grid computing")
+            .prefer_replicas(ReplicaPref::Primary)
+            .compile(512, 10)
+            .unwrap();
+        let dl = SearchRequest::new("grid computing").deadline_ms(250).compile(512, 10).unwrap();
+        assert_eq!(base.fingerprint, pri.fingerprint);
+        assert_eq!(base.fingerprint, dl.fingerprint);
+    }
+
+    #[test]
+    fn plan_key_covers_every_request_field() {
+        let base = SearchRequest::new("grid");
+        let key = |r: &SearchRequest| request_plan_key(r, 512, 10);
+        let variants = [
+            SearchRequest::new("cloud"),
+            base.clone().top_k(20),
+            base.clone().year(2010..=2014),
+            base.clone().require(Field::Title, "grid"),
+            base.clone().prefer_replicas(ReplicaPref::SameVo),
+            base.clone().deadline_ms(250),
+            base.clone().allow_partial(true),
+            base.clone().explain(true),
+        ];
+        for v in &variants {
+            assert_ne!(key(&base), key(v), "{v:?}");
+        }
+        // Compile inputs are folded in too.
+        assert_ne!(request_plan_key(&base, 256, 10), request_plan_key(&base, 512, 10));
+        assert_ne!(request_plan_key(&base, 512, 7), request_plan_key(&base, 512, 10));
+        // And the key is stable for an identical request.
+        assert_eq!(key(&base), key(&base.clone()));
+    }
+
+    #[test]
+    fn tagged_encoding_resists_concatenation_aliasing() {
+        // Same flattened term sequence, different tree shapes.
+        assert_ne!(fp("grid AND cloud"), fp("grid OR cloud"));
+        assert_ne!(fp("grid -cloud"), fp("grid cloud"));
+        assert_ne!(fp("title:grid"), fp("grid"));
+    }
+}

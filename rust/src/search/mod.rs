@@ -1,17 +1,20 @@
 //! Search layer: the typed request surface ([`SearchRequest`]), the query
 //! language (recursive boolean AST + tokenizing parser, see [`query`]),
+//! stable cache keys over the canonicalized AST (see [`fingerprint`]),
 //! the structured error taxonomy ([`SearchError`]), the pure-rust BM25F
 //! scorer (baseline scorer and runtime cross-check), and the per-node
 //! Search Service (the paper's SS grid service) with batched Q>1
 //! execution.
 
 mod error;
+pub mod fingerprint;
 pub mod query;
 mod request;
 mod scorer;
 pub mod service;
 
 pub use error::SearchError;
+pub use fingerprint::{query_fingerprint, request_plan_key};
 pub use query::{Query, QueryNode, RangeFilter, RetrievalHint};
 pub use request::{CompiledRequest, ReplicaPref, SearchRequest};
 pub use scorer::{score_block_rust, topk_row};

@@ -162,8 +162,10 @@ pub struct Query {
     pub raw: String,
     /// The parsed boolean tree.
     pub ast: QueryNode,
-    /// Scored keyword terms (normalized, **deduplicated**, first
-    /// occurrence order): every positive `Term`/`FieldTerm` in the tree.
+    /// Scored keyword terms (normalized, **deduplicated**, canonical AST
+    /// order — commutative operands are sorted during [`Query::compile`],
+    /// so reordered-but-equal queries share one keyword sequence): every
+    /// positive `Term`/`FieldTerm` in the tree.
     pub keywords: Vec<String>,
     /// Feature buckets of `keywords` in the artifact space (parallel).
     pub buckets: Vec<u32>,
@@ -291,7 +293,12 @@ impl Query {
     }
 }
 
-/// Flatten nested same-kind combinators and unwrap singleton groups.
+/// Flatten nested same-kind combinators, unwrap singleton groups, and
+/// canonicalize: `And`/`Or` are commutative, so their operands are sorted
+/// into a stable structural order ([`compare_nodes`]) and exact-duplicate
+/// siblings are dropped. Logically identical trees (`b AND a` vs
+/// `a AND b`, `grid OR grid`) therefore compile to one canonical AST —
+/// one keyword order, one execution, one cache fingerprint.
 fn simplify(node: QueryNode) -> QueryNode {
     match node {
         QueryNode::And(cs) => {
@@ -302,6 +309,7 @@ fn simplify(node: QueryNode) -> QueryNode {
                     other => flat.push(other),
                 }
             }
+            canonicalize(&mut flat);
             if flat.len() == 1 { flat.pop().unwrap() } else { QueryNode::And(flat) }
         }
         QueryNode::Or(cs) => {
@@ -312,11 +320,65 @@ fn simplify(node: QueryNode) -> QueryNode {
                     other => flat.push(other),
                 }
             }
+            canonicalize(&mut flat);
             if flat.len() == 1 { flat.pop().unwrap() } else { QueryNode::Or(flat) }
         }
         QueryNode::Not(c) => QueryNode::Not(Box::new(simplify(*c))),
         leaf => leaf,
     }
+}
+
+/// Sort commutative operands into canonical order and drop exact
+/// duplicates. Children are already simplified, so recursive comparison
+/// sees canonical subtrees and equal subtrees land adjacent.
+fn canonicalize(children: &mut Vec<QueryNode>) {
+    children.sort_by(compare_nodes);
+    children.dedup();
+}
+
+/// Variant rank for the canonical operand order: filters first, then
+/// negations, then scored leaves, then nested groups. Chosen so common
+/// shapes read naturally (`year:.. AND term`, `-cloud AND grid`).
+fn node_rank(n: &QueryNode) -> u8 {
+    match n {
+        QueryNode::YearRange(_) => 0,
+        QueryNode::Not(_) => 1,
+        QueryNode::FieldTerm(..) => 2,
+        QueryNode::Term(_) => 3,
+        QueryNode::Or(_) => 4,
+        QueryNode::And(_) => 5,
+    }
+}
+
+/// Total structural order over query nodes: variant rank, then content
+/// (terms lexicographically, ranges by bounds, groups element-wise).
+/// `Equal` here is exactly `PartialEq` equality, so sort + dedup removes
+/// every duplicate sibling.
+fn compare_nodes(a: &QueryNode, b: &QueryNode) -> std::cmp::Ordering {
+    match (a, b) {
+        (QueryNode::YearRange(x), QueryNode::YearRange(y)) => {
+            (x.min, x.max).cmp(&(y.min, y.max))
+        }
+        (QueryNode::Not(x), QueryNode::Not(y)) => compare_nodes(x, y),
+        (QueryNode::FieldTerm(fa, ta), QueryNode::FieldTerm(fb, tb)) => {
+            (*fa as u8).cmp(&(*fb as u8)).then_with(|| ta.cmp(tb))
+        }
+        (QueryNode::Term(x), QueryNode::Term(y)) => x.cmp(y),
+        (QueryNode::Or(x), QueryNode::Or(y)) | (QueryNode::And(x), QueryNode::And(y)) => {
+            compare_node_lists(x, y)
+        }
+        _ => node_rank(a).cmp(&node_rank(b)),
+    }
+}
+
+fn compare_node_lists(a: &[QueryNode], b: &[QueryNode]) -> std::cmp::Ordering {
+    for (x, y) in a.iter().zip(b.iter()) {
+        match compare_nodes(x, y) {
+            std::cmp::Ordering::Equal => continue,
+            other => return other,
+        }
+    }
+    a.len().cmp(&b.len())
 }
 
 /// Collect scored (positive) terms in tree order.
@@ -682,7 +744,8 @@ mod tests {
     #[test]
     fn keyword_query() {
         let q = Query::parse("grid computing publications", 512).unwrap();
-        assert_eq!(q.keywords, vec!["grid", "comput", "publication"]);
+        // Commutative operands sort into canonical order at compile time.
+        assert_eq!(q.keywords, vec!["comput", "grid", "publication"]);
         assert_eq!(q.buckets.len(), 3);
         assert!(!q.is_multivariate());
         assert!(!q.is_conjunctive());
@@ -690,8 +753,8 @@ mod tests {
         assert_eq!(
             q.ast,
             QueryNode::Or(vec![
-                QueryNode::Term("grid".into()),
                 QueryNode::Term("comput".into()),
+                QueryNode::Term("grid".into()),
                 QueryNode::Term("publication".into()),
             ])
         );
@@ -764,7 +827,7 @@ mod tests {
     #[test]
     fn query_terms_normalized_like_documents() {
         let q = Query::parse("Searching PUBLICATIONS", 512).unwrap();
-        assert_eq!(q.keywords, vec!["search", "publication"]);
+        assert_eq!(q.keywords, vec!["publication", "search"]);
     }
 
     #[test]
@@ -781,13 +844,13 @@ mod tests {
         assert_eq!(
             q.ast,
             QueryNode::And(vec![
-                QueryNode::Term("grid".into()),
                 QueryNode::Term("comput".into()),
+                QueryNode::Term("grid".into()),
             ])
         );
         assert!(q.is_conjunctive());
         assert!(!q.needs_filter());
-        assert_eq!(q.keywords, vec!["grid", "comput"]);
+        assert_eq!(q.keywords, vec!["comput", "grid"]);
     }
 
     #[test]
@@ -799,8 +862,8 @@ mod tests {
         match &q.ast {
             QueryNode::And(cs) => {
                 let should_group = QueryNode::Or(vec![
-                    QueryNode::Term("grid".into()),
                     QueryNode::Term("cloud".into()),
+                    QueryNode::Term("grid".into()),
                 ]);
                 assert!(cs.contains(&should_group), "should group lost: {:?}", q.ast);
                 assert!(cs.contains(&QueryNode::Term("storage".into())));
@@ -850,7 +913,7 @@ mod tests {
         // A stopword right operand makes the AND a no-op instead of a
         // fatal "dangling AND"; a stopword-only OR arm is dropped.
         let a = Query::parse("grid AND the cloud", 512).unwrap();
-        assert_eq!(a.keywords, vec!["grid", "cloud"]);
+        assert_eq!(a.keywords, vec!["cloud", "grid"]);
         assert!(!a.is_conjunctive(), "no-op AND must not force a conjunction");
         let b = Query::parse("grid OR the", 512).unwrap();
         assert_eq!(b.ast, QueryNode::Term("grid".into()));
@@ -859,6 +922,24 @@ mod tests {
         assert_eq!(c.ast, QueryNode::Term("grid".into()));
         // But a truly empty arm (nothing to analyze) is still an error.
         assert!(Query::parse("grid OR", 512).is_err());
+    }
+
+    #[test]
+    fn commutative_operands_share_one_canonical_ast() {
+        // `b AND a` and `a AND b` must compile to one canonical tree —
+        // same AST, same keyword order, same buckets — so they execute
+        // identically and share one cache fingerprint.
+        let a = Query::parse("storage AND replication", 512).unwrap();
+        let b = Query::parse("replication AND storage", 512).unwrap();
+        assert_eq!(a.ast, b.ast);
+        assert_eq!(a.keywords, b.keywords);
+        assert_eq!(a.buckets, b.buckets);
+        let c = Query::parse("(grid OR cloud) year:2010..2014", 512).unwrap();
+        let d = Query::parse("(cloud OR grid) year:2010..2014", 512).unwrap();
+        assert_eq!(c.ast, d.ast);
+        // Exact-duplicate siblings collapse to one operand.
+        let e = Query::parse("grid OR grid", 512).unwrap();
+        assert_eq!(e.ast, QueryNode::Term("grid".into()));
     }
 
     #[test]
@@ -872,7 +953,7 @@ mod tests {
     fn lowercase_operators_are_words() {
         // `and`/`or` are stopwords: they dissolve instead of operating.
         let q = Query::parse("grid and computing", 512).unwrap();
-        assert_eq!(q.keywords, vec!["grid", "comput"]);
+        assert_eq!(q.keywords, vec!["comput", "grid"]);
         assert!(!q.is_conjunctive());
     }
 

@@ -183,13 +183,21 @@ impl SearchRequest {
             extra.insert(0, parsed.ast);
             Query::compile(&self.query, QueryNode::And(extra), features)?
         };
+        let top_k = self.top_k.unwrap_or(default_top_k);
+        let fingerprint = super::fingerprint::query_fingerprint(
+            &query.ast,
+            top_k,
+            self.allow_partial,
+            self.explain,
+        );
         Ok(CompiledRequest {
             query,
-            top_k: self.top_k.unwrap_or(default_top_k),
+            top_k,
             replicas: self.replicas,
             deadline_ms: self.deadline_ms,
             allow_partial: self.allow_partial,
             explain: self.explain,
+            fingerprint,
         })
     }
 
@@ -286,6 +294,12 @@ pub struct CompiledRequest {
     pub deadline_ms: Option<u64>,
     pub allow_partial: bool,
     pub explain: bool,
+    /// Normalized-AST fingerprint (see [`super::fingerprint`]): the
+    /// result-cache key material. Equal for logically identical queries
+    /// (commutative operands sorted, duplicates deduped) with the same
+    /// result-affecting knobs; excludes placement-only knobs
+    /// (`replicas`, `deadline_ms`).
+    pub fingerprint: u64,
 }
 
 #[cfg(test)]

@@ -1,0 +1,342 @@
+//! Sharded top-k result cache, keyed on the normalized-AST fingerprint
+//! plus the index epoch.
+//!
+//! The serving executor probes this cache *after* compiling a request
+//! (the compile itself goes through [`GapsSystem::compile_request`]'s
+//! plan cache) and *before* dispatching a grid round: a hit answers the
+//! submitter with a stored [`SearchResponse`] clone and never touches
+//! the fabric. Because the fingerprint is computed over the
+//! canonicalized AST (commutative operands sorted, duplicates deduped —
+//! see [`crate::search::fingerprint`]), logically identical requests
+//! like `b AND a` and `a AND b` share one entry.
+//!
+//! **Freshness:** every entry records the index epoch it was computed
+//! under, and a probe only hits when the entry's epoch equals the
+//! current one — a response computed before a segment seal or merge can
+//! never be served afterwards. The executor additionally drops the
+//! whole cache ([`ResultCache::invalidate_all`]) the moment it observes
+//! an epoch bump, so stale entries do not linger as dead weight.
+//!
+//! **Collisions:** two distinct queries may collide on the 64-bit
+//! fingerprint. Each entry therefore stores the canonical AST and the
+//! result-affecting knobs it was computed for, and a probe verifies
+//! them — a collision degrades to a miss, never to a wrong answer.
+//!
+//! **What is never cached:** degraded responses (they rank only the
+//! reachable corpus) and errors. Placement-only knobs (`replicas`,
+//! `deadline_ms`) are deliberately *outside* both the fingerprint and
+//! the verification material: results are placement-invariant, so
+//! requests differing only in placement share entries.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::CacheConfig;
+use crate::coordinator::SearchResponse;
+use crate::search::{CompiledRequest, QueryNode};
+
+/// Deterministic result-cache counters (folded into
+/// [`super::QueueStats`] and exposed via `GET /healthz`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Probes answered from the cache (same fingerprint, same epoch,
+    /// verification material matched).
+    pub hits: u64,
+    /// Probes that found nothing servable (absent, stale epoch, or a
+    /// fingerprint collision caught by verification).
+    pub misses: u64,
+    /// Entries dropped to make room (per-shard FIFO eviction).
+    pub evicted: u64,
+    /// Entries dropped wholesale by an epoch bump
+    /// ([`ResultCache::invalidate_all`]).
+    pub invalidated: u64,
+}
+
+/// One cached response plus the material to verify a probe against.
+struct Entry {
+    /// Index epoch the response was computed under: a probe under any
+    /// other epoch misses.
+    epoch: u64,
+    /// Canonical AST + result-affecting knobs — compared on probe so a
+    /// 64-bit fingerprint collision degrades to a miss.
+    ast: QueryNode,
+    top_k: usize,
+    allow_partial: bool,
+    explain: bool,
+    response: SearchResponse,
+}
+
+impl Entry {
+    fn matches(&self, compiled: &CompiledRequest, epoch: u64) -> bool {
+        self.epoch == epoch
+            && self.top_k == compiled.top_k
+            && self.allow_partial == compiled.allow_partial
+            && self.explain == compiled.explain
+            && self.ast == compiled.query.ast
+    }
+}
+
+/// One shard: FIFO-evicting fingerprint map (insertion order is the
+/// eviction order, so behaviour is deterministic for a fixed request
+/// sequence).
+struct Shard {
+    capacity: usize,
+    map: HashMap<u64, Entry>,
+    order: VecDeque<u64>,
+}
+
+/// The sharded result cache. Owned by the serving executor thread (one
+/// writer), so shards reduce probe cost on large capacities rather than
+/// lock contention — but they also keep the layout ready for a
+/// concurrent front should the executor ever be replicated.
+pub struct ResultCache {
+    /// `false` when `cache.enabled` is off or `cache.result_capacity`
+    /// is 0: every operation is a silent no-op (not even counted).
+    enabled: bool,
+    shards: Vec<Shard>,
+    counters: CacheCounters,
+}
+
+impl ResultCache {
+    /// Build from the `cache.*` config section. `result_capacity` is
+    /// split evenly across `result_shards` (rounded up, each shard
+    /// holds at least one entry when the cache is enabled).
+    pub fn new(cfg: &CacheConfig) -> ResultCache {
+        let n = cfg.result_shards.max(1);
+        let enabled = cfg.enabled && cfg.result_capacity > 0;
+        let per_shard = if enabled { ((cfg.result_capacity + n - 1) / n).max(1) } else { 0 };
+        ResultCache {
+            enabled,
+            shards: (0..n)
+                .map(|_| Shard {
+                    capacity: per_shard,
+                    map: HashMap::new(),
+                    order: VecDeque::new(),
+                })
+                .collect(),
+            counters: CacheCounters::default(),
+        }
+    }
+
+    fn shard_index(&self, fingerprint: u64) -> usize {
+        (fingerprint as usize) % self.shards.len()
+    }
+
+    /// Probe for a response to `compiled` under `epoch`. A hit returns
+    /// a clone of the stored response — bit-identical to what cold
+    /// execution produced when it was inserted.
+    pub fn get(&mut self, compiled: &CompiledRequest, epoch: u64) -> Option<SearchResponse> {
+        if !self.enabled {
+            return None;
+        }
+        let idx = self.shard_index(compiled.fingerprint);
+        match self.shards[idx].map.get(&compiled.fingerprint) {
+            Some(entry) if entry.matches(compiled, epoch) => {
+                self.counters.hits += 1;
+                Some(entry.response.clone())
+            }
+            _ => {
+                self.counters.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store `response` for `compiled` under `epoch`, evicting the
+    /// shard's oldest entry if it is full. Callers must not insert
+    /// degraded responses (the executor filters them).
+    pub fn insert(&mut self, compiled: &CompiledRequest, epoch: u64, response: SearchResponse) {
+        if !self.enabled {
+            return;
+        }
+        let idx = self.shard_index(compiled.fingerprint);
+        let shard = &mut self.shards[idx];
+        if shard.map.len() >= shard.capacity && !shard.map.contains_key(&compiled.fingerprint) {
+            if let Some(oldest) = shard.order.pop_front() {
+                shard.map.remove(&oldest);
+                self.counters.evicted += 1;
+            }
+        }
+        let entry = Entry {
+            epoch,
+            ast: compiled.query.ast.clone(),
+            top_k: compiled.top_k,
+            allow_partial: compiled.allow_partial,
+            explain: compiled.explain,
+            response,
+        };
+        if shard.map.insert(compiled.fingerprint, entry).is_none() {
+            shard.order.push_back(compiled.fingerprint);
+        }
+    }
+
+    /// Drop every entry (the epoch-bump invalidation hook): after a
+    /// segment seal or merge the whole population is stale at once,
+    /// since every key embeds the now-old epoch.
+    pub fn invalidate_all(&mut self) {
+        for shard in &mut self.shards {
+            self.counters.invalidated += shard.map.len() as u64;
+            shard.map.clear();
+            shard.order.clear();
+        }
+    }
+
+    /// Counter snapshot (published into [`super::QueueStats`]).
+    pub fn counters(&self) -> CacheCounters {
+        self.counters
+    }
+
+    /// Live entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.map.len()).sum()
+    }
+
+    /// Whether the cache currently holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::SearchRequest;
+    use crate::util::clock::TaskTimeline;
+
+    fn cache_cfg(capacity: usize, shards: usize) -> CacheConfig {
+        CacheConfig {
+            enabled: true,
+            plan_capacity: 0,
+            result_capacity: capacity,
+            result_shards: shards,
+        }
+    }
+
+    fn compiled(raw: &str) -> CompiledRequest {
+        SearchRequest::new(raw).compile(512, 10).expect("compiles")
+    }
+
+    fn response(query: &str, docs_scanned: u64) -> SearchResponse {
+        SearchResponse {
+            query: query.to_string(),
+            hits: Vec::new(),
+            timeline: TaskTimeline::default(),
+            jobs: 1,
+            candidates: 0,
+            docs_scanned,
+            degraded: false,
+            missing_sources: Vec::new(),
+            explain: None,
+        }
+    }
+
+    #[test]
+    fn hit_requires_the_same_epoch() {
+        let mut cache = ResultCache::new(&cache_cfg(8, 2));
+        let c = compiled("grid computing");
+        cache.insert(&c, 3, response("grid computing", 100));
+        assert!(cache.get(&c, 3).is_some(), "same epoch must hit");
+        assert!(cache.get(&c, 4).is_none(), "a bumped epoch must never serve old results");
+        let n = cache.counters();
+        assert_eq!((n.hits, n.misses), (1, 1));
+    }
+
+    #[test]
+    fn reordered_commutative_queries_share_one_entry() {
+        let mut cache = ResultCache::new(&cache_cfg(8, 2));
+        let ab = compiled("storage AND replication");
+        let ba = compiled("replication AND storage");
+        assert_eq!(ab.fingerprint, ba.fingerprint);
+        cache.insert(&ab, 0, response("storage AND replication", 7));
+        let served = cache.get(&ba, 0).expect("reordered form must hit");
+        assert_eq!(served.docs_scanned, 7);
+    }
+
+    #[test]
+    fn fingerprint_collision_degrades_to_a_miss() {
+        let mut cache = ResultCache::new(&cache_cfg(8, 1));
+        let a = compiled("grid computing");
+        // Forge a collision: a different query wearing `a`'s
+        // fingerprint. Verification against the stored AST must refuse
+        // to serve `a`'s response for it.
+        let mut b = compiled("cloud storage");
+        b.fingerprint = a.fingerprint;
+        cache.insert(&a, 0, response("grid computing", 1));
+        assert!(cache.get(&b, 0).is_none(), "collision served a wrong answer");
+        assert_eq!(cache.counters().misses, 1);
+    }
+
+    #[test]
+    fn shards_evict_fifo_and_count_it() {
+        // One shard of capacity 2: the third distinct insert evicts the
+        // oldest entry.
+        let mut cache = ResultCache::new(&cache_cfg(2, 1));
+        let (a, b, c) = (compiled("grid"), compiled("cloud"), compiled("storage"));
+        cache.insert(&a, 0, response("grid", 1));
+        cache.insert(&b, 0, response("cloud", 2));
+        cache.insert(&c, 0, response("storage", 3));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.counters().evicted, 1);
+        assert!(cache.get(&a, 0).is_none(), "oldest entry must be the one evicted");
+        assert!(cache.get(&b, 0).is_some());
+        assert!(cache.get(&c, 0).is_some());
+    }
+
+    #[test]
+    fn reinserting_the_same_key_does_not_evict() {
+        let mut cache = ResultCache::new(&cache_cfg(2, 1));
+        let (a, b) = (compiled("grid"), compiled("cloud"));
+        cache.insert(&a, 0, response("grid", 1));
+        cache.insert(&b, 0, response("cloud", 2));
+        cache.insert(&a, 0, response("grid", 1));
+        assert_eq!(cache.counters().evicted, 0, "overwrite must not evict a bystander");
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn invalidate_all_empties_every_shard_and_counts_entries() {
+        let mut cache = ResultCache::new(&cache_cfg(16, 4));
+        for raw in ["grid", "cloud", "storage", "replication", "publication"] {
+            cache.insert(&compiled(raw), 1, response(raw, 0));
+        }
+        assert_eq!(cache.len(), 5);
+        cache.invalidate_all();
+        assert!(cache.is_empty());
+        assert_eq!(cache.counters().invalidated, 5);
+        assert!(cache.get(&compiled("grid"), 1).is_none());
+    }
+
+    #[test]
+    fn disabled_cache_is_a_silent_no_op() {
+        let mut off = cache_cfg(8, 2);
+        off.enabled = false;
+        let mut cache = ResultCache::new(&off);
+        let c = compiled("grid computing");
+        cache.insert(&c, 0, response("grid computing", 1));
+        assert!(cache.get(&c, 0).is_none());
+        assert_eq!(cache.counters(), CacheCounters::default(), "off means not even counted");
+
+        // capacity 0 disables just the result cache the same way.
+        let mut cache = ResultCache::new(&cache_cfg(0, 2));
+        cache.insert(&c, 0, response("grid computing", 1));
+        assert!(cache.get(&c, 0).is_none());
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn placement_knobs_share_an_entry() {
+        use crate::search::ReplicaPref;
+        let mut cache = ResultCache::new(&cache_cfg(8, 2));
+        let plain = compiled("grid computing");
+        let placed = SearchRequest::new("grid computing")
+            .prefer_replicas(ReplicaPref::SameVo)
+            .deadline_ms(500)
+            .compile(512, 10)
+            .expect("compiles");
+        assert_eq!(plain.fingerprint, placed.fingerprint);
+        cache.insert(&plain, 0, response("grid computing", 9));
+        assert!(
+            cache.get(&placed, 0).is_some(),
+            "results are placement-invariant; placement knobs must share entries"
+        );
+    }
+}

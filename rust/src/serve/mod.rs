@@ -29,6 +29,14 @@
 //! * [`HttpServer`] is a thin `std::net` HTTP/1.1 front speaking the
 //!   existing `util::json` wire forms on `POST /search`,
 //!   `POST /search_batch` and `GET /healthz` (see [`http`]).
+//! * The executor owns a fingerprint-keyed [`ResultCache`] (see
+//!   [`cache`]) and compiles through the system's plan cache: repeats
+//!   of a hot query skip parse + plan, and result-cache hits skip the
+//!   grid round entirely. Entries are keyed on the normalized-AST
+//!   fingerprint + index epoch and dropped wholesale when an ingest
+//!   round moves the epoch. Identical concurrent submissions
+//!   single-flight in the [`AdmissionQueue`]: one execution, fanned-out
+//!   results ([`QueueStats::singleflight`]).
 //!
 //! The `gaps serve` subcommand wires all three together; embedders can
 //! use the pieces directly:
@@ -58,9 +66,11 @@
 //! # Ok::<(), gaps::search::SearchError>(())
 //! ```
 
+pub mod cache;
 pub mod http;
 pub mod queue;
 
+pub use cache::{CacheCounters, ResultCache};
 pub use http::{status_for, HttpConfig, HttpServer, ShutdownHandle};
 pub use queue::{
     AdmissionQueue, AdmittedBatch, IngestBatch, IngestTicket, QueueConfig, QueueStats,
@@ -243,6 +253,107 @@ mod tests {
         assert_eq!(h.searchable_docs, 401);
         assert_eq!(h.buffered_docs, 0);
         server.shutdown();
+    }
+
+    #[test]
+    fn repeated_queries_hit_the_result_cache_bit_identically() {
+        let cfg = small_cfg();
+        let server = SearchServer::start(
+            QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
+            move || GapsSystem::deploy(cfg, 3),
+        )
+        .unwrap();
+        let q = server.queue();
+        let cold = q.submit(SearchRequest::new("grid computing")).unwrap();
+        let warm = q.submit(SearchRequest::new("grid computing")).unwrap();
+        // A reordered conjunction canonicalizes to the same AST, so it
+        // shares the entry — and still echoes its own raw query text.
+        let reordered = q.submit(SearchRequest::new("computing grid")).unwrap();
+        let stats = server.stats();
+        server.shutdown();
+
+        for served in [&warm, &reordered] {
+            let ids: Vec<(u64, u32)> =
+                served.hits.iter().map(|h| (h.global_id, h.score.to_bits())).collect();
+            let cold_ids: Vec<(u64, u32)> =
+                cold.hits.iter().map(|h| (h.global_id, h.score.to_bits())).collect();
+            assert_eq!(ids, cold_ids, "cached hits must be bit-identical to cold");
+            assert_eq!(served.candidates, cold.candidates);
+            assert_eq!(served.docs_scanned, cold.docs_scanned);
+        }
+        assert_eq!(warm.query, "grid computing");
+        assert_eq!(reordered.query, "computing grid", "cache hit must echo the raw query");
+        assert_eq!(stats.result_misses, 1, "only the cold request reached the grid");
+        assert_eq!(stats.result_hits, 2, "{stats:?}");
+        assert!(stats.plan_hits >= 1, "repeat of the identical request skips parse + plan");
+    }
+
+    #[test]
+    fn disabled_cache_still_serves_correctly() {
+        let mut cfg = small_cfg();
+        cfg.cache.enabled = false;
+        let server = SearchServer::start(
+            QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
+            move || GapsSystem::deploy(cfg, 3),
+        )
+        .unwrap();
+        let q = server.queue();
+        let a = q.submit(SearchRequest::new("grid computing")).unwrap();
+        let b = q.submit(SearchRequest::new("grid computing")).unwrap();
+        let stats = server.stats();
+        server.shutdown();
+        let ids_a: Vec<u64> = a.hits.iter().map(|h| h.global_id).collect();
+        let ids_b: Vec<u64> = b.hits.iter().map(|h| h.global_id).collect();
+        assert_eq!(ids_a, ids_b);
+        assert_eq!(stats.result_hits, 0, "off-switch means the cache is never consulted");
+        assert_eq!(stats.plan_hits, 0);
+    }
+
+    #[test]
+    fn ingest_epoch_bump_invalidates_cached_results() {
+        use crate::corpus::Publication;
+        let mut cfg = small_cfg();
+        cfg.storage.seal_docs = 1; // every ingest seals -> epoch bump
+        let server = SearchServer::start(
+            QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
+            move || GapsSystem::deploy(cfg, 3),
+        )
+        .unwrap();
+        let q = server.queue();
+        // Warm the cache with a query whose only real match arrives by
+        // ingestion afterwards: a stale hit would keep serving the
+        // cached pre-ingest result.
+        let pre = q.submit(SearchRequest::new("zyzzogeton")).unwrap();
+        assert!(
+            !pre.hits.iter().any(|h| h.title.contains("zyzzogeton")),
+            "the doc must not exist pre-ingest"
+        );
+        let _ = q.submit(SearchRequest::new("zyzzogeton")).unwrap();
+        let report = q
+            .submit_ingest(vec![Publication {
+                id: 0,
+                title: "zyzzogeton retrieval".into(),
+                abstract_text: "a freshly ingested publication about zyzzogeton".into(),
+                authors: "A. Author".into(),
+                venue: "TEST".into(),
+                year: 2026,
+            }])
+            .unwrap();
+        assert!(report.epoch >= 1, "seal_docs=1 must bump the epoch");
+        let post = q.submit(SearchRequest::new("zyzzogeton")).unwrap();
+        let stats = server.stats();
+        server.shutdown();
+
+        assert!(stats.result_hits >= 1, "the pre-ingest repeat must have hit: {stats:?}");
+        assert!(stats.result_invalidated >= 1, "epoch bump must drop cached entries: {stats:?}");
+        assert!(
+            post.docs_scanned > pre.docs_scanned,
+            "post-epoch response must see the grown corpus, not a stale hit"
+        );
+        assert!(
+            post.hits.iter().any(|h| h.title.contains("zyzzogeton")),
+            "the ingested doc must surface immediately after the bump"
+        );
     }
 
     #[test]

@@ -43,6 +43,25 @@
 //! into the queue's health cell, which `GET /healthz` reports as the
 //! `index` object — epoch bumps from seals and merges are visible to
 //! clients without touching the executor.
+//!
+//! **Single-flight coalescing:** a submission identical (by
+//! [`SearchRequest`] equality) to a request already waiting attaches to
+//! it instead of occupying its own queue slot — the round executes the
+//! query once and [`AdmittedBatch::complete`] fans the one result out
+//! to every attached submitter. Deadlined requests are exempt (expiry
+//! is anchored at each submission's own arrival), and attachments are
+//! absorbed even at the high-water mark since they do not grow the
+//! queue. Counted in [`QueueStats::singleflight`].
+//!
+//! **Caching:** the executor loop ([`run`]) owns a
+//! [`super::cache::ResultCache`] and compiles requests through
+//! [`GapsSystem::compile_request`]'s plan cache: repeats of a hot query
+//! skip parse + plan, and result-cache hits skip the grid round
+//! entirely. Entries are keyed on the normalized-AST fingerprint plus
+//! the index epoch, and the whole cache is dropped when an ingest round
+//! moves the epoch — a seal or merge can never leave stale hits behind.
+//! The cache counters are published into [`QueueStats`] after every
+//! round, so `GET /healthz` exposes them.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -51,7 +70,8 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{GapsSystem, IndexHealth, IngestReport, SearchResponse};
 use crate::corpus::Publication;
-use crate::search::{SearchError, SearchRequest};
+use crate::search::{CompiledRequest, SearchError, SearchRequest};
+use crate::serve::cache::{CacheCounters, ResultCache};
 use crate::util::json::Json;
 
 /// Coalescing knobs (the `gaps serve` CLI exposes both).
@@ -77,17 +97,27 @@ impl Default for QueueConfig {
 /// Deterministic admission counters (exposed via `GET /healthz`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct QueueStats {
-    /// Requests accepted into the queue.
+    /// Requests accepted into the queue (including single-flight
+    /// attachments).
     pub submitted: u64,
-    /// Requests handed to the executor (== `submitted` once drained).
+    /// Requests answered by executor rounds, including single-flight
+    /// attachments fanned out at completion (== `submitted` once
+    /// drained).
     pub executed: u64,
     /// `search_batch` rounds the executor ran.
     pub batches: u64,
     /// Requests that shared their round with at least one other request
-    /// — the observable evidence of coalescing.
+    /// — the observable evidence of coalescing. Counts distinct queue
+    /// slots only; single-flight attachments are counted in
+    /// [`QueueStats::singleflight`] instead.
     pub coalesced: u64,
-    /// Largest round drained so far.
+    /// Largest round drained so far (distinct queue slots; attachments
+    /// do not occupy slots).
     pub largest_batch: u64,
+    /// Submissions that attached to an identical already-pending
+    /// request (single-flight): their query executed once and the
+    /// result was fanned out.
+    pub singleflight: u64,
     /// Submissions rejected at the high-water mark (load shedding).
     pub shed: u64,
     /// Requests whose deadline elapsed while queued (settled at drain
@@ -97,6 +127,20 @@ pub struct QueueStats {
     pub ingest_batches: u64,
     /// Publications accepted across all ingest batches.
     pub ingest_docs: u64,
+    /// Compiled-plan cache hits (executor-published; a hit skips
+    /// lex + parse + plan for the round's request).
+    pub plan_hits: u64,
+    /// Compiled-plan cache misses (executor-published).
+    pub plan_misses: u64,
+    /// Result-cache hits (executor-published; a hit skips the grid
+    /// round entirely).
+    pub result_hits: u64,
+    /// Result-cache misses (executor-published).
+    pub result_misses: u64,
+    /// Result-cache entries dropped by capacity eviction.
+    pub result_evicted: u64,
+    /// Result-cache entries dropped wholesale by index-epoch bumps.
+    pub result_invalidated: u64,
 }
 
 impl QueueStats {
@@ -112,6 +156,13 @@ impl QueueStats {
             ("expired", Json::from(self.expired)),
             ("ingest_batches", Json::from(self.ingest_batches)),
             ("ingest_docs", Json::from(self.ingest_docs)),
+            ("singleflight", Json::from(self.singleflight)),
+            ("plan_hits", Json::from(self.plan_hits)),
+            ("plan_misses", Json::from(self.plan_misses)),
+            ("result_hits", Json::from(self.result_hits)),
+            ("result_misses", Json::from(self.result_misses)),
+            ("result_evicted", Json::from(self.result_evicted)),
+            ("result_invalidated", Json::from(self.result_invalidated)),
         ])
     }
 }
@@ -121,6 +172,10 @@ struct Pending {
     request: SearchRequest,
     arrived: Instant,
     reply: mpsc::Sender<Result<SearchResponse, SearchError>>,
+    /// Reply slots of identical submissions that attached to this one
+    /// (single-flight): the round executes `request` once, completion
+    /// fans the result out to every slot.
+    extra_replies: Vec<mpsc::Sender<Result<SearchResponse, SearchError>>>,
 }
 
 /// One enqueued ingest batch plus its way back to the submitter.
@@ -226,6 +281,9 @@ pub enum Round {
 pub struct AdmittedBatch {
     requests: Vec<SearchRequest>,
     replies: Vec<mpsc::Sender<Result<SearchResponse, SearchError>>>,
+    /// Per-request single-flight attachments (parallel to `replies`):
+    /// identical submissions that share the request's one execution.
+    extra_replies: Vec<Vec<mpsc::Sender<Result<SearchResponse, SearchError>>>>,
 }
 
 impl AdmittedBatch {
@@ -234,12 +292,18 @@ impl AdmittedBatch {
         &self.requests
     }
 
-    /// Deliver the round's results (one per request, same order).
-    /// Disconnected submitters (e.g. a dropped HTTP connection) are
-    /// skipped silently.
+    /// Deliver the round's results (one per request, same order). A
+    /// request's single-flight attachments each receive a clone of its
+    /// result. Disconnected submitters (e.g. a dropped HTTP connection)
+    /// are skipped silently.
     pub fn complete(self, results: Vec<Result<SearchResponse, SearchError>>) {
         debug_assert_eq!(self.replies.len(), results.len(), "one result per admitted request");
-        for (reply, result) in self.replies.into_iter().zip(results) {
+        for ((reply, extras), result) in
+            self.replies.into_iter().zip(self.extra_replies).zip(results)
+        {
+            for extra in extras {
+                let _ = extra.send(result.clone());
+            }
             let _ = reply.send(result);
         }
     }
@@ -284,7 +348,8 @@ impl AdmissionQueue {
     /// straddles the mark is admitted up to it).
     pub fn enqueue_all(&self, requests: Vec<SearchRequest>) -> Vec<ResponseTicket> {
         let mut tickets = Vec::with_capacity(requests.len());
-        let mut inner = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
         let arrived = Instant::now();
         let retry_after_ms = self.cfg.max_linger.as_millis().max(1) as u64;
         for request in requests {
@@ -294,18 +359,44 @@ impl AdmissionQueue {
                 // with a retryable availability error (the service is
                 // draining, not broken).
                 let _ = tx.send(Err(SearchError::unavailable("admission queue is shut down")));
-            } else if inner.pending.len() >= self.cfg.max_depth {
-                // Load shedding: fail fast at the high-water mark rather
-                // than queue unbounded latency.
-                inner.stats.shed += 1;
-                let _ = tx.send(Err(SearchError::Overloaded { retry_after_ms }));
             } else {
-                inner.stats.submitted += 1;
-                inner.pending.push_back(Pending { request, arrived, reply: tx });
+                // Single-flight: an identical request already waiting
+                // shares its execution — attach this reply to it instead
+                // of queueing a duplicate. Deadlined requests are exempt
+                // (their expiry is anchored at each submission's own
+                // arrival). Checked *before* the high-water mark, since
+                // an attachment does not grow the queue.
+                let flight = if request.deadline_ms.is_none() {
+                    inner.pending.iter_mut().find(|p| p.request == request)
+                } else {
+                    None
+                };
+                match flight {
+                    Some(p) => {
+                        p.extra_replies.push(tx);
+                        inner.stats.submitted += 1;
+                        inner.stats.singleflight += 1;
+                    }
+                    None if inner.pending.len() >= self.cfg.max_depth => {
+                        // Load shedding: fail fast at the high-water mark
+                        // rather than queue unbounded latency.
+                        inner.stats.shed += 1;
+                        let _ = tx.send(Err(SearchError::Overloaded { retry_after_ms }));
+                    }
+                    None => {
+                        inner.stats.submitted += 1;
+                        inner.pending.push_back(Pending {
+                            request,
+                            arrived,
+                            reply: tx,
+                            extra_replies: Vec::new(),
+                        });
+                    }
+                }
             }
             tickets.push(ResponseTicket { rx });
         }
-        drop(inner);
+        drop(guard);
         self.arrived.notify_all();
         tickets
     }
@@ -351,6 +442,20 @@ impl AdmissionQueue {
     /// publication — e.g. on a queue with no executor attached).
     pub fn index_health(&self) -> Option<IndexHealth> {
         self.inner.lock().unwrap().index_health.clone()
+    }
+
+    /// Executor side: publish the plan-cache `(hits, misses)` and the
+    /// result-cache counters into the stats snapshot. The values are
+    /// absolute (the executor's caches own the counters); `GET /healthz`
+    /// reads them back through [`AdmissionQueue::stats`].
+    pub fn publish_cache_stats(&self, plan: (u64, u64), result: CacheCounters) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.plan_hits = plan.0;
+        inner.stats.plan_misses = plan.1;
+        inner.stats.result_hits = result.hits;
+        inner.stats.result_misses = result.misses;
+        inner.stats.result_evicted = result.evicted;
+        inner.stats.result_invalidated = result.invalidated;
     }
 
     /// Submit a pre-formed batch and block for all of its results
@@ -402,6 +507,7 @@ impl AdmissionQueue {
             let drained: Vec<Pending> = inner.pending.drain(..n).collect();
             let mut requests = Vec::with_capacity(n);
             let mut replies = Vec::with_capacity(n);
+            let mut extra_replies = Vec::with_capacity(n);
             for p in drained {
                 let blown = p
                     .request
@@ -409,6 +515,8 @@ impl AdmissionQueue {
                     .map(|ms| p.arrived.elapsed() >= Duration::from_millis(ms))
                     .unwrap_or(false);
                 if blown {
+                    // Deadlined requests never carry single-flight
+                    // attachments, so only one ticket settles here.
                     inner.stats.expired += 1;
                     let ms = p.request.deadline_ms.unwrap_or(0);
                     let _ = p.reply.send(Err(SearchError::DeadlineExceeded { deadline_ms: ms }));
@@ -416,6 +524,7 @@ impl AdmissionQueue {
                 }
                 requests.push(p.request);
                 replies.push(p.reply);
+                extra_replies.push(p.extra_replies);
             }
             if requests.is_empty() {
                 // Every drained request had expired in the queue; go back
@@ -423,13 +532,17 @@ impl AdmissionQueue {
                 continue 'rounds;
             }
             let n = requests.len();
+            let attached: usize = extra_replies.iter().map(Vec::len).sum();
             inner.stats.batches += 1;
-            inner.stats.executed += n as u64;
+            // Attachments are answered by this round too — `executed`
+            // stays in lockstep with `submitted` — but they hold no
+            // queue slot, so round-shape counters ignore them.
+            inner.stats.executed += (n + attached) as u64;
             if n >= 2 {
                 inner.stats.coalesced += n as u64;
             }
             inner.stats.largest_batch = inner.stats.largest_batch.max(n as u64);
-            return Some(AdmittedBatch { requests, replies });
+            return Some(AdmittedBatch { requests, replies, extra_replies });
         }
     }
 
@@ -486,7 +599,9 @@ impl AdmissionQueue {
         let mut inner = self.inner.lock().unwrap();
         inner.open = false;
         for p in inner.pending.drain(..) {
-            let _ = p.reply.send(Err(SearchError::internal("serve executor terminated")));
+            for reply in std::iter::once(p.reply).chain(p.extra_replies) {
+                let _ = reply.send(Err(SearchError::internal("serve executor terminated")));
+            }
         }
         for p in inner.ingest_pending.drain(..) {
             let _ = p.reply.send(Err(SearchError::internal("serve executor terminated")));
@@ -504,6 +619,17 @@ impl AdmissionQueue {
 /// [`IndexHealth`] is published into the queue once at start and after
 /// every ingest round (the only rounds that can move the index epoch).
 ///
+/// **Life of a search round with caching:** every request is compiled
+/// through the system's plan cache ([`GapsSystem::compile_request`]),
+/// then probed against the executor-owned [`ResultCache`] under the
+/// current index epoch. Hits are answered in place; only the misses
+/// reach [`GapsSystem::search_batch`] (whose internal re-compilation is
+/// a plan-cache hit, so a cold request compiles exactly once). Fresh
+/// non-degraded successes are inserted for the next repeat. Because
+/// search and ingest both run on this one thread, the epoch observed at
+/// probe time is exact — an ingest round that moves it drops the whole
+/// cache before any later search round can probe.
+///
 /// However the loop exits — normal shutdown or an unwinding panic from
 /// the system — the queue is closed behind it and any still-pending
 /// requests are failed, so submitters never block on an executor that
@@ -518,14 +644,73 @@ pub fn run(queue: &AdmissionQueue, sys: &mut GapsSystem) {
     }
     let _guard = AbortOnExit(queue);
     queue.publish_index_health(sys.index_health());
+    let mut cache = ResultCache::new(&sys.cfg.cache);
+    let mut epoch = sys.index_epoch();
     while let Some(round) = queue.next_round() {
         match round {
             Round::Search(batch) => {
-                let results = sys.search_batch(batch.requests());
-                batch.complete(results);
+                let requests = batch.requests();
+                let mut results: Vec<Option<Result<SearchResponse, SearchError>>> =
+                    requests.iter().map(|_| None).collect();
+                // Probe phase: compile (through the plan cache) and
+                // answer result-cache hits without touching the grid.
+                let mut miss_requests: Vec<SearchRequest> = Vec::new();
+                let mut miss_slots: Vec<(usize, Option<CompiledRequest>)> = Vec::new();
+                for (i, req) in requests.iter().enumerate() {
+                    match sys.compile_request(req) {
+                        Ok(compiled) => match cache.get(&compiled, epoch) {
+                            Some(mut resp) => {
+                                // The entry may have been written by an
+                                // equivalent-but-reordered query; echo
+                                // *this* submitter's raw text, exactly
+                                // as cold execution would.
+                                resp.query = req.query.clone();
+                                results[i] = Some(Ok(resp));
+                            }
+                            None => {
+                                miss_requests.push(req.clone());
+                                miss_slots.push((i, Some(compiled)));
+                            }
+                        },
+                        // Uncompilable requests take the miss path so
+                        // the error a submitter sees is exactly the one
+                        // `search_batch` produces.
+                        Err(_) => {
+                            miss_requests.push(req.clone());
+                            miss_slots.push((i, None));
+                        }
+                    }
+                }
+                // Execute phase: only the misses reach the grid.
+                if !miss_requests.is_empty() {
+                    let executed = sys.search_batch(&miss_requests);
+                    for ((i, compiled), result) in miss_slots.into_iter().zip(executed) {
+                        if let (Some(compiled), Ok(resp)) = (&compiled, &result) {
+                            // Degraded responses rank only the reachable
+                            // corpus — never cache them.
+                            if !resp.degraded {
+                                cache.insert(compiled, epoch, resp.clone());
+                            }
+                        }
+                        results[i] = Some(result);
+                    }
+                }
+                queue.publish_cache_stats(sys.plan_cache_stats(), cache.counters());
+                batch.complete(
+                    results.into_iter().map(|r| r.expect("every slot settled")).collect(),
+                );
             }
             Round::Ingest(mut batch) => {
                 let report = sys.ingest(batch.take_docs());
+                let now = sys.index_epoch();
+                if now != epoch {
+                    // The epoch moved (a segment sealed or merged):
+                    // every cached result is keyed on the old epoch and
+                    // is stale at once — drop them all.
+                    cache.invalidate_all();
+                    epoch = now;
+                }
+                queue.publish_cache_stats(sys.plan_cache_stats(), cache.counters());
                 queue.publish_index_health(sys.index_health());
                 batch.complete(Ok(report));
             }
@@ -752,6 +937,12 @@ mod tests {
         let q = queue(4, Duration::ZERO);
         let _t: Vec<_> = (0..2).map(|i| q.enqueue(req(i))).collect();
         q.next_batch().expect("round");
+        q.publish_cache_stats((3, 4), CacheCounters {
+            hits: 5,
+            misses: 6,
+            evicted: 7,
+            invalidated: 8,
+        });
         let j = q.stats().to_json();
         assert_eq!(j.get("submitted").unwrap().as_i64(), Some(2));
         assert_eq!(j.get("batches").unwrap().as_i64(), Some(1));
@@ -759,6 +950,94 @@ mod tests {
         assert_eq!(j.get("largest_batch").unwrap().as_i64(), Some(2));
         assert_eq!(j.get("shed").unwrap().as_i64(), Some(0));
         assert_eq!(j.get("expired").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("singleflight").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("plan_hits").unwrap().as_i64(), Some(3));
+        assert_eq!(j.get("plan_misses").unwrap().as_i64(), Some(4));
+        assert_eq!(j.get("result_hits").unwrap().as_i64(), Some(5));
+        assert_eq!(j.get("result_misses").unwrap().as_i64(), Some(6));
+        assert_eq!(j.get("result_evicted").unwrap().as_i64(), Some(7));
+        assert_eq!(j.get("result_invalidated").unwrap().as_i64(), Some(8));
+    }
+
+    #[test]
+    fn identical_pending_requests_share_one_flight() {
+        let q = queue(8, Duration::ZERO);
+        let t0 = q.enqueue(SearchRequest::new("grid computing"));
+        let t1 = q.enqueue(SearchRequest::new("grid computing"));
+        let t2 = q.enqueue(SearchRequest::new("cloud storage"));
+        let b = q.next_batch().expect("round");
+        assert_eq!(b.requests().len(), 2, "the duplicate must not occupy a queue slot");
+        b.complete(vec![
+            Err(SearchError::parse("grid result")),
+            Err(SearchError::parse("cloud result")),
+        ]);
+        // Both submitters of the coalesced query get the one result.
+        for t in [t0, t1] {
+            let e = t.wait().expect_err("fabricated result");
+            assert!(e.to_string().contains("grid result"), "{e}");
+        }
+        let e = t2.wait().expect_err("fabricated result");
+        assert!(e.to_string().contains("cloud result"), "{e}");
+        let stats = q.stats();
+        assert_eq!(stats.submitted, 3);
+        assert_eq!(stats.singleflight, 1);
+        assert_eq!(stats.executed, 3, "the attachment counts as answered");
+        assert_eq!(stats.largest_batch, 2, "attachments do not grow the round shape");
+    }
+
+    #[test]
+    fn different_knobs_do_not_share_a_flight() {
+        // Same query text, different result-affecting knob: full
+        // request equality gates single-flight, so these stay separate.
+        let q = queue(8, Duration::ZERO);
+        let _t0 = q.enqueue(SearchRequest::new("grid").top_k(3));
+        let _t1 = q.enqueue(SearchRequest::new("grid").top_k(7));
+        let b = q.next_batch().expect("round");
+        assert_eq!(b.requests().len(), 2);
+        assert_eq!(q.stats().singleflight, 0);
+    }
+
+    #[test]
+    fn deadlined_requests_do_not_coalesce() {
+        // Expiry is anchored at each submission's own arrival; sharing
+        // a flight would give the attachment the primary's deadline.
+        let q = queue(8, Duration::ZERO);
+        let _t0 = q.enqueue(SearchRequest::new("grid").deadline_ms(60_000));
+        let _t1 = q.enqueue(SearchRequest::new("grid").deadline_ms(60_000));
+        let b = q.next_batch().expect("round");
+        assert_eq!(b.requests().len(), 2);
+        assert_eq!(q.stats().singleflight, 0);
+    }
+
+    #[test]
+    fn singleflight_absorbs_duplicates_even_at_the_high_water_mark() {
+        let q = AdmissionQueue::new(QueueConfig {
+            max_batch: 4,
+            max_linger: Duration::ZERO,
+            max_depth: 1,
+        });
+        let _t0 = q.enqueue(SearchRequest::new("grid"));
+        // The queue is full, but an identical request attaches instead
+        // of growing it — no shed.
+        let _t1 = q.enqueue(SearchRequest::new("grid"));
+        // A *different* request at the mark is shed as before.
+        let t2 = q.enqueue(SearchRequest::new("cloud"));
+        assert_eq!(t2.wait().expect_err("over the mark").kind(), "overloaded");
+        let stats = q.stats();
+        assert_eq!(stats.submitted, 2);
+        assert_eq!(stats.singleflight, 1);
+        assert_eq!(stats.shed, 1);
+    }
+
+    #[test]
+    fn abort_fails_singleflight_attachments_too() {
+        let q = queue(8, Duration::ZERO);
+        let t0 = q.enqueue(SearchRequest::new("grid"));
+        let t1 = q.enqueue(SearchRequest::new("grid"));
+        q.abort();
+        for t in [t0, t1] {
+            assert_eq!(t.wait().expect_err("aborted").kind(), "internal");
+        }
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //!   `tests/prop_segments.rs`). A tiered merge policy compacts sealed
 //!   segments in the background; every seal/merge bumps the index
 //!   epoch — the invalidation hook `/healthz`, `Explain`, and the
-//!   future result cache key on.
+//!   serving layer's result cache (`serve::cache::ResultCache`) key
+//!   on: cached top-k entries embed the epoch and are dropped wholesale
+//!   when it moves.
 //!
 //! The coordinator builds on both: `GapsSystem::write_snapshot` /
 //! `deploy_from_snapshot` persist and restore whole deployments, and

@@ -16,7 +16,11 @@
 //!
 //! Every seal and every merge bumps the [`epoch`](SegmentedIndex::epoch)
 //! counter — the invalidation signal `/healthz` and `Explain` report
-//! and a future result cache keys on.
+//! and the serving layer's result cache keys on: every cached top-k
+//! entry embeds the epoch it was computed under, and the serve executor
+//! drops the whole cache the moment an ingest round moves the epoch
+//! (`serve::cache::ResultCache`), so a seal or merge can never leave
+//! stale hits behind.
 //!
 //! [`seal`]: SegmentedIndex::seal
 //! [`merge_tiered`]: SegmentedIndex::merge_tiered

@@ -1,0 +1,307 @@
+//! Cached-vs-cold parity for the serving layer's plan + result caches.
+//!
+//! The caching tentpole's contract: a response served from the result
+//! cache (or planned through the plan cache) must be **bit-identical**
+//! to what cold execution produces — same hit ids, same score bits,
+//! same counters, same explain payload, same error kinds — and a query
+//! submitted after an index-epoch bump must never see a pre-epoch
+//! cached result. Both are pinned here against a cache-disabled oracle
+//! system (`cache.enabled = false`) over the same deployment, with
+//! ingest/seal/merge rounds interleaved between identical queries.
+//!
+//! The composed critical-path timeline is the one field excluded from
+//! comparison: its work component is *measured*, so even two cold
+//! executions of the same query differ in it (prop_serve_parity makes
+//! the same exclusion). Everything result-shaped is compared exactly.
+
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::{Deployment, GapsSystem, SearchResponse};
+use gaps::corpus::Publication;
+use gaps::metrics::sample_queries;
+use gaps::search::{SearchError, SearchRequest};
+use gaps::serve::{QueueConfig, SearchServer};
+use gaps::util::prop::{check, Config};
+use gaps::util::rng::Rng;
+
+fn cfg() -> GapsConfig {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 600;
+    cfg.workload.sub_shards = 8;
+    cfg.search.use_xla = false;
+    cfg
+}
+
+/// One deployment + query pool shared across every case.
+fn fixture() -> &'static (Arc<Deployment>, Vec<String>) {
+    static FIXTURE: OnceLock<(Arc<Deployment>, Vec<String>)> = OnceLock::new();
+    FIXTURE.get_or_init(|| {
+        let dep = Arc::new(Deployment::build(&cfg(), 4).unwrap());
+        let queries = sample_queries(&dep, 10, 0xCAC4E_1);
+        (dep, queries)
+    })
+}
+
+#[derive(Debug, Clone)]
+enum Op {
+    Query(SearchRequest),
+    Ingest(Vec<Publication>),
+}
+
+#[derive(Debug, Clone)]
+struct CacheCase {
+    ops: Vec<Op>,
+    /// Mutable-buffer seal threshold: 1 makes every ingest bump the
+    /// epoch, larger values let queries race a buffering tail.
+    seal_docs: usize,
+}
+
+/// Reverse the whitespace tokens of a plain conjunction: logically the
+/// same query, textually different — must share the canonical AST, the
+/// fingerprint, and therefore the cache entry.
+fn reverse_tokens(raw: &str) -> String {
+    let mut tokens: Vec<&str> = raw.split_whitespace().collect();
+    tokens.reverse();
+    tokens.join(" ")
+}
+
+fn gen_request(rng: &mut Rng, pool: &[String]) -> SearchRequest {
+    let mut raw = pool[rng.range(0, pool.len())].clone();
+    if rng.chance(0.35) {
+        // The pool is operator-free conjunctions (+ optional year atom),
+        // so token order is semantics-free.
+        raw = reverse_tokens(&raw);
+    }
+    if rng.chance(0.1) {
+        // Errors must ferry through the cached path identically too
+        // (and must never be cached).
+        raw = ["", "the of and", "bogus:grid"][rng.range(0, 3)].to_string();
+    }
+    let mut req = SearchRequest::new(raw);
+    if rng.chance(0.4) {
+        req = req.top_k(rng.range(1, 12));
+    }
+    if rng.chance(0.2) {
+        req = req.explain(true);
+    }
+    req
+}
+
+fn gen_doc(rng: &mut Rng, n: usize) -> Publication {
+    Publication {
+        id: 0, // reassigned by ingestion
+        title: format!("ingested probe {n} grid computing"),
+        abstract_text: "live ingestion interleaved with cached serving".into(),
+        authors: "A. Author".into(),
+        venue: "TEST".into(),
+        year: 2000 + rng.below(20) as u32,
+    }
+}
+
+fn gen_case(rng: &mut Rng, size: usize) -> CacheCase {
+    let (_, pool) = fixture();
+    let n_ops = rng.range(4, size.clamp(5, 14));
+    let mut ops = Vec::with_capacity(n_ops);
+    for i in 0..n_ops {
+        if rng.chance(0.3) {
+            let docs = (0..rng.range(1, 3)).map(|k| gen_doc(rng, i * 8 + k)).collect();
+            ops.push(Op::Ingest(docs));
+        } else {
+            ops.push(Op::Query(gen_request(rng, pool)));
+        }
+    }
+    CacheCase { ops, seal_docs: [1, 2, 4][rng.range(0, 3)] }
+}
+
+/// Everything result-shaped, compared exactly (scores by bits); the
+/// measured timeline is excluded (module docs).
+fn assert_bit_identical(
+    i: usize,
+    query: &str,
+    served: &Result<SearchResponse, SearchError>,
+    serial: &Result<SearchResponse, SearchError>,
+) -> Result<(), String> {
+    match (served, serial) {
+        (Err(qe), Err(se)) => {
+            if qe.kind() != se.kind() {
+                return Err(format!(
+                    "op {i} {query:?}: served error {} vs cold error {}",
+                    qe.kind(),
+                    se.kind()
+                ));
+            }
+        }
+        (Ok(_), Err(se)) => {
+            return Err(format!("op {i} {query:?}: cold failed ({se}), served ok"));
+        }
+        (Err(qe), Ok(_)) => {
+            return Err(format!("op {i} {query:?}: served failed ({qe}), cold ok"));
+        }
+        (Ok(q), Ok(s)) => {
+            if q.query != s.query {
+                return Err(format!(
+                    "op {i}: served echoed {:?}, cold echoed {:?}",
+                    q.query, s.query
+                ));
+            }
+            let ids_q: Vec<(u64, u32, &str)> =
+                q.hits.iter().map(|h| (h.global_id, h.score.to_bits(), h.title.as_str())).collect();
+            let ids_s: Vec<(u64, u32, &str)> =
+                s.hits.iter().map(|h| (h.global_id, h.score.to_bits(), h.title.as_str())).collect();
+            if ids_q != ids_s {
+                return Err(format!("op {i} {query:?}: hits {ids_q:?} != {ids_s:?}"));
+            }
+            if (q.jobs, q.candidates, q.docs_scanned) != (s.jobs, s.candidates, s.docs_scanned) {
+                return Err(format!(
+                    "op {i} {query:?}: counters ({}, {}, {}) != ({}, {}, {})",
+                    q.jobs, q.candidates, q.docs_scanned, s.jobs, s.candidates, s.docs_scanned
+                ));
+            }
+            if (q.degraded, &q.missing_sources) != (s.degraded, &s.missing_sources) {
+                return Err(format!("op {i} {query:?}: degradation flags diverged"));
+            }
+            if q.explain != s.explain {
+                return Err(format!(
+                    "op {i} {query:?}: explain diverged: {:?} != {:?}",
+                    q.explain, s.explain
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn run_case(case: &CacheCase) -> Result<(), String> {
+    let (dep, _) = fixture();
+
+    // Cached side: the full serving stack (plan cache, result cache,
+    // epoch invalidation) over the shared deployment.
+    let mut serve_cfg = cfg();
+    serve_cfg.storage.seal_docs = case.seal_docs;
+    let mut oracle_cfg = serve_cfg.clone();
+    oracle_cfg.cache.enabled = false;
+    let dep_for_server = Arc::clone(dep);
+    let server = SearchServer::start(
+        QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
+        move || GapsSystem::from_deployment(serve_cfg, dep_for_server),
+    )
+    .map_err(|e| e.to_string())?;
+    let queue = server.queue();
+
+    // Cold oracle: an identical system that never consults a cache.
+    let mut oracle =
+        GapsSystem::from_deployment(oracle_cfg, Arc::clone(dep)).map_err(|e| e.to_string())?;
+
+    for (i, op) in case.ops.iter().enumerate() {
+        match op {
+            Op::Query(req) => {
+                let served = queue.submit(req.clone());
+                let cold = oracle.search_request(req);
+                assert_bit_identical(i, &req.query, &served, &cold)?;
+            }
+            Op::Ingest(docs) => {
+                let served = queue
+                    .submit_ingest(docs.clone())
+                    .map_err(|e| format!("op {i}: serve ingest failed: {e}"))?;
+                let cold = oracle.ingest(docs.clone());
+                if served != cold {
+                    return Err(format!(
+                        "op {i}: ingest reports diverged: {served:?} != {cold:?}"
+                    ));
+                }
+            }
+        }
+    }
+
+    // Both sides must have walked the same epoch history.
+    let served_health = server.index_health().ok_or("no published health")?;
+    let cold_health = oracle.index_health();
+    if served_health != cold_health {
+        return Err(format!("index health diverged: {served_health:?} != {cold_health:?}"));
+    }
+    server.shutdown();
+    Ok(())
+}
+
+#[test]
+fn prop_cached_serving_is_bit_identical_to_cold_execution() {
+    let prop_cfg = Config { cases: 25, max_size: 14, ..Config::default() };
+    check("cache-parity", &prop_cfg, gen_case, run_case);
+}
+
+/// Deterministic stale-read pin: warm the cache, bump the epoch with a
+/// matching doc, and require the post-epoch response to surface it —
+/// byte-for-byte equal to the cache-disabled oracle throughout.
+#[test]
+fn post_epoch_queries_never_see_pre_epoch_results() {
+    let (dep, _) = fixture();
+    let mut serve_cfg = cfg();
+    serve_cfg.storage.seal_docs = 1; // every ingest seals -> epoch bump
+    let mut oracle_cfg = serve_cfg.clone();
+    oracle_cfg.cache.enabled = false;
+    let dep_for_server = Arc::clone(dep);
+    let server = SearchServer::start(
+        QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
+        move || GapsSystem::from_deployment(serve_cfg, dep_for_server),
+    )
+    .unwrap();
+    let queue = server.queue();
+    let mut oracle = GapsSystem::from_deployment(oracle_cfg, Arc::clone(dep)).unwrap();
+
+    let probe = SearchRequest::new("zyzzogeton");
+    let mut doc = gen_doc(&mut Rng::new(7), 0);
+    doc.title = "zyzzogeton retrieval".into();
+    doc.abstract_text = "a freshly ingested publication about zyzzogeton".into();
+
+    for round in 0..3 {
+        // Identical queries before and after each ingest: the repeat
+        // hits the cache, the post-ingest one must not.
+        for rep in 0..2 {
+            let served = queue.submit(probe.clone());
+            let cold = oracle.search_request(&probe);
+            assert_bit_identical(round * 10 + rep, &probe.query, &served, &cold)
+                .unwrap_or_else(|e| panic!("{e}"));
+        }
+        let mut d = doc.clone();
+        d.title = format!("zyzzogeton retrieval round {round}");
+        let served = queue.submit_ingest(vec![d.clone()]).unwrap();
+        let cold = oracle.ingest(vec![d]);
+        assert_eq!(served, cold, "ingest reports diverged in round {round}");
+        assert!(served.epoch > round as u64, "seal_docs=1 must move the epoch every round");
+    }
+    let last = queue.submit(probe.clone()).unwrap();
+    assert!(
+        last.hits.iter().any(|h| h.title.contains("round 2")),
+        "the doc sealed by the final bump must be visible — a stale hit would hide it"
+    );
+    let stats = server.stats();
+    assert!(stats.result_hits >= 1, "repeats before a bump must hit: {stats:?}");
+    assert!(stats.result_invalidated >= 1, "bumps must invalidate: {stats:?}");
+    server.shutdown();
+}
+
+/// Regression (commutative canonicalization): `b AND a` and `a AND b`
+/// must share one fingerprint *and* produce bit-identical results, so
+/// they share one cache entry.
+#[test]
+fn reordered_conjunctions_share_fingerprint_and_results() {
+    let (dep, _) = fixture();
+    let mut sys = GapsSystem::from_deployment(cfg(), Arc::clone(dep)).unwrap();
+    let ab = SearchRequest::new("storage AND replication");
+    let ba = SearchRequest::new("replication AND storage");
+    let fp_ab = sys.compile_request(&ab).unwrap().fingerprint;
+    let fp_ba = sys.compile_request(&ba).unwrap().fingerprint;
+    assert_eq!(fp_ab, fp_ba, "reordered commutative operands must share a fingerprint");
+
+    let r_ab = sys.search_request(&ab).unwrap();
+    let r_ba = sys.search_request(&ba).unwrap();
+    let hits_ab: Vec<(u64, u32)> =
+        r_ab.hits.iter().map(|h| (h.global_id, h.score.to_bits())).collect();
+    let hits_ba: Vec<(u64, u32)> =
+        r_ba.hits.iter().map(|h| (h.global_id, h.score.to_bits())).collect();
+    assert_eq!(hits_ab, hits_ba, "reordered conjunction changed the results");
+    assert_eq!(r_ab.candidates, r_ba.candidates);
+    assert_eq!(r_ab.docs_scanned, r_ba.docs_scanned);
+}
