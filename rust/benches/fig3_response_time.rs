@@ -42,6 +42,18 @@
 //!   The parity checks inside it (snapshot-booted node bit-identical to
 //!   the writer) are **structural** and asserted even under
 //!   `GAPS_BENCH_NO_ASSERT`;
+//! * **traffic** — heavy-traffic closed-loop serving over real HTTP: a
+//!   ladder of keep-alive user counts (up to ~200 simulated users)
+//!   against the sharded executor behind the bounded handler pool, for
+//!   1 and 2 shards. Reports the p50/p95/p99 latency ladder, sustained
+//!   QPS, the saturation knee, and the shed-rate series; written to
+//!   `BENCH_traffic.json` and into the `traffic` section here. The
+//!   serving-shape invariants (no shedding below the handler bound,
+//!   typed shed + `Retry-After` beyond it, multi-shard QPS exceeding
+//!   single-shard at equal offered load) are **structural** and
+//!   asserted even under `GAPS_BENCH_NO_ASSERT`; the workload pins are
+//!   gated against the committed baseline so the series stays
+//!   comparable across PRs;
 //! * **sweep** — the Fig 3 response-time percentiles;
 //! * **counters** — deterministic block-max pruning counters on a
 //!   *fixed* workload (seeds, sizes, and k are constants — deliberately
@@ -60,7 +72,9 @@
 //!      (commit the result after intentional retrieval or caching
 //!      changes).
 
-use std::sync::Arc;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use gaps::config::GapsConfig;
@@ -70,7 +84,7 @@ use gaps::corpus::{CorpusGenerator, CorpusSpec};
 use gaps::index::{RetrievalCounters, RetrievalScratch, Shard};
 use gaps::metrics::{cached_node_sweep, sample_queries};
 use gaps::search::{Query, SearchRequest};
-use gaps::serve::{QueueConfig, QueueStats, SearchServer};
+use gaps::serve::{HttpConfig, HttpServer, QueueConfig, QueueStats, SearchServer};
 use gaps::util::bench::Table;
 use gaps::util::json::Json;
 use gaps::util::rng::{Rng, Zipf};
@@ -240,11 +254,12 @@ fn baseline_path() -> String {
 }
 
 /// `GAPS_BENCH_WRITE_BASELINE=1` path: record this run's deterministic
-/// sections (pruning counters + cache behaviour) as the new reference —
-/// the escape hatch for *intentional* retrieval or caching changes
-/// (gating first would panic before the write, making regeneration
-/// impossible). The gates are skipped on a write run.
-fn write_baseline(counter_report: &Json, cache_report: &Json) {
+/// sections (pruning counters + cache behaviour + heavy-traffic
+/// workload pins) as the new reference — the escape hatch for
+/// *intentional* retrieval, caching, or serving changes (gating first
+/// would panic before the write, making regeneration impossible). The
+/// gates are skipped on a write run.
+fn write_baseline(counter_report: &Json, cache_report: &Json, traffic_report: &Json) {
     let baseline_path = baseline_path();
     let mut pairs = vec![("provisional", Json::Bool(false))];
     if let (Some(w), Some(c)) = (counter_report.get("workload"), counter_report.get("counters")) {
@@ -258,6 +273,9 @@ fn write_baseline(counter_report: &Json, cache_report: &Json) {
         }
     }
     pairs.push(("cache", Json::obj(cache)));
+    if let Some(w) = traffic_report.get("workload") {
+        pairs.push(("traffic", Json::obj(vec![("workload", w.clone())])));
+    }
     std::fs::write(&baseline_path, Json::obj(pairs).to_string_pretty())
         .unwrap_or_else(|e| panic!("write {baseline_path}: {e}"));
     println!(
@@ -1048,6 +1066,358 @@ fn bench_persistence(cfg: &GapsConfig) -> Json {
     ])
 }
 
+/// Parse one framed HTTP response (status + `Content-Length` body) off
+/// a persistent connection; `None` means the connection died mid-read
+/// (the closed-loop user reconnects). Returns the status and the
+/// `Retry-After` value, if any.
+fn read_traffic_response(reader: &mut BufReader<TcpStream>) -> Option<(u16, Option<u64>)> {
+    let mut line = String::new();
+    if reader.read_line(&mut line).ok()? == 0 {
+        return None;
+    }
+    let status: u16 = line.split_whitespace().nth(1)?.parse().ok()?;
+    let mut content_length = 0usize;
+    let mut retry_after = None;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header).ok()? == 0 {
+            return None;
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().ok()?;
+            } else if name.eq_ignore_ascii_case("retry-after") {
+                retry_after = Some(value.trim().parse().ok()?);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).ok()?;
+    Some((status, retry_after))
+}
+
+/// One closed-loop keep-alive user: complete `per_user` requests,
+/// pipelining nothing (submit, await, submit — the closed loop), and
+/// reconnect after a short backoff whenever the acceptor sheds the
+/// connection. Returns the latency of every *completed* request and
+/// whether every shed response carried `Retry-After`.
+fn traffic_user(
+    addr: SocketAddr,
+    queries: &[String],
+    per_user: usize,
+    uid: usize,
+) -> (Vec<f64>, bool) {
+    let mut lat = Vec::with_capacity(per_user);
+    let mut retry_ok = true;
+    let mut done = 0usize;
+    while done < per_user {
+        let Ok(stream) = TcpStream::connect(addr) else {
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        };
+        stream.set_read_timeout(Some(Duration::from_secs(30))).expect("read timeout");
+        let Ok(mut writer) = stream.try_clone() else { continue };
+        let mut reader = BufReader::new(stream);
+        while done < per_user {
+            let q = &queries[(uid + done) % queries.len()];
+            let body = Json::obj(vec![("query", Json::str(q.clone()))]).to_string_compact();
+            let wire = format!(
+                "POST /search HTTP/1.1\r\nHost: gaps-bench\r\n\
+                 Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            let t = Instant::now();
+            if writer.write_all(wire.as_bytes()).is_err() {
+                break;
+            }
+            match read_traffic_response(&mut reader) {
+                Some((200, _)) => {
+                    lat.push(t.elapsed().as_secs_f64());
+                    done += 1;
+                }
+                Some((503, retry)) => {
+                    // Shed at the acceptor: the server closed this
+                    // connection after a complete typed response. Back
+                    // off and reconnect; the request is not consumed.
+                    if retry.is_none() {
+                        retry_ok = false;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                    break;
+                }
+                Some((status, _)) => panic!("traffic user got status {status} for {q:?}"),
+                None => break,
+            }
+        }
+    }
+    (lat, retry_ok)
+}
+
+/// One heavy-traffic cell: `users` concurrent closed-loop keep-alive
+/// users against a fresh `shards`-shard server behind a
+/// `handlers`-bounded pool. Returns sustained QPS, the per-request
+/// latency summary, the acceptor's shed count, total connection
+/// attempts that were answered (completed + shed), and the
+/// `Retry-After` flag.
+fn traffic_cell(
+    c: &GapsConfig,
+    dep: &Arc<Deployment>,
+    shards: usize,
+    handlers: usize,
+    users: usize,
+    per_user: usize,
+    queries: &[String],
+) -> (f64, Summary, u64, u64, bool) {
+    let cc = c.clone();
+    let dep_for_server = Arc::clone(dep);
+    let server = SearchServer::start_sharded(
+        QueueConfig { max_batch: 16, max_linger: Duration::ZERO, ..QueueConfig::default() },
+        shards,
+        move |_shard| GapsSystem::from_deployment(cc.clone(), Arc::clone(&dep_for_server)),
+    )
+    .expect("traffic serve start");
+    let http = HttpServer::bind_with(
+        "127.0.0.1:0",
+        server.router(),
+        HttpConfig { handlers, ..HttpConfig::default() },
+    )
+    .expect("traffic bind");
+    let addr = http.local_addr().expect("local addr");
+    let stopper = http.shutdown_handle().expect("shutdown handle");
+    let accept_thread = std::thread::spawn(move || http.serve().expect("serve"));
+
+    // Warm every shard (pool threads, scratches) outside the timed
+    // window; direct submits bypass the HTTP counters.
+    for _ in 0..shards {
+        server.router().submit(SearchRequest::new(queries[0].clone())).expect("warmup");
+    }
+    let shed_before = server.router().http().stats().shed;
+
+    let barrier = Barrier::new(users);
+    let mut all_lat: Vec<Vec<f64>> = vec![Vec::new(); users];
+    let mut retry_flags = vec![true; users];
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        for (u, (lat, flag)) in all_lat.iter_mut().zip(retry_flags.iter_mut()).enumerate() {
+            let barrier = &barrier;
+            s.spawn(move || {
+                barrier.wait();
+                let (l, ok) = traffic_user(addr, queries, per_user, u);
+                *lat = l;
+                *flag = ok;
+            });
+        }
+    });
+    let elapsed = t.elapsed().as_secs_f64();
+    let shed = server.router().http().stats().shed - shed_before;
+    stopper.stop();
+    accept_thread.join().expect("accept thread");
+    server.shutdown();
+
+    let mut lat = Summary::new();
+    for l in all_lat.iter().flatten() {
+        lat.add(*l);
+    }
+    let completed = (users * per_user) as u64;
+    (
+        completed as f64 / elapsed.max(1e-12),
+        lat,
+        shed,
+        completed + shed,
+        retry_flags.iter().all(|&ok| ok),
+    )
+}
+
+/// Heavy-traffic closed-loop serving over real HTTP: a fixed ladder of
+/// keep-alive user counts against the sharded executor behind the
+/// bounded handler pool, swept over 1 and 2 shards. Like
+/// `bench_counters`, every workload constant is local and deliberately
+/// not env-resizable, so the committed baseline's `traffic.workload`
+/// section pins the series shape across PRs.
+///
+/// The wall-clock numbers (QPS, latency ladder) are informational on
+/// shared runners, but the serving-shape invariants are **structural**
+/// and asserted even under `GAPS_BENCH_NO_ASSERT`:
+///
+/// * below the handler bound no connection is ever shed;
+/// * beyond it the acceptor sheds, and every shed response carries
+///   `Retry-After` (no client hangs, no silent drops);
+/// * at equal offered load (`users == handlers`) the 2-shard server
+///   sustains strictly more closed-loop QPS than the single shard —
+///   each shard runs one compute lane (`workers = 1`, cache off), so
+///   this isolates executor sharding itself.
+fn bench_traffic() -> Json {
+    const DOCS: u64 = 4_000;
+    const NODES: usize = 4;
+    const HANDLERS: usize = 32;
+    const PER_USER: usize = 8;
+    const USERS: [usize; 5] = [2, 8, 32, 96, 192];
+    const SHARDS: [usize; 2] = [1, 2];
+    const QUERY_SEED: u64 = 0x7AFF1C;
+
+    let mut c = GapsConfig::default();
+    c.workload.num_docs = DOCS;
+    c.search.use_xla = false;
+    // One compute lane per shard: the shard comparison must measure
+    // executor sharding, not the gridpool's internal worker fan-out.
+    c.search.workers = 1;
+    // Cache off: repeated queries must cost real grid rounds, or the
+    // executors never saturate and the knee disappears.
+    c.cache.enabled = false;
+    eprintln!("traffic: deploying fixed {DOCS}-doc grid ({NODES} nodes)...");
+    let dep = Arc::new(Deployment::build(&c, NODES).expect("deploy"));
+    let queries: Vec<String> = sample_queries(&dep, 16, QUERY_SEED)
+        .into_iter()
+        .filter(|q| {
+            SearchRequest::new(q.clone()).compile(c.search.features, c.search.top_k).is_ok()
+        })
+        .collect();
+    assert!(!queries.is_empty(), "no usable traffic queries sampled");
+
+    println!(
+        "\n== heavy traffic (keep-alive closed loop, {HANDLERS} handlers, \
+         {PER_USER} requests/user) =="
+    );
+    let mut series = Vec::new();
+    let mut qps_at_parity = [0.0f64; SHARDS.len()];
+    for (si, &shards) in SHARDS.iter().enumerate() {
+        let mut points = Vec::new();
+        let mut knee_users = USERS[0];
+        let mut knee_qps = 0.0f64;
+        for &users in &USERS {
+            let (qps, mut lat, shed, attempts, retry_ok) =
+                traffic_cell(&c, &dep, shards, HANDLERS, users, PER_USER, &queries);
+            // Structural, always on: the handler bound is the only
+            // shedding trigger, and it must actually trigger.
+            if users <= HANDLERS {
+                assert_eq!(
+                    shed,
+                    0,
+                    "{shards} shard(s), {users} users: shed below the handler bound"
+                );
+            } else {
+                assert!(
+                    shed > 0,
+                    "{shards} shard(s), {users} users: no shed beyond the handler bound"
+                );
+            }
+            assert!(
+                retry_ok,
+                "{shards} shard(s), {users} users: a shed response lacked Retry-After"
+            );
+            if users == HANDLERS {
+                qps_at_parity[si] = qps;
+            }
+            if qps > knee_qps {
+                knee_qps = qps;
+                knee_users = users;
+            }
+            let shed_rate = shed as f64 / attempts.max(1) as f64;
+            println!(
+                "  {shards} shard(s) {users:4} users  {qps:8.1} qps  \
+                 p50={:7.2}ms p95={:7.2}ms p99={:7.2}ms  shed {shed:5} ({:.1}%)",
+                lat.p50() * 1e3,
+                lat.percentile(95.0) * 1e3,
+                lat.percentile(99.0) * 1e3,
+                shed_rate * 100.0,
+            );
+            points.push(Json::obj(vec![
+                ("users", Json::from(users)),
+                ("qps", Json::from(qps)),
+                ("p50_ms", Json::from(lat.p50() * 1e3)),
+                ("p95_ms", Json::from(lat.percentile(95.0) * 1e3)),
+                ("p99_ms", Json::from(lat.percentile(99.0) * 1e3)),
+                ("shed", Json::from(shed)),
+                ("shed_rate", Json::from(shed_rate)),
+            ]));
+        }
+        println!("  {shards} shard(s): saturation knee at {knee_users} users");
+        series.push(Json::obj(vec![
+            ("shards", Json::from(shards)),
+            ("knee_users", Json::from(knee_users)),
+            ("points", Json::Arr(points)),
+        ]));
+    }
+
+    // Structural, always on: at equal offered load the extra shard must
+    // buy real throughput — replicas that don't scale are dead weight.
+    let multi_over_single = qps_at_parity[1] / qps_at_parity[0].max(1e-12);
+    assert!(
+        multi_over_single > 1.0,
+        "2 shards did not out-serve 1 shard at {HANDLERS} users: {:.1} vs {:.1} qps",
+        qps_at_parity[1],
+        qps_at_parity[0],
+    );
+    println!("  2 shards / 1 shard at {HANDLERS} users: {multi_over_single:.2}x closed-loop QPS");
+
+    Json::obj(vec![
+        ("bench", Json::str("traffic")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("docs", Json::from(DOCS)),
+                ("nodes", Json::from(NODES)),
+                ("handlers", Json::from(HANDLERS)),
+                ("per_user", Json::from(PER_USER)),
+                ("users", Json::Arr(USERS.iter().map(|&u| Json::from(u)).collect())),
+                ("shards", Json::Arr(SHARDS.iter().map(|&s| Json::from(s)).collect())),
+                ("query_seed", Json::from(QUERY_SEED)),
+            ]),
+        ),
+        ("series", Json::Arr(series)),
+        ("multi_over_single_at_parity", Json::from(multi_over_single)),
+    ])
+}
+
+/// Gate the heavy-traffic section against the committed baseline: the
+/// wall-clock series is informational (closed-loop QPS on a shared
+/// runner cannot be pinned), but the workload constants must match or
+/// the series silently stops being comparable across PRs. The serving
+/// shape itself is asserted inside `bench_traffic`, always. Baselines
+/// predating the section (or a missing file) only note the gap.
+fn gate_traffic(report: &Json) {
+    let baseline_path = baseline_path();
+    let Ok(text) = std::fs::read_to_string(&baseline_path) else {
+        println!("note: {baseline_path} missing — traffic gate ran structural checks only");
+        return;
+    };
+    let base = Json::parse(&text).unwrap_or_else(|e| panic!("{baseline_path}: invalid JSON: {e}"));
+    let Some(traffic) = base.get("traffic") else {
+        println!(
+            "note: {baseline_path} has no traffic section — regenerate with \
+             GAPS_BENCH_WRITE_BASELINE=1 and commit to arm the traffic gate"
+        );
+        return;
+    };
+    for key in ["docs", "nodes", "handlers", "per_user", "query_seed"] {
+        let got = report.get("workload").and_then(|w| w.get(key)).and_then(|v| v.as_f64());
+        let want = traffic.get("workload").and_then(|w| w.get(key)).and_then(|v| v.as_f64());
+        assert!(
+            got.is_some() && got == want,
+            "{baseline_path}: traffic.workload.{key} = {want:?} does not match this \
+             bench's {got:?} — the heavy-traffic series is no longer comparable across \
+             PRs; regenerate it with GAPS_BENCH_WRITE_BASELINE=1 and commit."
+        );
+    }
+    for key in ["users", "shards"] {
+        let ladder = |v: &Json| -> Option<Vec<i64>> {
+            Some(v.get("workload")?.get(key)?.as_arr()?.iter().filter_map(Json::as_i64).collect())
+        };
+        let got = ladder(report);
+        let want = ladder(traffic);
+        assert!(
+            got.is_some() && got == want,
+            "{baseline_path}: traffic.workload.{key} ladder {want:?} does not match this \
+             bench's {got:?} — regenerate with GAPS_BENCH_WRITE_BASELINE=1 and commit."
+        );
+    }
+    println!("traffic gate OK: workload pins match the committed baseline");
+}
+
 fn main() {
     let mut cfg = GapsConfig::default();
     cfg.workload.num_docs = env_usize("GAPS_BENCH_DOCS", 60_000) as u64;
@@ -1097,6 +1467,7 @@ fn main() {
     let cache = bench_cache();
     let availability = bench_availability(&cfg);
     let persistence = bench_persistence(&cfg);
+    let traffic = bench_traffic();
     let cache_speedup = cache.get("speedup_p50").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let load_speedup =
         persistence.get("load_speedup").and_then(|v| v.as_f64()).unwrap_or(0.0);
@@ -1139,6 +1510,7 @@ fn main() {
         ("cache", cache.clone()),
         ("availability", availability),
         ("persistence", persistence),
+        ("traffic", traffic.clone()),
         ("sweep", sweep_json),
     ]);
     let path = "BENCH_retrieval.json";
@@ -1157,11 +1529,15 @@ fn main() {
     std::fs::write("BENCH_cache.json", cache.to_string_pretty())
         .expect("write BENCH_cache.json");
     println!("wrote BENCH_cache.json");
+    std::fs::write("BENCH_traffic.json", traffic.to_string_pretty())
+        .expect("write BENCH_traffic.json");
+    println!("wrote BENCH_traffic.json");
     if std::env::var("GAPS_BENCH_WRITE_BASELINE").is_ok() {
-        write_baseline(&counter_report, &cache);
+        write_baseline(&counter_report, &cache, &traffic);
     } else {
         gate_counters(&counter_report);
         gate_cache(&cache);
+        gate_traffic(&traffic);
     }
 
     // Checks are enforced on real bench runs so regressions fail loudly;

@@ -234,6 +234,48 @@ impl Default for CacheConfig {
     }
 }
 
+/// Serving-layer knobs (the `serve` config section; surfaced by the
+/// `gaps serve` CLI flags of the same names).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bounded HTTP handler pool: at most this many connections are
+    /// served concurrently; the acceptor sheds the rest with a typed
+    /// 503 + `Retry-After` (clamped to >= 1).
+    pub handlers: usize,
+    /// Executor shards: deterministic `GapsSystem` replicas, each with
+    /// its own admission lane and executor thread; searches route
+    /// round-robin, ingest fans out to all (clamped to >= 1).
+    pub shards: usize,
+    /// HTTP keep-alive (persistent connections with pipelined reads).
+    /// Off serves one request per connection, `Connection: close` on
+    /// every response.
+    pub keep_alive: bool,
+    /// Most requests coalesced into one `search_batch` round (>= 1).
+    pub max_batch: usize,
+    /// Linger window (ms) a drain waits past the oldest pending
+    /// request's arrival for co-arriving requests.
+    pub linger_ms: u64,
+    /// Admission high-water mark: pending requests beyond this are shed
+    /// with `overloaded`.
+    pub max_depth: usize,
+    /// Socket read/write timeout (ms) on the HTTP front (0 disables).
+    pub read_timeout_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            handlers: 32,
+            shards: 1,
+            keep_alive: true,
+            max_batch: 16,
+            linger_ms: 2,
+            max_depth: 1024,
+            read_timeout_ms: 10_000,
+        }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone, Default)]
 pub struct GapsConfig {
@@ -242,6 +284,7 @@ pub struct GapsConfig {
     pub search: SearchConfig,
     pub storage: StorageConfig,
     pub cache: CacheConfig,
+    pub serve: ServeConfig,
 }
 
 impl GapsConfig {
@@ -258,6 +301,7 @@ impl GapsConfig {
                 "search" => apply_section(body, |k, v| self.set_search(k, v))?,
                 "storage" => apply_section(body, |k, v| self.set_storage(k, v))?,
                 "cache" => apply_section(body, |k, v| self.set_cache(k, v))?,
+                "serve" => apply_section(body, |k, v| self.set_serve(k, v))?,
                 other => return Err(CliError(format!("unknown config section '{other}'"))),
             }
         }
@@ -364,6 +408,21 @@ impl GapsConfig {
         Ok(())
     }
 
+    fn set_serve(&mut self, key: &str, v: &Json) -> Result<(), CliError> {
+        let sv = &mut self.serve;
+        match key {
+            "handlers" => sv.handlers = as_usize(key, v)?,
+            "shards" => sv.shards = as_usize(key, v)?,
+            "keep_alive" => sv.keep_alive = as_bool(key, v)?,
+            "max_batch" => sv.max_batch = as_usize(key, v)?,
+            "linger_ms" => sv.linger_ms = as_usize(key, v)? as u64,
+            "max_depth" => sv.max_depth = as_usize(key, v)?,
+            "read_timeout_ms" => sv.read_timeout_ms = as_usize(key, v)? as u64,
+            _ => return Err(CliError(format!("unknown serve key '{key}'"))),
+        }
+        Ok(())
+    }
+
     /// Apply CLI flag overrides (flat names; see README "Configuration").
     pub fn apply_args(&mut self, args: &Args) -> Result<(), CliError> {
         if let Some(path) = args.get("config") {
@@ -411,6 +470,16 @@ impl GapsConfig {
         c.plan_capacity = args.get_parse("cache-plan-capacity", c.plan_capacity)?;
         c.result_capacity = args.get_parse("cache-result-capacity", c.result_capacity)?;
         c.result_shards = args.get_parse("cache-result-shards", c.result_shards)?;
+        let sv = &mut self.serve;
+        sv.handlers = args.get_parse("handlers", sv.handlers)?;
+        sv.shards = args.get_parse("shards", sv.shards)?;
+        sv.max_batch = args.get_parse("max-batch", sv.max_batch)?;
+        sv.linger_ms = args.get_parse("linger-ms", sv.linger_ms)?;
+        sv.max_depth = args.get_parse("max-depth", sv.max_depth)?;
+        sv.read_timeout_ms = args.get_parse("read-timeout-ms", sv.read_timeout_ms)?;
+        if let Some(v) = args.get("keep-alive") {
+            sv.keep_alive = parse_on_off("keep-alive", v)?;
+        }
         Ok(())
     }
 
@@ -422,7 +491,9 @@ impl GapsConfig {
              search: F={} top_k={} max_cand={} policy={} xla={} artifacts={} workers={} \
              failover_retries={}\n\
              storage: snapshot_dir={} seal_docs={} merge_fanout={}\n\
-             cache: enabled={} plan_capacity={} result_capacity={} result_shards={}",
+             cache: enabled={} plan_capacity={} result_capacity={} result_shards={}\n\
+             serve: handlers={} shards={} keep_alive={} max_batch={} linger_ms={} \
+             max_depth={} read_timeout_ms={}",
             self.grid.num_vos,
             self.grid.nodes_per_vo,
             self.grid.speed_min,
@@ -448,6 +519,13 @@ impl GapsConfig {
             self.cache.plan_capacity,
             self.cache.result_capacity,
             self.cache.result_shards,
+            self.serve.handlers,
+            self.serve.shards,
+            self.serve.keep_alive,
+            self.serve.max_batch,
+            self.serve.linger_ms,
+            self.serve.max_depth,
+            self.serve.read_timeout_ms,
         )
     }
 }
@@ -465,6 +543,18 @@ fn as_f64(key: &str, v: &Json) -> Result<f64, CliError> {
 
 fn as_bool(key: &str, v: &Json) -> Result<bool, CliError> {
     v.as_bool().ok_or_else(|| CliError(format!("{key} must be a boolean")))
+}
+
+/// Parse an on/off CLI value (`--keep-alive on|off`). The flag takes an
+/// explicit value rather than acting as a boolean switch so keep-alive
+/// can be turned *off* from the command line (a bare boolean flag could
+/// only ever assert the default).
+fn parse_on_off(flag: &str, v: &str) -> Result<bool, CliError> {
+    match v.to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => Err(CliError(format!("--{flag} must be on|off, got '{other}'"))),
+    }
 }
 
 fn apply_section<F>(body: &Json, mut set: F) -> Result<(), CliError>
@@ -649,9 +739,91 @@ mod tests {
     }
 
     #[test]
+    fn serve_knobs_parse() {
+        let mut c = GapsConfig::default();
+        assert_eq!(c.serve.handlers, 32);
+        assert_eq!(c.serve.shards, 1);
+        assert!(c.serve.keep_alive);
+        assert_eq!(c.serve.max_batch, 16);
+        assert_eq!(c.serve.linger_ms, 2);
+        assert_eq!(c.serve.max_depth, 1024);
+        assert_eq!(c.serve.read_timeout_ms, 10_000);
+        c.apply_json(
+            &Json::parse(
+                r#"{"serve": {"handlers": 8, "shards": 4, "keep_alive": false,
+                     "max_batch": 2, "linger_ms": 0, "max_depth": 64,
+                     "read_timeout_ms": 250}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.serve.handlers, 8);
+        assert_eq!(c.serve.shards, 4);
+        assert!(!c.serve.keep_alive);
+        assert_eq!(c.serve.max_batch, 2);
+        assert_eq!(c.serve.linger_ms, 0);
+        assert_eq!(c.serve.max_depth, 64);
+        assert_eq!(c.serve.read_timeout_ms, 250);
+        // Unknown serve keys are typos, not silently ignored.
+        assert!(c.apply_json(&Json::parse(r#"{"serve": {"handelrs": 1}}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn serve_cli_flags_apply() {
+        let mut c = GapsConfig::default();
+        let toks: Vec<String> = [
+            "--handlers",
+            "4",
+            "--shards",
+            "2",
+            "--keep-alive",
+            "off",
+            "--max-batch",
+            "8",
+            "--linger-ms",
+            "1",
+            "--max-depth",
+            "99",
+            "--read-timeout-ms",
+            "500",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&toks, false, &[]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.serve.handlers, 4);
+        assert_eq!(c.serve.shards, 2);
+        assert!(!c.serve.keep_alive);
+        assert_eq!(c.serve.max_batch, 8);
+        assert_eq!(c.serve.linger_ms, 1);
+        assert_eq!(c.serve.max_depth, 99);
+        assert_eq!(c.serve.read_timeout_ms, 500);
+    }
+
+    #[test]
+    fn keep_alive_flag_parses_on_off_and_rejects_garbage() {
+        let apply = |val: &str| {
+            let mut c = GapsConfig::default();
+            let toks: Vec<String> =
+                ["--keep-alive", val].iter().map(|s| s.to_string()).collect();
+            let args = Args::parse(&toks, false, &[]).unwrap();
+            c.apply_args(&args).map(|_| c.serve.keep_alive)
+        };
+        assert_eq!(apply("on").unwrap(), true);
+        assert_eq!(apply("ON").unwrap(), true);
+        assert_eq!(apply("1").unwrap(), true);
+        assert_eq!(apply("off").unwrap(), false);
+        assert_eq!(apply("false").unwrap(), false);
+        assert!(apply("maybe").is_err(), "garbage must be rejected, not defaulted");
+    }
+
+    #[test]
     fn describe_mentions_key_facts() {
         let d = GapsConfig::default().describe();
         assert!(d.contains("3 VOs"));
         assert!(d.contains("perf-history"));
+        assert!(d.contains("handlers=32"));
+        assert!(d.contains("shards=1"));
     }
 }

@@ -878,6 +878,17 @@ impl GapsSystem {
         &self.dep
     }
 
+    /// A shareable handle to the deployment (what
+    /// [`GapsSystem::from_deployment`] consumes). Executor shards clone
+    /// this to stamp out cheap replica systems over the one corpus,
+    /// fabric and index set — replicas fed identical ingest streams in
+    /// identical order stay bit-identical ([`GapsSystem::ingest`] is
+    /// deterministic), which is what keeps sharded serving
+    /// indistinguishable from a single executor.
+    pub fn deployment_handle(&self) -> Arc<Deployment> {
+        Arc::clone(&self.dep)
+    }
+
     pub fn perf_db(&self) -> &PerfDb {
         &self.perf
     }
@@ -947,6 +958,14 @@ impl GapsSystem {
     /// and merge bumps the index epoch. Buffered docs are not
     /// searchable until their seal — [`GapsSystem::flush_ingest`]
     /// forces one.
+    ///
+    /// Ingestion is fully deterministic in the stream order: id
+    /// assignment, least-loaded routing (ties to the smallest source
+    /// id), seal points and merge points depend only on prior ingests.
+    /// Replica systems built from one shared deployment and fed the
+    /// same batches in the same order therefore produce identical
+    /// overlays *and identical epochs* — the property the serve-layer
+    /// shard router's lockstep ingest fan-out relies on.
     pub fn ingest(&mut self, pubs: Vec<Publication>) -> IngestReport {
         let accepted = pubs.len();
         let source_ids: Vec<u32> =

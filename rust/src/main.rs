@@ -6,10 +6,11 @@
 //!   one fan-out round, queries separated by a space-padded `/`), print
 //!   results. `--explain` attaches AST + plan diagnostics.
 //! * `repl`              — interactive USI session.
-//! * `serve`             — multi-user HTTP front-end over an admission
-//!   queue (`--addr`, `--max-batch`, `--linger-ms`, `--max-depth`,
+//! * `serve`             — multi-user keep-alive HTTP front-end over
+//!   sharded admission queues (`--addr`, `--handlers`, `--shards`,
+//!   `--keep-alive on|off`, `--max-batch`, `--linger-ms`, `--max-depth`,
 //!   `--read-timeout-ms`; see `gaps::serve`). `POST /ingest` feeds the
-//!   live-ingestion lane.
+//!   live-ingestion lane (fanned out to every shard).
 //! * `sweep`             — the paper's node sweep (Figs 3/4/5 series).
 //! * `corpus`            — generate a corpus and save shard JSONL files.
 //! * `snapshot`          — deploy and write a binary index snapshot
@@ -76,11 +77,15 @@ fn print_usage() {
            search <query...>   one-shot search (e.g. gaps search grid computing);\n\
                                \" / \" separates a batch, --explain shows AST + plan\n\
            repl                interactive USI session\n\
-           serve               HTTP front-end (POST /search, POST /search_batch,\n\
-                               POST /ingest, GET /healthz) over an admission queue\n\
-                               that coalesces concurrent queries; --addr HOST:PORT\n\
-                               (default 127.0.0.1:7171), --max-batch N, --linger-ms N,\n\
-                               --max-depth N (shed beyond it, 503 + Retry-After),\n\
+           serve               keep-alive HTTP front-end (POST /search,\n\
+                               POST /search_batch, POST /ingest, GET /healthz) over\n\
+                               sharded admission queues that coalesce concurrent\n\
+                               queries; --addr HOST:PORT (default 127.0.0.1:7171),\n\
+                               --handlers N (bounded handler pool; overflow is shed\n\
+                               with 503 + Retry-After), --shards N (executor\n\
+                               replicas, round-robin), --keep-alive on|off,\n\
+                               --max-batch N, --linger-ms N, --max-depth N (shed\n\
+                               beyond it, 503 + Retry-After),\n\
                                --read-timeout-ms N (stalled clients get 408)\n\
            sweep               node sweep: response time / speedup / efficiency\n\
            corpus --out DIR    generate the corpus as shard JSONL files\n\
@@ -175,34 +180,49 @@ fn cmd_repl(args: &Args, cfg: GapsConfig) -> Result<()> {
 fn cmd_serve(args: &Args, cfg: GapsConfig) -> Result<()> {
     let n = n_nodes(args, &cfg)?;
     let addr = args.get("addr").unwrap_or("127.0.0.1:7171").to_string();
+    let shards = cfg.serve.shards.max(1);
     let queue_cfg = gaps::serve::QueueConfig {
-        max_batch: args.get_parse("max-batch", 16usize)?,
-        max_linger: std::time::Duration::from_millis(args.get_parse("linger-ms", 2u64)?),
-        max_depth: args.get_parse("max-depth", 1024usize)?,
+        max_batch: cfg.serve.max_batch.max(1),
+        max_linger: std::time::Duration::from_millis(cfg.serve.linger_ms),
+        max_depth: cfg.serve.max_depth,
     };
-    let read_timeout_ms = args.get_parse("read-timeout-ms", 10_000u64)?;
     let http_cfg = gaps::serve::HttpConfig {
-        read_timeout: std::time::Duration::from_millis(read_timeout_ms),
-        write_timeout: std::time::Duration::from_millis(read_timeout_ms),
+        read_timeout: std::time::Duration::from_millis(cfg.serve.read_timeout_ms),
+        write_timeout: std::time::Duration::from_millis(cfg.serve.read_timeout_ms),
+        handlers: cfg.serve.handlers.max(1),
+        keep_alive: cfg.serve.keep_alive,
     };
     eprintln!("{}", cfg.describe());
     eprintln!(
-        "admission queue: max_batch={} max_linger={:?} max_depth={}",
-        queue_cfg.max_batch, queue_cfg.max_linger, queue_cfg.max_depth
+        "serving shape: {} executor shard(s), {} handler(s), keep-alive {}; \
+         admission per shard: max_batch={} max_linger={:?} max_depth={}",
+        shards,
+        http_cfg.handlers,
+        if http_cfg.keep_alive { "on" } else { "off" },
+        queue_cfg.max_batch,
+        queue_cfg.max_linger,
+        queue_cfg.max_depth
     );
-    // The system deploys on (and never leaves) the executor thread.
-    // SearchError implements Display/Error, so the deploy closure can
-    // fold the snapshot path in directly.
-    let server = gaps::serve::SearchServer::start(queue_cfg, move || {
-        if cfg.storage.snapshot_dir.is_empty() {
-            GapsSystem::deploy(cfg, n)
-        } else {
-            let dir = std::path::PathBuf::from(&cfg.storage.snapshot_dir);
-            eprintln!("booting from snapshot {}", dir.display());
-            GapsSystem::deploy_from_snapshot(cfg, n, &dir)
-        }
-    })?;
-    let http = gaps::serve::HttpServer::bind_with(&addr, server.queue(), http_cfg)
+    // Each replica system deploys on (and never leaves) its executor
+    // thread. On the generator path the corpus + indexes are built once
+    // and shared (replicas are cheap views over one deployment); on the
+    // snapshot path every shard loads the same on-disk snapshot, which
+    // is deterministic, so the replicas still match bit-for-bit.
+    let server = if cfg.storage.snapshot_dir.is_empty() {
+        let cfg_f = cfg.clone();
+        let dep = std::sync::Arc::new(gaps::coordinator::Deployment::build(&cfg, n)?);
+        gaps::serve::SearchServer::start_sharded(queue_cfg, shards, move |_shard| {
+            GapsSystem::from_deployment(cfg_f.clone(), std::sync::Arc::clone(&dep))
+        })?
+    } else {
+        let cfg_f = cfg.clone();
+        eprintln!("booting from snapshot {}", cfg.storage.snapshot_dir);
+        gaps::serve::SearchServer::start_sharded(queue_cfg, shards, move |_shard| {
+            let dir = std::path::PathBuf::from(&cfg_f.storage.snapshot_dir);
+            GapsSystem::deploy_from_snapshot(cfg_f.clone(), n, &dir)
+        })?
+    };
+    let http = gaps::serve::HttpServer::bind_with(&addr, server.router(), http_cfg)
         .with_context(|| format!("binding {addr}"))?;
     eprintln!(
         "serving on http://{} — POST /search, POST /search_batch, POST /ingest, GET /healthz",
@@ -292,8 +312,9 @@ fn cmd_snapshot(args: &Args, cfg: GapsConfig) -> Result<()> {
     Ok(())
 }
 
-/// Minimal HTTP/1.1 POST over `std::net` (the serve front-end answers
-/// one request per connection, `Connection: close`).
+/// Minimal HTTP/1.1 POST over `std::net`. Sends `Connection: close`
+/// (the serve front-end honors it even though it keep-alives by
+/// default), so `read_to_string` terminates at the response's end.
 fn http_post(addr: &str, path: &str, body: &str) -> Result<(u16, gaps::util::json::Json)> {
     use std::io::{Read, Write};
     let mut stream =

@@ -27,6 +27,16 @@
 //! `deadline_ms`) are deliberately *outside* both the fingerprint and
 //! the verification material: results are placement-invariant, so
 //! requests differing only in placement share entries.
+//!
+//! **Sharded serving:** each executor shard owns a private instance —
+//! there is no cross-shard cache coherence protocol, and none is
+//! needed. The epoch in every key *is* the coherence mechanism: the
+//! router fans each ingest batch out to every shard in the same order,
+//! so replica epochs move in lockstep and a cached entry can only be
+//! served by the shard that computed it, under the epoch it was
+//! computed for. Shards answering bit-identically (they are
+//! deterministic replicas) makes per-shard hit/miss divergence a
+//! throughput detail, not a correctness one.
 
 use std::collections::{HashMap, VecDeque};
 

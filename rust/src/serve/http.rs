@@ -1,12 +1,38 @@
-//! Hand-rolled HTTP/1.1 front-end over the admission queue.
+//! Hand-rolled HTTP/1.1 front-end over the sharded admission layer.
 //!
 //! The offline crate set has no hyper/axum, and the protocol surface the
 //! serving layer needs is tiny, so this is a from-scratch implementation
 //! on `std::net::TcpListener`: request-line + headers + `Content-Length`
-//! body, one response per connection (`Connection: close`). Every body in
-//! and out is the *existing* `util::json` wire form — the same encoding
-//! the Query Manager ships in JDFs — so an HTTP client, the USI, and the
-//! grid's internal serialization all speak one dialect.
+//! body. Every body in and out is the *existing* `util::json` wire form
+//! — the same encoding the Query Manager ships in JDFs — so an HTTP
+//! client, the USI, and the grid's internal serialization all speak one
+//! dialect.
+//!
+//! **Connection model (keep-alive + pipelining):** connections are
+//! persistent by default (HTTP/1.1 semantics): a handler serves
+//! requests off one socket back-to-back until the client sends
+//! `Connection: close`, closes its end, or goes idle past the read
+//! timeout (an idle gap between requests closes quietly — there is no
+//! request to answer 408 to). Because requests are read sequentially
+//! off one buffered reader, *pipelined* requests (several written
+//! back-to-back before reading any response) are answered in order with
+//! no extra machinery. Responses echo the connection's fate
+//! (`Connection: keep-alive` or `Connection: close`); framing errors
+//! (400/408/411/413) always close, since the stream position is no
+//! longer trustworthy. Setting [`HttpConfig::keep_alive`] to false
+//! restores the one-request-per-connection behaviour.
+//!
+//! **Bounded handler pool:** connections are served by a fixed pool of
+//! [`HttpConfig::handlers`] resident workers (`util::pool`), not a
+//! thread per connection. The acceptor gates on the live-connection
+//! count: past the bound it *sheds* — writes a complete typed 503
+//! `overloaded` response with a `Retry-After` hint on the acceptor
+//! thread and closes, so an over-capacity client is never left hanging
+//! on an unanswered socket. Shed counts are visible on `GET /healthz`.
+//!
+//! **Executor shards:** requests route through a [`ShardRouter`] —
+//! round-robin over N deterministic `GapsSystem` replicas, each drained
+//! by its own executor thread (see [`super::router`]).
 //!
 //! Routes:
 //!
@@ -15,7 +41,7 @@
 //! | `POST /search`       | `SearchRequest` JSON          | `SearchResponse` JSON, or `SearchError` JSON with a mapped status |
 //! | `POST /search_batch` | `{"requests": [...]}` (or a bare array) | `{"results": [{"ok": ...} \| {"error": ...}]}` |
 //! | `POST /ingest`       | `{"docs": [...]}` (or a bare array of publication objects) | `IngestReport` JSON (`{"accepted", "buffered", "sealed", "merges", "epoch"}`) |
-//! | `GET /healthz`       | —                             | `{"status": "ok", "queue": {...}, "index": {...}}` (admission counters + index epoch / segment health) |
+//! | `GET /healthz`       | —                             | `{"status": "ok", "queue": {...}, "shards": [...], "http": {...}, "index": {...}}` (aggregate + per-shard admission counters, connection counters, index health) |
 //!
 //! Error statuses ([`status_for`]): `parse` → 400; `no-sources`,
 //! `no-nodes`, `no-live-replica`, `unavailable` → 503; `overloaded` →
@@ -25,9 +51,8 @@
 //! like `SearchError::to_json`.
 //!
 //! Sockets carry read/write timeouts ([`HttpConfig`]): a client that
-//! stalls mid-request is answered 408 instead of pinning its handler
-//! thread forever, and a peer that stops reading its response cannot
-//! wedge the writer.
+//! stalls mid-request is answered 408 instead of pinning its handler,
+//! and a peer that stops reading its response cannot wedge the writer.
 
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -38,8 +63,10 @@ use std::time::Duration;
 use crate::corpus::Publication;
 use crate::search::{SearchError, SearchRequest};
 use crate::util::json::Json;
+use crate::util::pool::Pool;
 
-use super::queue::AdmissionQueue;
+use super::queue::QueueStats;
+use super::router::{HttpCounters, ShardRouter};
 
 /// Largest accepted request body (a request batch of thousands of typed
 /// queries fits comfortably; anything bigger is a client error).
@@ -47,20 +74,34 @@ const MAX_BODY: usize = 1 << 20;
 
 /// Largest accepted request head (request line + headers): a peer
 /// streaming an endless newline-free request line runs into this cap, so
-/// a handler thread's buffers stay bounded. The body has its own
-/// separate [`MAX_BODY`] cap.
+/// a handler's buffers stay bounded. The body has its own separate
+/// [`MAX_BODY`] cap.
 const MAX_HEAD: usize = 16 << 10;
 
-/// Socket-level knobs for the front-end (the `gaps serve` CLI exposes
-/// the read timeout; the write timeout rides along).
+/// Retry hint (ms) carried by acceptor-side connection shedding (every
+/// handler busy). The admission queue's own shedding carries its linger
+/// window instead; this one covers the front door.
+const SHED_RETRY_MS: u64 = 1000;
+
+/// Socket + connection-model knobs for the front-end (the `gaps serve`
+/// CLI exposes them via the `serve.*` config section).
 #[derive(Debug, Clone, Copy)]
 pub struct HttpConfig {
     /// Per-socket read timeout: a client that stalls mid-request is
-    /// answered 408 instead of holding its handler thread forever. Zero
-    /// disables the timeout (blocking reads).
+    /// answered 408 (an idle keep-alive connection between requests is
+    /// closed quietly instead). Zero disables the timeout (blocking
+    /// reads).
     pub read_timeout: Duration,
     /// Per-socket write timeout for the response path. Zero disables.
     pub write_timeout: Duration,
+    /// Bounded handler pool size: at most this many connections are
+    /// served concurrently; further connections are shed with a
+    /// complete 503 + `Retry-After` response (clamped up to 1).
+    pub handlers: usize,
+    /// Persistent connections (HTTP/1.1 keep-alive + pipelined reads).
+    /// False restores one-request-per-connection: every response
+    /// carries `Connection: close`.
+    pub keep_alive: bool,
 }
 
 impl Default for HttpConfig {
@@ -68,6 +109,8 @@ impl Default for HttpConfig {
         HttpConfig {
             read_timeout: Duration::from_millis(10_000),
             write_timeout: Duration::from_millis(10_000),
+            handlers: 32,
+            keep_alive: true,
         }
     }
 }
@@ -95,7 +138,8 @@ pub fn status_for(e: &SearchError) -> u16 {
 }
 
 /// `Retry-After` hint (whole seconds, rounded up) for errors that carry
-/// one — currently only admission-queue shedding.
+/// one — admission-queue shedding and acceptor-side connection
+/// shedding.
 fn retry_after_secs(e: &SearchError) -> Option<u64> {
     match e {
         SearchError::Overloaded { retry_after_ms } => Some((retry_after_ms + 999) / 1000),
@@ -125,11 +169,15 @@ fn error_body(kind: &str, message: &str) -> Json {
     Json::obj(vec![("kind", Json::str(kind)), ("message", Json::str(message))])
 }
 
-/// A parsed request: method + path + raw body.
+/// A parsed request: method + path + raw body + the client's connection
+/// preference.
 struct HttpRequest {
     method: String,
     path: String,
     body: Vec<u8>,
+    /// The client sent `Connection: close` (HTTP/1.1 defaults to
+    /// keep-alive, so anything else leaves the connection open).
+    close: bool,
 }
 
 /// Status for an I/O failure while reading the request: a socket read
@@ -144,7 +192,8 @@ fn read_status(e: &io::Error) -> u16 {
 }
 
 /// Read one HTTP/1.1 request. Errors are `(status, message)` pairs ready
-/// to be rendered as an error response.
+/// to be rendered as an error response (after which the connection must
+/// close — the stream position is unknown).
 fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)> {
     // The head reads through a MAX_HEAD cap of its own: a head that
     // never terminates runs into the limit, `read_line` returns the
@@ -152,8 +201,18 @@ fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)>
     // bounded without the head eating into the body's budget.
     let mut head = reader.take(MAX_HEAD as u64);
     let mut line = String::new();
-    head.read_line(&mut line)
-        .map_err(|e| (read_status(&e), format!("reading request line: {e}")))?;
+    // Tolerate blank line(s) before the request line (RFC 9112 §2.2 —
+    // e.g. a pipelining client that terminated the previous body with a
+    // stray CRLF). The head cap still bounds the skipping.
+    loop {
+        line.clear();
+        let n = head
+            .read_line(&mut line)
+            .map_err(|e| (read_status(&e), format!("reading request line: {e}")))?;
+        if n == 0 || !line.trim_end().is_empty() {
+            break;
+        }
+    }
     let mut parts = line.split_whitespace();
     let (method, path) = match (parts.next(), parts.next(), parts.next()) {
         (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/1.") => {
@@ -163,6 +222,7 @@ fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)>
     };
 
     let mut content_length: Option<usize> = None;
+    let mut close = false;
     loop {
         let mut header = String::new();
         head.read_line(&mut header)
@@ -179,6 +239,8 @@ fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)>
                         .parse()
                         .map_err(|_| (400u16, format!("bad content-length {value:?}")))?,
                 );
+            } else if name.eq_ignore_ascii_case("connection") {
+                close = value.trim().eq_ignore_ascii_case("close");
             }
         }
     }
@@ -207,7 +269,7 @@ fn read_request(reader: &mut impl BufRead) -> Result<HttpRequest, (u16, String)>
             body
         }
     };
-    Ok(HttpRequest { method, path, body })
+    Ok(HttpRequest { method, path, body, close })
 }
 
 fn parse_body_json(body: &[u8]) -> Result<Json, (u16, String)> {
@@ -252,18 +314,25 @@ fn parse_ingest(v: &Json) -> Result<Vec<Publication>, (u16, String)> {
 }
 
 /// Route one request to a `(status, body, Retry-After)` triple. Pure
-/// apart from the admission-queue interaction, so the protocol is
+/// apart from the shard-router interaction, so the protocol is
 /// unit-testable.
-fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json, Option<u64>) {
+fn respond(req: &HttpRequest, router: &ShardRouter) -> (u16, Json, Option<u64>) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let mut fields = vec![
                 ("status", Json::str("ok")),
-                ("queue", queue.stats().to_json()),
+                ("queue", router.stats().to_json()),
+                (
+                    "shards",
+                    Json::Arr(
+                        router.per_shard_stats().iter().map(QueueStats::to_json).collect(),
+                    ),
+                ),
+                ("http", router.http().stats().to_json()),
             ];
-            // The index object appears once the executor has published
+            // The index object appears once an executor has published
             // (always, on a served system; absent on a bare queue).
-            if let Some(health) = queue.index_health() {
+            if let Some(health) = router.index_health() {
                 fields.push(("index", health.to_json()));
             }
             (200, Json::obj(fields), None)
@@ -274,7 +343,7 @@ fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json, Option<u64>
                     .ok_or_else(|| (400, "body is not a search request".to_string()))
             });
             match parsed {
-                Ok(request) => match queue.submit(request) {
+                Ok(request) => match router.submit(request) {
                     Ok(resp) => (200, resp.to_json(), None),
                     Err(e) => (status_for(&e), e.to_json(), retry_after_secs(&e)),
                 },
@@ -284,7 +353,7 @@ fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json, Option<u64>
         ("POST", "/search_batch") => {
             match parse_body_json(&req.body).and_then(|v| parse_batch(&v)) {
                 Ok(requests) => {
-                    let results = queue
+                    let results = router
                         .submit_batch(requests)
                         .into_iter()
                         .map(|r| match r {
@@ -299,7 +368,7 @@ fn respond(req: &HttpRequest, queue: &AdmissionQueue) -> (u16, Json, Option<u64>
         }
         ("POST", "/ingest") => {
             match parse_body_json(&req.body).and_then(|v| parse_ingest(&v)) {
-                Ok(docs) => match queue.submit_ingest(docs) {
+                Ok(docs) => match router.submit_ingest(docs) {
                     Ok(report) => (200, report.to_json(), None),
                     Err(e) => (status_for(&e), e.to_json(), retry_after_secs(&e)),
                 },
@@ -320,11 +389,13 @@ fn write_response(
     status: u16,
     body: &Json,
     retry_after: Option<u64>,
+    close: bool,
 ) -> io::Result<()> {
     let body = body.to_string_compact();
     let retry = retry_after.map(|s| format!("Retry-After: {s}\r\n")).unwrap_or_default();
+    let connection = if close { "close" } else { "keep-alive" };
     let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: {connection}\r\n\r\n",
         reason(status),
         body.len(),
     );
@@ -333,7 +404,13 @@ fn write_response(
     stream.flush()
 }
 
-fn handle_connection(stream: TcpStream, queue: &AdmissionQueue, cfg: HttpConfig) -> io::Result<()> {
+/// Serve one connection until it closes: requests are read sequentially
+/// off the buffered reader (which is what makes pipelining work), each
+/// answered in order. The connection ends on `Connection: close`, a
+/// framing error, clean EOF, an idle timeout between requests, or — the
+/// drain path — once a shut-down admission layer has answered
+/// everything the client already pipelined.
+fn handle_connection(stream: TcpStream, router: &ShardRouter, cfg: HttpConfig) -> io::Result<()> {
     // `set_read_timeout(Some(ZERO))` is an error on std sockets — zero
     // means "no timeout" here, so gate instead of passing it through.
     if cfg.read_timeout > Duration::ZERO {
@@ -343,23 +420,70 @@ fn handle_connection(stream: TcpStream, queue: &AdmissionQueue, cfg: HttpConfig)
         stream.set_write_timeout(Some(cfg.write_timeout))?;
     }
     let mut reader = BufReader::new(stream.try_clone()?);
-    let (status, body, retry_after) = match read_request(&mut reader) {
-        Ok(req) => respond(&req, queue),
-        Err((status, msg)) => {
-            let kind = if status == 408 { "timeout" } else { "bad-request" };
-            (status, error_body(kind, &msg), None)
-        }
-    };
     let mut writer = stream;
-    write_response(&mut writer, status, &body, retry_after)
+    let mut served = 0u64;
+    loop {
+        // Wait for the next request's first byte. Clean EOF — or an
+        // idle timeout with no request bytes in flight — closes the
+        // connection quietly: between requests there is nothing to
+        // answer 408 to.
+        let has_bytes = match reader.fill_buf() {
+            Ok(buf) => !buf.is_empty(),
+            Err(_) => false,
+        };
+        if !has_bytes {
+            return Ok(());
+        }
+        let (status, body, retry_after, mut close) = match read_request(&mut reader) {
+            Ok(req) => {
+                router.http().count_request(served > 0);
+                served += 1;
+                let close = !cfg.keep_alive || req.close;
+                let (status, body, retry) = respond(&req, router);
+                (status, body, retry, close)
+            }
+            Err((status, msg)) => {
+                // Framing failed: the stream position is unknown, so
+                // the connection cannot be reused.
+                let kind = if status == 408 { "timeout" } else { "bad-request" };
+                (status, error_body(kind, &msg), None, true)
+            }
+        };
+        // Drain-settle on shutdown: requests the client already
+        // pipelined keep being answered (each one typed by the queue's
+        // own 503), and once the read buffer holds no more of them the
+        // connection closes instead of idling against a draining
+        // server — no abrupt resets mid-pipeline.
+        if !close && !router.is_open() && reader.buffer().is_empty() {
+            close = true;
+        }
+        write_response(&mut writer, status, &body, retry_after, close)?;
+        if close {
+            return Ok(());
+        }
+    }
 }
 
-/// The HTTP listener: accepts connections and serves each on its own
-/// thread (handlers block on the admission queue while their round
-/// coalesces — cheap OS threads are exactly right for that).
+/// Acceptor-side shedding: every handler is busy, so this connection is
+/// answered with a complete typed 503 + `Retry-After` and closed — on
+/// the acceptor thread, without occupying a handler. A shed client is
+/// never left hanging on a silent socket.
+fn shed_connection(mut stream: TcpStream, cfg: HttpConfig) -> io::Result<()> {
+    if cfg.write_timeout > Duration::ZERO {
+        stream.set_write_timeout(Some(cfg.write_timeout))?;
+    }
+    let e = SearchError::Overloaded { retry_after_ms: SHED_RETRY_MS };
+    write_response(&mut stream, 503, &e.to_json(), retry_after_secs(&e), true)
+}
+
+/// The HTTP listener: accepts connections onto a bounded pool of
+/// resident handler workers; connections beyond the bound are shed with
+/// a typed 503 (handlers block on the admission layer while their round
+/// coalesces — cheap OS threads are exactly right for that, but a
+/// *bounded* number of them).
 pub struct HttpServer {
     listener: TcpListener,
-    queue: Arc<AdmissionQueue>,
+    router: Arc<ShardRouter>,
     cfg: HttpConfig,
     stop: Arc<AtomicBool>,
 }
@@ -384,19 +508,19 @@ impl ShutdownHandle {
 impl HttpServer {
     /// Bind the front-end with default socket timeouts. `addr` may use
     /// port 0 for an ephemeral port (see [`HttpServer::local_addr`]).
-    pub fn bind(addr: &str, queue: Arc<AdmissionQueue>) -> io::Result<HttpServer> {
-        Self::bind_with(addr, queue, HttpConfig::default())
+    pub fn bind(addr: &str, router: Arc<ShardRouter>) -> io::Result<HttpServer> {
+        Self::bind_with(addr, router, HttpConfig::default())
     }
 
-    /// Bind the front-end with explicit socket timeouts.
+    /// Bind the front-end with explicit socket + connection knobs.
     pub fn bind_with(
         addr: &str,
-        queue: Arc<AdmissionQueue>,
+        router: Arc<ShardRouter>,
         cfg: HttpConfig,
     ) -> io::Result<HttpServer> {
         Ok(HttpServer {
             listener: TcpListener::bind(addr)?,
-            queue,
+            router,
             cfg,
             stop: Arc::new(AtomicBool::new(false)),
         })
@@ -413,11 +537,17 @@ impl HttpServer {
     }
 
     /// Accept loop: blocks until [`ShutdownHandle::stop`] is called.
-    /// Connection handlers run on per-connection threads; accept errors
-    /// are skipped after a short backoff (a persistent failure such as
-    /// fd exhaustion must not busy-spin the acceptor at 100% CPU while
-    /// the very handlers holding the fds try to finish).
+    /// Connections are served by a bounded resident pool
+    /// ([`HttpConfig::handlers`]); connections beyond the pool's
+    /// capacity are shed with a complete 503 + `Retry-After`. Accept
+    /// errors are skipped after a short backoff (a persistent failure
+    /// such as fd exhaustion must not busy-spin the acceptor at 100%
+    /// CPU while the very handlers holding the fds try to finish).
+    /// Returning drains the pool: in-flight connections finish before
+    /// `serve` comes back.
     pub fn serve(self) -> io::Result<()> {
+        let pool = Pool::new(self.cfg.handlers.max(1));
+        let handlers = pool.size() as u64;
         for conn in self.listener.incoming() {
             if self.stop.load(Ordering::SeqCst) {
                 break;
@@ -429,10 +559,26 @@ impl HttpServer {
                     continue;
                 }
             };
-            let queue = Arc::clone(&self.queue);
+            if self.router.http().active() >= handlers {
+                // Every handler is occupied (keep-alive connections
+                // hold theirs until they close): shed at the door.
+                self.router.http().shed_connection();
+                let _ = shed_connection(stream, self.cfg);
+                continue;
+            }
+            self.router.http().begin_connection();
+            let router = Arc::clone(&self.router);
             let cfg = self.cfg;
-            std::thread::spawn(move || {
-                let _ = handle_connection(stream, &queue, cfg);
+            pool.submit(move || {
+                // The active count must drop however the handler exits.
+                struct Active<'a>(&'a HttpCounters);
+                impl Drop for Active<'_> {
+                    fn drop(&mut self) {
+                        self.0.end_connection();
+                    }
+                }
+                let _active = Active(router.http());
+                let _ = handle_connection(stream, &router, cfg);
             });
         }
         Ok(())
@@ -442,11 +588,15 @@ impl HttpServer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::queue::QueueConfig;
+    use crate::serve::queue::{AdmissionQueue, QueueConfig};
     use std::io::Cursor;
 
     fn parse(raw: &str) -> Result<HttpRequest, (u16, String)> {
         read_request(&mut Cursor::new(raw.as_bytes()))
+    }
+
+    fn test_router() -> ShardRouter {
+        ShardRouter::single(Arc::new(AdmissionQueue::new(QueueConfig::default())))
     }
 
     #[test]
@@ -455,6 +605,7 @@ mod tests {
         assert_eq!(get.method, "GET");
         assert_eq!(get.path, "/healthz");
         assert!(get.body.is_empty());
+        assert!(!get.close, "HTTP/1.1 defaults to keep-alive");
 
         let post = parse(
             "POST /search HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 17\r\n\r\n{\"query\": \"grid\"}",
@@ -462,6 +613,24 @@ mod tests {
         .unwrap();
         assert_eq!(post.method, "POST");
         assert_eq!(std::str::from_utf8(&post.body).unwrap(), "{\"query\": \"grid\"}");
+    }
+
+    #[test]
+    fn connection_close_header_is_parsed_case_insensitively() {
+        let req = parse("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(req.close);
+        let req = parse("GET /healthz HTTP/1.1\r\nconnection: CLOSE\r\n\r\n").unwrap();
+        assert!(req.close);
+        let req = parse("GET /healthz HTTP/1.1\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(!req.close);
+    }
+
+    #[test]
+    fn blank_lines_before_the_request_line_are_skipped() {
+        // RFC 9112 §2.2: a server SHOULD ignore at least one empty line
+        // received before the request line.
+        let req = parse("\r\n\r\nGET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.path, "/healthz");
     }
 
     #[test]
@@ -532,36 +701,47 @@ mod tests {
 
     #[test]
     fn healthz_and_unknown_routes_without_executor() {
-        // Routes that never touch the executor are fully testable here.
-        let queue = AdmissionQueue::new(QueueConfig::default());
+        // Routes that never touch an executor are fully testable here.
+        let router = test_router();
         let get = |method: &str, path: &str| HttpRequest {
             method: method.into(),
             path: path.into(),
             body: Vec::new(),
+            close: false,
         };
-        let (status, body, retry) = respond(&get("GET", "/healthz"), &queue);
+        let (status, body, retry) = respond(&get("GET", "/healthz"), &router);
         assert_eq!(status, 200);
         assert_eq!(retry, None);
         assert_eq!(body.get("status").unwrap().as_str(), Some("ok"));
         assert!(body.get("queue").unwrap().get("submitted").is_some());
+        let shards = body.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 1, "one per-shard stats object per shard");
+        assert!(shards[0].get("submitted").is_some());
+        let http = body.get("http").expect("connection counters");
+        assert_eq!(http.get("shed").unwrap().as_i64(), Some(0));
 
-        assert_eq!(respond(&get("GET", "/nope"), &queue).0, 404);
-        assert_eq!(respond(&get("DELETE", "/search"), &queue).0, 405);
-        assert_eq!(respond(&get("POST", "/healthz"), &queue).0, 405);
-        assert_eq!(respond(&get("GET", "/ingest"), &queue).0, 405);
+        assert_eq!(respond(&get("GET", "/nope"), &router).0, 404);
+        assert_eq!(respond(&get("DELETE", "/search"), &router).0, 405);
+        assert_eq!(respond(&get("POST", "/healthz"), &router).0, 405);
+        assert_eq!(respond(&get("GET", "/ingest"), &router).0, 405);
     }
 
     #[test]
     fn healthz_reports_index_health_once_published() {
         use crate::coordinator::IndexHealth;
-        let queue = AdmissionQueue::new(QueueConfig::default());
-        let get = HttpRequest { method: "GET".into(), path: "/healthz".into(), body: Vec::new() };
+        let router = test_router();
+        let get = HttpRequest {
+            method: "GET".into(),
+            path: "/healthz".into(),
+            body: Vec::new(),
+            close: false,
+        };
 
-        // Before the executor publishes: no `index` object.
-        let (_, body, _) = respond(&get, &queue);
+        // Before an executor publishes: no `index` object.
+        let (_, body, _) = respond(&get, &router);
         assert!(body.get("index").is_none());
 
-        queue.publish_index_health(IndexHealth {
+        router.shard(0).publish_index_health(IndexHealth {
             epoch: 7,
             searchable_docs: 640,
             buffered_docs: 2,
@@ -569,7 +749,7 @@ mod tests {
             seals: 6,
             merges: 1,
         });
-        let (status, body, _) = respond(&get, &queue);
+        let (status, body, _) = respond(&get, &router);
         assert_eq!(status, 200);
         let index = body.get("index").expect("index object after publication");
         assert_eq!(index.get("epoch").unwrap().as_i64(), Some(7));
@@ -582,18 +762,19 @@ mod tests {
 
     #[test]
     fn malformed_ingest_bodies_are_400_without_executor() {
-        let queue = AdmissionQueue::new(QueueConfig::default());
+        let router = test_router();
         let post = |body: &str| HttpRequest {
             method: "POST".into(),
             path: "/ingest".into(),
             body: body.as_bytes().to_vec(),
+            close: false,
         };
-        assert_eq!(respond(&post("not json"), &queue).0, 400);
-        assert_eq!(respond(&post("{\"no_docs\": 1}"), &queue).0, 400);
-        assert_eq!(respond(&post("{\"docs\": [7]}"), &queue).0, 400);
-        assert_eq!(respond(&post("{\"docs\": [{\"title\": \"only\"}]}"), &queue).0, 400);
+        assert_eq!(respond(&post("not json"), &router).0, 400);
+        assert_eq!(respond(&post("{\"no_docs\": 1}"), &router).0, 400);
+        assert_eq!(respond(&post("{\"docs\": [7]}"), &router).0, 400);
+        assert_eq!(respond(&post("{\"docs\": [{\"title\": \"only\"}]}"), &router).0, 400);
         // Rejected bodies never reach the ingestion lane.
-        assert_eq!(queue.stats().ingest_batches, 0);
+        assert_eq!(router.stats().ingest_batches, 0);
     }
 
     #[test]
@@ -608,16 +789,17 @@ mod tests {
 
     #[test]
     fn malformed_search_bodies_are_400_without_executor() {
-        let queue = AdmissionQueue::new(QueueConfig::default());
+        let router = test_router();
         let post = |path: &str, body: &str| HttpRequest {
             method: "POST".into(),
             path: path.into(),
             body: body.as_bytes().to_vec(),
+            close: false,
         };
-        assert_eq!(respond(&post("/search", "not json"), &queue).0, 400);
-        assert_eq!(respond(&post("/search", "{\"no_query\": 1}"), &queue).0, 400);
-        assert_eq!(respond(&post("/search_batch", "{\"requests\": [7]}"), &queue).0, 400);
-        assert_eq!(respond(&post("/search_batch", "17"), &queue).0, 400);
+        assert_eq!(respond(&post("/search", "not json"), &router).0, 400);
+        assert_eq!(respond(&post("/search", "{\"no_query\": 1}"), &router).0, 400);
+        assert_eq!(respond(&post("/search_batch", "{\"requests\": [7]}"), &router).0, 400);
+        assert_eq!(respond(&post("/search_batch", "17"), &router).0, 400);
     }
 
     #[test]
@@ -632,12 +814,23 @@ mod tests {
     #[test]
     fn response_writer_emits_valid_http() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, &Json::obj(vec![("a", Json::from(1i64))]), None).unwrap();
+        write_response(&mut out, 200, &Json::obj(vec![("a", Json::from(1i64))]), None, false)
+            .unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
         assert!(text.contains("Content-Length: 7\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
         assert!(!text.contains("Retry-After"), "{text}");
         assert!(text.ends_with("\r\n\r\n{\"a\":1}"), "{text}");
+    }
+
+    #[test]
+    fn response_writer_echoes_the_close_decision() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, &Json::obj(vec![]), None, true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(!text.contains("keep-alive"), "{text}");
     }
 
     #[test]
@@ -649,10 +842,11 @@ mod tests {
         assert_eq!(retry_after_secs(&SearchError::NoNodes), None);
 
         let mut out = Vec::new();
-        write_response(&mut out, 503, &e.to_json(), retry_after_secs(&e)).unwrap();
+        write_response(&mut out, 503, &e.to_json(), retry_after_secs(&e), true).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
         assert!(text.contains("Retry-After: 2\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
     }
 
     #[test]

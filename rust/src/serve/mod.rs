@@ -1,14 +1,16 @@
-//! The multi-user serving layer: resident system + admission-queue
-//! batching + HTTP front-end.
+//! The multi-user serving layer: resident system replicas + admission
+//! batching + a keep-alive HTTP front on a bounded handler pool.
 //!
 //! The paper's experiment is a *multi-user* workload — concurrent
 //! searchers hitting grid services that are loaded once and stay
 //! resident. This module is that always-on front:
 //!
 //! ```text
-//! users ──HTTP──> HttpServer ──submit──> AdmissionQueue ──rounds──> executor thread
-//!   (per-conn threads)        (coalesces co-arrivals)        (owns the GapsSystem,
-//!                                                             calls search_batch)
+//! users ══keep-alive HTTP══> HttpServer ──round-robin──> ShardRouter
+//!   (pipelined requests)   (bounded handler pool;      │
+//!                           overflow shed w/ 503)      ├─> AdmissionQueue 0 ──rounds──> executor 0 (GapsSystem replica)
+//!                                                      ├─> AdmissionQueue 1 ──rounds──> executor 1 (GapsSystem replica)
+//!                                                      └─> ...                          (ingest fans out to every shard)
 //! ```
 //!
 //! * [`AdmissionQueue`] coalesces concurrently arriving independent
@@ -22,15 +24,26 @@
 //!   [`GapsSystem::ingest`], and the resulting [`IndexHealth`] (index
 //!   epoch, searchable/buffered docs, per-source segment counts) is
 //!   published back through the queue for `GET /healthz`.
-//! * [`SearchServer`] owns the executor thread. The [`GapsSystem`] is
-//!   **built on and never leaves** that thread (the deploy closure runs
+//! * [`ShardRouter`] spreads searches round-robin over N admission
+//!   lanes, each drained by its own executor thread owning a
+//!   deterministic [`GapsSystem`] **replica** — rounds execute in
+//!   parallel across shards while each shard's linger window keeps
+//!   coalescing within it. Ingest fans out to *every* shard in one
+//!   atomic front-order slot, so replica epochs move in lockstep and
+//!   each executor's [`ResultCache`] stays coherent through the shared
+//!   epoch key (see [`router`]).
+//! * [`SearchServer`] owns the executor threads. Each [`GapsSystem`] is
+//!   **built on and never leaves** its thread (the deploy closure runs
 //!   there), which keeps the design compatible with thread-pinned
 //!   scoring runtimes (PJRT handles are `!Send`).
-//! * [`HttpServer`] is a thin `std::net` HTTP/1.1 front speaking the
+//! * [`HttpServer`] is a `std::net` HTTP/1.1 front speaking the
 //!   existing `util::json` wire forms on `POST /search`,
-//!   `POST /search_batch` and `GET /healthz` (see [`http`]).
-//! * The executor owns a fingerprint-keyed [`ResultCache`] (see
-//!   [`cache`]) and compiles through the system's plan cache: repeats
+//!   `POST /search_batch` and `GET /healthz` (see [`http`]):
+//!   keep-alive + pipelined reads by default, a bounded resident
+//!   handler pool, and acceptor-side shedding with a typed 503 +
+//!   `Retry-After` once every handler is occupied.
+//! * Each executor owns a fingerprint-keyed [`ResultCache`] (see
+//!   [`cache`]) and compiles through its system's plan cache: repeats
 //!   of a hot query skip parse + plan, and result-cache hits skip the
 //!   grid round entirely. Entries are keyed on the normalized-AST
 //!   fingerprint + index epoch and dropped wholesale when an ingest
@@ -38,7 +51,7 @@
 //!   single-flight in the [`AdmissionQueue`]: one execution, fanned-out
 //!   results ([`QueueStats::singleflight`]).
 //!
-//! The `gaps serve` subcommand wires all three together; embedders can
+//! The `gaps serve` subcommand wires all of it together; embedders can
 //! use the pieces directly:
 //!
 //! ```
@@ -69,6 +82,7 @@
 pub mod cache;
 pub mod http;
 pub mod queue;
+pub mod router;
 
 pub use cache::{CacheCounters, ResultCache};
 pub use http::{status_for, HttpConfig, HttpServer, ShutdownHandle};
@@ -76,6 +90,7 @@ pub use queue::{
     AdmissionQueue, AdmittedBatch, IngestBatch, IngestTicket, QueueConfig, QueueStats,
     ResponseTicket, Round,
 };
+pub use router::{HttpCounters, HttpStats, ShardRouter};
 
 use std::sync::{mpsc, Arc};
 use std::thread;
@@ -83,23 +98,24 @@ use std::thread;
 use crate::coordinator::{GapsSystem, IndexHealth};
 use crate::search::SearchError;
 
-/// A running serving layer: admission queue + the executor thread that
-/// owns the deployed [`GapsSystem`].
+/// A running serving layer: N admission lanes behind a [`ShardRouter`],
+/// each drained by an executor thread that owns a deployed
+/// [`GapsSystem`] replica.
 ///
-/// Dropping (or [`SearchServer::shutdown`]) closes the queue, drains
-/// pending rounds, and joins the executor.
+/// Dropping (or [`SearchServer::shutdown`]) closes every lane, drains
+/// pending rounds, and joins the executors.
 pub struct SearchServer {
-    queue: Arc<AdmissionQueue>,
-    executor: Option<thread::JoinHandle<()>>,
+    router: Arc<ShardRouter>,
+    executors: Vec<thread::JoinHandle<()>>,
 }
 
 impl SearchServer {
-    /// Boot the serving layer. `deploy` runs **on the executor thread**
-    /// and builds the system that will answer every round — so the
-    /// system never has to be `Send`, and deployment cost (corpus
-    /// analysis, index builds, pool spawn) is paid exactly once for the
-    /// server's lifetime. A deploy failure is returned here, not hidden
-    /// in the executor.
+    /// Boot a single-shard serving layer. `deploy` runs **on the
+    /// executor thread** and builds the system that will answer every
+    /// round — so the system never has to be `Send`, and deployment cost
+    /// (corpus analysis, index builds, pool spawn) is paid exactly once
+    /// for the server's lifetime. A deploy failure is returned here, not
+    /// hidden in the executor.
     pub fn start<F>(cfg: QueueConfig, deploy: F) -> Result<SearchServer, SearchError>
     where
         F: FnOnce() -> Result<GapsSystem, SearchError> + Send + 'static,
@@ -122,7 +138,10 @@ impl SearchServer {
                 }
             })?;
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(SearchServer { queue, executor: Some(executor) }),
+            Ok(Ok(())) => Ok(SearchServer {
+                router: Arc::new(ShardRouter::single(queue)),
+                executors: vec![executor],
+            }),
             Ok(Err(e)) => {
                 let _ = executor.join();
                 Err(e)
@@ -134,32 +153,134 @@ impl SearchServer {
         }
     }
 
-    /// The admission queue (share it with front-ends / submitters).
+    /// Boot a sharded serving layer: `shards` executor threads (clamped
+    /// up to 1), each running `deploy(shard_index)` **on its own
+    /// thread** and draining its own admission lane. Searches route
+    /// round-robin across the lanes; ingest fans out to all of them.
+    ///
+    /// `deploy` must build **identical deterministic replicas** — the
+    /// cheap way is [`GapsSystem::from_deployment`] over one shared
+    /// [`crate::coordinator::Deployment`] — because shard routing is
+    /// load balancing, not partitioning: any shard must answer any
+    /// query bit-identically, and lockstep ingest keeps the replicas
+    /// identical afterwards (`tests/prop_serve_parity.rs` pins this
+    /// against the serial single-shard oracle).
+    ///
+    /// Any deploy failure surfaces here: every shard is then shut down
+    /// and joined before the first error is returned.
+    pub fn start_sharded<F>(
+        cfg: QueueConfig,
+        shards: usize,
+        deploy: F,
+    ) -> Result<SearchServer, SearchError>
+    where
+        F: Fn(usize) -> Result<GapsSystem, SearchError> + Send + Sync + 'static,
+    {
+        let shards = shards.max(1);
+        let deploy = Arc::new(deploy);
+        let mut queues = Vec::with_capacity(shards);
+        let mut executors = Vec::with_capacity(shards);
+        let mut ready = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let queue = Arc::new(AdmissionQueue::new(cfg));
+            let exec_queue = Arc::clone(&queue);
+            let deploy = Arc::clone(&deploy);
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<(), SearchError>>();
+            let spawned = thread::Builder::new()
+                .name(format!("gaps-serve-exec-{i}"))
+                .spawn(move || match deploy(i) {
+                    Ok(mut sys) => {
+                        exec_queue.publish_index_health(sys.index_health());
+                        let _ = ready_tx.send(Ok(()));
+                        queue::run(&exec_queue, &mut sys);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                });
+            match spawned {
+                Ok(handle) => {
+                    queues.push(queue);
+                    executors.push(handle);
+                    ready.push(ready_rx);
+                }
+                Err(e) => {
+                    for q in &queues {
+                        q.shutdown();
+                    }
+                    for h in executors {
+                        let _ = h.join();
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+        // Wait for every shard to deploy (they deploy concurrently, so
+        // the slowest one bounds startup, not the sum).
+        let mut failure: Option<SearchError> = None;
+        for rx in ready {
+            match rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if failure.is_none() {
+                        failure = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if failure.is_none() {
+                        failure =
+                            Some(SearchError::internal("serve executor died during deployment"));
+                    }
+                }
+            }
+        }
+        if let Some(e) = failure {
+            for q in &queues {
+                q.shutdown();
+            }
+            for h in executors {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(SearchServer { router: Arc::new(ShardRouter::new(queues)), executors })
+    }
+
+    /// The shard router (share it with front-ends / submitters).
+    pub fn router(&self) -> Arc<ShardRouter> {
+        Arc::clone(&self.router)
+    }
+
+    /// The first shard's admission queue. For a single-shard server this
+    /// is *the* queue (the historical embedding API); on a sharded
+    /// server prefer [`SearchServer::router`], which balances across
+    /// lanes.
     pub fn queue(&self) -> Arc<AdmissionQueue> {
-        Arc::clone(&self.queue)
+        Arc::clone(self.router.shard(0))
     }
 
-    /// Admission counters snapshot.
+    /// Admission counters snapshot, aggregated across shards
+    /// ([`QueueStats::absorb`]).
     pub fn stats(&self) -> QueueStats {
-        self.queue.stats()
+        self.router.stats()
     }
 
-    /// Last index health the executor published (epoch, searchable and
+    /// Last index health the executors published (epoch, searchable and
     /// buffered docs, per-source segment counts). Always `Some` once
-    /// `start` returned, since the executor publishes before its first
-    /// round.
+    /// `start` returned, since each executor publishes before its first
+    /// round. Replicas stay in lockstep, so shard 0 speaks for all.
     pub fn index_health(&self) -> Option<IndexHealth> {
-        self.queue.index_health()
+        self.router.index_health()
     }
 
-    /// Close the queue, drain pending rounds, join the executor.
+    /// Close every lane, drain pending rounds, join the executors.
     pub fn shutdown(mut self) {
         self.finish();
     }
 
     fn finish(&mut self) {
-        self.queue.shutdown();
-        if let Some(handle) = self.executor.take() {
+        self.router.shutdown();
+        for handle in self.executors.drain(..) {
             let _ = handle.join();
         }
     }
@@ -213,6 +334,106 @@ mod tests {
         })
         .unwrap_err();
         assert_eq!(err.kind(), "invalid-config");
+    }
+
+    #[test]
+    fn sharded_server_answers_on_every_shard_identically() {
+        use crate::coordinator::Deployment;
+        let cfg = small_cfg();
+        let dep = Arc::new(Deployment::build(&cfg, 3).unwrap());
+        let dep_f = Arc::clone(&dep);
+        let cfg_f = cfg.clone();
+        let server = SearchServer::start_sharded(
+            QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
+            3,
+            move |_shard| GapsSystem::from_deployment(cfg_f.clone(), Arc::clone(&dep_f)),
+        )
+        .unwrap();
+        assert_eq!(server.router().num_shards(), 3);
+
+        // Six sequential submissions walk the round-robin twice over all
+        // three replicas; every answer must be bit-identical to the
+        // serial oracle on the same deployment.
+        let mut oracle = GapsSystem::from_deployment(cfg, Arc::clone(&dep)).unwrap();
+        let serial = oracle.search_request(SearchRequest::new("grid computing")).unwrap();
+        for _ in 0..6 {
+            let served =
+                server.router().submit(SearchRequest::new("grid computing")).unwrap();
+            let served_ids: Vec<(u64, u32)> =
+                served.hits.iter().map(|h| (h.global_id, h.score.to_bits())).collect();
+            let serial_ids: Vec<(u64, u32)> =
+                serial.hits.iter().map(|h| (h.global_id, h.score.to_bits())).collect();
+            assert_eq!(served_ids, serial_ids, "replica answers must match the oracle");
+            assert_eq!(served.candidates, serial.candidates);
+            assert_eq!(served.docs_scanned, serial.docs_scanned);
+        }
+        let per_shard = server.router().per_shard_stats();
+        assert_eq!(per_shard.len(), 3);
+        assert!(
+            per_shard.iter().all(|s| s.submitted == 2),
+            "round-robin must have spread 6 submissions 2-2-2: {per_shard:?}"
+        );
+        assert_eq!(server.stats().submitted, 6, "aggregate sums the shards");
+        server.shutdown();
+    }
+
+    #[test]
+    fn sharded_deploy_failure_fails_every_shard_and_surfaces() {
+        let cfg = small_cfg();
+        let err = SearchServer::start_sharded(QueueConfig::default(), 3, move |shard| {
+            if shard == 2 {
+                Err(SearchError::config("replica 2 refused to deploy"))
+            } else {
+                GapsSystem::deploy(cfg.clone(), 2)
+            }
+        })
+        .unwrap_err();
+        assert_eq!(err.kind(), "invalid-config");
+    }
+
+    #[test]
+    fn sharded_ingest_keeps_replicas_in_lockstep() {
+        use crate::coordinator::Deployment;
+        use crate::corpus::Publication;
+        let mut cfg = small_cfg();
+        cfg.storage.seal_docs = 1; // every ingest seals -> epoch bump
+        let dep = Arc::new(Deployment::build(&cfg, 3).unwrap());
+        let cfg_f = cfg.clone();
+        let server = SearchServer::start_sharded(
+            QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
+            2,
+            move |_shard| GapsSystem::from_deployment(cfg_f.clone(), Arc::clone(&dep)),
+        )
+        .unwrap();
+        let report = server
+            .router()
+            .submit_ingest(vec![Publication {
+                id: 0,
+                title: "zyzzogeton retrieval".into(),
+                abstract_text: "a freshly ingested publication about zyzzogeton".into(),
+                authors: "A. Author".into(),
+                venue: "TEST".into(),
+                year: 2026,
+            }])
+            .unwrap();
+        assert_eq!(report.accepted, 1);
+        assert!(report.epoch >= 1);
+
+        // Both replicas must now surface the doc: four round-robin
+        // submissions touch each shard twice.
+        for _ in 0..4 {
+            let resp = server.router().submit(SearchRequest::new("zyzzogeton")).unwrap();
+            assert!(
+                resp.hits.iter().any(|h| h.title.contains("zyzzogeton")),
+                "every replica must see the ingested doc"
+            );
+        }
+        // The fan-out recorded the batch on every shard's lane.
+        for stats in server.router().per_shard_stats() {
+            assert_eq!(stats.ingest_batches, 1, "{stats:?}");
+            assert_eq!(stats.ingest_docs, 1, "{stats:?}");
+        }
+        server.shutdown();
     }
 
     #[test]

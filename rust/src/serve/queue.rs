@@ -165,6 +165,29 @@ impl QueueStats {
             ("result_invalidated", Json::from(self.result_invalidated)),
         ])
     }
+
+    /// Fold another shard's counters into this snapshot: every counter
+    /// sums except `largest_batch`, which is a high-water mark and takes
+    /// the max. Used by the shard router to present one aggregate
+    /// `queue` object on `/healthz` next to the per-shard breakdown.
+    pub fn absorb(&mut self, other: &QueueStats) {
+        self.submitted += other.submitted;
+        self.executed += other.executed;
+        self.batches += other.batches;
+        self.coalesced += other.coalesced;
+        self.largest_batch = self.largest_batch.max(other.largest_batch);
+        self.singleflight += other.singleflight;
+        self.shed += other.shed;
+        self.expired += other.expired;
+        self.ingest_batches += other.ingest_batches;
+        self.ingest_docs += other.ingest_docs;
+        self.plan_hits += other.plan_hits;
+        self.plan_misses += other.plan_misses;
+        self.result_hits += other.result_hits;
+        self.result_misses += other.result_misses;
+        self.result_evicted += other.result_evicted;
+        self.result_invalidated += other.result_invalidated;
+    }
 }
 
 /// One enqueued request plus its way back to the submitter.
@@ -591,6 +614,15 @@ impl AdmissionQueue {
         self.arrived.notify_all();
     }
 
+    /// Whether the queue still accepts submissions (`false` after
+    /// [`AdmissionQueue::shutdown`]). The HTTP front uses this to stop
+    /// idling on keep-alive connections once the service is draining:
+    /// requests the client already pipelined are still answered (typed,
+    /// by the closed queue itself), then the connection closes.
+    pub fn is_open(&self) -> bool {
+        self.inner.lock().unwrap().open
+    }
+
     /// Executor-death path: close the queue AND fail every pending
     /// request immediately — nothing is left to run them, so letting
     /// them drain (or letting submitters block forever on tickets whose
@@ -845,6 +877,59 @@ mod tests {
         let err = q.submit(req(0)).expect_err("closed queue must reject");
         assert_eq!(err.kind(), "unavailable");
         assert_eq!(q.stats().submitted, 0);
+    }
+
+    #[test]
+    fn is_open_tracks_shutdown() {
+        let q = queue(4, Duration::ZERO);
+        assert!(q.is_open());
+        q.shutdown();
+        assert!(!q.is_open());
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_maxes_the_high_water_mark() {
+        let mut total = QueueStats { submitted: 3, executed: 3, largest_batch: 2, ..QueueStats::default() };
+        let other = QueueStats {
+            submitted: 5,
+            executed: 4,
+            batches: 2,
+            coalesced: 2,
+            largest_batch: 7,
+            singleflight: 1,
+            shed: 1,
+            expired: 1,
+            ingest_batches: 1,
+            ingest_docs: 9,
+            plan_hits: 2,
+            plan_misses: 3,
+            result_hits: 4,
+            result_misses: 5,
+            result_evicted: 1,
+            result_invalidated: 6,
+        };
+        total.absorb(&other);
+        assert_eq!(total.submitted, 8);
+        assert_eq!(total.executed, 7);
+        assert_eq!(total.batches, 2);
+        assert_eq!(total.coalesced, 2);
+        assert_eq!(total.largest_batch, 7, "high-water mark takes the max, not the sum");
+        assert_eq!(total.singleflight, 1);
+        assert_eq!(total.shed, 1);
+        assert_eq!(total.expired, 1);
+        assert_eq!(total.ingest_batches, 1);
+        assert_eq!(total.ingest_docs, 9);
+        assert_eq!(total.plan_hits, 2);
+        assert_eq!(total.plan_misses, 3);
+        assert_eq!(total.result_hits, 4);
+        assert_eq!(total.result_misses, 5);
+        assert_eq!(total.result_evicted, 1);
+        assert_eq!(total.result_invalidated, 6);
+
+        // Absorbing into a fresh default reproduces the source exactly.
+        let mut fresh = QueueStats::default();
+        fresh.absorb(&other);
+        assert_eq!(fresh, other);
     }
 
     #[test]

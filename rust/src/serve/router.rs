@@ -1,0 +1,366 @@
+//! Shard router: fans the serving layer out over N executor shards.
+//!
+//! PR 5/8 built the serving layer around exactly one executor thread —
+//! correct, but every scoring round serialized behind it. The router
+//! generalizes that to N **replica shards**: each shard is its own
+//! [`AdmissionQueue`] drained by its own executor thread owning its own
+//! `GapsSystem` (the system is `!Send`, so one-system-per-thread is the
+//! only shape that works with thread-pinned scoring runtimes). Round
+//! execution on one shard overlaps linger windows on the others.
+//!
+//! **Search dispatch** is round-robin: each submission lands on the
+//! next shard in rotation. Because every shard is a deterministic
+//! replica of the same deployment, *which* shard answers is invisible
+//! in the response — sharded serving stays bit-identical to a
+//! single-shard serial oracle (`tests/prop_serve_parity.rs`).
+//!
+//! **Ingest dispatch** fans out to *every* shard under one lock, so all
+//! replicas apply the same writes in the same order and their index
+//! epochs move in lockstep. Each shard's executor drops its own result
+//! cache when it observes the epoch bump, which keeps the per-shard
+//! caches coherent without any cross-shard invalidation protocol (see
+//! [`super::cache`]).
+//!
+//! The router also owns the HTTP front's connection counters
+//! ([`HttpCounters`]): accepted/active/shed connections and
+//! served/reused request counts, published on `GET /healthz` next to
+//! the per-shard admission stats.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{IndexHealth, IngestReport, SearchResponse};
+use crate::corpus::Publication;
+use crate::search::{SearchError, SearchRequest};
+use crate::util::json::Json;
+
+use super::queue::{AdmissionQueue, QueueStats};
+
+/// Snapshot of the HTTP front's connection counters (the `/healthz`
+/// `http` object).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HttpStats {
+    /// Connections accepted into the handler pool.
+    pub accepted: u64,
+    /// Connections currently held by a handler (keep-alive connections
+    /// count until they close, not just while a request is in flight).
+    pub active: u64,
+    /// Connections refused at the acceptor because every handler was
+    /// busy (answered with a complete 503 + `Retry-After`, then closed).
+    pub shed: u64,
+    /// Requests served across all connections.
+    pub requests: u64,
+    /// Requests served on an already-used connection — the observable
+    /// evidence of keep-alive reuse.
+    pub reused: u64,
+}
+
+impl HttpStats {
+    /// JSON form (the `/healthz` `http` object).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accepted", Json::from(self.accepted)),
+            ("active", Json::from(self.active)),
+            ("shed", Json::from(self.shed)),
+            ("requests", Json::from(self.requests)),
+            ("reused", Json::from(self.reused)),
+        ])
+    }
+}
+
+/// Live connection counters for the HTTP front. The acceptor gates on
+/// `active` (connections beyond the handler-pool size are shed), the
+/// handlers count requests, and `GET /healthz` snapshots the lot.
+#[derive(Debug, Default)]
+pub struct HttpCounters {
+    accepted: AtomicU64,
+    active: AtomicU64,
+    shed: AtomicU64,
+    requests: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl HttpCounters {
+    /// Connections currently held by handlers.
+    pub fn active(&self) -> u64 {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot every counter.
+    pub fn stats(&self) -> HttpStats {
+        HttpStats {
+            accepted: self.accepted.load(Ordering::SeqCst),
+            active: self.active.load(Ordering::SeqCst),
+            shed: self.shed.load(Ordering::SeqCst),
+            requests: self.requests.load(Ordering::SeqCst),
+            reused: self.reused.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Acceptor side: a connection enters the handler pool.
+    pub(crate) fn begin_connection(&self) {
+        self.accepted.fetch_add(1, Ordering::SeqCst);
+        self.active.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Handler side: a connection's handler finished (however it ended).
+    pub(crate) fn end_connection(&self) {
+        self.active.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Acceptor side: a connection was refused at the pool bound.
+    pub(crate) fn shed_connection(&self) {
+        self.shed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Handler side: one request was served on a connection; `reused`
+    /// marks requests after the first on the same socket.
+    pub(crate) fn count_request(&self, reused: bool) {
+        self.requests.fetch_add(1, Ordering::SeqCst);
+        if reused {
+            self.reused.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Round-robin front over N executor shards (each an [`AdmissionQueue`]
+/// drained by its own executor thread). One shard degenerates to the
+/// pre-sharding behaviour exactly.
+pub struct ShardRouter {
+    shards: Vec<Arc<AdmissionQueue>>,
+    /// Rotation cursor for search dispatch.
+    next: AtomicUsize,
+    /// Serializes ingest fan-out: every shard must observe the same
+    /// writes in the same order, or the replicas (and their epochs)
+    /// diverge.
+    ingest_lock: Mutex<()>,
+    http: HttpCounters,
+}
+
+impl ShardRouter {
+    /// A router over the given shards (at least one).
+    pub fn new(shards: Vec<Arc<AdmissionQueue>>) -> ShardRouter {
+        assert!(!shards.is_empty(), "router needs at least one shard");
+        ShardRouter {
+            shards,
+            next: AtomicUsize::new(0),
+            ingest_lock: Mutex::new(()),
+            http: HttpCounters::default(),
+        }
+    }
+
+    /// A single-shard router (the pre-sharding serving shape).
+    pub fn single(queue: Arc<AdmissionQueue>) -> ShardRouter {
+        ShardRouter::new(vec![queue])
+    }
+
+    /// Number of executor shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// A shard's admission queue by index.
+    pub fn shard(&self, i: usize) -> &Arc<AdmissionQueue> {
+        &self.shards[i]
+    }
+
+    /// The HTTP front's connection counters.
+    pub fn http(&self) -> &HttpCounters {
+        &self.http
+    }
+
+    /// Next shard in rotation.
+    fn pick(&self) -> &Arc<AdmissionQueue> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        &self.shards[i]
+    }
+
+    /// Submit one request to the next shard in rotation and block for
+    /// its result.
+    pub fn submit(&self, request: SearchRequest) -> Result<SearchResponse, SearchError> {
+        self.pick().submit(request)
+    }
+
+    /// Submit a pre-formed batch to ONE shard (rotation picks which) and
+    /// block for all results. Keeping the batch on one shard preserves
+    /// [`AdmissionQueue::enqueue_all`]'s guarantee that its requests
+    /// occupy consecutive drain positions.
+    pub fn submit_batch(
+        &self,
+        requests: Vec<SearchRequest>,
+    ) -> Vec<Result<SearchResponse, SearchError>> {
+        self.pick().submit_batch(requests)
+    }
+
+    /// Fan one ingest batch out to EVERY shard and block until all have
+    /// applied it. The fan-out happens under one lock so concurrent
+    /// ingests reach every shard in the same order — deterministic
+    /// replicas stay replicas. All shards produce the same report (they
+    /// apply identical writes to identical state); the first failure, if
+    /// any, is returned instead.
+    pub fn submit_ingest(&self, docs: Vec<Publication>) -> Result<IngestReport, SearchError> {
+        let tickets: Vec<_> = {
+            let _order = self.ingest_lock.lock().unwrap();
+            self.shards.iter().map(|q| q.enqueue_ingest(docs.clone())).collect()
+        };
+        let mut report = None;
+        for ticket in tickets {
+            let r = ticket.wait()?;
+            if report.is_none() {
+                report = Some(r);
+            }
+        }
+        Ok(report.expect("at least one shard"))
+    }
+
+    /// Aggregate admission counters across every shard
+    /// (`largest_batch` takes the max, everything else sums).
+    pub fn stats(&self) -> QueueStats {
+        let mut total = QueueStats::default();
+        for q in &self.shards {
+            total.absorb(&q.stats());
+        }
+        total
+    }
+
+    /// Per-shard admission counters, in shard order.
+    pub fn per_shard_stats(&self) -> Vec<QueueStats> {
+        self.shards.iter().map(|q| q.stats()).collect()
+    }
+
+    /// Index health as published by shard 0's executor. Every shard is a
+    /// deterministic replica fed the same ingests in the same order, so
+    /// their health converges; shard 0 is the canonical reporter.
+    pub fn index_health(&self) -> Option<IndexHealth> {
+        self.shards[0].index_health()
+    }
+
+    /// Whether the shards still accept submissions (false once
+    /// [`ShardRouter::shutdown`] ran — shutdown closes every shard, so
+    /// shard 0 is representative).
+    pub fn is_open(&self) -> bool {
+        self.shards[0].is_open()
+    }
+
+    /// Close every shard's queue: new submissions are rejected typed,
+    /// pending rounds still drain.
+    pub fn shutdown(&self) {
+        for q in &self.shards {
+            q.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::queue::QueueConfig;
+    use std::time::Duration;
+
+    fn shards(n: usize) -> Vec<Arc<AdmissionQueue>> {
+        (0..n)
+            .map(|_| {
+                Arc::new(AdmissionQueue::new(QueueConfig {
+                    max_batch: 4,
+                    max_linger: Duration::ZERO,
+                    ..QueueConfig::default()
+                }))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_rotates_across_shards() {
+        let router = ShardRouter::new(shards(3));
+        // enqueue (non-blocking) via the rotation: 6 submissions land 2
+        // on each shard.
+        for i in 0..6 {
+            let _t = router.pick().enqueue(SearchRequest::new(format!("query {i}")));
+        }
+        for q in router.per_shard_stats() {
+            assert_eq!(q.submitted, 2, "rotation must spread evenly");
+        }
+    }
+
+    #[test]
+    fn aggregate_stats_sum_and_take_max() {
+        let router = ShardRouter::new(shards(2));
+        let _a = router.shard(0).enqueue(SearchRequest::new("a"));
+        let _b = router.shard(0).enqueue(SearchRequest::new("b"));
+        let _c = router.shard(1).enqueue(SearchRequest::new("c"));
+        router.shard(0).next_batch().expect("round of two");
+        router.shard(1).next_batch().expect("round of one");
+        let total = router.stats();
+        assert_eq!(total.submitted, 3);
+        assert_eq!(total.batches, 2);
+        assert_eq!(total.largest_batch, 2, "max, not sum");
+    }
+
+    #[test]
+    fn ingest_fans_out_to_every_shard() {
+        use crate::corpus::Publication;
+        let router = Arc::new(ShardRouter::new(shards(3)));
+        let docs = vec![Publication {
+            id: 1,
+            title: "fanned out".into(),
+            abstract_text: "every replica sees the write".into(),
+            authors: "A".into(),
+            venue: "T".into(),
+            year: 2026,
+        }];
+        let r = Arc::clone(&router);
+        let waiter = std::thread::spawn(move || r.submit_ingest(docs));
+        // Every shard must receive the batch; settle each so the fan-out
+        // waiter unblocks.
+        for i in 0..3 {
+            match router.shard(i).next_round() {
+                Some(crate::serve::queue::Round::Ingest(b)) => {
+                    assert_eq!(b.len(), 1);
+                    b.complete(Ok(crate::coordinator::IngestReport {
+                        accepted: 1,
+                        epoch: 9,
+                        ..Default::default()
+                    }));
+                }
+                _ => panic!("expected ingest round on shard {i}"),
+            }
+        }
+        let report = waiter.join().unwrap().expect("all shards settled");
+        assert_eq!(report.accepted, 1);
+        assert_eq!(report.epoch, 9);
+        for q in router.per_shard_stats() {
+            assert_eq!(q.ingest_batches, 1, "every shard must see the write");
+        }
+    }
+
+    #[test]
+    fn shutdown_closes_every_shard() {
+        let router = ShardRouter::new(shards(2));
+        assert!(router.is_open());
+        router.shutdown();
+        assert!(!router.is_open());
+        for i in 0..2 {
+            assert!(router.shard(i).submit(SearchRequest::new("late")).is_err());
+        }
+    }
+
+    #[test]
+    fn http_counters_track_connections_and_requests() {
+        let c = HttpCounters::default();
+        c.begin_connection();
+        c.begin_connection();
+        c.count_request(false);
+        c.count_request(true);
+        c.shed_connection();
+        c.end_connection();
+        let s = c.stats();
+        assert_eq!(s.accepted, 2);
+        assert_eq!(s.active, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.reused, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("accepted").unwrap().as_i64(), Some(2));
+        assert_eq!(j.get("reused").unwrap().as_i64(), Some(1));
+    }
+}

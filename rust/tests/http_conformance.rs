@@ -1,0 +1,376 @@
+//! HTTP/1.1 keep-alive protocol conformance, asserted over real
+//! sockets: pipelined back-to-back requests on one connection,
+//! `Connection: close` negotiation, dribbled header reads, malformed
+//! and oversized `Content-Length`, reuse-after-error semantics, and the
+//! shutdown drain-settle path for in-flight pipelined requests.
+//!
+//! CI runs this file as an explicit job step (see
+//! `.github/workflows/ci.yml`) together with the saturation and parity
+//! suites — the connection model is a release surface.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::GapsSystem;
+use gaps::serve::{HttpConfig, HttpServer, QueueConfig, SearchServer, ShutdownHandle};
+use gaps::util::json::Json;
+
+fn small_cfg() -> GapsConfig {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 400;
+    cfg.workload.sub_shards = 4;
+    cfg.search.use_xla = false;
+    cfg
+}
+
+/// A full serving stack on an ephemeral port, torn down on drop.
+struct TestStack {
+    addr: SocketAddr,
+    stopper: ShutdownHandle,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    server: Option<SearchServer>,
+}
+
+impl TestStack {
+    fn start() -> TestStack {
+        Self::start_with(HttpConfig::default())
+    }
+
+    fn start_with(http_cfg: HttpConfig) -> TestStack {
+        let cfg = small_cfg();
+        let queue_cfg = QueueConfig {
+            max_batch: 4,
+            max_linger: Duration::ZERO,
+            ..QueueConfig::default()
+        };
+        let server = SearchServer::start(queue_cfg, move || GapsSystem::deploy(cfg, 3)).unwrap();
+        let http = HttpServer::bind_with("127.0.0.1:0", server.router(), http_cfg).unwrap();
+        let addr = http.local_addr().unwrap();
+        let stopper = http.shutdown_handle().unwrap();
+        let accept_thread = std::thread::spawn(move || {
+            http.serve().unwrap();
+        });
+        TestStack { addr, stopper, accept_thread: Some(accept_thread), server: Some(server) }
+    }
+
+    fn router(&self) -> std::sync::Arc<gaps::serve::ShardRouter> {
+        self.server.as_ref().unwrap().router()
+    }
+}
+
+impl Drop for TestStack {
+    fn drop(&mut self) {
+        self.stopper.stop();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+        }
+    }
+}
+
+/// One parsed response off a persistent connection's buffered reader.
+struct Response {
+    status: u16,
+    /// Value of the `Connection` header ("keep-alive" or "close").
+    connection: String,
+    body: Json,
+}
+
+/// Read exactly one framed response (status line + headers +
+/// `Content-Length` body) and leave the reader positioned at the next
+/// one — the client half of pipelining.
+fn read_response(reader: &mut BufReader<TcpStream>) -> Response {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {line:?}"));
+    let mut content_length = 0usize;
+    let mut connection = String::new();
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).expect("header line");
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.parse().expect("numeric content-length");
+            } else if name.eq_ignore_ascii_case("connection") {
+                connection = value.to_string();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("body");
+    let body = Json::parse(std::str::from_utf8(&body).expect("utf-8 body")).expect("json body");
+    Response { status, connection, body }
+}
+
+/// A POST with no `Connection` header — HTTP/1.1 defaults to
+/// keep-alive.
+fn post(path: &str, body: &str) -> String {
+    format!(
+        "POST {path} HTTP/1.1\r\nHost: gaps-test\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Assert the connection yields EOF (clean close) with no extra bytes.
+fn expect_eof(reader: &mut BufReader<TcpStream>) {
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).expect("clean close, not a reset");
+    assert!(rest.is_empty(), "unexpected trailing bytes: {:?}", String::from_utf8_lossy(&rest));
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    let stack = TestStack::start();
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    // Three requests written back-to-back before reading any response.
+    let queries = ["grid computing", "data retrieval", "academic publications"];
+    let mut wire = String::new();
+    for q in queries {
+        wire.push_str(&post("/search", &format!(r#"{{"query": "{q}"}}"#)));
+    }
+    writer.write_all(wire.as_bytes()).expect("pipelined send");
+
+    // Responses come back in request order, each on the same socket.
+    for q in queries {
+        let resp = read_response(&mut reader);
+        assert_eq!(resp.status, 200, "{:?}", resp.body);
+        assert_eq!(resp.connection, "keep-alive");
+        assert_eq!(resp.body.get("query").unwrap().as_str(), Some(q), "answered out of order");
+    }
+}
+
+#[test]
+fn connection_close_is_honored() {
+    let stack = TestStack::start();
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    writer
+        .write_all(
+            b"GET /healthz HTTP/1.1\r\nHost: gaps-test\r\nConnection: close\r\n\r\n",
+        )
+        .expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.connection, "close", "the response must echo the client's close");
+    expect_eof(&mut reader);
+}
+
+#[test]
+fn keep_alive_reuses_one_socket() {
+    let stack = TestStack::start();
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    // Two sequential request/response round-trips on one socket.
+    for q in ["grid computing", "data retrieval"] {
+        writer
+            .write_all(post("/search", &format!(r#"{{"query": "{q}"}}"#)).as_bytes())
+            .expect("send");
+        let resp = read_response(&mut reader);
+        assert_eq!(resp.status, 200, "{:?}", resp.body);
+        assert_eq!(resp.connection, "keep-alive");
+    }
+
+    // The healthz counters (request 3 on the same socket) make the
+    // reuse observable: one accepted connection, three requests, two of
+    // them on an already-used socket.
+    writer
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: gaps-test\r\n\r\n")
+        .expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 200);
+    let http = resp.body.get("http").expect("connection counters");
+    assert_eq!(http.get("accepted").unwrap().as_i64(), Some(1));
+    assert_eq!(http.get("requests").unwrap().as_i64(), Some(3));
+    assert_eq!(http.get("reused").unwrap().as_i64(), Some(2));
+}
+
+#[test]
+fn dribbled_request_bytes_are_assembled() {
+    // A slow client delivering its request a few bytes at a time (well
+    // within the read timeout) must still be served — partial header
+    // reads may not be treated as malformed.
+    let stack = TestStack::start();
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    let wire = post("/search", r#"{"query": "grid computing"}"#);
+    for chunk in wire.as_bytes().chunks(7) {
+        writer.write_all(chunk).expect("dribble");
+        writer.flush().expect("flush");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 200, "{:?}", resp.body);
+    assert_eq!(resp.body.get("query").unwrap().as_str(), Some("grid computing"));
+}
+
+#[test]
+fn malformed_content_length_is_400_and_closes() {
+    let stack = TestStack::start();
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    writer
+        .write_all(b"POST /search HTTP/1.1\r\nHost: gaps-test\r\nContent-Length: soon\r\n\r\n")
+        .expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 400);
+    assert_eq!(resp.body.get("kind").unwrap().as_str(), Some("bad-request"));
+    assert_eq!(
+        resp.connection, "close",
+        "a framing error leaves the stream position unknown — must close"
+    );
+    expect_eof(&mut reader);
+}
+
+#[test]
+fn oversized_content_length_is_413_and_closes() {
+    let stack = TestStack::start();
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    // Rejected on the declared length alone — no body bytes are sent.
+    writer
+        .write_all(b"POST /search HTTP/1.1\r\nHost: gaps-test\r\nContent-Length: 2097152\r\n\r\n")
+        .expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 413);
+    assert_eq!(resp.connection, "close");
+    expect_eof(&mut reader);
+}
+
+#[test]
+fn application_errors_keep_the_connection_usable() {
+    // Framing errors close; *application* errors (unparseable JSON,
+    // unroutable path, a query the engine rejects) are complete framed
+    // responses — the socket stays usable for the next request.
+    let stack = TestStack::start();
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    writer.write_all(post("/search", "not json").as_bytes()).expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 400);
+    assert_eq!(resp.connection, "keep-alive", "a body-level 400 must not close");
+
+    writer.write_all(post("/nope", "{}").as_bytes()).expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 404);
+    assert_eq!(resp.connection, "keep-alive");
+
+    writer.write_all(post("/search", r#"{"query": "the of and"}"#).as_bytes()).expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 400, "typed parse error");
+    assert_eq!(resp.body.get("kind").unwrap().as_str(), Some("parse"));
+    assert_eq!(resp.connection, "keep-alive");
+
+    // After three errors, a good request on the same socket still works.
+    writer
+        .write_all(post("/search", r#"{"query": "grid computing"}"#).as_bytes())
+        .expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 200, "{:?}", resp.body);
+}
+
+#[test]
+fn keep_alive_off_closes_every_connection() {
+    let stack = TestStack::start_with(HttpConfig { keep_alive: false, ..HttpConfig::default() });
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    writer
+        .write_all(post("/search", r#"{"query": "grid computing"}"#).as_bytes())
+        .expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.connection, "close", "keep-alive off means one request per connection");
+    expect_eof(&mut reader);
+}
+
+#[test]
+fn shutdown_settles_pipelined_requests_typed() {
+    // Regression (admission shutdown vs live keep-alive connections):
+    // requests a client already pipelined onto a connection when the
+    // admission layer shuts down must each be *answered* — typed, as
+    // the retryable 503 the closed queue produces — and the connection
+    // must then close cleanly. Resetting the socket mid-pipeline would
+    // lose responses the client is entitled to.
+    let stack = TestStack::start();
+    stack.router().shutdown();
+
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    let mut wire = String::new();
+    wire.push_str(&post("/search", r#"{"query": "grid computing"}"#));
+    wire.push_str(&post("/search", r#"{"query": "data retrieval"}"#));
+    writer.write_all(wire.as_bytes()).expect("pipelined send");
+
+    let first = read_response(&mut reader);
+    assert_eq!(first.status, 503);
+    assert_eq!(first.body.get("kind").unwrap().as_str(), Some("unavailable"));
+    assert_eq!(
+        first.connection, "keep-alive",
+        "the second pipelined request is still buffered — not yet time to close"
+    );
+
+    let second = read_response(&mut reader);
+    assert_eq!(second.status, 503);
+    assert_eq!(second.body.get("kind").unwrap().as_str(), Some("unavailable"));
+    assert_eq!(
+        second.connection, "close",
+        "pipeline drained against a shut-down queue — the connection must settle and close"
+    );
+    expect_eof(&mut reader);
+}
+
+#[test]
+fn idle_keep_alive_connection_closes_quietly_on_timeout() {
+    // Between requests there is nothing to answer 408 to: an idle
+    // keep-alive connection that outlives the read timeout is closed
+    // with no response bytes at all.
+    let stack = TestStack::start_with(HttpConfig {
+        read_timeout: Duration::from_millis(150),
+        ..HttpConfig::default()
+    });
+    let stream = TcpStream::connect(stack.addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    writer
+        .write_all(post("/search", r#"{"query": "grid computing"}"#).as_bytes())
+        .expect("send");
+    let resp = read_response(&mut reader);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.connection, "keep-alive");
+
+    // Now go idle past the timeout: quiet close, not a 408.
+    expect_eof(&mut reader);
+}

@@ -44,7 +44,7 @@ impl TestStack {
         F: FnOnce() -> Result<GapsSystem, gaps::search::SearchError> + Send + 'static,
     {
         let server = SearchServer::start(queue_cfg, deploy).unwrap();
-        let http = HttpServer::bind_with("127.0.0.1:0", server.queue(), http_cfg).unwrap();
+        let http = HttpServer::bind_with("127.0.0.1:0", server.router(), http_cfg).unwrap();
         let addr = http.local_addr().unwrap();
         let stopper = http.shutdown_handle().unwrap();
         let accept_thread = std::thread::spawn(move || {
@@ -109,6 +109,15 @@ fn healthz_reports_queue_counters() {
     {
         assert!(queue.get(key).is_some(), "missing {key}");
     }
+    // Sharded serving surfaces per-shard admission counters and the
+    // HTTP front's connection counters next to the aggregate.
+    let shards = body.get("shards").expect("per-shard counters").as_arr().unwrap();
+    assert_eq!(shards.len(), 1, "single-shard stack");
+    assert!(shards[0].get("submitted").is_some());
+    let http_counters = body.get("http").expect("connection counters");
+    for key in ["accepted", "active", "shed", "requests", "reused"] {
+        assert!(http_counters.get(key).is_some(), "missing http.{key}");
+    }
 }
 
 /// Send raw bytes and read whatever response comes back (for requests
@@ -149,6 +158,7 @@ fn stalled_client_is_answered_408() {
     let http_cfg = HttpConfig {
         read_timeout: Duration::from_millis(150),
         write_timeout: Duration::from_millis(1000),
+        ..HttpConfig::default()
     };
     let stack = TestStack::start_with(QueueConfig::default(), http_cfg, move || {
         GapsSystem::deploy(cfg, 3)

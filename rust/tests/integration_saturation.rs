@@ -1,0 +1,235 @@
+//! Saturation behaviour of the bounded handler pool: when more
+//! connections arrive than `--handlers` can serve, the acceptor sheds
+//! the overflow with a complete, typed `503` + `Retry-After` response —
+//! it never hangs a client and never drops a connection silently — and
+//! the shed count is visible in `/healthz`. Once load drops, the
+//! handler slots free up and new connections are served again.
+//!
+//! CI runs this file as an explicit job step (see
+//! `.github/workflows/ci.yml`) together with the conformance and parity
+//! suites.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::GapsSystem;
+use gaps::serve::{HttpConfig, HttpServer, QueueConfig, SearchServer, ShutdownHandle};
+use gaps::util::json::Json;
+
+fn small_cfg() -> GapsConfig {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 400;
+    cfg.workload.sub_shards = 4;
+    cfg.search.use_xla = false;
+    cfg
+}
+
+/// A serving stack with a deliberately tiny handler pool.
+struct TestStack {
+    addr: SocketAddr,
+    stopper: ShutdownHandle,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    server: Option<SearchServer>,
+}
+
+impl TestStack {
+    fn start(handlers: usize) -> TestStack {
+        let cfg = small_cfg();
+        let queue_cfg = QueueConfig {
+            max_batch: 4,
+            max_linger: Duration::ZERO,
+            ..QueueConfig::default()
+        };
+        let http_cfg = HttpConfig { handlers, ..HttpConfig::default() };
+        let server = SearchServer::start(queue_cfg, move || GapsSystem::deploy(cfg, 3)).unwrap();
+        let http = HttpServer::bind_with("127.0.0.1:0", server.router(), http_cfg).unwrap();
+        let addr = http.local_addr().unwrap();
+        let stopper = http.shutdown_handle().unwrap();
+        let accept_thread = std::thread::spawn(move || {
+            http.serve().unwrap();
+        });
+        TestStack { addr, stopper, accept_thread: Some(accept_thread), server: Some(server) }
+    }
+}
+
+impl Drop for TestStack {
+    fn drop(&mut self) {
+        self.stopper.stop();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+        }
+    }
+}
+
+fn post(path: &str, body: &str) -> String {
+    format!(
+        "POST {path} HTTP/1.1\r\nHost: gaps-test\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Read one framed response (status + `Content-Length` body) off a
+/// persistent connection without consuming the stream to EOF.
+fn read_framed(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {line:?}"));
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).expect("header line");
+        if header.trim_end().is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.trim_end().split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().expect("numeric content-length");
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("body");
+    (status, Json::parse(std::str::from_utf8(&body).expect("utf-8")).expect("json body"))
+}
+
+/// Fetch `/healthz` on a fresh connection; `None` if this probe itself
+/// got shed (caller retries).
+fn try_healthz(addr: SocketAddr) -> Option<Json> {
+    let mut stream = TcpStream::connect(addr).ok()?;
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    stream
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: gaps-test\r\nConnection: close\r\n\r\n")
+        .ok()?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).ok()?;
+    if !raw.starts_with("HTTP/1.1 200 ") {
+        return None;
+    }
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b)?;
+    Json::parse(body).ok()
+}
+
+#[test]
+fn overflow_beyond_the_handler_pool_is_shed_typed() {
+    let handlers = 2;
+    let stack = TestStack::start(handlers);
+
+    // Occupy every handler slot: each holder completes one round-trip
+    // (proving its handler is engaged) and then keeps the connection
+    // open, so the keep-alive loop pins the handler thread.
+    let mut holders = Vec::new();
+    for i in 0..handlers {
+        let stream = TcpStream::connect(stack.addr).expect("connect holder");
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut writer = stream.try_clone().expect("clone");
+        let mut reader = BufReader::new(stream);
+        writer
+            .write_all(post("/search", &format!(r#"{{"query": "grid computing {i}"}}"#)).as_bytes())
+            .expect("holder send");
+        let (status, body) = read_framed(&mut reader);
+        assert_eq!(status, 200, "{body:?}");
+        holders.push((writer, reader));
+    }
+
+    // Every additional connection must be answered — completely and
+    // typed — not hung (the client read timeout turns a hang into a
+    // failure) and not reset (read_to_string returning Ok proves a
+    // clean close after a full response).
+    for i in 0..4 {
+        let mut stream = TcpStream::connect(stack.addr).expect("connect overflow");
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        stream
+            .write_all(post("/search", &format!(r#"{{"query": "overflow {i}"}}"#)).as_bytes())
+            .expect("overflow send");
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).expect("shed response must arrive, not hang");
+        assert!(raw.starts_with("HTTP/1.1 503 "), "{raw}");
+        assert!(raw.contains("Retry-After: 1"), "shed without retry hint: {raw}");
+        assert!(raw.contains("Connection: close"), "{raw}");
+        let body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap();
+        let body = Json::parse(body).expect("typed shed body");
+        assert_eq!(body.get("kind").unwrap().as_str(), Some("overloaded"));
+        assert!(body.get("retry_after_ms").is_some(), "{body:?}");
+    }
+
+    // Release the handler slots.
+    drop(holders);
+
+    // The pool recovers: /healthz is served again (possibly after a few
+    // sheds while the holders' handlers unwind), reports every shed,
+    // and shows no connection still active.
+    let mut health = None;
+    for _ in 0..250 {
+        if let Some(h) = try_healthz(stack.addr) {
+            let http = h.get("http").expect("connection counters");
+            if http.get("active").unwrap().as_i64() == Some(0) {
+                health = Some(h);
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let health = health.expect("handler pool never recovered after holders closed");
+    let http = health.get("http").unwrap();
+    assert!(
+        http.get("shed").unwrap().as_i64().unwrap() >= 4,
+        "shed connections must be counted: {http:?}"
+    );
+    assert!(http.get("accepted").unwrap().as_i64().unwrap() >= handlers as i64 + 1);
+
+    // And real work is served again, end to end.
+    let mut stream = TcpStream::connect(stack.addr).expect("connect after recovery");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(post("/search", r#"{"query": "grid computing"}"#).as_bytes())
+        .expect("send");
+    let (status, body) = read_framed(&mut reader);
+    assert_eq!(status, 200, "{body:?}");
+}
+
+#[test]
+fn shed_never_consumes_a_handler_slot() {
+    // Shedding happens inline on the acceptor: a burst of overflow
+    // connections must not starve the holders' in-flight keep-alive
+    // sessions, which keep answering throughout.
+    let stack = TestStack::start(1);
+
+    let stream = TcpStream::connect(stack.addr).expect("connect holder");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(post("/search", r#"{"query": "grid computing"}"#).as_bytes())
+        .expect("send");
+    assert_eq!(read_framed(&mut reader).0, 200);
+
+    // Burst of sheds while the single handler is pinned.
+    for _ in 0..3 {
+        let mut s = TcpStream::connect(stack.addr).expect("connect overflow");
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(post("/search", r#"{"query": "overflow"}"#).as_bytes()).expect("send");
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).expect("shed response");
+        assert!(raw.starts_with("HTTP/1.1 503 "), "{raw}");
+    }
+
+    // The pinned holder still works — sheds were absorbed by the
+    // acceptor, not by its handler.
+    writer
+        .write_all(post("/search", r#"{"query": "data retrieval"}"#).as_bytes())
+        .expect("send");
+    let (status, body) = read_framed(&mut reader);
+    assert_eq!(status, 200, "{body:?}");
+}

@@ -1,16 +1,22 @@
-//! Coalesced-vs-serial parity for the serving layer: requests submitted
-//! *concurrently* through the admission queue — and therefore executed
-//! in whatever coalesced rounds the queue forms — must return
-//! bit-identical hits, scores and counters to sequential
+//! Serving-vs-serial parity, now through the full sharded stack:
+//! requests submitted *concurrently* over real HTTP — routed
+//! round-robin across 1/2/4 executor shards, with keep-alive on or off,
+//! coalesced into whatever rounds each shard's admission queue forms —
+//! must return bit-identical hits, scores and counters to sequential
 //! `search_request` calls on an identical deployment, and error kinds
 //! must match for invalid requests.
 //!
-//! This extends `prop_batch_parity.rs` one layer up: that test pins
-//! `search_batch == serial`, this one pins `admission queue ==
-//! serial` *including* the queue's timing-dependent round formation —
-//! whatever rounds the linger window happens to form, results must not
-//! depend on them.
+//! This extends `prop_batch_parity.rs` two layers up: that test pins
+//! `search_batch == serial`; this one pins `sharded + pipelined
+//! serving == serial` *including* the queues' timing-dependent round
+//! formation and the router's shard assignment — whatever rounds form
+//! on whichever shard, results must not depend on them.
+//!
+//! CI runs this file as an explicit job step (see
+//! `.github/workflows/ci.yml`).
 
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::{Arc, Barrier, OnceLock};
 use std::time::Duration;
 
@@ -18,7 +24,8 @@ use gaps::config::GapsConfig;
 use gaps::coordinator::{Deployment, GapsSystem, SearchResponse};
 use gaps::metrics::sample_queries;
 use gaps::search::{Field, SearchError, SearchRequest};
-use gaps::serve::{QueueConfig, SearchServer};
+use gaps::serve::{HttpConfig, HttpServer, QueueConfig, SearchServer};
+use gaps::util::json::Json;
 use gaps::util::prop::{check, Config};
 use gaps::util::rng::Rng;
 
@@ -45,6 +52,8 @@ struct ServeCase {
     requests: Vec<SearchRequest>,
     max_batch: usize,
     linger_ms: u64,
+    shards: usize,
+    keep_alive: bool,
 }
 
 fn gen_request(rng: &mut Rng, pool: &[String]) -> SearchRequest {
@@ -53,7 +62,7 @@ fn gen_request(rng: &mut Rng, pool: &[String]) -> SearchRequest {
         query.push_str(" -zzzyqx");
     }
     if rng.chance(0.1) {
-        // Invalid inputs: the queue must ferry error parity too.
+        // Invalid inputs: the stack must ferry error parity too.
         query = ["", "the of and", "bogus:grid"][rng.range(0, 3)].to_string();
     }
     let mut req = SearchRequest::new(query);
@@ -82,21 +91,83 @@ fn gen_case(rng: &mut Rng, size: usize) -> ServeCase {
         // everything-in-one-round.
         max_batch: [1, 2, 3, 16][rng.range(0, 4)],
         linger_ms: [0, 1, 20][rng.range(0, 3)],
+        // Sweep the serving shapes too: shard counts and the connection
+        // model are not allowed to be observable in results.
+        shards: [1, 2, 4][rng.range(0, 3)],
+        keep_alive: rng.chance(0.5),
+    }
+}
+
+/// Read one framed response (status + `Content-Length` body) off a
+/// persistent connection without consuming the stream to EOF.
+fn read_framed(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {line:?}"));
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).expect("header line");
+        if header.trim_end().is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.trim_end().split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().expect("numeric content-length");
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("body");
+    (status, Json::parse(std::str::from_utf8(&body).expect("utf-8")).expect("json body"))
+}
+
+fn post_wire(req: &SearchRequest) -> String {
+    let body = req.to_json().to_string_compact();
+    format!(
+        "POST /search HTTP/1.1\r\nHost: gaps-test\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// One request over a fresh socket: no `Connection` header, so the
+/// server's keep-alive setting decides the connection's fate; the
+/// framed read works either way. Errors come back as the typed
+/// envelope's `kind`, comparable against [`SearchError::kind`].
+fn http_search(addr: SocketAddr, req: &SearchRequest) -> Result<SearchResponse, String> {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    writer.write_all(post_wire(req).as_bytes()).expect("send");
+    let (status, json) = read_framed(&mut reader);
+    if status == 200 {
+        Ok(SearchResponse::from_json(&json).expect("SearchResponse wire form"))
+    } else {
+        Err(json
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .unwrap_or_else(|| panic!("untyped error body {json:?}"))
+            .to_string())
     }
 }
 
 fn assert_same(
     i: usize,
     query: &str,
-    served: &Result<SearchResponse, SearchError>,
+    served: &Result<SearchResponse, String>,
     serial: Result<SearchResponse, SearchError>,
 ) -> Result<(), String> {
     match (served, serial) {
-        (Err(qe), Err(se)) => {
-            if qe.kind() != se.kind() {
+        (Err(kind), Err(se)) => {
+            if kind != se.kind() {
                 return Err(format!(
-                    "request {i} {query:?}: served error {} vs serial error {}",
-                    qe.kind(),
+                    "request {i} {query:?}: served error {kind} vs serial error {}",
                     se.kind()
                 ));
             }
@@ -104,8 +175,8 @@ fn assert_same(
         (Ok(_), Err(se)) => {
             return Err(format!("request {i} {query:?}: serial failed ({se}), served ok"));
         }
-        (Err(qe), Ok(_)) => {
-            return Err(format!("request {i} {query:?}: served failed ({qe}), serial ok"));
+        (Err(kind), Ok(_)) => {
+            return Err(format!("request {i} {query:?}: served failed ({kind}), serial ok"));
         }
         (Ok(q), Ok(s)) => {
             let ids_q: Vec<u64> = q.hits.iter().map(|h| h.global_id).collect();
@@ -141,73 +212,186 @@ fn assert_same(
 fn run_case(case: &ServeCase) -> Result<(), String> {
     let (dep, _) = fixture();
 
-    // Serving side: executor-owned system over the shared deployment.
+    // Serving side: N executor shards over the shared deployment,
+    // fronted by the real HTTP listener.
     let dep_for_server = Arc::clone(dep);
-    let server = SearchServer::start(
+    let server = SearchServer::start_sharded(
         QueueConfig {
             max_batch: case.max_batch,
             max_linger: Duration::from_millis(case.linger_ms),
             ..QueueConfig::default()
         },
-        move || GapsSystem::from_deployment(cfg(), dep_for_server),
+        case.shards,
+        move |_shard| GapsSystem::from_deployment(cfg(), Arc::clone(&dep_for_server)),
     )
     .map_err(|e| e.to_string())?;
+    let http = HttpServer::bind_with(
+        "127.0.0.1:0",
+        server.router(),
+        HttpConfig { keep_alive: case.keep_alive, ..HttpConfig::default() },
+    )
+    .map_err(|e| e.to_string())?;
+    let addr = http.local_addr().map_err(|e| e.to_string())?;
+    let stopper = http.shutdown_handle().map_err(|e| e.to_string())?;
+    let accept_thread = std::thread::spawn(move || http.serve().unwrap());
 
-    // Submit every request concurrently: all submitters release together
-    // so the linger window genuinely coalesces co-arrivals.
-    let queue = server.queue();
+    // One real socket per concurrent user: all release together so the
+    // linger windows genuinely coalesce co-arrivals.
     let barrier = Barrier::new(case.requests.len());
-    let mut served: Vec<Option<Result<SearchResponse, SearchError>>> =
+    let mut served: Vec<Option<Result<SearchResponse, String>>> =
         (0..case.requests.len()).map(|_| None).collect();
     std::thread::scope(|s| {
         for (req, slot) in case.requests.iter().zip(served.iter_mut()) {
-            let queue = &queue;
             let barrier = &barrier;
             s.spawn(move || {
                 barrier.wait();
-                *slot = Some(queue.submit(req.clone()));
+                *slot = Some(http_search(addr, req));
             });
         }
     });
     let stats = server.stats();
+    let per_shard = server.router().per_shard_stats();
+    let conns = server.router().http().stats();
+    stopper.stop();
+    accept_thread.join().map_err(|_| "accept thread panicked".to_string())?;
     server.shutdown();
 
-    // Serial oracle on an identical fresh system.
+    // Serial oracle on an identical fresh single system.
     let mut serial_sys =
         GapsSystem::from_deployment(cfg(), Arc::clone(dep)).map_err(|e| e.to_string())?;
     for (i, (req, served)) in case.requests.iter().zip(&served).enumerate() {
-        let served = served.as_ref().expect("every submitter settled");
+        let served = served.as_ref().expect("every client settled");
         assert_same(i, &req.query, served, serial_sys.search_request(req))?;
     }
 
-    // Accounting invariants (round shapes are timing-dependent, totals
-    // are not).
-    if stats.submitted != case.requests.len() as u64 {
-        return Err(format!(
-            "submitted {} != {} requests",
-            stats.submitted,
-            case.requests.len()
-        ));
+    // Accounting invariants (round shapes and shard assignment are
+    // timing-dependent, totals are not). `stats` is the absorbed
+    // cross-shard aggregate.
+    let n = case.requests.len() as u64;
+    if stats.submitted != n {
+        return Err(format!("submitted {} != {} requests", stats.submitted, n));
     }
     if stats.executed != stats.submitted {
         return Err(format!("executed {} != submitted {}", stats.executed, stats.submitted));
     }
-    if stats.largest_batch > case.max_batch as u64 {
-        return Err(format!(
-            "round of {} exceeded max_batch {}",
-            stats.largest_batch, case.max_batch
-        ));
+    if stats.shed != 0 || stats.expired != 0 {
+        return Err(format!("unexpected shed/expired under light load: {stats:?}"));
+    }
+    let split: u64 = per_shard.iter().map(|s| s.submitted).sum();
+    if split != n {
+        return Err(format!("per-shard submitted sums to {split}, not {n}"));
+    }
+    for (shard, s) in per_shard.iter().enumerate() {
+        if s.largest_batch > case.max_batch as u64 {
+            return Err(format!(
+                "shard {shard}: round of {} exceeded max_batch {}",
+                s.largest_batch, case.max_batch
+            ));
+        }
     }
     if case.max_batch == 1 && stats.coalesced != 0 {
         return Err(format!("max_batch=1 coalesced {} requests", stats.coalesced));
+    }
+    // Result-cache probes happen once per round member (single-flight
+    // attachments are answered without probing): the published counters
+    // can never exceed the executed total.
+    if stats.result_hits + stats.result_misses > stats.executed {
+        return Err(format!("cache probes exceed executions: {stats:?}"));
+    }
+    // Connection accounting: one connection and one request per user,
+    // nothing shed, nothing reused.
+    if conns.accepted != n || conns.requests != n || conns.reused != 0 || conns.shed != 0 {
+        return Err(format!("connection counters off for {n} one-shot users: {conns:?}"));
     }
     Ok(())
 }
 
 #[test]
-fn prop_coalesced_serving_matches_serial_execution() {
+fn prop_sharded_serving_matches_serial_execution() {
     let prop_cfg = Config { cases: 30, max_size: 9, ..Config::default() };
     check("serve-serial-parity", &prop_cfg, gen_case, run_case);
+}
+
+/// Deterministic shard-routing evidence: with strictly sequential
+/// round-trips on one keep-alive socket, the round-robin assignment is
+/// pinned (request `i` lands on shard `i % shards`), so each shard's
+/// *entire* counter block — admission totals, round shapes, plan-cache
+/// and result-cache counters — must be bit-identical to a single-shard
+/// oracle server fed exactly that shard's subsequence the same way.
+#[test]
+fn sequential_sharded_serving_pins_per_shard_counters() {
+    let (dep, pool) = fixture();
+    let shards = 2;
+    // Deliberate repeats so the shard-private result caches see hits:
+    // shard 0 serves pool[0], pool[2], pool[0], pool[4], pool[2] (two
+    // hits), shard 1 serves pool[1], pool[3], pool[1], pool[4], pool[5]
+    // (one hit — its pool[4] is a miss because the earlier pool[4]
+    // landed on shard 0's private cache).
+    let order = [0usize, 1, 2, 3, 0, 1, 4, 4, 2, 5];
+    let requests: Vec<SearchRequest> =
+        order.iter().map(|&i| SearchRequest::new(pool[i].clone())).collect();
+    let queue_cfg =
+        QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() };
+
+    let dep_for_server = Arc::clone(dep);
+    let server = SearchServer::start_sharded(queue_cfg, shards, move |_shard| {
+        GapsSystem::from_deployment(cfg(), Arc::clone(&dep_for_server))
+    })
+    .unwrap();
+    let http =
+        HttpServer::bind_with("127.0.0.1:0", server.router(), HttpConfig::default()).unwrap();
+    let addr = http.local_addr().unwrap();
+    let stopper = http.shutdown_handle().unwrap();
+    let accept_thread = std::thread::spawn(move || http.serve().unwrap());
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    let mut served = Vec::new();
+    for req in &requests {
+        writer.write_all(post_wire(req).as_bytes()).expect("send");
+        let (status, json) = read_framed(&mut reader);
+        assert_eq!(status, 200, "{json:?}");
+        served.push(SearchResponse::from_json(&json).expect("wire form"));
+    }
+    drop((writer, reader));
+
+    let per_shard = server.router().per_shard_stats();
+    stopper.stop();
+    accept_thread.join().unwrap();
+    server.shutdown();
+
+    for shard in 0..shards {
+        let dep_oracle = Arc::clone(dep);
+        let oracle = SearchServer::start(queue_cfg, move || {
+            GapsSystem::from_deployment(cfg(), dep_oracle)
+        })
+        .unwrap();
+        let queue = oracle.queue();
+        for (i, req) in requests.iter().enumerate() {
+            if i % shards != shard {
+                continue;
+            }
+            let want = queue.submit(req.clone()).expect("oracle success");
+            let got = &served[i];
+            let ids_got: Vec<u64> = got.hits.iter().map(|h| h.global_id).collect();
+            let ids_want: Vec<u64> = want.hits.iter().map(|h| h.global_id).collect();
+            assert_eq!(ids_got, ids_want, "request {i}");
+            for (hg, hw) in got.hits.iter().zip(&want.hits) {
+                assert_eq!(hg.score.to_bits(), hw.score.to_bits(), "request {i}");
+            }
+            assert_eq!(got.candidates, want.candidates, "request {i}");
+            assert_eq!(got.docs_scanned, want.docs_scanned, "request {i}");
+        }
+        let oracle_stats = oracle.stats();
+        oracle.shutdown();
+        assert_eq!(
+            per_shard[shard], oracle_stats,
+            "shard {shard}: counters diverged from the single-shard oracle"
+        );
+        assert!(oracle_stats.result_hits > 0, "repeats must hit the shard-private cache");
+    }
 }
 
 /// Deterministic coalescing evidence: with a generous linger window and
@@ -232,7 +416,7 @@ fn concurrent_users_are_observably_coalesced() {
         pool.iter().take(6).map(|q| SearchRequest::new(q.clone())).collect();
     let queue = server.queue();
     let barrier = Barrier::new(requests.len());
-    let mut served: Vec<Option<Result<SearchResponse, SearchError>>> =
+    let mut served: Vec<Option<Result<SearchResponse, String>>> =
         (0..requests.len()).map(|_| None).collect();
     std::thread::scope(|s| {
         for (req, slot) in requests.iter().zip(served.iter_mut()) {
@@ -240,7 +424,7 @@ fn concurrent_users_are_observably_coalesced() {
             let barrier = &barrier;
             s.spawn(move || {
                 barrier.wait();
-                *slot = Some(queue.submit(req.clone()));
+                *slot = Some(queue.submit(req.clone()).map_err(|e| e.kind().to_string()));
             });
         }
     });
