@@ -23,7 +23,11 @@
 //! * **serve** — multi-user closed-loop QPS: 8 concurrent users through
 //!   the admission queue (coalesced `search_batch` rounds on the
 //!   resident gridpool) vs a single closed-loop user, with the
-//!   admission counters (rounds formed, average/largest batch);
+//!   admission counters (rounds formed, average/largest batch) and a
+//!   histogram-sourced latency series: p50/p95/p99 interpolated
+//!   PromQL-style from the stack's own `gaps_request_seconds`
+//!   histogram — the same cells `GET /metrics` exposes — rather than a
+//!   bench-side stopwatch;
 //! * **cache** — fixed-seed zipfian repeat-query workload through the
 //!   serving stack: result-cache hit rate, hot-query p50 cached vs the
 //!   identical stack with the cache disabled, plan-cache counters, and
@@ -83,8 +87,9 @@ use gaps::fault::ChaosPlan;
 use gaps::corpus::{CorpusGenerator, CorpusSpec};
 use gaps::index::{RetrievalCounters, RetrievalScratch, Shard};
 use gaps::metrics::{cached_node_sweep, sample_queries};
+use gaps::obs::{Registry, SampleValue};
 use gaps::search::{Query, SearchRequest};
-use gaps::serve::{HttpConfig, HttpServer, QueueConfig, QueueStats, SearchServer};
+use gaps::serve::{HttpConfig, HttpServer, QueueConfig, QueueStats, SearchServer, ServeObs};
 use gaps::util::bench::Table;
 use gaps::util::json::Json;
 use gaps::util::rng::{Rng, Zipf};
@@ -482,6 +487,47 @@ fn bench_batch(cfg: &GapsConfig) -> Json {
     ])
 }
 
+/// Interpolate one quantile from cumulative histogram buckets, the way
+/// PromQL's `histogram_quantile` does: find the first bucket whose
+/// cumulative count covers the rank, then interpolate linearly inside
+/// it. Past the last finite bound, report that bound.
+fn histogram_quantile(q: f64, buckets: &[(f64, u64)], count: u64) -> f64 {
+    if count == 0 {
+        return 0.0;
+    }
+    let rank = q * count as f64;
+    let mut prev_bound = 0.0;
+    let mut prev_cum = 0u64;
+    for &(bound, cum) in buckets {
+        if cum as f64 >= rank {
+            let in_bucket = (cum - prev_cum) as f64;
+            let frac =
+                if in_bucket > 0.0 { (rank - prev_cum as f64) / in_bucket } else { 1.0 };
+            return prev_bound + (bound - prev_bound) * frac.clamp(0.0, 1.0);
+        }
+        prev_bound = bound;
+        prev_cum = cum;
+    }
+    buckets.last().map(|&(b, _)| b).unwrap_or(0.0)
+}
+
+/// p50/p95/p99 (seconds) of the server's end-to-end
+/// `gaps_request_seconds` histogram — the same series an operator gets
+/// from scraping `/metrics`, not a bench-side stopwatch.
+fn request_quantiles(registry: &Registry) -> [f64; 3] {
+    let fam = registry
+        .gather()
+        .into_iter()
+        .find(|f| f.name == "gaps_request_seconds")
+        .expect("request histogram registered");
+    match &fam.samples[0].value {
+        SampleValue::Histogram { buckets, count, .. } => {
+            [0.50, 0.95, 0.99].map(|q| histogram_quantile(q, buckets, *count))
+        }
+        other => panic!("gaps_request_seconds is not a histogram: {other:?}"),
+    }
+}
+
 /// Multi-user closed-loop serving: U concurrent users, each looping over
 /// the query mix and submitting single-query requests through the
 /// admission queue (the executor coalesces co-arrivals into
@@ -504,16 +550,21 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
     assert!(!queries.is_empty(), "no usable serve queries sampled");
     let rounds = 3usize;
 
-    let run = |users: usize| -> (f64, QueueStats) {
+    let run = |users: usize| -> (f64, QueueStats, [f64; 3]) {
         let mut c = cfg.clone();
         c.search.use_xla = false;
         let dep = Arc::clone(&dep);
         // Zero linger: closed-loop users coalesce *naturally* (arrivals
         // queue up while the executor runs the previous round), and the
         // solo baseline is not taxed with idle linger latency.
-        let server = SearchServer::start(
+        // Observability on: the latency series below is read back from
+        // the same `gaps_request_seconds` histogram `/metrics` exposes.
+        let obs = ServeObs::default();
+        let server = SearchServer::start_sharded_with_obs(
             QueueConfig { max_batch: 16, max_linger: Duration::ZERO, ..QueueConfig::default() },
-            move || GapsSystem::from_deployment(c, dep),
+            1,
+            obs.clone(),
+            move |_shard| GapsSystem::from_deployment(c.clone(), Arc::clone(&dep)),
         )
         .expect("serve start");
         let queue = server.queue();
@@ -543,6 +594,9 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
         });
         let elapsed = t.elapsed().as_secs_f64();
         let total = server.stats();
+        // Histogram-derived latency (includes the one warm-up sample —
+        // noise at these request counts).
+        let quantiles = request_quantiles(&obs.registry);
         server.shutdown();
         let stats = QueueStats {
             submitted: total.submitted - warm.submitted,
@@ -563,19 +617,21 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
             result_evicted: total.result_evicted - warm.result_evicted,
             result_invalidated: total.result_invalidated - warm.result_invalidated,
         };
-        ((users * rounds * queries.len()) as f64 / elapsed.max(1e-12), stats)
+        ((users * rounds * queries.len()) as f64 / elapsed.max(1e-12), stats, quantiles)
     };
 
-    let (solo_qps, _) = run(1);
+    let (solo_qps, _, solo_lat) = run(1);
     let users = 8usize;
-    let (multi_qps, stats) = run(users);
+    let (multi_qps, stats, multi_lat) = run(users);
     let avg_batch = stats.executed as f64 / stats.batches.max(1) as f64;
     println!(
         "\n== multi-user serving ({} queries x {rounds} rounds, {nodes} nodes) ==\n\
          1 user   {solo_qps:8.1} qps\n\
          {users} users  {multi_qps:8.1} qps  (x{:.2})\n\
          admission: {} rounds for {} requests (avg batch {avg_batch:.1}, \
-         largest {}, {} coalesced, {} single-flight; {} result-cache hits)",
+         largest {}, {} coalesced, {} single-flight; {} result-cache hits)\n\
+         latency from gaps_request_seconds (p50/p95/p99 ms): \
+         1 user {:.2}/{:.2}/{:.2}, {users} users {:.2}/{:.2}/{:.2}",
         queries.len(),
         multi_qps / solo_qps.max(1e-12),
         stats.batches,
@@ -584,7 +640,21 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
         stats.coalesced,
         stats.singleflight,
         stats.result_hits,
+        solo_lat[0] * 1e3,
+        solo_lat[1] * 1e3,
+        solo_lat[2] * 1e3,
+        multi_lat[0] * 1e3,
+        multi_lat[1] * 1e3,
+        multi_lat[2] * 1e3,
     );
+
+    let lat_json = |lat: [f64; 3]| {
+        Json::obj(vec![
+            ("p50_ms", Json::from(lat[0] * 1e3)),
+            ("p95_ms", Json::from(lat[1] * 1e3)),
+            ("p99_ms", Json::from(lat[2] * 1e3)),
+        ])
+    };
 
     Json::obj(vec![
         ("nodes", Json::from(nodes)),
@@ -601,6 +671,8 @@ fn bench_serve(cfg: &GapsConfig) -> Json {
         ("coalesced", Json::from(stats.coalesced)),
         ("singleflight", Json::from(stats.singleflight)),
         ("result_hits", Json::from(stats.result_hits)),
+        ("solo_latency", lat_json(solo_lat)),
+        ("multi_latency", lat_json(multi_lat)),
     ])
 }
 

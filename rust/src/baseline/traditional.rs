@@ -211,6 +211,7 @@ impl TraditionalSearch {
                 .collect(),
             counters: total_counters,
             epoch: 0, // the traditional baseline never ingests
+            stages: None, // only the GAPS path is traced
         });
         Ok(SearchResponse {
             query: request.query.clone(),
@@ -222,6 +223,7 @@ impl TraditionalSearch {
             degraded: false,
             missing_sources: Vec::new(),
             explain,
+            trace: None,
         })
     }
 }

@@ -276,6 +276,30 @@ impl Default for ServeConfig {
     }
 }
 
+/// Observability knobs (the `obs` config section): slow-query logging
+/// thresholds for the serving layer. The metrics registry and request
+/// tracing have no knobs — they are always on and provably zero-impact
+/// on results (see `tests/prop_serve_parity.rs`).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Requests whose end-to-end time (arrival -> settled) meets or
+    /// exceeds this many milliseconds are recorded in the slow-query
+    /// ring buffer (`GET /debug/slow`).
+    pub slow_query_ms: u64,
+    /// Slow-query ring capacity, in entries (oldest evicted; clamped
+    /// to >= 1).
+    pub slow_log_capacity: usize,
+    /// Also append each slow-query entry as one JSONL line to this
+    /// file (`--slow-log FILE`). Empty = ring buffer only.
+    pub slow_log_file: String,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { slow_query_ms: 500, slow_log_capacity: 128, slow_log_file: String::new() }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone, Default)]
 pub struct GapsConfig {
@@ -285,6 +309,7 @@ pub struct GapsConfig {
     pub storage: StorageConfig,
     pub cache: CacheConfig,
     pub serve: ServeConfig,
+    pub obs: ObsConfig,
 }
 
 impl GapsConfig {
@@ -302,6 +327,7 @@ impl GapsConfig {
                 "storage" => apply_section(body, |k, v| self.set_storage(k, v))?,
                 "cache" => apply_section(body, |k, v| self.set_cache(k, v))?,
                 "serve" => apply_section(body, |k, v| self.set_serve(k, v))?,
+                "obs" => apply_section(body, |k, v| self.set_obs(k, v))?,
                 other => return Err(CliError(format!("unknown config section '{other}'"))),
             }
         }
@@ -423,6 +449,22 @@ impl GapsConfig {
         Ok(())
     }
 
+    fn set_obs(&mut self, key: &str, v: &Json) -> Result<(), CliError> {
+        let o = &mut self.obs;
+        match key {
+            "slow_query_ms" => o.slow_query_ms = as_usize(key, v)? as u64,
+            "slow_log_capacity" => o.slow_log_capacity = as_usize(key, v)?,
+            "slow_log_file" => {
+                o.slow_log_file = v
+                    .as_str()
+                    .ok_or_else(|| CliError(format!("obs.{key} must be a string")))?
+                    .to_string()
+            }
+            _ => return Err(CliError(format!("unknown obs key '{key}'"))),
+        }
+        Ok(())
+    }
+
     /// Apply CLI flag overrides (flat names; see README "Configuration").
     pub fn apply_args(&mut self, args: &Args) -> Result<(), CliError> {
         if let Some(path) = args.get("config") {
@@ -480,6 +522,12 @@ impl GapsConfig {
         if let Some(v) = args.get("keep-alive") {
             sv.keep_alive = parse_on_off("keep-alive", v)?;
         }
+        let o = &mut self.obs;
+        o.slow_query_ms = args.get_parse("slow-query-ms", o.slow_query_ms)?;
+        o.slow_log_capacity = args.get_parse("slow-log-capacity", o.slow_log_capacity)?;
+        if let Some(path) = args.get("slow-log") {
+            o.slow_log_file = path.to_string();
+        }
         Ok(())
     }
 
@@ -493,7 +541,8 @@ impl GapsConfig {
              storage: snapshot_dir={} seal_docs={} merge_fanout={}\n\
              cache: enabled={} plan_capacity={} result_capacity={} result_shards={}\n\
              serve: handlers={} shards={} keep_alive={} max_batch={} linger_ms={} \
-             max_depth={} read_timeout_ms={}",
+             max_depth={} read_timeout_ms={}\n\
+             obs: slow_query_ms={} slow_log_capacity={} slow_log={}",
             self.grid.num_vos,
             self.grid.nodes_per_vo,
             self.grid.speed_min,
@@ -526,6 +575,9 @@ impl GapsConfig {
             self.serve.linger_ms,
             self.serve.max_depth,
             self.serve.read_timeout_ms,
+            self.obs.slow_query_ms,
+            self.obs.slow_log_capacity,
+            if self.obs.slow_log_file.is_empty() { "-" } else { &self.obs.slow_log_file },
         )
     }
 }
@@ -819,11 +871,54 @@ mod tests {
     }
 
     #[test]
+    fn obs_knobs_parse() {
+        let mut c = GapsConfig::default();
+        assert_eq!(c.obs.slow_query_ms, 500);
+        assert_eq!(c.obs.slow_log_capacity, 128);
+        assert!(c.obs.slow_log_file.is_empty());
+        c.apply_json(
+            &Json::parse(
+                r#"{"obs": {"slow_query_ms": 50, "slow_log_capacity": 16,
+                     "slow_log_file": "/tmp/slow.jsonl"}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.obs.slow_query_ms, 50);
+        assert_eq!(c.obs.slow_log_capacity, 16);
+        assert_eq!(c.obs.slow_log_file, "/tmp/slow.jsonl");
+        // Unknown obs keys are typos, not silently ignored.
+        assert!(c.apply_json(&Json::parse(r#"{"obs": {"slowquery": 1}}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn obs_cli_flags_apply() {
+        let mut c = GapsConfig::default();
+        let toks: Vec<String> = [
+            "--slow-query-ms",
+            "25",
+            "--slow-log-capacity",
+            "8",
+            "--slow-log",
+            "/tmp/slow2.jsonl",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&toks, false, &[]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.obs.slow_query_ms, 25);
+        assert_eq!(c.obs.slow_log_capacity, 8);
+        assert_eq!(c.obs.slow_log_file, "/tmp/slow2.jsonl");
+    }
+
+    #[test]
     fn describe_mentions_key_facts() {
         let d = GapsConfig::default().describe();
         assert!(d.contains("3 VOs"));
         assert!(d.contains("perf-history"));
         assert!(d.contains("handlers=32"));
         assert!(d.contains("shards=1"));
+        assert!(d.contains("slow_query_ms=500"));
     }
 }

@@ -46,6 +46,7 @@ use crate::corpus::{CorpusGenerator, CorpusSpec, Publication};
 use crate::fault::{ChaosPlan, FaultDecision, FaultInjector};
 use crate::grid::{GridFabric, NodeId};
 use crate::index::{GlobalStats, RetrievalCounters, Shard, ShardStats};
+use crate::obs::TraceSpan;
 use crate::storage::{
     merge_shards, read_shard_snapshot, write_shard_snapshot, ManifestOverlay, ManifestSource,
     SnapshotManifest,
@@ -232,7 +233,7 @@ pub struct Hit {
 /// `explain(true)`: the parsed AST, the scored terms, the execution
 /// plan the batch ran under, and the aggregated retrieval work counters
 /// (block-max pruning effectiveness) for this query across every shard.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Explain {
     /// Canonical rendering of the parsed boolean tree.
     pub ast: String,
@@ -249,11 +250,31 @@ pub struct Explain {
     /// deployment. Lets clients (and a future result cache) detect that
     /// the searchable corpus changed between two responses.
     pub epoch: u64,
+    /// Per-stage monotonic timings for this request's fan-out round
+    /// (compile / plan / execute+jobs / merge). Absent in wire forms
+    /// produced before tracing existed.
+    pub stages: Option<TraceSpan>,
+}
+
+/// Equality deliberately ignores `stages`: timings are measured per
+/// execution and never reproduce, while everything else is a
+/// deterministic function of the query and the index (the cache-parity
+/// suites compare whole `Explain`s between a cached response and a
+/// fresh oracle run).
+impl PartialEq for Explain {
+    fn eq(&self, other: &Explain) -> bool {
+        self.ast == other.ast
+            && self.keywords == other.keywords
+            && self.batch_size == other.batch_size
+            && self.plan == other.plan
+            && self.counters == other.counters
+            && self.epoch == other.epoch
+    }
 }
 
 impl Explain {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut out = Json::obj(vec![
             ("ast", Json::str(&self.ast)),
             ("keywords", Json::Arr(self.keywords.iter().map(|k| Json::str(k.clone())).collect())),
             ("batch_size", Json::from(self.batch_size)),
@@ -268,7 +289,13 @@ impl Explain {
             ),
             ("counters", counters_to_json(&self.counters)),
             ("epoch", Json::from(self.epoch)),
-        ])
+        ]);
+        if let Some(s) = &self.stages {
+            if let Json::Obj(map) = &mut out {
+                map.insert("stages".to_string(), s.to_json());
+            }
+        }
+        out
     }
 
     fn from_json(v: &Json) -> Option<Explain> {
@@ -293,6 +320,9 @@ impl Explain {
             counters: counters_from_json(v.get("counters")?)?,
             // Absent in pre-persistence wire forms: default to epoch 0.
             epoch: v.get("epoch").and_then(Json::as_i64).unwrap_or(0) as u64,
+            // Absent in pre-tracing wire forms (and in cached entries
+            // stored before the upgrade): tolerated as None.
+            stages: v.get("stages").and_then(TraceSpan::from_json),
         })
     }
 }
@@ -343,6 +373,12 @@ pub struct SearchResponse {
     pub missing_sources: Vec<u32>,
     /// Plan/AST diagnostics (present when the request set `explain`).
     pub explain: Option<Explain>,
+    /// Stage-timing tree for this request's fan-out round. Always
+    /// populated by a live execution regardless of `explain`; not part
+    /// of the JSON wire form (the serving layer consumes it for
+    /// histograms and the slow-query log, and surfaces it to clients
+    /// only through `explain.stages`).
+    pub trace: Option<TraceSpan>,
 }
 
 impl SearchResponse {
@@ -437,6 +473,8 @@ impl SearchResponse {
                 Some(e) => Some(Explain::from_json(e)?),
                 None => None,
             },
+            // Process-local diagnostic; never crosses the wire.
+            trace: None,
         })
     }
 }
@@ -454,6 +492,9 @@ struct JobOutput {
     work_measured: f64,
     /// Docs in the job's sources (scanned once *per query*).
     docs: u64,
+    /// Monotonic wall seconds this job spent executing (fault delays
+    /// included) — the `job` span duration in the request trace.
+    wall_s: f64,
 }
 
 /// Execute one job's search work over its sources for the whole query
@@ -482,6 +523,7 @@ fn run_job(
     scorer: &mut Scorer<'_>,
     faults: Option<&FaultInjector>,
 ) -> Result<JobOutput, SearchError> {
+    let job_clock = WallClock::start();
     let decision = faults.map_or(FaultDecision::Proceed, |f| f.decide(job.node));
     match decision {
         FaultDecision::CrashBefore => {
@@ -538,7 +580,14 @@ fn run_job(
         .zip(queries)
         .map(|(lists, (_, top_k))| merge_topk(&lists, *top_k))
         .collect();
-    Ok(JobOutput { per_query_hits, per_query_candidates, per_query_counters, work_measured, docs })
+    Ok(JobOutput {
+        per_query_hits,
+        per_query_candidates,
+        per_query_counters,
+        work_measured,
+        docs,
+        wall_s: job_clock.elapsed_s(),
+    })
 }
 
 /// Counters for the fault-tolerance machinery: how often jobs failed
@@ -1415,6 +1464,9 @@ impl GapsSystem {
         started: Instant,
     ) -> Result<Vec<SearchResponse>, SearchError> {
         let nq = compiled.len();
+        // Trace clock for this group's round: everything after compile
+        // (plan, fan-out, merges) happens inside this window.
+        let group_clock = WallClock::start();
         // Group invariants (the batch grouping keys on these).
         let allow_partial = compiled[0].allow_partial;
         let deadline = compiled[0].deadline_ms;
@@ -1433,6 +1485,12 @@ impl GapsSystem {
         let mut done: Vec<(u32, JobDescription, f64, JobOutput)> = Vec::new();
         let mut last_err: Option<SearchError> = None;
         let mut plan_s = 0.0f64;
+        // Wall time spent inside the fan-out rounds (all attempts) and
+        // inside the VO/root merges — the `execute` and `merge` stage
+        // spans of the request trace.
+        let mut execute_s = 0.0f64;
+        let mut merge_s = 0.0f64;
+        let mut job_spans: Vec<TraceSpan> = Vec::new();
         // Simulated backoff between failover attempts (accounted on the
         // root timeline, not slept).
         let mut retry_backoff_s = 0.0f64;
@@ -1533,6 +1591,7 @@ impl GapsSystem {
             let stats: &GlobalStats =
                 self.ingest.live_stats.as_ref().unwrap_or(&self.dep.stats);
             let overlays = &self.ingest.overlays;
+            let fanout_clock = WallClock::start();
             let outcomes: Vec<Result<JobOutput, SearchError>> =
                 match (self.executor.as_mut(), self.pool.as_ref()) {
                     (Some(exec), _) => {
@@ -1580,6 +1639,7 @@ impl GapsSystem {
                         outs
                     }
                 };
+            execute_s += fanout_clock.elapsed_s();
 
             // ---- Triage outcomes: keep successes, refill `pending` ----
             let mut retry: Vec<u32> = Vec::new();
@@ -1587,7 +1647,24 @@ impl GapsSystem {
                 flat.into_iter().zip(startups).zip(outcomes)
             {
                 match outcome {
-                    Ok(out) => done.push((vo, job, startup_s, out)),
+                    Ok(out) => {
+                        // One `job` child span per completed per-node
+                        // job, carrying its aggregated retrieval
+                        // counters across the batch.
+                        let mut agg = RetrievalCounters::default();
+                        for c in &out.per_query_counters {
+                            agg.merge(c);
+                        }
+                        job_spans.push(
+                            TraceSpan::new("job", out.wall_s)
+                                .with_meta("node", job.node.to_string())
+                                .with_meta("sources", job.sources.len().to_string())
+                                .with_meta("postings_touched", agg.postings_touched.to_string())
+                                .with_meta("blocks_skipped", agg.blocks_skipped.to_string())
+                                .with_meta("candidates", agg.candidates_emitted.to_string()),
+                        );
+                        done.push((vo, job, startup_s, out));
+                    }
                     Err(e) => {
                         self.fstats.jobs_failed += 1;
                         self.fstats.nodes_marked_down += 1;
@@ -1708,7 +1785,9 @@ impl GapsSystem {
                 reply_hits += merged.len();
                 vo_lists[qi].push(merged);
             }
-            vo_tl.work_s += merge_clock.elapsed_s();
+            let vo_merge_s = merge_clock.elapsed_s();
+            merge_s += vo_merge_s;
+            vo_tl.work_s += vo_merge_s;
             vo_tl.net_s +=
                 net.transfer_between_s(&vo_broker_info, &root_info, result_wire_bytes(reply_hits));
             vo_timelines.push(vo_tl);
@@ -1738,7 +1817,30 @@ impl GapsSystem {
             .enumerate()
             .map(|(qi, lists)| merge_topk(&lists, compiled[qi].top_k))
             .collect();
-        timeline.work_s += merge_clock.elapsed_s();
+        let root_merge_s = merge_clock.elapsed_s();
+        merge_s += root_merge_s;
+        timeline.work_s += root_merge_s;
+
+        // ---- Request trace: stage spans for this group's round --------
+        // The root `search` span covers compile (measured upstream in
+        // `search_batch`, attributed proportionally) plus everything the
+        // group clock saw. Sequential children (compile, plan, execute,
+        // merge) occupy disjoint windows, so they each fit under the
+        // root and sum to at most its duration; `job` children of
+        // `execute` ran in parallel, so each fits the window but their
+        // sum may exceed it (see `obs::trace` docs).
+        let mut execute_span = TraceSpan::new("execute", execute_s);
+        for js in job_spans {
+            execute_span.push_child(js);
+        }
+        let mut search_span = TraceSpan::new("search", compile_s + group_clock.elapsed_s())
+            .with_meta("batch_size", nq.to_string())
+            .with_meta("jobs", jobs_done.to_string())
+            .with_meta("epoch", self.ingest.epoch.to_string());
+        search_span.push_child(TraceSpan::new("compile", compile_s));
+        search_span.push_child(TraceSpan::new("plan", plan_s));
+        search_span.push_child(execute_span);
+        search_span.push_child(TraceSpan::new("merge", merge_s));
 
         // ---- Materialize responses ------------------------------------
         let docs_per_query = total_docs; // every query scans every job's sources
@@ -1765,6 +1867,7 @@ impl GapsSystem {
                 plan: plan_view.clone(),
                 counters: total_counters[qi],
                 epoch: self.ingest.epoch,
+                stages: Some(search_span.clone()),
             });
             responses.push(SearchResponse {
                 query: requests[qi].query.clone(),
@@ -1776,6 +1879,7 @@ impl GapsSystem {
                 degraded,
                 missing_sources: missing.clone(),
                 explain,
+                trace: Some(search_span.clone()),
             });
         }
         Ok(responses)

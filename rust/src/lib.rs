@@ -98,6 +98,7 @@ pub mod coordinator;
 pub mod corpus;
 pub mod fault;
 pub mod grid;
+pub mod obs;
 pub mod runtime;
 pub mod search;
 pub mod index;

@@ -9,8 +9,11 @@
 //! * `serve`             — multi-user keep-alive HTTP front-end over
 //!   sharded admission queues (`--addr`, `--handlers`, `--shards`,
 //!   `--keep-alive on|off`, `--max-batch`, `--linger-ms`, `--max-depth`,
-//!   `--read-timeout-ms`; see `gaps::serve`). `POST /ingest` feeds the
-//!   live-ingestion lane (fanned out to every shard).
+//!   `--read-timeout-ms`, `--slow-query-ms`, `--slow-log-capacity`,
+//!   `--slow-log`; see `gaps::serve`). `POST /ingest` feeds the
+//!   live-ingestion lane (fanned out to every shard); `GET /metrics`
+//!   exposes the Prometheus-text metrics registry and `GET /debug/slow`
+//!   the slow-query ring.
 //! * `sweep`             — the paper's node sweep (Figs 3/4/5 series).
 //! * `corpus`            — generate a corpus and save shard JSONL files.
 //! * `snapshot`          — deploy and write a binary index snapshot
@@ -78,7 +81,8 @@ fn print_usage() {
                                \" / \" separates a batch, --explain shows AST + plan\n\
            repl                interactive USI session\n\
            serve               keep-alive HTTP front-end (POST /search,\n\
-                               POST /search_batch, POST /ingest, GET /healthz) over\n\
+                               POST /search_batch, POST /ingest, GET /healthz,\n\
+                               GET /metrics — Prometheus text, GET /debug/slow) over\n\
                                sharded admission queues that coalesce concurrent\n\
                                queries; --addr HOST:PORT (default 127.0.0.1:7171),\n\
                                --handlers N (bounded handler pool; overflow is shed\n\
@@ -86,7 +90,10 @@ fn print_usage() {
                                replicas, round-robin), --keep-alive on|off,\n\
                                --max-batch N, --linger-ms N, --max-depth N (shed\n\
                                beyond it, 503 + Retry-After),\n\
-                               --read-timeout-ms N (stalled clients get 408)\n\
+                               --read-timeout-ms N (stalled clients get 408),\n\
+                               --slow-query-ms N (threshold for the slow-query\n\
+                               ring at GET /debug/slow), --slow-log-capacity N,\n\
+                               --slow-log FILE (mirror slow queries as JSONL)\n\
            sweep               node sweep: response time / speedup / efficiency\n\
            corpus --out DIR    generate the corpus as shard JSONL files\n\
            snapshot --out DIR  deploy and write a binary index snapshot (shards,\n\
@@ -208,16 +215,17 @@ fn cmd_serve(args: &Args, cfg: GapsConfig) -> Result<()> {
     // and shared (replicas are cheap views over one deployment); on the
     // snapshot path every shard loads the same on-disk snapshot, which
     // is deterministic, so the replicas still match bit-for-bit.
+    let obs = gaps::serve::ServeObs::from_config(&cfg.obs);
     let server = if cfg.storage.snapshot_dir.is_empty() {
         let cfg_f = cfg.clone();
         let dep = std::sync::Arc::new(gaps::coordinator::Deployment::build(&cfg, n)?);
-        gaps::serve::SearchServer::start_sharded(queue_cfg, shards, move |_shard| {
+        gaps::serve::SearchServer::start_sharded_with_obs(queue_cfg, shards, obs, move |_shard| {
             GapsSystem::from_deployment(cfg_f.clone(), std::sync::Arc::clone(&dep))
         })?
     } else {
         let cfg_f = cfg.clone();
         eprintln!("booting from snapshot {}", cfg.storage.snapshot_dir);
-        gaps::serve::SearchServer::start_sharded(queue_cfg, shards, move |_shard| {
+        gaps::serve::SearchServer::start_sharded_with_obs(queue_cfg, shards, obs, move |_shard| {
             let dir = std::path::PathBuf::from(&cfg_f.storage.snapshot_dir);
             GapsSystem::deploy_from_snapshot(cfg_f.clone(), n, &dir)
         })?
@@ -225,7 +233,8 @@ fn cmd_serve(args: &Args, cfg: GapsConfig) -> Result<()> {
     let http = gaps::serve::HttpServer::bind_with(&addr, server.router(), http_cfg)
         .with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "serving on http://{} — POST /search, POST /search_batch, POST /ingest, GET /healthz",
+        "serving on http://{} — POST /search, POST /search_batch, POST /ingest, \
+         GET /healthz, GET /metrics, GET /debug/slow",
         http.local_addr()?
     );
     http.serve()?; // blocks until killed

@@ -1,0 +1,35 @@
+//! Observability: unified metrics registry, per-request trace spans,
+//! and the slow-query log.
+//!
+//! The grid-resource-discovery literature the source paper builds on
+//! (arXiv 1110.1685, 1703.03607) stresses that grid systems live or
+//! die by visibility into per-node latency and load; this module is
+//! that visibility layer for GAPS, in three pieces:
+//!
+//! * [`Registry`] — named counters, gauges, and fixed-bucket latency
+//!   histograms behind one consistency gate, rendered in Prometheus
+//!   text exposition format by `GET /metrics`. The serving layer's
+//!   previously scattered counters (`QueueStats`, `HttpStats`, cache
+//!   hit/miss, `IndexHealth` gauges, failover totals) are registry
+//!   cells, so `/healthz` and `/metrics` are two renderings of the
+//!   same point-in-time snapshot.
+//! * [`TraceSpan`] — a per-request stage-timing tree threaded through
+//!   admission, planning, fan-out, and merge, surfaced via
+//!   `Explain.stages` (wire-compatible: absent unless requested).
+//! * [`SlowLog`] — a bounded ring of structured JSONL entries for
+//!   requests over `obs.slow_query_ms`, exposed at `GET /debug/slow`
+//!   and optionally appended to `--slow-log FILE`.
+//!
+//! Everything is hand-rolled on `std` only — the same zero-dependency
+//! discipline as `serve::http`.
+
+pub mod registry;
+pub mod slow;
+pub mod trace;
+
+pub use registry::{
+    Counter, FamilySnapshot, Freeze, Gauge, Histogram, MetricKind, Registry, Sample, SampleValue,
+    LATENCY_BOUNDS_S,
+};
+pub use slow::{SlowEntry, SlowLog};
+pub use trace::TraceSpan;

@@ -1,0 +1,641 @@
+//! Unified metrics registry: named counters, gauges, and fixed-bucket
+//! latency histograms with Prometheus text exposition.
+//!
+//! Hand-rolled with the same zero-dependency discipline as
+//! `serve::http`: cells are plain atomics, families live in a
+//! `BTreeMap` so exposition order is stable, and there is no
+//! background thread.
+//!
+//! ## Consistency model
+//!
+//! Every cell shares one registry-wide `RwLock<()>` *gate*. Mutations
+//! (`inc`, `add`, `observe`, …) take the gate in *read* mode — many
+//! writers proceed concurrently, so the hot path costs one uncontended
+//! `RwLock` read plus one atomic RMW. A scrape ([`Registry::gather`],
+//! [`Registry::freeze`]) takes the gate in *write* mode, which drains
+//! all in-flight mutations and holds new ones, yielding a
+//! point-in-time view across *all* cells of the registry.
+//!
+//! Combined with program order this gives cross-metric invariants: if
+//! event A's counter is always bumped before event B's, no snapshot
+//! can ever show B counted without A (the `/healthz` drift fix relies
+//! on exactly this for `http.requests >= sum(shard.submitted)`).
+//!
+//! Do **not** call a cell mutation while holding [`Registry::freeze`]
+//! (the guard is a write lock; mutating would deadlock). Reads
+//! (`get`, `sum`, `count`) never touch the gate and are always safe.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, RwLockWriteGuard};
+
+/// Default latency bucket upper bounds, in seconds. Chosen to resolve
+/// both sub-millisecond cache hits and multi-second degraded rounds.
+pub const LATENCY_BOUNDS_S: &[f64] =
+    &[0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5];
+
+/// What a metric family measures; determines its `# TYPE` line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+type Gate = Arc<RwLock<()>>;
+
+fn read_gate(gate: &RwLock<()>) -> std::sync::RwLockReadGuard<'_, ()> {
+    gate.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_gate(gate: &RwLock<()>) -> RwLockWriteGuard<'_, ()> {
+    gate.write().unwrap_or_else(|e| e.into_inner())
+}
+
+#[derive(Debug)]
+struct CounterCore {
+    gate: Gate,
+    value: AtomicU64,
+}
+
+/// Monotonic counter handle. Cloning is cheap and refers to the same
+/// cell; reads never block.
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<CounterCore>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        let _g = read_gate(&self.0.gate);
+        self.0.value.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Overwrite with an externally maintained absolute total (used
+    /// when migrating counters whose source of truth lives elsewhere,
+    /// e.g. plan-cache hit counts published per round).
+    pub fn store(&self, v: u64) {
+        let _g = read_gate(&self.0.gate);
+        self.0.value.store(v, Ordering::SeqCst);
+    }
+
+    /// Raise to `v` if larger (high-water marks).
+    pub fn record_max(&self, v: u64) {
+        let _g = read_gate(&self.0.gate);
+        self.0.value.fetch_max(v, Ordering::SeqCst);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.value.load(Ordering::SeqCst)
+    }
+}
+
+#[derive(Debug)]
+struct GaugeCore {
+    gate: Gate,
+    value: AtomicI64,
+}
+
+/// Instantaneous-value handle (queue depth, active connections, epoch).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<GaugeCore>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        let _g = read_gate(&self.0.gate);
+        self.0.value.store(v, Ordering::SeqCst);
+    }
+
+    pub fn add(&self, n: i64) {
+        let _g = read_gate(&self.0.gate);
+        self.0.value.fetch_add(n, Ordering::SeqCst);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.add(-n);
+    }
+
+    /// Raise to `v` if larger (high-water marks).
+    pub fn record_max(&self, v: i64) {
+        let _g = read_gate(&self.0.gate);
+        self.0.value.fetch_max(v, Ordering::SeqCst);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.value.load(Ordering::SeqCst)
+    }
+}
+
+#[derive(Debug)]
+struct HistogramCore {
+    gate: Gate,
+    bounds: Vec<f64>,
+    /// One slot per bound plus a final overflow (`+Inf`) slot.
+    buckets: Vec<AtomicU64>,
+    /// `f64` bits, CAS-accumulated.
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-bucket latency histogram handle.
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        let _g = read_gate(&self.0.gate);
+        // First bucket whose upper bound is >= v (Prometheus `le`).
+        let i = self.0.bounds.partition_point(|&b| b < v);
+        self.0.buckets[i].fetch_add(1, Ordering::SeqCst);
+        self.0.count.fetch_add(1, Ordering::SeqCst);
+        let mut cur = self.0.sum_bits.load(Ordering::SeqCst);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.sum_bits.compare_exchange(cur, next, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::SeqCst)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::SeqCst))
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Cell {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Cell {
+    fn kind(&self) -> MetricKind {
+        match self {
+            Cell::Counter(_) => MetricKind::Counter,
+            Cell::Gauge(_) => MetricKind::Gauge,
+            Cell::Histogram(_) => MetricKind::Histogram,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Family {
+    help: String,
+    kind: MetricKind,
+    label_names: Vec<String>,
+    cells: Vec<(Vec<String>, Cell)>,
+}
+
+/// A snapshotted sample value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(i64),
+    /// `buckets` are *cumulative* counts per finite upper bound;
+    /// `count` is the `+Inf` (total) count.
+    Histogram { buckets: Vec<(f64, u64)>, sum: f64, count: u64 },
+}
+
+/// One labeled sample inside a family snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub labels: Vec<(String, String)>,
+    pub value: SampleValue,
+}
+
+/// A consistent snapshot of one metric family.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilySnapshot {
+    pub name: String,
+    pub help: String,
+    pub kind: MetricKind,
+    pub samples: Vec<Sample>,
+}
+
+/// RAII guard that holds all registry mutations; see [`Registry::freeze`].
+#[derive(Debug)]
+pub struct Freeze<'a>(#[allow(dead_code)] RwLockWriteGuard<'a, ()>);
+
+/// The metrics registry. See the module docs for the consistency model.
+#[derive(Debug)]
+pub struct Registry {
+    gate: Gate,
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { gate: Arc::new(RwLock::new(())), families: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get or create an unlabeled counter.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Get or create a counter with the given `(label, value)` pairs.
+    /// Re-registering the same name+labels returns a handle to the
+    /// same cell; a kind or label-name mismatch panics (programming
+    /// error, caught in tests).
+    pub fn counter_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.cell(name, help, MetricKind::Counter, labels, |gate| {
+            Cell::Counter(Counter(Arc::new(CounterCore { gate, value: AtomicU64::new(0) })))
+        }) {
+            Cell::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, help, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.cell(name, help, MetricKind::Gauge, labels, |gate| {
+            Cell::Gauge(Gauge(Arc::new(GaugeCore { gate, value: AtomicI64::new(0) })))
+        }) {
+            Cell::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Histogram {
+        self.histogram_with(name, help, bounds, &[])
+    }
+
+    /// Get or create a histogram. `bounds` must be finite, strictly
+    /// increasing upper bounds; a `+Inf` bucket is always appended.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        help: &str,
+        bounds: &[f64],
+        labels: &[(&str, &str)],
+    ) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram {name} needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram {name} bounds must be finite and strictly increasing"
+        );
+        match self.cell(name, help, MetricKind::Histogram, labels, |gate| {
+            let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+            Cell::Histogram(Histogram(Arc::new(HistogramCore {
+                gate,
+                bounds: bounds.to_vec(),
+                buckets,
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+                count: AtomicU64::new(0),
+            })))
+        }) {
+            Cell::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    fn cell(
+        &self,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce(Gate) -> Cell,
+    ) -> Cell {
+        let names: Vec<String> = labels.iter().map(|(k, _)| k.to_string()).collect();
+        let values: Vec<String> = labels.iter().map(|(_, v)| v.to_string()).collect();
+        let mut fams = self.families.lock().unwrap_or_else(|e| e.into_inner());
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            label_names: names.clone(),
+            cells: Vec::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "metric {name} re-registered as {} but is {}",
+            kind.as_str(),
+            fam.kind.as_str()
+        );
+        assert!(
+            fam.label_names == names,
+            "metric {name} re-registered with labels {names:?} but has {:?}",
+            fam.label_names
+        );
+        if let Some((_, cell)) = fam.cells.iter().find(|(v, _)| *v == values) {
+            return cell.clone();
+        }
+        let cell = make(Arc::clone(&self.gate));
+        debug_assert!(cell.kind() == kind);
+        fam.cells.push((values, cell.clone()));
+        cell
+    }
+
+    /// Hold all mutations while the guard lives, so a multi-cell read
+    /// (e.g. the `/healthz` snapshot) observes one point in time.
+    /// Cell *reads* are lock-free and safe under the guard; cell
+    /// *mutations* from the holding thread would deadlock.
+    pub fn freeze(&self) -> Freeze<'_> {
+        Freeze(write_gate(&self.gate))
+    }
+
+    /// Snapshot every family at one point in time.
+    pub fn gather(&self) -> Vec<FamilySnapshot> {
+        let _freeze = self.freeze();
+        let fams = self.families.lock().unwrap_or_else(|e| e.into_inner());
+        fams.iter()
+            .map(|(name, fam)| FamilySnapshot {
+                name: name.clone(),
+                help: fam.help.clone(),
+                kind: fam.kind,
+                samples: fam
+                    .cells
+                    .iter()
+                    .map(|(values, cell)| Sample {
+                        labels: fam
+                            .label_names
+                            .iter()
+                            .cloned()
+                            .zip(values.iter().cloned())
+                            .collect(),
+                        value: snapshot_cell(cell),
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// (`text/plain; version=0.0.4`): `# HELP` + `# TYPE` per family,
+    /// cumulative `+Inf`-terminated histogram buckets, stable ordering.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for fam in self.gather() {
+            out.push_str(&format!("# HELP {} {}\n", fam.name, escape_help(&fam.help)));
+            out.push_str(&format!("# TYPE {} {}\n", fam.name, fam.kind.as_str()));
+            for s in &fam.samples {
+                match &s.value {
+                    SampleValue::Counter(v) => {
+                        out.push_str(&format!("{}{} {}\n", fam.name, label_str(&s.labels, None), v));
+                    }
+                    SampleValue::Gauge(v) => {
+                        out.push_str(&format!("{}{} {}\n", fam.name, label_str(&s.labels, None), v));
+                    }
+                    SampleValue::Histogram { buckets, sum, count } => {
+                        for (bound, cum) in buckets {
+                            out.push_str(&format!(
+                                "{}_bucket{} {}\n",
+                                fam.name,
+                                label_str(&s.labels, Some(&fmt_f64(*bound))),
+                                cum
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            fam.name,
+                            label_str(&s.labels, Some("+Inf")),
+                            count
+                        ));
+                        out.push_str(&format!(
+                            "{}_sum{} {}\n",
+                            fam.name,
+                            label_str(&s.labels, None),
+                            fmt_f64(*sum)
+                        ));
+                        out.push_str(&format!(
+                            "{}_count{} {}\n",
+                            fam.name,
+                            label_str(&s.labels, None),
+                            count
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn snapshot_cell(cell: &Cell) -> SampleValue {
+    match cell {
+        Cell::Counter(c) => SampleValue::Counter(c.get()),
+        Cell::Gauge(g) => SampleValue::Gauge(g.get()),
+        Cell::Histogram(h) => {
+            let core = &h.0;
+            let mut cum = 0u64;
+            let buckets = core
+                .bounds
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| {
+                    cum += core.buckets[i].load(Ordering::SeqCst);
+                    (b, cum)
+                })
+                .collect();
+            SampleValue::Histogram { buckets, sum: h.sum(), count: h.count() }
+        }
+    }
+}
+
+/// `{k="v",...}` with the extra `le` label appended for histogram
+/// buckets; empty label sets render as no braces at all.
+fn label_str(labels: &[(String, String)], le: Option<&str>) -> String {
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Rust's `{}` for f64 never uses scientific notation and prints the
+/// shortest round-trip decimal — exactly what the exposition format
+/// wants for bucket bounds ("0.005", "1", "2.5").
+fn fmt_f64(v: f64) -> String {
+    format!("{v}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+
+    #[test]
+    fn counter_inc_add_and_dedup() {
+        let r = Registry::new();
+        let a = r.counter("gaps_test_total", "a test counter");
+        a.inc();
+        a.add(4);
+        // Same name + labels -> same cell.
+        let b = r.counter("gaps_test_total", "a test counter");
+        b.inc();
+        assert_eq!(a.get(), 6);
+        assert_eq!(b.get(), 6);
+    }
+
+    #[test]
+    fn labeled_cells_are_distinct() {
+        let r = Registry::new();
+        let s0 = r.counter_with("gaps_shard_total", "per shard", &[("shard", "0")]);
+        let s1 = r.counter_with("gaps_shard_total", "per shard", &[("shard", "1")]);
+        s0.add(2);
+        s1.add(5);
+        assert_eq!(s0.get(), 2);
+        assert_eq!(s1.get(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "re-registered as gauge")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("gaps_kind_total", "counter");
+        let _ = r.gauge("gaps_kind_total", "now a gauge");
+    }
+
+    #[test]
+    #[should_panic(expected = "re-registered with labels")]
+    fn label_name_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter_with("gaps_lbl_total", "x", &[("shard", "0")]);
+        let _ = r.counter_with("gaps_lbl_total", "x", &[("node", "0")]);
+    }
+
+    #[test]
+    fn gauge_set_add_sub_max() {
+        let r = Registry::new();
+        let g = r.gauge("gaps_depth", "queue depth");
+        g.set(10);
+        g.add(5);
+        g.sub(3);
+        assert_eq!(g.get(), 12);
+        g.record_max(40);
+        g.record_max(1);
+        assert_eq!(g.get(), 40);
+    }
+
+    #[test]
+    fn counter_store_and_record_max() {
+        let r = Registry::new();
+        let c = r.counter("gaps_abs_total", "absolute publish");
+        c.store(7);
+        c.store(9);
+        assert_eq!(c.get(), 9);
+        c.record_max(4);
+        assert_eq!(c.get(), 9);
+        c.record_max(11);
+        assert_eq!(c.get(), 11);
+    }
+
+    #[test]
+    fn histogram_buckets_are_le_and_cumulative() {
+        let r = Registry::new();
+        let h = r.histogram("gaps_lat_seconds", "latency", &[0.001, 0.01, 0.1]);
+        h.observe(0.0005); // -> le 0.001
+        h.observe(0.001); // boundary counts in le 0.001 (le is <=)
+        h.observe(0.05); // -> le 0.1
+        h.observe(3.0); // -> +Inf only
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 3.0515).abs() < 1e-12);
+        let fams = r.gather();
+        let fam = fams.iter().find(|f| f.name == "gaps_lat_seconds").unwrap();
+        match &fam.samples[0].value {
+            SampleValue::Histogram { buckets, count, .. } => {
+                assert_eq!(buckets, &vec![(0.001, 2), (0.01, 2), (0.1, 3)]);
+                assert_eq!(*count, 4);
+            }
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn render_text_has_help_type_and_inf_terminated_buckets() {
+        let r = Registry::new();
+        r.counter_with("gaps_req_total", "requests served", &[("shard", "0")]).add(3);
+        r.gauge("gaps_active", "active connections").set(2);
+        let h = r.histogram("gaps_lat_seconds", "latency", &[0.5, 1.0]);
+        h.observe(0.2);
+        h.observe(2.0);
+        let text = r.render_text();
+        assert!(text.contains("# HELP gaps_req_total requests served\n"));
+        assert!(text.contains("# TYPE gaps_req_total counter\n"));
+        assert!(text.contains("gaps_req_total{shard=\"0\"} 3\n"));
+        assert!(text.contains("# TYPE gaps_active gauge\n"));
+        assert!(text.contains("gaps_active 2\n"));
+        assert!(text.contains("# TYPE gaps_lat_seconds histogram\n"));
+        assert!(text.contains("gaps_lat_seconds_bucket{le=\"0.5\"} 1\n"));
+        assert!(text.contains("gaps_lat_seconds_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("gaps_lat_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("gaps_lat_seconds_count 2\n"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let r = Registry::new();
+        r.counter_with("gaps_esc_total", "escaping", &[("q", "a\"b\\c\nd")]).inc();
+        let text = r.render_text();
+        assert!(text.contains("gaps_esc_total{q=\"a\\\"b\\\\c\\nd\"} 1\n"));
+    }
+
+    #[test]
+    fn freeze_gives_a_point_in_time_across_cells() {
+        // A writer thread increments `first` strictly before `second`
+        // (each with its own gate acquisition). Under a freeze, no
+        // snapshot may ever observe second > first — the exact
+        // ordering argument the /healthz drift fix depends on.
+        let r = Arc::new(Registry::new());
+        let first = r.counter("gaps_first_total", "incremented first");
+        let second = r.counter("gaps_second_total", "incremented second");
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let (first, second, stop) = (first.clone(), second.clone(), Arc::clone(&stop));
+            thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    first.inc();
+                    second.inc();
+                }
+            })
+        };
+        for _ in 0..200 {
+            let _f = r.freeze();
+            let (f, s) = (first.get(), second.get());
+            assert!(f >= s, "snapshot saw second={s} ahead of first={f}");
+        }
+        stop.store(true, Ordering::SeqCst);
+        writer.join().unwrap();
+    }
+}

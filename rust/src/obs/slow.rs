@@ -1,0 +1,195 @@
+//! Slow-query log: a bounded in-memory ring of structured entries for
+//! requests whose end-to-end time crossed `obs.slow_query_ms`, exposed
+//! via `GET /debug/slow` and optionally appended as JSONL to a file
+//! (`--slow-log FILE`).
+//!
+//! One entry is one line: fingerprint, query, shard, epoch, total
+//! seconds, the stage-timing span tree, retrieval counters, and the
+//! degraded/error disposition — everything needed to retell a slow
+//! request without re-running it.
+
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::obs::trace::TraceSpan;
+use crate::util::json::Json;
+
+/// One slow (or failed-slow) request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlowEntry {
+    /// Compiled-plan fingerprint (0 when compilation never happened).
+    pub fingerprint: u64,
+    pub query: String,
+    /// Executor shard that served the request.
+    pub shard: usize,
+    /// Index epoch at execution time.
+    pub epoch: u64,
+    /// End-to-end seconds (arrival → settled).
+    pub total_s: f64,
+    pub degraded: bool,
+    /// Error kind for requests that settled with an error.
+    pub error: Option<String>,
+    /// Aggregated retrieval counters, when the request executed.
+    pub counters: Option<Json>,
+    /// Stage-timing tree (`request` root).
+    pub stages: Option<TraceSpan>,
+}
+
+impl SlowEntry {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("fingerprint", Json::from(self.fingerprint)),
+            ("query", Json::str(&self.query)),
+            ("shard", Json::from(self.shard)),
+            ("epoch", Json::from(self.epoch)),
+            ("total_s", Json::from(self.total_s)),
+            ("degraded", Json::Bool(self.degraded)),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e)));
+        }
+        if let Some(c) = &self.counters {
+            pairs.push(("counters", c.clone()));
+        }
+        if let Some(s) = &self.stages {
+            pairs.push(("stages", s.to_json()));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Bounded ring of slow-query entries plus an optional JSONL appender.
+#[derive(Debug)]
+pub struct SlowLog {
+    capacity: usize,
+    ring: Mutex<VecDeque<SlowEntry>>,
+    file: Option<Mutex<File>>,
+}
+
+impl SlowLog {
+    /// In-memory only; `capacity` is clamped to at least 1.
+    pub fn new(capacity: usize) -> SlowLog {
+        let capacity = capacity.max(1);
+        SlowLog {
+            capacity,
+            ring: Mutex::new(VecDeque::with_capacity(capacity)),
+            file: None,
+        }
+    }
+
+    /// Ring plus append-mode JSONL file (one entry per line).
+    pub fn with_file(capacity: usize, path: &Path) -> io::Result<SlowLog> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        let mut log = SlowLog::new(capacity);
+        log.file = Some(Mutex::new(file));
+        Ok(log)
+    }
+
+    /// Record an entry: newest wins, oldest evicted beyond capacity.
+    /// File write errors are swallowed (observability must never fail
+    /// a request).
+    pub fn record(&self, entry: SlowEntry) {
+        if let Some(file) = &self.file {
+            let line = entry.to_json().to_string_compact();
+            if let Ok(mut f) = file.lock() {
+                let _ = writeln!(f, "{line}");
+            }
+        }
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(entry);
+    }
+
+    /// Oldest-first copy of the ring.
+    pub fn entries(&self) -> Vec<SlowEntry> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `GET /debug/slow` body: `{"capacity": N, "entries": [...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("capacity", Json::from(self.capacity)),
+            ("entries", Json::Arr(self.entries().iter().map(SlowEntry::to_json).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(i: usize) -> SlowEntry {
+        SlowEntry {
+            fingerprint: i as u64,
+            query: format!("q{i}"),
+            shard: 0,
+            epoch: 1,
+            total_s: 0.75,
+            degraded: false,
+            error: None,
+            counters: None,
+            stages: Some(TraceSpan::new("request", 0.75)),
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_up_to_capacity() {
+        let log = SlowLog::new(3);
+        for i in 0..5 {
+            log.record(entry(i));
+        }
+        let got: Vec<u64> = log.entries().iter().map(|e| e.fingerprint).collect();
+        assert_eq!(got, vec![2, 3, 4]);
+        assert_eq!(log.len(), 3);
+    }
+
+    #[test]
+    fn debug_endpoint_json_shape() {
+        let log = SlowLog::new(8);
+        log.record(entry(7));
+        let j = log.to_json();
+        assert_eq!(j.get("capacity").and_then(Json::as_i64), Some(8));
+        let entries = j.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("query").and_then(Json::as_str), Some("q7"));
+        assert_eq!(entries[0].get("stages").and_then(|s| s.get("name")).and_then(Json::as_str), Some("request"));
+        // Absent optionals are omitted, not null.
+        assert!(entries[0].get("error").is_none());
+    }
+
+    #[test]
+    fn file_appender_writes_one_json_line_per_entry() {
+        let dir = std::env::temp_dir().join(format!("gaps_slowlog_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("slow.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let log = SlowLog::with_file(4, &path).unwrap();
+            let mut e = entry(1);
+            e.error = Some("deadline_exceeded".into());
+            log.record(e);
+            log.record(entry(2));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("error").and_then(Json::as_str), Some("deadline_exceeded"));
+        assert_eq!(first.get("total_s").and_then(Json::as_f64), Some(0.75));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

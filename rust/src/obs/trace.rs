@@ -1,0 +1,171 @@
+//! Per-request trace spans.
+//!
+//! A [`TraceSpan`] is a named, monotonic-clock-timed tree node: the
+//! serving layer builds one tree per request (HTTP admission → linger →
+//! plan-cache probe → compile → fan-out with one child per node job →
+//! merge → result-cache store), the coordinator contributes the
+//! `search` subtree, and the finished tree is surfaced through
+//! `Explain.stages`, the slow-query log, and the per-stage latency
+//! histograms.
+//!
+//! Spans are *diagnostic* payload: they ride along with responses but
+//! are excluded from semantic equality (see `coordinator::Explain`'s
+//! manual `PartialEq`), so observability can never perturb parity
+//! oracles.
+//!
+//! Timing invariant (pinned by `prop_serve_parity`): children occupy
+//! disjoint or nested wall-clock windows inside their parent, so every
+//! child's `seconds` is ≤ the parent's, and for *sequential* stages
+//! the children sum to ≤ the parent. The one documented exception is
+//! the `execute` span, whose children are per-node jobs that run in
+//! parallel: each child is still ≤ the parent window, but their sum
+//! may exceed it.
+
+use crate::util::json::Json;
+
+/// One timed stage in a request's lifecycle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpan {
+    /// Stage name (`request`, `queued`, `probe`, `search`, `compile`,
+    /// `plan`, `execute`, `job`, `merge`, `store`, …).
+    pub name: String,
+    /// Wall-clock duration of the stage, monotonic-clock measured.
+    pub seconds: f64,
+    /// Stage annotations (node id, sources searched, retrieval
+    /// counters, cache verdicts) as ordered key/value strings.
+    pub meta: Vec<(String, String)>,
+    /// Sub-stages, in execution order.
+    pub children: Vec<TraceSpan>,
+}
+
+impl TraceSpan {
+    pub fn new(name: impl Into<String>, seconds: f64) -> TraceSpan {
+        TraceSpan { name: name.into(), seconds, meta: Vec::new(), children: Vec::new() }
+    }
+
+    /// Builder-style annotation.
+    pub fn with_meta(mut self, key: impl Into<String>, value: impl Into<String>) -> TraceSpan {
+        self.meta.push((key.into(), value.into()));
+        self
+    }
+
+    pub fn push_child(&mut self, child: TraceSpan) {
+        self.children.push(child);
+    }
+
+    /// Sum of direct children's durations.
+    pub fn children_total_s(&self) -> f64 {
+        self.children.iter().map(|c| c.seconds).sum()
+    }
+
+    /// First span named `name` in a pre-order walk (self included).
+    pub fn find(&self, name: &str) -> Option<&TraceSpan> {
+        if self.name == name {
+            return Some(self);
+        }
+        self.children.iter().find_map(|c| c.find(name))
+    }
+
+    /// Total number of spans in the tree (self included).
+    pub fn span_count(&self) -> usize {
+        1 + self.children.iter().map(|c| c.span_count()).sum::<usize>()
+    }
+
+    /// Wire form: `{"name": ..., "seconds": ..., "meta": {...},
+    /// "children": [...]}` with empty `meta`/`children` omitted.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(&self.name)),
+            ("seconds", Json::from(self.seconds)),
+        ];
+        if !self.meta.is_empty() {
+            let map = self
+                .meta
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                .collect::<std::collections::BTreeMap<_, _>>();
+            pairs.push(("meta", Json::Obj(map)));
+        }
+        if !self.children.is_empty() {
+            pairs.push(("children", Json::Arr(self.children.iter().map(|c| c.to_json()).collect())));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Tolerant decode: absent fields default (wire-compatibility with
+    /// pre-tracing payloads is handled one level up — an absent
+    /// `stages` key decodes to `None`).
+    pub fn from_json(v: &Json) -> Option<TraceSpan> {
+        let name = v.get("name")?.as_str()?.to_string();
+        let seconds = v.get("seconds").and_then(Json::as_f64).unwrap_or(0.0);
+        let meta = v
+            .get("meta")
+            .and_then(Json::as_obj)
+            .map(|m| {
+                m.iter()
+                    .filter_map(|(k, val)| Some((k.clone(), val.as_str()?.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let children = v
+            .get("children")
+            .and_then(Json::as_arr)
+            .map(|arr| arr.iter().filter_map(TraceSpan::from_json).collect())
+            .unwrap_or_default();
+        Some(TraceSpan { name, seconds, meta, children })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TraceSpan {
+        let mut root = TraceSpan::new("request", 0.010);
+        root.push_child(TraceSpan::new("queued", 0.002));
+        let mut search = TraceSpan::new("search", 0.007).with_meta("shard", "0");
+        search.push_child(TraceSpan::new("compile", 0.001));
+        search.push_child(
+            TraceSpan::new("execute", 0.005)
+                .with_meta("jobs", "2"),
+        );
+        root.push_child(search);
+        root
+    }
+
+    #[test]
+    fn json_round_trip_preserves_tree() {
+        let span = sample();
+        let back = TraceSpan::from_json(&span.to_json()).unwrap();
+        assert_eq!(span, back);
+    }
+
+    #[test]
+    fn empty_meta_and_children_are_omitted_from_wire() {
+        let leaf = TraceSpan::new("store", 0.001);
+        let j = leaf.to_json();
+        assert!(j.get("meta").is_none());
+        assert!(j.get("children").is_none());
+        assert_eq!(TraceSpan::from_json(&j).unwrap(), leaf);
+    }
+
+    #[test]
+    fn find_walks_preorder_and_counts_spans() {
+        let span = sample();
+        assert_eq!(span.find("compile").unwrap().seconds, 0.001);
+        assert!(span.find("missing").is_none());
+        assert_eq!(span.span_count(), 5);
+        assert!((span.children_total_s() - 0.009).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tolerant_decode_defaults_missing_fields() {
+        let j = Json::parse(r#"{"name":"probe"}"#).unwrap();
+        let s = TraceSpan::from_json(&j).unwrap();
+        assert_eq!(s.name, "probe");
+        assert_eq!(s.seconds, 0.0);
+        assert!(s.meta.is_empty() && s.children.is_empty());
+        // No name at all -> not a span.
+        assert!(TraceSpan::from_json(&Json::parse("{}").unwrap()).is_none());
+    }
+}

@@ -236,6 +236,7 @@ mod tests {
             degraded: false,
             missing_sources: Vec::new(),
             explain: None,
+            trace: None,
         }
     }
 

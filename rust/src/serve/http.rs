@@ -41,7 +41,9 @@
 //! | `POST /search`       | `SearchRequest` JSON          | `SearchResponse` JSON, or `SearchError` JSON with a mapped status |
 //! | `POST /search_batch` | `{"requests": [...]}` (or a bare array) | `{"results": [{"ok": ...} \| {"error": ...}]}` |
 //! | `POST /ingest`       | `{"docs": [...]}` (or a bare array of publication objects) | `IngestReport` JSON (`{"accepted", "buffered", "sealed", "merges", "epoch"}`) |
-//! | `GET /healthz`       | —                             | `{"status": "ok", "queue": {...}, "shards": [...], "http": {...}, "index": {...}}` (aggregate + per-shard admission counters, connection counters, index health) |
+//! | `GET /healthz`       | —                             | `{"status": "ok", "queue": {...}, "shards": [...], "http": {...}, "index": {...}}` (one frozen registry snapshot: aggregate + per-shard admission counters, connection counters, index health) |
+//! | `GET /metrics`       | —                             | Prometheus text exposition (`text/plain; version=0.0.4`) of every registered counter/gauge/histogram |
+//! | `GET /debug/slow`    | —                             | `{"capacity": N, "entries": [...]}` — the slow-query ring, oldest first |
 //!
 //! Error statuses ([`status_for`]): `parse` → 400; `no-sources`,
 //! `no-nodes`, `no-live-replica`, `unavailable` → 503; `overloaded` →
@@ -78,10 +80,9 @@ const MAX_BODY: usize = 1 << 20;
 /// [`MAX_BODY`] cap.
 const MAX_HEAD: usize = 16 << 10;
 
-/// Retry hint (ms) carried by acceptor-side connection shedding (every
-/// handler busy). The admission queue's own shedding carries its linger
-/// window instead; this one covers the front door.
-const SHED_RETRY_MS: u64 = 1000;
+// Acceptor-side shedding and admission-queue shedding both derive their
+// `Retry-After` hint from queue depth via [`super::retry_after_hint`] —
+// there is no longer a bare constant for either door.
 
 /// Socket + connection-model knobs for the front-end (the `gaps serve`
 /// CLI exposes them via the `serve.*` config section).
@@ -144,6 +145,47 @@ fn retry_after_secs(e: &SearchError) -> Option<u64> {
     match e {
         SearchError::Overloaded { retry_after_ms } => Some((retry_after_ms + 999) / 1000),
         _ => None,
+    }
+}
+
+/// A response payload: JSON on every API route, plain text on
+/// `GET /metrics` (the Prometheus exposition format is line-oriented
+/// text, not JSON). The variant picks the `Content-Type`.
+enum Body {
+    Json(Json),
+    Text(String),
+}
+
+impl Body {
+    fn content_type(&self) -> &'static str {
+        match self {
+            Body::Json(_) => "application/json",
+            // The version parameter is the Prometheus text-format tag.
+            Body::Text(_) => "text/plain; version=0.0.4",
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            Body::Json(j) => j.to_string_compact(),
+            Body::Text(t) => t.clone(),
+        }
+    }
+
+    #[cfg(test)]
+    fn as_json(&self) -> &Json {
+        match self {
+            Body::Json(j) => j,
+            Body::Text(t) => panic!("expected a JSON body, got text: {t:?}"),
+        }
+    }
+
+    #[cfg(test)]
+    fn as_text(&self) -> &str {
+        match self {
+            Body::Text(t) => t,
+            Body::Json(j) => panic!("expected a text body, got JSON: {j:?}"),
+        }
     }
 }
 
@@ -316,27 +358,33 @@ fn parse_ingest(v: &Json) -> Result<Vec<Publication>, (u16, String)> {
 /// Route one request to a `(status, body, Retry-After)` triple. Pure
 /// apart from the shard-router interaction, so the protocol is
 /// unit-testable.
-fn respond(req: &HttpRequest, router: &ShardRouter) -> (u16, Json, Option<u64>) {
+fn respond(req: &HttpRequest, router: &ShardRouter) -> (u16, Body, Option<u64>) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
+            // One frozen registry snapshot: the queue, per-shard, and
+            // http objects are mutually consistent (no counter moves
+            // between reading one family and the next).
+            let snap = router.snapshot();
             let mut fields = vec![
                 ("status", Json::str("ok")),
-                ("queue", router.stats().to_json()),
+                ("queue", snap.queue.to_json()),
                 (
                     "shards",
-                    Json::Arr(
-                        router.per_shard_stats().iter().map(QueueStats::to_json).collect(),
-                    ),
+                    Json::Arr(snap.per_shard.iter().map(QueueStats::to_json).collect()),
                 ),
-                ("http", router.http().stats().to_json()),
+                ("http", snap.http.to_json()),
             ];
             // The index object appears once an executor has published
             // (always, on a served system; absent on a bare queue).
-            if let Some(health) = router.index_health() {
+            if let Some(health) = snap.index {
                 fields.push(("index", health.to_json()));
             }
-            (200, Json::obj(fields), None)
+            (200, Body::Json(Json::obj(fields)), None)
         }
+        ("GET", "/metrics") => {
+            (200, Body::Text(router.obs().registry.render_text()), None)
+        }
+        ("GET", "/debug/slow") => (200, Body::Json(router.obs().slow.to_json()), None),
         ("POST", "/search") => {
             let parsed = parse_body_json(&req.body).and_then(|v| {
                 SearchRequest::from_json(&v)
@@ -344,10 +392,10 @@ fn respond(req: &HttpRequest, router: &ShardRouter) -> (u16, Json, Option<u64>) 
             });
             match parsed {
                 Ok(request) => match router.submit(request) {
-                    Ok(resp) => (200, resp.to_json(), None),
-                    Err(e) => (status_for(&e), e.to_json(), retry_after_secs(&e)),
+                    Ok(resp) => (200, Body::Json(resp.to_json()), None),
+                    Err(e) => (status_for(&e), Body::Json(e.to_json()), retry_after_secs(&e)),
                 },
-                Err((status, msg)) => (status, error_body("bad-request", &msg), None),
+                Err((status, msg)) => (status, Body::Json(error_body("bad-request", &msg)), None),
             }
         }
         ("POST", "/search_batch") => {
@@ -361,41 +409,47 @@ fn respond(req: &HttpRequest, router: &ShardRouter) -> (u16, Json, Option<u64>) 
                             Err(e) => Json::obj(vec![("error", e.to_json())]),
                         })
                         .collect();
-                    (200, Json::obj(vec![("results", Json::Arr(results))]), None)
+                    (200, Body::Json(Json::obj(vec![("results", Json::Arr(results))])), None)
                 }
-                Err((status, msg)) => (status, error_body("bad-request", &msg), None),
+                Err((status, msg)) => (status, Body::Json(error_body("bad-request", &msg)), None),
             }
         }
         ("POST", "/ingest") => {
             match parse_body_json(&req.body).and_then(|v| parse_ingest(&v)) {
                 Ok(docs) => match router.submit_ingest(docs) {
-                    Ok(report) => (200, report.to_json(), None),
-                    Err(e) => (status_for(&e), e.to_json(), retry_after_secs(&e)),
+                    Ok(report) => (200, Body::Json(report.to_json()), None),
+                    Err(e) => (status_for(&e), Body::Json(e.to_json()), retry_after_secs(&e)),
                 },
-                Err((status, msg)) => (status, error_body("bad-request", &msg), None),
+                Err((status, msg)) => (status, Body::Json(error_body("bad-request", &msg)), None),
             }
         }
-        (_, "/healthz" | "/search" | "/search_batch" | "/ingest") => (
+        (_, "/healthz" | "/metrics" | "/debug/slow" | "/search" | "/search_batch" | "/ingest") => (
             405,
-            error_body("method-not-allowed", &format!("{} not allowed here", req.method)),
+            Body::Json(error_body(
+                "method-not-allowed",
+                &format!("{} not allowed here", req.method),
+            )),
             None,
         ),
-        (_, path) => (404, error_body("not-found", &format!("no route {path}")), None),
+        (_, path) => {
+            (404, Body::Json(error_body("not-found", &format!("no route {path}"))), None)
+        }
     }
 }
 
 fn write_response(
     stream: &mut impl Write,
     status: u16,
-    body: &Json,
+    body: &Body,
     retry_after: Option<u64>,
     close: bool,
 ) -> io::Result<()> {
-    let body = body.to_string_compact();
+    let content_type = body.content_type();
+    let body = body.render();
     let retry = retry_after.map(|s| format!("Retry-After: {s}\r\n")).unwrap_or_default();
     let connection = if close { "close" } else { "keep-alive" };
     let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: {connection}\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{retry}Connection: {connection}\r\n\r\n",
         reason(status),
         body.len(),
     );
@@ -446,7 +500,7 @@ fn handle_connection(stream: TcpStream, router: &ShardRouter, cfg: HttpConfig) -
                 // Framing failed: the stream position is unknown, so
                 // the connection cannot be reused.
                 let kind = if status == 408 { "timeout" } else { "bad-request" };
-                (status, error_body(kind, &msg), None, true)
+                (status, Body::Json(error_body(kind, &msg)), None, true)
             }
         };
         // Drain-settle on shutdown: requests the client already
@@ -467,13 +521,16 @@ fn handle_connection(stream: TcpStream, router: &ShardRouter, cfg: HttpConfig) -
 /// Acceptor-side shedding: every handler is busy, so this connection is
 /// answered with a complete typed 503 + `Retry-After` and closed — on
 /// the acceptor thread, without occupying a handler. A shed client is
-/// never left hanging on a silent socket.
-fn shed_connection(mut stream: TcpStream, cfg: HttpConfig) -> io::Result<()> {
+/// never left hanging on a silent socket. The retry hint is the
+/// router's depth-derived one ([`ShardRouter::retry_after_ms`]) — the
+/// same formula the admission queue's own shed path uses, so both
+/// doors advise consistently.
+fn shed_connection(mut stream: TcpStream, cfg: HttpConfig, retry_after_ms: u64) -> io::Result<()> {
     if cfg.write_timeout > Duration::ZERO {
         stream.set_write_timeout(Some(cfg.write_timeout))?;
     }
-    let e = SearchError::Overloaded { retry_after_ms: SHED_RETRY_MS };
-    write_response(&mut stream, 503, &e.to_json(), retry_after_secs(&e), true)
+    let e = SearchError::Overloaded { retry_after_ms };
+    write_response(&mut stream, 503, &Body::Json(e.to_json()), retry_after_secs(&e), true)
 }
 
 /// The HTTP listener: accepts connections onto a bounded pool of
@@ -563,7 +620,7 @@ impl HttpServer {
                 // Every handler is occupied (keep-alive connections
                 // hold theirs until they close): shed at the door.
                 self.router.http().shed_connection();
-                let _ = shed_connection(stream, self.cfg);
+                let _ = shed_connection(stream, self.cfg, self.router.retry_after_ms());
                 continue;
             }
             self.router.http().begin_connection();
@@ -712,6 +769,7 @@ mod tests {
         let (status, body, retry) = respond(&get("GET", "/healthz"), &router);
         assert_eq!(status, 200);
         assert_eq!(retry, None);
+        let body = body.as_json();
         assert_eq!(body.get("status").unwrap().as_str(), Some("ok"));
         assert!(body.get("queue").unwrap().get("submitted").is_some());
         let shards = body.get("shards").unwrap().as_arr().unwrap();
@@ -724,6 +782,56 @@ mod tests {
         assert_eq!(respond(&get("DELETE", "/search"), &router).0, 405);
         assert_eq!(respond(&get("POST", "/healthz"), &router).0, 405);
         assert_eq!(respond(&get("GET", "/ingest"), &router).0, 405);
+        assert_eq!(respond(&get("POST", "/metrics"), &router).0, 405);
+        assert_eq!(respond(&get("POST", "/debug/slow"), &router).0, 405);
+    }
+
+    #[test]
+    fn metrics_route_renders_prometheus_text() {
+        let router = test_router();
+        router.http().count_request(false);
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/metrics".into(),
+            body: Vec::new(),
+            close: false,
+        };
+        let (status, body, retry) = respond(&req, &router);
+        assert_eq!(status, 200);
+        assert_eq!(retry, None);
+        assert_eq!(body.content_type(), "text/plain; version=0.0.4");
+        let text = body.as_text();
+        assert!(text.contains("# TYPE gaps_http_requests_total counter"), "{text}");
+        assert!(text.contains("gaps_http_requests_total 1"), "{text}");
+    }
+
+    #[test]
+    fn debug_slow_route_dumps_the_ring() {
+        use crate::obs::SlowEntry;
+        let router = test_router();
+        router.obs().slow.record(SlowEntry {
+            fingerprint: 7,
+            query: "slow one".into(),
+            shard: 0,
+            epoch: 0,
+            total_s: 1.25,
+            degraded: false,
+            error: None,
+            counters: None,
+            stages: None,
+        });
+        let req = HttpRequest {
+            method: "GET".into(),
+            path: "/debug/slow".into(),
+            body: Vec::new(),
+            close: false,
+        };
+        let (status, body, _) = respond(&req, &router);
+        assert_eq!(status, 200);
+        let body = body.as_json();
+        let entries = body.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("query").unwrap().as_str(), Some("slow one"));
     }
 
     #[test]
@@ -739,7 +847,7 @@ mod tests {
 
         // Before an executor publishes: no `index` object.
         let (_, body, _) = respond(&get, &router);
-        assert!(body.get("index").is_none());
+        assert!(body.as_json().get("index").is_none());
 
         router.shard(0).publish_index_health(IndexHealth {
             epoch: 7,
@@ -751,6 +859,7 @@ mod tests {
         });
         let (status, body, _) = respond(&get, &router);
         assert_eq!(status, 200);
+        let body = body.as_json();
         let index = body.get("index").expect("index object after publication");
         assert_eq!(index.get("epoch").unwrap().as_i64(), Some(7));
         assert_eq!(index.get("searchable_docs").unwrap().as_i64(), Some(640));
@@ -814,8 +923,14 @@ mod tests {
     #[test]
     fn response_writer_emits_valid_http() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, &Json::obj(vec![("a", Json::from(1i64))]), None, false)
-            .unwrap();
+        write_response(
+            &mut out,
+            200,
+            &Body::Json(Json::obj(vec![("a", Json::from(1i64))])),
+            None,
+            false,
+        )
+        .unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
         assert!(text.contains("Content-Length: 7\r\n"), "{text}");
@@ -827,7 +942,7 @@ mod tests {
     #[test]
     fn response_writer_echoes_the_close_decision() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, &Json::obj(vec![]), None, true).unwrap();
+        write_response(&mut out, 200, &Body::Json(Json::obj(vec![])), None, true).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("Connection: close\r\n"), "{text}");
         assert!(!text.contains("keep-alive"), "{text}");
@@ -842,7 +957,8 @@ mod tests {
         assert_eq!(retry_after_secs(&SearchError::NoNodes), None);
 
         let mut out = Vec::new();
-        write_response(&mut out, 503, &e.to_json(), retry_after_secs(&e), true).unwrap();
+        write_response(&mut out, 503, &Body::Json(e.to_json()), retry_after_secs(&e), true)
+            .unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
         assert!(text.contains("Retry-After: 2\r\n"), "{text}");

@@ -87,16 +87,66 @@ pub mod router;
 pub use cache::{CacheCounters, ResultCache};
 pub use http::{status_for, HttpConfig, HttpServer, ShutdownHandle};
 pub use queue::{
-    AdmissionQueue, AdmittedBatch, IngestBatch, IngestTicket, QueueConfig, QueueStats,
-    ResponseTicket, Round,
+    retry_after_hint, AdmissionQueue, AdmittedBatch, IngestBatch, IngestTicket, QueueConfig,
+    QueueStats, ResponseTicket, Round,
 };
-pub use router::{HttpCounters, HttpStats, ShardRouter};
+pub use router::{HealthSnapshot, HttpCounters, HttpStats, ShardRouter};
 
+use std::path::Path;
 use std::sync::{mpsc, Arc};
 use std::thread;
 
+use crate::config::ObsConfig;
 use crate::coordinator::{GapsSystem, IndexHealth};
+use crate::obs::{Registry, SlowLog};
 use crate::search::SearchError;
+
+/// Shared observability plumbing for one serving plane: the metrics
+/// [`Registry`] every queue/executor/HTTP counter registers on (rendered
+/// by `GET /metrics`), the [`SlowLog`] ring behind `GET /debug/slow`,
+/// and the slow-query threshold. Clones share the same registry and
+/// ring (`Arc`s), so the front and every executor thread publish into
+/// one sink.
+#[derive(Clone)]
+pub struct ServeObs {
+    /// Metric registry for the whole serving plane.
+    pub registry: Arc<Registry>,
+    /// Bounded ring of slow-query records.
+    pub slow: Arc<SlowLog>,
+    /// Requests whose total (queued + executed) time reaches this many
+    /// milliseconds are recorded in the slow log.
+    pub slow_query_ms: u64,
+}
+
+impl Default for ServeObs {
+    fn default() -> ServeObs {
+        ServeObs {
+            registry: Arc::new(Registry::new()),
+            slow: Arc::new(SlowLog::new(128)),
+            slow_query_ms: 500,
+        }
+    }
+}
+
+impl ServeObs {
+    /// Build from the `obs.*` config section. A non-empty
+    /// `slow_log_file` mirrors slow-query records to that file as JSONL
+    /// (appending); if the file cannot be opened the mirror is dropped
+    /// and the in-memory ring still works.
+    pub fn from_config(cfg: &ObsConfig) -> ServeObs {
+        let slow = if cfg.slow_log_file.is_empty() {
+            SlowLog::new(cfg.slow_log_capacity)
+        } else {
+            SlowLog::with_file(cfg.slow_log_capacity, Path::new(&cfg.slow_log_file))
+                .unwrap_or_else(|_| SlowLog::new(cfg.slow_log_capacity))
+        };
+        ServeObs {
+            registry: Arc::new(Registry::new()),
+            slow: Arc::new(slow),
+            slow_query_ms: cfg.slow_query_ms,
+        }
+    }
+}
 
 /// A running serving layer: N admission lanes behind a [`ShardRouter`],
 /// each drained by an executor thread that owns a deployed
@@ -176,15 +226,35 @@ impl SearchServer {
     where
         F: Fn(usize) -> Result<GapsSystem, SearchError> + Send + Sync + 'static,
     {
+        SearchServer::start_sharded_with_obs(cfg, shards, ServeObs::default(), deploy)
+    }
+
+    /// [`SearchServer::start_sharded`] with an explicit observability
+    /// sink: every shard's admission counters register on
+    /// `obs.registry` under a `shard` label, executors run the traced
+    /// loop ([`queue::run_with_obs`]) recording per-stage latency
+    /// histograms and slow queries, and the returned router shares the
+    /// same sink (`router().obs()`) for `GET /metrics`, `GET
+    /// /debug/slow`, and atomic `/healthz` snapshots.
+    pub fn start_sharded_with_obs<F>(
+        cfg: QueueConfig,
+        shards: usize,
+        obs: ServeObs,
+        deploy: F,
+    ) -> Result<SearchServer, SearchError>
+    where
+        F: Fn(usize) -> Result<GapsSystem, SearchError> + Send + Sync + 'static,
+    {
         let shards = shards.max(1);
         let deploy = Arc::new(deploy);
         let mut queues = Vec::with_capacity(shards);
         let mut executors = Vec::with_capacity(shards);
         let mut ready = Vec::with_capacity(shards);
         for i in 0..shards {
-            let queue = Arc::new(AdmissionQueue::new(cfg));
+            let queue = Arc::new(AdmissionQueue::with_registry(cfg, &obs.registry, Some(i)));
             let exec_queue = Arc::clone(&queue);
             let deploy = Arc::clone(&deploy);
+            let exec_obs = obs.clone();
             let (ready_tx, ready_rx) = mpsc::channel::<Result<(), SearchError>>();
             let spawned = thread::Builder::new()
                 .name(format!("gaps-serve-exec-{i}"))
@@ -192,7 +262,7 @@ impl SearchServer {
                     Ok(mut sys) => {
                         exec_queue.publish_index_health(sys.index_health());
                         let _ = ready_tx.send(Ok(()));
-                        queue::run(&exec_queue, &mut sys);
+                        queue::run_with_obs(&exec_queue, &mut sys, &exec_obs, i);
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -243,7 +313,7 @@ impl SearchServer {
             }
             return Err(e);
         }
-        Ok(SearchServer { router: Arc::new(ShardRouter::new(queues)), executors })
+        Ok(SearchServer { router: Arc::new(ShardRouter::with_obs(queues, obs)), executors })
     }
 
     /// The shard router (share it with front-ends / submitters).
@@ -575,6 +645,46 @@ mod tests {
             post.hits.iter().any(|h| h.title.contains("zyzzogeton")),
             "the ingested doc must surface immediately after the bump"
         );
+    }
+
+    #[test]
+    fn observability_surfaces_traces_metrics_and_slow_log() {
+        use crate::coordinator::Deployment;
+        let cfg = small_cfg();
+        let dep = Arc::new(Deployment::build(&cfg, 3).unwrap());
+        let cfg_f = cfg.clone();
+        let obs = ServeObs { slow_query_ms: 0, ..ServeObs::default() };
+        let server = SearchServer::start_sharded_with_obs(
+            QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() },
+            2,
+            obs,
+            move |_shard| GapsSystem::from_deployment(cfg_f.clone(), Arc::clone(&dep)),
+        )
+        .unwrap();
+        let router = server.router();
+        let resp = router
+            .submit(SearchRequest::new("grid computing").explain(true))
+            .unwrap();
+        // The response carries a span tree rooted at the serving layer...
+        let root = resp.trace.as_ref().expect("traced execution");
+        assert_eq!(root.name, "request");
+        assert!(root.find("search").is_some(), "{root:?}");
+        assert!(root.find("execute").is_some(), "{root:?}");
+        // ...mirrored into the explain wire form for clients.
+        let stages = resp.explain.as_ref().unwrap().stages.as_ref().unwrap();
+        assert_eq!(stages.name, "request");
+        // slow_query_ms = 0 makes every request "slow".
+        assert!(!router.obs().slow.is_empty(), "threshold 0 must log every request");
+        // Metrics render with per-shard labels and per-stage histograms.
+        let text = router.obs().registry.render_text();
+        assert!(text.contains("gaps_request_seconds_bucket"), "{text}");
+        assert!(text.contains("stage=\"search\""), "{text}");
+        assert!(text.contains("gaps_queue_submitted_total{shard=\"0\"}"), "{text}");
+        // The frozen health snapshot agrees with the live counters.
+        let snap = router.snapshot();
+        assert_eq!(snap.queue.submitted, 1);
+        assert!(snap.index.is_some(), "health published before start returned");
+        server.shutdown();
     }
 
     #[test]

@@ -68,10 +68,15 @@ use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{GapsSystem, IndexHealth, IngestReport, SearchResponse};
+use crate::coordinator::{
+    counters_to_json, FailoverStats, GapsSystem, IndexHealth, IngestReport, SearchResponse,
+};
 use crate::corpus::Publication;
+use crate::obs::{Counter, Gauge, Registry, SlowEntry, TraceSpan, LATENCY_BOUNDS_S};
 use crate::search::{CompiledRequest, SearchError, SearchRequest};
 use crate::serve::cache::{CacheCounters, ResultCache};
+use crate::serve::ServeObs;
+use crate::util::clock::WallClock;
 use crate::util::json::Json;
 
 /// Coalescing knobs (the `gaps serve` CLI exposes both).
@@ -214,10 +219,115 @@ struct Inner {
     /// `false` after [`AdmissionQueue::shutdown`]: new submissions are
     /// rejected; already-pending requests still drain.
     open: bool,
-    stats: QueueStats,
     /// Last [`IndexHealth`] the executor published (after deployment and
     /// after every ingest round). `None` until the executor first runs.
     index_health: Option<IndexHealth>,
+}
+
+/// The queue's admission counters as [`Registry`] cells. Mutations
+/// happen under the queue mutex (so relative ordering is exactly what
+/// it was when these lived in a plain struct), and [`QueueStats`] is
+/// reassembled from the cells on read — `/healthz` and `/metrics` are
+/// two renderings of the same source of truth.
+struct QueueMetrics {
+    submitted: Counter,
+    executed: Counter,
+    batches: Counter,
+    coalesced: Counter,
+    largest_batch: Gauge,
+    singleflight: Counter,
+    shed: Counter,
+    expired: Counter,
+    ingest_batches: Counter,
+    ingest_docs: Counter,
+    plan_hits: Counter,
+    plan_misses: Counter,
+    result_hits: Counter,
+    result_misses: Counter,
+    result_evicted: Counter,
+    result_invalidated: Counter,
+    /// Instantaneous queue depth (distinct pending slots).
+    depth: Gauge,
+}
+
+impl QueueMetrics {
+    fn new(registry: &Registry, shard: Option<usize>) -> QueueMetrics {
+        let shard_value = shard.map(|s| s.to_string());
+        let labels: Vec<(&str, &str)> = match &shard_value {
+            Some(v) => vec![("shard", v.as_str())],
+            None => Vec::new(),
+        };
+        let counter = |name: &str, help: &str| registry.counter_with(name, help, &labels);
+        let gauge = |name: &str, help: &str| registry.gauge_with(name, help, &labels);
+        QueueMetrics {
+            submitted: counter("gaps_queue_submitted_total", "Requests accepted into the queue"),
+            executed: counter("gaps_queue_executed_total", "Requests answered by executor rounds"),
+            batches: counter("gaps_queue_batches_total", "search_batch rounds the executor ran"),
+            coalesced: counter(
+                "gaps_queue_coalesced_total",
+                "Requests that shared their round with at least one other request",
+            ),
+            largest_batch: gauge(
+                "gaps_queue_largest_batch",
+                "Largest round drained so far (distinct queue slots)",
+            ),
+            singleflight: counter(
+                "gaps_queue_singleflight_total",
+                "Submissions attached to an identical already-pending request",
+            ),
+            shed: counter(
+                "gaps_queue_shed_total",
+                "Submissions rejected at the high-water mark (load shedding)",
+            ),
+            expired: counter(
+                "gaps_queue_expired_total",
+                "Requests whose deadline elapsed while queued",
+            ),
+            ingest_batches: counter(
+                "gaps_queue_ingest_batches_total",
+                "Ingest batches accepted into the ingestion lane",
+            ),
+            ingest_docs: counter(
+                "gaps_queue_ingest_docs_total",
+                "Publications accepted across all ingest batches",
+            ),
+            plan_hits: counter("gaps_cache_plan_hits_total", "Compiled-plan cache hits"),
+            plan_misses: counter("gaps_cache_plan_misses_total", "Compiled-plan cache misses"),
+            result_hits: counter("gaps_cache_result_hits_total", "Result-cache hits"),
+            result_misses: counter("gaps_cache_result_misses_total", "Result-cache misses"),
+            result_evicted: counter(
+                "gaps_cache_result_evicted_total",
+                "Result-cache entries dropped by capacity eviction",
+            ),
+            result_invalidated: counter(
+                "gaps_cache_result_invalidated_total",
+                "Result-cache entries dropped wholesale by index-epoch bumps",
+            ),
+            depth: gauge("gaps_queue_depth", "Requests currently pending in the queue"),
+        }
+    }
+
+    /// Reassemble the legacy stats struct from the cells.
+    fn snapshot(&self) -> QueueStats {
+        QueueStats {
+            submitted: self.submitted.get(),
+            executed: self.executed.get(),
+            batches: self.batches.get(),
+            coalesced: self.coalesced.get(),
+            largest_batch: self.largest_batch.get().max(0) as u64,
+            singleflight: self.singleflight.get(),
+            shed: self.shed.get(),
+            expired: self.expired.get(),
+            ingest_batches: self.ingest_batches.get(),
+            ingest_docs: self.ingest_docs.get(),
+            plan_hits: self.plan_hits.get(),
+            plan_misses: self.plan_misses.get(),
+            result_hits: self.result_hits.get(),
+            result_misses: self.result_misses.get(),
+            result_evicted: self.result_evicted.get(),
+            result_invalidated: self.result_invalidated.get(),
+        }
+    }
 }
 
 /// The multi-user admission front over one executor-owned [`GapsSystem`].
@@ -229,6 +339,17 @@ pub struct AdmissionQueue {
     inner: Mutex<Inner>,
     /// Signaled on every enqueue and on shutdown.
     arrived: Condvar,
+    /// Registry-backed admission counters (see [`QueueMetrics`]).
+    metrics: QueueMetrics,
+}
+
+/// The unified Retry-After hint (milliseconds) every shed path derives
+/// from the same three inputs: the linger budget as the base wait, and
+/// one extra base period per full round already waiting ahead of the
+/// retrier. Replaces the two divergent constants the acceptor shed and
+/// the queue high-water shed used to carry.
+pub fn retry_after_hint(base_ms: u64, depth: usize, max_batch: usize) -> u64 {
+    base_ms.max(1) * (1 + (depth / max_batch.max(1)) as u64)
 }
 
 /// A submitted request's pending response.
@@ -307,12 +428,22 @@ pub struct AdmittedBatch {
     /// Per-request single-flight attachments (parallel to `replies`):
     /// identical submissions that share the request's one execution.
     extra_replies: Vec<Vec<mpsc::Sender<Result<SearchResponse, SearchError>>>>,
+    /// Per-request enqueue instants (parallel to `requests`) — the
+    /// anchor of each request's `queued` trace span.
+    arrivals: Vec<Instant>,
 }
 
 impl AdmittedBatch {
     /// The round's requests, in drain order.
     pub fn requests(&self) -> &[SearchRequest] {
         &self.requests
+    }
+
+    /// Seconds each request spent queued (arrival to now), in drain
+    /// order. Measured once by the executor at round start.
+    pub fn queued_seconds(&self) -> Vec<f64> {
+        let now = Instant::now();
+        self.arrivals.iter().map(|a| now.duration_since(*a).as_secs_f64()).collect()
     }
 
     /// Deliver the round's results (one per request, same order). A
@@ -333,8 +464,21 @@ impl AdmittedBatch {
 }
 
 impl AdmissionQueue {
-    /// An open queue. `max_batch` is clamped up to 1.
-    pub fn new(mut cfg: QueueConfig) -> AdmissionQueue {
+    /// An open queue with a private registry (standalone use: unit
+    /// tests, benches). `max_batch` is clamped up to 1.
+    pub fn new(cfg: QueueConfig) -> AdmissionQueue {
+        AdmissionQueue::with_registry(cfg, &Registry::new(), None)
+    }
+
+    /// An open queue whose counters live in `registry` — the serving
+    /// path, where `/metrics` scrapes every shard's queue from one
+    /// place. `shard` becomes the cells' `shard` label (`None` for an
+    /// unlabeled standalone queue).
+    pub fn with_registry(
+        mut cfg: QueueConfig,
+        registry: &Registry,
+        shard: Option<usize>,
+    ) -> AdmissionQueue {
         cfg.max_batch = cfg.max_batch.max(1);
         AdmissionQueue {
             cfg,
@@ -342,10 +486,10 @@ impl AdmissionQueue {
                 pending: VecDeque::new(),
                 ingest_pending: VecDeque::new(),
                 open: true,
-                stats: QueueStats::default(),
                 index_health: None,
             }),
             arrived: Condvar::new(),
+            metrics: QueueMetrics::new(registry, shard),
         }
     }
 
@@ -356,7 +500,22 @@ impl AdmissionQueue {
 
     /// Snapshot of the admission counters.
     pub fn stats(&self) -> QueueStats {
-        self.inner.lock().unwrap().stats
+        self.metrics.snapshot()
+    }
+
+    /// Distinct pending search slots right now.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    /// This queue's Retry-After hint at its *current* depth (see
+    /// [`retry_after_hint`]).
+    pub fn retry_after_ms(&self) -> u64 {
+        retry_after_hint(
+            self.cfg.max_linger.as_millis().max(1) as u64,
+            self.depth(),
+            self.cfg.max_batch,
+        )
     }
 
     /// Enqueue one request without blocking for its result.
@@ -374,7 +533,7 @@ impl AdmissionQueue {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
         let arrived = Instant::now();
-        let retry_after_ms = self.cfg.max_linger.as_millis().max(1) as u64;
+        let base_ms = self.cfg.max_linger.as_millis().max(1) as u64;
         for request in requests {
             let (tx, rx) = mpsc::channel();
             if !inner.open {
@@ -397,23 +556,27 @@ impl AdmissionQueue {
                 match flight {
                     Some(p) => {
                         p.extra_replies.push(tx);
-                        inner.stats.submitted += 1;
-                        inner.stats.singleflight += 1;
+                        self.metrics.submitted.inc();
+                        self.metrics.singleflight.inc();
                     }
                     None if inner.pending.len() >= self.cfg.max_depth => {
                         // Load shedding: fail fast at the high-water mark
-                        // rather than queue unbounded latency.
-                        inner.stats.shed += 1;
+                        // rather than queue unbounded latency. The hint
+                        // scales with how much work is already waiting.
+                        self.metrics.shed.inc();
+                        let retry_after_ms =
+                            retry_after_hint(base_ms, inner.pending.len(), self.cfg.max_batch);
                         let _ = tx.send(Err(SearchError::Overloaded { retry_after_ms }));
                     }
                     None => {
-                        inner.stats.submitted += 1;
+                        self.metrics.submitted.inc();
                         inner.pending.push_back(Pending {
                             request,
                             arrived,
                             reply: tx,
                             extra_replies: Vec::new(),
                         });
+                        self.metrics.depth.set(inner.pending.len() as i64);
                     }
                 }
             }
@@ -440,8 +603,8 @@ impl AdmissionQueue {
         if !inner.open {
             let _ = tx.send(Err(SearchError::unavailable("admission queue is shut down")));
         } else {
-            inner.stats.ingest_batches += 1;
-            inner.stats.ingest_docs += docs.len() as u64;
+            self.metrics.ingest_batches.inc();
+            self.metrics.ingest_docs.add(docs.len() as u64);
             inner.ingest_pending.push_back(IngestPending { docs, reply: tx });
         }
         drop(inner);
@@ -472,13 +635,12 @@ impl AdmissionQueue {
     /// absolute (the executor's caches own the counters); `GET /healthz`
     /// reads them back through [`AdmissionQueue::stats`].
     pub fn publish_cache_stats(&self, plan: (u64, u64), result: CacheCounters) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.stats.plan_hits = plan.0;
-        inner.stats.plan_misses = plan.1;
-        inner.stats.result_hits = result.hits;
-        inner.stats.result_misses = result.misses;
-        inner.stats.result_evicted = result.evicted;
-        inner.stats.result_invalidated = result.invalidated;
+        self.metrics.plan_hits.store(plan.0);
+        self.metrics.plan_misses.store(plan.1);
+        self.metrics.result_hits.store(result.hits);
+        self.metrics.result_misses.store(result.misses);
+        self.metrics.result_evicted.store(result.evicted);
+        self.metrics.result_invalidated.store(result.invalidated);
     }
 
     /// Submit a pre-formed batch and block for all of its results
@@ -528,9 +690,11 @@ impl AdmissionQueue {
 
             let n = inner.pending.len().min(self.cfg.max_batch);
             let drained: Vec<Pending> = inner.pending.drain(..n).collect();
+            self.metrics.depth.set(inner.pending.len() as i64);
             let mut requests = Vec::with_capacity(n);
             let mut replies = Vec::with_capacity(n);
             let mut extra_replies = Vec::with_capacity(n);
+            let mut arrivals = Vec::with_capacity(n);
             for p in drained {
                 let blown = p
                     .request
@@ -540,7 +704,7 @@ impl AdmissionQueue {
                 if blown {
                     // Deadlined requests never carry single-flight
                     // attachments, so only one ticket settles here.
-                    inner.stats.expired += 1;
+                    self.metrics.expired.inc();
                     let ms = p.request.deadline_ms.unwrap_or(0);
                     let _ = p.reply.send(Err(SearchError::DeadlineExceeded { deadline_ms: ms }));
                     continue;
@@ -548,6 +712,7 @@ impl AdmissionQueue {
                 requests.push(p.request);
                 replies.push(p.reply);
                 extra_replies.push(p.extra_replies);
+                arrivals.push(p.arrived);
             }
             if requests.is_empty() {
                 // Every drained request had expired in the queue; go back
@@ -556,16 +721,16 @@ impl AdmissionQueue {
             }
             let n = requests.len();
             let attached: usize = extra_replies.iter().map(Vec::len).sum();
-            inner.stats.batches += 1;
+            self.metrics.batches.inc();
             // Attachments are answered by this round too — `executed`
             // stays in lockstep with `submitted` — but they hold no
             // queue slot, so round-shape counters ignore them.
-            inner.stats.executed += (n + attached) as u64;
+            self.metrics.executed.add((n + attached) as u64);
             if n >= 2 {
-                inner.stats.coalesced += n as u64;
+                self.metrics.coalesced.add(n as u64);
             }
-            inner.stats.largest_batch = inner.stats.largest_batch.max(n as u64);
-            return Some(AdmittedBatch { requests, replies, extra_replies });
+            self.metrics.largest_batch.record_max(n as i64);
+            return Some(AdmittedBatch { requests, replies, extra_replies, arrivals });
         }
     }
 
@@ -638,6 +803,7 @@ impl AdmissionQueue {
         for p in inner.ingest_pending.drain(..) {
             let _ = p.reply.send(Err(SearchError::internal("serve executor terminated")));
         }
+        self.metrics.depth.set(0);
         drop(inner);
         self.arrived.notify_all();
     }
@@ -668,6 +834,131 @@ impl AdmissionQueue {
 /// no longer exists. (After a clean shutdown-and-drain this is a
 /// no-op.)
 pub fn run(queue: &AdmissionQueue, sys: &mut GapsSystem) {
+    run_with_obs(queue, sys, &ServeObs::default(), 0);
+}
+
+/// Failover counters as registry cells: absolute publishes from
+/// [`GapsSystem::failover_stats`] after every search round (the system
+/// owns the running totals).
+struct FailoverCells {
+    jobs_failed: Counter,
+    replans: Counter,
+    nodes_marked_down: Counter,
+    probes: Counter,
+    recoveries: Counter,
+    degraded_responses: Counter,
+}
+
+impl FailoverCells {
+    fn new(registry: &Registry, shard: &str) -> FailoverCells {
+        let labels = [("shard", shard)];
+        let c = |name: &str, help: &str| registry.counter_with(name, help, &labels);
+        FailoverCells {
+            jobs_failed: c(
+                "gaps_failover_jobs_failed_total",
+                "Per-node jobs that failed during a fan-out round",
+            ),
+            replans: c(
+                "gaps_failover_replans_total",
+                "Re-planning rounds triggered by failed jobs",
+            ),
+            nodes_marked_down: c(
+                "gaps_failover_nodes_marked_down_total",
+                "Nodes marked Down because one of their jobs failed",
+            ),
+            probes: c(
+                "gaps_failover_probes_total",
+                "Health probes issued to downed nodes whose probation elapsed",
+            ),
+            recoveries: c(
+                "gaps_failover_recoveries_total",
+                "Probes that came back healthy (node rejoined)",
+            ),
+            degraded_responses: c(
+                "gaps_failover_degraded_responses_total",
+                "Responses returned with degraded=true",
+            ),
+        }
+    }
+
+    fn publish(&self, s: &FailoverStats) {
+        self.jobs_failed.store(s.jobs_failed);
+        self.replans.store(s.replans);
+        self.nodes_marked_down.store(s.nodes_marked_down);
+        self.probes.store(s.probes);
+        self.recoveries.store(s.recoveries);
+        self.degraded_responses.store(s.degraded_responses);
+    }
+}
+
+/// Index-health gauges/counters as registry cells: absolute publishes
+/// from [`GapsSystem::index_health`] at start and after ingest rounds.
+struct IndexCells {
+    epoch: Gauge,
+    searchable_docs: Gauge,
+    buffered_docs: Gauge,
+    segments: Gauge,
+    seals: Counter,
+    merges: Counter,
+}
+
+impl IndexCells {
+    fn new(registry: &Registry, shard: &str) -> IndexCells {
+        let labels = [("shard", shard)];
+        IndexCells {
+            epoch: registry.gauge_with(
+                "gaps_index_epoch",
+                "Index epoch (bumped by every seal and merge)",
+                &labels,
+            ),
+            searchable_docs: registry.gauge_with(
+                "gaps_index_searchable_docs",
+                "Searchable documents (base corpus + sealed overlays)",
+                &labels,
+            ),
+            buffered_docs: registry.gauge_with(
+                "gaps_index_buffered_docs",
+                "Ingested documents still buffered (unsearchable until their seal)",
+                &labels,
+            ),
+            segments: registry.gauge_with(
+                "gaps_index_segments",
+                "Sealed overlay segments across all sources",
+                &labels,
+            ),
+            seals: registry.counter_with(
+                "gaps_index_seals_total",
+                "Cumulative overlay seals",
+                &labels,
+            ),
+            merges: registry.counter_with(
+                "gaps_index_merges_total",
+                "Cumulative overlay compaction merges",
+                &labels,
+            ),
+        }
+    }
+
+    fn publish(&self, h: &IndexHealth) {
+        self.epoch.set(h.epoch as i64);
+        self.searchable_docs.set(h.searchable_docs as i64);
+        self.buffered_docs.set(h.buffered_docs as i64);
+        self.segments.set(h.segments.iter().map(|(_, n)| *n as i64).sum());
+        self.seals.store(h.seals);
+        self.merges.store(h.merges);
+    }
+}
+
+/// [`run`] with observability: per-stage latency histograms, per-shard
+/// failover/index cells, per-request trace trees (the `request` root
+/// wrapping the coordinator's `search` subtree), and the slow-query
+/// log. `shard` labels this executor's cells and spans.
+///
+/// Everything here is diagnostic: results delivered to submitters are
+/// bit-identical to [`run`] without observability, except that each
+/// successful response's `trace` (and `explain.stages`, when explain
+/// was requested) carries the request's stage-timing tree.
+pub fn run_with_obs(queue: &AdmissionQueue, sys: &mut GapsSystem, obs: &ServeObs, shard: usize) {
     struct AbortOnExit<'a>(&'a AdmissionQueue);
     impl Drop for AbortOnExit<'_> {
         fn drop(&mut self) {
@@ -675,35 +966,76 @@ pub fn run(queue: &AdmissionQueue, sys: &mut GapsSystem) {
         }
     }
     let _guard = AbortOnExit(queue);
-    queue.publish_index_health(sys.index_health());
+    let shard_label = shard.to_string();
+    let stage_hist = |stage: &str| {
+        obs.registry.histogram_with(
+            "gaps_stage_seconds",
+            "Request latency by lifecycle stage",
+            LATENCY_BOUNDS_S,
+            &[("stage", stage), ("shard", &shard_label)],
+        )
+    };
+    let h_queued = stage_hist("queued");
+    let h_probe = stage_hist("probe");
+    let h_search = stage_hist("search");
+    let h_compile = stage_hist("compile");
+    let h_plan = stage_hist("plan");
+    let h_execute = stage_hist("execute");
+    let h_merge = stage_hist("merge");
+    let h_store = stage_hist("store");
+    let h_request = obs.registry.histogram_with(
+        "gaps_request_seconds",
+        "End-to-end request latency (queue arrival to settle)",
+        LATENCY_BOUNDS_S,
+        &[("shard", &shard_label)],
+    );
+    let slow_total = obs.registry.counter_with(
+        "gaps_requests_slow_total",
+        "Requests that crossed the obs.slow_query_ms threshold",
+        &[("shard", &shard_label)],
+    );
+    let failover = FailoverCells::new(&obs.registry, &shard_label);
+    let index_cells = IndexCells::new(&obs.registry, &shard_label);
+
+    let health = sys.index_health();
+    index_cells.publish(&health);
+    queue.publish_index_health(health);
+    failover.publish(&sys.failover_stats());
     let mut cache = ResultCache::new(&sys.cfg.cache);
     let mut epoch = sys.index_epoch();
     while let Some(round) = queue.next_round() {
         match round {
             Round::Search(batch) => {
+                let round_clock = WallClock::start();
+                let queued_s = batch.queued_seconds();
                 let requests = batch.requests();
                 let mut results: Vec<Option<Result<SearchResponse, SearchError>>> =
                     requests.iter().map(|_| None).collect();
+                let mut fingerprints: Vec<u64> = vec![0; requests.len()];
                 // Probe phase: compile (through the plan cache) and
                 // answer result-cache hits without touching the grid.
+                let probe_clock = WallClock::start();
                 let mut miss_requests: Vec<SearchRequest> = Vec::new();
                 let mut miss_slots: Vec<(usize, Option<CompiledRequest>)> = Vec::new();
                 for (i, req) in requests.iter().enumerate() {
                     match sys.compile_request(req) {
-                        Ok(compiled) => match cache.get(&compiled, epoch) {
-                            Some(mut resp) => {
-                                // The entry may have been written by an
-                                // equivalent-but-reordered query; echo
-                                // *this* submitter's raw text, exactly
-                                // as cold execution would.
-                                resp.query = req.query.clone();
-                                results[i] = Some(Ok(resp));
+                        Ok(compiled) => {
+                            fingerprints[i] = compiled.fingerprint;
+                            match cache.get(&compiled, epoch) {
+                                Some(mut resp) => {
+                                    // The entry may have been written by an
+                                    // equivalent-but-reordered query; echo
+                                    // *this* submitter's raw text, exactly
+                                    // as cold execution would.
+                                    resp.query = req.query.clone();
+                                    results[i] = Some(Ok(resp));
+                                }
+                                None => {
+                                    miss_requests.push(req.clone());
+                                    miss_slots.push((i, Some(compiled)));
+                                }
                             }
-                            None => {
-                                miss_requests.push(req.clone());
-                                miss_slots.push((i, Some(compiled)));
-                            }
-                        },
+                        }
                         // Uncompilable requests take the miss path so
                         // the error a submitter sees is exactly the one
                         // `search_batch` produces.
@@ -713,24 +1045,108 @@ pub fn run(queue: &AdmissionQueue, sys: &mut GapsSystem) {
                         }
                     }
                 }
+                let probe_s = probe_clock.elapsed_s();
                 // Execute phase: only the misses reach the grid.
+                let mut store_s = 0.0f64;
                 if !miss_requests.is_empty() {
                     let executed = sys.search_batch(&miss_requests);
+                    let store_clock = WallClock::start();
                     for ((i, compiled), result) in miss_slots.into_iter().zip(executed) {
                         if let (Some(compiled), Ok(resp)) = (&compiled, &result) {
                             // Degraded responses rank only the reachable
                             // corpus — never cache them.
                             if !resp.degraded {
-                                cache.insert(compiled, epoch, resp.clone());
+                                // The stored copy drops its trace: stage
+                                // timings describe one execution, and a
+                                // later hit gets its own request tree.
+                                let mut entry = resp.clone();
+                                entry.trace = None;
+                                cache.insert(compiled, epoch, entry);
                             }
                         }
                         results[i] = Some(result);
                     }
+                    store_s = store_clock.elapsed_s();
                 }
                 queue.publish_cache_stats(sys.plan_cache_stats(), cache.counters());
-                batch.complete(
-                    results.into_iter().map(|r| r.expect("every slot settled")).collect(),
-                );
+                failover.publish(&sys.failover_stats());
+
+                // Trace assembly, stage histograms, and the slow log —
+                // one `request` root per settled slot.
+                let round_s = round_clock.elapsed_s();
+                let mut final_results = Vec::with_capacity(results.len());
+                for (i, settled) in results.into_iter().enumerate() {
+                    let mut settled = settled.expect("every slot settled");
+                    let queued = queued_s.get(i).copied().unwrap_or(0.0);
+                    let total_s = queued + round_s;
+                    let mut root = TraceSpan::new("request", total_s)
+                        .with_meta("shard", shard_label.clone());
+                    root.push_child(TraceSpan::new("queued", queued));
+                    root.push_child(TraceSpan::new("probe", probe_s));
+                    match &mut settled {
+                        Ok(resp) => {
+                            match resp.trace.take() {
+                                Some(search_span) => {
+                                    h_search.observe(search_span.seconds);
+                                    if let Some(s) = search_span.find("compile") {
+                                        h_compile.observe(s.seconds);
+                                    }
+                                    if let Some(s) = search_span.find("plan") {
+                                        h_plan.observe(s.seconds);
+                                    }
+                                    if let Some(s) = search_span.find("execute") {
+                                        h_execute.observe(s.seconds);
+                                    }
+                                    if let Some(s) = search_span.find("merge") {
+                                        h_merge.observe(s.seconds);
+                                    }
+                                    root.push_child(search_span);
+                                }
+                                // A result-cache hit never reached the
+                                // grid: no `search` child, marked on
+                                // the root instead.
+                                None => root.meta.push((
+                                    "result_cache".to_string(),
+                                    "hit".to_string(),
+                                )),
+                            }
+                            root.push_child(TraceSpan::new("store", store_s));
+                            resp.trace = Some(root.clone());
+                            if let Some(e) = resp.explain.as_mut() {
+                                e.stages = Some(root.clone());
+                            }
+                        }
+                        Err(_) => root.push_child(TraceSpan::new("store", store_s)),
+                    }
+                    h_queued.observe(queued);
+                    h_probe.observe(probe_s);
+                    h_store.observe(store_s);
+                    h_request.observe(total_s);
+                    if total_s * 1e3 >= obs.slow_query_ms as f64 {
+                        slow_total.inc();
+                        let (degraded, error, counters) = match &settled {
+                            Ok(resp) => (
+                                resp.degraded,
+                                None,
+                                resp.explain.as_ref().map(|e| counters_to_json(&e.counters)),
+                            ),
+                            Err(e) => (false, Some(e.kind().to_string()), None),
+                        };
+                        obs.slow.record(SlowEntry {
+                            fingerprint: fingerprints[i],
+                            query: requests[i].query.clone(),
+                            shard,
+                            epoch,
+                            total_s,
+                            degraded,
+                            error,
+                            counters,
+                            stages: Some(root.clone()),
+                        });
+                    }
+                    final_results.push(settled);
+                }
+                batch.complete(final_results);
             }
             Round::Ingest(mut batch) => {
                 let report = sys.ingest(batch.take_docs());
@@ -743,7 +1159,9 @@ pub fn run(queue: &AdmissionQueue, sys: &mut GapsSystem) {
                     epoch = now;
                 }
                 queue.publish_cache_stats(sys.plan_cache_stats(), cache.counters());
-                queue.publish_index_health(sys.index_health());
+                let health = sys.index_health();
+                index_cells.publish(&health);
+                queue.publish_index_health(health);
                 batch.complete(Ok(report));
             }
         }

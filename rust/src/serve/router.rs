@@ -26,15 +26,17 @@
 //! served/reused request counts, published on `GET /healthz` next to
 //! the per-shard admission stats.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{IndexHealth, IngestReport, SearchResponse};
 use crate::corpus::Publication;
+use crate::obs::{Counter, Gauge, Registry};
 use crate::search::{SearchError, SearchRequest};
 use crate::util::json::Json;
 
 use super::queue::{AdmissionQueue, QueueStats};
+use super::ServeObs;
 
 /// Snapshot of the HTTP front's connection counters (the `/healthz`
 /// `http` object).
@@ -70,57 +72,112 @@ impl HttpStats {
 
 /// Live connection counters for the HTTP front. The acceptor gates on
 /// `active` (connections beyond the handler-pool size are shed), the
-/// handlers count requests, and `GET /healthz` snapshots the lot.
-#[derive(Debug, Default)]
+/// handlers count requests, and `GET /healthz` snapshots the lot. The
+/// counters are [`Registry`] cells, so the same numbers appear under
+/// `gaps_http_*` on `GET /metrics` and can be frozen together with the
+/// per-shard admission counters for an atomically consistent `/healthz`.
+#[derive(Debug)]
 pub struct HttpCounters {
-    accepted: AtomicU64,
-    active: AtomicU64,
-    shed: AtomicU64,
-    requests: AtomicU64,
-    reused: AtomicU64,
+    accepted: Counter,
+    active: Gauge,
+    shed: Counter,
+    requests: Counter,
+    reused: Counter,
+}
+
+impl Default for HttpCounters {
+    /// Counters backed by a private throwaway registry (tests and the
+    /// non-observability constructors).
+    fn default() -> HttpCounters {
+        HttpCounters::new(&Registry::new())
+    }
 }
 
 impl HttpCounters {
+    /// Register the `gaps_http_*` family on `registry` and return the
+    /// live cells.
+    pub fn new(registry: &Registry) -> HttpCounters {
+        HttpCounters {
+            accepted: registry.counter(
+                "gaps_http_accepted_total",
+                "Connections accepted into the handler pool.",
+            ),
+            active: registry.gauge(
+                "gaps_http_active",
+                "Connections currently held by a handler.",
+            ),
+            shed: registry.counter(
+                "gaps_http_shed_total",
+                "Connections refused at the acceptor because every handler was busy.",
+            ),
+            requests: registry.counter(
+                "gaps_http_requests_total",
+                "Requests served across all connections.",
+            ),
+            reused: registry.counter(
+                "gaps_http_reused_total",
+                "Requests served on an already-used (keep-alive) connection.",
+            ),
+        }
+    }
+
     /// Connections currently held by handlers.
     pub fn active(&self) -> u64 {
-        self.active.load(Ordering::SeqCst)
+        self.active.get().max(0) as u64
     }
 
     /// Snapshot every counter.
     pub fn stats(&self) -> HttpStats {
         HttpStats {
-            accepted: self.accepted.load(Ordering::SeqCst),
-            active: self.active.load(Ordering::SeqCst),
-            shed: self.shed.load(Ordering::SeqCst),
-            requests: self.requests.load(Ordering::SeqCst),
-            reused: self.reused.load(Ordering::SeqCst),
+            accepted: self.accepted.get(),
+            active: self.active.get().max(0) as u64,
+            shed: self.shed.get(),
+            requests: self.requests.get(),
+            reused: self.reused.get(),
         }
     }
 
     /// Acceptor side: a connection enters the handler pool.
     pub(crate) fn begin_connection(&self) {
-        self.accepted.fetch_add(1, Ordering::SeqCst);
-        self.active.fetch_add(1, Ordering::SeqCst);
+        self.accepted.inc();
+        self.active.add(1);
     }
 
     /// Handler side: a connection's handler finished (however it ended).
     pub(crate) fn end_connection(&self) {
-        self.active.fetch_sub(1, Ordering::SeqCst);
+        self.active.sub(1);
     }
 
     /// Acceptor side: a connection was refused at the pool bound.
     pub(crate) fn shed_connection(&self) {
-        self.shed.fetch_add(1, Ordering::SeqCst);
+        self.shed.inc();
     }
 
     /// Handler side: one request was served on a connection; `reused`
     /// marks requests after the first on the same socket.
     pub(crate) fn count_request(&self, reused: bool) {
-        self.requests.fetch_add(1, Ordering::SeqCst);
+        self.requests.inc();
         if reused {
-            self.reused.fetch_add(1, Ordering::SeqCst);
+            self.reused.inc();
         }
     }
+}
+
+/// Point-in-time view of the whole serving plane, taken under one
+/// registry freeze so the queue, HTTP, and index numbers are mutually
+/// consistent (satellite fix: `/healthz` previously read each family
+/// separately and could observe a shard's `submitted` bump without the
+/// HTTP `requests` bump that preceded it in program order).
+#[derive(Debug, Clone)]
+pub struct HealthSnapshot {
+    /// Aggregate admission counters (sums; `largest_batch` is a max).
+    pub queue: QueueStats,
+    /// Per-shard admission counters, in shard order.
+    pub per_shard: Vec<QueueStats>,
+    /// HTTP front counters.
+    pub http: HttpStats,
+    /// Index health from shard 0's executor, if published yet.
+    pub index: Option<IndexHealth>,
 }
 
 /// Round-robin front over N executor shards (each an [`AdmissionQueue`]
@@ -135,17 +192,30 @@ pub struct ShardRouter {
     /// diverge.
     ingest_lock: Mutex<()>,
     http: HttpCounters,
+    /// Observability plumbing shared with the executors: the registry
+    /// `GET /metrics` renders and the slow-query ring `GET /debug/slow`
+    /// dumps.
+    obs: ServeObs,
 }
 
 impl ShardRouter {
-    /// A router over the given shards (at least one).
+    /// A router over the given shards (at least one), with a private
+    /// observability sink (tests, embedded use).
     pub fn new(shards: Vec<Arc<AdmissionQueue>>) -> ShardRouter {
+        ShardRouter::with_obs(shards, ServeObs::default())
+    }
+
+    /// A router wired to a shared observability sink. Pass the same
+    /// [`ServeObs`] the shards' queues were registered on so `GET
+    /// /metrics` sees the whole serving plane.
+    pub fn with_obs(shards: Vec<Arc<AdmissionQueue>>, obs: ServeObs) -> ShardRouter {
         assert!(!shards.is_empty(), "router needs at least one shard");
         ShardRouter {
             shards,
             next: AtomicUsize::new(0),
             ingest_lock: Mutex::new(()),
-            http: HttpCounters::default(),
+            http: HttpCounters::new(&obs.registry),
+            obs,
         }
     }
 
@@ -167,6 +237,24 @@ impl ShardRouter {
     /// The HTTP front's connection counters.
     pub fn http(&self) -> &HttpCounters {
         &self.http
+    }
+
+    /// The observability sink this router (and its shards' executors)
+    /// publish into.
+    pub fn obs(&self) -> &ServeObs {
+        &self.obs
+    }
+
+    /// `Retry-After` hint for the acceptor's shed response: the worst
+    /// (deepest-backlog) shard's hint, so a retrying client waits long
+    /// enough for rotation to find it a free shard. See
+    /// [`super::retry_after_hint`] for the formula.
+    pub fn retry_after_ms(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|q| q.retry_after_ms())
+            .max()
+            .unwrap_or(1000)
     }
 
     /// Next shard in rotation.
@@ -226,6 +314,29 @@ impl ShardRouter {
     /// Per-shard admission counters, in shard order.
     pub fn per_shard_stats(&self) -> Vec<QueueStats> {
         self.shards.iter().map(|q| q.stats()).collect()
+    }
+
+    /// Atomically consistent `/healthz` snapshot: every counter family
+    /// is read under one [`Registry::freeze`], so no counter can move
+    /// between reading the HTTP numbers and the queue numbers. Because
+    /// executors bump `submitted` *after* the front bumps `requests`,
+    /// a frozen snapshot always shows `http.requests >=` the sum of
+    /// shard `submitted` — the drift the unfrozen reads allowed.
+    ///
+    /// Lock order matters: [`ShardRouter::index_health`] takes a queue
+    /// mutex whose holder may be mid-bump on a registry cell, so it must
+    /// run *before* the freeze, never under it.
+    pub fn snapshot(&self) -> HealthSnapshot {
+        let index = self.index_health();
+        let frozen = self.obs.registry.freeze();
+        let per_shard: Vec<QueueStats> = self.shards.iter().map(|q| q.stats()).collect();
+        let mut queue = QueueStats::default();
+        for s in &per_shard {
+            queue.absorb(s);
+        }
+        let http = self.http.stats();
+        drop(frozen);
+        HealthSnapshot { queue, per_shard, http, index }
     }
 
     /// Index health as published by shard 0's executor. Every shard is a
@@ -362,5 +473,58 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("accepted").unwrap().as_i64(), Some(2));
         assert_eq!(j.get("reused").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn snapshot_freezes_http_and_queue_families_together() {
+        let obs = ServeObs::default();
+        let queues: Vec<Arc<AdmissionQueue>> = (0..2)
+            .map(|i| {
+                Arc::new(AdmissionQueue::with_registry(
+                    QueueConfig {
+                        max_batch: 4,
+                        max_linger: Duration::ZERO,
+                        ..QueueConfig::default()
+                    },
+                    &obs.registry,
+                    Some(i),
+                ))
+            })
+            .collect();
+        let router = ShardRouter::with_obs(queues, obs);
+        router.http().begin_connection();
+        router.http().count_request(false);
+        let _t = router.shard(0).enqueue(SearchRequest::new("a"));
+        let snap = router.snapshot();
+        assert_eq!(snap.http.accepted, 1);
+        assert_eq!(snap.http.requests, 1);
+        assert_eq!(snap.queue.submitted, 1);
+        assert_eq!(snap.per_shard.len(), 2);
+        assert_eq!(snap.per_shard[0].submitted, 1);
+        assert!(snap.index.is_none(), "no executor has published health yet");
+        // The same cells back the Prometheus exposition.
+        let text = router.obs().registry.render_text();
+        assert!(text.contains("gaps_http_requests_total 1"), "{text}");
+        assert!(
+            text.contains("gaps_queue_submitted_total{shard=\"0\"} 1"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn retry_after_takes_the_deepest_shard() {
+        let router = ShardRouter::new(shards(2));
+        // Empty queues: hint is the base linger (clamped to >= 1ms).
+        let base = router.retry_after_ms();
+        assert!(base >= 1);
+        // Back up one shard past max_batch: its hint dominates.
+        for i in 0..5 {
+            let _t = router.shard(1).enqueue(SearchRequest::new(format!("q{i}")));
+        }
+        assert!(
+            router.retry_after_ms() >= 2 * base,
+            "deep shard must raise the hint: {} vs {base}",
+            router.retry_after_ms()
+        );
     }
 }

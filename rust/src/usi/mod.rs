@@ -276,6 +276,7 @@ mod tests {
             degraded: false,
             missing_sources: Vec::new(),
             explain: None,
+            trace: None,
         };
         assert!(format_response(&resp).contains("no results"));
     }

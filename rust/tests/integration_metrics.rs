@@ -1,0 +1,514 @@
+//! Observability conformance over the wire: `/metrics` exposition
+//! format, `/healthz` snapshot atomicity under concurrent load,
+//! `/debug/slow` ring behaviour, and the unified `Retry-After` hint on
+//! both shed paths (admission high-water and acceptor overflow).
+//!
+//! The exposition checks use a test-side Prometheus text parser: every
+//! sample must belong to a `# TYPE`-declared family, label keys must be
+//! stable within a family and across scrapes, and histograms must
+//! expose cumulative buckets terminated by `le="+Inf"` that equals the
+//! `_count` sample.
+//!
+//! CI runs this file as an explicit job step (see
+//! `.github/workflows/ci.yml`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use gaps::config::GapsConfig;
+use gaps::coordinator::GapsSystem;
+use gaps::obs::{Registry, SlowLog};
+use gaps::serve::{
+    retry_after_hint, HttpConfig, HttpServer, QueueConfig, SearchServer, ServeObs, ShutdownHandle,
+};
+use gaps::util::json::Json;
+
+fn small_cfg() -> GapsConfig {
+    let mut cfg = GapsConfig::default();
+    cfg.workload.num_docs = 400;
+    cfg.workload.sub_shards = 4;
+    cfg.search.use_xla = false;
+    cfg
+}
+
+/// A sharded serving stack with observability on, torn down on drop.
+struct TestStack {
+    addr: SocketAddr,
+    stopper: ShutdownHandle,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    server: Option<SearchServer>,
+}
+
+impl TestStack {
+    fn start(shards: usize, obs: ServeObs, http_cfg: HttpConfig) -> TestStack {
+        let cfg = small_cfg();
+        let server =
+            SearchServer::start_sharded_with_obs(QueueConfig::default(), shards, obs, move |_| {
+                GapsSystem::deploy(cfg.clone(), 3)
+            })
+            .unwrap();
+        let http = HttpServer::bind_with("127.0.0.1:0", server.router(), http_cfg).unwrap();
+        let addr = http.local_addr().unwrap();
+        let stopper = http.shutdown_handle().unwrap();
+        let accept_thread = std::thread::spawn(move || {
+            http.serve().unwrap();
+        });
+        TestStack { addr, stopper, accept_thread: Some(accept_thread), server: Some(server) }
+    }
+}
+
+impl Drop for TestStack {
+    fn drop(&mut self) {
+        self.stopper.stop();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+        }
+    }
+}
+
+/// One request on a fresh closed connection; returns status + raw body.
+fn http_text(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: gaps-test\r\n");
+    if let Some(body) = body {
+        req.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            body.len()
+        ));
+    }
+    req.push_str("Connection: close\r\n\r\n");
+    if let Some(body) = body {
+        req.push_str(body);
+    }
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("receive");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("").to_string();
+    (status, body)
+}
+
+fn http_json(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, Json) {
+    let (status, text) = http_text(addr, method, path, body);
+    (status, Json::parse(&text).unwrap_or_else(|e| panic!("bad body {text:?}: {e}")))
+}
+
+// ---------------------------------------------------------------------
+// Test-side Prometheus text parser
+// ---------------------------------------------------------------------
+
+/// One parsed sample: full sample name (`family`, `family_bucket`, ...),
+/// label pairs in exposition order, numeric value.
+#[derive(Debug, Clone)]
+struct Sample {
+    name: String,
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+/// A parsed scrape: family name -> (declared kind, samples).
+type Scrape = BTreeMap<String, (String, Vec<Sample>)>;
+
+fn parse_labels(s: &str) -> Vec<(String, String)> {
+    // `k="v",k="v"` — values in this codebase never contain commas or
+    // escaped quotes, but reject anything that fails to split cleanly.
+    let mut out = Vec::new();
+    for pair in s.split(',') {
+        let (k, v) = pair.split_once('=').unwrap_or_else(|| panic!("bad label pair {pair:?}"));
+        let v = v
+            .strip_prefix('"')
+            .and_then(|v| v.strip_suffix('"'))
+            .unwrap_or_else(|| panic!("unquoted label value in {pair:?}"));
+        out.push((k.to_string(), v.to_string()));
+    }
+    out
+}
+
+/// Map a sample name back to its family: histogram samples carry a
+/// `_bucket`/`_sum`/`_count` suffix on the family name.
+fn family_of(sample_name: &str, declared: &BTreeSet<String>) -> String {
+    if declared.contains(sample_name) {
+        return sample_name.to_string();
+    }
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = sample_name.strip_suffix(suffix) {
+            if declared.contains(base) {
+                return base.to_string();
+            }
+        }
+    }
+    panic!("sample {sample_name:?} has no # TYPE declaration");
+}
+
+/// Parse a full exposition and enforce structural conformance:
+/// `# TYPE` before samples, known kinds, consistent label keys within
+/// a family, and well-formed cumulative histograms.
+fn parse_scrape(text: &str) -> Scrape {
+    let mut kinds: BTreeMap<String, String> = BTreeMap::new();
+    let mut helps: BTreeSet<String> = BTreeSet::new();
+    let mut samples: Vec<Sample> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().expect("HELP name");
+            helps.insert(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().expect("TYPE name").to_string();
+            let kind = parts.next().expect("TYPE kind").to_string();
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind.as_str()),
+                "unknown kind {kind:?} for {name:?}"
+            );
+            assert!(kinds.insert(name, kind).is_none(), "duplicate # TYPE in:\n{text}");
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment line {line:?}");
+        let (name_part, value) = line.rsplit_once(' ').expect("sample line");
+        let value: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        let (name, labels) = match name_part.split_once('{') {
+            Some((name, rest)) => {
+                let rest = rest.strip_suffix('}').unwrap_or_else(|| panic!("bad {line:?}"));
+                (name.to_string(), parse_labels(rest))
+            }
+            None => (name_part.to_string(), Vec::new()),
+        };
+        samples.push(Sample { name, labels, value });
+    }
+
+    let declared: BTreeSet<String> = kinds.keys().cloned().collect();
+    let mut scrape: Scrape =
+        kinds.iter().map(|(n, k)| (n.clone(), (k.clone(), Vec::new()))).collect();
+    for s in samples {
+        let family = family_of(&s.name, &declared);
+        assert!(helps.contains(&family), "family {family:?} has no # HELP");
+        let (kind, sink) = scrape.get_mut(&family).unwrap();
+        if kind != "histogram" {
+            assert_eq!(s.name, family, "suffixed sample on a {kind} family");
+            assert!(s.value >= 0.0 || *kind == "gauge", "negative {kind} {}", s.name);
+        }
+        sink.push(s);
+    }
+
+    for (family, (kind, samples)) in &scrape {
+        assert!(!samples.is_empty(), "family {family:?} declared but never sampled");
+        // Label keys (minus `le`) must agree across every sample of the
+        // family — scrapers treat divergent keys as schema drift.
+        let keys: BTreeSet<Vec<String>> = samples
+            .iter()
+            .map(|s| {
+                s.labels.iter().map(|(k, _)| k.clone()).filter(|k| k != "le").collect::<Vec<_>>()
+            })
+            .collect();
+        assert_eq!(keys.len(), 1, "family {family:?} has divergent label keys: {keys:?}");
+        if kind == "histogram" {
+            validate_histogram(family, samples);
+        }
+    }
+    scrape
+}
+
+/// Group one histogram family's samples by their non-`le` label set and
+/// check each series: buckets cumulative and non-decreasing, ordered by
+/// bound, terminated by `+Inf` equal to `_count`, with `_sum` present.
+fn validate_histogram(family: &str, samples: &[Sample]) {
+    #[derive(Default)]
+    struct Series {
+        buckets: Vec<(f64, f64)>, // (le bound, cumulative), +Inf as f64::INFINITY
+        sum: Option<f64>,
+        count: Option<f64>,
+    }
+    let mut series: BTreeMap<String, Series> = BTreeMap::new();
+    for s in samples {
+        let key: Vec<String> = s
+            .labels
+            .iter()
+            .filter(|(k, _)| k != "le")
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        let entry = series.entry(key.join(",")).or_default();
+        if s.name.ends_with("_bucket") {
+            let le = s
+                .labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .map(|(_, v)| if v == "+Inf" { f64::INFINITY } else { v.parse().unwrap() })
+                .unwrap_or_else(|| panic!("{family}: bucket without le: {s:?}"));
+            entry.buckets.push((le, s.value));
+        } else if s.name.ends_with("_sum") {
+            entry.sum = Some(s.value);
+        } else if s.name.ends_with("_count") {
+            entry.count = Some(s.value);
+        } else {
+            panic!("{family}: stray histogram sample {s:?}");
+        }
+    }
+    for (labels, s) in series {
+        let count = s.count.unwrap_or_else(|| panic!("{family}{{{labels}}}: no _count"));
+        assert!(s.sum.is_some(), "{family}{{{labels}}}: no _sum");
+        assert!(!s.buckets.is_empty(), "{family}{{{labels}}}: no buckets");
+        let mut prev_bound = f64::NEG_INFINITY;
+        let mut prev_cum = 0.0;
+        for (bound, cum) in &s.buckets {
+            assert!(*bound > prev_bound, "{family}{{{labels}}}: bounds out of order");
+            assert!(*cum >= prev_cum, "{family}{{{labels}}}: buckets not cumulative");
+            prev_bound = *bound;
+            prev_cum = *cum;
+        }
+        let (last_bound, last_cum) = *s.buckets.last().unwrap();
+        assert!(last_bound.is_infinite(), "{family}{{{labels}}}: no le=\"+Inf\" terminator");
+        assert_eq!(last_cum, count, "{family}{{{labels}}}: +Inf bucket != _count");
+    }
+}
+
+/// Sample-identity key: name plus full label set.
+fn sample_key(s: &Sample) -> String {
+    let labels: Vec<String> = s.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!("{}{{{}}}", s.name, labels.join(","))
+}
+
+// ---------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_exposition_is_conformant_and_stable_across_scrapes() {
+    let stack = TestStack::start(2, ServeObs::default(), HttpConfig::default());
+    // Repeats so cache-hit counters move; distinct queries so both
+    // shards see work.
+    for q in ["grid computing", "data retrieval", "grid computing", "data retrieval"] {
+        let (status, body) =
+            http_json(stack.addr, "POST", "/search", Some(&format!(r#"{{"query": "{q}"}}"#)));
+        assert_eq!(status, 200, "{body:?}");
+    }
+
+    let (status, text1) = http_text(stack.addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    let scrape1 = parse_scrape(&text1);
+
+    // The registered surface is present, with per-shard labels.
+    for family in [
+        "gaps_http_requests_total",
+        "gaps_http_active",
+        "gaps_queue_submitted_total",
+        "gaps_queue_depth",
+        "gaps_cache_result_hits_total",
+        "gaps_failover_jobs_failed_total",
+        "gaps_index_epoch",
+        "gaps_stage_seconds",
+        "gaps_request_seconds",
+        "gaps_requests_slow_total",
+    ] {
+        assert!(scrape1.contains_key(family), "family {family:?} missing:\n{text1}");
+    }
+    let (_, submitted) = &scrape1["gaps_queue_submitted_total"];
+    let shard_labels: BTreeSet<String> = submitted
+        .iter()
+        .flat_map(|s| s.labels.iter().filter(|(k, _)| k == "shard").map(|(_, v)| v.clone()))
+        .collect();
+    assert_eq!(shard_labels, BTreeSet::from(["0".to_string(), "1".to_string()]));
+    let total: f64 = submitted.iter().map(|s| s.value).sum();
+    assert_eq!(total, 4.0, "4 searches submitted");
+
+    // Stage histograms label both dimensions.
+    let (_, stages) = &scrape1["gaps_stage_seconds"];
+    let stage_names: BTreeSet<String> = stages
+        .iter()
+        .flat_map(|s| s.labels.iter().filter(|(k, _)| k == "stage").map(|(_, v)| v.clone()))
+        .collect();
+    for stage in ["queued", "probe", "search", "compile", "plan", "execute", "merge", "store"] {
+        assert!(stage_names.contains(stage), "no {stage} series: {stage_names:?}");
+    }
+
+    // Second scrape: the schema is frozen (identical sample identity
+    // sets) and counters are monotone.
+    let (status, body) =
+        http_json(stack.addr, "POST", "/search", Some(r#"{"query": "academic publications"}"#));
+    assert_eq!(status, 200, "{body:?}");
+    let (status, text2) = http_text(stack.addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    let scrape2 = parse_scrape(&text2);
+
+    let keys = |scrape: &Scrape| -> BTreeSet<String> {
+        scrape.values().flat_map(|(_, ss)| ss.iter().map(sample_key)).collect()
+    };
+    assert_eq!(keys(&scrape1), keys(&scrape2), "sample identity drifted between scrapes");
+    for (family, (kind, samples)) in &scrape1 {
+        if kind != "counter" {
+            continue;
+        }
+        let later: BTreeMap<String, f64> =
+            scrape2[family].1.iter().map(|s| (sample_key(s), s.value)).collect();
+        for s in samples {
+            let now = later[&sample_key(s)];
+            assert!(
+                now >= s.value,
+                "{} went backwards: {} -> {now}",
+                sample_key(s),
+                s.value
+            );
+        }
+    }
+}
+
+#[test]
+fn healthz_is_one_atomic_snapshot_under_concurrent_load() {
+    let stack = TestStack::start(2, ServeObs::default(), HttpConfig::default());
+    let addr = stack.addr;
+    let writers = 4;
+    let barrier = Arc::new(Barrier::new(writers + 1));
+
+    std::thread::scope(|s| {
+        for w in 0..writers {
+            let barrier = Arc::clone(&barrier);
+            s.spawn(move || {
+                barrier.wait();
+                for i in 0..6 {
+                    let (status, body) = http_json(
+                        addr,
+                        "POST",
+                        "/search",
+                        Some(&format!(r#"{{"query": "grid search {w} {i}"}}"#)),
+                    );
+                    assert_eq!(status, 200, "{body:?}");
+                }
+            });
+        }
+        let barrier = Arc::clone(&barrier);
+        s.spawn(move || {
+            barrier.wait();
+            for _ in 0..20 {
+                let (status, health) = http_json(addr, "GET", "/healthz", None);
+                assert_eq!(status, 200);
+                // Atomicity evidence, twice over. (1) The aggregate
+                // `queue` block and the `shards` blocks come from one
+                // frozen read: they must agree *exactly*, even
+                // mid-flight. (2) The HTTP front counts a request
+                // before the router submits it, so a consistent
+                // snapshot can never show more submissions than
+                // requests — the drift the old unfenced reads allowed.
+                let agg = health.get("queue").unwrap().get("submitted").unwrap().as_i64().unwrap();
+                let split: i64 = health
+                    .get("shards")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|s| s.get("submitted").unwrap().as_i64().unwrap())
+                    .sum();
+                assert_eq!(agg, split, "aggregate and per-shard blocks torn apart");
+                let requests =
+                    health.get("http").unwrap().get("requests").unwrap().as_i64().unwrap();
+                assert!(
+                    requests >= split,
+                    "snapshot shows {split} submissions but only {requests} http requests"
+                );
+            }
+        });
+    });
+}
+
+#[test]
+fn debug_slow_ring_is_bounded_and_structured() {
+    // Capacity 2, threshold 0: every request is slow, only the last two
+    // survive in the ring.
+    let obs = ServeObs {
+        registry: Arc::new(Registry::new()),
+        slow: Arc::new(SlowLog::new(2)),
+        slow_query_ms: 0,
+    };
+    let stack = TestStack::start(1, obs, HttpConfig::default());
+    for q in ["first", "second grid", "third grid", "grid computing"] {
+        let (status, _) =
+            http_json(stack.addr, "POST", "/search", Some(&format!(r#"{{"query": "{q}"}}"#)));
+        assert!(status == 200 || status == 400, "unexpected status {status}");
+    }
+    let (status, body) = http_json(stack.addr, "GET", "/debug/slow", None);
+    assert_eq!(status, 200);
+    assert_eq!(body.get("capacity").unwrap().as_i64(), Some(2));
+    let entries = body.get("entries").unwrap().as_arr().unwrap();
+    assert_eq!(entries.len(), 2, "ring must drop the oldest entries");
+    // Newest-last: the ring ends with the most recent request.
+    assert_eq!(entries[1].get("query").unwrap().as_str(), Some("grid computing"));
+    for e in entries {
+        assert!(e.get("total_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(e.get("shard").is_some());
+        assert!(e.get("stages").is_some(), "slow entries carry the stage tree: {e:?}");
+    }
+}
+
+#[test]
+fn retry_after_hint_is_shared_by_both_shed_paths() {
+    // The hint function itself: linger-floored and depth-scaled.
+    assert_eq!(retry_after_hint(0, 0, 16), 1, "zero linger still hints 1ms");
+    assert_eq!(retry_after_hint(2, 0, 16), 2);
+    assert_eq!(retry_after_hint(2, 64, 16), 2 * (1 + 4));
+    assert!(retry_after_hint(2, 1024, 16) > retry_after_hint(2, 512, 16), "monotone in depth");
+
+    // Acceptor path over the wire: a handler pool of 1, pinned by a
+    // keep-alive holder, sheds the next connection with the same hint
+    // the queue path would give at the current depth (empty queue,
+    // default 2ms linger -> 2ms body hint, 1s header ceiling).
+    let stack = TestStack::start(
+        1,
+        ServeObs::default(),
+        HttpConfig { handlers: 1, ..HttpConfig::default() },
+    );
+    let holder = TcpStream::connect(stack.addr).expect("connect holder");
+    holder.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut writer = holder.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(holder);
+    // Occupy the only handler with one complete round-trip, keeping the
+    // connection open.
+    let body = r#"{"query": "grid search"}"#;
+    let req = format!(
+        "POST /search HTTP/1.1\r\nHost: gaps-test\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    writer.write_all(req.as_bytes()).expect("holder send");
+    let mut line = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut line).expect("holder status");
+    assert!(line.contains("200"), "{line}");
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        std::io::BufRead::read_line(&mut reader, &mut header).expect("header");
+        if header.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = header.trim_end().split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap();
+            }
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    reader.read_exact(&mut buf).expect("holder body");
+
+    // Overflow connection: shed by the acceptor with the unified hint.
+    let (status, text) = http_text(stack.addr, "POST", "/search", Some(body));
+    assert_eq!(status, 503, "{text}");
+    let shed = Json::parse(&text).expect("typed shed body");
+    assert_eq!(shed.get("kind").unwrap().as_str(), Some("overloaded"));
+    assert_eq!(
+        shed.get("retry_after_ms").unwrap().as_i64(),
+        Some(retry_after_hint(2, 0, 16) as i64),
+        "acceptor shed must carry the queue-derived hint"
+    );
+    drop((writer, reader));
+}

@@ -12,6 +12,12 @@
 //! formation and the router's shard assignment — whatever rounds form
 //! on whichever shard, results must not depend on them.
 //!
+//! Every case runs with observability fully engaged (a shared
+//! [`ServeObs`] with `slow_query_ms = 0`, so *all* requests take the
+//! tracing + slow-log path): metrics and tracing must be invisible in
+//! results. A deterministic companion test pins the `explain.stages`
+//! tree shape and `/metrics` counter totals against the oracle.
+//!
 //! CI runs this file as an explicit job step (see
 //! `.github/workflows/ci.yml`).
 
@@ -23,8 +29,9 @@ use std::time::Duration;
 use gaps::config::GapsConfig;
 use gaps::coordinator::{Deployment, GapsSystem, SearchResponse};
 use gaps::metrics::sample_queries;
+use gaps::obs::TraceSpan;
 use gaps::search::{Field, SearchError, SearchRequest};
-use gaps::serve::{HttpConfig, HttpServer, QueueConfig, SearchServer};
+use gaps::serve::{HttpConfig, HttpServer, QueueConfig, SearchServer, ServeObs};
 use gaps::util::json::Json;
 use gaps::util::prop::{check, Config};
 use gaps::util::rng::Rng;
@@ -100,7 +107,7 @@ fn gen_case(rng: &mut Rng, size: usize) -> ServeCase {
 
 /// Read one framed response (status + `Content-Length` body) off a
 /// persistent connection without consuming the stream to EOF.
-fn read_framed(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
+fn read_framed_raw(reader: &mut BufReader<TcpStream>) -> (u16, String) {
     let mut line = String::new();
     reader.read_line(&mut line).expect("status line");
     let status: u16 = line
@@ -123,7 +130,12 @@ fn read_framed(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body).expect("body");
-    (status, Json::parse(std::str::from_utf8(&body).expect("utf-8")).expect("json body"))
+    (status, String::from_utf8(body).expect("utf-8"))
+}
+
+fn read_framed(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
+    let (status, body) = read_framed_raw(reader);
+    (status, Json::parse(&body).expect("json body"))
 }
 
 fn post_wire(req: &SearchRequest) -> String {
@@ -213,15 +225,19 @@ fn run_case(case: &ServeCase) -> Result<(), String> {
     let (dep, _) = fixture();
 
     // Serving side: N executor shards over the shared deployment,
-    // fronted by the real HTTP listener.
+    // fronted by the real HTTP listener. Observability is fully on, at
+    // its most invasive setting (`slow_query_ms = 0` traces and
+    // slow-logs every request): none of it may show up in results.
+    let obs = ServeObs { slow_query_ms: 0, ..ServeObs::default() };
     let dep_for_server = Arc::clone(dep);
-    let server = SearchServer::start_sharded(
+    let server = SearchServer::start_sharded_with_obs(
         QueueConfig {
             max_batch: case.max_batch,
             max_linger: Duration::from_millis(case.linger_ms),
             ..QueueConfig::default()
         },
         case.shards,
+        obs.clone(),
         move |_shard| GapsSystem::from_deployment(cfg(), Arc::clone(&dep_for_server)),
     )
     .map_err(|e| e.to_string())?;
@@ -252,6 +268,7 @@ fn run_case(case: &ServeCase) -> Result<(), String> {
     let stats = server.stats();
     let per_shard = server.router().per_shard_stats();
     let conns = server.router().http().stats();
+    let snap = server.router().snapshot();
     stopper.stop();
     accept_thread.join().map_err(|_| "accept thread panicked".to_string())?;
     server.shutdown();
@@ -302,6 +319,22 @@ fn run_case(case: &ServeCase) -> Result<(), String> {
     // nothing shed, nothing reused.
     if conns.accepted != n || conns.requests != n || conns.reused != 0 || conns.shed != 0 {
         return Err(format!("connection counters off for {n} one-shot users: {conns:?}"));
+    }
+    // The frozen registry snapshot must agree with the live counter
+    // reads above — `/healthz` and `/metrics` render the same cells.
+    if snap.http.requests != n {
+        return Err(format!("frozen http.requests {} != {n}", snap.http.requests));
+    }
+    let frozen_split: u64 = snap.per_shard.iter().map(|s| s.submitted).sum();
+    if frozen_split != n {
+        return Err(format!("frozen per-shard submitted sums to {frozen_split}, not {n}"));
+    }
+    // `slow_query_ms = 0` slow-logs every executed round slot: one
+    // entry per unique request (single-flight attachments share their
+    // primary's entry), errors included.
+    let slots = n - stats.singleflight;
+    if obs.slow.len() as u64 != slots {
+        return Err(format!("slow ring holds {} entries, expected {slots}", obs.slow.len()));
     }
     Ok(())
 }
@@ -392,6 +425,180 @@ fn sequential_sharded_serving_pins_per_shard_counters() {
         );
         assert!(oracle_stats.result_hits > 0, "repeats must hit the shard-private cache");
     }
+}
+
+/// Walk a stage tree: every timing is finite and non-negative, and the
+/// children of each span sum to no more than the parent's wall time —
+/// they are disjoint phases of it — except under `execute`, whose
+/// children are per-node jobs that overlap in wall time.
+fn assert_monotone(span: &TraceSpan) {
+    assert!(
+        span.seconds.is_finite() && span.seconds >= 0.0,
+        "span {:?} has bad timing {}",
+        span.name,
+        span.seconds
+    );
+    if span.name != "execute" {
+        let child_sum: f64 = span.children.iter().map(|c| c.seconds).sum();
+        assert!(
+            child_sum <= span.seconds * 1.0001 + 1e-6,
+            "children of {:?} sum to {child_sum}s > parent {}s",
+            span.name,
+            span.seconds
+        );
+    }
+    for child in &span.children {
+        assert_monotone(child);
+    }
+}
+
+/// Pull one sample's value out of Prometheus text exposition.
+fn metric_value(text: &str, sample: &str) -> f64 {
+    text.lines()
+        .find_map(|line| {
+            let (name, value) = line.rsplit_once(' ')?;
+            (name == sample).then(|| value.parse().expect("numeric sample"))
+        })
+        .unwrap_or_else(|| panic!("sample {sample:?} not exposed:\n{text}"))
+}
+
+/// Observability evidence on a pinned workload: sequential keep-alive
+/// round-trips across 2 shards (request `i` lands on shard `i % 2`),
+/// every request with explain on. Pins three things at once:
+///
+/// * results stay bit-identical to the serial oracle with tracing,
+///   metrics, and the slow log all engaged;
+/// * `explain.stages` is present with the documented tree shape —
+///   `request` root carrying the shard label, `queued`/`probe`/`store`
+///   phases, a `search` subtree (compile → plan → execute → merge)
+///   for executed requests, a `result_cache=hit` marker instead for
+///   repeats — and child timings nest monotonically;
+/// * the `/metrics` scrape agrees with the workload's oracle totals:
+///   10 submitted/executed split 5/5 across shards, exactly the two
+///   repeat-hits in shard 1's private result cache, and `+Inf`-bucket
+///   counts equal to each shard's request count.
+#[test]
+fn traced_serving_pins_stage_trees_and_metric_totals() {
+    let (dep, pool) = fixture();
+    let shards = 2;
+    // Shard 0 serves pool[0], pool[2], pool[3], pool[4], pool[5] (all
+    // distinct → 5 result-cache misses); shard 1 serves pool[1],
+    // pool[0], pool[1], pool[2], pool[0] (repeats at i=5 and i=9 → 2
+    // hits, 3 misses).
+    let order = [0usize, 1, 2, 0, 3, 1, 4, 2, 5, 0];
+    let requests: Vec<SearchRequest> =
+        order.iter().map(|&i| SearchRequest::new(pool[i].clone()).explain(true)).collect();
+    let queue_cfg =
+        QueueConfig { max_batch: 4, max_linger: Duration::ZERO, ..QueueConfig::default() };
+
+    let obs = ServeObs::default();
+    let dep_for_server = Arc::clone(dep);
+    let server =
+        SearchServer::start_sharded_with_obs(queue_cfg, shards, obs.clone(), move |_shard| {
+            GapsSystem::from_deployment(cfg(), Arc::clone(&dep_for_server))
+        })
+        .unwrap();
+    let http =
+        HttpServer::bind_with("127.0.0.1:0", server.router(), HttpConfig::default()).unwrap();
+    let addr = http.local_addr().unwrap();
+    let stopper = http.shutdown_handle().unwrap();
+    let accept_thread = std::thread::spawn(move || http.serve().unwrap());
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    let mut served = Vec::new();
+    for req in &requests {
+        writer.write_all(post_wire(req).as_bytes()).expect("send");
+        let (status, json) = read_framed(&mut reader);
+        assert_eq!(status, 200, "{json:?}");
+        served.push(SearchResponse::from_json(&json).expect("wire form"));
+    }
+    // Scrape `/metrics` over the same socket: the scrape is this
+    // connection's 11th request, counted before the text renders.
+    writer
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: gaps-test\r\n\r\n")
+        .expect("send scrape");
+    let (status, text) = read_framed_raw(&mut reader);
+    assert_eq!(status, 200);
+    drop((writer, reader));
+    stopper.stop();
+    accept_thread.join().unwrap();
+    server.shutdown();
+
+    // (a) Bit-identical results, observability notwithstanding.
+    let mut serial_sys = GapsSystem::from_deployment(cfg(), Arc::clone(dep)).unwrap();
+    for (i, (req, resp)) in requests.iter().zip(&served).enumerate() {
+        assert_same(i, &req.query, &Ok(resp.clone()), serial_sys.search_request(req))
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    // (b) Stage trees: shape, shard attribution, monotone timings.
+    let cache_hits = [5usize, 9];
+    for (i, resp) in served.iter().enumerate() {
+        let stages = resp
+            .explain
+            .as_ref()
+            .expect("explain requested")
+            .stages
+            .as_ref()
+            .unwrap_or_else(|| panic!("request {i}: explain.stages missing"));
+        assert_eq!(stages.name, "request", "request {i}");
+        let shard_meta = stages
+            .meta
+            .iter()
+            .find(|(k, _)| k == "shard")
+            .map(|(_, v)| v.clone())
+            .unwrap_or_else(|| panic!("request {i}: no shard meta"));
+        assert_eq!(shard_meta, (i % shards).to_string(), "request {i}");
+        assert!(stages.find("queued").is_some(), "request {i}");
+        assert!(stages.find("probe").is_some(), "request {i}");
+        assert!(stages.find("store").is_some(), "request {i}");
+        if cache_hits.contains(&i) {
+            assert!(stages.find("search").is_none(), "request {i}: hit ran the grid");
+            assert!(
+                stages.meta.iter().any(|(k, v)| k == "result_cache" && v == "hit"),
+                "request {i}: hit not marked on the root"
+            );
+        } else {
+            let search = stages
+                .find("search")
+                .unwrap_or_else(|| panic!("request {i}: no search subtree"));
+            for stage in ["compile", "plan", "execute", "merge"] {
+                assert!(search.find(stage).is_some(), "request {i}: no {stage} span");
+            }
+            let execute = search.find("execute").unwrap();
+            assert!(!execute.children.is_empty(), "request {i}: execute has no job spans");
+        }
+        assert_monotone(stages);
+    }
+
+    // (c) `/metrics` totals match the oracle workload arithmetic.
+    assert!(text.contains("# TYPE gaps_queue_submitted_total counter"), "{text}");
+    assert!(text.contains("# TYPE gaps_request_seconds histogram"), "{text}");
+    assert_eq!(metric_value(&text, "gaps_http_requests_total"), 11.0);
+    assert_eq!(metric_value(&text, "gaps_http_accepted_total"), 1.0);
+    assert_eq!(metric_value(&text, "gaps_http_reused_total"), 10.0);
+    for shard in 0..shards {
+        let m = |name: &str| metric_value(&text, &format!("{name}{{shard=\"{shard}\"}}"));
+        assert_eq!(m("gaps_queue_submitted_total"), 5.0, "shard {shard}");
+        assert_eq!(m("gaps_queue_executed_total"), 5.0, "shard {shard}");
+        assert_eq!(m("gaps_queue_shed_total"), 0.0, "shard {shard}");
+        assert_eq!(m("gaps_request_seconds_count"), 5.0, "shard {shard}");
+        assert_eq!(
+            metric_value(
+                &text,
+                &format!("gaps_request_seconds_bucket{{shard=\"{shard}\",le=\"+Inf\"}}")
+            ),
+            5.0,
+            "shard {shard}: +Inf bucket must equal the count"
+        );
+    }
+    assert_eq!(metric_value(&text, "gaps_cache_result_hits_total{shard=\"0\"}"), 0.0);
+    assert_eq!(metric_value(&text, "gaps_cache_result_misses_total{shard=\"0\"}"), 5.0);
+    assert_eq!(metric_value(&text, "gaps_cache_result_hits_total{shard=\"1\"}"), 2.0);
+    assert_eq!(metric_value(&text, "gaps_cache_result_misses_total{shard=\"1\"}"), 3.0);
 }
 
 /// Deterministic coalescing evidence: with a generous linger window and

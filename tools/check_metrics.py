@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text-exposition scrape.
+
+Usage: python3 tools/check_metrics.py scrape.txt [required_family ...]
+
+Structural checks (any failure exits non-zero):
+  * every sample belongs to a family declared with `# TYPE` (histogram
+    samples may carry a `_bucket`/`_sum`/`_count` suffix) and every
+    family has a `# HELP` line;
+  * the `# TYPE` kind is counter, gauge, or histogram;
+  * label keys are consistent across every sample of a family
+    (ignoring the histogram `le` label);
+  * counter values are non-negative numbers, all values parse;
+  * each histogram series has cumulative, bound-ordered buckets
+    terminated by `le="+Inf"` whose value equals the `_count` sample,
+    and a `_sum` sample.
+
+Optional trailing arguments name families that must be present — CI's
+scrape smoke passes the core `gaps_*` surface so a refactor cannot
+silently drop it.
+"""
+
+import re
+import sys
+from collections import defaultdict
+
+SAMPLE_RE = re.compile(r"^([A-Za-z_:][A-Za-z0-9_:]*)(\{([^}]*)\})? (\S+)$")
+LABEL_RE = re.compile(r'([A-Za-z_][A-Za-z0-9_]*)="([^"]*)"')
+KINDS = {"counter", "gauge", "histogram"}
+
+
+def fail(msg):
+    print(f"check_metrics: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def parse_labels(text):
+    if not text:
+        return []
+    pairs = LABEL_RE.findall(text)
+    # The reconstructed pair list must cover the whole label body, or the
+    # scrape contains something the regex silently skipped.
+    rebuilt = ",".join(f'{k}="{v}"' for k, v in pairs)
+    if rebuilt != text:
+        fail(f"unparseable label set {text!r}")
+    return pairs
+
+
+def main():
+    if len(sys.argv) < 2:
+        fail("usage: check_metrics.py scrape.txt [required_family ...]")
+    text = open(sys.argv[1], encoding="utf-8").read()
+    required = sys.argv[2:]
+
+    kinds = {}
+    helps = set()
+    samples = []
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            helps.add(line.split()[2])
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) < 4:
+                fail(f"malformed TYPE line {line!r}")
+            name, kind = parts[2], parts[3]
+            if kind not in KINDS:
+                fail(f"unknown kind {kind!r} for {name!r}")
+            if name in kinds:
+                fail(f"duplicate TYPE for {name!r}")
+            kinds[name] = kind
+            continue
+        if line.startswith("#"):
+            fail(f"unknown comment line {line!r}")
+        m = SAMPLE_RE.match(line)
+        if not m:
+            fail(f"malformed sample line {line!r}")
+        name, _, labels, value = m.groups()
+        try:
+            value = float(value)
+        except ValueError:
+            fail(f"non-numeric value in {line!r}")
+        samples.append((name, parse_labels(labels), value))
+
+    def family_of(sample_name):
+        if sample_name in kinds:
+            return sample_name
+        for suffix in ("_bucket", "_sum", "_count"):
+            base = sample_name.removesuffix(suffix)
+            if base != sample_name and base in kinds:
+                return base
+        fail(f"sample {sample_name!r} has no TYPE declaration")
+
+    by_family = defaultdict(list)
+    for name, labels, value in samples:
+        family = family_of(name)
+        if family not in helps:
+            fail(f"family {family!r} has no HELP line")
+        kind = kinds[family]
+        if kind != "histogram":
+            if name != family:
+                fail(f"suffixed sample {name!r} on a {kind} family")
+            if kind == "counter" and value < 0:
+                fail(f"negative counter {name!r}: {value}")
+        by_family[family].append((name, labels, value))
+
+    for family, kind in kinds.items():
+        rows = by_family.get(family)
+        if not rows:
+            fail(f"family {family!r} declared but never sampled")
+        keysets = {
+            tuple(sorted(k for k, _ in labels if k != "le")) for _, labels, _ in rows
+        }
+        if len(keysets) != 1:
+            fail(f"family {family!r} has divergent label keys: {keysets}")
+        if kind == "histogram":
+            check_histogram(family, rows)
+
+    for family in required:
+        if family not in by_family:
+            fail(f"required family {family!r} missing from the scrape")
+
+    print(
+        f"check_metrics: OK — {len(kinds)} families, {len(samples)} samples"
+    )
+
+
+def check_histogram(family, rows):
+    series = defaultdict(lambda: {"buckets": [], "sum": None, "count": None})
+    for name, labels, value in rows:
+        key = tuple(sorted((k, v) for k, v in labels if k != "le"))
+        s = series[key]
+        if name.endswith("_bucket"):
+            le = dict(labels).get("le")
+            if le is None:
+                fail(f"{family}: bucket without le label")
+            bound = float("inf") if le == "+Inf" else float(le)
+            s["buckets"].append((bound, value))
+        elif name.endswith("_sum"):
+            s["sum"] = value
+        elif name.endswith("_count"):
+            s["count"] = value
+        else:
+            fail(f"{family}: stray histogram sample {name!r}")
+    for key, s in series.items():
+        where = f"{family}{{{dict(key)}}}"
+        if s["count"] is None:
+            fail(f"{where}: no _count sample")
+        if s["sum"] is None:
+            fail(f"{where}: no _sum sample")
+        if not s["buckets"]:
+            fail(f"{where}: no buckets")
+        prev_bound, prev_cum = float("-inf"), -1.0
+        for bound, cum in s["buckets"]:
+            if bound <= prev_bound:
+                fail(f"{where}: bucket bounds out of order")
+            if cum < prev_cum:
+                fail(f"{where}: buckets not cumulative")
+            prev_bound, prev_cum = bound, cum
+        last_bound, last_cum = s["buckets"][-1]
+        if last_bound != float("inf"):
+            fail(f'{where}: no le="+Inf" terminator')
+        if last_cum != s["count"]:
+            fail(f"{where}: +Inf bucket {last_cum} != _count {s['count']}")
+
+
+if __name__ == "__main__":
+    main()
